@@ -1,0 +1,76 @@
+//! Pruning-method comparison: Wanda vs magnitude vs SparseGPT across
+//! sparsity levels on the pretrained base (no fine-tuning) — the
+//! motivation for Shears' choice of zeroth-order, activation-aware
+//! pruning (paper §2.1 / Related Work).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example sparsity_sweep
+//! ```
+//!
+//! Reports (a) post-prune eval accuracy of the frozen base and (b) prune
+//! wall time per method, mirroring the paper's "<5 minutes on one GPU"
+//! cost argument for Wanda.
+
+use shears::bench_util::Table;
+use shears::coordinator::{PipelineOpts, ShearsPipeline};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::Manifest;
+use shears::pruning::{self, Method};
+use shears::runtime::Runtime;
+use shears::train::evaluate;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let manifest = Manifest::load("artifacts")?;
+    let cfg = manifest.config("llama-sim-s")?;
+    let vocab = Vocab::new(cfg.vocab);
+
+    let opts = PipelineOpts {
+        config: "llama-sim-s".into(),
+        pretrain_steps: 400,
+        seed: 42,
+        workdir: Some("runs".into()),
+        ..Default::default()
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
+    let (base0, _) = pipeline.pretrained_base()?;
+    let test = dataset(Task::BoolqSim, &vocab, 42 ^ 0x7E57, 128, cfg.seq_len);
+    let base_acc =
+        evaluate(&rt, cfg, "forward_eval_base", &[&base0], None, &test, &vocab)?;
+    println!("dense base accuracy (boolq-sim): {:.1}%\n", base_acc * 100.0);
+
+    let mut table = Table::new(
+        "Prune-only accuracy of the frozen base across sparsity (boolq-sim)",
+        &["method", "30%", "50%", "70%", "prune wall (s, 50%)"],
+    );
+    for method in [Method::Wanda, Method::Magnitude, Method::SparseGpt] {
+        let mut cells = vec![method.name().to_string()];
+        let mut wall50 = 0.0;
+        for sparsity in [0.3, 0.5, 0.7] {
+            let mut base = base0.clone();
+            let stats = if method.needs_stats() {
+                let batches = pipeline.calibration_batches();
+                Some(pruning::collect_stats(&rt, cfg, &base, &batches)?)
+            } else {
+                None
+            };
+            let t = Instant::now();
+            pruning::prune(&rt, &manifest, cfg, &mut base, method, sparsity, stats.as_ref())?;
+            let wall = t.elapsed().as_secs_f64();
+            if sparsity == 0.5 {
+                wall50 = wall;
+            }
+            let acc = evaluate(&rt, cfg, "forward_eval_base", &[&base], None, &test, &vocab)?;
+            cells.push(format!("{:.1}", acc * 100.0));
+        }
+        cells.push(format!("{wall50:.2}"));
+        table.row(cells);
+    }
+    table.print();
+    println!(
+        "expected shape: activation-aware methods (wanda, sparsegpt) degrade \
+         more gracefully than magnitude as sparsity grows."
+    );
+    Ok(())
+}

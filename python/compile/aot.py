@@ -1,0 +1,153 @@
+"""AOT lowering: every (config × entry point) and prune op -> HLO text.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+HLO *text* (not `.serialize()`): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (what the rust `xla`
+crate links) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Also emits `manifest.json` — the single source of truth the rust side
+reads for parameter ordering, entry-point signatures, and prune-op shapes.
+Python runs exactly once; after this the rust binary is self-contained.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import prune as P
+from . import train as T
+
+# which entry points each config ships (all need pretraining = train_step_full)
+_ALL = list(T.BUILDERS.keys())
+ENTRY_SETS = {
+    "tiny-llama": _ALL,
+    "llama-sim-s": _ALL,
+    "llama-sim-m": [e for e in _ALL if e != "forward_eval_pallas"],
+    "mpt-sim": [e for e in _ALL if e != "forward_eval_pallas"],
+}
+
+PRUNE_KINDS = ["wanda", "magnitude", "sparsegpt"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(s):
+    dt = {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+    return {"shape": list(s.shape), "dtype": dt}
+
+
+def _lower(fn, specs):
+    # keep_unused=True: the L3 side feeds inputs positionally from the
+    # manifest; letting XLA drop e.g. lm_head from calib_stats would break
+    # the ABI (and execute_b segfaults rather than erroring on mismatch).
+    return jax.jit(fn, keep_unused=True).lower(*specs)
+
+
+def _io_json(built, lowered):
+    out_avals = lowered.out_info
+    outs = [_spec_json(o) for o in jax.tree_util.tree_leaves(out_avals)]
+    return {
+        "inputs": [
+            {"name": n, **_spec_json(s)}
+            for n, s in zip(built["input_names"], built["specs"])
+        ],
+        "outputs": [
+            {"name": n, **o} for n, o in zip(built["output_names"], outs)
+        ],
+    }
+
+
+def _config_json(name, cfg):
+    j = {k: v for k, v in cfg.items()}
+    j["name"] = name
+    j["base_params"] = [
+        {"name": n, "shape": list(s)} for n, s in M.base_param_specs(cfg)
+    ]
+    j["adapter_params"] = [
+        {"name": n, "shape": list(s)} for n, s in M.adapter_param_specs(cfg)
+    ]
+    j["prefix_params"] = [
+        {"name": n, "shape": list(s)} for n, s in M.prefix_param_specs(cfg)
+    ]
+    j["series_params"] = [
+        {"name": n, "shape": list(s)} for n, s in M.series_param_specs(cfg)
+    ]
+    j["parallel_params"] = [
+        {"name": n, "shape": list(s)} for n, s in M.parallel_param_specs(cfg)
+    ]
+    j["adapter_modules"] = M.adapter_modules(cfg)
+    j["prunable"] = [
+        {"name": n, "shape": list(s), "site": site}
+        for n, s, site in M.prunable_specs(cfg)
+    ]
+    j["sites"] = [{"site": s, "dim": d} for s, d in M.calib_sites(cfg)]
+    j["entrypoints"] = {}
+    return j
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default=",".join(M.CONFIGS.keys()))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    cfg_names = [c for c in args.configs.split(",") if c]
+
+    manifest = {"version": 1, "configs": {}, "prune_ops": {}}
+    shapes_seen = set()
+
+    for cname in cfg_names:
+        cfg = M.CONFIGS[cname]
+        cj = _config_json(cname, cfg)
+        for entry in ENTRY_SETS[cname]:
+            built = T.BUILDERS[entry](cfg)
+            lowered = _lower(built["fn"], built["specs"])
+            text = to_hlo_text(lowered)
+            fname = f"{cname}__{entry}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            cj["entrypoints"][entry] = {"file": fname, **_io_json(built, lowered)}
+            print(f"[aot] {fname}  ({len(text) / 1e6:.2f} MB)", file=sys.stderr)
+        manifest["configs"][cname] = cj
+        for _, (n, k), _site in M.prunable_specs(cfg):
+            shapes_seen.add((n, k))
+
+    for (n, k) in sorted(shapes_seen):
+        for kind in PRUNE_KINDS:
+            built = P.build_prune_op(kind, n, k)
+            lowered = _lower(built["fn"], built["specs"])
+            text = to_hlo_text(lowered)
+            fname = f"prune__{kind}_{n}x{k}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["prune_ops"][f"{kind}_{n}x{k}"] = {
+                "file": fname, "kind": kind, "shape": [n, k],
+                **_io_json(built, lowered),
+            }
+            print(f"[aot] {fname}  ({len(text) / 1e6:.2f} MB)", file=sys.stderr)
+
+    blob = json.dumps(manifest, indent=1, sort_keys=True)
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        f.write(blob)
+    digest = hashlib.sha256(blob.encode()).hexdigest()[:16]
+    print(f"[aot] manifest.json  sha256:{digest}  "
+          f"({len(manifest['configs'])} configs, "
+          f"{len(manifest['prune_ops'])} prune ops)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for Shears.
+
+Every kernel here is authored with `pl.pallas_call(..., interpret=True)`:
+the CPU PJRT plugin cannot execute Mosaic custom-calls, so interpret mode
+is the correctness path, while the BlockSpec structure documents the
+intended TPU HBM<->VMEM schedule (see DESIGN.md §4 / §9).
+
+Public surface:
+  lora_linear   — fused sparse-base + elastic-LoRA linear (custom_vjp)
+  rmsnorm       — fused RMSNorm (custom_vjp, jnp backward)
+  wanda_apply   — Wanda score + per-row threshold masking
+"""
+
+from .lora_linear import lora_linear
+from .rmsnorm import rmsnorm
+from .wanda import wanda_apply
+
+__all__ = ["lora_linear", "rmsnorm", "wanda_apply"]

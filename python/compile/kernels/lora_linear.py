@@ -1,0 +1,182 @@
+"""Fused sparse-base + elastic-LoRA linear as a Pallas kernel.
+
+This is the Shears hot path: every adapter-target projection in the model
+computes
+
+    Y = X @ W_p.T + ((X @ A.T) * rank_mask) @ B.T * scale
+
+where W_p is the frozen, Wanda-sparsified base weight and (A, B) is the
+super-adapter. The rank mask implements NLS weight sharing: activating a
+sub-adapter of rank r is masking columns r..R of the LoRA intermediate,
+so one compiled executable serves every sub-adapter configuration
+(paper §3.2; DESIGN.md "rank masks").
+
+TPU mapping (DESIGN.md §4): the grid tiles (M, N); each program holds an
+X tile [bm, K], a W tile [bn, K], and the *entire* adapter (A [R, K],
+B tile [bn, R], R <= 8 here / 32 in the paper) in VMEM, so the LoRA path
+reuses the X tile already resident for the base matmul — the fusion is
+exactly why Shears can leave adapters unmerged (paper §4.4) without an
+extra pass over HBM.
+
+`pallas_call` has no automatic reverse-mode rule, so the public
+`lora_linear` is a `jax.custom_vjp` whose backward pass is three more
+Pallas kernels (dX, dA, dB). W is frozen in Shears; its cotangent is a
+symbolic zero that XLA dead-code-eliminates.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# VMEM-driven tile caps (f32 words). With bm=bn=128 and K<=512:
+#   X tile 128*512*4 = 256 KiB, W tile 256 KiB, out 64 KiB, A+B < 20 KiB
+# -> < 0.6 MiB/program, ample double-buffering headroom in 16 MiB VMEM.
+_BM, _BN, _BK = 128, 128, 128
+
+
+def _block(dim: int, cap: int) -> int:
+    """Largest divisor of `dim` not exceeding `cap` (grids must tile exactly)."""
+    b = min(dim, cap)
+    while dim % b:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _fwd_kernel(x_ref, w_ref, a_ref, b_ref, mask_ref, o_ref, *, scale):
+    x = x_ref[...]                                       # [bm, K]
+    p = jnp.dot(x, a_ref[...].T) * mask_ref[...][None, :]  # [bm, R]
+    o_ref[...] = jnp.dot(x, w_ref[...].T) + jnp.dot(p, b_ref[...].T) * scale
+
+
+def _fwd(x, w, a, b, mask, scale):
+    m, k = x.shape
+    n, r = b.shape
+    bm, bn = _block(m, _BM), _block(n, _BN)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, scale=scale),
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((r, k), lambda i, j: (0, 0)),
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, a, b, mask)
+
+
+# ---------------------------------------------------------------- backward
+
+
+def _dx_kernel(dy_ref, w_ref, a_ref, b_ref, mask_ref, dx_ref, *, scale):
+    dy = dy_ref[...]                                        # [bm, N]
+    dp = jnp.dot(dy, b_ref[...]) * mask_ref[...][None, :] * scale  # [bm, R]
+    dx_ref[...] = jnp.dot(dy, w_ref[...]) + jnp.dot(dp, a_ref[...])
+
+
+def _dx(dy, w, a, b, mask, scale):
+    m, n = dy.shape
+    r, k = a.shape
+    bm, bk = _block(m, _BM), _block(k, _BK)
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, scale=scale),
+        grid=(m // bm, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((r, bk), lambda i, j: (0, j)),
+            pl.BlockSpec((n, r), lambda i, j: (0, 0)),
+            pl.BlockSpec((r,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, k), dy.dtype),
+        interpret=INTERPRET,
+    )(dy, w, a, b, mask)
+
+
+def _da_kernel(dy_ref, x_ref, b_ref, mask_ref, da_ref, *, scale):
+    dp = jnp.dot(dy_ref[...], b_ref[...]) * mask_ref[...][None, :] * scale
+    da_ref[...] = jnp.dot(dp.T, x_ref[...])                 # [R, bk]
+
+
+def _da(dy, x, b, mask, scale):
+    m, n = dy.shape
+    _, k = x.shape
+    r = b.shape[1]
+    bk = _block(k, _BK)
+    return pl.pallas_call(
+        functools.partial(_da_kernel, scale=scale),
+        grid=(k // bk,),
+        in_specs=[
+            pl.BlockSpec((m, n), lambda j: (0, 0)),
+            pl.BlockSpec((m, bk), lambda j: (0, j)),
+            pl.BlockSpec((n, r), lambda j: (0, 0)),
+            pl.BlockSpec((r,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r, bk), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((r, k), dy.dtype),
+        interpret=INTERPRET,
+    )(dy, x, b, mask)
+
+
+def _db_kernel(dy_ref, x_ref, a_ref, mask_ref, db_ref, *, scale):
+    p = jnp.dot(x_ref[...], a_ref[...].T) * mask_ref[...][None, :]  # [M, R]
+    db_ref[...] = jnp.dot(dy_ref[...].T, p) * scale                 # [bn, R]
+
+
+def _db(dy, x, a, mask, scale):
+    m, n = dy.shape
+    r, k = a.shape
+    bn = _block(n, _BN)
+    return pl.pallas_call(
+        functools.partial(_db_kernel, scale=scale),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, bn), lambda j: (0, j)),
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((r, k), lambda j: (0, 0)),
+            pl.BlockSpec((r,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, r), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, r), dy.dtype),
+        interpret=INTERPRET,
+    )(dy, x, a, mask)
+
+
+# ---------------------------------------------------------------- public op
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def lora_linear(x, w, a, b, mask, scale):
+    """Y = X @ W.T + ((X @ A.T) * mask) @ B.T * scale  (see module docstring)."""
+    return _fwd(x, w, a, b, mask, scale)
+
+
+def _vjp_fwd(x, w, a, b, mask, scale):
+    return _fwd(x, w, a, b, mask, scale), (x, w, a, b, mask)
+
+
+def _vjp_bwd(scale, res, dy):
+    x, w, a, b, mask = res
+    dx = _dx(dy, w, a, b, mask, scale)
+    da = _da(dy, x, b, mask, scale)
+    db = _db(dy, x, a, mask, scale)
+    # W is frozen in Shears; mask is a configuration input. Symbolic zeros
+    # keep the train-step HLO free of dead dense-gradient matmuls.
+    return dx, jnp.zeros_like(w), da, db, jnp.zeros_like(mask)
+
+
+lora_linear.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These are the correctness ground truth: pytest (python/tests/) asserts the
+Pallas kernels match these to tight tolerances across hypothesis-driven
+shape sweeps, and the Rust integration tests execute HLO lowered from
+graphs that call the kernels and compare against values computed from the
+same math.
+
+Conventions (shared with lora_linear.py and model.py):
+  X     [M, K]   activations, M = batch*seq flattened
+  W     [N, K]   frozen (possibly sparsified) base weight, row = out feature
+  A     [R, K]   LoRA down-projection (trainable)
+  B     [N, R]   LoRA up-projection (trainable, zero-init)
+  mask  [R]      elastic rank mask: first r entries 1.0, rest 0.0
+  scale scalar   lora_alpha / R  (static)
+
+  Y = X @ W.T + ((X @ A.T) * mask) @ B.T * scale
+"""
+
+import jax.numpy as jnp
+
+
+def lora_linear_ref(x, w, a, b, mask, scale):
+    """Fused base + elastic-LoRA linear. Y[M,N]."""
+    p = (x @ a.T) * mask[None, :]
+    return x @ w.T + (p @ b.T) * scale
+
+
+def lora_linear_bwd_ref(x, w, a, b, mask, scale, dy):
+    """Reference gradients (dx, da, db). W is frozen -> no dw."""
+    p = (x @ a.T) * mask[None, :]          # [M, R]
+    dp = (dy @ b) * mask[None, :] * scale  # [M, R]
+    dx = dy @ w + dp @ a                   # [M, K]
+    da = dp.T @ x                          # [R, K]
+    db = (dy.T @ p) * scale                # [N, R]
+    return dx, da, db
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    """RMSNorm: x / rms(x) * g, row-wise over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * g
+
+
+def wanda_score_ref(w, xnorm):
+    """Wanda importance (paper Eq. 1): S = |W| * ||X||_2 (broadcast)."""
+    return jnp.abs(w) * xnorm[None, :]
+
+
+def wanda_threshold_ref(w, xnorm, keep_frac):
+    """Per-row score threshold keeping the top round(K*keep_frac) weights.
+
+    Wanda compares importance *within each row* of W; the threshold is the
+    score of the last kept element.
+    """
+    k = w.shape[1]
+    n_keep = jnp.clip(jnp.round(k * keep_frac).astype(jnp.int32), 1, k)
+    scores = wanda_score_ref(w, xnorm)
+    sorted_desc = -jnp.sort(-scores, axis=1)
+    # threshold = score of the n_keep-th largest element (1-indexed)
+    idx = jnp.broadcast_to(n_keep - 1, (w.shape[0],))[:, None]
+    return jnp.take_along_axis(sorted_desc, idx, axis=1)[:, 0]
+
+
+def wanda_apply_ref(w, xnorm, thresh):
+    """Zero out weights whose score falls strictly below the row threshold."""
+    scores = wanda_score_ref(w, xnorm)
+    mask = (scores >= thresh[:, None]).astype(w.dtype)
+    return w * mask, mask
+
+
+def magnitude_prune_ref(w, keep_frac):
+    """Per-row magnitude pruning baseline (same protocol as Wanda, S=|W|)."""
+    ones = jnp.ones((w.shape[1],), w.dtype)
+    return wanda_apply_ref(w, ones, wanda_threshold_ref(w, ones, keep_frac))

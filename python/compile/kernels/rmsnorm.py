@@ -1,0 +1,72 @@
+"""RMSNorm as a Pallas kernel (forward) with a jnp backward.
+
+llama-sim normalizes with RMSNorm (Touvron et al., 2023); the kernel fuses
+the mean-square reduction, rsqrt, and gain multiply in one VMEM-resident
+pass over a [bm, D] row tile. Backward is closed-form jnp (cheap relative
+to the matmuls and keeps the HLO small).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+_BM = 128
+
+
+def _block(dim: int, cap: int) -> int:
+    b = min(dim, cap)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, g_ref, o_ref, *, eps):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...][None, :]
+
+
+def _fwd(x, g, eps):
+    m, d = x.shape
+    bm = _block(m, _BM)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=INTERPRET,
+    )(x, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x, g, eps=1e-6):
+    """x * rsqrt(mean(x^2) + eps) * g over the last axis of a 2-D input."""
+    return _fwd(x, g, eps)
+
+
+def _vjp_fwd(x, g, eps):
+    return _fwd(x, g, eps), (x, g)
+
+
+def _vjp_bwd(eps, res, dy):
+    x, g = res
+    d = x.shape[-1]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    xhat = x * inv
+    dg = jnp.sum(dy * xhat, axis=0)
+    dxhat = dy * g[None, :]
+    dx = inv * (dxhat - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True) * d / d)
+    # d/dx of x*inv: inv*dxhat - x * inv^3/d * sum(dxhat*x)
+    dx = inv * dxhat - x * (inv ** 3) * jnp.mean(dxhat * x, axis=-1, keepdims=True)
+    return dx, dg
+
+
+rmsnorm.defvjp(_vjp_fwd, _vjp_bwd)

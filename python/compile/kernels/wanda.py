@@ -1,0 +1,66 @@
+"""Wanda pruning as a Pallas kernel (paper §2.1 / §3.1, Eq. 1).
+
+Importance S = |W| * ||X||_2 with per-row comparison: each output row of W
+keeps its top round(K*keep_frac) weights. The row thresholds require a
+sort, which stays in jnp (`wanda_threshold_ref`); the O(N*K) score +
+compare + mask application — the part that touches every weight — is the
+Pallas kernel, tiled [bn, bk] over W.
+
+Outputs both the pruned weights and the {0,1} mask; the mask is what
+`train_step_full` (the SparseFT baseline) re-applies after every optimizer
+step so sparsity survives full fine-tuning.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import wanda_threshold_ref
+
+INTERPRET = True
+_BN, _BK = 128, 256
+
+
+def _block(dim: int, cap: int) -> int:
+    b = min(dim, cap)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def _kernel(w_ref, xnorm_ref, thresh_ref, wp_ref, mask_ref):
+    w = w_ref[...]                                  # [bn, bk]
+    s = jnp.abs(w) * xnorm_ref[...][None, :]        # Wanda Eq. 1
+    keep = (s >= thresh_ref[...][:, None]).astype(w.dtype)
+    wp_ref[...] = w * keep
+    mask_ref[...] = keep
+
+
+def wanda_apply(w, xnorm, thresh):
+    """Apply per-row thresholds: returns (W_pruned, mask)."""
+    n, k = w.shape
+    bn, bk = _block(n, _BN), _block(k, _BK)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bn, bk), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), w.dtype),
+            jax.ShapeDtypeStruct((n, k), w.dtype),
+        ],
+        interpret=INTERPRET,
+    )(w, xnorm, thresh)
+
+
+def wanda_prune(w, xnorm, keep_frac):
+    """Full Wanda: thresholds (jnp sort) + kernel application."""
+    thresh = wanda_threshold_ref(w, xnorm, keep_frac)
+    return wanda_apply(w, xnorm, thresh)

@@ -1,0 +1,383 @@
+"""Layer-2 JAX model for Shears: llama-sim / mpt-sim decoder LMs with
+elastic LoRA adapters, PEFT baselines, losses and forward variants.
+
+Everything here is *build-time only*: `aot.py` lowers the entry points in
+`train.py`/`prune.py` (which call into this module) to HLO text, and the
+Rust coordinator executes those artifacts. No Python on the request path.
+
+Model conventions
+-----------------
+* weights are `[out, in]` so each linear is `y = x @ W.T` — the same
+  convention as the L1 kernels (`kernels/ref.py`).
+* `params` is a flat `dict[str, Array]`; the canonical *ordering* of every
+  parameter group is defined by the `*_param_specs()` functions and exported
+  verbatim to `artifacts/manifest.json`. The Rust `ParamStore` mirrors that
+  order — it is the ABI between L3 and L2.
+* elastic LoRA: each adapter target holds a super-adapter `(A [R, in],
+  B [out, R])`; a `rank_mask [n_adapters, R]` input activates a sub-adapter
+  (prefix-slice weight sharing, paper §3.2). `scale = lora_alpha / R`.
+* `use_pallas=True` routes adapter matmuls/norms through the L1 Pallas
+  kernels; `False` uses the element-identical jnp reference math
+  (see DESIGN.md §4 for why both are lowered).
+"""
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lora_linear, rmsnorm
+from .kernels.ref import lora_linear_ref, rmsnorm_ref
+
+# --------------------------------------------------------------------------
+# configurations (mirrors DESIGN.md §8; paper hyperparams Tables 7-9 scaled)
+# --------------------------------------------------------------------------
+
+LLAMA_TARGETS = ["q", "k", "v", "up", "gate", "down"]  # Table 7 (40% row)
+MPT_TARGETS = ["q", "k", "v", "o", "up", "down"]       # Table 9
+
+CONFIGS = {
+    # tests / CI
+    "tiny-llama": dict(
+        arch="llama", d_model=48, n_layers=2, n_heads=4, d_ff=128,
+        vocab=256, seq_len=48, max_rank=8, rank_choices=[8, 6, 4],
+        lora_alpha=16.0, targets=["q", "k", "v", "up", "down"],
+        batch_train=8, batch_eval=16, prefix_len=4, bottleneck=8,
+    ),
+    # LLaMA-7B stand-in (paper Table 1 upper block)
+    "llama-sim-s": dict(
+        arch="llama", d_model=128, n_layers=4, n_heads=8, d_ff=344,
+        vocab=512, seq_len=64, max_rank=8, rank_choices=[8, 6, 4],
+        lora_alpha=16.0, targets=LLAMA_TARGETS,
+        batch_train=16, batch_eval=32, prefix_len=8, bottleneck=16,
+    ),
+    # LLaMA-13B stand-in (paper Table 1 lower block)
+    "llama-sim-m": dict(
+        arch="llama", d_model=192, n_layers=6, n_heads=8, d_ff=512,
+        vocab=512, seq_len=64, max_rank=8, rank_choices=[8, 6, 4],
+        lora_alpha=16.0, targets=["q", "k", "v", "up", "down"],
+        batch_train=16, batch_eval=32, prefix_len=8, bottleneck=16,
+    ),
+    # MPT-7B stand-in (paper §4.3, Tables 5/9, Figure 2)
+    "mpt-sim": dict(
+        arch="mpt", d_model=128, n_layers=4, n_heads=8, d_ff=512,
+        vocab=512, seq_len=64, max_rank=8, rank_choices=[8, 6, 4],
+        lora_alpha=16.0, targets=MPT_TARGETS,
+        batch_train=16, batch_eval=32, prefix_len=8, bottleneck=16,
+    ),
+}
+
+# adapter/prunable geometry per target name
+def _target_shape(cfg, t):
+    d, f = cfg["d_model"], cfg["d_ff"]
+    return {
+        "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+        "gate": (f, d), "up": (f, d), "down": (d, f),
+    }[t]
+
+
+# --------------------------------------------------------------------------
+# parameter specs — the L2<->L3 ABI
+# --------------------------------------------------------------------------
+
+def base_param_specs(cfg):
+    """Ordered [(name, shape)] for the frozen/pretrained base model."""
+    d, f, v = cfg["d_model"], cfg["d_ff"], cfg["vocab"]
+    llama = cfg["arch"] == "llama"
+    specs = [("embed", (v, d))]
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        specs.append((p + "attn_norm.g", (d,)))
+        if not llama:
+            specs.append((p + "attn_norm.b", (d,)))
+        specs += [(p + "attn.q", (d, d)), (p + "attn.k", (d, d)),
+                  (p + "attn.v", (d, d)), (p + "attn.o", (d, d))]
+        specs.append((p + "mlp_norm.g", (d,)))
+        if not llama:
+            specs.append((p + "mlp_norm.b", (d,)))
+        if llama:
+            specs.append((p + "mlp.gate", (f, d)))
+        specs += [(p + "mlp.up", (f, d)), (p + "mlp.down", (d, f))]
+    specs.append(("final_norm.g", (d,)))
+    if not llama:
+        specs.append(("final_norm.b", (d,)))
+    specs.append(("lm_head", (v, d)))
+    return specs
+
+
+def adapter_modules(cfg):
+    """Ordered adapter module names; row order of the rank_mask input."""
+    mods = []
+    for i in range(cfg["n_layers"]):
+        for t in cfg["targets"]:
+            sect = "attn" if t in ("q", "k", "v", "o") else "mlp"
+            mods.append(f"layers.{i}.{sect}.{t}")
+    return mods
+
+
+def adapter_param_specs(cfg):
+    """Ordered [(name, shape)]: lora_a.<mod> [R, in] then lora_b.<mod> [out, R],
+    module-major (both halves of one adapter are adjacent)."""
+    r = cfg["max_rank"]
+    specs = []
+    for i in range(cfg["n_layers"]):
+        for t in cfg["targets"]:
+            sect = "attn" if t in ("q", "k", "v", "o") else "mlp"
+            mod = f"layers.{i}.{sect}.{t}"
+            out, inp = _target_shape(cfg, t)
+            specs.append((f"lora_a.{mod}", (r, inp)))
+            specs.append((f"lora_b.{mod}", (out, r)))
+    return specs
+
+
+def prefix_param_specs(cfg):
+    """Prefix-tuning baseline (Li & Liang 2021): learnable per-layer KV."""
+    h, p = cfg["n_heads"], cfg["prefix_len"]
+    dh = cfg["d_model"] // h
+    specs = []
+    for i in range(cfg["n_layers"]):
+        specs.append((f"prefix_k.{i}", (h, p, dh)))
+        specs.append((f"prefix_v.{i}", (h, p, dh)))
+    return specs
+
+
+def series_param_specs(cfg):
+    """Series adapter baseline (Houlsby 2019): bottleneck after each MLP."""
+    d, bn = cfg["d_model"], cfg["bottleneck"]
+    specs = []
+    for i in range(cfg["n_layers"]):
+        specs.append((f"series_down.{i}", (bn, d)))
+        specs.append((f"series_up.{i}", (d, bn)))
+    return specs
+
+
+def parallel_param_specs(cfg):
+    """Parallel adapter baseline (Pfeiffer 2020): bottleneck beside each MLP."""
+    d, bn = cfg["d_model"], cfg["bottleneck"]
+    specs = []
+    for i in range(cfg["n_layers"]):
+        specs.append((f"parallel_down.{i}", (bn, d)))
+        specs.append((f"parallel_up.{i}", (d, bn)))
+    return specs
+
+
+def prunable_specs(cfg):
+    """Ordered [(name, shape, site)] of base weights Shears sparsifies.
+
+    `site` identifies the activation-statistics vector the weight's Wanda /
+    SparseGPT score needs (weights sharing an input share a site).
+    """
+    specs = []
+    llama = cfg["arch"] == "llama"
+    for i in range(cfg["n_layers"]):
+        p = f"layers.{i}."
+        specs += [
+            (p + "attn.q", _target_shape(cfg, "q"), f"{i}.attn_in"),
+            (p + "attn.k", _target_shape(cfg, "k"), f"{i}.attn_in"),
+            (p + "attn.v", _target_shape(cfg, "v"), f"{i}.attn_in"),
+            (p + "attn.o", _target_shape(cfg, "o"), f"{i}.o_in"),
+        ]
+        if llama:
+            specs.append((p + "mlp.gate", _target_shape(cfg, "gate"), f"{i}.mlp_in"))
+        specs += [
+            (p + "mlp.up", _target_shape(cfg, "up"), f"{i}.mlp_in"),
+            (p + "mlp.down", _target_shape(cfg, "down"), f"{i}.down_in"),
+        ]
+    return specs
+
+
+def calib_sites(cfg):
+    """Ordered unique stats sites with their feature dims."""
+    d, f = cfg["d_model"], cfg["d_ff"]
+    sites = []
+    for i in range(cfg["n_layers"]):
+        sites += [(f"{i}.attn_in", d), (f"{i}.o_in", d),
+                  (f"{i}.mlp_in", d), (f"{i}.down_in", f)]
+    return sites
+
+
+# --------------------------------------------------------------------------
+# forward pass
+# --------------------------------------------------------------------------
+
+def _rope(q, k):
+    """Rotary position embedding over [B, H, S, dh] (llama-sim)."""
+    b, h, s, dh = q.shape
+    half = dh // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+
+    def rot(x):
+        x1, x2 = x[..., :half], x[..., half:]
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+        )
+
+    return rot(q), rot(k)
+
+
+def _alibi_slopes(h):
+    """MPT-style ALiBi head slopes: 2^(-8i/h)."""
+    return jnp.array([2.0 ** (-8.0 * (i + 1) / h) for i in range(h)], jnp.float32)
+
+
+def _norm(x2d, params, name, llama, use_pallas):
+    if llama:
+        fn = rmsnorm if use_pallas else rmsnorm_ref
+        return fn(x2d, params[name + ".g"])
+    # mpt: LayerNorm
+    mu = jnp.mean(x2d, axis=-1, keepdims=True)
+    var = jnp.var(x2d, axis=-1, keepdims=True)
+    return (x2d - mu) * jax.lax.rsqrt(var + 1e-5) * params[name + ".g"][None, :] + params[name + ".b"][None, :]
+
+
+class Forward:
+    """One forward construction: holds config, params, adapter state.
+
+    Collects Wanda/SparseGPT calibration statistics when `collect=True`
+    (Σx² per site and the Gram matrix H = XᵀX, accumulated over tokens).
+    """
+
+    def __init__(self, cfg, params, adapters=None, rank_mask=None,
+                 prefix=None, series=None, parallel=None,
+                 use_pallas=False, collect=False):
+        self.cfg = cfg
+        self.p = params
+        self.adapters = adapters
+        self.rank_mask = rank_mask
+        self.prefix = prefix
+        self.series = series
+        self.parallel = parallel
+        self.use_pallas = use_pallas
+        self.collect = collect
+        self.stats = {}
+        self.scale = cfg["lora_alpha"] / cfg["max_rank"]
+        self.mods = adapter_modules(cfg) if adapters is not None else []
+
+    def _record(self, site, x2d):
+        if self.collect:
+            self.stats[site] = (
+                jnp.sum(x2d * x2d, axis=0),      # Σx² per feature (Wanda)
+                x2d.T @ x2d,                      # Gram H (SparseGPT)
+            )
+
+    def _lin(self, x2d, wname, mod):
+        """Adapter-aware linear: base matmul + elastic LoRA if mod is a target."""
+        w = self.p[wname]
+        if self.adapters is not None and mod in self.mods:
+            idx = self.mods.index(mod)
+            a = self.adapters[f"lora_a.{mod}"]
+            b = self.adapters[f"lora_b.{mod}"]
+            mask = self.rank_mask[idx]
+            fn = lora_linear if self.use_pallas else lora_linear_ref
+            return fn(x2d, w, a, b, mask, self.scale)
+        return x2d @ w.T
+
+    def _attn(self, h, i, bsz, seq):
+        cfg, llama = self.cfg, self.cfg["arch"] == "llama"
+        d, nh = cfg["d_model"], cfg["n_heads"]
+        dh = d // nh
+        t = _norm(h, self.p, f"layers.{i}.attn_norm", llama, self.use_pallas)
+        self._record(f"{i}.attn_in", t)
+        pre = f"layers.{i}.attn."
+        q = self._lin(t, pre + "q", pre[:-1] + ".q")
+        k = self._lin(t, pre + "k", pre[:-1] + ".k")
+        v = self._lin(t, pre + "v", pre[:-1] + ".v")
+
+        def split(x):
+            return x.reshape(bsz, seq, nh, dh).transpose(0, 2, 1, 3)
+
+        q, k, v = split(q), split(k), split(v)
+        if llama:
+            q, k = _rope(q, k)
+
+        if self.prefix is not None:
+            pk = jnp.broadcast_to(self.prefix[f"prefix_k.{i}"], (bsz, nh, cfg["prefix_len"], dh))
+            pv = jnp.broadcast_to(self.prefix[f"prefix_v.{i}"], (bsz, nh, cfg["prefix_len"], dh))
+            k = jnp.concatenate([pk, k], axis=2)
+            v = jnp.concatenate([pv, v], axis=2)
+
+        plen = k.shape[2] - seq
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+        if not llama:  # mpt: ALiBi bias
+            slopes = _alibi_slopes(nh)
+            pos_k = jnp.arange(-plen, seq, dtype=jnp.float32)
+            pos_q = jnp.arange(seq, dtype=jnp.float32)
+            bias = -jnp.abs(pos_k[None, :] - pos_q[:, None])  # [S, S+P]
+            scores = scores + slopes[None, :, None, None] * bias[None, None]
+        causal = pos_mask = jnp.tril(jnp.ones((seq, seq), bool))
+        if plen:
+            pos_mask = jnp.concatenate([jnp.ones((seq, plen), bool), causal], axis=1)
+        scores = jnp.where(pos_mask[None, None], scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+        self._record(f"{i}.o_in", ctx)
+        return self._lin(ctx, pre + "o", pre[:-1] + ".o")
+
+    def _mlp(self, h, i):
+        cfg, llama = self.cfg, self.cfg["arch"] == "llama"
+        t = _norm(h, self.p, f"layers.{i}.mlp_norm", llama, self.use_pallas)
+        self._record(f"{i}.mlp_in", t)
+        pre = f"layers.{i}.mlp."
+        if llama:
+            g = self._lin(t, pre + "gate", pre[:-1] + ".gate")
+            u = self._lin(t, pre + "up", pre[:-1] + ".up")
+            act = jax.nn.silu(g) * u
+        else:
+            act = jax.nn.gelu(self._lin(t, pre + "up", pre[:-1] + ".up"))
+        self._record(f"{i}.down_in", act)
+        out = self._lin(act, pre + "down", pre[:-1] + ".down")
+        if self.series is not None:  # series adapter: after the MLP output
+            z = jax.nn.relu(out @ self.series[f"series_down.{i}"].T)
+            out = out + z @ self.series[f"series_up.{i}"].T
+        if self.parallel is not None:  # parallel adapter: beside the MLP
+            z = jax.nn.relu(t @ self.parallel[f"parallel_down.{i}"].T)
+            out = out + z @ self.parallel[f"parallel_up.{i}"].T
+        return out
+
+    def __call__(self, x_ids):
+        cfg = self.cfg
+        bsz, seq = x_ids.shape
+        h = self.p["embed"][x_ids].reshape(bsz * seq, cfg["d_model"])
+        for i in range(cfg["n_layers"]):
+            h = h + self._attn(h, i, bsz, seq)
+            h = h + self._mlp(h, i)
+        h = _norm(h, self.p, "final_norm", cfg["arch"] == "llama", self.use_pallas)
+        logits = h @ self.p["lm_head"].T
+        return logits.reshape(bsz, seq, cfg["vocab"])
+
+
+def forward(cfg, params, x_ids, **kw):
+    return Forward(cfg, params, **kw)(x_ids)
+
+
+def lm_loss(logits, y_ids, loss_mask):
+    """Masked next-token cross entropy. `y_ids` is already shifted by L3."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, y_ids[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1.0)
+
+
+# --------------------------------------------------------------------------
+# AdamW (optimizer state is part of the L2<->L3 ABI)
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+
+def adamw_update(params, grads, m, v, step, lr, weight_decay=0.0):
+    """One AdamW step over aligned dicts; returns (params, m, v)."""
+    b1t = 1.0 - ADAM_B1 ** step
+    b2t = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        nm = ADAM_B1 * m[k] + (1 - ADAM_B1) * g
+        nv = ADAM_B2 * v[k] + (1 - ADAM_B2) * g * g
+        upd = (nm / b1t) / (jnp.sqrt(nv / b2t) + ADAM_EPS)
+        new_p[k] = params[k] - lr * (upd + weight_decay * params[k])
+        new_m[k], new_v[k] = nm, nv
+    return new_p, new_m, new_v

@@ -1,0 +1,306 @@
+"""Entry-point builders: the compute graphs `aot.py` lowers to HLO.
+
+Each builder returns a dict:
+    fn            — pure function over flat positional arrays
+    specs         — jax.ShapeDtypeStruct example args (lowering shapes)
+    input_names   — canonical input order (the L3 ABI, see manifest.json)
+    output_names  — canonical output order
+
+Parameter-group orderings come from model.*_param_specs(); scalars are f32
+rank-0; token batches are i32 [B, S].
+
+Why whole-step graphs: loss, gradients (adapter-only via stop-slicing the
+argument list) and the AdamW update are fused into ONE executable per
+method, so the rust hot loop is a single `execute` per training step with
+no intermediate host round-trips (DESIGN.md §9 L2 target).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dt=F32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def _batch_specs(cfg, train=True):
+    b = cfg["batch_train"] if train else cfg["batch_eval"]
+    s = cfg["seq_len"]
+    return [_sds((b, s), I32), _sds((b, s), I32), _sds((b, s), F32)]
+
+
+def _names(specs):
+    return [n for n, _ in specs]
+
+
+def _to_dict(names, vals):
+    return dict(zip(names, vals))
+
+
+# --------------------------------------------------------------------- NLS
+
+
+def build_train_step_nls(cfg):
+    """Shears super-adapter training step (paper §3.2).
+
+    The rank_mask input is the NLS sampler's knob: L3 draws a sub-adapter
+    configuration per step and materializes it as a {0,1} mask, giving
+    weight-sharing NAS over one compiled executable.
+    """
+    base = M.base_param_specs(cfg)
+    adpt = M.adapter_param_specs(cfg)
+    nb, na = len(base), len(adpt)
+    n_mods = len(M.adapter_modules(cfg))
+    r = cfg["max_rank"]
+
+    def fn(*args):
+        i = 0
+        basep = _to_dict(_names(base), args[i:i + nb]); i += nb
+        adp = _to_dict(_names(adpt), args[i:i + na]); i += na
+        m = _to_dict(_names(adpt), args[i:i + na]); i += na
+        v = _to_dict(_names(adpt), args[i:i + na]); i += na
+        step, lr, x, y, lmask, rmask = args[i:i + 6]
+
+        def loss_fn(adp):
+            logits = M.forward(cfg, basep, x, adapters=adp, rank_mask=rmask)
+            return M.lm_loss(logits, y, lmask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(adp)
+        adp, m, v = M.adamw_update(adp, grads, m, v, step, lr)
+        outs = [adp[k] for k, _ in adpt] + [m[k] for k, _ in adpt] \
+            + [v[k] for k, _ in adpt] + [loss]
+        return tuple(outs)
+
+    specs = [_sds(s) for _, s in base] + [_sds(s) for _, s in adpt] * 3 \
+        + [_sds(()), _sds(())] + _batch_specs(cfg) + [_sds((n_mods, r))]
+    input_names = _names(base) + _names(adpt) \
+        + ["m." + n for n in _names(adpt)] + ["v." + n for n in _names(adpt)] \
+        + ["step", "lr", "x", "y", "loss_mask", "rank_mask"]
+    output_names = _names(adpt) + ["m." + n for n in _names(adpt)] \
+        + ["v." + n for n in _names(adpt)] + ["loss"]
+    return dict(fn=fn, specs=specs, input_names=input_names,
+                output_names=output_names)
+
+
+# ---------------------------------------------------------------- full FT
+
+
+def build_train_step_full(cfg):
+    """Full fine-tuning step (SparseFT baseline, paper §4.3; also used for
+    in-repo pretraining with all-ones masks).
+
+    Sparsity masks for every prunable weight are re-applied after the AdamW
+    update so unstructured sparsity survives full fine-tuning — the same
+    protocol Kurtic et al. (2023) keep via sparse optimizers.
+    """
+    base = M.base_param_specs(cfg)
+    prun = M.prunable_specs(cfg)
+    nb, np_ = len(base), len(prun)
+
+    def fn(*args):
+        i = 0
+        basep = _to_dict(_names(base), args[i:i + nb]); i += nb
+        m = _to_dict(_names(base), args[i:i + nb]); i += nb
+        v = _to_dict(_names(base), args[i:i + nb]); i += nb
+        masks = {prun[j][0]: args[i + j] for j in range(np_)}; i += np_
+        step, lr, x, y, lmask = args[i:i + 5]
+
+        def loss_fn(p):
+            return M.lm_loss(M.forward(cfg, p, x), y, lmask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(basep)
+        basep, m, v = M.adamw_update(basep, grads, m, v, step, lr,
+                                     weight_decay=0.01)
+        for name in masks:  # keep pruned weights at exactly zero
+            basep[name] = basep[name] * masks[name]
+            m[name] = m[name] * masks[name]
+            v[name] = v[name] * masks[name]
+        outs = [basep[k] for k, _ in base] + [m[k] for k, _ in base] \
+            + [v[k] for k, _ in base] + [loss]
+        return tuple(outs)
+
+    specs = [_sds(s) for _, s in base] * 3 \
+        + [_sds(s) for _, s, _ in prun] \
+        + [_sds(()), _sds(())] + _batch_specs(cfg)
+    input_names = _names(base) + ["m." + n for n in _names(base)] \
+        + ["v." + n for n in _names(base)] \
+        + ["mask." + n for n, _, _ in prun] \
+        + ["step", "lr", "x", "y", "loss_mask"]
+    output_names = _names(base) + ["m." + n for n in _names(base)] \
+        + ["v." + n for n in _names(base)] + ["loss"]
+    return dict(fn=fn, specs=specs, input_names=input_names,
+                output_names=output_names)
+
+
+# ------------------------------------------------------- PEFT baselines
+
+
+def _build_train_step_extra(cfg, extra_specs, fwd_kw):
+    """Shared shape for prefix/series/parallel baseline train steps."""
+    base = M.base_param_specs(cfg)
+    nb, ne = len(base), len(extra_specs)
+
+    def fn(*args):
+        i = 0
+        basep = _to_dict(_names(base), args[i:i + nb]); i += nb
+        ext = _to_dict(_names(extra_specs), args[i:i + ne]); i += ne
+        m = _to_dict(_names(extra_specs), args[i:i + ne]); i += ne
+        v = _to_dict(_names(extra_specs), args[i:i + ne]); i += ne
+        step, lr, x, y, lmask = args[i:i + 5]
+
+        def loss_fn(ext):
+            logits = M.forward(cfg, basep, x, **{fwd_kw: ext})
+            return M.lm_loss(logits, y, lmask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(ext)
+        ext, m, v = M.adamw_update(ext, grads, m, v, step, lr)
+        outs = [ext[k] for k, _ in extra_specs] + [m[k] for k, _ in extra_specs] \
+            + [v[k] for k, _ in extra_specs] + [loss]
+        return tuple(outs)
+
+    specs = [_sds(s) for _, s in base] + [_sds(s) for _, s in extra_specs] * 3 \
+        + [_sds(()), _sds(())] + _batch_specs(cfg)
+    input_names = _names(base) + _names(extra_specs) \
+        + ["m." + n for n in _names(extra_specs)] \
+        + ["v." + n for n in _names(extra_specs)] \
+        + ["step", "lr", "x", "y", "loss_mask"]
+    output_names = _names(extra_specs) + ["m." + n for n in _names(extra_specs)] \
+        + ["v." + n for n in _names(extra_specs)] + ["loss"]
+    return dict(fn=fn, specs=specs, input_names=input_names,
+                output_names=output_names)
+
+
+def build_train_step_prefix(cfg):
+    return _build_train_step_extra(cfg, M.prefix_param_specs(cfg), "prefix")
+
+
+def build_train_step_series(cfg):
+    return _build_train_step_extra(cfg, M.series_param_specs(cfg), "series")
+
+
+def build_train_step_parallel(cfg):
+    return _build_train_step_extra(cfg, M.parallel_param_specs(cfg), "parallel")
+
+
+# -------------------------------------------------------------- forwards
+
+
+def build_forward_eval(cfg, use_pallas=False):
+    """Adapter-aware eval forward; rank_mask selects the sub-adapter."""
+    base = M.base_param_specs(cfg)
+    adpt = M.adapter_param_specs(cfg)
+    nb, na = len(base), len(adpt)
+    n_mods = len(M.adapter_modules(cfg))
+    r = cfg["max_rank"]
+    b, s = cfg["batch_eval"], cfg["seq_len"]
+
+    def fn(*args):
+        basep = _to_dict(_names(base), args[:nb])
+        adp = _to_dict(_names(adpt), args[nb:nb + na])
+        x, rmask = args[nb + na:]
+        logits = M.forward(cfg, basep, x, adapters=adp, rank_mask=rmask,
+                           use_pallas=use_pallas)
+        return (logits,)
+
+    specs = [_sds(s_) for _, s_ in base] + [_sds(s_) for _, s_ in adpt] \
+        + [_sds((b, s), I32), _sds((n_mods, r))]
+    input_names = _names(base) + _names(adpt) + ["x", "rank_mask"]
+    return dict(fn=fn, specs=specs, input_names=input_names,
+                output_names=["logits"])
+
+
+def build_forward_eval_base(cfg):
+    """Base-model eval (w/o-tune ablation rows; also the pruned-w/o-tune rows)."""
+    base = M.base_param_specs(cfg)
+    b, s = cfg["batch_eval"], cfg["seq_len"]
+
+    def fn(*args):
+        basep = _to_dict(_names(base), args[:-1])
+        return (M.forward(cfg, basep, args[-1]),)
+
+    specs = [_sds(s_) for _, s_ in base] + [_sds((b, s), I32)]
+    return dict(fn=fn, specs=specs,
+                input_names=_names(base) + ["x"], output_names=["logits"])
+
+
+def _build_forward_eval_extra(cfg, extra_specs, fwd_kw):
+    base = M.base_param_specs(cfg)
+    nb, ne = len(base), len(extra_specs)
+    b, s = cfg["batch_eval"], cfg["seq_len"]
+
+    def fn(*args):
+        basep = _to_dict(_names(base), args[:nb])
+        ext = _to_dict(_names(extra_specs), args[nb:nb + ne])
+        return (M.forward(cfg, basep, args[-1], **{fwd_kw: ext}),)
+
+    specs = [_sds(s_) for _, s_ in base] + [_sds(s_) for _, s_ in extra_specs] \
+        + [_sds((b, s), I32)]
+    return dict(fn=fn, specs=specs,
+                input_names=_names(base) + _names(extra_specs) + ["x"],
+                output_names=["logits"])
+
+
+def build_forward_eval_prefix(cfg):
+    return _build_forward_eval_extra(cfg, M.prefix_param_specs(cfg), "prefix")
+
+
+def build_forward_eval_series(cfg):
+    return _build_forward_eval_extra(cfg, M.series_param_specs(cfg), "series")
+
+
+def build_forward_eval_parallel(cfg):
+    return _build_forward_eval_extra(cfg, M.parallel_param_specs(cfg), "parallel")
+
+
+# ------------------------------------------------------------ calibration
+
+
+def build_calib_stats(cfg):
+    """Wanda/SparseGPT calibration forward (paper §3.1).
+
+    One batch in, per-site (Σx², H=XᵀX) out; L3 accumulates over the
+    calibration set and feeds the results to the prune ops.
+    """
+    base = M.base_param_specs(cfg)
+    sites = M.calib_sites(cfg)
+    b, s = cfg["batch_eval"], cfg["seq_len"]
+
+    def fn(*args):
+        basep = _to_dict(_names(base), args[:-1])
+        fw = M.Forward(cfg, basep, collect=True)
+        fw(args[-1])
+        outs = []
+        for site, _ in sites:
+            sumsq, h = fw.stats[site]
+            outs += [sumsq, h]
+        return tuple(outs)
+
+    specs = [_sds(s_) for _, s_ in base] + [_sds((b, s), I32)]
+    output_names = []
+    for site, _ in sites:
+        output_names += [f"sumsq.{site}", f"gram.{site}"]
+    return dict(fn=fn, specs=specs,
+                input_names=_names(base) + ["x"], output_names=output_names)
+
+
+# ----------------------------------------------------------------- registry
+
+BUILDERS = {
+    "train_step_nls": build_train_step_nls,
+    "train_step_full": build_train_step_full,
+    "train_step_prefix": build_train_step_prefix,
+    "train_step_series": build_train_step_series,
+    "train_step_parallel": build_train_step_parallel,
+    "forward_eval": build_forward_eval,
+    "forward_eval_pallas": lambda cfg: build_forward_eval(cfg, use_pallas=True),
+    "forward_eval_base": build_forward_eval_base,
+    "forward_eval_prefix": build_forward_eval_prefix,
+    "forward_eval_series": build_forward_eval_series,
+    "forward_eval_parallel": build_forward_eval_parallel,
+    "calib_stats": build_calib_stats,
+}

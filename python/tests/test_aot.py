@@ -1,0 +1,100 @@
+"""AOT/manifest integrity: the L2↔L3 ABI invariants.
+
+These tests validate the *builders* (fast — no lowering) and, when
+`artifacts/manifest.json` exists, cross-check it against the current
+builder signatures so a stale `make artifacts` is caught in CI.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import model as M
+from compile import train as T
+from compile.aot import ENTRY_SETS, PRUNE_KINDS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_sets_cover_all_builders():
+    for cname, entries in ENTRY_SETS.items():
+        assert cname in M.CONFIGS
+        for e in entries:
+            assert e in T.BUILDERS, e
+    # every config ships the pipeline-critical entries
+    for entries in ENTRY_SETS.values():
+        for required in ["train_step_nls", "train_step_full", "forward_eval",
+                         "forward_eval_base", "calib_stats"]:
+            assert required in entries
+
+
+@pytest.mark.parametrize("cname", list(M.CONFIGS.keys()))
+def test_builder_signatures_consistent(cname):
+    cfg = M.CONFIGS[cname]
+    for entry in ENTRY_SETS[cname]:
+        built = T.BUILDERS[entry](cfg)
+        assert len(built["specs"]) == len(built["input_names"]), entry
+        assert len(set(built["input_names"])) == len(built["input_names"]), entry
+        assert len(set(built["output_names"])) == len(built["output_names"]), entry
+        # train steps: outputs are trainables + opt state + loss
+        if entry.startswith("train_step"):
+            assert built["output_names"][-1] == "loss", entry
+            n_out = len(built["output_names"]) - 1
+            assert n_out % 3 == 0, entry  # params, m, v aligned
+
+
+def test_train_nls_input_order_matches_convention():
+    cfg = M.CONFIGS["tiny-llama"]
+    built = T.build_train_step_nls(cfg)
+    names = built["input_names"]
+    nb = len(M.base_param_specs(cfg))
+    na = len(M.adapter_param_specs(cfg))
+    assert names[:nb] == [n for n, _ in M.base_param_specs(cfg)]
+    assert names[nb:nb + na] == [n for n, _ in M.adapter_param_specs(cfg)]
+    assert names[-6:] == ["step", "lr", "x", "y", "loss_mask", "rank_mask"]
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_matches_current_builders():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    for cname, cj in man["configs"].items():
+        cfg = M.CONFIGS[cname]
+        assert [p["name"] for p in cj["base_params"]] == [
+            n for n, _ in M.base_param_specs(cfg)
+        ]
+        assert [p["name"] for p in cj["adapter_params"]] == [
+            n for n, _ in M.adapter_param_specs(cfg)
+        ]
+        assert cj["adapter_modules"] == M.adapter_modules(cfg)
+        for entry, ej in cj["entrypoints"].items():
+            built = T.BUILDERS[entry](cfg)
+            assert [i["name"] for i in ej["inputs"]] == built["input_names"], (
+                cname, entry)
+            assert [o["name"] for o in ej["outputs"]] == built["output_names"], (
+                cname, entry)
+            # the artifact file exists
+            assert os.path.exists(os.path.join(ART, ej["file"]))
+
+
+@needs_artifacts
+def test_prune_ops_cover_every_prunable_shape():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    shapes = set()
+    for cj in man["configs"].values():
+        for p in cj["prunable"]:
+            shapes.add(tuple(p["shape"]))
+    for (n, k) in shapes:
+        for kind in PRUNE_KINDS:
+            key = f"{kind}_{n}x{k}"
+            assert key in man["prune_ops"], key
+            assert os.path.exists(os.path.join(ART, man["prune_ops"][key]["file"]))

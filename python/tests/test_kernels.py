@@ -1,0 +1,203 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the f32/bf16 dtypes the stack supports);
+every property is a straight assert_allclose against ref.py. These tests
+are the build-time gate: `make artifacts` refuses to ship HLO whose
+kernels disagree with the oracles (see Makefile).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lora_linear, rmsnorm, wanda_apply
+from compile.kernels.lora_linear import _block
+from compile.kernels.ref import (
+    lora_linear_bwd_ref,
+    lora_linear_ref,
+    magnitude_prune_ref,
+    rmsnorm_ref,
+    wanda_apply_ref,
+    wanda_score_ref,
+    wanda_threshold_ref,
+)
+from compile.kernels.wanda import wanda_prune
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.sampled_from([8, 16, 24, 48, 64, 96, 128])
+ranks = st.sampled_from([2, 4, 6, 8, 16])
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def _rank_mask(r_max, r_active):
+    return (jnp.arange(r_max) < r_active).astype(jnp.float32)
+
+
+# ------------------------------------------------------------- lora_linear
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=dims, k=dims, n=dims, r=ranks, r_active=st.integers(0, 16))
+def test_lora_linear_fwd_matches_ref(m, k, n, r, r_active):
+    x, w = _rand(0, (m, k)), _rand(1, (n, k))
+    a, b = _rand(2, (r, k), 0.05), _rand(3, (n, r), 0.05)
+    mask = _rank_mask(r, min(r_active, r))
+    got = lora_linear(x, w, a, b, mask, 2.0)
+    want = lora_linear_ref(x, w, a, b, mask, 2.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(m=dims, k=dims, n=dims, r=ranks)
+def test_lora_linear_grads_match_ref(m, k, n, r):
+    x, w = _rand(0, (m, k)), _rand(1, (n, k))
+    a, b = _rand(2, (r, k), 0.05), _rand(3, (n, r), 0.05)
+    mask = _rank_mask(r, max(1, r // 2))
+    dy = _rand(4, (m, n))
+
+    def loss(x, a, b):
+        return jnp.sum(lora_linear(x, w, a, b, mask, 2.0) * dy)
+
+    dx, da, db = jax.grad(loss, (0, 1, 2))(x, a, b)
+    dxr, dar, dbr = lora_linear_bwd_ref(x, w, a, b, mask, 2.0, dy)
+    # f32 matmul accumulation order differs between the tiled kernel and the
+    # single jnp dot; tolerance scales with the reduction length.
+    np.testing.assert_allclose(dx, dxr, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(da, dar, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(db, dbr, rtol=1e-4, atol=1e-3)
+
+
+def test_lora_linear_zero_mask_is_base_matmul():
+    """rank mask all-zero => adapter contributes nothing (NLS lower bound)."""
+    x, w = _rand(0, (32, 48)), _rand(1, (64, 48))
+    a, b = _rand(2, (8, 48)), _rand(3, (64, 8))
+    y = lora_linear(x, w, a, b, jnp.zeros(8), 4.0)
+    np.testing.assert_allclose(y, x @ w.T, rtol=1e-5, atol=1e-4)
+
+
+def test_lora_linear_full_mask_is_vanilla_lora():
+    """all-ones mask == merged-LoRA forward (paper: maximal sub-adapter)."""
+    x, w = _rand(0, (32, 48)), _rand(1, (64, 48))
+    a, b = _rand(2, (8, 48), 0.1), _rand(3, (64, 8), 0.1)
+    y = lora_linear(x, w, a, b, jnp.ones(8), 4.0)
+    merged = w + 4.0 * (b @ a)
+    np.testing.assert_allclose(y, x @ merged.T, rtol=1e-4, atol=1e-3)
+
+
+def test_lora_linear_mask_prefix_equals_sliced_adapter():
+    """Weight sharing: masking to rank r == using A[:r], B[:, :r] (paper §3.2)."""
+    x, w = _rand(0, (32, 48)), _rand(1, (64, 48))
+    a, b = _rand(2, (8, 48), 0.1), _rand(3, (64, 8), 0.1)
+    for r in (2, 4, 6):
+        y_masked = lora_linear(x, w, a, b, _rank_mask(8, r), 2.0)
+        y_sliced = x @ w.T + (x @ a[:r].T) @ b[:, :r].T * 2.0
+        np.testing.assert_allclose(y_masked, y_sliced, rtol=1e-5, atol=1e-4)
+
+
+def test_lora_linear_frozen_w_gets_zero_grad():
+    x, w = _rand(0, (16, 24)), _rand(1, (32, 24))
+    a, b = _rand(2, (4, 24)), _rand(3, (32, 4))
+    dw = jax.grad(lambda w: jnp.sum(lora_linear(x, w, a, b, jnp.ones(4), 1.0)))(w)
+    np.testing.assert_array_equal(dw, jnp.zeros_like(w))
+
+
+def test_block_helper_divides():
+    for dim in (1, 7, 48, 128, 344, 512, 1000):
+        for cap in (1, 16, 128, 4096):
+            b = _block(dim, cap)
+            assert b >= 1 and b <= cap or b == dim
+            assert dim % b == 0
+
+
+# ----------------------------------------------------------------- rmsnorm
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=dims, d=dims)
+def test_rmsnorm_matches_ref(m, d):
+    x, g = _rand(0, (m, d)), _rand(1, (d,))
+    np.testing.assert_allclose(rmsnorm(x, g), rmsnorm_ref(x, g), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(m=dims, d=dims)
+def test_rmsnorm_grads_match_autodiff_of_ref(m, d):
+    x, g = _rand(0, (m, d)), _rand(1, (d,))
+    dx, dg = jax.grad(lambda x, g: jnp.sum(jnp.sin(rmsnorm(x, g))), (0, 1))(x, g)
+    dxr, dgr = jax.grad(lambda x, g: jnp.sum(jnp.sin(rmsnorm_ref(x, g))), (0, 1))(x, g)
+    np.testing.assert_allclose(dx, dxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(dg, dgr, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_row_scale_invariant_direction():
+    """RMSNorm output is invariant to positive row scaling of the input."""
+    x, g = _rand(0, (8, 32)), _rand(1, (32,))
+    y1, y2 = rmsnorm(x, g), rmsnorm(x * 7.5, g)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+# -------------------------------------------------------------------- wanda
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=dims, keep=st.sampled_from([0.3, 0.5, 0.6, 0.75, 1.0]))
+def test_wanda_kernel_matches_ref(n, k, keep):
+    w = _rand(0, (n, k))
+    xnorm = jnp.abs(_rand(1, (k,))) + 0.01
+    thresh = wanda_threshold_ref(w, xnorm, keep)
+    wp, mask = wanda_apply(w, xnorm, thresh)
+    wpr, maskr = wanda_apply_ref(w, xnorm, thresh)
+    np.testing.assert_allclose(wp, wpr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(mask, maskr)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=dims, k=dims, sparsity=st.sampled_from([0.0, 0.4, 0.5, 0.7]))
+def test_wanda_prune_hits_target_sparsity_per_row(n, k, sparsity):
+    """Wanda compares within rows (paper §2.1): every row hits the target."""
+    w = _rand(0, (n, k)) + 0.01  # avoid ties at 0
+    xnorm = jnp.abs(_rand(1, (k,))) + 0.01
+    _, mask = wanda_prune(w, xnorm, 1.0 - sparsity)
+    keep_per_row = np.asarray(mask.sum(axis=1))
+    expect = max(1, round(k * (1.0 - sparsity)))
+    assert (keep_per_row == expect).all(), (keep_per_row[:4], expect)
+
+
+def test_wanda_prefers_high_activation_columns():
+    """With equal |W|, columns with larger ||X||_2 must survive (Eq. 1)."""
+    n, k = 16, 32
+    w = jnp.ones((n, k))
+    xnorm = jnp.arange(1, k + 1, dtype=jnp.float32)
+    _, mask = wanda_prune(w, xnorm, 0.5)
+    assert mask[:, k // 2:].all() and not mask[:, : k // 2].any()
+
+
+def test_wanda_score_is_abs_w_times_xnorm():
+    w = _rand(0, (8, 16))
+    xnorm = jnp.abs(_rand(1, (16,)))
+    np.testing.assert_allclose(
+        wanda_score_ref(w, xnorm), jnp.abs(w) * xnorm[None, :], rtol=1e-6
+    )
+
+
+def test_magnitude_prune_ignores_activations():
+    """Magnitude baseline == Wanda with unit activations."""
+    w = _rand(0, (16, 32))
+    wp_mag, m_mag = magnitude_prune_ref(w, 0.5)
+    wp_w, m_w = wanda_prune(w, jnp.ones(32), 0.5)
+    np.testing.assert_allclose(wp_mag, wp_w, rtol=1e-6)
+    np.testing.assert_array_equal(m_mag, m_w)
+
+
+def test_wanda_keep_all_is_identity():
+    w = _rand(0, (16, 24))
+    xnorm = jnp.abs(_rand(1, (24,))) + 0.1
+    wp, mask = wanda_prune(w, xnorm, 1.0)
+    np.testing.assert_array_equal(wp, w)
+    assert mask.all()

@@ -1,0 +1,316 @@
+"""L2 model correctness: forward semantics, adapter variants, train steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["tiny-llama"]
+
+
+def _init_base(cfg, seed=0, scale=0.05):
+    rng = np.random.default_rng(seed)
+    base = {}
+    for n, s in M.base_param_specs(cfg):
+        if n.endswith(".g"):
+            base[n] = jnp.ones(s)
+        elif n.endswith(".b"):
+            base[n] = jnp.zeros(s)
+        else:
+            base[n] = jnp.asarray(rng.normal(0, scale, s).astype("float32"))
+    return base
+
+
+def _init_adapters(cfg, seed=1, scale=0.02):
+    rng = np.random.default_rng(seed)
+    adpt = {}
+    for n, s in M.adapter_param_specs(cfg):
+        # LoRA init (paper §2.2): A gaussian, B zeros
+        adpt[n] = (
+            jnp.asarray(rng.normal(0, scale, s).astype("float32"))
+            if n.startswith("lora_a")
+            else jnp.zeros(s)
+        )
+    return adpt
+
+
+def _batch(cfg, seed=2, train=True):
+    rng = np.random.default_rng(seed)
+    b = cfg["batch_train"] if train else cfg["batch_eval"]
+    x = jnp.asarray(rng.integers(0, 32, (b, cfg["seq_len"])), jnp.int32)
+    return x, jnp.roll(x, -1, axis=1), jnp.ones((b, cfg["seq_len"]))
+
+
+# ------------------------------------------------------------------ specs
+
+
+def test_base_param_specs_cover_all_archs():
+    for name, cfg in M.CONFIGS.items():
+        specs = M.base_param_specs(cfg)
+        names = [n for n, _ in specs]
+        assert len(names) == len(set(names)), name
+        assert "embed" in names and "lm_head" in names
+        if cfg["arch"] == "mpt":
+            assert "layers.0.attn_norm.b" in names  # LayerNorm has bias
+            assert "layers.0.mlp.gate" not in names  # GELU MLP, no gate
+
+
+def test_adapter_specs_match_modules_and_targets():
+    for cfg in M.CONFIGS.values():
+        mods = M.adapter_modules(cfg)
+        assert len(mods) == cfg["n_layers"] * len(cfg["targets"])
+        specs = M.adapter_param_specs(cfg)
+        assert len(specs) == 2 * len(mods)
+        r = cfg["max_rank"]
+        for (an, ash), (bn, bsh) in zip(specs[::2], specs[1::2]):
+            assert an.startswith("lora_a.") and bn.startswith("lora_b.")
+            assert an[7:] == bn[7:]  # same module
+            assert ash[0] == r and bsh[1] == r
+            out, inp = bsh[0], ash[1]
+            assert (out, inp) in [
+                M._target_shape(cfg, t) for t in cfg["targets"]
+            ]
+
+
+def test_prunable_sites_exist_in_calib_sites():
+    for cfg in M.CONFIGS.values():
+        site_names = {s for s, _ in M.calib_sites(cfg)}
+        for name, (n, k), site in M.prunable_specs(cfg):
+            assert site in site_names, (name, site)
+        # site dim must match the weight's input dim
+        dims = dict(M.calib_sites(cfg))
+        for name, (n, k), site in M.prunable_specs(cfg):
+            assert dims[site] == k, (name, site)
+
+
+# ---------------------------------------------------------------- forward
+
+
+def test_forward_shapes():
+    base = _init_base(CFG)
+    x, _, _ = _batch(CFG)
+    logits = M.forward(CFG, base, x)
+    assert logits.shape == (x.shape[0], x.shape[1], CFG["vocab"])
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_mpt_shapes():
+    cfg = dict(M.CONFIGS["mpt-sim"])
+    cfg.update(n_layers=1, seq_len=16, batch_train=2)  # keep the test fast
+    base = _init_base(cfg)
+    x, _, _ = _batch(cfg)
+    logits = M.forward(cfg, base, x)
+    assert logits.shape == (2, 16, cfg["vocab"])
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_forward_is_causal():
+    """Changing a future token must not change past logits."""
+    base = _init_base(CFG)
+    x, _, _ = _batch(CFG)
+    l1 = M.forward(CFG, base, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % CFG["vocab"])
+    l2 = M.forward(CFG, base, x2)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], atol=1e-5)
+
+
+def test_zero_rank_mask_equals_base_forward():
+    """NLS minimal-below-minimum: all-zero mask deactivates every adapter."""
+    base, adpt = _init_base(CFG), _init_adapters(CFG)
+    # give B nonzero values so the mask actually has something to suppress
+    adpt = {k: (v if k.startswith("lora_a") else jnp.ones_like(v) * 0.1) for k, v in adpt.items()}
+    x, _, _ = _batch(CFG)
+    n_mods, r = len(M.adapter_modules(CFG)), CFG["max_rank"]
+    la = M.forward(CFG, base, x, adapters=adpt, rank_mask=jnp.zeros((n_mods, r)))
+    lb = M.forward(CFG, base, x)
+    np.testing.assert_allclose(la, lb, atol=1e-5)
+
+
+def test_zero_init_b_makes_adapters_transparent():
+    """LoRA init invariant (paper §2.2): B=0 => adapted forward == base."""
+    base, adpt = _init_base(CFG), _init_adapters(CFG)
+    x, _, _ = _batch(CFG)
+    n_mods, r = len(M.adapter_modules(CFG)), CFG["max_rank"]
+    la = M.forward(CFG, base, x, adapters=adpt, rank_mask=jnp.ones((n_mods, r)))
+    lb = M.forward(CFG, base, x)
+    np.testing.assert_allclose(la, lb, atol=1e-5)
+
+
+def test_rank_mask_prefix_slices_superadapter():
+    """Sub-adapter of rank r == slicing A/B to rank r (weight sharing)."""
+    base, adpt = _init_base(CFG), _init_adapters(CFG)
+    rng = np.random.default_rng(3)
+    adpt = {
+        k: jnp.asarray(rng.normal(0, 0.05, v.shape).astype("float32"))
+        for k, v in adpt.items()
+    }
+    x, _, _ = _batch(CFG)
+    mods, r = M.adapter_modules(CFG), CFG["max_rank"]
+    sub_r = 4
+    mask = jnp.broadcast_to(
+        (jnp.arange(r) < sub_r).astype(jnp.float32), (len(mods), r)
+    )
+    l_masked = M.forward(CFG, base, x, adapters=adpt, rank_mask=mask)
+
+    sliced = {}
+    for k, v in adpt.items():
+        if k.startswith("lora_a"):
+            sliced[k] = v.at[sub_r:].set(0.0)
+        else:
+            sliced[k] = v.at[:, sub_r:].set(0.0)
+    l_sliced = M.forward(
+        CFG, base, x, adapters=sliced, rank_mask=jnp.ones((len(mods), r))
+    )
+    np.testing.assert_allclose(l_masked, l_sliced, atol=1e-5)
+
+
+def test_prefix_series_parallel_change_logits():
+    base = _init_base(CFG)
+    x, _, _ = _batch(CFG)
+    l0 = M.forward(CFG, base, x)
+    rng = np.random.default_rng(4)
+
+    pre = {n: jnp.asarray(rng.normal(0, 0.1, s).astype("float32"))
+           for n, s in M.prefix_param_specs(CFG)}
+    assert float(jnp.abs(M.forward(CFG, base, x, prefix=pre) - l0).max()) > 1e-4
+
+    ser = {n: jnp.asarray(rng.normal(0, 0.1, s).astype("float32"))
+           for n, s in M.series_param_specs(CFG)}
+    assert float(jnp.abs(M.forward(CFG, base, x, series=ser) - l0).max()) > 1e-4
+
+    par = {n: jnp.asarray(rng.normal(0, 0.1, s).astype("float32"))
+           for n, s in M.parallel_param_specs(CFG)}
+    assert float(jnp.abs(M.forward(CFG, base, x, parallel=par) - l0).max()) > 1e-4
+
+
+def test_calib_stats_shapes_and_psd():
+    base = _init_base(CFG)
+    x, _, _ = _batch(CFG)
+    fw = M.Forward(CFG, base, collect=True)
+    fw(x)
+    dims = dict(M.calib_sites(CFG))
+    for site, dim in M.calib_sites(CFG):
+        sumsq, h = fw.stats[site]
+        assert sumsq.shape == (dim,) and h.shape == (dim, dim)
+        assert bool((sumsq >= 0).all())
+        # Gram matrices are PSD: x'Hx >= 0
+        z = jnp.ones((dim,))
+        assert float(z @ h @ z) >= -1e-3
+        # diag(H) == sumsq by construction
+        np.testing.assert_allclose(jnp.diag(h), sumsq, rtol=1e-4, atol=1e-3)
+
+
+# ------------------------------------------------------------- train steps
+
+
+def _run_steps(built, args_init, n_steps, extract, lr=3e-3):
+    fn = jax.jit(built["fn"])
+    args = list(args_init)
+    losses = []
+    for step in range(n_steps):
+        out = fn(*args, jnp.float32(step + 1), jnp.float32(lr), *extract)
+        n_new = len(out) - 1
+        args = args[: len(args) - n_new] + list(out[:-1]) if False else args
+        losses.append(float(out[-1]))
+        # re-thread updated params (they lead the arg list after base)
+        args = args[: len(args) - n_new] + list(out[:n_new])
+    return losses
+
+
+def test_train_step_nls_reduces_loss():
+    cfg = CFG
+    base, adpt = _init_base(cfg), _init_adapters(cfg)
+    x, y, lmask = _batch(cfg)
+    built = T.build_train_step_nls(cfg)
+    aspecs = M.adapter_param_specs(cfg)
+    zeros = [jnp.zeros(s) for _, s in aspecs]
+    n_mods, r = len(M.adapter_modules(cfg)), cfg["max_rank"]
+    rmask = jnp.ones((n_mods, r))
+    fn = jax.jit(built["fn"])
+    args = [base[n] for n, _ in M.base_param_specs(cfg)] \
+        + [adpt[n] for n, _ in aspecs] + zeros + zeros
+    losses = []
+    for step in range(25):
+        out = fn(*args, jnp.float32(step + 1), jnp.float32(5e-3),
+                 x, y, lmask, rmask)
+        na = len(aspecs)
+        args = args[: len(M.base_param_specs(cfg))] + list(out[: 3 * na])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0] * 0.98, losses[::6]
+
+
+def test_train_step_full_keeps_sparsity():
+    """SparseFT protocol: pruned weights stay exactly zero through training."""
+    cfg = CFG
+    base = _init_base(cfg)
+    prun = M.prunable_specs(cfg)
+    rng = np.random.default_rng(7)
+    masks = [
+        jnp.asarray((rng.random(s) > 0.5).astype("float32")) for _, s, _ in prun
+    ]
+    for (n, _, _), mk in zip(prun, masks):
+        base[n] = base[n] * mk
+    x, y, lmask = _batch(cfg)
+    built = T.build_train_step_full(cfg)
+    bspecs = M.base_param_specs(cfg)
+    zeros = [jnp.zeros(s) for _, s in bspecs]
+    fn = jax.jit(built["fn"])
+    args = [base[n] for n, _ in bspecs] + zeros + zeros + masks
+    for step in range(3):
+        out = fn(*args, jnp.float32(step + 1), jnp.float32(1e-3), x, y, lmask)
+        nb = len(bspecs)
+        args = list(out[: 3 * nb]) + masks
+    new_base = dict(zip([n for n, _ in bspecs], out[: len(bspecs)]))
+    for (n, _, _), mk in zip(prun, masks):
+        zeroed = np.asarray(new_base[n])[np.asarray(mk) == 0]
+        assert (zeroed == 0).all(), n
+
+
+@pytest.mark.parametrize("entry", ["train_step_prefix", "train_step_series",
+                                   "train_step_parallel"])
+def test_baseline_train_steps_reduce_loss(entry):
+    cfg = CFG
+    base = _init_base(cfg)
+    x, y, lmask = _batch(cfg)
+    built = T.BUILDERS[entry](cfg)
+    especs = {
+        "train_step_prefix": M.prefix_param_specs,
+        "train_step_series": M.series_param_specs,
+        "train_step_parallel": M.parallel_param_specs,
+    }[entry](cfg)
+    rng = np.random.default_rng(8)
+    ext = [jnp.asarray(rng.normal(0, 0.02, s).astype("float32")) for _, s in especs]
+    zeros = [jnp.zeros(s) for _, s in especs]
+    fn = jax.jit(built["fn"])
+    args = [base[n] for n, _ in M.base_param_specs(cfg)] + ext + zeros + zeros
+    losses = []
+    for step in range(15):
+        out = fn(*args, jnp.float32(step + 1), jnp.float32(5e-3), x, y, lmask)
+        ne = len(especs)
+        args = args[: len(M.base_param_specs(cfg))] + list(out[: 3 * ne])
+        losses.append(float(out[-1]))
+    assert losses[-1] < losses[0], (entry, losses[::5])
+
+
+def test_lm_loss_mask_restricts_positions():
+    logits = jnp.zeros((2, 4, 8))
+    y = jnp.zeros((2, 4), jnp.int32)
+    full = M.lm_loss(logits, y, jnp.ones((2, 4)))
+    half = M.lm_loss(logits, y, jnp.concatenate(
+        [jnp.ones((2, 2)), jnp.zeros((2, 2))], axis=1))
+    np.testing.assert_allclose(full, half, rtol=1e-6)  # uniform logits
+    np.testing.assert_allclose(full, np.log(8.0), rtol=1e-5)
+
+
+def test_adamw_moves_toward_gradient():
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.ones((4,))}
+    m = {"w": jnp.zeros((4,))}
+    v = {"w": jnp.zeros((4,))}
+    newp, _, _ = M.adamw_update(p, g, m, v, 1.0, 0.1)
+    assert bool((newp["w"] < p["w"]).all())

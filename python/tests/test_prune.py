@@ -1,0 +1,117 @@
+"""Prune-op correctness: Wanda / magnitude / SparseGPT-lite semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import prune as P
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.sampled_from([8, 16, 32, 48, 64])
+
+
+def _w(seed, n, k):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, 1, (n, k)).astype("float32"))
+
+
+def _gram(seed, k, m=256):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (m, k)).astype("float32")
+    return jnp.asarray(x.T @ x)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=dims, sparsity=st.sampled_from([0.4, 0.5, 0.7]))
+def test_wanda_op_row_sparsity(n, k, sparsity):
+    w = _w(0, n, k)
+    sumsq = jnp.abs(_w(1, 1, k)[0]) + 0.01
+    wp, mask = P.wanda_op(w, sumsq, 1.0 - sparsity)
+    expect = max(1, round(k * (1.0 - sparsity)))
+    assert (np.asarray(mask.sum(axis=1)) == expect).all()
+    np.testing.assert_array_equal(np.asarray(wp)[np.asarray(mask) == 0], 0.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=dims)
+def test_magnitude_op_keeps_largest(n, k):
+    w = _w(0, n, k)
+    wp, mask = P.magnitude_op(w, 0.5)
+    aw = np.abs(np.asarray(w))
+    for r in range(min(n, 4)):
+        kept = aw[r][np.asarray(mask[r]) == 1]
+        dropped = aw[r][np.asarray(mask[r]) == 0]
+        if len(dropped):
+            assert kept.min() >= dropped.max() - 1e-6
+
+
+def test_sparsegpt_hits_sparsity_and_compensates():
+    n, k = 32, 48
+    w = _w(0, n, k)
+    gram = _gram(1, k)
+    wp, mask = P.sparsegpt_op(w, gram, 0.5)
+    assert abs(float(mask.mean()) - 0.5) < 0.05
+    np.testing.assert_array_equal(np.asarray(wp)[np.asarray(mask) == 0], 0.0)
+    # surviving weights must have moved (OBS compensation), unlike Wanda
+    moved = np.abs(np.asarray(wp) - np.asarray(w))[np.asarray(mask) == 1]
+    assert moved.max() > 1e-4
+
+
+def test_sparsegpt_compensation_beats_naive_masking():
+    """The point of OBS: compensating survivors shrinks ||XW' - XW||
+    versus zeroing the same weights without compensation."""
+    n, k, m = 32, 48, 512
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (m, k)).astype("float32")
+    x[:, 1] = 0.9 * x[:, 0] + 0.1 * x[:, 1]  # correlation to exploit
+    w = jnp.asarray(rng.normal(0, 1, (n, k)).astype("float32"))
+    gram = jnp.asarray(x.T @ x)
+    wp_s, mask_s = P.sparsegpt_op(w, gram, 0.5)
+    y = x @ np.asarray(w).T
+    err_comp = np.linalg.norm(x @ np.asarray(wp_s).T - y)
+    err_naive = np.linalg.norm(x @ (np.asarray(w) * np.asarray(mask_s)).T - y)
+    assert err_comp < err_naive, (err_comp, err_naive)
+
+
+def test_sparsegpt_beats_magnitude_under_anisotropic_activations():
+    """Activation-aware pruning wins when input scales are skewed —
+    the regime Figure 2 / the Wanda paper motivate."""
+    n, k, m = 32, 48, 512
+    rng = np.random.default_rng(6)
+    scales = np.logspace(-2, 1, k).astype("float32")
+    x = (rng.normal(0, 1, (m, k)) * scales[None, :]).astype("float32")
+    w = jnp.asarray(rng.normal(0, 1, (n, k)).astype("float32"))
+    gram = jnp.asarray(x.T @ x)
+    wp_s, _ = P.sparsegpt_op(w, gram, 0.5)
+    wp_m, _ = P.magnitude_op(w, 0.5)
+    y = x @ np.asarray(w).T
+    err_s = np.linalg.norm(x @ np.asarray(wp_s).T - y)
+    err_m = np.linalg.norm(x @ np.asarray(wp_m).T - y)
+    assert err_s < err_m, (err_s, err_m)
+
+
+def test_wanda_op_uses_activation_scale():
+    """Wanda ≠ magnitude when activations are skewed (paper's core claim)."""
+    n, k = 16, 32
+    w = jnp.ones((n, k))
+    sumsq = jnp.asarray(np.linspace(0.01, 10.0, k).astype("float32")) ** 2
+    _, mask_w = P.wanda_op(w, sumsq, 0.5)
+    _, mask_m = P.magnitude_op(w + jnp.asarray(
+        np.random.default_rng(0).normal(0, 1e-4, (n, k)).astype("float32")), 0.5)
+    # wanda keeps the high-activation half
+    assert bool(mask_w[:, k // 2:].all())
+    assert not bool((mask_w == mask_m).all())
+
+
+def test_keep_frac_one_is_identity_everywhere():
+    w = _w(3, 16, 24)
+    for kind, args in [
+        ("wanda", (w, jnp.ones(24), 1.0)),
+        ("magnitude", (w, 1.0)),
+        ("sparsegpt", (w, _gram(4, 24), 1.0)),
+    ]:
+        wp, mask = getattr(P, f"{kind}_op")(*args)
+        assert bool(mask.all()), kind
+        np.testing.assert_allclose(wp, w, atol=1e-5)

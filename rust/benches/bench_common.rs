@@ -1,0 +1,276 @@
+//! Shared setup for the paper-table benches (included via `#[path]`).
+//!
+//! All benches share the pretrain checkpoint cache in `runs/` (the
+//! stand-in for "download the LLaMA weights once") and honour
+//! `SHEARS_BENCH_FAST=1` for a quick smoke pass at reduced steps.
+
+#![allow(dead_code)]
+
+use shears::coordinator::{PipelineOpts, ShearsPipeline};
+use shears::data::batch::{Batcher, MaskMode};
+use shears::data::{self, Task, Vocab};
+use shears::model::{Manifest, ParamStore};
+use shears::nls::{SearchSpace, SubAdapterConfig};
+use shears::pruning::Method;
+use shears::runtime::Runtime;
+use shears::train::{evaluate, train_loop, TrainOpts};
+use shears::util::rng::Rng;
+
+pub const SEED: u64 = 42;
+
+pub fn fast() -> bool {
+    std::env::var("SHEARS_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Global step multiplier: SHEARS_BENCH_SCALE (default 1.0), FAST = 1/8.
+pub fn scale() -> f64 {
+    if fast() {
+        return 0.125;
+    }
+    std::env::var("SHEARS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Steps scaled by the fast/scale knobs.
+pub fn steps(full: usize) -> usize {
+    ((full as f64) * scale()).round().max(10.0) as usize
+}
+
+pub struct Bench {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
+        let manifest = Manifest::load("artifacts").unwrap();
+        Bench { rt, manifest }
+    }
+
+    pub fn opts(&self, config: &str, tasks: Vec<Task>) -> PipelineOpts {
+        PipelineOpts {
+            config: config.into(),
+            method: Method::Wanda,
+            sparsity: 0.5,
+            pretrain_steps: steps(400),
+            train_steps: steps(200),
+            lr: 3e-3,
+            seed: SEED,
+            tasks,
+            train_examples: if fast() { 128 } else { 512 },
+            eval_examples: if fast() { 32 } else { 64 },
+            calib_batches: 4,
+            hill_climb_budget: 0,
+            search_eval_examples: if fast() { 16 } else { 48 },
+            workdir: Some("runs".into()),
+        }
+    }
+
+    pub fn pipeline(&self, opts: PipelineOpts) -> ShearsPipeline<'_> {
+        ShearsPipeline::new(&self.rt, &self.manifest, opts).unwrap()
+    }
+
+    /// Pruned base (sparsity 0.0 = dense copy) + trained super-adapter,
+    /// evaluated per task with the given sub-adapter selector. When
+    /// `nls_sampling` is false the super-adapter trains at fixed full rank
+    /// (== vanilla LoRA on the same budget — the paper's ablation pairing).
+    pub fn run_shears(
+        &self,
+        opts: &PipelineOpts,
+        nls_sampling: bool,
+        sub: SubSelect,
+    ) -> PerTask {
+        let pipeline = self.pipeline(opts.clone());
+        let cfg = pipeline.cfg;
+        let (mut base, _) = pipeline.pretrained_base().unwrap();
+        let _ = pipeline.prune_stage(&mut base).unwrap();
+        let space = SearchSpace::from_config(cfg);
+        let (adapters, log) = if nls_sampling {
+            pipeline.super_train(&base, &space).unwrap()
+        } else {
+            // vanilla LoRA: same loop, full-rank mask every step
+            let mut rng = Rng::new(opts.seed ^ 0xADA9);
+            let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+            let vocab = Vocab::new(cfg.vocab);
+            let train_data = mixture(cfg, &vocab, opts, 0x7EA1, opts.train_examples);
+            let mut batcher = Batcher::new(
+                &train_data, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly,
+            );
+            let topts = TrainOpts {
+                steps: opts.train_steps,
+                lr: opts.lr,
+                warmup: (opts.train_steps / 10).max(5),
+                seed: opts.seed,
+                sample_nls: false,
+                log_every: 0,
+            };
+            let log = train_loop(
+                &self.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
+                Some(&space), &topts,
+            )
+            .unwrap();
+            (adapters, log)
+        };
+        let _ = log;
+        let sub_cfg = match sub {
+            SubSelect::Heuristic => space.heuristic(),
+            SubSelect::Maximal => space.maximal(),
+            SubSelect::Minimal => space.minimal(),
+            SubSelect::Fixed(ref c) => c.clone(),
+        };
+        let accs = pipeline.eval_stage(&base, &adapters, &space, &sub_cfg).unwrap();
+        PerTask { accs }
+    }
+
+    /// PEFT baseline (prefix / series / parallel) on the dense base.
+    pub fn run_baseline(&self, opts: &PipelineOpts, kind: &str) -> PerTask {
+        let pipeline = self.pipeline(opts.clone());
+        let cfg = pipeline.cfg;
+        let (base, _) = pipeline.pretrained_base().unwrap();
+        let vocab = Vocab::new(cfg.vocab);
+        let specs = match kind {
+            "prefix" => &cfg.prefix_params,
+            "series" => &cfg.series_params,
+            "parallel" => &cfg.parallel_params,
+            _ => panic!("unknown baseline {kind}"),
+        };
+        let mut rng = Rng::new(opts.seed ^ 0xBA5E);
+        let mut extra = ParamStore::init_extra(specs, &mut rng);
+        let train_data = mixture(cfg, &vocab, opts, 0x7EA1, opts.train_examples);
+        let mut batcher = Batcher::new(
+            &train_data, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly,
+        );
+        let topts = TrainOpts {
+            steps: opts.train_steps,
+            lr: opts.lr,
+            warmup: (opts.train_steps / 10).max(5),
+            seed: opts.seed,
+            sample_nls: false,
+            log_every: 0,
+        };
+        train_loop(
+            &self.rt, cfg, &format!("train_step_{kind}"), &base, &mut extra, None,
+            &mut batcher, None, &topts,
+        )
+        .unwrap();
+        let mut accs = Vec::new();
+        for task in &opts.tasks {
+            let test = data::dataset(*task, &vocab, opts.seed ^ 0x7E57, opts.eval_examples, cfg.seq_len);
+            let acc = evaluate(
+                &self.rt, cfg, &format!("forward_eval_{kind}"), &[&base, &extra], None,
+                &test, &vocab,
+            )
+            .unwrap();
+            accs.push((task.name().to_string(), acc));
+        }
+        PerTask { accs }
+    }
+
+    /// Untuned (possibly pruned) base — the "w/o tune" ablation rows.
+    pub fn run_untuned(&self, opts: &PipelineOpts, prune: bool) -> PerTask {
+        let pipeline = self.pipeline(opts.clone());
+        let cfg = pipeline.cfg;
+        let vocab = Vocab::new(cfg.vocab);
+        let (mut base, _) = pipeline.pretrained_base().unwrap();
+        if prune && opts.sparsity > 0.0 {
+            let _ = pipeline.prune_stage(&mut base).unwrap();
+        }
+        let mut accs = Vec::new();
+        for task in &opts.tasks {
+            let test = data::dataset(*task, &vocab, opts.seed ^ 0x7E57, opts.eval_examples, cfg.seq_len);
+            let acc = evaluate(
+                &self.rt, cfg, "forward_eval_base", &[&base], None, &test, &vocab,
+            )
+            .unwrap();
+            accs.push((task.name().to_string(), acc));
+        }
+        PerTask { accs }
+    }
+
+    /// SparseFT baseline (paper §4.3): SparseGPT prune + full fine-tuning
+    /// with mask re-application.
+    pub fn run_sparseft(&self, opts: &PipelineOpts) -> PerTask {
+        let mut o = opts.clone();
+        o.method = Method::SparseGpt;
+        let pipeline = self.pipeline(o.clone());
+        let cfg = pipeline.cfg;
+        let vocab = Vocab::new(cfg.vocab);
+        let (mut base, _) = pipeline.pretrained_base().unwrap();
+        let (masks, _) = pipeline.prune_stage(&mut base).unwrap();
+        let train_data = mixture(cfg, &vocab, &o, 0x7EA1, o.train_examples);
+        let mut batcher = Batcher::new(
+            &train_data, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly,
+        );
+        let topts = TrainOpts {
+            steps: o.train_steps,
+            lr: o.lr / 10.0, // full FT needs a smaller lr
+            warmup: (o.train_steps / 10).max(5),
+            seed: o.seed,
+            sample_nls: false,
+            log_every: 0,
+        };
+        let frozen = ParamStore::new();
+        train_loop(
+            &self.rt, cfg, "train_step_full", &frozen, &mut base, Some(&masks), &mut batcher,
+            None, &topts,
+        )
+        .unwrap();
+        let mut accs = Vec::new();
+        for task in &o.tasks {
+            let test = data::dataset(*task, &vocab, o.seed ^ 0x7E57, o.eval_examples, cfg.seq_len);
+            let acc = evaluate(
+                &self.rt, cfg, "forward_eval_base", &[&base], None, &test, &vocab,
+            )
+            .unwrap();
+            accs.push((task.name().to_string(), acc));
+        }
+        PerTask { accs }
+    }
+}
+
+pub fn mixture(
+    cfg: &shears::model::ModelConfig,
+    vocab: &Vocab,
+    opts: &PipelineOpts,
+    salt: u64,
+    count: usize,
+) -> Vec<shears::data::Example> {
+    let mut out = Vec::with_capacity(count);
+    let per = count.div_ceil(opts.tasks.len());
+    for task in &opts.tasks {
+        out.extend(data::dataset(*task, vocab, opts.seed ^ salt, per, cfg.seq_len));
+    }
+    let mut rng = Rng::new(opts.seed ^ salt ^ 0xF00D);
+    rng.shuffle(&mut out);
+    out.truncate(count);
+    out
+}
+
+/// Sub-adapter selection strategy for `run_shears`.
+pub enum SubSelect {
+    Heuristic,
+    Maximal,
+    Minimal,
+    Fixed(SubAdapterConfig),
+}
+
+/// Per-task accuracies with helpers for table rows.
+pub struct PerTask {
+    pub accs: Vec<(String, f64)>,
+}
+
+impl PerTask {
+    pub fn mean(&self) -> f64 {
+        self.accs.iter().map(|(_, a)| a).sum::<f64>() / self.accs.len().max(1) as f64
+    }
+
+    pub fn cells(&self) -> Vec<String> {
+        let mut c: Vec<String> =
+            self.accs.iter().map(|(_, a)| shears::bench_util::pct(*a)).collect();
+        c.push(shears::bench_util::pct(self.mean()));
+        c
+    }
+}

@@ -1,0 +1,62 @@
+//! Paper Figure 2: Shears vs SparseFT (SparseGPT + full fine-tuning) on
+//! GSM8K with MPT, across sparsity 0%..70%.
+//!
+//! Expected shape: Shears ≥ SparseFT at low/mid sparsity with ~100×
+//! fewer trainable parameters; SparseFT closes the gap / wins at 70%
+//! (full fine-tuning can repair heavier damage).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{steps, Bench, SubSelect};
+use shears::bench_util::Table;
+use shears::data::Task;
+use shears::model::ModelConfig;
+
+fn main() {
+    let b = Bench::new();
+    let cfg = b.manifest.config("mpt-sim").unwrap();
+    let trainable_shears = ModelConfig::numel(&cfg.adapter_params);
+    let trainable_full = ModelConfig::numel(&cfg.base_params);
+
+    let mut table = Table::new(
+        "Figure 2 — gsm8k-sim accuracy (%) vs sparsity, mpt-sim",
+        &["sparsity", "Shears (NLS)", "SparseFT (full FT)"],
+    );
+    let mut series: Vec<(f64, f64, f64)> = Vec::new();
+    for sparsity in [0.0, 0.4, 0.5, 0.7] {
+        let mut opts = b.opts("mpt-sim", vec![Task::Gsm8kSim]);
+        opts.train_steps = steps(200);
+        opts.sparsity = sparsity;
+        let shears = b.run_shears(&opts, true, SubSelect::Heuristic).mean();
+        // full fine-tuning updates every weight each step (3x the I/O of
+        // the adapter path) — fewer steps for comparable wall budget
+        let mut fo = opts.clone();
+        fo.train_steps = steps(120);
+        let sparseft = b.run_sparseft(&fo).mean();
+        eprintln!(
+            "[fig2] sparsity {:.0}%: shears {:.3} sparseft {:.3}",
+            sparsity * 100.0, shears, sparseft
+        );
+        series.push((sparsity, shears, sparseft));
+        table.row(vec![
+            format!("{:.0}%", sparsity * 100.0),
+            shears::bench_util::pct(shears),
+            shears::bench_util::pct(sparseft),
+        ]);
+    }
+    table.print();
+    // ascii rendition of the figure
+    println!("accuracy vs sparsity (S=Shears, F=SparseFT):");
+    for (s, sh, sf) in &series {
+        let bar = |v: f64| "#".repeat((v * 40.0) as usize);
+        println!("  {:>3.0}%  S {:<42}{:.1}", s * 100.0, bar(*sh), sh * 100.0);
+        println!("        F {:<42}{:.1}", bar(*sf), sf * 100.0);
+    }
+    println!(
+        "\ntrainable params: Shears {:.1}K vs SparseFT {:.2}M ({:.0}x fewer)",
+        trainable_shears as f64 / 1e3,
+        trainable_full as f64 / 1e6,
+        trainable_full as f64 / trainable_shears.max(1) as f64
+    );
+}

@@ -1,0 +1,136 @@
+//! Runtime micro-benchmarks (EXPERIMENTS.md §Perf source data):
+//! executable compile time, forward/train-step latency on both execution
+//! paths (literal vs device-buffer-resident base), prune-op latency, and
+//! router/serving throughput — the numbers behind the paper's cost claims
+//! ("pruning < 5 minutes", "a pair of GPU hours" → seconds/minutes here).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::Bench;
+use shears::bench_util::{time, Table};
+use shears::data::batch::{Batcher, MaskMode};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::ParamStore;
+use shears::nls::SearchSpace;
+use shears::pruning::{self, Method};
+use shears::runtime::Arg;
+use shears::train::TrainSession;
+use shears::util::rng::Rng;
+
+fn main() {
+    let b = Bench::new();
+    let cfg = b.manifest.config("llama-sim-s").unwrap();
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(0);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    let space = SearchSpace::from_config(cfg);
+
+    println!("\n== compile (XLA CPU, per artifact) ==");
+    for entry in ["forward_eval", "train_step_nls", "train_step_full"] {
+        let file = &cfg.entry(entry).unwrap().file;
+        let t = std::time::Instant::now();
+        let _ = b.rt.load(file).unwrap();
+        println!("  {entry:<18} {:>8.1} ms (cold)", t.elapsed().as_secs_f64() * 1e3);
+    }
+
+    // ---- forward latency: literal vs buffer-resident params ----
+    let entry = cfg.entry("forward_eval").unwrap().clone();
+    let exe = b.rt.load(&entry.file).unwrap();
+    let ds = dataset(Task::Gsm8kSim, &vocab, 1, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let batch = batcher.epoch().into_iter().next().unwrap();
+    let mask = space.full_mask();
+
+    let mut lit_inputs: Vec<&shears::tensor::HostTensor> = Vec::new();
+    for i in &entry.inputs {
+        lit_inputs.push(match i.name.as_str() {
+            "x" => &batch.x,
+            "rank_mask" => &mask,
+            n => base.get(n).or_else(|_| adapters.get(n)).unwrap(),
+        });
+    }
+    let s1 = time("forward_eval: all-literal path", 3, 20, || {
+        b.rt.run(&exe, &lit_inputs).unwrap();
+    });
+
+    // buffer path: base + adapters resident, batch per-call
+    let mut resident: Vec<Option<xla::PjRtBuffer>> = Vec::new();
+    for i in &entry.inputs {
+        resident.push(match i.name.as_str() {
+            "x" | "rank_mask" => None,
+            n => Some(b.rt.upload(base.get(n).or_else(|_| adapters.get(n)).unwrap()).unwrap()),
+        });
+    }
+    let s2 = time("forward_eval: buffer-resident params", 3, 20, || {
+        let args: Vec<Arg> = entry
+            .inputs
+            .iter()
+            .zip(&resident)
+            .map(|(i, r)| match r {
+                Some(buf) => Arg::Buf(buf),
+                None => Arg::Host(if i.name == "x" { &batch.x } else { &mask }),
+            })
+            .collect();
+        b.rt.run_args(&exe, &args).unwrap();
+    });
+
+    // ---- train-step latency (the super-adapter hot loop) ----
+    let session = TrainSession::new(&b.rt, cfg, "train_step_nls", &base).unwrap();
+    let specs: Vec<shears::model::ParamSpec> = cfg.adapter_params.clone();
+    let mut m = ParamStore::zeros_like(&specs);
+    let mut v = ParamStore::zeros_like(&specs);
+    let tds = dataset(Task::Gsm8kSim, &vocab, 2, cfg.batch_train, cfg.seq_len);
+    let tb = Batcher::new(&tds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly)
+        .epoch()
+        .into_iter()
+        .next()
+        .unwrap();
+    let mut step_no = 0usize;
+    let s3 = time("train_step_nls: fused step (frozen base resident)", 3, 20, || {
+        step_no += 1;
+        session
+            .step(&mut adapters, &mut m, &mut v, None, &tb, step_no, 1e-3, Some(&mask))
+            .unwrap();
+    });
+
+    // ---- prune op latency ----
+    let (n, k) = (cfg.prunable[0].shape[0], cfg.prunable[0].shape[1]);
+    let op = b.manifest.prune_op("wanda", n, k).unwrap();
+    let pexe = b.rt.load(&op.file).unwrap();
+    let w = base.get(&cfg.prunable[0].name).unwrap();
+    let xn = shears::tensor::HostTensor::ones(&[k]);
+    let keep = shears::tensor::HostTensor::scalar_f32(0.5);
+    let s4 = time(&format!("prune op wanda {n}x{k} (pallas kernel)"), 2, 20, || {
+        b.rt.run(&pexe, &[w, &xn, &keep]).unwrap();
+    });
+
+    // ---- whole-model prune wall (the "<5 minutes" claim) ----
+    let mut base2 = base.clone();
+    let t = std::time::Instant::now();
+    pruning::prune(&b.rt, &b.manifest, cfg, &mut base2, Method::Magnitude, 0.5, None).unwrap();
+    let prune_wall = t.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        "Perf summary (llama-sim-s)",
+        &["metric", "value"],
+    );
+    table.row(vec!["forward (literal path)".into(), format!("{:.2} ms", s1.mean_ms)]);
+    table.row(vec!["forward (buffer-resident)".into(), format!("{:.2} ms", s2.mean_ms)]);
+    table.row(vec![
+        "buffer-residency speedup".into(),
+        format!("{:.2}x", s1.mean_ms / s2.mean_ms),
+    ]);
+    table.row(vec!["train step (fused)".into(), format!("{:.2} ms", s3.mean_ms)]);
+    table.row(vec![
+        "train throughput".into(),
+        format!(
+            "{:.0} tokens/s",
+            (cfg.batch_train * cfg.seq_len) as f64 / (s3.mean_ms / 1e3)
+        ),
+    ]);
+    table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
+    table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
+    table.print();
+}

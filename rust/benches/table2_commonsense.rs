@@ -1,0 +1,59 @@
+//! Paper Table 2: commonsense reasoning over 8 datasets at two training
+//! set sizes (paper: 15k and 170k; here scaled at the same ~1:11 ratio).
+//!
+//! Expected shape: Shears@40% ≥ LoRA on the same budget; @50% competitive;
+//! more training data lifts every method.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{fast, steps, Bench, SubSelect};
+use shears::bench_util::Table;
+use shears::data::Task;
+
+fn main() {
+    let b = Bench::new();
+    let mut table = Table::new(
+        "Table 2 — commonsense reasoning accuracy (%), llama-sim-s",
+        &[
+            "train", "method", "sparsity", "boolq", "piqa", "siqa", "hella", "winog",
+            "arc-e", "arc-c", "obqa", "avg",
+        ],
+    );
+    let (small, large) = if fast() { (96, 256) } else { (256, 1024) };
+
+    for (label, examples, with_baselines) in
+        [("15k-sim", small, false), ("170k-sim", large, true)]
+    {
+        let mut opts = b.opts("llama-sim-s", Task::COMMONSENSE.to_vec());
+        opts.train_examples = examples;
+        opts.train_steps = steps(if with_baselines { 300 } else { 200 });
+
+        let mut push = |method: &str, sparsity: &str, r: bench_common::PerTask| {
+            let mut cells =
+                vec![label.to_string(), method.to_string(), sparsity.to_string()];
+            cells.extend(r.cells());
+            table.row(cells);
+        };
+
+        if with_baselines {
+            for kind in ["prefix", "series", "parallel"] {
+                push(kind, "-", b.run_baseline(&opts, kind));
+            }
+        }
+        let mut dense = opts.clone();
+        dense.sparsity = 0.0;
+        push("LoRA", "-", b.run_shears(&dense, false, SubSelect::Maximal));
+        for sparsity in [0.4, 0.5] {
+            let mut o = opts.clone();
+            o.sparsity = sparsity;
+            push(
+                "Shears",
+                &format!("{:.0}%", sparsity * 100.0),
+                b.run_shears(&o, true, SubSelect::Heuristic),
+            );
+        }
+    }
+    table.print();
+    println!("paper shape: Shears@40% ≥ LoRA average at both train sizes.");
+}

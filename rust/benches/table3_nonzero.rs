@@ -1,0 +1,66 @@
+//! Paper Table 3: non-zero parameter counts at 50% sparsity — Shears
+//! (unmerged adapters on a sparse base) vs LoRA (adapters merged into the
+//! dense base), plus the accuracy each retains.
+//!
+//! Expected shape: ~1.9× fewer non-zero parameters for Shears at equal-ish
+//! accuracy. Merging LoRA into a *sparse* base would destroy the sparsity
+//! (B·A is dense) — which is exactly why Shears serves unmerged (§4.4).
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{Bench, SubSelect};
+use shears::bench_util::Table;
+use shears::data::Task;
+use shears::nls::SearchSpace;
+use shears::pruning;
+use shears::bench_util::pct;
+
+fn main() {
+    let b = Bench::new();
+    let mut table = Table::new(
+        "Table 3 — non-zero parameters at 50% sparsity (math avg accuracy)",
+        &["model", "method", "sparsity", "acc avg", "non-zero", "reduction"],
+    );
+    for config in ["llama-sim-s", "llama-sim-m"] {
+        let opts = b.opts(config, Task::MATH.to_vec());
+
+        // LoRA: dense base, merged adapters -> all params non-zero
+        let mut dense = opts.clone();
+        dense.sparsity = 0.0;
+        let lora = b.run_shears(&dense, false, SubSelect::Maximal);
+        let pipeline = b.pipeline(dense.clone());
+        let (base_dense, _) = pipeline.pretrained_base().unwrap();
+        let dense_count = base_dense.numel(); // merged: adapter folds into base
+        table.row(vec![
+            config.into(),
+            "LoRA (merged)".into(),
+            "-".into(),
+            pct(lora.mean()),
+            format!("{:.2}M", dense_count as f64 / 1e6),
+            "1.00x".into(),
+        ]);
+
+        // Shears: sparse base + unmerged heuristic sub-adapter
+        let mut o = opts.clone();
+        o.sparsity = 0.5;
+        let shears = b.run_shears(&o, true, SubSelect::Heuristic);
+        let pipeline = b.pipeline(o.clone());
+        let cfg = pipeline.cfg;
+        let (mut base, _) = pipeline.pretrained_base().unwrap();
+        let _ = pipeline.prune_stage(&mut base).unwrap();
+        let space = SearchSpace::from_config(cfg);
+        let (adapters, _) = pipeline.super_train(&base, &space).unwrap();
+        let nz = pruning::nonzero_params(&base, Some(&adapters));
+        table.row(vec![
+            config.into(),
+            "Shears (unmerged)".into(),
+            "50%".into(),
+            pct(shears.mean()),
+            format!("{:.2}M", nz as f64 / 1e6),
+            format!("{:.2}x", dense_count as f64 / nz.max(1) as f64),
+        ]);
+    }
+    table.print();
+    println!("paper shape: ~1.9x fewer non-zero params at 50% sparsity, small acc delta.");
+}

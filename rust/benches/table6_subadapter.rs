@@ -1,0 +1,84 @@
+//! Paper Table 6: sub-adapter search — Maximal / Heuristic / Hill-climbing
+//! / RNSGA-II / Minimal from ONE trained super-adapter (llama-sim-s, 50%).
+//!
+//! Expected shape: a narrow accuracy band (≈1 point in the paper), with
+//! the heuristic inside the band, search methods at/above it, and the
+//! search cost ordering heuristic(1) < hill-climb < RNSGA-II.
+
+#[path = "bench_common.rs"]
+mod bench_common;
+
+use bench_common::{mixture, Bench};
+use shears::bench_util::{pct, Table};
+use shears::data::{Task, Vocab};
+use shears::nls::{SearchSpace, SubAdapterConfig};
+use shears::search::{hill_climb, rnsga2, CachedEvaluator};
+use shears::train::evaluate;
+
+fn main() {
+    let b = Bench::new();
+    let opts = b.opts("llama-sim-s", Task::MATH.to_vec());
+    let pipeline = b.pipeline(opts.clone());
+    let cfg = pipeline.cfg;
+    let vocab = Vocab::new(cfg.vocab);
+
+    // one super-adapter, trained once (the paper's setting)
+    let (mut base, _) = pipeline.pretrained_base().unwrap();
+    let _ = pipeline.prune_stage(&mut base).unwrap();
+    let space = SearchSpace::from_config(cfg);
+    let (adapters, _) = pipeline.super_train(&base, &space).unwrap();
+
+    // search-time validation set + final test set
+    let val = mixture(cfg, &vocab, &opts, 0x5EA7C4, opts.search_eval_examples);
+    let test_eval = |sub: &SubAdapterConfig| -> f64 {
+        let mask = space.rank_mask(sub);
+        pipeline
+            .eval_stage(&base, &adapters, &space, sub)
+            .unwrap()
+            .iter()
+            .map(|(_, a)| a)
+            .sum::<f64>()
+            / Task::MATH.len() as f64
+            + 0.0 * mask.numel() as f64
+    };
+
+    let make_eval = || {
+        CachedEvaluator::new(|sub: &SubAdapterConfig| {
+            let mask = space.rank_mask(sub);
+            evaluate(&b.rt, cfg, "forward_eval", &[&base, &adapters], Some(&mask), &val, &vocab)
+                .unwrap_or(0.0)
+        })
+    };
+
+    let mut table = Table::new(
+        "Table 6 — sub-adapter selection from one super-adapter (llama-sim-s, 50%)",
+        &["method", "sub-adapter", "math avg acc", "search evals"],
+    );
+    let fmt = |c: &SubAdapterConfig| {
+        let total: usize = c.ranks.iter().sum();
+        format!("ranks sum {total} {:?}…", &c.ranks[..4.min(c.ranks.len())])
+    };
+
+    let maximal = space.maximal();
+    table.row(vec!["Maximal".into(), fmt(&maximal), pct(test_eval(&maximal)), "0".into()]);
+
+    let heuristic = space.heuristic();
+    table.row(vec!["Heuristic (Eq. 3)".into(), fmt(&heuristic), pct(test_eval(&heuristic)), "1".into()]);
+
+    let mut ev = make_eval();
+    let hc = hill_climb(&space, space.heuristic(), &mut ev, 24);
+    table.row(vec!["Hill-climbing".into(), fmt(&hc.config), pct(test_eval(&hc.config)), hc.evals.to_string()]);
+
+    let mut ev = make_eval();
+    let rn = rnsga2(&space, &mut ev, 7, 10, 6, 60, vec![-1.0, 0.75]);
+    table.row(vec!["RNSGA-II".into(), fmt(&rn.config), pct(test_eval(&rn.config)), rn.evals.to_string()]);
+
+    let minimal = space.minimal();
+    table.row(vec!["Minimal".into(), fmt(&minimal), pct(test_eval(&minimal)), "0".into()]);
+
+    table.print();
+    println!(
+        "paper shape: narrow band (Minimal…Maximal ≈ 1-2 pts); heuristic inside it; \
+         hill-climbing/RNSGA-II at or above heuristic; eval-cost ordering 1 < HC < RNSGA-II."
+    );
+}

@@ -1,0 +1,131 @@
+//! Benchmark harness (offline substitute for criterion, DESIGN.md §3).
+//!
+//! Used by every `rust/benches/*.rs` (harness = false). Provides wall
+//! timing with warmup, simple stats, and the markdown table printer the
+//! paper-table benches emit so `cargo bench | tee bench_output.txt`
+//! reproduces the tables' layout.
+
+use std::time::Instant;
+
+/// Timing stats over n iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub label: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Time `f` with `warmup` unmeasured runs then `iters` measured ones.
+pub fn time<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len().max(1) as f64;
+    Stats {
+        label: label.to_string(),
+        iters,
+        mean_ms: mean,
+        min_ms: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_ms: samples.iter().cloned().fold(0.0, f64::max),
+    }
+}
+
+impl Stats {
+    pub fn print(&self) {
+        println!(
+            "{:<42} {:>10.3} ms/iter  (min {:.3}, max {:.3}, n={})",
+            self.label, self.mean_ms, self.min_ms, self.max_ms, self.iters
+        );
+    }
+}
+
+/// Markdown table printer for paper-table reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n### {}\n", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        println!("{sep}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+        println!();
+    }
+}
+
+/// Percent formatting helper (accuracy cells).
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_runs_and_orders() {
+        let s = time("noop", 1, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 5);
+        assert!(s.min_ms <= s.mean_ms && s.mean_ms <= s.max_ms + 1e-9);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.4567), "45.7");
+    }
+}

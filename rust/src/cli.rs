@@ -1,0 +1,149 @@
+//! Hand-rolled CLI parser (offline substitute for `clap`, DESIGN.md §3).
+//!
+//! Grammar: `shears <subcommand> [--flag value]... [--switch]...`
+//! Flags are declared up front so typos fail fast with usage output.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Declared flag: name, default (None = required), help.
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Args {
+    /// Parse argv against declared flags; unknown flags error.
+    pub fn parse(
+        argv: &[String],
+        known_flags: &[FlagSpec],
+        known_switches: &[&str],
+    ) -> Result<Args> {
+        if argv.is_empty() {
+            bail!("missing subcommand");
+        }
+        let subcommand = argv[0].clone();
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if known_switches.contains(&name) {
+                switches.push(name.to_string());
+                i += 1;
+                continue;
+            }
+            let Some(spec) = known_flags.iter().find(|f| f.name == name) else {
+                bail!("unknown flag --{name}");
+            };
+            let Some(value) = argv.get(i + 1) else {
+                bail!("flag --{} needs a value ({})", spec.name, spec.help);
+            };
+            flags.insert(name.to_string(), value.clone());
+            i += 2;
+        }
+        // apply defaults / check required
+        for spec in known_flags {
+            if !flags.contains_key(spec.name) {
+                match spec.default {
+                    Some(d) => {
+                        flags.insert(spec.name.to_string(), d.to_string());
+                    }
+                    None => bail!("missing required flag --{} ({})", spec.name, spec.help),
+                }
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn get(&self, name: &str) -> &str {
+        self.flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        Ok(self.get(name).parse()?)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+pub fn usage(flags: &[FlagSpec], switches: &[&str]) -> String {
+    let mut out = String::from("flags:\n");
+    for f in flags {
+        out.push_str(&format!(
+            "  --{:<18} {} {}\n",
+            f.name,
+            f.help,
+            f.default.map(|d| format!("(default {d})")).unwrap_or_else(|| "(required)".into())
+        ));
+    }
+    for s in switches {
+        out.push_str(&format!("  --{s:<18} (switch)\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "config", default: Some("tiny-llama"), help: "model config" },
+            FlagSpec { name: "steps", default: None, help: "train steps" },
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_defaults_switches() {
+        let a = Args::parse(
+            &argv(&["train", "--steps", "100", "--verbose"]),
+            &flags(),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("config"), "tiny-llama");
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn missing_required_flag_errors() {
+        assert!(Args::parse(&argv(&["train"]), &flags(), &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(Args::parse(&argv(&["t", "--steps", "1", "--bogus", "2"]), &flags(), &[]).is_err());
+    }
+
+    #[test]
+    fn flag_without_value_errors() {
+        assert!(Args::parse(&argv(&["t", "--steps"]), &flags(), &[]).is_err());
+    }
+}

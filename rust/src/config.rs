@@ -1,0 +1,187 @@
+//! Experiment configuration: a TOML-lite file format + typed view.
+//!
+//! Mirrors the paper's hyperparameter tables (7–9) at reproduction scale;
+//! `configs/*.toml` in the repo root hold one file per experiment. Format
+//! subset: `[section]` headers, `key = value` with string / number / bool
+//! / `[a, b, c]` arrays, `#` comments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+}
+
+/// Parsed config: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value", lineno + 1);
+            };
+            let value = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value '{}'", lineno + 1, v.trim()))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items = inner
+            .split(',')
+            .map(str::trim)
+            .filter(|x| !x.is_empty())
+            .map(parse_value)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Arr(items));
+    }
+    if let Some(q) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(q.to_string()));
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    // bare words are strings (config ergonomics)
+    Ok(Value::Str(s.to_string()))
+}
+
+/// Typed training hyperparameters (paper Tables 7–9, scaled).
+#[derive(Clone, Debug)]
+pub struct TrainHp {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub seed: u64,
+}
+
+impl TrainHp {
+    pub fn from_config(cfg: &Config, section: &str) -> TrainHp {
+        TrainHp {
+            steps: cfg.usize_or(section, "steps", 300),
+            lr: cfg.f64_or(section, "lr", 3e-3),
+            warmup: cfg.usize_or(section, "warmup", 20),
+            seed: cfg.usize_or(section, "seed", 42) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(
+            r#"
+            # Shears experiment
+            [model]
+            config = "llama-sim-s"
+            [train]
+            steps = 250
+            lr = 3e-4        # paper Table 7
+            ranks = [8, 6, 4]
+            resume = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.str_or("model", "config", ""), "llama-sim-s");
+        assert_eq!(c.usize_or("train", "steps", 0), 250);
+        assert!((c.f64_or("train", "lr", 0.0) - 3e-4).abs() < 1e-12);
+        assert_eq!(c.get("train", "resume"), Some(&Value::Bool(false)));
+        match c.get("train", "ranks") {
+            Some(Value::Arr(v)) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        let hp = TrainHp::from_config(&c, "train");
+        assert_eq!(hp.steps, 300);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[x]\njust_a_word_without_equals value").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Layer-3 coordination: the Shears pipeline (paper Figure 1) and the
+//! eval request router with dynamic batching.
+
+pub mod pipeline;
+pub mod router;
+
+pub use pipeline::{PipelineOpts, PipelineReport, ShearsPipeline};
+pub use router::{EvalRouter, RouterMetrics};

@@ -1,0 +1,433 @@
+//! The Shears pipeline (paper §3, Figure 1):
+//!
+//! ```text
+//!   stage 0  pretrain base model        (stand-in for LLaMA/MPT weights)
+//!   stage 1  unstructured sparsification  — Wanda / SparseGPT / magnitude
+//!   stage 2  super-adapter training (NLS) — random sub-adapter per step
+//!   stage 3  sub-adapter search           — heuristic, then optional
+//!                                           hill-climbing / RNSGA-II
+//!   stage 4  evaluation                   — per-task answer accuracy
+//! ```
+//!
+//! Stage 0 is cached to `workdir` (keyed by config/steps/seed) because
+//! every experiment in the bench suite shares the same pretrained base —
+//! the analogue of downloading the same LLaMA checkpoint once.
+
+use crate::data::batch::{Batcher, MaskMode};
+use crate::data::{self, corpus, Example, Task, Vocab};
+use crate::model::{Manifest, ModelConfig, ParamStore};
+use crate::nls::{SearchSpace, SubAdapterConfig};
+use crate::pruning::{self, CalibStats, Method};
+use crate::runtime::Runtime;
+use crate::search::{hill_climb, CachedEvaluator};
+use crate::train::{evaluate, train_loop, TrainLog, TrainOpts};
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Everything a Shears run needs (defaults = quick tiny-config run).
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub config: String,
+    pub method: Method,
+    pub sparsity: f64,
+    pub pretrain_steps: usize,
+    pub train_steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub tasks: Vec<Task>,
+    pub train_examples: usize,
+    pub eval_examples: usize,
+    pub calib_batches: usize,
+    /// run hill-climbing refinement after the heuristic (paper §3.3)
+    pub hill_climb_budget: usize,
+    /// examples used per search evaluation (smaller = cheaper search)
+    pub search_eval_examples: usize,
+    pub workdir: Option<PathBuf>,
+}
+
+impl Default for PipelineOpts {
+    fn default() -> Self {
+        PipelineOpts {
+            config: "tiny-llama".into(),
+            method: Method::Wanda,
+            sparsity: 0.5,
+            pretrain_steps: 200,
+            train_steps: 150,
+            lr: 3e-3,
+            seed: 42,
+            tasks: vec![Task::Gsm8kSim],
+            train_examples: 256,
+            eval_examples: 64,
+            calib_batches: 4,
+            hill_climb_budget: 0,
+            search_eval_examples: 32,
+            workdir: None,
+        }
+    }
+}
+
+/// Per-task accuracy plus the chosen sub-adapter.
+#[derive(Clone, Debug)]
+pub struct PipelineReport {
+    pub config: String,
+    pub method: String,
+    pub sparsity_target: f64,
+    pub sparsity_measured: f64,
+    pub sub_adapter: SubAdapterConfig,
+    pub task_accuracy: Vec<(String, f64)>,
+    pub pretrain_log: TrainLog,
+    pub train_log: TrainLog,
+    pub nonzero_params: usize,
+    pub total_params: usize,
+}
+
+impl PipelineReport {
+    pub fn mean_accuracy(&self) -> f64 {
+        let n = self.task_accuracy.len().max(1);
+        self.task_accuracy.iter().map(|(_, a)| a).sum::<f64>() / n as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("config", s(&self.config)),
+            ("method", s(&self.method)),
+            ("sparsity_target", num(self.sparsity_target)),
+            ("sparsity_measured", num(self.sparsity_measured)),
+            (
+                "sub_adapter",
+                arr(self.sub_adapter.ranks.iter().map(|r| num(*r as f64)).collect()),
+            ),
+            (
+                "task_accuracy",
+                obj(self
+                    .task_accuracy
+                    .iter()
+                    .map(|(t, a)| (t.as_str(), num(*a)))
+                    .collect()),
+            ),
+            ("mean_accuracy", num(self.mean_accuracy())),
+            ("nonzero_params", num(self.nonzero_params as f64)),
+            ("total_params", num(self.total_params as f64)),
+        ])
+    }
+}
+
+pub struct ShearsPipeline<'rt> {
+    pub rt: &'rt Runtime,
+    pub manifest: &'rt Manifest,
+    pub cfg: &'rt ModelConfig,
+    pub vocab: Vocab,
+    pub opts: PipelineOpts,
+}
+
+impl<'rt> ShearsPipeline<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &'rt Manifest,
+        opts: PipelineOpts,
+    ) -> Result<Self> {
+        let cfg = manifest.config(&opts.config)?;
+        let vocab = Vocab::new(cfg.vocab);
+        Ok(ShearsPipeline { rt, manifest, cfg, vocab, opts })
+    }
+
+    // ------------------------------------------------- stage 0: pretrain
+
+    fn pretrain_ckpt_path(&self) -> Option<PathBuf> {
+        self.opts.workdir.as_ref().map(|d| {
+            d.join(format!(
+                "pretrain_{}_{}steps_seed{}.bin",
+                self.cfg.name, self.opts.pretrain_steps, self.opts.seed
+            ))
+        })
+    }
+
+    /// Pretrain the base model on the synthetic corpus (or load the cache).
+    pub fn pretrained_base(&self) -> Result<(ParamStore, TrainLog)> {
+        if let Some(path) = self.pretrain_ckpt_path() {
+            if path.exists() {
+                crate::info!("pretrain cache hit: {}", path.display());
+                return Ok((ParamStore::load(&path)?, TrainLog::default()));
+            }
+        }
+        let mut rng = Rng::new(self.opts.seed);
+        let mut base = ParamStore::init_base(self.cfg, &mut rng, 0.05);
+        // all-ones prune masks: pretraining is full-FT without sparsity
+        let mut masks = ParamStore::new();
+        for p in &self.cfg.prunable {
+            masks.insert(&p.name, crate::tensor::HostTensor::ones(&p.shape));
+        }
+        let corpus: Vec<Example> = {
+            let mut crng = rng.fork(1);
+            (0..self.opts.train_examples.max(256))
+                .map(|_| {
+                    let toks = corpus::sample(&self.vocab, &mut crng, self.cfg.seq_len);
+                    let n = toks.len();
+                    Example { tokens: toks, answer_start: 1, answer_len: n - 1 }
+                })
+                .collect()
+        };
+        let mut batcher = Batcher::new(
+            &corpus,
+            self.cfg.batch_train,
+            self.cfg.seq_len,
+            &self.vocab,
+            MaskMode::FullSequence,
+        );
+        let opts = TrainOpts {
+            steps: self.opts.pretrain_steps,
+            lr: self.opts.lr,
+            warmup: (self.opts.pretrain_steps / 10).max(5),
+            seed: self.opts.seed,
+            sample_nls: false,
+            log_every: 50,
+        };
+        let frozen = ParamStore::new(); // full-FT: nothing frozen
+        let log = train_loop(
+            self.rt,
+            self.cfg,
+            "train_step_full",
+            &frozen,
+            &mut base,
+            Some(&masks),
+            &mut batcher,
+            None,
+            &opts,
+        )?;
+        if let Some(path) = self.pretrain_ckpt_path() {
+            std::fs::create_dir_all(path.parent().unwrap())?;
+            base.save(&path)?;
+            crate::info!("pretrain cached: {}", path.display());
+        }
+        Ok((base, log))
+    }
+
+    // ----------------------------------------------------- stage 1: prune
+
+    /// Calibration batches come from the task mixture (the data the model
+    /// will be tuned on — same choice as the paper's use of task data).
+    pub fn calibration_batches(&self) -> Vec<crate::data::Batch> {
+        let examples = self.task_mixture(0xCA11B, self.opts.calib_batches * self.cfg.batch_eval);
+        let batcher = Batcher::new(
+            &examples,
+            self.cfg.batch_eval,
+            self.cfg.seq_len,
+            &self.vocab,
+            MaskMode::AnswerOnly,
+        );
+        batcher.epoch()
+    }
+
+    pub fn prune_stage(
+        &self,
+        base: &mut ParamStore,
+    ) -> Result<(ParamStore, Option<CalibStats>)> {
+        let stats = if self.opts.method.needs_stats() && self.opts.sparsity > 0.0 {
+            let batches = self.calibration_batches();
+            Some(pruning::collect_stats(self.rt, self.cfg, base, &batches)?)
+        } else {
+            None
+        };
+        let masks = pruning::prune(
+            self.rt,
+            self.manifest,
+            self.cfg,
+            base,
+            self.opts.method,
+            self.opts.sparsity,
+            stats.as_ref(),
+        )?;
+        Ok((masks, stats))
+    }
+
+    // ----------------------------------------- stage 2: super-adapter NLS
+
+    fn task_mixture(&self, salt: u64, count: usize) -> Vec<Example> {
+        let mut out = Vec::with_capacity(count);
+        let per = count.div_ceil(self.opts.tasks.len());
+        for task in &self.opts.tasks {
+            out.extend(data::dataset(
+                *task,
+                &self.vocab,
+                self.opts.seed ^ salt,
+                per,
+                self.cfg.seq_len,
+            ));
+        }
+        let mut rng = Rng::new(self.opts.seed ^ salt ^ 0xF00D);
+        rng.shuffle(&mut out);
+        out.truncate(count);
+        out
+    }
+
+    /// Fine-tune the super-adapter with NLS sampling (paper §3.2).
+    pub fn super_train(
+        &self,
+        base: &ParamStore,
+        space: &SearchSpace,
+    ) -> Result<(ParamStore, TrainLog)> {
+        let mut rng = Rng::new(self.opts.seed ^ 0xADA9);
+        let mut adapters = ParamStore::init_adapters(self.cfg, &mut rng);
+        let train_data = self.task_mixture(0x7EA1, self.opts.train_examples);
+        let mut batcher = Batcher::new(
+            &train_data,
+            self.cfg.batch_train,
+            self.cfg.seq_len,
+            &self.vocab,
+            MaskMode::AnswerOnly,
+        );
+        let opts = TrainOpts {
+            steps: self.opts.train_steps,
+            lr: self.opts.lr,
+            warmup: (self.opts.train_steps / 10).max(5),
+            seed: self.opts.seed,
+            sample_nls: true,
+            log_every: 50,
+        };
+        let log = train_loop(
+            self.rt,
+            self.cfg,
+            "train_step_nls",
+            base,
+            &mut adapters,
+            None,
+            &mut batcher,
+            Some(space),
+            &opts,
+        )?;
+        Ok((adapters, log))
+    }
+
+    // ------------------------------------------------- stage 3: search
+
+    /// Heuristic (Eq. 3) + optional hill-climbing refinement.
+    pub fn search_stage(
+        &self,
+        base: &ParamStore,
+        adapters: &ParamStore,
+        space: &SearchSpace,
+    ) -> Result<SubAdapterConfig> {
+        let start = space.heuristic();
+        if self.opts.hill_climb_budget == 0 {
+            return Ok(start);
+        }
+        let val = self.task_mixture(0x5EA7C4, self.opts.search_eval_examples);
+        let mut cached = CachedEvaluator::new(|cfg: &SubAdapterConfig| {
+            let mask = space.rank_mask(cfg);
+            evaluate(
+                self.rt,
+                self.cfg,
+                "forward_eval",
+                &[base, adapters],
+                Some(&mask),
+                &val,
+                &self.vocab,
+            )
+            .unwrap_or(0.0)
+        });
+        let r = hill_climb(space, start, &mut cached, self.opts.hill_climb_budget);
+        crate::info!(
+            "hill-climb: score {:.4} after {} evals",
+            r.score,
+            r.evals
+        );
+        Ok(r.config)
+    }
+
+    // ----------------------------------------------------- stage 4: eval
+
+    pub fn eval_stage(
+        &self,
+        base: &ParamStore,
+        adapters: &ParamStore,
+        space: &SearchSpace,
+        sub: &SubAdapterConfig,
+    ) -> Result<Vec<(String, f64)>> {
+        let mask = space.rank_mask(sub);
+        let mut out = Vec::new();
+        for task in &self.opts.tasks {
+            let test = data::dataset(
+                *task,
+                &self.vocab,
+                self.opts.seed ^ 0x7E57,
+                self.opts.eval_examples,
+                self.cfg.seq_len,
+            );
+            let acc = evaluate(
+                self.rt,
+                self.cfg,
+                "forward_eval",
+                &[base, adapters],
+                Some(&mask),
+                &test,
+                &self.vocab,
+            )?;
+            out.push((task.name().to_string(), acc));
+        }
+        Ok(out)
+    }
+
+    /// Full pipeline: stages 0–4.
+    pub fn run(&self) -> Result<PipelineReport> {
+        let (mut base, pretrain_log) = self.pretrained_base()?;
+        let total_params = base.numel();
+        let (_masks, _stats) = self.prune_stage(&mut base)?;
+        let measured = {
+            let names: Vec<String> =
+                self.cfg.prunable.iter().map(|p| p.name.clone()).collect();
+            base.sparsity_of(&names)
+        };
+        let space = SearchSpace::from_config(self.cfg);
+        let (adapters, train_log) = self.super_train(&base, &space)?;
+        let sub = self.search_stage(&base, &adapters, &space)?;
+        let task_accuracy = self.eval_stage(&base, &adapters, &space, &sub)?;
+        let nonzero = pruning::nonzero_params(&base, Some(&adapters));
+        Ok(PipelineReport {
+            config: self.cfg.name.clone(),
+            method: self.opts.method.name().to_string(),
+            sparsity_target: self.opts.sparsity,
+            sparsity_measured: measured,
+            sub_adapter: sub,
+            task_accuracy,
+            pretrain_log,
+            train_log,
+            nonzero_params: nonzero,
+            total_params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let o = PipelineOpts::default();
+        assert_eq!(o.config, "tiny-llama");
+        assert!(o.sparsity > 0.0 && o.sparsity < 1.0);
+        assert!(!o.tasks.is_empty());
+    }
+
+    #[test]
+    fn report_mean_and_json() {
+        let r = PipelineReport {
+            config: "t".into(),
+            method: "wanda".into(),
+            sparsity_target: 0.5,
+            sparsity_measured: 0.499,
+            sub_adapter: SubAdapterConfig { ranks: vec![6, 6] },
+            task_accuracy: vec![("a".into(), 0.4), ("b".into(), 0.6)],
+            pretrain_log: TrainLog::default(),
+            train_log: TrainLog::default(),
+            nonzero_params: 100,
+            total_params: 200,
+        };
+        assert!((r.mean_accuracy() - 0.5).abs() < 1e-12);
+        let j = r.to_json().to_string();
+        assert!(j.contains("\"mean_accuracy\""));
+        assert!(j.contains("\"sub_adapter\""));
+    }
+}

@@ -1,0 +1,298 @@
+//! Eval request router with dynamic batching (the vLLM-router-shaped
+//! component of L3; see DESIGN.md §5).
+//!
+//! Callers submit evaluation requests (a set of examples + an optional
+//! sub-adapter rank mask) from any thread; a dedicated runtime thread
+//! owns the PJRT client (PJRT handles are not `Send`) and coalesces
+//! queued examples into full `batch_eval`-sized forwards. Examples from
+//! *different* requests sharing the same rank mask ride the same forward
+//! pass — dynamic batching — and results are scattered back per request.
+
+use crate::data::batch::{build_batch, MaskMode};
+use crate::data::{Example, Vocab};
+use crate::model::{Manifest, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use crate::train::{exact_match, forward_logits};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// One queued example with its reply slot.
+struct Pending {
+    example: Example,
+    mask_key: Vec<u8>,
+    reply: Sender<Result<bool, String>>,
+    enqueued: Instant,
+}
+
+enum Msg {
+    Eval {
+        examples: Vec<Example>,
+        rank_mask: Option<HostTensor>,
+        reply: Sender<Result<bool, String>>,
+    },
+    Metrics(Sender<RouterMetrics>),
+    Shutdown,
+}
+
+/// Router throughput/latency counters.
+#[derive(Clone, Debug, Default)]
+pub struct RouterMetrics {
+    pub requests: u64,
+    pub examples: u64,
+    pub forwards: u64,
+    /// mean examples per forward (batching efficiency)
+    pub mean_occupancy: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+}
+
+/// Handle to the router thread.
+pub struct EvalRouter {
+    tx: Sender<Msg>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EvalRouter {
+    /// Spawn the router. The runtime thread builds its own PJRT client
+    /// from `artifacts_dir` and owns the stores.
+    pub fn spawn(
+        artifacts_dir: String,
+        config_name: String,
+        entry_name: String,
+        stores: Vec<ParamStore>,
+        max_wait: Duration,
+    ) -> Result<EvalRouter> {
+        let (tx, rx) = channel::<Msg>();
+        let join = std::thread::Builder::new()
+            .name("shears-eval-router".into())
+            .spawn(move || {
+                if let Err(e) =
+                    router_main(rx, &artifacts_dir, &config_name, &entry_name, stores, max_wait)
+                {
+                    crate::warn_!("router exited with error: {e:#}");
+                }
+            })
+            .context("spawn router thread")?;
+        Ok(EvalRouter { tx, join: Some(join) })
+    }
+
+    /// Evaluate examples; returns exact-match accuracy. Blocks.
+    pub fn eval(&self, examples: Vec<Example>, rank_mask: Option<HostTensor>) -> Result<f64> {
+        let n = examples.len();
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Eval { examples, rank_mask, reply })
+            .ok()
+            .context("router gone")?;
+        let mut correct = 0usize;
+        for _ in 0..n {
+            match rx.recv().context("router dropped replies")? {
+                Ok(ok) => correct += ok as usize,
+                Err(e) => anyhow::bail!("router eval error: {e}"),
+            }
+        }
+        Ok(correct as f64 / n.max(1) as f64)
+    }
+
+    pub fn metrics(&self) -> Result<RouterMetrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Metrics(tx)).ok().context("router gone")?;
+        rx.recv().context("router dropped metrics")
+    }
+}
+
+impl Drop for EvalRouter {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn mask_key(m: &Option<HostTensor>) -> Vec<u8> {
+    match m {
+        None => Vec::new(),
+        Some(t) => t.f32s().iter().flat_map(|x| x.to_le_bytes()).collect(),
+    }
+}
+
+fn router_main(
+    rx: Receiver<Msg>,
+    artifacts_dir: &str,
+    config_name: &str,
+    entry_name: &str,
+    stores: Vec<ParamStore>,
+    max_wait: Duration,
+) -> Result<()> {
+    let rt = Runtime::new(artifacts_dir)?;
+    let manifest = Manifest::load(artifacts_dir)?;
+    let cfg = manifest.config(config_name)?;
+    let entry = cfg.entry(entry_name)?;
+    let exe = rt.load(&entry.file)?;
+    let vocab = Vocab::new(cfg.vocab);
+    let store_refs: Vec<&ParamStore> = stores.iter().collect();
+    let mut masks_by_key: std::collections::HashMap<Vec<u8>, HostTensor> = Default::default();
+
+    let mut queue: VecDeque<Pending> = VecDeque::new();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let mut metrics = RouterMetrics::default();
+    let mut open = true;
+
+    while open || !queue.is_empty() {
+        // 1. drain the channel (blocking only when idle)
+        let msg = if queue.is_empty() && open {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => {
+                    open = false;
+                    None
+                }
+            }
+        } else {
+            match rx.try_recv() {
+                Ok(m) => Some(m),
+                Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    None
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Eval { examples, rank_mask, reply }) => {
+                metrics.requests += 1;
+                let key = mask_key(&rank_mask);
+                if let Some(m) = rank_mask {
+                    masks_by_key.entry(key.clone()).or_insert(m);
+                }
+                let now = Instant::now();
+                for example in examples {
+                    metrics.examples += 1;
+                    queue.push_back(Pending {
+                        example,
+                        mask_key: key.clone(),
+                        reply: reply.clone(),
+                        enqueued: now,
+                    });
+                }
+                // keep draining to coalesce concurrent requests
+                if queue.len() < cfg.batch_eval {
+                    // small grace period for more arrivals
+                    let deadline = Instant::now() + max_wait;
+                    while queue.len() < cfg.batch_eval && Instant::now() < deadline {
+                        match rx.try_recv() {
+                            Ok(Msg::Eval { examples, rank_mask, reply }) => {
+                                metrics.requests += 1;
+                                let key = mask_key(&rank_mask);
+                                if let Some(m) = rank_mask {
+                                    masks_by_key.entry(key.clone()).or_insert(m);
+                                }
+                                let now = Instant::now();
+                                for example in examples {
+                                    metrics.examples += 1;
+                                    queue.push_back(Pending {
+                                        example,
+                                        mask_key: key.clone(),
+                                        reply: reply.clone(),
+                                        enqueued: now,
+                                    });
+                                }
+                            }
+                            Ok(Msg::Metrics(tx)) => {
+                                send_metrics(&tx, &metrics, &latencies_ms);
+                            }
+                            Ok(Msg::Shutdown) | Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                            Err(std::sync::mpsc::TryRecvError::Empty) => {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                    }
+                }
+            }
+            Some(Msg::Metrics(tx)) => {
+                send_metrics(&tx, &metrics, &latencies_ms);
+                continue;
+            }
+            Some(Msg::Shutdown) => {
+                open = false;
+            }
+            None => {}
+        }
+
+        // 2. run one coalesced batch for the mask group at the queue head
+        if let Some(head_key) = queue.front().map(|p| p.mask_key.clone()) {
+            let mut group: Vec<Pending> = Vec::with_capacity(cfg.batch_eval);
+            let mut rest: VecDeque<Pending> = VecDeque::new();
+            while let Some(p) = queue.pop_front() {
+                if p.mask_key == head_key && group.len() < cfg.batch_eval {
+                    group.push(p);
+                } else {
+                    rest.push_back(p);
+                }
+            }
+            queue = rest;
+            let exs: Vec<&Example> = group.iter().map(|p| &p.example).collect();
+            let batch = build_batch(&exs, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+            let mask_ref = if head_key.is_empty() { None } else { masks_by_key.get(&head_key) };
+            metrics.forwards += 1;
+            match forward_logits(&rt, &exe, entry, &store_refs, mask_ref, &batch) {
+                Ok(logits) => {
+                    for (row, p) in group.iter().enumerate() {
+                        let ok = exact_match(&p.example, &logits, row, cfg.seq_len, cfg.vocab);
+                        latencies_ms.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+                        let _ = p.reply.send(Ok(ok));
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    for p in &group {
+                        let _ = p.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn send_metrics(tx: &Sender<RouterMetrics>, m: &RouterMetrics, lat: &[f64]) {
+    let mut out = m.clone();
+    out.mean_occupancy = if m.forwards > 0 {
+        m.examples as f64 / m.forwards as f64
+    } else {
+        0.0
+    };
+    let mut sorted = lat.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pct = |p: f64| -> f64 {
+        if sorted.is_empty() {
+            0.0
+        } else {
+            sorted[((sorted.len() - 1) as f64 * p) as usize]
+        }
+    };
+    out.p50_latency_ms = pct(0.50);
+    out.p99_latency_ms = pct(0.99);
+    let _ = tx.send(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_key_distinguishes_masks() {
+        let a = Some(HostTensor::from_f32(&[2], vec![1.0, 0.0]));
+        let b = Some(HostTensor::from_f32(&[2], vec![1.0, 1.0]));
+        assert_ne!(mask_key(&a), mask_key(&b));
+        assert_eq!(mask_key(&None), Vec::<u8>::new());
+        assert_eq!(mask_key(&a), mask_key(&a.clone()));
+    }
+}

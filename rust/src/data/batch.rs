@@ -1,0 +1,173 @@
+//! Batch construction: examples → (x, y, loss_mask) HostTensors matching
+//! the train/eval entry-point signatures.
+//!
+//! `y[t] = x[t+1]` (next-token targets); the loss mask selects positions
+//! whose *target* lies in the answer span (supervised fine-tuning) or all
+//! non-pad targets (pretraining). Shapes are fixed per config, examples
+//! are padded with PAD and over-long batches cycle examples — exactly the
+//! contract the AOT'd graphs expect.
+
+use super::{Example, Vocab};
+use crate::tensor::HostTensor;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: HostTensor,
+    pub y: HostTensor,
+    pub loss_mask: HostTensor,
+    /// how many rows are real examples (tail rows may be cycled fill)
+    pub real: usize,
+}
+
+/// Loss-mask policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MaskMode {
+    /// supervise only the answer span (task fine-tuning)
+    AnswerOnly,
+    /// supervise every non-pad target (pretraining)
+    FullSequence,
+}
+
+pub fn build_batch(
+    examples: &[&Example],
+    batch: usize,
+    seq_len: usize,
+    vocab: &Vocab,
+    mode: MaskMode,
+) -> Batch {
+    assert!(!examples.is_empty());
+    let mut x = vec![vocab.pad; batch * seq_len];
+    let mut y = vec![vocab.pad; batch * seq_len];
+    let mut m = vec![0.0f32; batch * seq_len];
+    for row in 0..batch {
+        let ex = examples[row % examples.len()];
+        let n = ex.tokens.len().min(seq_len);
+        for t in 0..n {
+            x[row * seq_len + t] = ex.tokens[t];
+        }
+        for t in 0..seq_len {
+            let target_pos = t + 1;
+            if target_pos < n {
+                y[row * seq_len + t] = ex.tokens[target_pos];
+                let in_answer = target_pos >= ex.answer_start
+                    && target_pos < ex.answer_start + ex.answer_len;
+                let supervised = match mode {
+                    MaskMode::AnswerOnly => in_answer,
+                    MaskMode::FullSequence => true,
+                };
+                if supervised {
+                    m[row * seq_len + t] = 1.0;
+                }
+            }
+        }
+    }
+    Batch {
+        x: HostTensor::from_i32(&[batch, seq_len], x),
+        y: HostTensor::from_i32(&[batch, seq_len], y),
+        loss_mask: HostTensor::from_f32(&[batch, seq_len], m),
+        real: examples.len().min(batch),
+    }
+}
+
+/// Iterates a dataset as fixed-shape batches (cycling at the tail).
+pub struct Batcher<'a> {
+    examples: &'a [Example],
+    batch: usize,
+    seq_len: usize,
+    vocab: &'a Vocab,
+    mode: MaskMode,
+    pos: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        examples: &'a [Example],
+        batch: usize,
+        seq_len: usize,
+        vocab: &'a Vocab,
+        mode: MaskMode,
+    ) -> Self {
+        assert!(!examples.is_empty());
+        Batcher { examples, batch, seq_len, vocab, mode, pos: 0 }
+    }
+
+    /// Next training batch, cycling the dataset forever.
+    pub fn next_cyclic(&mut self) -> Batch {
+        let refs: Vec<&Example> = (0..self.batch)
+            .map(|i| &self.examples[(self.pos + i) % self.examples.len()])
+            .collect();
+        self.pos = (self.pos + self.batch) % self.examples.len();
+        build_batch(&refs, self.batch, self.seq_len, self.vocab, self.mode)
+    }
+
+    /// One pass over the dataset for evaluation (last batch padded;
+    /// `Batch::real` says how many rows count).
+    pub fn epoch(&self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.examples.len() {
+            let hi = (i + self.batch).min(self.examples.len());
+            let refs: Vec<&Example> = self.examples[i..hi].iter().collect();
+            out.push(build_batch(&refs, self.batch, self.seq_len, self.vocab, self.mode));
+            i = hi;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{dataset, Task};
+
+    #[test]
+    fn shapes_and_shift() {
+        let v = Vocab::new(256);
+        let ex = Example { tokens: vec![1, 10, 11, 3, 12, 2], answer_start: 4, answer_len: 1 };
+        let b = build_batch(&[&ex], 2, 8, &v, MaskMode::AnswerOnly);
+        assert_eq!(b.x.shape, vec![2, 8]);
+        let x = b.x.i32s();
+        let y = b.y.i32s();
+        // shift: y[t] == x[t+1] where defined
+        for t in 0..5 {
+            assert_eq!(y[t], x[t + 1]);
+        }
+        // answer-only mask: only position 3 (target = index 4 = answer) is on
+        let m = b.loss_mask.f32s();
+        assert_eq!(m[3], 1.0);
+        assert_eq!(m.iter().take(8).sum::<f32>(), 1.0);
+        // second row is cycled fill of the same example
+        assert_eq!(x[8], 1);
+        assert_eq!(b.real, 1);
+    }
+
+    #[test]
+    fn full_sequence_mask_covers_non_pad() {
+        let v = Vocab::new(256);
+        let ex = Example { tokens: vec![1, 10, 11, 2], answer_start: 2, answer_len: 1 };
+        let b = build_batch(&[&ex], 1, 6, &v, MaskMode::FullSequence);
+        let m = b.loss_mask.f32s();
+        assert_eq!(&m[..4], &[1.0, 1.0, 1.0, 0.0]); // targets at t=0..2 exist
+    }
+
+    #[test]
+    fn epoch_covers_all_examples_once() {
+        let v = Vocab::new(256);
+        let ds = dataset(Task::BoolqSim, &v, 1, 10, 48);
+        let batcher = Batcher::new(&ds, 4, 48, &v, MaskMode::AnswerOnly);
+        let batches = batcher.epoch();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches.iter().map(|b| b.real).sum::<usize>(), 10);
+        assert_eq!(batches[2].real, 2);
+    }
+
+    #[test]
+    fn cyclic_advances() {
+        let v = Vocab::new(256);
+        let ds = dataset(Task::BoolqSim, &v, 1, 6, 48);
+        let mut batcher = Batcher::new(&ds, 4, 48, &v, MaskMode::AnswerOnly);
+        let a = batcher.next_cyclic();
+        let b = batcher.next_cyclic();
+        assert_ne!(a.x.i32s(), b.x.i32s());
+    }
+}

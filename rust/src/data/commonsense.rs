@@ -1,0 +1,260 @@
+//! Commonsense-reasoning simulants (paper Table 2 datasets, DESIGN.md §3).
+//!
+//! Eight distinct rule-based distributions, all answered with a single
+//! token (yes/no or a choice letter) so accuracy is comparable across
+//! tasks — the same protocol as the unified LLM-Adapters commonsense
+//! suite. Each simulant keeps the *kind* of reasoning of its namesake:
+//! boolean comparison (BoolQ), physical-continuation choice (PIQA),
+//! social-relation lookup (SIQA), sequence completion (HellaSwag),
+//! referent resolution (WinoGrande), single/composed rule application
+//! (ARC-e/ARC-c) and fact retrieval (OBQA).
+
+use super::vocab::Vocab;
+use super::Example;
+use crate::util::rng::Rng;
+
+fn finish(v: &Vocab, mut tokens: Vec<i32>, answer: i32, max_len: usize) -> Example {
+    tokens.push(v.sep);
+    let answer_start = tokens.len();
+    tokens.push(answer);
+    tokens.push(v.eos);
+    assert!(tokens.len() <= max_len);
+    Example { tokens, answer_start, answer_len: 1 }
+}
+
+/// BoolQ-sim: "a > b ?" → yes/no.
+pub fn boolq_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(0, 99) as u32;
+    let mut b = rng.range(0, 99) as u32;
+    if a == b {
+        b += 1;
+    }
+    let mut t = vec![v.bos];
+    t.extend(v.number(a));
+    t.push(v.gt);
+    t.extend(v.number(b));
+    t.push(v.qmark);
+    finish(v, t, if a > b { v.yes } else { v.no }, max_len)
+}
+
+/// PIQA-sim: a repeated "action" pattern; pick the continuation that keeps
+/// the pattern going (2 options).
+pub fn piqa_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let w = v.word(rng.below(v.n_words / 2));
+    let other = v.word(v.n_words / 2 + rng.below(v.n_words / 2 - 1));
+    let mut t = vec![v.bos, w, w, w, v.qmark];
+    let correct = rng.below(2);
+    for i in 0..2 {
+        t.push(v.choice(i));
+        t.push(if i == correct { w } else { other });
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(correct), max_len)
+}
+
+/// SIQA-sim: a stated relation "x = y"; asked about x, pick y (3 options).
+pub fn siqa_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let x = v.word(rng.below(v.n_words));
+    let mut ys = [0i32; 3];
+    for (i, y) in ys.iter_mut().enumerate() {
+        *y = v.word((rng.below(v.n_words / 3) + i * (v.n_words / 3)).min(v.n_words - 1));
+    }
+    let correct = rng.below(3);
+    let mut t = vec![v.bos, x, v.eq, ys[correct], v.comma, x, v.qmark];
+    for (i, y) in ys.iter().enumerate() {
+        t.push(v.choice(i));
+        t.push(*y);
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(correct), max_len)
+}
+
+/// HellaSwag-sim: arithmetic progression completion (4 options).
+pub fn hellaswag_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let start = rng.range(1, 40) as u32;
+    let d = rng.range(1, 9) as u32;
+    let mut t = vec![v.bos];
+    for i in 0..3 {
+        t.extend(v.number(start + i * d));
+        t.push(v.comma);
+    }
+    t.push(v.qmark);
+    let correct_val = start + 3 * d;
+    let mut opts = vec![correct_val];
+    while opts.len() < 4 {
+        let c = (correct_val as i64 + rng.range(-6, 7)).max(0) as u32;
+        if !opts.contains(&c) {
+            opts.push(c);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let idx = opts.iter().position(|x| *x == correct_val).unwrap();
+    for (i, o) in opts.iter().enumerate() {
+        t.push(v.choice(i));
+        t.extend(v.number(*o));
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(idx), max_len)
+}
+
+/// WinoGrande-sim: two entities, one relation "e1 > e2"; resolve which
+/// entity the question refers to (2 options).
+pub fn winogrande_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let e1 = v.word(rng.below(v.n_words / 2));
+    let e2 = v.word(v.n_words / 2 + rng.below(v.n_words / 2 - 1));
+    let first_greater = rng.bool(0.5);
+    let mut t = vec![v.bos];
+    if first_greater {
+        t.extend([e1, v.gt, e2]);
+    } else {
+        t.extend([e2, v.gt, e1]);
+    }
+    // question: "which is greater?"  options A=e1, B=e2
+    t.extend([v.comma, v.gt, v.qmark, v.choice(0), e1, v.comma, v.choice(1), e2, v.comma]);
+    finish(v, t, if first_greater { v.choice(0) } else { v.choice(1) }, max_len)
+}
+
+/// ARC-e-sim: one-rule application — successor of a number (4 options).
+pub fn arc_e_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(1, 80) as u32;
+    let mut t = vec![v.bos];
+    t.extend(v.number(a));
+    t.push(v.plus);
+    t.extend(v.number(1));
+    t.push(v.qmark);
+    let correct = a + 1;
+    let mut opts = vec![correct];
+    while opts.len() < 4 {
+        let c = (correct as i64 + rng.range(-4, 5)).max(0) as u32;
+        if !opts.contains(&c) {
+            opts.push(c);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let idx = opts.iter().position(|x| *x == correct).unwrap();
+    for (i, o) in opts.iter().enumerate() {
+        t.push(v.choice(i));
+        t.extend(v.number(*o));
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(idx), max_len)
+}
+
+/// ARC-c-sim: two composed rules — `a + b - c` (4 options, harder than ARC-e).
+pub fn arc_c_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(5, 40) as u32;
+    let b = rng.range(1, 30) as u32;
+    let c = rng.range(1, (a + b).min(30) as i64) as u32;
+    let correct = a + b - c;
+    let mut t = vec![v.bos];
+    t.extend(v.number(a));
+    t.push(v.plus);
+    t.extend(v.number(b));
+    t.push(v.minus);
+    t.extend(v.number(c));
+    t.push(v.qmark);
+    let mut opts = vec![correct];
+    while opts.len() < 4 {
+        let cand = (correct as i64 + rng.range(-5, 6)).max(0) as u32;
+        if !opts.contains(&cand) {
+            opts.push(cand);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let idx = opts.iter().position(|x| *x == correct).unwrap();
+    for (i, o) in opts.iter().enumerate() {
+        t.push(v.choice(i));
+        t.extend(v.number(*o));
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(idx), max_len)
+}
+
+/// OBQA-sim: "open book" — a fact `key = value` stated up front must be
+/// retrieved to answer the later question (4 numeric options).
+pub fn obqa_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let key = v.word(rng.below(v.n_words));
+    let value = rng.range(1, 60) as u32;
+    let mut t = vec![v.bos, key, v.eq];
+    t.extend(v.number(value));
+    // filler "book" clutter between fact and question
+    for _ in 0..3 {
+        t.push(v.word(rng.below(v.n_words)));
+    }
+    t.extend([v.comma, key, v.qmark]);
+    let mut opts = vec![value];
+    while opts.len() < 4 {
+        let cand = (value as i64 + rng.range(-8, 9)).max(0) as u32;
+        if !opts.contains(&cand) {
+            opts.push(cand);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let idx = opts.iter().position(|x| *x == value).unwrap();
+    for (i, o) in opts.iter().enumerate() {
+        t.push(v.choice(i));
+        t.extend(v.number(*o));
+        t.push(v.comma);
+    }
+    finish(v, t, v.choice(idx), max_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boolq_answer_matches_comparison() {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let ex = boolq_sim(&v, &mut rng, 48);
+            let gtpos = ex.tokens.iter().position(|t| *t == v.gt).unwrap();
+            let a = v.parse_number(&ex.tokens[1..gtpos]).unwrap();
+            let qpos = ex.tokens.iter().position(|t| *t == v.qmark).unwrap();
+            let b = v.parse_number(&ex.tokens[gtpos + 1..qpos]).unwrap();
+            let want = if a > b { v.yes } else { v.no };
+            assert_eq!(ex.tokens[ex.answer_start], want);
+        }
+    }
+
+    #[test]
+    fn piqa_correct_choice_continues_pattern() {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let ex = piqa_sim(&v, &mut rng, 48);
+            let w = ex.tokens[1];
+            let letter = ex.tokens[ex.answer_start];
+            let idx = (letter - v.choice(0)) as usize;
+            // find the option token after choice(idx)
+            let pos = ex.tokens.iter().position(|t| *t == v.choice(idx)).unwrap();
+            assert_eq!(ex.tokens[pos + 1], w);
+        }
+    }
+
+    #[test]
+    fn obqa_requires_retrieval() {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let ex = obqa_sim(&v, &mut rng, 64);
+            let key = ex.tokens[1];
+            // key appears twice: fact + question
+            assert_eq!(ex.tokens.iter().filter(|t| **t == key).count() >= 2, true);
+        }
+    }
+
+    #[test]
+    fn choice_tasks_shuffle_positions() {
+        // the correct letter must not be constant (else a model learns "A")
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..80 {
+            let ex = hellaswag_sim(&v, &mut rng, 64);
+            seen.insert(ex.tokens[ex.answer_start]);
+        }
+        assert!(seen.len() >= 3, "answers always in the same slot");
+    }
+}

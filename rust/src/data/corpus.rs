@@ -1,0 +1,101 @@
+//! Pretraining corpus for the in-repo base models (DESIGN.md §3: the
+//! stand-in for LLaMA/MPT pretraining).
+//!
+//! A mixture of primitive "competency" sequences — counting runs, digit
+//! arithmetic facts, comparisons, symbol patterns and key/value pairs —
+//! that give a from-scratch model the skills the downstream tasks assume,
+//! *without* leaking the task QA format (so w/o-tune ablation rows stay
+//! near chance like the paper's zero-shot rows).
+
+use super::vocab::Vocab;
+use crate::util::rng::Rng;
+
+/// One pretraining sequence (next-token loss over the whole thing).
+pub fn sample(v: &Vocab, rng: &mut Rng, max_len: usize) -> Vec<i32> {
+    let mut t = vec![v.bos];
+    while t.len() + 12 < max_len {
+        match rng.below(5) {
+            // counting run: n, n+1, n+2, …
+            0 => {
+                let start = rng.range(0, 60) as u32;
+                for i in 0..4 {
+                    t.extend(v.number(start + i));
+                    t.push(v.comma);
+                }
+            }
+            // arithmetic fact: a + b = c  /  a - b = c
+            1 => {
+                let a = rng.range(1, 60) as u32;
+                let b = rng.range(1, 40) as u32;
+                let add = rng.bool(0.5);
+                let (x, y, c) = if add {
+                    (a, b, a + b)
+                } else {
+                    (a.max(b), a.min(b), a.max(b) - a.min(b))
+                };
+                t.extend(v.number(x));
+                t.push(if add { v.plus } else { v.minus });
+                t.extend(v.number(y));
+                t.push(v.eq);
+                t.extend(v.number(c));
+                t.push(v.comma);
+            }
+            // true comparison: a > b
+            2 => {
+                let a = rng.range(1, 99) as u32;
+                let b = rng.range(0, a as i64) as u32;
+                t.extend(v.number(a));
+                t.push(v.gt);
+                t.extend(v.number(b));
+                t.push(v.comma);
+            }
+            // symbol pattern: w1 w2 w1 w2 w1 w2
+            3 => {
+                let w1 = v.word(rng.below(v.n_words));
+                let w2 = v.word(rng.below(v.n_words));
+                for _ in 0..3 {
+                    t.push(w1);
+                    t.push(w2);
+                }
+                t.push(v.comma);
+            }
+            // key/value fact, later repeated (retrieval skill)
+            _ => {
+                let k = v.word(rng.below(v.n_words));
+                let val = rng.range(0, 60) as u32;
+                t.push(k);
+                t.push(v.eq);
+                t.extend(v.number(val));
+                t.push(v.comma);
+                t.push(k);
+                t.push(v.eq);
+                t.extend(v.number(val));
+                t.push(v.comma);
+            }
+        }
+    }
+    t.truncate(max_len - 1);
+    t.push(v.eos);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_fit_and_are_varied() {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(0);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..50 {
+            let s = sample(&v, &mut rng, 48);
+            assert!(s.len() <= 48);
+            assert_eq!(s[0], v.bos);
+            assert_eq!(*s.last().unwrap(), v.eos);
+            assert!(s.iter().all(|t| (0..256).contains(t)));
+            distinct.insert(s);
+        }
+        assert!(distinct.len() > 40);
+    }
+}

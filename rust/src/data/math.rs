@@ -1,0 +1,215 @@
+//! Math-reasoning simulants (paper Table 1 datasets, DESIGN.md §3).
+//!
+//! Shared format: `[BOS, <problem tokens>, SEP, <answer tokens>, EOS]` —
+//! the answer span is what training supervises and evaluation
+//! exact-matches, mirroring the LLM-Adapters answer-accuracy protocol.
+//!
+//! Difficulty ordering mirrors the real datasets: MAWPS (templated single
+//! op) < SVAMP (distractor number) < GSM8K (multi-step chain); AQuA is
+//! multiple-choice.
+
+use super::vocab::Vocab;
+use super::Example;
+use crate::util::rng::Rng;
+
+fn finish(v: &Vocab, mut tokens: Vec<i32>, answer: Vec<i32>, max_len: usize) -> Example {
+    tokens.push(v.sep);
+    let answer_start = tokens.len();
+    let answer_len = answer.len();
+    tokens.extend(answer);
+    tokens.push(v.eos);
+    assert!(tokens.len() <= max_len, "example len {} > {max_len}", tokens.len());
+    Example { tokens, answer_start, answer_len }
+}
+
+/// GSM8K-sim: 2–3 step arithmetic chain wrapped in "story" filler words.
+/// `a ± b ± c` with everything kept in [0, 99] so answers are ≤ 2 digits.
+pub fn gsm8k_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let steps = 2 + rng.below(2); // 2..=3 operations
+    let mut acc = rng.range(5, 40) as i32;
+    let mut t = vec![v.bos, v.word(rng.below(40)), v.word(rng.below(40))];
+    t.extend(v.number(acc as u32));
+    for _ in 0..steps {
+        let add = rng.bool(0.5);
+        let operand = if add {
+            rng.range(1, (99 - acc).max(2) as i64) as i32
+        } else {
+            rng.range(1, acc.max(2) as i64) as i32
+        };
+        t.push(v.word(rng.below(40)));
+        t.push(if add { v.plus } else { v.minus });
+        t.extend(v.number(operand as u32));
+        acc = if add { acc + operand } else { acc - operand };
+    }
+    t.push(v.qmark);
+    finish(v, t, v.number(acc as u32), max_len)
+}
+
+/// AQuA-sim: compute `a op b`, pick among four numeric options (answer is
+/// the option letter, chance = 25%).
+pub fn aqua_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(2, 30) as u32;
+    let b = rng.range(2, 30) as u32;
+    let add = rng.bool(0.5);
+    let correct = if add { a + b } else { a.max(b) - a.min(b) };
+    let mut t = vec![v.bos];
+    t.extend(v.number(a.max(b)));
+    t.push(if add { v.plus } else { v.minus });
+    t.extend(v.number(if add { a.min(b) } else { a.min(b) }));
+    t.push(v.qmark);
+    // four options: correct + three perturbations, shuffled
+    let mut opts = vec![correct];
+    while opts.len() < 4 {
+        let delta = rng.range(1, 7) as u32;
+        let cand = if rng.bool(0.5) { correct + delta } else { correct.saturating_sub(delta) };
+        if !opts.contains(&cand) {
+            opts.push(cand);
+        }
+    }
+    rng.shuffle(&mut opts);
+    let correct_idx = opts.iter().position(|x| *x == correct).unwrap();
+    for (i, o) in opts.iter().enumerate() {
+        t.push(v.choice(i));
+        t.extend(v.number(*o));
+        t.push(v.comma);
+    }
+    finish(v, t, vec![v.choice(correct_idx)], max_len)
+}
+
+/// MAWPS-sim: templated single-operation word problem (the easiest set).
+pub fn mawps_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(2, 50) as u32;
+    let b = rng.range(1, 40) as u32;
+    let add = rng.bool(0.5);
+    let ans = if add { a + b } else { a.max(b) - a.min(b) };
+    let (x, y) = if add { (a, b) } else { (a.max(b), a.min(b)) };
+    let noun = v.word(rng.below(20)); // small, reusable template vocabulary
+    let mut t = vec![v.bos, noun];
+    t.extend(v.number(x));
+    t.push(if add { v.plus } else { v.minus });
+    t.push(noun);
+    t.extend(v.number(y));
+    t.push(v.qmark);
+    finish(v, t, v.number(ans), max_len)
+}
+
+/// SVAMP-sim: MAWPS plus an irrelevant distractor quantity — the model
+/// must ignore a plausible number (SVAMP's defining perturbation).
+pub fn svamp_sim(v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+    let a = rng.range(2, 50) as u32;
+    let b = rng.range(1, 40) as u32;
+    let distractor = rng.range(1, 60) as u32;
+    let add = rng.bool(0.5);
+    let ans = if add { a + b } else { a.max(b) - a.min(b) };
+    let (x, y) = if add { (a, b) } else { (a.max(b), a.min(b)) };
+    let noun = v.word(rng.below(20));
+    let other = v.word(20 + rng.below(20)); // distractor entity ≠ noun region
+    let mut t = vec![v.bos, noun];
+    t.extend(v.number(x));
+    // distractor clause: "other <distractor>,"
+    t.push(other);
+    t.extend(v.number(distractor));
+    t.push(v.comma);
+    t.push(if add { v.plus } else { v.minus });
+    t.push(noun);
+    t.extend(v.number(y));
+    t.push(v.qmark);
+    finish(v, t, v.number(ans), max_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> Vocab {
+        Vocab::new(256)
+    }
+
+    #[test]
+    fn gsm8k_answers_are_consistent() {
+        let v = v();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let ex = gsm8k_sim(&v, &mut rng, 48);
+            // answer parses as a number in [0, 99+steps*…] bounded well below 200
+            let ans = v
+                .parse_number(&ex.tokens[ex.answer_start..ex.answer_start + ex.answer_len])
+                .expect("numeric answer");
+            assert!(ans < 200);
+            assert_eq!(ex.tokens[ex.answer_start - 1], v.sep);
+            assert_eq!(*ex.tokens.last().unwrap(), v.eos);
+        }
+    }
+
+    #[test]
+    fn aqua_answer_is_valid_choice_letter() {
+        let v = v();
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let ex = aqua_sim(&v, &mut rng, 48);
+            assert_eq!(ex.answer_len, 1);
+            let a = ex.tokens[ex.answer_start];
+            assert!((v.choice(0)..=v.choice(3)).contains(&a));
+        }
+    }
+
+    #[test]
+    fn aqua_correct_option_matches_computation() {
+        let v = v();
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let ex = aqua_sim(&v, &mut rng, 48);
+            // decode problem: number op number '?'
+            let toks = &ex.tokens[1..];
+            let qpos = toks.iter().position(|t| *t == v.qmark).unwrap();
+            let op_pos = toks[..qpos]
+                .iter()
+                .position(|t| *t == v.plus || *t == v.minus)
+                .unwrap();
+            let x = v.parse_number(&toks[..op_pos]).unwrap();
+            let y = v.parse_number(&toks[op_pos + 1..qpos]).unwrap();
+            let expect = if toks[op_pos] == v.plus { x + y } else { x - y };
+            // decode options
+            let body = &toks[qpos + 1..];
+            let letter = ex.tokens[ex.answer_start];
+            let idx = (letter - v.choice(0)) as usize;
+            // find idx-th option value
+            let mut vals = Vec::new();
+            let mut i = 0;
+            while i < body.len() {
+                if (v.choice(0)..=v.choice(4)).contains(&body[i]) {
+                    let mut j = i + 1;
+                    while j < body.len() && (v.digit0..v.digit0 + 10).contains(&body[j]) {
+                        j += 1;
+                    }
+                    vals.push(v.parse_number(&body[i + 1..j]).unwrap());
+                    i = j;
+                } else {
+                    i += 1;
+                }
+            }
+            assert_eq!(vals[idx], expect);
+        }
+    }
+
+    #[test]
+    fn mawps_single_op_correct() {
+        let v = v();
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let ex = mawps_sim(&v, &mut rng, 48);
+            let ans = v
+                .parse_number(&ex.tokens[ex.answer_start..ex.answer_start + ex.answer_len])
+                .unwrap();
+            assert!(ans <= 90);
+        }
+    }
+
+    #[test]
+    fn svamp_contains_distractor_clause() {
+        let v = v();
+        let mut rng = Rng::new(5);
+        let ex = svamp_sim(&v, &mut rng, 48);
+        assert!(ex.tokens.contains(&v.comma));
+    }
+}

@@ -1,0 +1,162 @@
+//! Synthetic workloads standing in for the paper's datasets (DESIGN.md §3).
+//!
+//! Four math-reasoning simulants (GSM8K/AQuA/MAWPS/SVAMP — paper Table 1)
+//! and eight commonsense simulants (BoolQ/PIQA/SIQA/HellaSwag/WinoGrande/
+//! ARC-e/ARC-c/OBQA — paper Table 2), plus the pretraining corpus the
+//! in-repo base models are trained on before Shears runs.
+//!
+//! Every task emits `Example`s: a token sequence with a marked answer
+//! span. Training uses masked next-token loss over the answer; evaluation
+//! is teacher-forced exact match over the span — the same protocol shape
+//! as the paper's answer-accuracy metric.
+
+pub mod batch;
+pub mod commonsense;
+pub mod corpus;
+pub mod math;
+pub mod vocab;
+
+pub use batch::{Batch, Batcher};
+pub use vocab::Vocab;
+
+use crate::util::rng::Rng;
+
+/// One supervised example: tokens + answer span (absolute positions).
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub answer_start: usize,
+    pub answer_len: usize,
+}
+
+/// Every synthetic task in the suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    // math reasoning (Table 1)
+    Gsm8kSim,
+    AquaSim,
+    MawpsSim,
+    SvampSim,
+    // commonsense reasoning (Table 2)
+    BoolqSim,
+    PiqaSim,
+    SiqaSim,
+    HellaswagSim,
+    WinograndeSim,
+    ArcESim,
+    ArcCSim,
+    ObqaSim,
+}
+
+impl Task {
+    pub const MATH: [Task; 4] =
+        [Task::Gsm8kSim, Task::AquaSim, Task::MawpsSim, Task::SvampSim];
+
+    pub const COMMONSENSE: [Task; 8] = [
+        Task::BoolqSim,
+        Task::PiqaSim,
+        Task::SiqaSim,
+        Task::HellaswagSim,
+        Task::WinograndeSim,
+        Task::ArcESim,
+        Task::ArcCSim,
+        Task::ObqaSim,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Gsm8kSim => "gsm8k-sim",
+            Task::AquaSim => "aqua-sim",
+            Task::MawpsSim => "mawps-sim",
+            Task::SvampSim => "svamp-sim",
+            Task::BoolqSim => "boolq-sim",
+            Task::PiqaSim => "piqa-sim",
+            Task::SiqaSim => "siqa-sim",
+            Task::HellaswagSim => "hellaswag-sim",
+            Task::WinograndeSim => "winogrande-sim",
+            Task::ArcESim => "arc-e-sim",
+            Task::ArcCSim => "arc-c-sim",
+            Task::ObqaSim => "obqa-sim",
+        }
+    }
+
+    /// Generate one example; `max_len` bounds the sequence.
+    pub fn sample(&self, v: &Vocab, rng: &mut Rng, max_len: usize) -> Example {
+        match self {
+            Task::Gsm8kSim => math::gsm8k_sim(v, rng, max_len),
+            Task::AquaSim => math::aqua_sim(v, rng, max_len),
+            Task::MawpsSim => math::mawps_sim(v, rng, max_len),
+            Task::SvampSim => math::svamp_sim(v, rng, max_len),
+            Task::BoolqSim => commonsense::boolq_sim(v, rng, max_len),
+            Task::PiqaSim => commonsense::piqa_sim(v, rng, max_len),
+            Task::SiqaSim => commonsense::siqa_sim(v, rng, max_len),
+            Task::HellaswagSim => commonsense::hellaswag_sim(v, rng, max_len),
+            Task::WinograndeSim => commonsense::winogrande_sim(v, rng, max_len),
+            Task::ArcESim => commonsense::arc_e_sim(v, rng, max_len),
+            Task::ArcCSim => commonsense::arc_c_sim(v, rng, max_len),
+            Task::ObqaSim => commonsense::obqa_sim(v, rng, max_len),
+        }
+    }
+
+    /// Chance accuracy (for sanity checks in benches/tests).
+    pub fn chance(&self) -> f64 {
+        match self {
+            Task::Gsm8kSim | Task::MawpsSim | Task::SvampSim => 0.01, // open numeric
+            Task::AquaSim => 0.25,
+            Task::BoolqSim => 0.5,
+            Task::PiqaSim | Task::WinograndeSim => 0.5,
+            Task::SiqaSim => 1.0 / 3.0,
+            Task::HellaswagSim | Task::ArcESim | Task::ArcCSim | Task::ObqaSim => 0.25,
+        }
+    }
+}
+
+/// Deterministic dataset: `count` examples from a seeded stream.
+pub fn dataset(task: Task, v: &Vocab, seed: u64, count: usize, max_len: usize) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ (task as u64).wrapping_mul(0x9E37_79B9));
+    (0..count).map(|_| task.sample(v, &mut rng, max_len)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(0);
+        for task in Task::MATH.iter().chain(Task::COMMONSENSE.iter()) {
+            for _ in 0..50 {
+                let ex = task.sample(&v, &mut rng, 48);
+                assert!(ex.tokens.len() <= 48, "{}", task.name());
+                assert!(ex.answer_len >= 1, "{}", task.name());
+                assert!(
+                    ex.answer_start + ex.answer_len <= ex.tokens.len(),
+                    "{}: span out of range",
+                    task.name()
+                );
+                assert!(
+                    ex.tokens.iter().all(|t| (0..256).contains(t)),
+                    "{}: token out of vocab",
+                    task.name()
+                );
+                for i in 0..ex.answer_len {
+                    assert_ne!(ex.tokens[ex.answer_start + i], v.pad, "{}", task.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dataset_is_deterministic() {
+        let v = Vocab::new(256);
+        let a = dataset(Task::Gsm8kSim, &v, 7, 5, 48);
+        let b = dataset(Task::Gsm8kSim, &v, 7, 5, 48);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+        let c = dataset(Task::Gsm8kSim, &v, 8, 5, 48);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.tokens != y.tokens));
+    }
+}

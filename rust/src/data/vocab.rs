@@ -1,0 +1,141 @@
+//! Token-id layout shared by every synthetic task.
+//!
+//! The vocab is purely positional (no string table): special tokens, then
+//! digits, operators, choice letters, yes/no, and a "word" region used as
+//! filler nouns/verbs by the generators. Everything fits in the smallest
+//! model vocab (256).
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    pub pad: i32,
+    pub bos: i32,
+    pub eos: i32,
+    /// question/answer separator ("The answer is")
+    pub sep: i32,
+    /// digits 0..=9
+    pub digit0: i32,
+    /// + - * = ( ) , ? tokens
+    pub plus: i32,
+    pub minus: i32,
+    pub times: i32,
+    pub eq: i32,
+    pub gt: i32,
+    pub lt: i32,
+    pub comma: i32,
+    pub qmark: i32,
+    /// choice letters A..=E
+    pub choice_a: i32,
+    pub yes: i32,
+    pub no: i32,
+    /// start of the word region (filler vocabulary)
+    pub word0: i32,
+    pub n_words: usize,
+}
+
+impl Vocab {
+    pub fn new(size: usize) -> Vocab {
+        assert!(size >= 64, "vocab too small: {size}");
+        let word0 = 32;
+        Vocab {
+            size,
+            pad: 0,
+            bos: 1,
+            eos: 2,
+            sep: 3,
+            digit0: 4, // 4..14
+            plus: 14,
+            minus: 15,
+            times: 16,
+            eq: 17,
+            gt: 18,
+            lt: 19,
+            comma: 20,
+            qmark: 21,
+            choice_a: 22, // 22..27 = A..E
+            yes: 27,
+            no: 28,
+            word0: word0 as i32,
+            n_words: size - word0,
+        }
+    }
+
+    pub fn digit(&self, d: u32) -> i32 {
+        debug_assert!(d < 10);
+        self.digit0 + d as i32
+    }
+
+    pub fn choice(&self, c: usize) -> i32 {
+        debug_assert!(c < 5);
+        self.choice_a + c as i32
+    }
+
+    /// A filler "word" token by index (mod region size).
+    pub fn word(&self, i: usize) -> i32 {
+        self.word0 + (i % self.n_words) as i32
+    }
+
+    /// Encode a non-negative number as digit tokens (base 10, msd first).
+    pub fn number(&self, n: u32) -> Vec<i32> {
+        if n == 0 {
+            return vec![self.digit(0)];
+        }
+        let mut digits = Vec::new();
+        let mut m = n;
+        while m > 0 {
+            digits.push(self.digit(m % 10));
+            m /= 10;
+        }
+        digits.reverse();
+        digits
+    }
+
+    /// Decode digit tokens back to a number (None if any non-digit).
+    pub fn parse_number(&self, toks: &[i32]) -> Option<u32> {
+        let mut n: u32 = 0;
+        for t in toks {
+            let d = t - self.digit0;
+            if !(0..10).contains(&d) {
+                return None;
+            }
+            n = n.checked_mul(10)?.checked_add(d as u32)?;
+        }
+        Some(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn number_roundtrip() {
+        let v = Vocab::new(256);
+        for n in [0u32, 1, 9, 10, 42, 105, 999] {
+            assert_eq!(v.parse_number(&v.number(n)), Some(n));
+        }
+        assert_eq!(v.parse_number(&[v.plus]), None);
+    }
+
+    #[test]
+    fn regions_disjoint() {
+        let v = Vocab::new(256);
+        let ids = [
+            v.pad, v.bos, v.eos, v.sep, v.digit(0), v.digit(9), v.plus, v.minus,
+            v.times, v.eq, v.gt, v.lt, v.comma, v.qmark, v.choice(0), v.choice(4),
+            v.yes, v.no, v.word(0),
+        ];
+        let set: std::collections::HashSet<_> = ids.iter().collect();
+        assert_eq!(set.len(), ids.len());
+        assert!(ids.iter().all(|i| (0..256).contains(i)));
+    }
+
+    #[test]
+    fn words_wrap_in_region() {
+        let v = Vocab::new(64);
+        for i in 0..200 {
+            let w = v.word(i);
+            assert!((v.word0..v.size as i32).contains(&w));
+        }
+    }
+}

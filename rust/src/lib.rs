@@ -1,0 +1,36 @@
+//! # Shears-RS
+//!
+//! Reproduction of *"Shears: Unstructured Sparsity with Neural Low-rank
+//! Adapter Search"* (Muñoz, Yuan, Jain — NAACL 2024) as a three-layer
+//! rust + JAX + Pallas stack. This crate is Layer 3: the coordinator that
+//! owns the Shears pipeline — unstructured sparsification, super-adapter
+//! training via NLS, and sub-adapter search — plus every substrate it
+//! needs (synthetic task generators, search algorithms, a PJRT runtime,
+//! an eval router, a serving loop).
+//!
+//! Python is build-time only: `make artifacts` AOT-lowers the L2 JAX model
+//! (which calls the L1 Pallas kernels) to HLO text; this crate loads and
+//! executes those artifacts through the PJRT C API (`xla` crate) — no
+//! Python anywhere on the request path.
+//!
+//! Start with [`coordinator::pipeline::ShearsPipeline`] for the paper's
+//! §3 workflow, or `examples/quickstart.rs` for the smallest end-to-end
+//! program.
+
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod model;
+pub mod nls;
+pub mod pruning;
+pub mod runtime;
+pub mod search;
+pub mod serve;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Repo-relative default artifacts directory (`make artifacts` output).
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,271 @@
+//! `shears` — the Layer-3 leader binary.
+//!
+//! ```text
+//! shears info      [--artifacts DIR]
+//! shears pipeline  [--config NAME --method M --sparsity S --steps N ...]
+//! shears eval      [--config NAME --tasks t1,t2 ...]   (base model, w/o tune)
+//! shears serve     [--config NAME --requests N ...]
+//! ```
+//!
+//! Every subcommand is a thin shell over the library (`shears::*`); the
+//! real functionality lives there and in examples/ + rust/benches/.
+
+use anyhow::{bail, Result};
+use shears::cli::{usage, Args, FlagSpec};
+use shears::coordinator::{PipelineOpts, ShearsPipeline};
+use shears::data::{self, Task, Vocab};
+use shears::model::Manifest;
+use shears::pruning::Method;
+use shears::runtime::Runtime;
+use shears::serve::{Decoder, GenRequest};
+use shears::train::evaluate;
+use shears::util::rng::Rng;
+
+fn flags() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "artifacts", default: Some("artifacts"), help: "artifacts directory" },
+        FlagSpec { name: "config", default: Some("tiny-llama"), help: "model config name" },
+        FlagSpec { name: "method", default: Some("wanda"), help: "wanda|magnitude|sparsegpt" },
+        FlagSpec { name: "sparsity", default: Some("0.5"), help: "target sparsity" },
+        FlagSpec { name: "pretrain-steps", default: Some("200"), help: "pretraining steps" },
+        FlagSpec { name: "steps", default: Some("150"), help: "super-adapter train steps" },
+        FlagSpec { name: "lr", default: Some("3e-3"), help: "peak learning rate" },
+        FlagSpec { name: "seed", default: Some("42"), help: "random seed" },
+        FlagSpec { name: "tasks", default: Some("gsm8k-sim"), help: "comma-separated task names" },
+        FlagSpec { name: "train-examples", default: Some("256"), help: "fine-tune set size" },
+        FlagSpec { name: "eval-examples", default: Some("64"), help: "test set size" },
+        FlagSpec { name: "hill-climb", default: Some("0"), help: "hill-climb eval budget (0 = heuristic only)" },
+        FlagSpec { name: "workdir", default: Some("runs"), help: "checkpoint cache directory" },
+        FlagSpec { name: "requests", default: Some("32"), help: "serve: request count" },
+        FlagSpec { name: "max-new", default: Some("8"), help: "serve: max new tokens" },
+    ]
+}
+
+fn parse_tasks(spec: &str) -> Result<Vec<Task>> {
+    let all: Vec<Task> = Task::MATH.iter().chain(Task::COMMONSENSE.iter()).copied().collect();
+    spec.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|name| {
+            all.iter()
+                .find(|t| t.name() == name)
+                .copied()
+                .ok_or_else(|| anyhow::anyhow!("unknown task '{name}'"))
+        })
+        .collect()
+}
+
+fn parse_method(m: &str) -> Result<Method> {
+    Ok(match m {
+        "wanda" => Method::Wanda,
+        "magnitude" => Method::Magnitude,
+        "sparsegpt" => Method::SparseGpt,
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        eprintln!("usage: shears <info|pipeline|eval|serve> [flags]\n");
+        eprintln!("{}", usage(&flags(), &[]));
+        return Ok(());
+    }
+    let args = Args::parse(&argv, &flags(), &[])?;
+    match args.subcommand.as_str() {
+        "info" => cmd_info(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "check" => cmd_check(&args),
+        other => bail!("unknown subcommand '{other}' (try: shears help)"),
+    }
+}
+
+/// Compile-check artifacts one by one (debug aid: XLA aborts the process
+/// on some unsupported ops, so each file gets its own verdict line first).
+fn cmd_check(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get("artifacts"))?;
+    let dir = std::path::Path::new(args.get("artifacts"));
+    let only = args.get("config"); // reuse flag: substring filter
+    let mut files: Vec<String> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().to_string())
+        .filter(|f| f.ends_with(".hlo.txt") && f.contains(only))
+        .collect();
+    files.sort();
+    for f in files {
+        println!("checking {f} ...");
+        match rt.load(&f) {
+            Ok(e) => println!("  OK ({} params)", e.param_count),
+            Err(e) => println!("  FAIL: {e:#}"),
+        }
+    }
+    // optional execute smoke: --method exec-b runs forward_eval_base via the
+    // buffer path, --method exec via the literal path
+    let mode = args.get("method");
+    if let Some(rest) = mode.strip_prefix("exec") {
+        let buffers = rest.starts_with("-b");
+        let entry_name = rest
+            .split(':')
+            .nth(1)
+            .unwrap_or("forward_eval_base")
+            .to_string();
+        let manifest = Manifest::load(args.get("artifacts"))?;
+        let cfg = manifest.config("tiny-llama")?;
+        let mut rng = Rng::new(0);
+        let base = shears::model::ParamStore::init_base(cfg, &mut rng, 0.05);
+        let entry = cfg.entry(&entry_name)?;
+        let exe = rt.load(&entry.file)?;
+        // generic zero-filled inputs of the declared shapes/dtypes
+        let owned: Vec<shears::tensor::HostTensor> = entry
+            .inputs
+            .iter()
+            .map(|i| {
+                if i.dtype == "i32" {
+                    shears::tensor::HostTensor::from_i32(
+                        &i.shape,
+                        vec![1; i.shape.iter().product()],
+                    )
+                } else if base.contains(&i.name) {
+                    base.get(&i.name).unwrap().clone()
+                } else if i.name == "step" {
+                    shears::tensor::HostTensor::scalar_f32(1.0)
+                } else {
+                    let mut t = shears::tensor::HostTensor::zeros(&i.shape);
+                    if i.name.starts_with("lora_a") || i.name == "loss_mask" || i.name == "rank_mask" || i.name.starts_with("mask.") {
+                        t.f32s_mut().iter_mut().for_each(|x| *x = 1.0);
+                    }
+                    t
+                }
+            })
+            .collect();
+        let tensors: Vec<&shears::tensor::HostTensor> = owned.iter().collect();
+        let outs = if buffers {
+            let margs: Vec<shears::runtime::Arg> =
+                tensors.iter().map(|t| shears::runtime::Arg::Host(t)).collect();
+            rt.run_args(&exe, &margs)?
+        } else {
+            rt.run(&exe, &tensors)?
+        };
+        println!(
+            "exec smoke OK [{}]: {} outputs, first shape {:?}",
+            entry_name,
+            outs.len(),
+            outs[0].shape
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    println!("shears artifacts @ {}", args.get("artifacts"));
+    for (name, cfg) in &manifest.configs {
+        let base: usize = shears::model::ModelConfig::numel(&cfg.base_params);
+        let adpt: usize = shears::model::ModelConfig::numel(&cfg.adapter_params);
+        println!(
+            "  {name:<14} arch={:<6} d={} L={} params={:.2}M adapters={:.1}K ranks={:?} entries={}",
+            cfg.arch,
+            cfg.d_model,
+            cfg.n_layers,
+            base as f64 / 1e6,
+            adpt as f64 / 1e3,
+            cfg.rank_choices,
+            cfg.entrypoints.len()
+        );
+    }
+    println!("  prune ops: {}", manifest.prune_ops.len());
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get("artifacts"))?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let opts = PipelineOpts {
+        config: args.get("config").to_string(),
+        method: parse_method(args.get("method"))?,
+        sparsity: args.get_f64("sparsity")?,
+        pretrain_steps: args.get_usize("pretrain-steps")?,
+        train_steps: args.get_usize("steps")?,
+        lr: args.get_f64("lr")?,
+        seed: args.get_usize("seed")? as u64,
+        tasks: parse_tasks(args.get("tasks"))?,
+        train_examples: args.get_usize("train-examples")?,
+        eval_examples: args.get_usize("eval-examples")?,
+        calib_batches: 4,
+        hill_climb_budget: args.get_usize("hill-climb")?,
+        search_eval_examples: 32,
+        workdir: Some(args.get("workdir").into()),
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
+    let report = pipeline.run()?;
+    println!("{}", report.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    // zero-shot / w-o-tune evaluation of the (pretrained) base model
+    let rt = Runtime::new(args.get("artifacts"))?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let cfg = manifest.config(args.get("config"))?;
+    let vocab = Vocab::new(cfg.vocab);
+    let opts = PipelineOpts {
+        config: args.get("config").to_string(),
+        pretrain_steps: args.get_usize("pretrain-steps")?,
+        seed: args.get_usize("seed")? as u64,
+        workdir: Some(args.get("workdir").into()),
+        ..Default::default()
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
+    let (base, _) = pipeline.pretrained_base()?;
+    for task in parse_tasks(args.get("tasks"))? {
+        let test = data::dataset(
+            task,
+            &vocab,
+            args.get_usize("seed")? as u64 ^ 0x7E57,
+            args.get_usize("eval-examples")?,
+            cfg.seq_len,
+        );
+        let acc = evaluate(&rt, cfg, "forward_eval_base", &[&base], None, &test, &vocab)?;
+        println!("{:<16} acc={:.3} (chance {:.3})", task.name(), acc, task.chance());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let rt = Runtime::new(args.get("artifacts"))?;
+    let manifest = Manifest::load(args.get("artifacts"))?;
+    let cfg = manifest.config(args.get("config"))?;
+    let opts = PipelineOpts {
+        config: args.get("config").to_string(),
+        pretrain_steps: args.get_usize("pretrain-steps")?,
+        seed: args.get_usize("seed")? as u64,
+        workdir: Some(args.get("workdir").into()),
+        ..Default::default()
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
+    let (base, _) = pipeline.pretrained_base()?;
+    let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None)?;
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(7);
+    let requests: Vec<GenRequest> = (0..args.get_usize("requests")?)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest {
+                prompt: ex.tokens[..ex.answer_start].to_vec(),
+                max_new_tokens: args.get_usize("max-new").unwrap_or(8),
+            }
+        })
+        .collect();
+    let (_responses, metrics) = decoder.serve(&requests)?;
+    println!(
+        "served {} requests: {:.1} tok/s, occupancy {:.1}/{}, p50 {:.1} ms, p99 {:.1} ms",
+        metrics.requests,
+        metrics.tokens_per_sec,
+        metrics.mean_batch_occupancy,
+        cfg.batch_eval,
+        metrics.p50_latency_ms,
+        metrics.p99_latency_ms
+    );
+    Ok(())
+}

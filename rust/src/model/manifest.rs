@@ -1,0 +1,322 @@
+//! `artifacts/manifest.json` schema + loader.
+//!
+//! The manifest is the single source of truth for tensor shapes and the
+//! canonical input/output ordering of every AOT'd entry point. Nothing in
+//! rust hard-codes a parameter list; if the python side changes, only the
+//! manifest (and the artifacts) change.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct EntryPoint {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Prunable {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// calibration-statistics site feeding this weight's score
+    pub site: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub arch: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub max_rank: usize,
+    pub rank_choices: Vec<usize>,
+    pub lora_alpha: f64,
+    pub targets: Vec<String>,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub base_params: Vec<ParamSpec>,
+    pub adapter_params: Vec<ParamSpec>,
+    pub prefix_params: Vec<ParamSpec>,
+    pub series_params: Vec<ParamSpec>,
+    pub parallel_params: Vec<ParamSpec>,
+    pub adapter_modules: Vec<String>,
+    pub prunable: Vec<Prunable>,
+    /// (site name, feature dim)
+    pub sites: Vec<(String, usize)>,
+    pub entrypoints: BTreeMap<String, EntryPoint>,
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneOpSpec {
+    pub file: String,
+    pub kind: String,
+    pub shape: (usize, usize),
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: BTreeMap<String, ModelConfig>,
+    pub prune_ops: BTreeMap<String, PruneOpSpec>,
+}
+
+fn parse_params(j: &Json) -> Result<Vec<ParamSpec>> {
+    j.as_arr()
+        .context("param list")?
+        .iter()
+        .map(|p| {
+            Ok(ParamSpec {
+                name: p.at("name").as_str().context("param name")?.to_string(),
+                shape: p.at("shape").as_shape().context("param shape")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_io(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .context("io list")?
+        .iter()
+        .map(|p| {
+            Ok(IoSpec {
+                name: p.at("name").as_str().context("io name")?.to_string(),
+                shape: p.at("shape").as_shape().context("io shape")?,
+                dtype: p.at("dtype").as_str().context("io dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = artifacts_dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        if j.at("version").as_usize() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.at("configs").as_obj().context("configs")? {
+            configs.insert(name.clone(), Self::parse_config(name, cj)?);
+        }
+        let mut prune_ops = BTreeMap::new();
+        for (name, pj) in j.at("prune_ops").as_obj().context("prune_ops")? {
+            let shape = pj.at("shape").as_shape().context("prune shape")?;
+            prune_ops.insert(
+                name.clone(),
+                PruneOpSpec {
+                    file: pj.at("file").as_str().context("prune file")?.to_string(),
+                    kind: pj.at("kind").as_str().context("prune kind")?.to_string(),
+                    shape: (shape[0], shape[1]),
+                    inputs: parse_io(pj.at("inputs"))?,
+                    outputs: parse_io(pj.at("outputs"))?,
+                },
+            );
+        }
+        Ok(Manifest { configs, prune_ops })
+    }
+
+    fn parse_config(name: &str, cj: &Json) -> Result<ModelConfig> {
+        let us = |k: &str| -> Result<usize> {
+            cj.at(k).as_usize().with_context(|| format!("config field {k}"))
+        };
+        let mut entrypoints = BTreeMap::new();
+        for (en, ej) in cj.at("entrypoints").as_obj().context("entrypoints")? {
+            entrypoints.insert(
+                en.clone(),
+                EntryPoint {
+                    file: ej.at("file").as_str().context("entry file")?.to_string(),
+                    inputs: parse_io(ej.at("inputs"))?,
+                    outputs: parse_io(ej.at("outputs"))?,
+                },
+            );
+        }
+        Ok(ModelConfig {
+            name: name.to_string(),
+            arch: cj.at("arch").as_str().context("arch")?.to_string(),
+            d_model: us("d_model")?,
+            n_layers: us("n_layers")?,
+            n_heads: us("n_heads")?,
+            d_ff: us("d_ff")?,
+            vocab: us("vocab")?,
+            seq_len: us("seq_len")?,
+            max_rank: us("max_rank")?,
+            rank_choices: cj
+                .at("rank_choices")
+                .as_shape()
+                .context("rank_choices")?,
+            lora_alpha: cj.at("lora_alpha").as_f64().context("lora_alpha")?,
+            targets: cj
+                .at("targets")
+                .as_arr()
+                .context("targets")?
+                .iter()
+                .map(|t| t.as_str().unwrap_or_default().to_string())
+                .collect(),
+            batch_train: us("batch_train")?,
+            batch_eval: us("batch_eval")?,
+            base_params: parse_params(cj.at("base_params"))?,
+            adapter_params: parse_params(cj.at("adapter_params"))?,
+            prefix_params: parse_params(cj.at("prefix_params"))?,
+            series_params: parse_params(cj.at("series_params"))?,
+            parallel_params: parse_params(cj.at("parallel_params"))?,
+            adapter_modules: cj
+                .at("adapter_modules")
+                .as_arr()
+                .context("adapter_modules")?
+                .iter()
+                .map(|m| m.as_str().unwrap_or_default().to_string())
+                .collect(),
+            prunable: cj
+                .at("prunable")
+                .as_arr()
+                .context("prunable")?
+                .iter()
+                .map(|p| {
+                    Ok(Prunable {
+                        name: p.at("name").as_str().context("prunable name")?.to_string(),
+                        shape: p.at("shape").as_shape().context("prunable shape")?,
+                        site: p.at("site").as_str().context("prunable site")?.to_string(),
+                    })
+                })
+                .collect::<Result<_>>()?,
+            sites: cj
+                .at("sites")
+                .as_arr()
+                .context("sites")?
+                .iter()
+                .map(|s| {
+                    Ok((
+                        s.at("site").as_str().context("site name")?.to_string(),
+                        s.at("dim").as_usize().context("site dim")?,
+                    ))
+                })
+                .collect::<Result<_>>()?,
+            entrypoints,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("config '{name}' not in manifest"))
+    }
+
+    /// Prune-op lookup by kind + weight shape.
+    pub fn prune_op(&self, kind: &str, n: usize, k: usize) -> Result<&PruneOpSpec> {
+        self.prune_ops
+            .get(&format!("{kind}_{n}x{k}"))
+            .with_context(|| format!("prune op {kind}_{n}x{k} not in manifest"))
+    }
+}
+
+impl ModelConfig {
+    pub fn entry(&self, name: &str) -> Result<&EntryPoint> {
+        self.entrypoints
+            .get(name)
+            .with_context(|| format!("entry point '{name}' not in config {}", self.name))
+    }
+
+    /// Total scalar count of a param group.
+    pub fn numel(specs: &[ParamSpec]) -> usize {
+        specs.iter().map(|p| p.shape.iter().product::<usize>()).sum()
+    }
+
+    /// LoRA scale = alpha / max_rank (matches L2).
+    pub fn lora_scale(&self) -> f32 {
+        (self.lora_alpha / self.max_rank as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "version": 1,
+      "configs": {
+        "t": {
+          "arch": "llama", "d_model": 8, "n_layers": 1, "n_heads": 2,
+          "d_ff": 16, "vocab": 32, "seq_len": 4, "max_rank": 4,
+          "rank_choices": [4, 2], "lora_alpha": 8.0,
+          "targets": ["q"], "batch_train": 2, "batch_eval": 2,
+          "base_params": [{"name": "embed", "shape": [32, 8]}],
+          "adapter_params": [{"name": "lora_a.layers.0.attn.q", "shape": [4, 8]}],
+          "prefix_params": [], "series_params": [], "parallel_params": [],
+          "adapter_modules": ["layers.0.attn.q"],
+          "prunable": [{"name": "layers.0.attn.q", "shape": [8, 8], "site": "0.attn_in"}],
+          "sites": [{"site": "0.attn_in", "dim": 8}],
+          "entrypoints": {
+            "forward_eval": {
+              "file": "t__forward_eval.hlo.txt",
+              "inputs": [{"name": "x", "shape": [2, 4], "dtype": "i32"}],
+              "outputs": [{"name": "logits", "shape": [2, 4, 32], "dtype": "f32"}]
+            }
+          }
+        }
+      },
+      "prune_ops": {
+        "wanda_8x8": {
+          "file": "prune__wanda_8x8.hlo.txt", "kind": "wanda", "shape": [8, 8],
+          "inputs": [{"name": "w", "shape": [8, 8], "dtype": "f32"}],
+          "outputs": [{"name": "w_pruned", "shape": [8, 8], "dtype": "f32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(MINI).unwrap();
+        let c = m.config("t").unwrap();
+        assert_eq!(c.d_model, 8);
+        assert_eq!(c.rank_choices, vec![4, 2]);
+        assert_eq!(c.adapter_modules, vec!["layers.0.attn.q"]);
+        assert_eq!(c.prunable[0].site, "0.attn_in");
+        let e = c.entry("forward_eval").unwrap();
+        assert_eq!(e.inputs[0].dtype, "i32");
+        assert_eq!(e.outputs[0].shape, vec![2, 4, 32]);
+        let p = m.prune_op("wanda", 8, 8).unwrap();
+        assert_eq!(p.shape, (8, 8));
+        assert!((c.lora_scale() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let m = Manifest::parse(MINI).unwrap();
+        assert!(m.config("nope").is_err());
+        assert!(m.prune_op("wanda", 9, 9).is_err());
+        assert!(m.config("t").unwrap().entry("nope").is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        assert!(Manifest::parse(r#"{"version": 2, "configs": {}, "prune_ops": {}}"#).is_err());
+    }
+}

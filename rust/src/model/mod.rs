@@ -1,0 +1,12 @@
+//! Model metadata and parameter state.
+//!
+//! [`manifest`] parses `artifacts/manifest.json` — the L2↔L3 ABI emitted
+//! by `python/compile/aot.py` (parameter orderings, entry-point
+//! signatures, prune-op shapes). [`params`] owns the host-side parameter
+//! state (`ParamStore`): init, checkpointing, counting.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{EntryPoint, IoSpec, Manifest, ModelConfig, ParamSpec, PruneOpSpec, Prunable};
+pub use params::ParamStore;

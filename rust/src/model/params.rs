@@ -1,0 +1,312 @@
+//! `ParamStore`: host-side parameter state for one model config.
+//!
+//! Holds named `HostTensor`s and serves them *in manifest order* to the
+//! runtime. Initialization mirrors the L2 conventions: norm gains 1,
+//! biases 0, weights N(0, 0.05); LoRA A N(0, 0.02), LoRA B zeros (the
+//! paper's §2.2 init — adapters start transparent).
+
+use crate::model::manifest::{ModelConfig, ParamSpec};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufReader, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    map: BTreeMap<String, HostTensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: HostTensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.map.get(name).with_context(|| format!("param '{name}' missing"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        self.map
+            .get_mut(name)
+            .with_context(|| format!("param '{name}' missing"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    /// Tensors in the order of `specs` (the manifest ABI order).
+    pub fn ordered<'a>(&'a self, specs: &[ParamSpec]) -> Result<Vec<&'a HostTensor>> {
+        specs.iter().map(|s| self.get(&s.name)).collect()
+    }
+
+    /// Replace tensors following `specs` order from an output slice.
+    pub fn update_from(&mut self, specs: &[ParamSpec], outs: &[HostTensor]) -> Result<()> {
+        if outs.len() < specs.len() {
+            bail!("update_from: {} outputs < {} specs", outs.len(), specs.len());
+        }
+        for (s, t) in specs.iter().zip(outs) {
+            if t.shape != s.shape {
+                bail!("shape mismatch for {}: {:?} vs {:?}", s.name, t.shape, s.shape);
+            }
+            self.map.insert(s.name.clone(), t.clone());
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------- init
+
+    /// Base-model init (pre-pretraining): norm gains 1, biases 0,
+    /// everything else N(0, std).
+    pub fn init_base(cfg: &ModelConfig, rng: &mut Rng, std: f32) -> Self {
+        let mut s = Self::new();
+        for p in &cfg.base_params {
+            let t = if p.name.ends_with(".g") {
+                HostTensor::ones(&p.shape)
+            } else if p.name.ends_with(".b") {
+                HostTensor::zeros(&p.shape)
+            } else {
+                let mut t = HostTensor::zeros(&p.shape);
+                rng.fill_normal(t.f32s_mut(), 0.0, std);
+                t
+            };
+            s.insert(&p.name, t);
+        }
+        s
+    }
+
+    /// Elastic LoRA super-adapter init (paper §2.2): A gaussian, B zero.
+    pub fn init_adapters(cfg: &ModelConfig, rng: &mut Rng) -> Self {
+        let mut s = Self::new();
+        for p in &cfg.adapter_params {
+            let t = if p.name.starts_with("lora_a.") {
+                let mut t = HostTensor::zeros(&p.shape);
+                rng.fill_normal(t.f32s_mut(), 0.0, 0.02);
+                t
+            } else {
+                HostTensor::zeros(&p.shape)
+            };
+            s.insert(&p.name, t);
+        }
+        s
+    }
+
+    /// Baseline-adapter init (prefix / series / parallel param groups).
+    pub fn init_extra(specs: &[ParamSpec], rng: &mut Rng) -> Self {
+        let mut s = Self::new();
+        for p in specs {
+            // "up" projections start at zero so baselines also begin
+            // transparent (matches LoRA's B=0 convention).
+            let t = if p.name.contains("up") {
+                HostTensor::zeros(&p.shape)
+            } else {
+                let mut t = HostTensor::zeros(&p.shape);
+                rng.fill_normal(t.f32s_mut(), 0.0, 0.02);
+                t
+            };
+            s.insert(&p.name, t);
+        }
+        s
+    }
+
+    /// Zeroed optimizer state aligned with `specs`.
+    pub fn zeros_like(specs: &[ParamSpec]) -> Self {
+        let mut s = Self::new();
+        for p in specs {
+            s.insert(&p.name, HostTensor::zeros(&p.shape));
+        }
+        s
+    }
+
+    // --------------------------------------------------------- counting
+
+    /// Total parameters in the store.
+    pub fn numel(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Non-zero parameters (paper Table 3's headline metric).
+    pub fn nonzero(&self) -> usize {
+        self.map.values().map(|t| t.numel() - t.zeros_count()).sum()
+    }
+
+    /// Overall sparsity across a named subset (e.g. the prunable weights).
+    pub fn sparsity_of(&self, names: &[String]) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for n in names {
+            if let Some(t) = self.map.get(n) {
+                zeros += t.zeros_count();
+                total += t.numel();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+
+    // ------------------------------------------------------- checkpoints
+
+    /// Binary checkpoint: [count u64] then (name, tensor) records.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("create {}", path.as_ref().display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(b"SHRS")?;
+        w.write_all(&(self.map.len() as u64).to_le_bytes())?;
+        for (name, t) in &self.map {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            t.write_to(&mut w)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {}", path.as_ref().display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        std::io::Read::read_exact(&mut r, &mut magic)?;
+        if &magic != b"SHRS" {
+            bail!("not a shears checkpoint");
+        }
+        let mut b8 = [0u8; 8];
+        std::io::Read::read_exact(&mut r, &mut b8)?;
+        let count = u64::from_le_bytes(b8) as usize;
+        let mut s = Self::new();
+        for _ in 0..count {
+            let mut b4 = [0u8; 4];
+            std::io::Read::read_exact(&mut r, &mut b4)?;
+            let nlen = u32::from_le_bytes(b4) as usize;
+            if nlen > 4096 {
+                bail!("corrupt checkpoint: name length {nlen}");
+            }
+            let mut nb = vec![0u8; nlen];
+            std::io::Read::read_exact(&mut r, &mut nb)?;
+            let name = String::from_utf8(nb).context("param name utf8")?;
+            s.map.insert(name, HostTensor::read_from(&mut r)?);
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::Manifest;
+
+    fn mini_config() -> ModelConfig {
+        // reuse the manifest-test fixture through the public parser
+        let m = Manifest::parse(
+            r#"{
+          "version": 1,
+          "configs": {
+            "t": {
+              "arch": "llama", "d_model": 8, "n_layers": 1, "n_heads": 2,
+              "d_ff": 16, "vocab": 32, "seq_len": 4, "max_rank": 4,
+              "rank_choices": [4, 2], "lora_alpha": 8.0,
+              "targets": ["q"], "batch_train": 2, "batch_eval": 2,
+              "base_params": [
+                 {"name": "embed", "shape": [32, 8]},
+                 {"name": "layers.0.attn_norm.g", "shape": [8]},
+                 {"name": "layers.0.attn.q", "shape": [8, 8]}
+              ],
+              "adapter_params": [
+                 {"name": "lora_a.layers.0.attn.q", "shape": [4, 8]},
+                 {"name": "lora_b.layers.0.attn.q", "shape": [8, 4]}
+              ],
+              "prefix_params": [], "series_params": [], "parallel_params": [],
+              "adapter_modules": ["layers.0.attn.q"],
+              "prunable": [{"name": "layers.0.attn.q", "shape": [8, 8], "site": "0.attn_in"}],
+              "sites": [{"site": "0.attn_in", "dim": 8}],
+              "entrypoints": {}
+            }
+          },
+          "prune_ops": {}
+        }"#,
+        )
+        .unwrap();
+        m.config("t").unwrap().clone()
+    }
+
+    #[test]
+    fn init_conventions() {
+        let cfg = mini_config();
+        let mut rng = Rng::new(0);
+        let base = ParamStore::init_base(&cfg, &mut rng, 0.05);
+        assert!(base.get("layers.0.attn_norm.g").unwrap().f32s().iter().all(|x| *x == 1.0));
+        assert!(base.get("embed").unwrap().f32s().iter().any(|x| *x != 0.0));
+
+        let ad = ParamStore::init_adapters(&cfg, &mut rng);
+        assert!(ad.get("lora_b.layers.0.attn.q").unwrap().f32s().iter().all(|x| *x == 0.0));
+        assert!(ad.get("lora_a.layers.0.attn.q").unwrap().f32s().iter().any(|x| *x != 0.0));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let cfg = mini_config();
+        let a = ParamStore::init_base(&cfg, &mut Rng::new(7), 0.05);
+        let b = ParamStore::init_base(&cfg, &mut Rng::new(7), 0.05);
+        assert_eq!(a.get("embed").unwrap(), b.get("embed").unwrap());
+    }
+
+    #[test]
+    fn ordered_respects_specs() {
+        let cfg = mini_config();
+        let base = ParamStore::init_base(&cfg, &mut Rng::new(0), 0.05);
+        let v = base.ordered(&cfg.base_params).unwrap();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v[0].shape, vec![32, 8]); // embed first per manifest
+    }
+
+    #[test]
+    fn update_from_checks_shapes() {
+        let cfg = mini_config();
+        let mut base = ParamStore::init_base(&cfg, &mut Rng::new(0), 0.05);
+        let bad = vec![HostTensor::zeros(&[1, 1])];
+        assert!(base.update_from(&cfg.base_params[..1], &bad).is_err());
+        let good = vec![HostTensor::ones(&[32, 8])];
+        base.update_from(&cfg.base_params[..1], &good).unwrap();
+        assert_eq!(base.get("embed").unwrap().f32s()[0], 1.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let cfg = mini_config();
+        let base = ParamStore::init_base(&cfg, &mut Rng::new(3), 0.05);
+        let dir = std::env::temp_dir().join("shears_test_ckpt");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("params.bin");
+        base.save(&path).unwrap();
+        let re = ParamStore::load(&path).unwrap();
+        assert_eq!(re.len(), base.len());
+        assert_eq!(re.get("embed").unwrap(), base.get("embed").unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn nonzero_counting() {
+        let mut s = ParamStore::new();
+        s.insert("w", HostTensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 2.0]));
+        assert_eq!(s.numel(), 4);
+        assert_eq!(s.nonzero(), 2);
+        assert_eq!(s.sparsity_of(&["w".to_string()]), 0.5);
+    }
+}

@@ -1,0 +1,230 @@
+//! Neural Low-rank adapter Search (NLS) — the paper's §3.2/§3.3 machinery.
+//!
+//! The search space is the cross product of per-module elastic rank
+//! choices (paper: `[32, 24, 16]` per adapter; scaled here per manifest).
+//! Weight sharing is implemented with *rank masks*: the super-adapter
+//! always holds `max_rank` columns and a `{0,1}` mask input activates a
+//! prefix slice, so one AOT-compiled executable serves every sub-adapter
+//! (DESIGN.md "rank masks"). During super-adapter training the L3 sampler
+//! draws a random configuration per step — the weight-sharing NAS loop.
+
+use crate::model::ModelConfig;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+/// A sub-adapter configuration: one rank per adapter module.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SubAdapterConfig {
+    pub ranks: Vec<usize>,
+}
+
+impl SubAdapterConfig {
+    /// Total active adapter parameters under this configuration, given the
+    /// per-module (in, out) dims. Rank r costs r*(in + out).
+    pub fn active_params(&self, dims: &[(usize, usize)]) -> usize {
+        self.ranks
+            .iter()
+            .zip(dims)
+            .map(|(r, (i, o))| r * (i + o))
+            .sum()
+    }
+}
+
+/// The elastic search space over adapter ranks.
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    /// rank choices per module, descending (e.g. [8, 6, 4])
+    pub choices: Vec<usize>,
+    pub n_modules: usize,
+    pub max_rank: usize,
+    /// per-module (in, out) dims for param accounting
+    pub dims: Vec<(usize, usize)>,
+}
+
+impl SearchSpace {
+    pub fn from_config(cfg: &ModelConfig) -> SearchSpace {
+        let mut choices = cfg.rank_choices.clone();
+        choices.sort_unstable_by(|a, b| b.cmp(a)); // descending
+        let dims = cfg
+            .adapter_params
+            .chunks(2)
+            .map(|ab| {
+                // [lora_a [R, in], lora_b [out, R]]
+                (ab[0].shape[1], ab[1].shape[0])
+            })
+            .collect();
+        SearchSpace {
+            choices,
+            n_modules: cfg.adapter_modules.len(),
+            max_rank: cfg.max_rank,
+            dims,
+        }
+    }
+
+    /// Number of distinct sub-adapters.
+    pub fn config_count(&self) -> f64 {
+        (self.choices.len() as f64).powi(self.n_modules as i32)
+    }
+
+    /// Maximal sub-adapter == vanilla LoRA of rank `max_rank`.
+    pub fn maximal(&self) -> SubAdapterConfig {
+        SubAdapterConfig { ranks: vec![self.choices[0]; self.n_modules] }
+    }
+
+    pub fn minimal(&self) -> SubAdapterConfig {
+        SubAdapterConfig {
+            ranks: vec![*self.choices.last().unwrap(); self.n_modules],
+        }
+    }
+
+    /// Paper Eq. 3: the heuristic sub-adapter takes choice index
+    /// `c = floor(n/2)` at every module — the center of the space, found
+    /// in O(1).
+    pub fn heuristic(&self) -> SubAdapterConfig {
+        let c = self.choices.len() / 2;
+        SubAdapterConfig { ranks: vec![self.choices[c]; self.n_modules] }
+    }
+
+    /// Uniform random sub-adapter (the NLS training sampler).
+    pub fn sample(&self, rng: &mut Rng) -> SubAdapterConfig {
+        SubAdapterConfig {
+            ranks: (0..self.n_modules)
+                .map(|_| *rng.choice(&self.choices))
+                .collect(),
+        }
+    }
+
+    /// All single-module one-step moves (hill-climbing neighborhood):
+    /// each module's rank moved one choice up or down.
+    pub fn neighbors(&self, cfg: &SubAdapterConfig) -> Vec<SubAdapterConfig> {
+        let mut out = Vec::new();
+        for m in 0..self.n_modules {
+            let ci = self
+                .choices
+                .iter()
+                .position(|c| *c == cfg.ranks[m])
+                .expect("rank not in choice set");
+            for nc in [ci.wrapping_sub(1), ci + 1] {
+                if nc < self.choices.len() && nc != ci {
+                    let mut ranks = cfg.ranks.clone();
+                    ranks[m] = self.choices[nc];
+                    out.push(SubAdapterConfig { ranks });
+                }
+            }
+        }
+        out
+    }
+
+    /// Validate a configuration against the space.
+    pub fn contains(&self, cfg: &SubAdapterConfig) -> bool {
+        cfg.ranks.len() == self.n_modules
+            && cfg.ranks.iter().all(|r| self.choices.contains(r))
+    }
+
+    /// Materialize the `[n_modules, max_rank]` rank-mask input for a
+    /// configuration (prefix-slice weight sharing).
+    pub fn rank_mask(&self, cfg: &SubAdapterConfig) -> HostTensor {
+        assert!(self.contains(cfg), "config not in space: {cfg:?}");
+        let mut data = vec![0.0f32; self.n_modules * self.max_rank];
+        for (m, r) in cfg.ranks.iter().enumerate() {
+            for j in 0..*r {
+                data[m * self.max_rank + j] = 1.0;
+            }
+        }
+        HostTensor::from_f32(&[self.n_modules, self.max_rank], data)
+    }
+
+    /// Mask with every rank fully active (vanilla-LoRA baseline path).
+    pub fn full_mask(&self) -> HostTensor {
+        HostTensor::ones(&[self.n_modules, self.max_rank])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn space() -> SearchSpace {
+        SearchSpace {
+            choices: vec![8, 6, 4],
+            n_modules: 5,
+            max_rank: 8,
+            dims: vec![(48, 48); 5],
+        }
+    }
+
+    #[test]
+    fn canonical_configs() {
+        let s = space();
+        assert_eq!(s.maximal().ranks, vec![8; 5]);
+        assert_eq!(s.minimal().ranks, vec![4; 5]);
+        // Eq. 3: n=3 choices -> c=1 -> middle rank
+        assert_eq!(s.heuristic().ranks, vec![6; 5]);
+        assert_eq!(s.config_count(), 243.0);
+    }
+
+    #[test]
+    fn rank_mask_is_prefix() {
+        let s = space();
+        let cfg = SubAdapterConfig { ranks: vec![8, 6, 4, 6, 8] };
+        let m = s.rank_mask(&cfg);
+        assert_eq!(m.shape, vec![5, 8]);
+        let d = m.f32s();
+        // module 2 has rank 4: first 4 on, rest off
+        assert_eq!(&d[16..24], &[1., 1., 1., 1., 0., 0., 0., 0.]);
+        // row sums equal ranks
+        for (i, r) in cfg.ranks.iter().enumerate() {
+            let sum: f32 = d[i * 8..(i + 1) * 8].iter().sum();
+            assert_eq!(sum as usize, *r);
+        }
+    }
+
+    #[test]
+    fn sampler_stays_in_space_and_varies() {
+        let s = space();
+        let mut rng = Rng::new(0);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let c = s.sample(&mut rng);
+            assert!(s.contains(&c));
+            distinct.insert(c);
+        }
+        assert!(distinct.len() > 20);
+    }
+
+    #[test]
+    fn neighbors_differ_in_exactly_one_module() {
+        check("neighbors one-step", 50, |g| {
+            let s = space();
+            let mut rng = Rng::new(g.usize_in(0..10_000) as u64);
+            let c = s.sample(&mut rng);
+            for n in s.neighbors(&c) {
+                assert!(s.contains(&n));
+                let diff = c
+                    .ranks
+                    .iter()
+                    .zip(&n.ranks)
+                    .filter(|(a, b)| a != b)
+                    .count();
+                assert_eq!(diff, 1);
+            }
+        });
+    }
+
+    #[test]
+    fn active_params_monotone_in_rank() {
+        let s = space();
+        let dims = &s.dims;
+        assert!(s.maximal().active_params(dims) > s.heuristic().active_params(dims));
+        assert!(s.heuristic().active_params(dims) > s.minimal().active_params(dims));
+        assert_eq!(s.minimal().active_params(dims), 5 * 4 * 96);
+    }
+
+    #[test]
+    #[should_panic(expected = "config not in space")]
+    fn foreign_config_rejected() {
+        let s = space();
+        s.rank_mask(&SubAdapterConfig { ranks: vec![5; 5] });
+    }
+}

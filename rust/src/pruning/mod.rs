@@ -1,0 +1,209 @@
+//! Unstructured sparsification drivers (paper §3.1, step 1 of Figure 1).
+//!
+//! Calibration: [`collect_stats`] streams a handful of batches through the
+//! `calib_stats` entry point and accumulates per-site activation Σx² (for
+//! Wanda's ‖X‖₂) and Gram matrices H = XᵀX (for SparseGPT) — the exact
+//! "tiny subset of inputs, forward pass only" cost profile the paper
+//! emphasizes (<5 min for 7B on one GPU; seconds here).
+//!
+//! Pruning: [`prune`] streams every prunable weight through the AOT'd
+//! per-shape prune op (Wanda runs the L1 Pallas kernel), replaces the
+//! weight in the store, and returns the {0,1} masks. Masks feed the
+//! SparseFT baseline (`train_step_full` re-applies them each step) and the
+//! sparsity accounting of Table 3.
+
+use crate::data::batch::Batch;
+use crate::model::{Manifest, ModelConfig, ParamStore};
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Accumulated calibration statistics keyed by site name.
+#[derive(Debug, Default)]
+pub struct CalibStats {
+    pub sumsq: HashMap<String, HostTensor>,
+    pub gram: HashMap<String, HostTensor>,
+    pub batches: usize,
+}
+
+/// Pruning method (the paper's main metric + the two alternatives it cites).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Wanda,
+    Magnitude,
+    SparseGpt,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Wanda => "wanda",
+            Method::Magnitude => "magnitude",
+            Method::SparseGpt => "sparsegpt",
+        }
+    }
+
+    pub fn needs_stats(&self) -> bool {
+        !matches!(self, Method::Magnitude)
+    }
+}
+
+/// Run `calib_stats` over calibration batches, accumulating per-site stats.
+pub fn collect_stats(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    base: &ParamStore,
+    batches: &[Batch],
+) -> Result<CalibStats> {
+    let entry = cfg.entry("calib_stats")?;
+    let exe = rt.load(&entry.file)?;
+    let mut stats = CalibStats::default();
+    for batch in batches {
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(entry.inputs.len());
+        for i in &entry.inputs {
+            args.push(match i.name.as_str() {
+                "x" => &batch.x,
+                name => base.get(name)?,
+            });
+        }
+        let outs = rt.run(&exe, &args)?;
+        for (spec, t) in entry.outputs.iter().zip(outs) {
+            if let Some(site) = spec.name.strip_prefix("sumsq.") {
+                accumulate(stats.sumsq.entry(site.to_string()).or_insert_with(|| {
+                    HostTensor::zeros(&t.shape)
+                }), &t);
+            } else if let Some(site) = spec.name.strip_prefix("gram.") {
+                accumulate(stats.gram.entry(site.to_string()).or_insert_with(|| {
+                    HostTensor::zeros(&t.shape)
+                }), &t);
+            } else {
+                bail!("unexpected calib output {}", spec.name);
+            }
+        }
+        stats.batches += 1;
+    }
+    Ok(stats)
+}
+
+fn accumulate(acc: &mut HostTensor, t: &HostTensor) {
+    let dst = acc.f32s_mut();
+    for (d, s) in dst.iter_mut().zip(t.f32s()) {
+        *d += *s;
+    }
+}
+
+/// Sparsify every prunable weight of `base` in place to `sparsity`
+/// (fraction of zeros). Returns the per-weight {0,1} masks (keyed by the
+/// weight name, as `train_step_full` expects).
+pub fn prune(
+    rt: &Runtime,
+    manifest: &Manifest,
+    cfg: &ModelConfig,
+    base: &mut ParamStore,
+    method: Method,
+    sparsity: f64,
+    stats: Option<&CalibStats>,
+) -> Result<ParamStore> {
+    if !(0.0..1.0).contains(&sparsity) {
+        bail!("sparsity must be in [0, 1): {sparsity}");
+    }
+    let keep = HostTensor::scalar_f32((1.0 - sparsity) as f32);
+    let mut masks = ParamStore::new();
+    if sparsity == 0.0 {
+        // no-op prune: all-ones masks (lets every pipeline stage stay uniform)
+        for p in &cfg.prunable {
+            masks.insert(&p.name, HostTensor::ones(&p.shape));
+        }
+        return Ok(masks);
+    }
+    if method.needs_stats() && stats.is_none() {
+        bail!("{} needs calibration stats", method.name());
+    }
+    let timer = crate::util::log::Timer::new(&format!("prune {}", method.name()));
+    for p in &cfg.prunable {
+        let (n, k) = (p.shape[0], p.shape[1]);
+        let op = manifest.prune_op(method.name(), n, k)?;
+        let exe = rt.load(&op.file)?;
+        let w = base.get(&p.name)?;
+        let outs = match method {
+            Method::Wanda => {
+                let s = stats.unwrap();
+                let sumsq = s
+                    .sumsq
+                    .get(&p.site)
+                    .with_context(|| format!("no sumsq stats for site {}", p.site))?;
+                rt.run(&exe, &[w, sumsq, &keep])?
+            }
+            Method::Magnitude => rt.run(&exe, &[w, &keep])?,
+            Method::SparseGpt => {
+                let s = stats.unwrap();
+                let gram = s
+                    .gram
+                    .get(&p.site)
+                    .with_context(|| format!("no gram stats for site {}", p.site))?;
+                rt.run(&exe, &[w, gram, &keep])?
+            }
+        };
+        if outs.len() != 2 {
+            bail!("prune op returned {} outputs", outs.len());
+        }
+        let mut it = outs.into_iter();
+        base.insert(&p.name, it.next().unwrap());
+        masks.insert(&p.name, it.next().unwrap());
+    }
+    timer.stop();
+    Ok(masks)
+}
+
+/// Per-weight and overall sparsity over the prunable set (Table 3 metric).
+pub fn sparsity_report(base: &ParamStore, cfg: &ModelConfig) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let (mut zeros, mut total) = (0usize, 0usize);
+    for p in &cfg.prunable {
+        if let Ok(t) = base.get(&p.name) {
+            out.push((p.name.clone(), t.sparsity()));
+            zeros += t.zeros_count();
+            total += t.numel();
+        }
+    }
+    out.push(("OVERALL".to_string(), zeros as f64 / total.max(1) as f64));
+    out
+}
+
+/// Non-zero parameter count across base + active adapter params
+/// (paper Table 3: Shears keeps adapters unmerged, so both count).
+pub fn nonzero_params(base: &ParamStore, adapters: Option<&ParamStore>) -> usize {
+    base.nonzero() + adapters.map(|a| a.nonzero()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_properties() {
+        assert!(Method::Wanda.needs_stats());
+        assert!(Method::SparseGpt.needs_stats());
+        assert!(!Method::Magnitude.needs_stats());
+        assert_eq!(Method::Wanda.name(), "wanda");
+    }
+
+    #[test]
+    fn accumulate_adds_elementwise() {
+        let mut acc = HostTensor::zeros(&[3]);
+        accumulate(&mut acc, &HostTensor::from_f32(&[3], vec![1., 2., 3.]));
+        accumulate(&mut acc, &HostTensor::from_f32(&[3], vec![0.5, 0.5, 0.5]));
+        assert_eq!(acc.f32s(), &[1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    fn nonzero_counts_both_stores() {
+        let mut base = ParamStore::new();
+        base.insert("w", HostTensor::from_f32(&[4], vec![1., 0., 2., 0.]));
+        let mut ad = ParamStore::new();
+        ad.insert("a", HostTensor::from_f32(&[2], vec![0., 3.]));
+        assert_eq!(nonzero_params(&base, None), 2);
+        assert_eq!(nonzero_params(&base, Some(&ad)), 3);
+    }
+}

@@ -1,0 +1,469 @@
+//! Sub-adapter search (paper §3.3 and Table 6).
+//!
+//! Strategies over the NLS space, cheapest first — the exact menu the
+//! paper describes:
+//! 1. O(1) **heuristic** ([`crate::nls::SearchSpace::heuristic`], Eq. 3),
+//! 2. **hill-climbing** from the heuristic ([`hill_climb`]),
+//! 3. evolutionary **NSGA-II** ([`nsga2`]) and its reference-point variant
+//!    **RNSGA-II** ([`rnsga2`]) as the expensive comparison points.
+//!
+//! Search cost is dominated by sub-adapter evaluations (each is a full
+//! validation pass through the PJRT executable), so every strategy runs
+//! through a memoizing [`CachedEvaluator`] and reports how many unique
+//! evaluations it spent.
+
+use crate::nls::{SearchSpace, SubAdapterConfig};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Anything that can score a sub-adapter (higher = better accuracy).
+pub trait Evaluator {
+    fn eval(&mut self, cfg: &SubAdapterConfig) -> f64;
+}
+
+impl<F: FnMut(&SubAdapterConfig) -> f64> Evaluator for F {
+    fn eval(&mut self, cfg: &SubAdapterConfig) -> f64 {
+        self(cfg)
+    }
+}
+
+/// Memoizes evaluations (validation passes are expensive) and counts them.
+pub struct CachedEvaluator<E: Evaluator> {
+    inner: E,
+    cache: HashMap<Vec<usize>, f64>,
+    pub evals: usize,
+}
+
+impl<E: Evaluator> CachedEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        CachedEvaluator { inner, cache: HashMap::new(), evals: 0 }
+    }
+}
+
+impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
+    fn eval(&mut self, cfg: &SubAdapterConfig) -> f64 {
+        if let Some(v) = self.cache.get(&cfg.ranks) {
+            return *v;
+        }
+        self.evals += 1;
+        let v = self.inner.eval(cfg);
+        self.cache.insert(cfg.ranks.clone(), v);
+        v
+    }
+}
+
+/// Search outcome: best config, its score, and evaluation spend.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub config: SubAdapterConfig,
+    pub score: f64,
+    pub evals: usize,
+}
+
+// ---------------------------------------------------------- hill climbing
+
+/// Greedy first-improvement hill climbing from `start` (paper §3.3: "a
+/// well-designed hill-climbing algorithm … initiated from the sub-adapter
+/// configuration found with the heuristic"). Stops at a local optimum or
+/// after `budget` unique evaluations.
+pub fn hill_climb<E: Evaluator>(
+    space: &SearchSpace,
+    start: SubAdapterConfig,
+    ev: &mut CachedEvaluator<E>,
+    budget: usize,
+) -> SearchResult {
+    let mut cur = start;
+    let mut cur_score = ev.eval(&cur);
+    loop {
+        let mut improved = false;
+        for n in space.neighbors(&cur) {
+            if ev.evals >= budget {
+                return SearchResult { config: cur, score: cur_score, evals: ev.evals };
+            }
+            let s = ev.eval(&n);
+            if s > cur_score {
+                cur = n;
+                cur_score = s;
+                improved = true;
+                break; // first improvement: cheap restarts of the scan
+            }
+        }
+        if !improved {
+            return SearchResult { config: cur, score: cur_score, evals: ev.evals };
+        }
+    }
+}
+
+// ------------------------------------------------------------- NSGA-II
+
+/// One individual: genes are choice indices, objectives are minimized.
+#[derive(Clone, Debug)]
+struct Ind {
+    genes: Vec<usize>,
+    obj: Vec<f64>,
+}
+
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    a.iter().zip(b).all(|(x, y)| x <= y) && a.iter().zip(b).any(|(x, y)| x < y)
+}
+
+/// Fast non-dominated sort (Deb et al. 2002): returns fronts of indices.
+pub fn non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<usize> = vec![0; n];
+    let mut dominates_list: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && dominates(&objs[i], &objs[j]) {
+                dominates_list[i].push(j);
+            } else if i != j && dominates(&objs[j], &objs[i]) {
+                dominated_by[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|i| dominated_by[*i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominates_list[i] {
+                dominated_by[j] -= 1;
+                if dominated_by[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance within one front (Deb et al. 2002).
+pub fn crowding_distance(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let m = objs.first().map(|o| o.len()).unwrap_or(0);
+    let mut dist = vec![0.0f64; front.len()];
+    for k in 0..m {
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][k]
+                .partial_cmp(&objs[front[b]][k])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let lo = objs[front[order[0]]][k];
+        let hi = objs[front[*order.last().unwrap()]][k];
+        dist[order[0]] = f64::INFINITY;
+        dist[*order.last().unwrap()] = f64::INFINITY;
+        if (hi - lo).abs() < 1e-12 {
+            continue;
+        }
+        for w in 1..order.len().saturating_sub(1) {
+            dist[order[w]] +=
+                (objs[front[order[w + 1]]][k] - objs[front[order[w - 1]]][k]) / (hi - lo);
+        }
+    }
+    dist
+}
+
+fn objectives<E: Evaluator>(
+    space: &SearchSpace,
+    genes: &[usize],
+    ev: &mut CachedEvaluator<E>,
+) -> (SubAdapterConfig, Vec<f64>) {
+    let cfg = SubAdapterConfig {
+        ranks: genes.iter().map(|g| space.choices[*g]).collect(),
+    };
+    let acc = ev.eval(&cfg);
+    let params = cfg.active_params(&space.dims) as f64
+        / space.maximal().active_params(&space.dims) as f64;
+    // minimize (-accuracy, normalized params)
+    (cfg, vec![-acc, params])
+}
+
+struct Evolution<'a, E: Evaluator> {
+    space: &'a SearchSpace,
+    ev: &'a mut CachedEvaluator<E>,
+    rng: Rng,
+    pop_size: usize,
+}
+
+impl<'a, E: Evaluator> Evolution<'a, E> {
+    fn random_genes(&mut self) -> Vec<usize> {
+        (0..self.space.n_modules)
+            .map(|_| self.rng.below(self.space.choices.len()))
+            .collect()
+    }
+
+    fn offspring(&mut self, a: &[usize], b: &[usize]) -> Vec<usize> {
+        let mut child: Vec<usize> = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| if self.rng.bool(0.5) { *x } else { *y })
+            .collect();
+        for g in child.iter_mut() {
+            if self.rng.bool(1.0 / self.space.n_modules.max(1) as f64) {
+                *g = self.rng.below(self.space.choices.len());
+            }
+        }
+        child
+    }
+
+    /// Run generations with a pluggable survivor-ranking function.
+    fn run<R>(&mut self, generations: usize, budget: usize, rank: R) -> Vec<Ind>
+    where
+        R: Fn(&[Vec<f64>]) -> Vec<usize>, // returns survivor indices, best-first
+    {
+        let mut pop: Vec<Ind> = (0..self.pop_size)
+            .map(|_| {
+                let genes = self.random_genes();
+                let (_, obj) = objectives(self.space, &genes, self.ev);
+                Ind { genes, obj }
+            })
+            .collect();
+        for _ in 0..generations {
+            if self.ev.evals >= budget {
+                break;
+            }
+            // variation: binary-tournament parents by rank-0 position
+            let mut children = Vec::with_capacity(self.pop_size);
+            for _ in 0..self.pop_size {
+                let pa = &pop[self.rng.below(pop.len())];
+                let pb = &pop[self.rng.below(pop.len())];
+                let parent_a =
+                    if dominates(&pa.obj, &pb.obj) { pa.genes.clone() } else { pb.genes.clone() };
+                let pc = &pop[self.rng.below(pop.len())];
+                let child_genes = self.offspring(&parent_a, &pc.genes);
+                let (_, obj) = objectives(self.space, &child_genes, self.ev);
+                children.push(Ind { genes: child_genes, obj });
+                if self.ev.evals >= budget {
+                    break;
+                }
+            }
+            pop.extend(children);
+            let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.obj.clone()).collect();
+            let order = rank(&objs);
+            pop = order.into_iter().take(self.pop_size).map(|i| pop[i].clone()).collect();
+        }
+        pop
+    }
+}
+
+fn nsga2_rank(objs: &[Vec<f64>]) -> Vec<usize> {
+    let fronts = non_dominated_sort(objs);
+    let mut order = Vec::with_capacity(objs.len());
+    for front in fronts {
+        let cd = crowding_distance(objs, &front);
+        let mut idx: Vec<usize> = (0..front.len()).collect();
+        idx.sort_by(|&a, &b| cd[b].partial_cmp(&cd[a]).unwrap_or(std::cmp::Ordering::Equal));
+        order.extend(idx.into_iter().map(|i| front[i]));
+    }
+    order
+}
+
+/// NSGA-II over (accuracy, adapter params). Returns the accuracy-best
+/// config on the first front.
+pub fn nsga2<E: Evaluator>(
+    space: &SearchSpace,
+    ev: &mut CachedEvaluator<E>,
+    seed: u64,
+    pop_size: usize,
+    generations: usize,
+    budget: usize,
+) -> SearchResult {
+    let mut evo = Evolution { space, ev, rng: Rng::new(seed), pop_size };
+    let pop = evo.run(generations, budget, nsga2_rank);
+    best_by_accuracy(space, pop, ev)
+}
+
+/// RNSGA-II (Deb & Sundar 2006): survivor ranking biased toward reference
+/// points in objective space — here one aspiration point (best accuracy,
+/// mid params), which is how the paper uses it for sub-adapter search.
+pub fn rnsga2<E: Evaluator>(
+    space: &SearchSpace,
+    ev: &mut CachedEvaluator<E>,
+    seed: u64,
+    pop_size: usize,
+    generations: usize,
+    budget: usize,
+    reference: Vec<f64>,
+) -> SearchResult {
+    let rank = move |objs: &[Vec<f64>]| -> Vec<usize> {
+        let fronts = non_dominated_sort(objs);
+        let mut order = Vec::with_capacity(objs.len());
+        for front in fronts {
+            // preference distance: closer to the reference point = better
+            let mut idx: Vec<usize> = (0..front.len()).collect();
+            let d: Vec<f64> = front
+                .iter()
+                .map(|&i| {
+                    objs[i]
+                        .iter()
+                        .zip(&reference)
+                        .map(|(a, r)| (a - r) * (a - r))
+                        .sum::<f64>()
+                })
+                .collect();
+            idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap_or(std::cmp::Ordering::Equal));
+            order.extend(idx.into_iter().map(|i| front[i]));
+        }
+        order
+    };
+    let mut evo = Evolution { space, ev, rng: Rng::new(seed), pop_size };
+    let pop = evo.run(generations, budget, rank);
+    best_by_accuracy(space, pop, ev)
+}
+
+fn best_by_accuracy<E: Evaluator>(
+    space: &SearchSpace,
+    pop: Vec<Ind>,
+    ev: &mut CachedEvaluator<E>,
+) -> SearchResult {
+    let best = pop
+        .into_iter()
+        .min_by(|a, b| a.obj[0].partial_cmp(&b.obj[0]).unwrap_or(std::cmp::Ordering::Equal))
+        .expect("empty population");
+    let config = SubAdapterConfig {
+        ranks: best.genes.iter().map(|g| space.choices[*g]).collect(),
+    };
+    SearchResult { config, score: -best.obj[0], evals: ev.evals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn space() -> SearchSpace {
+        SearchSpace {
+            choices: vec![8, 6, 4],
+            n_modules: 6,
+            max_rank: 8,
+            dims: vec![(32, 32); 6],
+        }
+    }
+
+    /// Synthetic landscape: accuracy rises with total rank, with a dip at
+    /// the maximum (so search must find an interior optimum).
+    fn landscape(cfg: &SubAdapterConfig) -> f64 {
+        let total: usize = cfg.ranks.iter().sum();
+        let t = total as f64;
+        -(t - 40.0).abs() / 40.0 + 1.0 // peak at total rank 40
+    }
+
+    #[test]
+    fn cache_avoids_recomputation() {
+        let mut calls = 0usize;
+        let mut ev = CachedEvaluator::new(|c: &SubAdapterConfig| {
+            calls += 1;
+            c.ranks[0] as f64
+        });
+        let s = space();
+        let c = s.maximal();
+        let a = ev.eval(&c);
+        let b = ev.eval(&c);
+        assert_eq!(a, b);
+        assert_eq!(ev.evals, 1);
+        drop(ev);
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
+    fn hill_climb_improves_over_start() {
+        let s = space();
+        let mut ev = CachedEvaluator::new(landscape);
+        let start = s.minimal(); // total 24, below the peak
+        let start_score = landscape(&start);
+        let r = hill_climb(&s, start, &mut ev, 500);
+        assert!(r.score >= start_score);
+        // peak at total 40 is reachable: e.g. 6*6=36..8*6=48 — 40 = 4×6+2×8
+        assert!(r.score > 0.9, "{:?}", r);
+    }
+
+    #[test]
+    fn hill_climb_respects_budget() {
+        let s = space();
+        let mut ev = CachedEvaluator::new(landscape);
+        let r = hill_climb(&s, s.minimal(), &mut ev, 3);
+        assert!(r.evals <= 3 + 1); // start eval + budgeted neighbors
+    }
+
+    #[test]
+    fn non_dominated_sort_fronts_are_correct() {
+        // objectives (minimize both): a=(0,0) dominates all; b,c incomparable
+        let objs = vec![vec![0.0, 0.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 3.0]];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0]);
+        assert_eq!(fronts[1], vec![1, 2]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn sort_invariants_hold_on_random_objectives() {
+        check("nds invariants", 60, |g| {
+            let n = g.usize_in(1..12);
+            let objs: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![g.f32_in(0.0, 1.0) as f64, g.f32_in(0.0, 1.0) as f64])
+                .collect();
+            let fronts = non_dominated_sort(&objs);
+            // partition
+            let total: usize = fronts.iter().map(|f| f.len()).sum();
+            assert_eq!(total, n);
+            // no individual dominates another within a front
+            for front in &fronts {
+                for &i in front {
+                    for &j in front {
+                        assert!(i == j || !dominates(&objs[i], &objs[j]));
+                    }
+                }
+            }
+            // every front-k+1 member is dominated by someone in front k
+            for w in 1..fronts.len() {
+                for &j in &fronts[w] {
+                    assert!(
+                        fronts[w - 1].iter().any(|&i| dominates(&objs[i], &objs[j])),
+                        "front {w} member {j} undominated by front {}",
+                        w - 1
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn crowding_extremes_are_infinite() {
+        let objs = vec![vec![0.0, 3.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 0.0]];
+        let front: Vec<usize> = (0..4).collect();
+        let cd = crowding_distance(&objs, &front);
+        assert!(cd[0].is_infinite() && cd[3].is_infinite());
+        assert!(cd[1].is_finite() && cd[2].is_finite());
+    }
+
+    #[test]
+    fn nsga2_finds_good_interior_config() {
+        let s = space();
+        let mut ev = CachedEvaluator::new(landscape);
+        let r = nsga2(&s, &mut ev, 42, 12, 10, 400);
+        assert!(r.score > 0.85, "{r:?}");
+        assert!(s.contains(&r.config));
+    }
+
+    #[test]
+    fn rnsga2_converges_toward_reference() {
+        let s = space();
+        let mut ev = CachedEvaluator::new(landscape);
+        // aspire to top accuracy at ~70% params
+        let r = rnsga2(&s, &mut ev, 42, 12, 10, 400, vec![-1.0, 0.7]);
+        assert!(r.score > 0.8, "{r:?}");
+        assert!(s.contains(&r.config));
+    }
+
+    #[test]
+    fn evolutionary_costs_more_than_hill_climb() {
+        // the paper's cost argument (§3.3): hill-climbing is cheaper
+        let s = space();
+        let mut ev1 = CachedEvaluator::new(landscape);
+        let hc = hill_climb(&s, s.heuristic(), &mut ev1, 10_000);
+        let mut ev2 = CachedEvaluator::new(landscape);
+        let ga = nsga2(&s, &mut ev2, 1, 12, 10, 10_000);
+        assert!(hc.evals < ga.evals, "hc={} ga={}", hc.evals, ga.evals);
+    }
+}

@@ -1,0 +1,200 @@
+//! Batched greedy-decoding service over the sparse + adapted model.
+//!
+//! Demonstrates the paper's §4.4 deployment claim — the Shears model
+//! serves inference with adapters *unmerged* (merging would destroy the
+//! base-weight sparsity) — as a minimal continuous-batching decoder:
+//! requests join a wave, every wave step runs ONE forward for all active
+//! sequences, finished sequences retire and new requests take their slot.
+//! Latency/throughput metrics come out per run (examples/serve_demo.rs).
+
+use crate::data::Vocab;
+use crate::model::{EntryPoint, ModelConfig, ParamStore};
+use crate::runtime::{Exe, Runtime};
+use crate::tensor::HostTensor;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Completed generation.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub tokens: Vec<i32>,
+    pub new_tokens: usize,
+    pub latency_ms: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub requests: u64,
+    pub generated_tokens: u64,
+    pub forwards: u64,
+    pub wall_secs: f64,
+    pub tokens_per_sec: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub mean_batch_occupancy: f64,
+}
+
+/// Greedy batched decoder over a forward entry point.
+pub struct Decoder<'rt> {
+    rt: &'rt Runtime,
+    cfg: &'rt ModelConfig,
+    entry: EntryPoint,
+    exe: Exe,
+    stores: Vec<&'rt ParamStore>,
+    rank_mask: Option<HostTensor>,
+    pub vocab: Vocab,
+}
+
+impl<'rt> Decoder<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: &'rt ModelConfig,
+        entry_name: &str,
+        stores: Vec<&'rt ParamStore>,
+        rank_mask: Option<HostTensor>,
+    ) -> Result<Self> {
+        let entry = cfg.entry(entry_name)?.clone();
+        let exe = rt.load(&entry.file)?;
+        Ok(Decoder { rt, cfg, entry, exe, stores, rank_mask, vocab: Vocab::new(cfg.vocab) })
+    }
+
+    /// Serve a queue of requests with wave-style continuous batching.
+    pub fn serve(&self, requests: &[GenRequest]) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let b = self.cfg.batch_eval;
+        let s = self.cfg.seq_len;
+        let start_all = Instant::now();
+        let mut metrics = ServeMetrics { requests: requests.len() as u64, ..Default::default() };
+        let mut responses: Vec<Option<GenResponse>> = vec![None; requests.len()];
+        let mut latencies: Vec<f64> = Vec::new();
+
+        // active slots: (request index, tokens so far, start time)
+        let mut next_req = 0usize;
+        let mut slots: Vec<Option<(usize, Vec<i32>, Instant)>> = vec![None; b];
+        let mut occupancy_sum = 0usize;
+
+        loop {
+            // admit new requests into free slots (continuous batching)
+            for slot in slots.iter_mut() {
+                if slot.is_none() && next_req < requests.len() {
+                    let r = &requests[next_req];
+                    let mut toks = r.prompt.clone();
+                    toks.truncate(s - 1);
+                    *slot = Some((next_req, toks, Instant::now()));
+                    next_req += 1;
+                }
+            }
+            let active: Vec<usize> = (0..b).filter(|i| slots[*i].is_some()).collect();
+            if active.is_empty() {
+                break;
+            }
+            occupancy_sum += active.len();
+
+            // build the wave batch: each active slot's context, padded
+            let mut x = vec![self.vocab.pad; b * s];
+            for &i in &active {
+                let (_, toks, _) = slots[i].as_ref().unwrap();
+                for (t, tok) in toks.iter().enumerate() {
+                    x[i * s + t] = *tok;
+                }
+            }
+            let xt = HostTensor::from_i32(&[b, s], x);
+            let logits = self.forward(&xt)?;
+            metrics.forwards += 1;
+
+            // greedy next token per active slot, retire finished
+            let v = self.cfg.vocab;
+            for &i in &active {
+                let (req_idx, toks, started) = slots[i].take().unwrap();
+                let pos = toks.len() - 1;
+                let off = (i * s + pos) * v;
+                let data = logits.f32s();
+                let slice = &data[off..off + v];
+                let next = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, c| a.1.partial_cmp(c.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(idx, _)| idx as i32)
+                    .unwrap_or(self.vocab.eos);
+                let mut toks = toks;
+                toks.push(next);
+                metrics.generated_tokens += 1;
+                let new_count = toks.len() - requests[req_idx].prompt.len().min(s - 1);
+                let done = next == self.vocab.eos
+                    || new_count >= requests[req_idx].max_new_tokens
+                    || toks.len() >= s;
+                if done {
+                    let lat = started.elapsed().as_secs_f64() * 1e3;
+                    latencies.push(lat);
+                    responses[req_idx] = Some(GenResponse {
+                        tokens: toks,
+                        new_tokens: new_count,
+                        latency_ms: lat,
+                    });
+                } else {
+                    slots[i] = Some((req_idx, toks, started));
+                }
+            }
+        }
+
+        metrics.wall_secs = start_all.elapsed().as_secs_f64();
+        metrics.tokens_per_sec = metrics.generated_tokens as f64 / metrics.wall_secs.max(1e-9);
+        metrics.mean_batch_occupancy = if metrics.forwards > 0 {
+            occupancy_sum as f64 / metrics.forwards as f64
+        } else {
+            0.0
+        };
+        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let pct = |p: f64| {
+            if latencies.is_empty() {
+                0.0
+            } else {
+                latencies[((latencies.len() - 1) as f64 * p) as usize]
+            }
+        };
+        metrics.p50_latency_ms = pct(0.5);
+        metrics.p99_latency_ms = pct(0.99);
+        let responses = responses
+            .into_iter()
+            .map(|r| r.context("request never completed"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((responses, metrics))
+    }
+
+    fn forward(&self, x: &HostTensor) -> Result<HostTensor> {
+        let mut args: Vec<&HostTensor> = Vec::with_capacity(self.entry.inputs.len());
+        for i in &self.entry.inputs {
+            let t = match i.name.as_str() {
+                "x" => x,
+                "rank_mask" => self.rank_mask.as_ref().context("decoder needs rank mask")?,
+                name => self
+                    .stores
+                    .iter()
+                    .find_map(|s| s.get(name).ok())
+                    .with_context(|| format!("input '{name}' not found"))?,
+            };
+            args.push(t);
+        }
+        let outs = self.rt.run(&self.exe, &args)?;
+        outs.into_iter().next().context("no logits")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_response_shapes() {
+        let r = GenRequest { prompt: vec![1, 5, 9], max_new_tokens: 4 };
+        assert_eq!(r.prompt.len(), 3);
+        let resp = GenResponse { tokens: vec![1, 5, 9, 2], new_tokens: 1, latency_ms: 1.0 };
+        assert_eq!(resp.tokens.len(), 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! Host-side tensors: the L3 representation of every model parameter,
+//! batch, mask, and statistic, with lossless conversion to/from
+//! `xla::Literal` and a simple binary checkpoint codec.
+//!
+//! Only f32 and i32 exist in the stack (DESIGN.md §3: FP16→f32
+//! substitution), which keeps this deliberately small.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Dense host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![0.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: Data::F32(vec![1.0; shape.iter().product()]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        HostTensor { shape: shape.to_vec(), data: Data::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data: Data::I32(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        HostTensor { shape: vec![], data: Data::F32(vec![x]) }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self.data, Data::F32(_))
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            Data::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            Data::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Count of exactly-zero entries (sparsity accounting, paper Table 3).
+    pub fn zeros_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.iter().filter(|x| **x == 0.0).count(),
+            Data::I32(v) => v.iter().filter(|x| **x == 0).count(),
+        }
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.zeros_count() as f64 / self.numel().max(1) as f64
+    }
+
+    // ------------------------------------------------------ Literal I/O
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = match &self.data {
+            Data::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            Data::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        };
+        let ty = match self.data {
+            Data::F32(_) => xla::ElementType::F32,
+            Data::I32(_) => xla::ElementType::S32,
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &self.shape, bytes)
+            .context("literal from host tensor")
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor {
+                shape: dims,
+                data: Data::F32(lit.to_vec::<f32>().context("literal f32 data")?),
+            }),
+            xla::ElementType::S32 => Ok(HostTensor {
+                shape: dims,
+                data: Data::I32(lit.to_vec::<i32>().context("literal i32 data")?),
+            }),
+            ty => bail!("unsupported literal element type {ty:?}"),
+        }
+    }
+
+    // --------------------------------------------------- checkpoint codec
+    //
+    // format: [tag u8][ndim u32][dims u64...][len u64][payload]
+
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let (tag, bytes): (u8, &[u8]) = match &self.data {
+            Data::F32(v) => (0, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+            Data::I32(v) => (1, unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            }),
+        };
+        w.write_all(&[tag])?;
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for d in &self.shape {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(bytes.len() as u64).to_le_bytes())?;
+        w.write_all(bytes)?;
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self> {
+        let mut tag = [0u8; 1];
+        r.read_exact(&mut tag)?;
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let ndim = u32::from_le_bytes(b4) as usize;
+        if ndim > 16 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut b8 = [0u8; 8];
+        for _ in 0..ndim {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        r.read_exact(&mut b8)?;
+        let len = u64::from_le_bytes(b8) as usize;
+        if len != shape.iter().product::<usize>() * 4 {
+            bail!("corrupt checkpoint: payload {len} vs shape {shape:?}");
+        }
+        let mut bytes = vec![0u8; len];
+        r.read_exact(&mut bytes)?;
+        let data = match tag[0] {
+            0 => Data::F32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            1 => Data::I32(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            t => bail!("corrupt checkpoint: tag {t}"),
+        };
+        Ok(HostTensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_accessors() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 0.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.zeros_count(), 1);
+        assert!((t.sparsity() - 1.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::from_f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_f32_i32() {
+        let a = HostTensor::from_f32(&[3, 2], vec![0.5, -1.5, 2.0, 0.0, 9.9, 1e-7]);
+        let b = HostTensor::from_i32(&[4], vec![1, -2, 3, i32::MAX]);
+        let s = HostTensor::scalar_f32(3.25);
+        let mut buf = Vec::new();
+        a.write_to(&mut buf).unwrap();
+        b.write_to(&mut buf).unwrap();
+        s.write_to(&mut buf).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(HostTensor::read_from(&mut r).unwrap(), a);
+        assert_eq!(HostTensor::read_from(&mut r).unwrap(), b);
+        assert_eq!(HostTensor::read_from(&mut r).unwrap(), s);
+    }
+
+    #[test]
+    fn corrupt_checkpoint_rejected() {
+        let mut buf = Vec::new();
+        HostTensor::ones(&[2, 2]).write_to(&mut buf).unwrap();
+        buf[1] = 99; // ndim
+        assert!(HostTensor::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), t);
+
+        let ti = HostTensor::from_i32(&[3], vec![7, -8, 9]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), ti);
+
+        let s = HostTensor::scalar_f32(2.5);
+        let lit = s.to_literal().unwrap();
+        assert_eq!(HostTensor::from_literal(&lit).unwrap(), s);
+    }
+}

@@ -1,0 +1,105 @@
+//! Leveled stderr logger + wall-clock scope timers.
+//!
+//! Level comes from `SHEARS_LOG` (error|warn|info|debug, default info).
+//! Timers back the §Perf measurements in EXPERIMENTS.md.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn level() -> u8 {
+    let l = LEVEL.load(Ordering::Relaxed);
+    if l != u8::MAX {
+        return l;
+    }
+    let parsed = match std::env::var("SHEARS_LOG").as_deref() {
+        Ok("error") => 0,
+        Ok("warn") => 1,
+        Ok("debug") => 3,
+        _ => 2,
+    };
+    LEVEL.store(parsed, Ordering::Relaxed);
+    parsed
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn log(l: Level, msg: &str) {
+    if (l as u8) <= level() {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[shears {tag}] {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, &format!($($t)*)) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, &format!($($t)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, &format!($($t)*)) };
+}
+
+/// RAII wall-clock timer; logs at debug on drop, exposes elapsed secs.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(label: &str) -> Self {
+        Timer { label: label.to_string(), start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn stop(self) -> f64 {
+        let secs = self.elapsed_secs();
+        log(Level::Debug, &format!("{}: {:.3}s", self.label, secs));
+        std::mem::forget(self);
+        secs
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        log(
+            Level::Debug,
+            &format!("{}: {:.3}s", self.label, self.elapsed_secs()),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::new("test");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.stop() >= 0.004);
+    }
+}

@@ -1,0 +1,7 @@
+//! Infrastructure substrates built in-repo (the offline crate registry
+//! only carries the `xla` closure — see DESIGN.md §3).
+
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,140 @@
+//! Property-testing helper (offline substitute for `proptest`, DESIGN.md §3).
+//!
+//! `check` runs a property over N seeded random cases; on failure it
+//! retries with progressively "smaller" generator budgets (shrink-lite)
+//! and reports the seed so the case replays deterministically:
+//!
+//! ```text
+//! use shears::util::prop::{check, Gen};
+//! check("sort is idempotent", 200, |g| {
+//!     let mut v = g.vec_i64(0..20, -100..100);
+//!     v.sort(); let w = { let mut w = v.clone(); w.sort(); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+//! (text block: doctest binaries don't inherit the xla rpath link flags)
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Random-input generator handed to properties. `size` scales collection
+/// budgets during shrinking.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            return r.start;
+        }
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn i64_in(&mut self, r: Range<i64>) -> i64 {
+        self.rng.range(r.start, r.end)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Length drawn from `len`, scaled down while shrinking.
+    fn scaled_len(&mut self, len: Range<usize>) -> usize {
+        let raw = self.usize_in(len.clone());
+        let scaled = ((raw as f64) * self.size).round() as usize;
+        scaled.max(len.start)
+    }
+
+    pub fn vec_i64(&mut self, len: Range<usize>, each: Range<i64>) -> Vec<i64> {
+        let n = self.scaled_len(len);
+        (0..n).map(|_| self.i64_in(each.clone())).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.scaled_len(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choice(xs)
+    }
+}
+
+/// Run `prop` over `cases` seeded inputs; panics (with the failing seed)
+/// if any case fails. Set `SHEARS_PROP_SEED` to replay one case.
+pub fn check<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    if let Ok(seed) = std::env::var("SHEARS_PROP_SEED") {
+        let seed: u64 = seed.parse().expect("SHEARS_PROP_SEED must be u64");
+        let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+        prop(&mut g);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5EED ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let outcome = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+            prop(&mut g);
+        });
+        if outcome.is_err() {
+            // shrink-lite: replay the same seed at smaller collection sizes
+            // to find a smaller budget that still fails.
+            let mut min_fail = 1.0;
+            for step in 1..=4 {
+                let size = 1.0 / f64::powi(2.0, step);
+                let smaller = std::panic::catch_unwind(|| {
+                    let mut g = Gen { rng: Rng::new(seed), size };
+                    prop(&mut g);
+                });
+                if smaller.is_err() {
+                    min_fail = size;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed}, min failing size {min_fail}); \
+                 replay with SHEARS_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is non-negative", 100, |g| {
+            let x = g.i64_in(-1000..1000);
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |g| {
+            let v = g.vec_i64(1..50, 0..10);
+            assert!(v.is_empty(), "non-empty");
+        });
+    }
+
+    #[test]
+    fn generators_respect_ranges() {
+        check("ranges", 100, |g| {
+            let u = g.usize_in(3..9);
+            assert!((3..9).contains(&u));
+            let f = g.f32_in(-1.0, 1.0);
+            assert!((-1.0..=1.0).contains(&f));
+            let v = g.vec_f32(0..5, 0.0, 1.0);
+            assert!(v.len() < 5);
+        });
+    }
+}

@@ -1,0 +1,324 @@
+//! Integration: rust runtime ↔ AOT'd HLO artifacts (tiny-llama config).
+//!
+//! These tests need `make artifacts` to have run. They exercise the full
+//! L3→PJRT path: manifest-driven input assembly, executable compile +
+//! cache, literal/buffer round trips, and the cross-layer invariants the
+//! python tests assert on the L2 side (zero-mask == base forward, LoRA
+//! B=0 transparency, Wanda row sparsity, train-step loss decrease) — now
+//! through the *compiled artifacts* instead of jitted python.
+
+use shears::data::batch::{Batcher, MaskMode};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::{Manifest, ModelConfig, ParamStore};
+use shears::nls::SearchSpace;
+use shears::pruning::{self, Method};
+use shears::runtime::Runtime;
+use shears::tensor::HostTensor;
+use shears::train::{evaluate, forward_logits, train_loop, TrainOpts};
+use shears::util::rng::Rng;
+
+const CFG: &str = "tiny-llama";
+
+struct Env {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+impl Env {
+    fn new() -> Env {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let rt = Runtime::new(&dir).expect("runtime (run `make artifacts` first)");
+        let manifest = Manifest::load(&dir).expect("manifest");
+        Env { rt, manifest }
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        self.manifest.config(CFG).unwrap()
+    }
+}
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let adapters = ParamStore::init_adapters(cfg, &mut rng);
+    (base, adapters)
+}
+
+fn eval_batch(cfg: &ModelConfig, vocab: &Vocab, seed: u64) -> shears::data::Batch {
+    let ds = dataset(Task::BoolqSim, vocab, seed, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, vocab, MaskMode::AnswerOnly);
+    batcher.epoch().into_iter().next().unwrap()
+}
+
+#[test]
+fn forward_eval_base_runs_and_is_deterministic() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 0);
+    let entry = cfg.entry("forward_eval_base").unwrap();
+    let exe = env.rt.load(&entry.file).unwrap();
+    let batch = eval_batch(cfg, &vocab, 1);
+    let a = forward_logits(&env.rt, &exe, entry, &[&base], None, &batch).unwrap();
+    let b = forward_logits(&env.rt, &exe, entry, &[&base], None, &batch).unwrap();
+    assert_eq!(a.shape, vec![cfg.batch_eval, cfg.seq_len, cfg.vocab]);
+    assert_eq!(a.f32s(), b.f32s());
+    assert!(a.f32s().iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn zero_rank_mask_matches_base_forward() {
+    // NLS weight-sharing invariant through the compiled artifacts
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, mut adapters) = init_stores(cfg, 2);
+    // make B nonzero so the mask is doing real work
+    let mut rng = Rng::new(99);
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            let t = adapters.get_mut(&p.name).unwrap();
+            rng.fill_normal(t.f32s_mut(), 0.0, 0.05);
+        }
+    }
+    let space = SearchSpace::from_config(cfg);
+    let batch = eval_batch(cfg, &vocab, 3);
+
+    let e_ad = cfg.entry("forward_eval").unwrap();
+    let exe_ad = env.rt.load(&e_ad.file).unwrap();
+    let zero_mask = HostTensor::zeros(&[space.n_modules, space.max_rank]);
+    let with_zero =
+        forward_logits(&env.rt, &exe_ad, e_ad, &[&base, &adapters], Some(&zero_mask), &batch)
+            .unwrap();
+
+    let e_base = cfg.entry("forward_eval_base").unwrap();
+    let exe_base = env.rt.load(&e_base.file).unwrap();
+    let base_only = forward_logits(&env.rt, &exe_base, e_base, &[&base], None, &batch).unwrap();
+
+    let max_diff = with_zero
+        .f32s()
+        .iter()
+        .zip(base_only.f32s())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "zero-mask forward deviates: {max_diff}");
+
+    // and a full mask with B≠0 must differ
+    let full = space.full_mask();
+    let with_full =
+        forward_logits(&env.rt, &exe_ad, e_ad, &[&base, &adapters], Some(&full), &batch).unwrap();
+    let diff = with_full
+        .f32s()
+        .iter()
+        .zip(base_only.f32s())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-4, "full-mask forward identical to base");
+}
+
+#[test]
+fn pallas_forward_matches_jnp_forward() {
+    // The L1 Pallas kernels and the jnp reference lower to different HLO;
+    // both artifacts must agree numerically (DESIGN.md §4).
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, adapters) = init_stores(cfg, 4);
+    let space = SearchSpace::from_config(cfg);
+    let mask = space.rank_mask(&space.heuristic());
+    let batch = eval_batch(cfg, &vocab, 5);
+
+    let run = |entry_name: &str| {
+        let e = cfg.entry(entry_name).unwrap();
+        let exe = env.rt.load(&e.file).unwrap();
+        forward_logits(&env.rt, &exe, e, &[&base, &adapters], Some(&mask), &batch).unwrap()
+    };
+    let jnp = run("forward_eval");
+    let pallas = run("forward_eval_pallas");
+    let max_diff = jnp
+        .f32s()
+        .iter()
+        .zip(pallas.f32s())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-3, "pallas vs jnp forward: max diff {max_diff}");
+}
+
+#[test]
+fn wanda_prune_hits_row_sparsity_through_artifacts() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base, _) = init_stores(cfg, 6);
+    let ds = dataset(Task::Gsm8kSim, &vocab, 7, cfg.batch_eval * 2, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let batches = batcher.epoch();
+    let stats = pruning::collect_stats(&env.rt, cfg, &base, &batches).unwrap();
+    // every site got stats of the declared dim
+    for (site, dim) in &cfg.sites {
+        assert_eq!(stats.sumsq[site].shape, vec![*dim], "{site}");
+        assert_eq!(stats.gram[site].shape, vec![*dim, *dim], "{site}");
+    }
+    let masks = pruning::prune(
+        &env.rt, &env.manifest, cfg, &mut base, Method::Wanda, 0.5, Some(&stats),
+    )
+    .unwrap();
+    for p in &cfg.prunable {
+        let w = base.get(&p.name).unwrap();
+        let (n, k) = (p.shape[0], p.shape[1]);
+        // per-row sparsity (Wanda compares within rows)
+        let expect_keep = ((k as f64) * 0.5).round() as usize;
+        for row in 0..n {
+            let nz = w.f32s()[row * k..(row + 1) * k]
+                .iter()
+                .filter(|x| **x != 0.0)
+                .count();
+            assert!(
+                nz <= expect_keep,
+                "{}: row {row} has {nz} nonzeros, expected <= {expect_keep}",
+                p.name
+            );
+        }
+        let m = masks.get(&p.name).unwrap();
+        assert_eq!(m.shape, p.shape);
+    }
+}
+
+#[test]
+fn magnitude_and_sparsegpt_prune_run() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base_m, _) = init_stores(cfg, 8);
+    let masks =
+        pruning::prune(&env.rt, &env.manifest, cfg, &mut base_m, Method::Magnitude, 0.4, None)
+            .unwrap();
+    assert_eq!(masks.len(), cfg.prunable.len());
+    let names: Vec<String> = cfg.prunable.iter().map(|p| p.name.clone()).collect();
+    let s = base_m.sparsity_of(&names);
+    assert!((s - 0.4).abs() < 0.05, "magnitude sparsity {s}");
+
+    let (mut base_s, _) = init_stores(cfg, 9);
+    let ds = dataset(Task::Gsm8kSim, &vocab, 10, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let stats = pruning::collect_stats(&env.rt, cfg, &base_s, &batcher.epoch()).unwrap();
+    pruning::prune(&env.rt, &env.manifest, cfg, &mut base_s, Method::SparseGpt, 0.5, Some(&stats))
+        .unwrap();
+    let s = base_s.sparsity_of(&names);
+    assert!((s - 0.5).abs() < 0.05, "sparsegpt sparsity {s}");
+}
+
+#[test]
+fn nls_train_step_reduces_loss_and_keeps_base_frozen() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, mut adapters) = init_stores(cfg, 11);
+    let base_before = base.get("layers.0.attn.q").unwrap().clone();
+    let space = SearchSpace::from_config(cfg);
+    let ds = dataset(Task::BoolqSim, &vocab, 12, 64, cfg.seq_len);
+    let mut batcher =
+        Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let opts = TrainOpts { steps: 30, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0 };
+    let log = train_loop(
+        &env.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
+        Some(&space), &opts,
+    )
+    .unwrap();
+    assert_eq!(log.losses.len(), 30);
+    let head: f32 = log.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail = log.mean_tail(5);
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    // frozen base untouched on the host side (and the graph never updates it)
+    assert_eq!(base.get("layers.0.attn.q").unwrap(), &base_before);
+    // adapters actually moved
+    let moved = cfg
+        .adapter_params
+        .iter()
+        .any(|p| adapters.get(&p.name).unwrap().f32s().iter().any(|x| x.abs() > 1e-7));
+    assert!(moved);
+}
+
+#[test]
+fn full_ft_train_step_preserves_sparsity() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base, _) = init_stores(cfg, 13);
+    let masks =
+        pruning::prune(&env.rt, &env.manifest, cfg, &mut base, Method::Magnitude, 0.5, None)
+            .unwrap();
+    let ds = dataset(Task::BoolqSim, &vocab, 14, 32, cfg.seq_len);
+    let mut batcher =
+        Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let opts = TrainOpts { steps: 5, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0 };
+    let frozen = ParamStore::new();
+    train_loop(
+        &env.rt, cfg, "train_step_full", &frozen, &mut base, Some(&masks), &mut batcher,
+        None, &opts,
+    )
+    .unwrap();
+    // pruned positions stay exactly zero after full fine-tuning
+    for p in &cfg.prunable {
+        let w = base.get(&p.name).unwrap();
+        let m = masks.get(&p.name).unwrap();
+        for (wi, mi) in w.f32s().iter().zip(m.f32s()) {
+            if *mi == 0.0 {
+                assert_eq!(*wi, 0.0, "{}: pruned weight resurrected", p.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_adapters_train() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 15);
+    for (entry, specs) in [
+        ("train_step_prefix", &cfg.prefix_params),
+        ("train_step_series", &cfg.series_params),
+        ("train_step_parallel", &cfg.parallel_params),
+    ] {
+        let mut rng = Rng::new(3);
+        let mut extra = ParamStore::init_extra(specs, &mut rng);
+        let ds = dataset(Task::BoolqSim, &vocab, 16, 32, cfg.seq_len);
+        let mut batcher =
+            Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+        let opts =
+            TrainOpts { steps: 8, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0 };
+        let log = train_loop(
+            &env.rt, cfg, entry, &base, &mut extra, None, &mut batcher, None, &opts,
+        )
+        .unwrap();
+        assert!(log.losses.iter().all(|l| l.is_finite()), "{entry}");
+    }
+}
+
+#[test]
+fn evaluate_scores_untrained_model_near_chance() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 17);
+    let test = dataset(Task::BoolqSim, &vocab, 18, 64, cfg.seq_len);
+    let acc = evaluate(&env.rt, cfg, "forward_eval_base", &[&base], None, &test, &vocab).unwrap();
+    // random init: far below ceiling; with yes/no the argmax over a random
+    // logit surface collapses to *some* fixed token — accept [0, 0.75]
+    assert!((0.0..=0.75).contains(&acc), "untrained acc {acc}");
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let before = env.rt.compiled_count();
+    let e = cfg.entry("forward_eval_base").unwrap();
+    let _ = env.rt.load(&e.file).unwrap();
+    let mid = env.rt.compiled_count();
+    let _ = env.rt.load(&e.file).unwrap();
+    let after = env.rt.compiled_count();
+    assert_eq!(mid, before + 1);
+    assert_eq!(after, mid);
+}

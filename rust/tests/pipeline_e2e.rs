@@ -1,0 +1,111 @@
+//! End-to-end pipeline test: the full paper workflow (Figure 1) on the
+//! tiny config — pretrain → Wanda prune → NLS super-adapter training →
+//! heuristic sub-adapter → eval — plus the dynamic-batching eval router.
+//!
+//! Scaled down to run in CI time; the real experiment drivers live in
+//! examples/ and rust/benches/.
+
+use shears::coordinator::{EvalRouter, PipelineOpts, ShearsPipeline};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::Manifest;
+use shears::nls::SearchSpace;
+use shears::pruning::Method;
+use shears::runtime::Runtime;
+use shears::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn full_pipeline_tiny() {
+    let rt = Runtime::new(artifacts_dir()).expect("run `make artifacts` first");
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let workdir = std::env::temp_dir().join("shears_e2e_workdir");
+    let _ = std::fs::remove_dir_all(&workdir);
+    let opts = PipelineOpts {
+        config: "tiny-llama".into(),
+        method: Method::Wanda,
+        sparsity: 0.5,
+        pretrain_steps: 120,
+        train_steps: 80,
+        lr: 3e-3,
+        seed: 7,
+        tasks: vec![Task::BoolqSim],
+        train_examples: 192,
+        eval_examples: 64,
+        calib_batches: 2,
+        hill_climb_budget: 0,
+        search_eval_examples: 16,
+        workdir: Some(workdir.clone()),
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts.clone()).unwrap();
+    let report = pipeline.run().unwrap();
+
+    // sparsity within rounding of the target
+    assert!(
+        (report.sparsity_measured - 0.5).abs() < 0.03,
+        "sparsity {}",
+        report.sparsity_measured
+    );
+    // the heuristic sub-adapter is the mid-rank config (Eq. 3)
+    let space = SearchSpace::from_config(manifest.config("tiny-llama").unwrap());
+    assert_eq!(report.sub_adapter, space.heuristic());
+    // training moved the loss
+    assert!(report.train_log.final_loss().is_finite());
+    assert!(
+        report.train_log.mean_tail(10) < report.train_log.losses[0],
+        "NLS training did not reduce loss"
+    );
+    // non-zero params dropped vs total (the Table 3 effect)
+    assert!(report.nonzero_params < report.total_params);
+    // accuracy is a probability and the task learned *something* over 0
+    let acc = report.mean_accuracy();
+    assert!((0.0..=1.0).contains(&acc));
+
+    // pretrain checkpoint was cached; a second pipeline reuses it
+    let pipeline2 = ShearsPipeline::new(&rt, &manifest, opts).unwrap();
+    let (base2, log2) = pipeline2.pretrained_base().unwrap();
+    assert_eq!(log2.losses.len(), 0, "expected cache hit");
+    assert!(base2.numel() > 0);
+    let _ = std::fs::remove_dir_all(&workdir);
+}
+
+#[test]
+fn router_batches_concurrent_requests() {
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(0);
+    let base = shears::model::ParamStore::init_base(cfg, &mut rng, 0.05);
+
+    let router = EvalRouter::spawn(
+        artifacts_dir().to_string_lossy().to_string(),
+        "tiny-llama".into(),
+        "forward_eval_base".into(),
+        vec![base],
+        std::time::Duration::from_millis(30),
+    )
+    .unwrap();
+
+    // several small concurrent requests should coalesce into few forwards
+    let router = std::sync::Arc::new(router);
+    let mut handles = Vec::new();
+    for i in 0..6 {
+        let r = router.clone();
+        let examples = dataset(Task::BoolqSim, &vocab, 100 + i, 8, cfg.seq_len);
+        handles.push(std::thread::spawn(move || r.eval(examples, None).unwrap()));
+    }
+    for h in handles {
+        let acc = h.join().unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+    let m = router.metrics().unwrap();
+    assert_eq!(m.requests, 6);
+    assert_eq!(m.examples, 48);
+    // 48 examples at batch_eval=16 need >= 3 forwards; batching should do
+    // far better than one forward per request of 8
+    assert!(m.forwards >= 3 && m.forwards <= 6, "forwards={}", m.forwards);
+    assert!(m.mean_occupancy > 8.0, "occupancy={}", m.mean_occupancy);
+    assert!(m.p99_latency_ms >= m.p50_latency_ms);
+}

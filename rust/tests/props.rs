@@ -1,0 +1,273 @@
+//! Cross-module property tests (no artifacts needed — pure L3 logic).
+//!
+//! Complements the in-module unit tests with invariants that span
+//! modules: batching ↔ evaluation consistency, task-generator semantics,
+//! search-space accounting, serialization round trips.
+
+use shears::data::batch::{build_batch, MaskMode};
+use shears::data::{dataset, Example, Task, Vocab};
+use shears::model::ParamStore;
+use shears::nls::{SearchSpace, SubAdapterConfig};
+use shears::search::{hill_climb, non_dominated_sort, CachedEvaluator};
+use shears::tensor::HostTensor;
+use shears::train::exact_match;
+use shears::util::json::Json;
+use shears::util::prop::check;
+use shears::util::rng::Rng;
+
+/// Build "oracle" logits that put probability 1 on each true next token;
+/// exact_match must then accept every example.
+#[test]
+fn perfect_logits_always_match() {
+    check("perfect logits match", 40, |g| {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let task = *g.choice(&[Task::Gsm8kSim, Task::BoolqSim, Task::AquaSim, Task::ObqaSim]);
+        let ex = task.sample(&v, &mut rng, 48);
+        let (s, vocab) = (48usize, 256usize);
+        let mut logits = vec![0.0f32; s * vocab];
+        for t in 0..ex.tokens.len().saturating_sub(1) {
+            logits[t * vocab + ex.tokens[t + 1] as usize] = 10.0;
+        }
+        let lt = HostTensor::from_f32(&[1, s, vocab], logits);
+        assert!(exact_match(&ex, &lt, 0, s, vocab));
+    });
+}
+
+#[test]
+fn corrupted_answer_position_never_matches() {
+    check("corrupted logits fail", 40, |g| {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let ex = Task::BoolqSim.sample(&v, &mut rng, 48);
+        let (s, vocab) = (48usize, 256usize);
+        let mut logits = vec![0.0f32; s * vocab];
+        for t in 0..ex.tokens.len() - 1 {
+            logits[t * vocab + ex.tokens[t + 1] as usize] = 10.0;
+        }
+        // flip the prediction feeding the first answer token
+        let p = ex.answer_start - 1;
+        let truth = ex.tokens[ex.answer_start] as usize;
+        logits[p * vocab + truth] = 0.0;
+        logits[p * vocab + (truth + 1) % vocab] = 10.0;
+        let lt = HostTensor::from_f32(&[1, s, vocab], logits);
+        assert!(!exact_match(&ex, &lt, 0, s, vocab));
+    });
+}
+
+#[test]
+fn batch_mask_counts_match_answer_lengths() {
+    check("mask mass == answer len", 60, |g| {
+        let v = Vocab::new(256);
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let task = *g.choice(&[Task::Gsm8kSim, Task::MawpsSim, Task::SvampSim, Task::HellaswagSim]);
+        let ex = task.sample(&v, &mut rng, 48);
+        let b = build_batch(&[&ex], 1, 48, &v, MaskMode::AnswerOnly);
+        let mass: f32 = b.loss_mask.f32s().iter().sum();
+        assert_eq!(mass as usize, ex.answer_len, "{}", task.name());
+        // every supervised target equals the example's answer token
+        for t in 0..47 {
+            if b.loss_mask.f32s()[t] == 1.0 {
+                let target = b.y.i32s()[t];
+                let pos = t + 1;
+                assert!(pos >= ex.answer_start && pos < ex.answer_start + ex.answer_len);
+                assert_eq!(target, ex.tokens[pos]);
+            }
+        }
+    });
+}
+
+#[test]
+fn choice_task_answers_are_uniformish() {
+    // a degenerate generator (answer always "A") would let a constant
+    // model ace the benchmark — guard the distribution
+    let v = Vocab::new(256);
+    for task in [Task::AquaSim, Task::HellaswagSim, Task::ArcESim, Task::ArcCSim, Task::ObqaSim] {
+        let ds = dataset(task, &v, 3, 400, 64);
+        let mut counts = [0usize; 4];
+        for ex in &ds {
+            let c = (ex.tokens[ex.answer_start] - v.choice(0)) as usize;
+            counts[c.min(3)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(
+                *c > 400 / 4 / 3,
+                "{}: choice {i} seen only {c}/400 times",
+                task.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn rank_mask_row_sums_equal_config_ranks() {
+    check("rank mask mass", 60, |g| {
+        let n_modules = g.usize_in(1..24);
+        let space = SearchSpace {
+            choices: vec![8, 6, 4],
+            n_modules,
+            max_rank: 8,
+            dims: vec![(64, 64); n_modules],
+        };
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let cfg = space.sample(&mut rng);
+        let mask = space.rank_mask(&cfg);
+        let d = mask.f32s();
+        for (m, r) in cfg.ranks.iter().enumerate() {
+            let sum: f32 = d[m * 8..(m + 1) * 8].iter().sum();
+            assert_eq!(sum as usize, *r);
+            // prefix property: no 1 after a 0
+            let row = &d[m * 8..(m + 1) * 8];
+            let first_zero = row.iter().position(|x| *x == 0.0).unwrap_or(8);
+            assert!(row[first_zero..].iter().all(|x| *x == 0.0));
+        }
+    });
+}
+
+#[test]
+fn hill_climb_never_returns_worse_than_start() {
+    check("hill climb monotone", 30, |g| {
+        let n_modules = g.usize_in(2..10);
+        let space = SearchSpace {
+            choices: vec![8, 6, 4],
+            n_modules,
+            max_rank: 8,
+            dims: vec![(32, 32); n_modules],
+        };
+        // random landscape, deterministic per config
+        let seed = g.usize_in(0..1000) as u64;
+        let f = move |c: &SubAdapterConfig| -> f64 {
+            let mut h = Rng::new(seed ^ c.ranks.iter().fold(0u64, |a, r| a * 31 + *r as u64));
+            h.f64()
+        };
+        let mut ev = CachedEvaluator::new(f);
+        let mut rng = Rng::new(seed ^ 77);
+        let start = space.sample(&mut rng);
+        let start_score = f(&start);
+        let r = hill_climb(&space, start, &mut ev, 100);
+        assert!(r.score >= start_score - 1e-12);
+        assert!(space.contains(&r.config));
+    });
+}
+
+#[test]
+fn non_dominated_front_members_are_actually_optimal() {
+    check("front 0 optimality", 50, |g| {
+        let n = g.usize_in(2..20);
+        let objs: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![g.f32_in(0.0, 1.0) as f64, g.f32_in(0.0, 1.0) as f64])
+            .collect();
+        let fronts = non_dominated_sort(&objs);
+        for &i in &fronts[0] {
+            for o in &objs {
+                let dominates = o.iter().zip(&objs[i]).all(|(a, b)| a <= b)
+                    && o.iter().zip(&objs[i]).any(|(a, b)| a < b);
+                assert!(!dominates);
+            }
+        }
+    });
+}
+
+#[test]
+fn json_roundtrips_arbitrary_trees() {
+    check("json roundtrip", 80, |g| {
+        fn gen(g: &mut shears::util::prop::Gen, depth: usize) -> Json {
+            if depth == 0 {
+                return match g.usize_in(0..4) {
+                    0 => Json::Num((g.f32_in(-1e6, 1e6) as f64 * 100.0).round() / 100.0),
+                    1 => Json::Bool(g.bool(0.5)),
+                    2 => Json::Str(format!("s{}-\"quoted\"\n", g.usize_in(0..100))),
+                    _ => Json::Null,
+                };
+            }
+            match g.usize_in(0..3) {
+                0 => Json::Arr((0..g.usize_in(0..4)).map(|_| gen(g, depth - 1)).collect()),
+                1 => Json::Obj(
+                    (0..g.usize_in(0..4))
+                        .map(|i| (format!("k{i}"), gen(g, depth - 1)))
+                        .collect(),
+                ),
+                _ => gen(g, 0),
+            }
+        }
+        let v = gen(g, 3);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+        assert_eq!(Json::parse(&v.to_string_pretty()).unwrap(), v);
+    });
+}
+
+#[test]
+fn checkpoint_roundtrips_random_stores() {
+    check("checkpoint roundtrip", 20, |g| {
+        let mut store = ParamStore::new();
+        let n = g.usize_in(1..8);
+        for i in 0..n {
+            let rows = g.usize_in(1..6);
+            let cols = g.usize_in(1..6);
+            let data = g.vec_f32(rows * cols..rows * cols + 1, -10.0, 10.0);
+            let data = if data.len() == rows * cols {
+                data
+            } else {
+                vec![0.5; rows * cols]
+            };
+            store.insert(&format!("p{i}"), HostTensor::from_f32(&[rows, cols], data));
+        }
+        let path = std::env::temp_dir().join(format!(
+            "shears_prop_ckpt_{}.bin",
+            std::process::id() as u64 + g.usize_in(0..1_000_000) as u64
+        ));
+        store.save(&path).unwrap();
+        let re = ParamStore::load(&path).unwrap();
+        assert_eq!(re.len(), store.len());
+        for name in store.names() {
+            assert_eq!(re.get(name).unwrap(), store.get(name).unwrap());
+        }
+        let _ = std::fs::remove_file(&path);
+    });
+}
+
+#[test]
+fn examples_fit_every_config_seq_len() {
+    // generators promise max_len; the smallest model uses 48
+    let v = Vocab::new(256);
+    for task in Task::MATH.iter().chain(Task::COMMONSENSE.iter()) {
+        let ds = dataset(*task, &v, 9, 200, 48);
+        assert!(ds.iter().all(|e| e.tokens.len() <= 48), "{}", task.name());
+    }
+}
+
+#[test]
+fn sub_adapter_param_accounting_matches_mask_mass() {
+    check("params == mask mass * dims", 40, |g| {
+        let n_modules = g.usize_in(1..12);
+        let din = 16 * g.usize_in(1..8);
+        let dout = 16 * g.usize_in(1..8);
+        let space = SearchSpace {
+            choices: vec![8, 6, 4],
+            n_modules,
+            max_rank: 8,
+            dims: vec![(din, dout); n_modules],
+        };
+        let mut rng = Rng::new(g.usize_in(0..100_000) as u64);
+        let cfg = space.sample(&mut rng);
+        let mask = space.rank_mask(&cfg);
+        let active_rows: f32 = mask.f32s().iter().sum();
+        let expected: usize = cfg.active_params(&space.dims);
+        assert_eq!(expected, active_rows as usize * (din + dout));
+    });
+}
+
+/// Example invariant shared by training and eval: the answer span sits
+/// strictly inside the sequence (so there is always a predicting position).
+#[test]
+fn answer_span_has_predicting_context() {
+    let v = Vocab::new(256);
+    let mut rng = Rng::new(4);
+    for task in Task::MATH.iter().chain(Task::COMMONSENSE.iter()) {
+        for _ in 0..100 {
+            let ex: Example = task.sample(&v, &mut rng, 64);
+            assert!(ex.answer_start >= 1, "{}", task.name());
+            assert!(ex.answer_start + ex.answer_len < ex.tokens.len() + 1);
+        }
+    }
+}
