@@ -13,7 +13,6 @@
 
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::Task;
-use shears::model::Manifest;
 use shears::pruning::Method;
 use shears::runtime::Runtime;
 use shears::util::json::{arr, num, obj, Json};
@@ -28,8 +27,9 @@ fn curve(losses: &[f32], every: usize) -> Vec<(usize, f32)> {
 }
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::from_env("artifacts")?;
+    let manifest = rt.manifest()?;
+    println!("backend: {}", rt.backend_name());
     let opts = PipelineOpts {
         config: "llama-sim-s".into(),
         method: Method::Wanda,

@@ -15,15 +15,17 @@
 
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{dataset, Task, Vocab};
-use shears::model::Manifest;
 use shears::nls::SearchSpace;
 use shears::pruning::Method;
 use shears::runtime::Runtime;
 use shears::train::evaluate;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    let manifest = Manifest::load("artifacts")?;
+    // native backend unless built with `xla` and `make artifacts` ran
+    // (override with SHEARS_BACKEND=native|pjrt|auto)
+    let rt = Runtime::from_env("artifacts")?;
+    let manifest = rt.manifest()?;
+    println!("backend: {}", rt.backend_name());
 
     let opts = PipelineOpts {
         config: "tiny-llama".into(),

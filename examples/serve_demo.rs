@@ -11,7 +11,6 @@
 
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{Task, Vocab};
-use shears::model::Manifest;
 use shears::nls::SearchSpace;
 use shears::pruning::Method;
 use shears::runtime::Runtime;
@@ -19,8 +18,9 @@ use shears::serve::{Decoder, GenRequest};
 use shears::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::from_env("artifacts")?;
+    let manifest = rt.manifest()?;
+    println!("backend: {}", rt.backend_name());
     let cfg = manifest.config("tiny-llama")?;
     let vocab = Vocab::new(cfg.vocab);
 

@@ -14,15 +14,15 @@
 use shears::bench_util::Table;
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{dataset, Task, Vocab};
-use shears::model::Manifest;
 use shears::pruning::{self, Method};
 use shears::runtime::Runtime;
 use shears::train::evaluate;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::from_env("artifacts")?;
+    let manifest = rt.manifest()?;
+    println!("backend: {}", rt.backend_name());
     let cfg = manifest.config("llama-sim-s")?;
     let vocab = Vocab::new(cfg.vocab);
 

@@ -1,0 +1,250 @@
+"""Golden parity fixtures: L1 reference numerics -> JSON for rust/tests/parity.rs.
+
+Usage:  cd python && python -m compile.fixtures --out-dir ../rust/tests/fixtures
+
+Every case records its inputs and the reference outputs computed by the
+same code the artifacts are lowered from (`kernels/ref.py`, `prune.py`,
+`model.py`), so the native Rust backend can be asserted against the L1
+ground truth with no Python at test time. Regenerate only when the
+reference math changes; the files are checked in.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import prune as P
+from .kernels import ref
+
+SEED = 20240731
+
+
+def t(arr):
+    """Tensor -> JSON {shape, data} (f32 or i32)."""
+    a = np.asarray(arr)
+    if a.dtype.kind in "iu":
+        data = [int(x) for x in a.reshape(-1)]
+        dtype = "i32"
+    else:
+        data = [float(np.float32(x)) for x in a.reshape(-1)]
+        dtype = "f32"
+    return {"shape": list(a.shape), "dtype": dtype, "data": data}
+
+
+def kernel_cases(rng):
+    cases = {}
+
+    # fused elastic-LoRA linear + its gradients (kernels/ref.py contract)
+    x = rng.standard_normal((5, 7)).astype(np.float32)
+    w = rng.standard_normal((6, 7)).astype(np.float32)
+    a = rng.standard_normal((3, 7)).astype(np.float32)
+    b = rng.standard_normal((6, 3)).astype(np.float32)
+    mask = np.array([1.0, 1.0, 0.0], np.float32)
+    scale = 2.5
+    dy = rng.standard_normal((5, 6)).astype(np.float32)
+    y = ref.lora_linear_ref(x, w, a, b, mask, scale)
+    dx, da, db = ref.lora_linear_bwd_ref(x, w, a, b, mask, scale, dy)
+    cases["lora_linear"] = {
+        "inputs": {"x": t(x), "w": t(w), "a": t(a), "b": t(b), "mask": t(mask), "dy": t(dy)},
+        "scalars": {"scale": scale},
+        "outputs": {"y": t(y), "dx": t(dx), "da": t(da), "db": t(db)},
+    }
+
+    # rmsnorm forward + vjp
+    xn = rng.standard_normal((4, 9)).astype(np.float32)
+    g = (1.0 + 0.1 * rng.standard_normal(9)).astype(np.float32)
+    dyn = rng.standard_normal((4, 9)).astype(np.float32)
+    yn, vjp = jax.vjp(ref.rmsnorm_ref, jnp.array(xn), jnp.array(g))
+    dxn, dgn = vjp(jnp.array(dyn))
+    cases["rmsnorm"] = {
+        "inputs": {"x": t(xn), "g": t(g), "dy": t(dyn)},
+        "outputs": {"y": t(yn), "dx": t(dxn), "dg": t(dgn)},
+    }
+
+    # masked softmax cross-entropy + dlogits (model.lm_loss contract)
+    logits = rng.standard_normal((2, 4, 11)).astype(np.float32)
+    y_ids = rng.integers(0, 11, (2, 4)).astype(np.int32)
+    lmask = np.array([[1, 0, 1, 1], [0, 1, 1, 0]], np.float32)
+    loss, dlogits = jax.value_and_grad(
+        lambda lg: M.lm_loss(lg, jnp.array(y_ids), jnp.array(lmask))
+    )(jnp.array(logits))
+    cases["softmax_xent"] = {
+        "inputs": {"logits": t(logits), "y": t(y_ids), "loss_mask": t(lmask)},
+        "outputs": {"loss": t(np.array([loss], np.float32)), "dlogits": t(dlogits)},
+    }
+
+    # one AdamW step (model.adamw_update contract), with and without decay
+    p = rng.standard_normal(10).astype(np.float32)
+    gr = rng.standard_normal(10).astype(np.float32)
+    m0 = (0.1 * rng.standard_normal(10)).astype(np.float32)
+    v0 = np.abs(0.1 * rng.standard_normal(10)).astype(np.float32)
+    for name, wd in [("adamw", 0.01), ("adamw_nodecay", 0.0)]:
+        np_, nm, nv = M.adamw_update(
+            {"p": jnp.array(p)}, {"p": jnp.array(gr)}, {"p": jnp.array(m0)},
+            {"p": jnp.array(v0)}, jnp.array(3.0), jnp.array(0.01), weight_decay=wd,
+        )
+        cases[name] = {
+            "inputs": {"p": t(p), "g": t(gr), "m": t(m0), "v": t(v0)},
+            "scalars": {"step": 3.0, "lr": 0.01, "weight_decay": wd},
+            "outputs": {"p": t(np_["p"]), "m": t(nm["p"]), "v": t(nv["p"])},
+        }
+
+    # prune ops (prune.py contract): (w, stats..., keep_frac) -> (w_pruned, mask)
+    w = rng.standard_normal((6, 10)).astype(np.float32)
+    xsq = np.abs(rng.standard_normal(10)).astype(np.float32) + 0.1
+    wp, mask = P.wanda_op(jnp.array(w), jnp.array(xsq), jnp.array(0.4))
+    cases["wanda"] = {
+        "inputs": {"w": t(w), "xnorm_sq": t(xsq)},
+        "scalars": {"keep_frac": 0.4},
+        "outputs": {"w_pruned": t(wp), "mask": t(mask)},
+    }
+
+    w = rng.standard_normal((5, 8)).astype(np.float32)
+    wp, mask = P.magnitude_op(jnp.array(w), jnp.array(0.6))
+    cases["magnitude"] = {
+        "inputs": {"w": t(w)},
+        "scalars": {"keep_frac": 0.6},
+        "outputs": {"w_pruned": t(wp), "mask": t(mask)},
+    }
+
+    w = rng.standard_normal((6, 8)).astype(np.float32)
+    xcal = rng.standard_normal((20, 8)).astype(np.float32)
+    gram = xcal.T @ xcal
+    wp, mask = P.sparsegpt_op(jnp.array(w), jnp.array(gram), jnp.array(0.5))
+    cases["sparsegpt"] = {
+        "inputs": {"w": t(w), "gram": t(gram)},
+        "scalars": {"keep_frac": 0.5},
+        "outputs": {"w_pruned": t(wp), "mask": t(mask)},
+    }
+    return cases
+
+
+def tiny_cfg(arch):
+    return dict(
+        arch=arch, d_model=16, n_layers=2, n_heads=2, d_ff=24,
+        vocab=32, seq_len=8, max_rank=4, rank_choices=[4, 3, 2],
+        lora_alpha=8.0,
+        targets=(["q", "k", "v", "up", "down"] if arch == "llama"
+                 else ["q", "v", "o", "up"]),
+        batch_train=2, batch_eval=2, prefix_len=3, bottleneck=5,
+    )
+
+
+def model_case(arch, rng):
+    cfg = tiny_cfg(arch)
+    params = {}
+    for n, s in M.base_param_specs(cfg):
+        if n.endswith(".g"):
+            params[n] = (1.0 + 0.05 * rng.standard_normal(s)).astype(np.float32)
+        elif n.endswith(".b"):
+            params[n] = (0.02 * rng.standard_normal(s)).astype(np.float32)
+        else:
+            params[n] = (0.25 * rng.standard_normal(s)).astype(np.float32)
+    adapters = {
+        n: (0.2 * rng.standard_normal(s)).astype(np.float32)
+        for n, s in M.adapter_param_specs(cfg)
+    }
+    mods = M.adapter_modules(cfg)
+    rank_mask = np.zeros((len(mods), cfg["max_rank"]), np.float32)
+    for i in range(len(mods)):
+        rank_mask[i, : [4, 3, 2][i % 3]] = 1.0
+    x = rng.integers(0, cfg["vocab"], (2, cfg["seq_len"])).astype(np.int32)
+    y = rng.integers(0, cfg["vocab"], (2, cfg["seq_len"])).astype(np.int32)
+    lmask = (rng.random((2, cfg["seq_len"])) > 0.4).astype(np.float32)
+
+    jp = {k: jnp.array(v) for k, v in params.items()}
+    jad = {k: jnp.array(v) for k, v in adapters.items()}
+
+    logits_base = M.forward(cfg, jp, jnp.array(x))
+    logits_ad = M.forward(cfg, jp, jnp.array(x), adapters=jad,
+                          rank_mask=jnp.array(rank_mask))
+
+    fw = M.Forward(cfg, jp, collect=True)
+    fw(jnp.array(x))
+    calib = {}
+    for site, _dim in M.calib_sites(cfg):
+        calib[f"sumsq.{site}"] = t(fw.stats[site][0])
+        calib[f"gram.{site}"] = t(fw.stats[site][1])
+
+    loss, grads = jax.value_and_grad(
+        lambda adp: M.lm_loss(
+            M.forward(cfg, jp, jnp.array(x), adapters=adp,
+                      rank_mask=jnp.array(rank_mask)),
+            jnp.array(y), jnp.array(lmask),
+        )
+    )(jad)
+
+    # full-FT base gradients (GradMode::Base parity: embed scatter, norm
+    # gains/biases, lm_head, every matmul)
+    loss_full, grads_full = jax.value_and_grad(
+        lambda bp: M.lm_loss(
+            M.forward(cfg, bp, jnp.array(x)), jnp.array(y), jnp.array(lmask)
+        )
+    )(jp)
+
+    case = {
+        "config": {k: v for k, v in cfg.items()},
+        "inputs": {
+            **{n: t(v) for n, v in params.items()},
+            **{n: t(v) for n, v in adapters.items()},
+            "x": t(x), "y": t(y), "loss_mask": t(lmask),
+            "rank_mask": t(rank_mask),
+        },
+        "outputs": {
+            "logits_base": t(logits_base),
+            "logits_adapters": t(logits_ad),
+            "loss_nls": t(np.array([loss], np.float32)),
+            "loss_full": t(np.array([loss_full], np.float32)),
+            **calib,
+            **{f"grad.{n}": t(g) for n, g in grads.items()},
+            **{f"grad_base.{n}": t(g) for n, g in grads_full.items()},
+        },
+    }
+
+    # PEFT baselines on the same base: forwards + their gradients
+    # (llama only, keeps files small)
+    if arch == "llama":
+        for kind, specs_fn in [("prefix", M.prefix_param_specs),
+                               ("series", M.series_param_specs),
+                               ("parallel", M.parallel_param_specs)]:
+            extra = {n: (0.15 * rng.standard_normal(s)).astype(np.float32)
+                     for n, s in specs_fn(cfg)}
+            jex = {k: jnp.array(v) for k, v in extra.items()}
+            lg = M.forward(cfg, jp, jnp.array(x), **{kind: jex})
+            loss_e, grads_e = jax.value_and_grad(
+                lambda e, kind=kind: M.lm_loss(
+                    M.forward(cfg, jp, jnp.array(x), **{kind: e}),
+                    jnp.array(y), jnp.array(lmask),
+                )
+            )(jex)
+            case["inputs"].update({n: t(v) for n, v in extra.items()})
+            case["outputs"][f"logits_{kind}"] = t(lg)
+            case["outputs"][f"loss_{kind}"] = t(np.array([loss_e], np.float32))
+            case["outputs"].update(
+                {f"grad_{kind}.{n}": t(g) for n, g in grads_e.items()}
+            )
+    return case
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../rust/tests/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    rng = np.random.default_rng(SEED)
+
+    with open(os.path.join(args.out_dir, "kernels.json"), "w") as f:
+        json.dump(kernel_cases(rng), f, separators=(",", ":"))
+    for arch in ["llama", "mpt"]:
+        with open(os.path.join(args.out_dir, f"model_{arch}.json"), "w") as f:
+            json.dump(model_case(arch, rng), f, separators=(",", ":"))
+    print(f"[fixtures] wrote kernels.json, model_llama.json, model_mpt.json -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,9 +44,12 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Backend comes from `SHEARS_BACKEND` (native|pjrt|auto, default
+    /// auto) so the same bench binary compares backends apples-to-apples.
     pub fn new() -> Bench {
-        let rt = Runtime::new("artifacts").expect("run `make artifacts` first");
-        let manifest = Manifest::load("artifacts").unwrap();
+        let rt = Runtime::from_env("artifacts").expect("backend init");
+        let manifest = rt.manifest().expect("manifest");
+        eprintln!("[bench] backend={}", rt.backend_name());
         Bench { rt, manifest }
     }
 

@@ -56,7 +56,7 @@ fn main() {
     });
 
     // buffer path: base + adapters resident, batch per-call
-    let mut resident: Vec<Option<xla::PjRtBuffer>> = Vec::new();
+    let mut resident: Vec<Option<shears::runtime::DeviceBuffer>> = Vec::new();
     for i in &entry.inputs {
         resident.push(match i.name.as_str() {
             "x" | "rank_mask" => None,

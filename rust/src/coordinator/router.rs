@@ -3,14 +3,15 @@
 //!
 //! Callers submit evaluation requests (a set of examples + an optional
 //! sub-adapter rank mask) from any thread; a dedicated runtime thread
-//! owns the PJRT client (PJRT handles are not `Send`) and coalesces
+//! owns the backend (PJRT handles and the native exe cache are not
+//! `Send`) and coalesces
 //! queued examples into full `batch_eval`-sized forwards. Examples from
 //! *different* requests sharing the same rank mask ride the same forward
 //! pass — dynamic batching — and results are scattered back per request.
 
 use crate::data::batch::{build_batch, MaskMode};
 use crate::data::{Example, Vocab};
-use crate::model::{Manifest, ParamStore};
+use crate::model::ParamStore;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use crate::train::{exact_match, forward_logits};
@@ -56,9 +57,12 @@ pub struct EvalRouter {
 }
 
 impl EvalRouter {
-    /// Spawn the router. The runtime thread builds its own PJRT client
-    /// from `artifacts_dir` and owns the stores.
+    /// Spawn the router. The runtime thread builds its own backend from
+    /// `backend` (`native|pjrt|auto`, same grammar as `--backend`) over
+    /// `artifacts_dir` and owns the stores — an explicit spec, so the
+    /// spawner's backend choice is never overridden by env/auto-detection.
     pub fn spawn(
+        backend: String,
         artifacts_dir: String,
         config_name: String,
         entry_name: String,
@@ -69,9 +73,15 @@ impl EvalRouter {
         let join = std::thread::Builder::new()
             .name("shears-eval-router".into())
             .spawn(move || {
-                if let Err(e) =
-                    router_main(rx, &artifacts_dir, &config_name, &entry_name, stores, max_wait)
-                {
+                if let Err(e) = router_main(
+                    rx,
+                    &backend,
+                    &artifacts_dir,
+                    &config_name,
+                    &entry_name,
+                    stores,
+                    max_wait,
+                ) {
                     crate::warn_!("router exited with error: {e:#}");
                 }
             })
@@ -122,14 +132,15 @@ fn mask_key(m: &Option<HostTensor>) -> Vec<u8> {
 
 fn router_main(
     rx: Receiver<Msg>,
+    backend: &str,
     artifacts_dir: &str,
     config_name: &str,
     entry_name: &str,
     stores: Vec<ParamStore>,
     max_wait: Duration,
 ) -> Result<()> {
-    let rt = Runtime::new(artifacts_dir)?;
-    let manifest = Manifest::load(artifacts_dir)?;
+    let rt = Runtime::from_flag(backend, artifacts_dir)?;
+    let manifest = rt.manifest()?;
     let cfg = manifest.config(config_name)?;
     let entry = cfg.entry(entry_name)?;
     let exe = rt.load(&entry.file)?;

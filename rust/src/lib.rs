@@ -5,17 +5,22 @@
 //! rust + JAX + Pallas stack. This crate is Layer 3: the coordinator that
 //! owns the Shears pipeline — unstructured sparsification, super-adapter
 //! training via NLS, and sub-adapter search — plus every substrate it
-//! needs (synthetic task generators, search algorithms, a PJRT runtime,
-//! an eval router, a serving loop).
+//! needs (synthetic task generators, search algorithms, a pluggable
+//! runtime, an eval router, a serving loop).
 //!
-//! Python is build-time only: `make artifacts` AOT-lowers the L2 JAX model
-//! (which calls the L1 Pallas kernels) to HLO text; this crate loads and
-//! executes those artifacts through the PJRT C API (`xla` crate) — no
-//! Python anywhere on the request path.
+//! Execution is backend-pluggable ([`runtime`]):
 //!
-//! Start with [`coordinator::pipeline::ShearsPipeline`] for the paper's
-//! §3 workflow, or `examples/quickstart.rs` for the smallest end-to-end
-//! program.
+//! * **native** (default) — a pure-Rust CPU executor ([`ops`]) that
+//!   implements every manifest entry point (forwards, fused train steps,
+//!   calibration, prune ops) against the built-in manifest
+//!   ([`model::builtin`]). Hermetic: no Python, no XLA, no `artifacts/`.
+//! * **pjrt** (cargo feature `xla`) — `make artifacts` AOT-lowers the L2
+//!   JAX model (which calls the L1 Pallas kernels) to HLO text; this
+//!   crate loads and executes those artifacts through the PJRT C API.
+//!
+//! Either way there is no Python on the request path. Start with
+//! [`coordinator::pipeline::ShearsPipeline`] for the paper's §3 workflow,
+//! or `examples/quickstart.rs` for the smallest end-to-end program.
 
 pub mod bench_util;
 pub mod cli;
@@ -24,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod model;
 pub mod nls;
+pub mod ops;
 pub mod pruning;
 pub mod runtime;
 pub mod search;

@@ -1,11 +1,14 @@
 //! `shears` — the Layer-3 leader binary.
 //!
 //! ```text
-//! shears info      [--artifacts DIR]
+//! shears info      [--backend native|pjrt|auto --artifacts DIR]
 //! shears pipeline  [--config NAME --method M --sparsity S --steps N ...]
 //! shears eval      [--config NAME --tasks t1,t2 ...]   (base model, w/o tune)
 //! shears serve     [--config NAME --requests N ...]
 //! ```
+//!
+//! `--backend native` (or any build without artifacts) runs the whole
+//! workflow on the pure-Rust CPU executor — no Python or XLA required.
 //!
 //! Every subcommand is a thin shell over the library (`shears::*`); the
 //! real functionality lives there and in examples/ + rust/benches/.
@@ -14,7 +17,6 @@ use anyhow::{bail, Result};
 use shears::cli::{usage, Args, FlagSpec};
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{self, Task, Vocab};
-use shears::model::Manifest;
 use shears::pruning::Method;
 use shears::runtime::Runtime;
 use shears::serve::{Decoder, GenRequest};
@@ -24,6 +26,11 @@ use shears::util::rng::Rng;
 fn flags() -> Vec<FlagSpec> {
     vec![
         FlagSpec { name: "artifacts", default: Some("artifacts"), help: "artifacts directory" },
+        FlagSpec {
+            name: "backend",
+            default: Some("auto"),
+            help: "native|pjrt|auto (auto = pjrt when built with `xla` and artifacts exist)",
+        },
         FlagSpec { name: "config", default: Some("tiny-llama"), help: "model config name" },
         FlagSpec { name: "method", default: Some("wanda"), help: "wanda|magnitude|sparsegpt" },
         FlagSpec { name: "sparsity", default: Some("0.5"), help: "target sparsity" },
@@ -81,18 +88,24 @@ fn main() -> Result<()> {
     }
 }
 
-/// Compile-check artifacts one by one (debug aid: XLA aborts the process
-/// on some unsupported ops, so each file gets its own verdict line first).
+/// Load-check every manifest entry point one by one (debug aid: XLA
+/// aborts the process on some unsupported ops, so each file gets its own
+/// verdict line first; on the native backend this verifies entry-point
+/// coverage instead).
 fn cmd_check(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get("artifacts"))?;
-    let dir = std::path::Path::new(args.get("artifacts"));
+    let rt = Runtime::from_flag(args.get("backend"), args.get("artifacts"))?;
+    let manifest = rt.manifest()?;
     let only = args.get("config"); // reuse flag: substring filter
-    let mut files: Vec<String> = std::fs::read_dir(dir)?
-        .filter_map(|e| e.ok())
-        .map(|e| e.file_name().to_string_lossy().to_string())
-        .filter(|f| f.ends_with(".hlo.txt") && f.contains(only))
+    let mut files: Vec<String> = manifest
+        .configs
+        .values()
+        .flat_map(|c| c.entrypoints.values().map(|e| e.file.clone()))
+        .chain(manifest.prune_ops.values().map(|p| p.file.clone()))
+        .filter(|f| f.contains(only))
         .collect();
     files.sort();
+    files.dedup();
+    println!("backend: {}", rt.backend_name());
     for f in files {
         println!("checking {f} ...");
         match rt.load(&f) {
@@ -110,7 +123,6 @@ fn cmd_check(args: &Args) -> Result<()> {
             .nth(1)
             .unwrap_or("forward_eval_base")
             .to_string();
-        let manifest = Manifest::load(args.get("artifacts"))?;
         let cfg = manifest.config("tiny-llama")?;
         let mut rng = Rng::new(0);
         let base = shears::model::ParamStore::init_base(cfg, &mut rng, 0.05);
@@ -158,8 +170,15 @@ fn cmd_check(args: &Args) -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(args.get("artifacts"))?;
-    println!("shears artifacts @ {}", args.get("artifacts"));
+    let rt = Runtime::from_flag(args.get("backend"), args.get("artifacts"))?;
+    let manifest = rt.manifest()?;
+    println!(
+        "shears backend={} manifest={}",
+        rt.backend_name(),
+        rt.artifacts_dir()
+            .map(|d| d.display().to_string())
+            .unwrap_or_else(|| "builtin".into())
+    );
     for (name, cfg) in &manifest.configs {
         let base: usize = shears::model::ModelConfig::numel(&cfg.base_params);
         let adpt: usize = shears::model::ModelConfig::numel(&cfg.adapter_params);
@@ -179,8 +198,8 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get("artifacts"))?;
-    let manifest = Manifest::load(args.get("artifacts"))?;
+    let rt = Runtime::from_flag(args.get("backend"), args.get("artifacts"))?;
+    let manifest = rt.manifest()?;
     let opts = PipelineOpts {
         config: args.get("config").to_string(),
         method: parse_method(args.get("method"))?,
@@ -205,8 +224,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     // zero-shot / w-o-tune evaluation of the (pretrained) base model
-    let rt = Runtime::new(args.get("artifacts"))?;
-    let manifest = Manifest::load(args.get("artifacts"))?;
+    let rt = Runtime::from_flag(args.get("backend"), args.get("artifacts"))?;
+    let manifest = rt.manifest()?;
     let cfg = manifest.config(args.get("config"))?;
     let vocab = Vocab::new(cfg.vocab);
     let opts = PipelineOpts {
@@ -233,8 +252,8 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let rt = Runtime::new(args.get("artifacts"))?;
-    let manifest = Manifest::load(args.get("artifacts"))?;
+    let rt = Runtime::from_flag(args.get("backend"), args.get("artifacts"))?;
+    let manifest = rt.manifest()?;
     let cfg = manifest.config(args.get("config"))?;
     let opts = PipelineOpts {
         config: args.get("config").to_string(),

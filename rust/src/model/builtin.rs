@@ -1,0 +1,541 @@
+//! Built-in manifest: the L2↔L3 ABI constructed in pure Rust.
+//!
+//! Mirrors `python/compile/model.py` (CONFIGS + the `*_param_specs`
+//! functions), `train.py` (entry-point signatures) and `aot.py` (file
+//! naming, ENTRY_SETS) exactly, so the native CPU backend can serve the
+//! same entry points as the AOT'd artifacts without `make artifacts`
+//! ever having run. Entry `file` names follow the artifact convention
+//! (`{config}__{entry}.hlo.txt`, `prune__{kind}_{n}x{k}.hlo.txt`), which
+//! keeps [`crate::runtime::Runtime::load`] backend-agnostic: the same
+//! file name resolves to a compiled executable on PJRT and to a native
+//! op here.
+//!
+//! If `python/compile/model.py` changes, this module must change with it
+//! — the parity suite (`rust/tests/parity.rs`) pins the numerics and the
+//! golden fixtures record the Python side's shapes.
+
+use crate::model::manifest::{
+    EntryPoint, IoSpec, Manifest, ModelConfig, ParamSpec, PruneOpSpec, Prunable,
+};
+use std::collections::BTreeMap;
+
+/// Scalar knobs of one model configuration (mirrors a CONFIGS entry).
+#[derive(Clone, Debug)]
+pub struct ConfigSpec {
+    pub name: String,
+    pub arch: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub max_rank: usize,
+    pub rank_choices: Vec<usize>,
+    pub lora_alpha: f64,
+    pub targets: Vec<String>,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub prefix_len: usize,
+    pub bottleneck: usize,
+}
+
+fn strs(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+/// The four standard configurations (model.py CONFIGS, verbatim).
+pub fn standard_configs() -> Vec<ConfigSpec> {
+    vec![
+        ConfigSpec {
+            name: "tiny-llama".into(),
+            arch: "llama".into(),
+            d_model: 48,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 128,
+            vocab: 256,
+            seq_len: 48,
+            max_rank: 8,
+            rank_choices: vec![8, 6, 4],
+            lora_alpha: 16.0,
+            targets: strs(&["q", "k", "v", "up", "down"]),
+            batch_train: 8,
+            batch_eval: 16,
+            prefix_len: 4,
+            bottleneck: 8,
+        },
+        ConfigSpec {
+            name: "llama-sim-s".into(),
+            arch: "llama".into(),
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 344,
+            vocab: 512,
+            seq_len: 64,
+            max_rank: 8,
+            rank_choices: vec![8, 6, 4],
+            lora_alpha: 16.0,
+            targets: strs(&["q", "k", "v", "up", "gate", "down"]),
+            batch_train: 16,
+            batch_eval: 32,
+            prefix_len: 8,
+            bottleneck: 16,
+        },
+        ConfigSpec {
+            name: "llama-sim-m".into(),
+            arch: "llama".into(),
+            d_model: 192,
+            n_layers: 6,
+            n_heads: 8,
+            d_ff: 512,
+            vocab: 512,
+            seq_len: 64,
+            max_rank: 8,
+            rank_choices: vec![8, 6, 4],
+            lora_alpha: 16.0,
+            targets: strs(&["q", "k", "v", "up", "down"]),
+            batch_train: 16,
+            batch_eval: 32,
+            prefix_len: 8,
+            bottleneck: 16,
+        },
+        ConfigSpec {
+            name: "mpt-sim".into(),
+            arch: "mpt".into(),
+            d_model: 128,
+            n_layers: 4,
+            n_heads: 8,
+            d_ff: 512,
+            vocab: 512,
+            seq_len: 64,
+            max_rank: 8,
+            rank_choices: vec![8, 6, 4],
+            lora_alpha: 16.0,
+            targets: strs(&["q", "k", "v", "o", "up", "down"]),
+            batch_train: 16,
+            batch_eval: 32,
+            prefix_len: 8,
+            bottleneck: 16,
+        },
+    ]
+}
+
+/// (out, in) dims of a target's weight (model.py `_target_shape`).
+fn target_shape(d: usize, f: usize, t: &str) -> (usize, usize) {
+    match t {
+        "q" | "k" | "v" | "o" => (d, d),
+        "gate" | "up" => (f, d),
+        "down" => (d, f),
+        other => panic!("unknown adapter target '{other}'"),
+    }
+}
+
+fn p(name: String, shape: Vec<usize>) -> ParamSpec {
+    ParamSpec { name, shape }
+}
+
+fn base_param_specs(c: &ConfigSpec) -> Vec<ParamSpec> {
+    let (d, f, v) = (c.d_model, c.d_ff, c.vocab);
+    let llama = c.arch == "llama";
+    let mut s = vec![p("embed".into(), vec![v, d])];
+    for i in 0..c.n_layers {
+        let pre = format!("layers.{i}.");
+        s.push(p(format!("{pre}attn_norm.g"), vec![d]));
+        if !llama {
+            s.push(p(format!("{pre}attn_norm.b"), vec![d]));
+        }
+        for t in ["q", "k", "v", "o"] {
+            s.push(p(format!("{pre}attn.{t}"), vec![d, d]));
+        }
+        s.push(p(format!("{pre}mlp_norm.g"), vec![d]));
+        if !llama {
+            s.push(p(format!("{pre}mlp_norm.b"), vec![d]));
+        }
+        if llama {
+            s.push(p(format!("{pre}mlp.gate"), vec![f, d]));
+        }
+        s.push(p(format!("{pre}mlp.up"), vec![f, d]));
+        s.push(p(format!("{pre}mlp.down"), vec![d, f]));
+    }
+    s.push(p("final_norm.g".into(), vec![d]));
+    if !llama {
+        s.push(p("final_norm.b".into(), vec![d]));
+    }
+    s.push(p("lm_head".into(), vec![v, d]));
+    s
+}
+
+fn adapter_modules(c: &ConfigSpec) -> Vec<String> {
+    let mut mods = Vec::new();
+    for i in 0..c.n_layers {
+        for t in &c.targets {
+            let sect = if matches!(t.as_str(), "q" | "k" | "v" | "o") { "attn" } else { "mlp" };
+            mods.push(format!("layers.{i}.{sect}.{t}"));
+        }
+    }
+    mods
+}
+
+fn adapter_param_specs(c: &ConfigSpec) -> Vec<ParamSpec> {
+    let r = c.max_rank;
+    let mut s = Vec::new();
+    for m in adapter_modules(c) {
+        let t = m.rsplit('.').next().unwrap();
+        let (out, inp) = target_shape(c.d_model, c.d_ff, t);
+        s.push(p(format!("lora_a.{m}"), vec![r, inp]));
+        s.push(p(format!("lora_b.{m}"), vec![out, r]));
+    }
+    s
+}
+
+fn prefix_param_specs(c: &ConfigSpec) -> Vec<ParamSpec> {
+    let dh = c.d_model / c.n_heads;
+    let mut s = Vec::new();
+    for i in 0..c.n_layers {
+        s.push(p(format!("prefix_k.{i}"), vec![c.n_heads, c.prefix_len, dh]));
+        s.push(p(format!("prefix_v.{i}"), vec![c.n_heads, c.prefix_len, dh]));
+    }
+    s
+}
+
+fn series_param_specs(c: &ConfigSpec) -> Vec<ParamSpec> {
+    let (d, bn) = (c.d_model, c.bottleneck);
+    let mut s = Vec::new();
+    for i in 0..c.n_layers {
+        s.push(p(format!("series_down.{i}"), vec![bn, d]));
+        s.push(p(format!("series_up.{i}"), vec![d, bn]));
+    }
+    s
+}
+
+fn parallel_param_specs(c: &ConfigSpec) -> Vec<ParamSpec> {
+    let (d, bn) = (c.d_model, c.bottleneck);
+    let mut s = Vec::new();
+    for i in 0..c.n_layers {
+        s.push(p(format!("parallel_down.{i}"), vec![bn, d]));
+        s.push(p(format!("parallel_up.{i}"), vec![d, bn]));
+    }
+    s
+}
+
+fn prunable_specs(c: &ConfigSpec) -> Vec<Prunable> {
+    let (d, f) = (c.d_model, c.d_ff);
+    let llama = c.arch == "llama";
+    let mut s = Vec::new();
+    for i in 0..c.n_layers {
+        let pre = format!("layers.{i}.");
+        for t in ["q", "k", "v"] {
+            s.push(Prunable {
+                name: format!("{pre}attn.{t}"),
+                shape: vec![d, d],
+                site: format!("{i}.attn_in"),
+            });
+        }
+        s.push(Prunable {
+            name: format!("{pre}attn.o"),
+            shape: vec![d, d],
+            site: format!("{i}.o_in"),
+        });
+        if llama {
+            s.push(Prunable {
+                name: format!("{pre}mlp.gate"),
+                shape: vec![f, d],
+                site: format!("{i}.mlp_in"),
+            });
+        }
+        s.push(Prunable {
+            name: format!("{pre}mlp.up"),
+            shape: vec![f, d],
+            site: format!("{i}.mlp_in"),
+        });
+        s.push(Prunable {
+            name: format!("{pre}mlp.down"),
+            shape: vec![d, f],
+            site: format!("{i}.down_in"),
+        });
+    }
+    s
+}
+
+fn calib_sites(c: &ConfigSpec) -> Vec<(String, usize)> {
+    let (d, f) = (c.d_model, c.d_ff);
+    let mut s = Vec::new();
+    for i in 0..c.n_layers {
+        s.push((format!("{i}.attn_in"), d));
+        s.push((format!("{i}.o_in"), d));
+        s.push((format!("{i}.mlp_in"), d));
+        s.push((format!("{i}.down_in"), f));
+    }
+    s
+}
+
+// ------------------------------------------------------- entry signatures
+
+fn io_f32(name: impl Into<String>, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.into(), shape, dtype: "f32".into() }
+}
+
+fn io_i32(name: impl Into<String>, shape: Vec<usize>) -> IoSpec {
+    IoSpec { name: name.into(), shape, dtype: "i32".into() }
+}
+
+fn params_io(specs: &[ParamSpec], prefix: &str) -> Vec<IoSpec> {
+    specs
+        .iter()
+        .map(|s| io_f32(format!("{prefix}{}", s.name), s.shape.clone()))
+        .collect()
+}
+
+/// step, lr, x, y, loss_mask — the train-batch tail shared by every step.
+fn train_tail(c: &ConfigSpec) -> Vec<IoSpec> {
+    vec![
+        io_f32("step", vec![]),
+        io_f32("lr", vec![]),
+        io_i32("x", vec![c.batch_train, c.seq_len]),
+        io_i32("y", vec![c.batch_train, c.seq_len]),
+        io_f32("loss_mask", vec![c.batch_train, c.seq_len]),
+    ]
+}
+
+fn entry(c: &ConfigSpec, entry_name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>) -> EntryPoint {
+    EntryPoint {
+        file: format!("{}__{}.hlo.txt", c.name, entry_name),
+        inputs,
+        outputs,
+    }
+}
+
+fn build_entrypoints(c: &ConfigSpec) -> BTreeMap<String, EntryPoint> {
+    let base = base_param_specs(c);
+    let adpt = adapter_param_specs(c);
+    let prun = prunable_specs(c);
+    let n_mods = adapter_modules(c).len();
+    let r = c.max_rank;
+    let (be, s, v) = (c.batch_eval, c.seq_len, c.vocab);
+    let logits = vec![io_f32("logits", vec![be, s, v])];
+    let mut map = BTreeMap::new();
+
+    // train_step_nls: super-adapter NLS step (train.py build_train_step_nls)
+    {
+        let mut inputs = params_io(&base, "");
+        inputs.extend(params_io(&adpt, ""));
+        inputs.extend(params_io(&adpt, "m."));
+        inputs.extend(params_io(&adpt, "v."));
+        inputs.extend(train_tail(c));
+        inputs.push(io_f32("rank_mask", vec![n_mods, r]));
+        let mut outputs = params_io(&adpt, "");
+        outputs.extend(params_io(&adpt, "m."));
+        outputs.extend(params_io(&adpt, "v."));
+        outputs.push(io_f32("loss", vec![]));
+        map.insert("train_step_nls".to_string(), entry(c, "train_step_nls", inputs, outputs));
+    }
+
+    // train_step_full: full FT with mask re-application (SparseFT / pretrain)
+    {
+        let mut inputs = params_io(&base, "");
+        inputs.extend(params_io(&base, "m."));
+        inputs.extend(params_io(&base, "v."));
+        for pr in &prun {
+            inputs.push(io_f32(format!("mask.{}", pr.name), pr.shape.clone()));
+        }
+        inputs.extend(train_tail(c));
+        let mut outputs = params_io(&base, "");
+        outputs.extend(params_io(&base, "m."));
+        outputs.extend(params_io(&base, "v."));
+        outputs.push(io_f32("loss", vec![]));
+        map.insert("train_step_full".to_string(), entry(c, "train_step_full", inputs, outputs));
+    }
+
+    // PEFT-baseline train steps (shared shape)
+    for (name, extra) in [
+        ("train_step_prefix", prefix_param_specs(c)),
+        ("train_step_series", series_param_specs(c)),
+        ("train_step_parallel", parallel_param_specs(c)),
+    ] {
+        let mut inputs = params_io(&base, "");
+        inputs.extend(params_io(&extra, ""));
+        inputs.extend(params_io(&extra, "m."));
+        inputs.extend(params_io(&extra, "v."));
+        inputs.extend(train_tail(c));
+        let mut outputs = params_io(&extra, "");
+        outputs.extend(params_io(&extra, "m."));
+        outputs.extend(params_io(&extra, "v."));
+        outputs.push(io_f32("loss", vec![]));
+        map.insert(name.to_string(), entry(c, name, inputs, outputs));
+    }
+
+    // forward_eval (+ the pallas-lowered alias; native executes one impl)
+    let fwd_names: &[&str] = if matches!(c.name.as_str(), "tiny-llama" | "llama-sim-s") {
+        &["forward_eval", "forward_eval_pallas"]
+    } else {
+        &["forward_eval"]
+    };
+    for name in fwd_names {
+        let mut inputs = params_io(&base, "");
+        inputs.extend(params_io(&adpt, ""));
+        inputs.push(io_i32("x", vec![be, s]));
+        inputs.push(io_f32("rank_mask", vec![n_mods, r]));
+        map.insert(name.to_string(), entry(c, name, inputs, logits.clone()));
+    }
+
+    // forward_eval_base
+    {
+        let mut inputs = params_io(&base, "");
+        inputs.push(io_i32("x", vec![be, s]));
+        map.insert(
+            "forward_eval_base".to_string(),
+            entry(c, "forward_eval_base", inputs, logits.clone()),
+        );
+    }
+
+    // PEFT-baseline forwards
+    for (name, extra) in [
+        ("forward_eval_prefix", prefix_param_specs(c)),
+        ("forward_eval_series", series_param_specs(c)),
+        ("forward_eval_parallel", parallel_param_specs(c)),
+    ] {
+        let mut inputs = params_io(&base, "");
+        inputs.extend(params_io(&extra, ""));
+        inputs.push(io_i32("x", vec![be, s]));
+        map.insert(name.to_string(), entry(c, name, inputs, logits.clone()));
+    }
+
+    // calib_stats: per-site (Σx², Gram) for Wanda/SparseGPT
+    {
+        let mut inputs = params_io(&base, "");
+        inputs.push(io_i32("x", vec![be, s]));
+        let mut outputs = Vec::new();
+        for (site, dim) in calib_sites(c) {
+            outputs.push(io_f32(format!("sumsq.{site}"), vec![dim]));
+            outputs.push(io_f32(format!("gram.{site}"), vec![dim, dim]));
+        }
+        map.insert("calib_stats".to_string(), entry(c, "calib_stats", inputs, outputs));
+    }
+
+    map
+}
+
+/// Build a full [`ModelConfig`] (specs + entry points) from scalar knobs.
+pub fn make_config(spec: &ConfigSpec) -> ModelConfig {
+    ModelConfig {
+        name: spec.name.clone(),
+        arch: spec.arch.clone(),
+        d_model: spec.d_model,
+        n_layers: spec.n_layers,
+        n_heads: spec.n_heads,
+        d_ff: spec.d_ff,
+        vocab: spec.vocab,
+        seq_len: spec.seq_len,
+        max_rank: spec.max_rank,
+        rank_choices: spec.rank_choices.clone(),
+        lora_alpha: spec.lora_alpha,
+        targets: spec.targets.clone(),
+        batch_train: spec.batch_train,
+        batch_eval: spec.batch_eval,
+        prefix_len: spec.prefix_len,
+        bottleneck: spec.bottleneck,
+        base_params: base_param_specs(spec),
+        adapter_params: adapter_param_specs(spec),
+        prefix_params: prefix_param_specs(spec),
+        series_params: series_param_specs(spec),
+        parallel_params: parallel_param_specs(spec),
+        adapter_modules: adapter_modules(spec),
+        prunable: prunable_specs(spec),
+        sites: calib_sites(spec),
+        entrypoints: build_entrypoints(spec),
+    }
+}
+
+/// The built-in manifest: all standard configs + every prune op shape.
+pub fn builtin_manifest() -> Manifest {
+    let specs = standard_configs();
+    let mut configs = BTreeMap::new();
+    let mut shapes = std::collections::BTreeSet::new();
+    for spec in &specs {
+        let cfg = make_config(spec);
+        for pr in &cfg.prunable {
+            shapes.insert((pr.shape[0], pr.shape[1]));
+        }
+        configs.insert(spec.name.clone(), cfg);
+    }
+    let mut prune_ops = BTreeMap::new();
+    for (n, k) in shapes {
+        for kind in ["wanda", "magnitude", "sparsegpt"] {
+            let mut inputs = vec![io_f32("w", vec![n, k])];
+            match kind {
+                "wanda" => inputs.push(io_f32("xnorm_sq", vec![k])),
+                "sparsegpt" => inputs.push(io_f32("gram", vec![k, k])),
+                _ => {}
+            }
+            inputs.push(io_f32("keep_frac", vec![]));
+            prune_ops.insert(
+                format!("{kind}_{n}x{k}"),
+                PruneOpSpec {
+                    file: format!("prune__{kind}_{n}x{k}.hlo.txt"),
+                    kind: kind.to_string(),
+                    shape: (n, k),
+                    inputs,
+                    outputs: vec![io_f32("w_pruned", vec![n, k]), io_f32("mask", vec![n, k])],
+                },
+            );
+        }
+    }
+    Manifest { configs, prune_ops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_manifest_mirrors_python_abi() {
+        let m = builtin_manifest();
+        assert_eq!(m.configs.len(), 4);
+        let c = m.config("tiny-llama").unwrap();
+        assert_eq!(c.d_model, 48);
+        assert_eq!(c.adapter_modules.len(), 2 * 5);
+        // llama base params: embed + L*(2 norms + 4 attn + 3 mlp) + final + head
+        assert_eq!(c.base_params.len(), 1 + 2 * 9 + 2);
+        assert_eq!(c.entrypoints.len(), 12);
+        // NLS signature: base + 3*adapters + 6 tail inputs
+        let e = c.entry("train_step_nls").unwrap();
+        assert_eq!(e.inputs.len(), c.base_params.len() + 3 * c.adapter_params.len() + 6);
+        assert_eq!(
+            e.outputs.last().map(|o| o.name.as_str()),
+            Some("loss")
+        );
+        // the rank-mask input is declared (train/mod.rs keys off it)
+        assert!(e.inputs.iter().any(|i| i.name == "rank_mask"));
+        // prune ops cover every prunable shape in all three kinds
+        for cfg in m.configs.values() {
+            for pr in &cfg.prunable {
+                for kind in ["wanda", "magnitude", "sparsegpt"] {
+                    assert!(m.prune_op(kind, pr.shape[0], pr.shape[1]).is_ok());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mpt_has_layernorm_biases_and_no_gate() {
+        let m = builtin_manifest();
+        let c = m.config("mpt-sim").unwrap();
+        assert!(c.base_params.iter().any(|p| p.name == "layers.0.attn_norm.b"));
+        assert!(!c.base_params.iter().any(|p| p.name.contains("mlp.gate")));
+        assert!(c.entry("forward_eval_pallas").is_err());
+        assert!(c.entry("forward_eval").is_ok());
+    }
+
+    #[test]
+    fn calib_outputs_follow_site_order() {
+        let m = builtin_manifest();
+        let c = m.config("tiny-llama").unwrap();
+        let e = c.entry("calib_stats").unwrap();
+        assert_eq!(e.outputs.len(), 2 * c.sites.len());
+        assert_eq!(e.outputs[0].name, "sumsq.0.attn_in");
+        assert_eq!(e.outputs[1].name, "gram.0.attn_in");
+        assert_eq!(e.outputs[1].shape, vec![48, 48]);
+    }
+}

@@ -55,6 +55,10 @@ pub struct ModelConfig {
     pub targets: Vec<String>,
     pub batch_train: usize,
     pub batch_eval: usize,
+    /// prefix-tuning baseline KV length (lenient default for old manifests)
+    pub prefix_len: usize,
+    /// series/parallel adapter bottleneck dim (lenient default)
+    pub bottleneck: usize,
     pub base_params: Vec<ParamSpec>,
     pub adapter_params: Vec<ParamSpec>,
     pub prefix_params: Vec<ParamSpec>,
@@ -110,6 +114,11 @@ fn parse_io(j: &Json) -> Result<Vec<IoSpec>> {
 }
 
 impl Manifest {
+    /// The built-in manifest (native backend ABI, no artifacts needed).
+    pub fn builtin() -> Manifest {
+        crate::model::builtin::builtin_manifest()
+    }
+
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
         let path = artifacts_dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -182,6 +191,8 @@ impl Manifest {
                 .collect(),
             batch_train: us("batch_train")?,
             batch_eval: us("batch_eval")?,
+            prefix_len: cj.at("prefix_len").as_usize().unwrap_or(4),
+            bottleneck: cj.at("bottleneck").as_usize().unwrap_or(8),
             base_params: parse_params(cj.at("base_params"))?,
             adapter_params: parse_params(cj.at("adapter_params"))?,
             prefix_params: parse_params(cj.at("prefix_params"))?,

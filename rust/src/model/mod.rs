@@ -5,8 +5,10 @@
 //! signatures, prune-op shapes). [`params`] owns the host-side parameter
 //! state (`ParamStore`): init, checkpointing, counting.
 
+pub mod builtin;
 pub mod manifest;
 pub mod params;
 
+pub use builtin::{builtin_manifest, make_config, standard_configs, ConfigSpec};
 pub use manifest::{EntryPoint, IoSpec, Manifest, ModelConfig, ParamSpec, PruneOpSpec, Prunable};
 pub use params::ParamStore;

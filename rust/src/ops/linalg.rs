@@ -1,0 +1,222 @@
+//! Dense + sparsity-aware matmul primitives for the native CPU backend.
+//!
+//! Weight convention matches the whole stack (`kernels/ref.py`): weights
+//! are `[out, in]` row-major, activations `[M, K]` row-major, so the hot
+//! product `Y = X @ Wᵀ` is a grid of contiguous-row dot products — the
+//! cache-friendly layout that needs no transposition. The dot kernel is
+//! 4-way blocked (independent partial sums) so LLVM can vectorize the
+//! f32 reduction.
+//!
+//! [`matmul_nt_auto`] is the §3.1 sparsity lever: for a pruned weight it
+//! gathers each row's nonzero (index, value) pairs and skips the zeros —
+//! ~2× fewer multiplies at the paper's 50% sparsity for an O(N·K) scan
+//! per call (amortized against the O(M·N·K) product; caching the gather
+//! per frozen weight is a planned follow-up, see ROADMAP).
+
+/// Fraction of zeros in a weight above which the gather-and-skip path wins.
+const SPARSE_THRESHOLD: f64 = 0.3;
+
+/// Blocked dot product of two equal-length slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * 4..a.len() {
+        tail += a[j] * b[j];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` (dense).
+pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    let mut y = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let yr = &mut y[mi * n..(mi + 1) * n];
+        for (ni, yv) in yr.iter_mut().enumerate() {
+            *yv = dot(xr, &w[ni * k..(ni + 1) * k]);
+        }
+    }
+    y
+}
+
+/// `y = x @ wᵀ`, skipping zero weight entries when the weight is sparse
+/// enough (the {0,1}-masked, Wanda-pruned base weights).
+pub fn matmul_nt_auto(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let zeros = w.iter().filter(|v| **v == 0.0).count();
+    if (zeros as f64) < SPARSE_THRESHOLD * (w.len().max(1) as f64) {
+        return matmul_nt(x, w, m, k, n);
+    }
+    // gather per-row nonzeros once, then stream activations over them
+    let mut idx: Vec<u32> = Vec::with_capacity(w.len() - zeros);
+    let mut val: Vec<f32> = Vec::with_capacity(w.len() - zeros);
+    let mut row_start: Vec<usize> = Vec::with_capacity(n + 1);
+    row_start.push(0);
+    for ni in 0..n {
+        for (ki, wv) in w[ni * k..(ni + 1) * k].iter().enumerate() {
+            if *wv != 0.0 {
+                idx.push(ki as u32);
+                val.push(*wv);
+            }
+        }
+        row_start.push(idx.len());
+    }
+    let mut y = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let xr = &x[mi * k..(mi + 1) * k];
+        let yr = &mut y[mi * n..(mi + 1) * n];
+        for (ni, yv) in yr.iter_mut().enumerate() {
+            let (lo, hi) = (row_start[ni], row_start[ni + 1]);
+            let mut acc = 0.0f32;
+            for (ki, wv) in idx[lo..hi].iter().zip(&val[lo..hi]) {
+                acc += xr[*ki as usize] * wv;
+            }
+            *yv = acc;
+        }
+    }
+    y
+}
+
+/// `y[M,N] = a[M,K] @ b[K,N]` (row-major, axpy inner loop).
+pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut y = vec![0.0f32; m * n];
+    for mi in 0..m {
+        let ar = &a[mi * k..(mi + 1) * k];
+        let yr = &mut y[mi * n..(mi + 1) * n];
+        for (ki, av) in ar.iter().enumerate() {
+            if *av == 0.0 {
+                continue;
+            }
+            let br = &b[ki * n..(ki + 1) * n];
+            for (yv, bv) in yr.iter_mut().zip(br) {
+                *yv += av * bv;
+            }
+        }
+    }
+    y
+}
+
+/// `y[M,N] = a[K,M]ᵀ @ b[K,N]` (gradient shape: `dW = dyᵀ @ x`).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut y = vec![0.0f32; m * n];
+    for ki in 0..k {
+        let ar = &a[ki * m..(ki + 1) * m];
+        let br = &b[ki * n..(ki + 1) * n];
+        for (mi, av) in ar.iter().enumerate() {
+            if *av == 0.0 {
+                continue;
+            }
+            let yr = &mut y[mi * n..(mi + 1) * n];
+            for (yv, bv) in yr.iter_mut().zip(br) {
+                *yv += av * bv;
+            }
+        }
+    }
+    y
+}
+
+/// `y += x`, elementwise.
+pub fn add_assign(y: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += xv;
+    }
+}
+
+/// `y += s * x`, elementwise.
+pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yv, xv) in y.iter_mut().zip(x) {
+        *yv += s * xv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0; m * n];
+        for mi in 0..m {
+            for ni in 0..n {
+                for ki in 0..k {
+                    y[mi * n + ni] += x[mi * k + ki] * w[ni * k + ki];
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn nt_matches_naive_and_sparse_path() {
+        let (m, k, n) = (3, 7, 5);
+        let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.61).cos()).collect();
+        // sparsify half of w so the auto path takes the gather route
+        for (i, wv) in w.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *wv = 0.0;
+            }
+        }
+        let reference = naive_nt(&x, &w, m, k, n);
+        for y in [matmul_nt(&x, &w, m, k, n), matmul_nt_auto(&x, &w, m, k, n)] {
+            for (a, b) in y.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_and_tn_agree_with_transposes() {
+        let (m, k, n) = (4, 3, 6);
+        let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.1 - 0.5).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.2).sin()).collect();
+        // a @ b == a @ (bᵀ)ᵀ: check nn against nt with explicitly transposed b
+        let mut bt = vec![0.0f32; n * k];
+        for ki in 0..k {
+            for ni in 0..n {
+                bt[ni * k + ki] = b[ki * n + ni];
+            }
+        }
+        let y1 = matmul_nn(&a, &b, m, k, n);
+        let y2 = matmul_nt(&a, &bt, m, k, n);
+        for (p, q) in y1.iter().zip(&y2) {
+            assert!((p - q).abs() < 1e-5);
+        }
+        // aᵀᵀ @ b via tn on the transposed a
+        let mut at = vec![0.0f32; k * m];
+        for mi in 0..m {
+            for ki in 0..k {
+                at[ki * m + mi] = a[mi * k + ki];
+            }
+        }
+        let y3 = matmul_tn(&at, &b, k, m, n);
+        for (p, q) in y3.iter().zip(&y1) {
+            assert!((p - q).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_handles_tails() {
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let b = [2.0, 2.0, 2.0, 2.0, 2.0];
+        assert_eq!(dot(&a, &b), 30.0);
+        assert_eq!(dot(&a[..1], &b[..1]), 2.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+}

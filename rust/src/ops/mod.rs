@@ -1,0 +1,21 @@
+//! Pure-Rust compute kernels for the native CPU backend.
+//!
+//! These implement the same math the AOT'd XLA artifacts execute —
+//! blocked/sparsity-aware matmuls ([`linalg`]), norm/activation/loss
+//! primitives with hand-derived backward passes ([`nn`]), the full
+//! decoder forward/backward ([`model`]), and the Wanda / magnitude /
+//! SparseGPT-lite prune ops ([`prune`]).
+//!
+//! Numerics are pinned against the L1 reference (`kernels/ref.py`) by
+//! the golden-fixture suite in `rust/tests/parity.rs`; the backend that
+//! marshals manifest entry points onto these kernels lives in
+//! [`crate::runtime::native`].
+
+pub mod linalg;
+pub mod model;
+pub mod nn;
+pub mod prune;
+
+pub use model::{
+    lora_linear, lora_linear_bwd, Dims, Extra, Forward, GradMode, Grads, Model, NamedTensors,
+};

@@ -1,0 +1,926 @@
+//! Native decoder forward/backward: the pure-Rust implementation of the
+//! L2 model (`python/compile/model.py`) that the native backend executes.
+//!
+//! One [`Model`] handles every entry-point variant: llama-sim (RMSNorm,
+//! RoPE, SwiGLU) and mpt-sim (LayerNorm, ALiBi, GELU), elastic-LoRA
+//! adapters gated by a rank mask, the prefix/series/parallel PEFT
+//! baselines, Wanda/SparseGPT calibration-statistics collection, and the
+//! hand-derived backward pass for each trainable group (adapters, full
+//! base, prefix, series, parallel).
+//!
+//! The backward formulas are validated two ways: golden fixtures from
+//! `python/compile/fixtures.py` pin the numerics against `jax.grad` in
+//! `rust/tests/parity.rs`, and finite-difference checks cover the local
+//! vjps in `ops::nn`. Accumulation order differs from XLA, so agreement
+//! is to f32 round-off, not bit-exact.
+
+use crate::model::ModelConfig;
+use crate::ops::linalg::{self, add_assign, axpy};
+use crate::ops::nn;
+use crate::tensor::HostTensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// Name → tensor view over one entry point's positional inputs.
+#[derive(Default)]
+pub struct NamedTensors<'a> {
+    map: HashMap<&'a str, &'a HostTensor>,
+}
+
+impl<'a> NamedTensors<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &'a str, t: &'a HostTensor) {
+        self.map.insert(name, t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&'a HostTensor> {
+        self.map
+            .get(name)
+            .copied()
+            .with_context(|| format!("native entry input '{name}' missing"))
+    }
+
+    pub fn f(&self, name: &str) -> Result<&'a [f32]> {
+        Ok(self.get(name)?.f32s())
+    }
+}
+
+/// Model dimensions resolved for one batch.
+#[derive(Clone, Debug)]
+pub struct Dims {
+    pub b: usize,
+    pub s: usize,
+    pub d: usize,
+    pub nh: usize,
+    pub dh: usize,
+    pub f: usize,
+    pub v: usize,
+    pub r: usize,
+    pub n_layers: usize,
+    pub llama: bool,
+    pub plen: usize,
+    pub bn: usize,
+    pub scale: f32,
+    pub mods: Vec<String>,
+}
+
+impl Dims {
+    pub fn from_config(cfg: &ModelConfig, batch: usize) -> Dims {
+        Dims {
+            b: batch,
+            s: cfg.seq_len,
+            d: cfg.d_model,
+            nh: cfg.n_heads,
+            dh: cfg.d_model / cfg.n_heads,
+            f: cfg.d_ff,
+            v: cfg.vocab,
+            r: cfg.max_rank,
+            n_layers: cfg.n_layers,
+            llama: cfg.arch == "llama",
+            plen: cfg.prefix_len,
+            bn: cfg.bottleneck,
+            scale: cfg.lora_scale(),
+            mods: cfg.adapter_modules.clone(),
+        }
+    }
+}
+
+/// Which PEFT baseline (if any) is active in the forward.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Extra {
+    None,
+    Prefix,
+    Series,
+    Parallel,
+}
+
+/// Which parameter group the backward pass produces gradients for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradMode {
+    Adapters,
+    Base,
+    Prefix,
+    Series,
+    Parallel,
+}
+
+/// Accumulating gradient store keyed by parameter name.
+#[derive(Default)]
+pub struct Grads {
+    pub map: HashMap<String, Vec<f32>>,
+}
+
+impl Grads {
+    fn add(&mut self, name: &str, g: Vec<f32>) {
+        match self.map.get_mut(name) {
+            Some(acc) => add_assign(acc, &g),
+            None => {
+                self.map.insert(name.to_string(), g);
+            }
+        }
+    }
+
+    pub fn take(&mut self, name: &str, numel: usize) -> Vec<f32> {
+        self.map.remove(name).unwrap_or_else(|| vec![0.0; numel])
+    }
+}
+
+enum NormTape {
+    /// cached 1/rms per row (llama)
+    Rms(Vec<f32>),
+    /// cached normalized input + 1/σ per row (mpt)
+    Ln { xhat: Vec<f32>, inv: Vec<f32> },
+}
+
+struct LayerTape {
+    h_in: Vec<f32>,
+    norm1: NormTape,
+    t_attn: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>,
+    ctx: Vec<f32>,
+    h_mid: Vec<f32>,
+    norm2: NormTape,
+    t_mlp: Vec<f32>,
+    g_pre: Vec<f32>,
+    u_pre: Vec<f32>,
+    act: Vec<f32>,
+    lora_p: HashMap<String, Vec<f32>>,
+    s_out_in: Vec<f32>,
+    s_zpre: Vec<f32>,
+    s_z: Vec<f32>,
+    p_zpre: Vec<f32>,
+    p_z: Vec<f32>,
+}
+
+struct Tape {
+    layers: Vec<LayerTape>,
+    h_final_in: Vec<f32>,
+    norm_f: NormTape,
+    t_final: Vec<f32>,
+}
+
+/// Forward output: logits plus (optionally) calibration stats and the
+/// activation tape for the backward pass.
+pub struct Forward {
+    /// `[B, S, V]` row-major
+    pub logits: Vec<f32>,
+    /// per-site (Σx², Gram) in `calib_sites` order
+    pub stats: Vec<(String, Vec<f32>, Vec<f32>)>,
+    tape: Option<Tape>,
+}
+
+/// One forward/backward construction over resolved named tensors.
+pub struct Model<'a> {
+    pub dims: Dims,
+    pub p: &'a NamedTensors<'a>,
+    pub use_adapters: bool,
+    pub rank_mask: Option<&'a [f32]>,
+    pub extra: Extra,
+}
+
+impl<'a> Model<'a> {
+    fn norm_fwd(&self, x: &[f32], name: &str, m: usize) -> Result<(Vec<f32>, NormTape)> {
+        let d = self.dims.d;
+        let g = self.p.f(&format!("{name}.g"))?;
+        if self.dims.llama {
+            let (y, inv) = nn::rmsnorm(x, g, m, d);
+            Ok((y, NormTape::Rms(inv)))
+        } else {
+            let b = self.p.f(&format!("{name}.b"))?;
+            let (y, xhat, inv) = nn::layernorm(x, g, b, m, d);
+            Ok((y, NormTape::Ln { xhat, inv }))
+        }
+    }
+
+    fn norm_bwd(
+        &self,
+        dy: &[f32],
+        x: &[f32],
+        name: &str,
+        tape: &NormTape,
+        m: usize,
+        grads: &mut Grads,
+        mode: GradMode,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims.d;
+        let g = self.p.f(&format!("{name}.g"))?;
+        match tape {
+            NormTape::Rms(inv) => {
+                let (dx, dg) = nn::rmsnorm_bwd(dy, x, g, inv, m, d);
+                if mode == GradMode::Base {
+                    grads.add(&format!("{name}.g"), dg);
+                }
+                Ok(dx)
+            }
+            NormTape::Ln { xhat, inv } => {
+                let (dx, dg, db) = nn::layernorm_bwd(dy, g, xhat, inv, m, d);
+                if mode == GradMode::Base {
+                    grads.add(&format!("{name}.g"), dg);
+                    grads.add(&format!("{name}.b"), db);
+                }
+                Ok(dx)
+            }
+        }
+    }
+
+    /// Adapter-aware linear `y = x @ Wᵀ (+ scale · ((x@Aᵀ)·mask) @ Bᵀ)`.
+    /// Returns `(y, p)` where `p` is the masked LoRA projection (tape).
+    fn lin_fwd(
+        &self,
+        x: &[f32],
+        m: usize,
+        wname: &str,
+        out_dim: usize,
+        in_dim: usize,
+    ) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
+        let w = self.p.f(wname)?;
+        if !self.use_adapters {
+            return Ok((linalg::matmul_nt_auto(x, w, m, in_dim, out_dim), None));
+        }
+        let Some(idx) = self.dims.mods.iter().position(|mo| mo == wname) else {
+            return Ok((linalg::matmul_nt_auto(x, w, m, in_dim, out_dim), None));
+        };
+        let r = self.dims.r;
+        let a = self.p.f(&format!("lora_a.{wname}"))?;
+        let b = self.p.f(&format!("lora_b.{wname}"))?;
+        let rm = self.rank_mask.context("adapter forward needs a rank mask")?;
+        let rm = &rm[idx * r..(idx + 1) * r];
+        let (y, proj) = lora_linear(x, w, a, b, rm, self.dims.scale, m, in_dim, r, out_dim);
+        Ok((y, Some(proj)))
+    }
+
+    /// Backward of `lin_fwd`; accumulates adapter/base grads per `mode`
+    /// and returns `dx`.
+    #[allow(clippy::too_many_arguments)]
+    fn lin_bwd(
+        &self,
+        dy: &[f32],
+        x: &[f32],
+        m: usize,
+        wname: &str,
+        out_dim: usize,
+        in_dim: usize,
+        lora_p: &HashMap<String, Vec<f32>>,
+        grads: &mut Grads,
+        mode: GradMode,
+    ) -> Result<Vec<f32>> {
+        let w = self.p.f(wname)?;
+        let dx = if let Some(proj) = lora_p.get(wname) {
+            let r = self.dims.r;
+            let idx = self.dims.mods.iter().position(|mo| mo == wname).unwrap();
+            let a = self.p.f(&format!("lora_a.{wname}"))?;
+            let b = self.p.f(&format!("lora_b.{wname}"))?;
+            let rm = self.rank_mask.context("adapter backward needs a rank mask")?;
+            let rm = &rm[idx * r..(idx + 1) * r];
+            let (dx, da, db) =
+                lora_linear_bwd(dy, x, w, a, b, rm, self.dims.scale, proj, m, in_dim, r, out_dim);
+            if mode == GradMode::Adapters {
+                grads.add(&format!("lora_a.{wname}"), da);
+                grads.add(&format!("lora_b.{wname}"), db);
+            }
+            dx
+        } else {
+            linalg::matmul_nn(dy, w, m, out_dim, in_dim)
+        };
+        if mode == GradMode::Base {
+            grads.add(wname, linalg::matmul_tn(dy, x, m, out_dim, in_dim));
+        }
+        Ok(dx)
+    }
+
+    /// RoPE rotation tables (llama): `(cos, sin)` of shape `[S, dh/2]`.
+    fn rope_tables(&self) -> (Vec<f32>, Vec<f32>) {
+        let (s, half) = (self.dims.s, self.dims.dh / 2);
+        let mut cos = vec![0.0f32; s * half];
+        let mut sin = vec![0.0f32; s * half];
+        for si in 0..s {
+            for j in 0..half {
+                let freq = 1.0 / 10000.0f32.powf(j as f32 / half as f32);
+                let ang = si as f32 * freq;
+                cos[si * half + j] = ang.cos();
+                sin[si * half + j] = ang.sin();
+            }
+        }
+        (cos, sin)
+    }
+
+    /// Apply RoPE in place over `[B, H, S, dh]` head-major data.
+    fn rope_apply(&self, x: &mut [f32], cos: &[f32], sin: &[f32], backward: bool) {
+        let Dims { b, s, nh, dh, .. } = self.dims;
+        let half = dh / 2;
+        for bh in 0..b * nh {
+            for si in 0..s {
+                let off = (bh * s + si) * dh;
+                for j in 0..half {
+                    let (c, sn) = (cos[si * half + j], sin[si * half + j]);
+                    let x1 = x[off + j];
+                    let x2 = x[off + half + j];
+                    if backward {
+                        // transpose of the rotation
+                        x[off + j] = x1 * c + x2 * sn;
+                        x[off + half + j] = -x1 * sn + x2 * c;
+                    } else {
+                        x[off + j] = x1 * c - x2 * sn;
+                        x[off + half + j] = x1 * sn + x2 * c;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `[M, d]` row-major → `[B, H, S, dh]` head-major.
+    fn split_heads(&self, x: &[f32]) -> Vec<f32> {
+        let Dims { b, s, d, nh, dh, .. } = self.dims;
+        let mut out = vec![0.0f32; b * nh * s * dh];
+        for bi in 0..b {
+            for si in 0..s {
+                let row = &x[(bi * s + si) * d..(bi * s + si + 1) * d];
+                for h in 0..nh {
+                    let dst = ((bi * nh + h) * s + si) * dh;
+                    out[dst..dst + dh].copy_from_slice(&row[h * dh..(h + 1) * dh]);
+                }
+            }
+        }
+        out
+    }
+
+    /// `[B, H, S, dh]` head-major → `[M, d]` row-major.
+    fn merge_heads(&self, x: &[f32]) -> Vec<f32> {
+        let Dims { b, s, d, nh, dh, .. } = self.dims;
+        let mut out = vec![0.0f32; b * s * d];
+        for bi in 0..b {
+            for h in 0..nh {
+                for si in 0..s {
+                    let src = ((bi * nh + h) * s + si) * dh;
+                    let dst = (bi * s + si) * d + h * dh;
+                    out[dst..dst + dh].copy_from_slice(&x[src..src + dh]);
+                }
+            }
+        }
+        out
+    }
+
+    fn alibi_slope(&self, h: usize) -> f32 {
+        2.0f32.powf(-8.0 * (h + 1) as f32 / self.dims.nh as f32)
+    }
+
+    /// Record a calibration site: `(Σx² per feature, Gram XᵀX)`.
+    fn record(
+        stats: &mut Vec<(String, Vec<f32>, Vec<f32>)>,
+        site: String,
+        x: &[f32],
+        m: usize,
+        dim: usize,
+    ) {
+        let mut sumsq = vec![0.0f32; dim];
+        for row in 0..m {
+            for (j, v) in x[row * dim..(row + 1) * dim].iter().enumerate() {
+                sumsq[j] += v * v;
+            }
+        }
+        let gram = linalg::matmul_tn(x, x, m, dim, dim);
+        stats.push((site, sumsq, gram));
+    }
+
+    /// Full forward pass. `want_tape` caches activations for
+    /// [`Model::backward`]; `collect` records calibration statistics.
+    pub fn forward(&self, x_ids: &[i32], want_tape: bool, collect: bool) -> Result<Forward> {
+        let Dims { b, s, d, nh, dh, f, v, plen, .. } = self.dims;
+        debug_assert_eq!(x_ids.len(), b * s);
+        let m = b * s;
+        let embed = self.p.f("embed")?;
+        let mut h = vec![0.0f32; m * d];
+        for (mi, tok) in x_ids.iter().enumerate() {
+            let t = *tok as usize;
+            debug_assert!(t < v, "token id {t} >= vocab {v}");
+            h[mi * d..(mi + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
+        }
+        let (cos, sin) = if self.dims.llama { self.rope_tables() } else { (Vec::new(), Vec::new()) };
+        let use_prefix = self.extra == Extra::Prefix;
+        let skv = if use_prefix { plen + s } else { s };
+        let mut stats = Vec::new();
+        let mut layers: Vec<LayerTape> = Vec::with_capacity(self.dims.n_layers);
+
+        for i in 0..self.dims.n_layers {
+            let mut lora_p = HashMap::new();
+            let h_in = h.clone();
+            let (t_attn, norm1) = self.norm_fwd(&h_in, &format!("layers.{i}.attn_norm"), m)?;
+            if collect {
+                Self::record(&mut stats, format!("{i}.attn_in"), &t_attn, m, d);
+            }
+            let pre = format!("layers.{i}.attn.");
+            let lin3 = |name: &str, tape: &mut HashMap<String, Vec<f32>>| -> Result<Vec<f32>> {
+                let wname = format!("{pre}{name}");
+                let (y, p) = self.lin_fwd(&t_attn, m, &wname, d, d)?;
+                if let Some(p) = p {
+                    tape.insert(wname, p);
+                }
+                Ok(y)
+            };
+            let qf = lin3("q", &mut lora_p)?;
+            let kf = lin3("k", &mut lora_p)?;
+            let vf = lin3("v", &mut lora_p)?;
+            let mut q = self.split_heads(&qf);
+            let k_base = {
+                let mut k3 = self.split_heads(&kf);
+                if self.dims.llama {
+                    self.rope_apply(&mut k3, &cos, &sin, false);
+                }
+                k3
+            };
+            if self.dims.llama {
+                self.rope_apply(&mut q, &cos, &sin, false);
+            }
+            let v_base = self.split_heads(&vf);
+            // assemble (optionally prefix-extended) K/V in [B,H,Skv,dh]
+            let (k3, v3) = if use_prefix {
+                let pk = self.p.f(&format!("prefix_k.{i}"))?; // [H, P, dh]
+                let pv = self.p.f(&format!("prefix_v.{i}"))?;
+                let mut kx = vec![0.0f32; b * nh * skv * dh];
+                let mut vx = vec![0.0f32; b * nh * skv * dh];
+                for bi in 0..b {
+                    for hh in 0..nh {
+                        let dst = (bi * nh + hh) * skv * dh;
+                        let psrc = hh * plen * dh;
+                        kx[dst..dst + plen * dh].copy_from_slice(&pk[psrc..psrc + plen * dh]);
+                        vx[dst..dst + plen * dh].copy_from_slice(&pv[psrc..psrc + plen * dh]);
+                        let bsrc = ((bi * nh + hh) * s) * dh;
+                        kx[dst + plen * dh..dst + skv * dh]
+                            .copy_from_slice(&k_base[bsrc..bsrc + s * dh]);
+                        vx[dst + plen * dh..dst + skv * dh]
+                            .copy_from_slice(&v_base[bsrc..bsrc + s * dh]);
+                    }
+                }
+                (kx, vx)
+            } else {
+                (k_base, v_base)
+            };
+            // scores → probs → ctx
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            let mut probs = vec![0.0f32; b * nh * s * skv];
+            let mut ctx = vec![0.0f32; m * d];
+            for bi in 0..b {
+                for hh in 0..nh {
+                    let bh = bi * nh + hh;
+                    let slope = if self.dims.llama { 0.0 } else { self.alibi_slope(hh) };
+                    for si in 0..s {
+                        let qrow = &q[(bh * s + si) * dh..(bh * s + si + 1) * dh];
+                        let prow = &mut probs[(bh * s + si) * skv..(bh * s + si + 1) * skv];
+                        for t in 0..skv {
+                            let allowed = t < plen_of(use_prefix, plen) || t - plen_of(use_prefix, plen) <= si;
+                            if !allowed {
+                                prow[t] = -1e30;
+                                continue;
+                            }
+                            let krow = &k3[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                            let mut sc = linalg::dot(qrow, krow) * inv_sqrt;
+                            if !self.dims.llama {
+                                let pos_k = t as f32 - plen_of(use_prefix, plen) as f32;
+                                sc += slope * -(pos_k - si as f32).abs();
+                            }
+                            prow[t] = sc;
+                        }
+                        nn::softmax_row(prow);
+                        let crow = &mut ctx[(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
+                        for t in 0..skv {
+                            let pv = prow[t];
+                            if pv == 0.0 {
+                                continue;
+                            }
+                            let vrow = &v3[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                            for (cv, vv) in crow.iter_mut().zip(vrow) {
+                                *cv += pv * vv;
+                            }
+                        }
+                    }
+                }
+            }
+            if collect {
+                Self::record(&mut stats, format!("{i}.o_in"), &ctx, m, d);
+            }
+            let (attn_out, o_p) = self.lin_fwd(&ctx, m, &format!("{pre}o"), d, d)?;
+            if let Some(p) = o_p {
+                lora_p.insert(format!("{pre}o"), p);
+            }
+            let mut h_mid = h_in.clone();
+            add_assign(&mut h_mid, &attn_out);
+            let (t_mlp, norm2) = self.norm_fwd(&h_mid, &format!("layers.{i}.mlp_norm"), m)?;
+            if collect {
+                Self::record(&mut stats, format!("{i}.mlp_in"), &t_mlp, m, d);
+            }
+            let mpre = format!("layers.{i}.mlp.");
+            let (g_pre, u_pre, act) = if self.dims.llama {
+                let (gp, gt) = self.lin_fwd(&t_mlp, m, &format!("{mpre}gate"), f, d)?;
+                if let Some(p) = gt {
+                    lora_p.insert(format!("{mpre}gate"), p);
+                }
+                let (up, ut) = self.lin_fwd(&t_mlp, m, &format!("{mpre}up"), f, d)?;
+                if let Some(p) = ut {
+                    lora_p.insert(format!("{mpre}up"), p);
+                }
+                let act: Vec<f32> = gp.iter().zip(&up).map(|(g, u)| nn::silu(*g) * u).collect();
+                (gp, up, act)
+            } else {
+                let (up, ut) = self.lin_fwd(&t_mlp, m, &format!("{mpre}up"), f, d)?;
+                if let Some(p) = ut {
+                    lora_p.insert(format!("{mpre}up"), p);
+                }
+                let act: Vec<f32> = up.iter().map(|u| nn::gelu(*u)).collect();
+                (Vec::new(), up, act)
+            };
+            if collect {
+                Self::record(&mut stats, format!("{i}.down_in"), &act, m, f);
+            }
+            let (mut out, d_p) = self.lin_fwd(&act, m, &format!("{mpre}down"), d, f)?;
+            if let Some(p) = d_p {
+                lora_p.insert(format!("{mpre}down"), p);
+            }
+            // series adapter: bottleneck after the MLP output
+            let (s_out_in, s_zpre, s_z) = if self.extra == Extra::Series {
+                let sd = self.p.f(&format!("series_down.{i}"))?;
+                let su = self.p.f(&format!("series_up.{i}"))?;
+                let bn = self.dims.bn;
+                let zpre = linalg::matmul_nt(&out, sd, m, d, bn);
+                let z: Vec<f32> = zpre.iter().map(|x| x.max(0.0)).collect();
+                let add = linalg::matmul_nt(&z, su, m, bn, d);
+                let out_in = out.clone();
+                add_assign(&mut out, &add);
+                (out_in, zpre, z)
+            } else {
+                (Vec::new(), Vec::new(), Vec::new())
+            };
+            // parallel adapter: bottleneck beside the MLP
+            let (p_zpre, p_z) = if self.extra == Extra::Parallel {
+                let pd = self.p.f(&format!("parallel_down.{i}"))?;
+                let pu = self.p.f(&format!("parallel_up.{i}"))?;
+                let bn = self.dims.bn;
+                let zpre = linalg::matmul_nt(&t_mlp, pd, m, d, bn);
+                let z: Vec<f32> = zpre.iter().map(|x| x.max(0.0)).collect();
+                let add = linalg::matmul_nt(&z, pu, m, bn, d);
+                add_assign(&mut out, &add);
+                (zpre, z)
+            } else {
+                (Vec::new(), Vec::new())
+            };
+            h = h_mid.clone();
+            add_assign(&mut h, &out);
+            if want_tape {
+                layers.push(LayerTape {
+                    h_in,
+                    norm1,
+                    t_attn,
+                    q,
+                    k: k3,
+                    v: v3,
+                    probs,
+                    ctx,
+                    h_mid,
+                    norm2,
+                    t_mlp,
+                    g_pre,
+                    u_pre,
+                    act,
+                    lora_p,
+                    s_out_in,
+                    s_zpre,
+                    s_z,
+                    p_zpre,
+                    p_z,
+                });
+            }
+        }
+        let h_final_in = h;
+        let (t_final, norm_f) = self.norm_fwd(&h_final_in, "final_norm", m)?;
+        let lm_head = self.p.f("lm_head")?;
+        let logits = linalg::matmul_nt(&t_final, lm_head, m, d, v);
+        let tape = if want_tape {
+            Some(Tape { layers, h_final_in, norm_f, t_final })
+        } else {
+            None
+        };
+        Ok(Forward { logits, stats, tape })
+    }
+
+    /// Masked cross-entropy loss + gradients for `mode`'s parameter group.
+    pub fn loss_and_grads(
+        &self,
+        x_ids: &[i32],
+        y_ids: &[i32],
+        loss_mask: &[f32],
+        mode: GradMode,
+    ) -> Result<(f32, Grads)> {
+        let fwd = self.forward(x_ids, true, false)?;
+        let tape = fwd.tape.as_ref().unwrap();
+        let Dims { b, s, d, nh, dh, f, v, plen, .. } = self.dims;
+        let m = b * s;
+        let (loss, dlogits) = nn::softmax_xent(&fwd.logits, y_ids, loss_mask, m, v);
+        let mut grads = Grads::default();
+
+        let lm_head = self.p.f("lm_head")?;
+        if mode == GradMode::Base {
+            grads.add("lm_head", linalg::matmul_tn(&dlogits, &tape.t_final, m, v, d));
+        }
+        let dt_final = linalg::matmul_nn(&dlogits, lm_head, m, v, d);
+        let mut dh = self.norm_bwd(
+            &dt_final,
+            &tape.h_final_in,
+            "final_norm",
+            &tape.norm_f,
+            m,
+            &mut grads,
+            mode,
+        )?;
+        let (cos, sin) = if self.dims.llama { self.rope_tables() } else { (Vec::new(), Vec::new()) };
+        let use_prefix = self.extra == Extra::Prefix;
+        let skv = if use_prefix { plen + s } else { s };
+
+        for i in (0..self.dims.n_layers).rev() {
+            let lc = &tape.layers[i];
+            let mpre = format!("layers.{i}.mlp.");
+            let dout = dh.clone();
+            let mut dt2 = vec![0.0f32; m * d];
+            if self.extra == Extra::Parallel {
+                let bn = self.dims.bn;
+                let pd = self.p.f(&format!("parallel_down.{i}"))?;
+                let pu = self.p.f(&format!("parallel_up.{i}"))?;
+                let mut dzp = linalg::matmul_nn(&dout, pu, m, d, bn);
+                for (dz, zp) in dzp.iter_mut().zip(&lc.p_zpre) {
+                    if *zp <= 0.0 {
+                        *dz = 0.0;
+                    }
+                }
+                if mode == GradMode::Parallel {
+                    grads.add(&format!("parallel_up.{i}"), linalg::matmul_tn(&dout, &lc.p_z, m, d, bn));
+                    grads.add(
+                        &format!("parallel_down.{i}"),
+                        linalg::matmul_tn(&dzp, &lc.t_mlp, m, bn, d),
+                    );
+                }
+                add_assign(&mut dt2, &linalg::matmul_nn(&dzp, pd, m, bn, d));
+            }
+            let d_down_out = if self.extra == Extra::Series {
+                let bn = self.dims.bn;
+                let sd = self.p.f(&format!("series_down.{i}"))?;
+                let su = self.p.f(&format!("series_up.{i}"))?;
+                let mut dz = linalg::matmul_nn(&dout, su, m, d, bn);
+                for (dzv, zp) in dz.iter_mut().zip(&lc.s_zpre) {
+                    if *zp <= 0.0 {
+                        *dzv = 0.0;
+                    }
+                }
+                if mode == GradMode::Series {
+                    grads.add(&format!("series_up.{i}"), linalg::matmul_tn(&dout, &lc.s_z, m, d, bn));
+                    grads.add(
+                        &format!("series_down.{i}"),
+                        linalg::matmul_tn(&dz, &lc.s_out_in, m, bn, d),
+                    );
+                }
+                let mut ddo = dout.clone();
+                add_assign(&mut ddo, &linalg::matmul_nn(&dz, sd, m, bn, d));
+                ddo
+            } else {
+                dout
+            };
+            let dact = self.lin_bwd(
+                &d_down_out,
+                &lc.act,
+                m,
+                &format!("{mpre}down"),
+                d,
+                f,
+                &lc.lora_p,
+                &mut grads,
+                mode,
+            )?;
+            if self.dims.llama {
+                let mut dg_pre = vec![0.0f32; m * f];
+                let mut du_pre = vec![0.0f32; m * f];
+                for j in 0..m * f {
+                    dg_pre[j] = dact[j] * lc.u_pre[j] * nn::dsilu(lc.g_pre[j]);
+                    du_pre[j] = dact[j] * nn::silu(lc.g_pre[j]);
+                }
+                add_assign(
+                    &mut dt2,
+                    &self.lin_bwd(&dg_pre, &lc.t_mlp, m, &format!("{mpre}gate"), f, d, &lc.lora_p, &mut grads, mode)?,
+                );
+                add_assign(
+                    &mut dt2,
+                    &self.lin_bwd(&du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads, mode)?,
+                );
+            } else {
+                let mut du_pre = vec![0.0f32; m * f];
+                for j in 0..m * f {
+                    du_pre[j] = dact[j] * nn::dgelu(lc.u_pre[j]);
+                }
+                add_assign(
+                    &mut dt2,
+                    &self.lin_bwd(&du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads, mode)?,
+                );
+            }
+            let mut dh_mid = dh.clone();
+            add_assign(
+                &mut dh_mid,
+                &self.norm_bwd(&dt2, &lc.h_mid, &format!("layers.{i}.mlp_norm"), &lc.norm2, m, &mut grads, mode)?,
+            );
+
+            // ---- attention block ----
+            let pre = format!("layers.{i}.attn.");
+            let dctx = self.lin_bwd(&dh_mid, &lc.ctx, m, &format!("{pre}o"), d, d, &lc.lora_p, &mut grads, mode)?;
+            let mut dq = vec![0.0f32; b * nh * s * dh];
+            let mut dkx = vec![0.0f32; b * nh * skv * dh];
+            let mut dvx = vec![0.0f32; b * nh * skv * dh];
+            let inv_sqrt = 1.0 / (dh as f32).sqrt();
+            let mut dprow = vec![0.0f32; skv];
+            let mut dsrow = vec![0.0f32; skv];
+            for bi in 0..b {
+                for hh in 0..nh {
+                    let bh = bi * nh + hh;
+                    for si in 0..s {
+                        let dc = &dctx[(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
+                        let prow = &lc.probs[(bh * s + si) * skv..(bh * s + si + 1) * skv];
+                        for t in 0..skv {
+                            let vrow = &lc.v[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                            dprow[t] = linalg::dot(dc, vrow);
+                            let pv = prow[t];
+                            if pv != 0.0 {
+                                let dvr = &mut dvx[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                                for (dvv, dcv) in dvr.iter_mut().zip(dc) {
+                                    *dvv += pv * dcv;
+                                }
+                            }
+                        }
+                        nn::softmax_row_bwd(&dprow, prow, &mut dsrow);
+                        let dqr = &mut dq[(bh * s + si) * dh..(bh * s + si + 1) * dh];
+                        let qrow = &lc.q[(bh * s + si) * dh..(bh * s + si + 1) * dh];
+                        for t in 0..skv {
+                            let ds = dsrow[t] * inv_sqrt;
+                            if ds == 0.0 {
+                                continue;
+                            }
+                            let krow = &lc.k[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                            for (dqv, kv) in dqr.iter_mut().zip(krow) {
+                                *dqv += ds * kv;
+                            }
+                            let dkr = &mut dkx[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                            for (dkv, qv) in dkr.iter_mut().zip(qrow) {
+                                *dkv += ds * qv;
+                            }
+                        }
+                    }
+                }
+            }
+            // split off prefix grads, keep the sequence part
+            let (mut dk, dv) = if use_prefix {
+                if mode == GradMode::Prefix {
+                    let mut dpk = vec![0.0f32; nh * plen * dh];
+                    let mut dpv = vec![0.0f32; nh * plen * dh];
+                    for bi in 0..b {
+                        for hh in 0..nh {
+                            let src = (bi * nh + hh) * skv * dh;
+                            let dst = hh * plen * dh;
+                            add_assign(
+                                &mut dpk[dst..dst + plen * dh],
+                                &dkx[src..src + plen * dh],
+                            );
+                            add_assign(
+                                &mut dpv[dst..dst + plen * dh],
+                                &dvx[src..src + plen * dh],
+                            );
+                        }
+                    }
+                    grads.add(&format!("prefix_k.{i}"), dpk);
+                    grads.add(&format!("prefix_v.{i}"), dpv);
+                }
+                let mut dk = vec![0.0f32; b * nh * s * dh];
+                let mut dv = vec![0.0f32; b * nh * s * dh];
+                for bh in 0..b * nh {
+                    let src = bh * skv * dh + plen * dh;
+                    let dst = bh * s * dh;
+                    dk[dst..dst + s * dh].copy_from_slice(&dkx[src..src + s * dh]);
+                    dv[dst..dst + s * dh].copy_from_slice(&dvx[src..src + s * dh]);
+                }
+                (dk, dv)
+            } else {
+                (dkx, dvx)
+            };
+            if self.dims.llama {
+                self.rope_apply(&mut dq, &cos, &sin, true);
+                self.rope_apply(&mut dk, &cos, &sin, true);
+            }
+            let dqf = self.merge_heads(&dq);
+            let dkf = self.merge_heads(&dk);
+            let dvf = self.merge_heads(&dv);
+            let mut dt1 =
+                self.lin_bwd(&dqf, &lc.t_attn, m, &format!("{pre}q"), d, d, &lc.lora_p, &mut grads, mode)?;
+            add_assign(
+                &mut dt1,
+                &self.lin_bwd(&dkf, &lc.t_attn, m, &format!("{pre}k"), d, d, &lc.lora_p, &mut grads, mode)?,
+            );
+            add_assign(
+                &mut dt1,
+                &self.lin_bwd(&dvf, &lc.t_attn, m, &format!("{pre}v"), d, d, &lc.lora_p, &mut grads, mode)?,
+            );
+            dh = dh_mid;
+            add_assign(
+                &mut dh,
+                &self.norm_bwd(&dt1, &lc.h_in, &format!("layers.{i}.attn_norm"), &lc.norm1, m, &mut grads, mode)?,
+            );
+        }
+        if mode == GradMode::Base {
+            let mut dembed = vec![0.0f32; v * d];
+            for (mi, tok) in x_ids.iter().enumerate() {
+                let t = *tok as usize;
+                add_assign(&mut dembed[t * d..(t + 1) * d], &dh[mi * d..(mi + 1) * d]);
+            }
+            grads.add("embed", dembed);
+        }
+        Ok((loss, grads))
+    }
+}
+
+/// Effective prefix length of the causal window (0 when prefix is off).
+#[inline]
+fn plen_of(use_prefix: bool, plen: usize) -> usize {
+    if use_prefix {
+        plen
+    } else {
+        0
+    }
+}
+
+// ------------------------------------------------- fused LoRA linear
+//
+// The L1 `lora_linear_ref` contract, standalone (used by `Model` and
+// pinned against golden fixtures in rust/tests/parity.rs):
+//   Y = X @ Wᵀ + ((X @ Aᵀ)·mask) @ Bᵀ · scale
+
+/// Forward; returns `(y, p)` where `p = (x@Aᵀ)·mask` is the tape entry
+/// the backward pass needs. The base matmul is sparsity-aware (skips the
+/// {0,1}-masked zeros of a pruned `w`).
+#[allow(clippy::too_many_arguments)]
+pub fn lora_linear(
+    x: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    rank_mask: &[f32],
+    scale: f32,
+    m: usize,
+    k_in: usize,
+    r: usize,
+    n_out: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut y = linalg::matmul_nt_auto(x, w, m, k_in, n_out);
+    let mut proj = linalg::matmul_nt(x, a, m, k_in, r);
+    for row in 0..m {
+        for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
+            *pv *= rank_mask[j];
+        }
+    }
+    let yl = linalg::matmul_nt(&proj, b, m, r, n_out);
+    axpy(&mut y, scale, &yl);
+    (y, proj)
+}
+
+/// Backward: `(dx, da, db)` with W frozen (`kernels/ref.py`
+/// `lora_linear_bwd_ref`). `proj` is the forward's tape entry.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_linear_bwd(
+    dy: &[f32],
+    x: &[f32],
+    w: &[f32],
+    a: &[f32],
+    b: &[f32],
+    rank_mask: &[f32],
+    scale: f32,
+    proj: &[f32],
+    m: usize,
+    k_in: usize,
+    r: usize,
+    n_out: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dp = linalg::matmul_nn(dy, b, m, n_out, r);
+    for row in 0..m {
+        for (j, dpv) in dp[row * r..(row + 1) * r].iter_mut().enumerate() {
+            *dpv *= rank_mask[j] * scale;
+        }
+    }
+    let mut dx = linalg::matmul_nn(dy, w, m, n_out, k_in);
+    add_assign(&mut dx, &linalg::matmul_nn(&dp, a, m, r, k_in));
+    let da = linalg::matmul_tn(&dp, x, m, r, k_in);
+    let mut db = linalg::matmul_tn(dy, proj, m, n_out, r);
+    for dv in db.iter_mut() {
+        *dv *= scale;
+    }
+    (dx, da, db)
+}

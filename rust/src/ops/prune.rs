@@ -1,0 +1,269 @@
+//! Native prune ops: Wanda, magnitude, SparseGPT-lite.
+//!
+//! Ports of `python/compile/prune.py` / `kernels/ref.py` with identical
+//! semantics (per-row top-k by score with a `>=`-threshold mask, so score
+//! ties keep both entries — exactly like the lowered artifacts). The
+//! SparseGPT-lite column-sweep (OBS error compensation over the upper
+//! Cholesky factor of H⁻¹, Frantar & Alistarh 2023 Eq. 3/4) is ported
+//! loop-for-loop from the jnp version, including its hand-rolled
+//! Cholesky/triangular-inverse (no LAPACK anywhere).
+
+use crate::ops::linalg;
+
+/// `round(k·keep)` clipped to `[1, k]`, with jnp's round-half-to-even.
+fn n_keep(k: usize, keep_frac: f32) -> usize {
+    let x = k as f64 * keep_frac as f64;
+    let floor = x.floor();
+    let frac = x - floor;
+    let r = if (frac - 0.5).abs() < 1e-9 {
+        if (floor as i64) % 2 == 0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    } else {
+        x.round()
+    };
+    (r as usize).clamp(1, k)
+}
+
+/// Per-row `{0,1}` mask keeping entries whose score reaches the row's
+/// `n_keep`-th largest score (ties inclusive, matching `_row_topk_mask`).
+fn row_topk_mask(scores: &[f32], keep_frac: f32, n: usize, k: usize) -> Vec<f32> {
+    let keep = n_keep(k, keep_frac);
+    let mut mask = vec![0.0f32; n * k];
+    let mut sorted = vec![0.0f32; k];
+    for row in 0..n {
+        let sr = &scores[row * k..(row + 1) * k];
+        sorted.copy_from_slice(sr);
+        sorted.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        let thresh = sorted[keep - 1];
+        for (j, mv) in mask[row * k..(row + 1) * k].iter_mut().enumerate() {
+            if sr[j] >= thresh {
+                *mv = 1.0;
+            }
+        }
+    }
+    mask
+}
+
+/// Wanda (paper Eq. 1): score `S = |W| · ‖X‖₂` per row; `xnorm_sq` is the
+/// calibration-accumulated Σx² (the sqrt happens here, like the artifact).
+pub fn wanda(w: &[f32], xnorm_sq: &[f32], keep_frac: f32, n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let xnorm: Vec<f32> = xnorm_sq.iter().map(|v| v.sqrt()).collect();
+    let scores: Vec<f32> = w
+        .iter()
+        .enumerate()
+        .map(|(i, wv)| wv.abs() * xnorm[i % k])
+        .collect();
+    let mask = row_topk_mask(&scores, keep_frac, n, k);
+    let wp = w.iter().zip(&mask).map(|(wv, mv)| wv * mv).collect();
+    (wp, mask)
+}
+
+/// Per-row magnitude pruning (`S = |W|`), the classical baseline.
+pub fn magnitude(w: &[f32], keep_frac: f32, n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    let scores: Vec<f32> = w.iter().map(|v| v.abs()).collect();
+    let mask = row_topk_mask(&scores, keep_frac, n, k);
+    let wp = w.iter().zip(&mask).map(|(wv, mv)| wv * mv).collect();
+    (wp, mask)
+}
+
+/// Right-looking Cholesky factor L (a = L·Lᵀ), ported from
+/// `prune._chol_lower` including its clamping.
+fn chol_lower(a: &[f32], k: usize) -> Vec<f32> {
+    let mut a = a.to_vec();
+    for j in 0..k {
+        let d = a[j * k + j].max(1e-20).sqrt();
+        // col = a[:, j] / d, zeroed at i < j, col[j] = d
+        let mut col = vec![0.0f32; k];
+        for i in 0..k {
+            if i > j {
+                col[i] = a[i * k + j] / d;
+            }
+        }
+        col[j] = d;
+        // rank-1 downdate over the strictly-below part
+        for i in 0..k {
+            let ci = if i > j { col[i] } else { 0.0 };
+            if ci == 0.0 {
+                continue;
+            }
+            for l in 0..k {
+                let cl = if l > j { col[l] } else { 0.0 };
+                a[i * k + l] -= ci * cl;
+            }
+        }
+        for i in 0..k {
+            a[i * k + j] = col[i];
+        }
+    }
+    // tril
+    for i in 0..k {
+        for j in i + 1..k {
+            a[i * k + j] = 0.0;
+        }
+    }
+    a
+}
+
+/// Inverse of a lower-triangular matrix by forward substitution
+/// (`prune._tril_inv`).
+fn tril_inv(l: &[f32], k: usize) -> Vec<f32> {
+    let mut x = vec![0.0f32; k * k];
+    for i in 0..k {
+        // acc = (l[i, :i]) @ x  (rows of x above i are already filled)
+        let mut acc = vec![0.0f32; k];
+        for j in 0..i {
+            let lv = l[i * k + j];
+            if lv == 0.0 {
+                continue;
+            }
+            for c in 0..k {
+                acc[c] += lv * x[j * k + c];
+            }
+        }
+        let d = l[i * k + i];
+        for c in 0..k {
+            let e = if c == i { 1.0 } else { 0.0 };
+            x[i * k + c] = (e - acc[c]) / d;
+        }
+    }
+    x
+}
+
+/// SparseGPT-lite: up-front mask from `w²/diag(U)²`, then the OBS
+/// column-sequential error-compensation sweep over `U` (upper Cholesky
+/// factor of H⁻¹).
+pub fn sparsegpt(w: &[f32], gram: &[f32], keep_frac: f32, n: usize, k: usize) -> (Vec<f32>, Vec<f32>) {
+    const DAMP: f32 = 0.01;
+    let trace: f32 = (0..k).map(|i| gram[i * k + i]).sum();
+    let lambda = DAMP * (trace / k as f32 + 1e-6);
+    let mut h = gram.to_vec();
+    for i in 0..k {
+        h[i * k + i] += lambda;
+    }
+    let linv = tril_inv(&chol_lower(&h, k), k);
+    // hinv = linvᵀ @ linv
+    let hinv = linalg::matmul_tn(&linv, &linv, k, k, k);
+    // u = chol_lower(hinv)ᵀ  (upper: hinv = uᵀ·u)
+    let lc = chol_lower(&hinv, k);
+    let mut u = vec![0.0f32; k * k];
+    for i in 0..k {
+        for j in 0..k {
+            u[i * k + j] = lc[j * k + i];
+        }
+    }
+    let d: Vec<f32> = (0..k).map(|j| u[j * k + j].max(1e-10)).collect();
+    let scores: Vec<f32> = w
+        .iter()
+        .enumerate()
+        .map(|(i, wv)| {
+            let dj = d[i % k];
+            wv * wv / (dj * dj)
+        })
+        .collect();
+    let mask = row_topk_mask(&scores, keep_frac, n, k);
+    let mut wp = w.to_vec();
+    for j in 0..k {
+        let ujj = u[j * k + j];
+        let urow = &u[j * k..(j + 1) * k];
+        for row in 0..n {
+            let e = if mask[row * k + j] > 0.0 {
+                0.0
+            } else {
+                wp[row * k + j] / ujj
+            };
+            if e == 0.0 {
+                continue;
+            }
+            let wr = &mut wp[row * k..(row + 1) * k];
+            for (wv, uv) in wr.iter_mut().zip(urow) {
+                *wv -= e * uv;
+            }
+        }
+    }
+    for (wv, mv) in wp.iter_mut().zip(&mask) {
+        *wv *= mv;
+    }
+    (wp, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_keep_rounds_half_to_even() {
+        assert_eq!(n_keep(10, 0.5), 5);
+        assert_eq!(n_keep(10, 0.45), 4); // 4.5 -> 4 (even)
+        assert_eq!(n_keep(10, 0.55), 6); // 5.5 -> 6 (even)
+        assert_eq!(n_keep(10, 0.0), 1); // clip low
+        assert_eq!(n_keep(10, 2.0), 10); // clip high
+    }
+
+    #[test]
+    fn magnitude_keeps_largest_per_row() {
+        let w = vec![0.1, -5.0, 0.2, 3.0, /* row 2 */ 1.0, -0.5, 0.01, -2.0];
+        let (wp, mask) = magnitude(&w, 0.5, 2, 4);
+        assert_eq!(&mask[..4], &[0.0, 1.0, 0.0, 1.0]);
+        assert_eq!(&mask[4..], &[1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(wp[0], 0.0);
+        assert_eq!(wp[1], -5.0);
+    }
+
+    #[test]
+    fn wanda_weights_by_activation_norm() {
+        // |w| equal everywhere; the activation norm decides what survives
+        let w = vec![1.0f32; 6];
+        let xsq = vec![9.0, 1.0, 0.01];
+        let (_, mask) = wanda(&w, &xsq, 0.34, 2, 3); // keep 1 of 3
+        assert_eq!(&mask[..3], &[1.0, 0.0, 0.0]);
+        assert_eq!(&mask[3..], &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn cholesky_and_inverse_roundtrip() {
+        // spd matrix a = b bᵀ + I
+        let k = 4;
+        let b: Vec<f32> = (0..k * k).map(|i| ((i * 7 % 5) as f32) * 0.3).collect();
+        let mut a = linalg::matmul_nt(&b, &b, k, k, k);
+        for i in 0..k {
+            a[i * k + i] += 1.0;
+        }
+        let l = chol_lower(&a, k);
+        // l @ lᵀ == a
+        let re = linalg::matmul_nt(&l, &l, k, k, k);
+        for (x, y) in re.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        // l @ inv(l) == I
+        let li = tril_inv(&l, k);
+        let eye = linalg::matmul_nn(&l, &li, k, k, k);
+        for i in 0..k {
+            for j in 0..k {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((eye[i * k + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn sparsegpt_hits_row_sparsity_and_masks_align() {
+        let n = 6;
+        let k = 8;
+        let w: Vec<f32> = (0..n * k).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.1).collect();
+        let x: Vec<f32> = (0..3 * k).map(|i| ((i * 5 % 11) as f32 - 5.0) * 0.2).collect();
+        let gram = linalg::matmul_tn(&x, &x, 3, k, k);
+        let (wp, mask) = sparsegpt(&w, &gram, 0.5, n, k);
+        for row in 0..n {
+            let nz = mask[row * k..(row + 1) * k].iter().filter(|m| **m > 0.0).count();
+            assert_eq!(nz, 4, "row {row}");
+            for j in 0..k {
+                if mask[row * k + j] == 0.0 {
+                    assert_eq!(wp[row * k + j], 0.0);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Native CPU backend: executes manifest entry points in pure Rust.
+//!
+//! Resolution works exactly like the PJRT path — [`NativeBackend::load`]
+//! takes an artifact *file name* (`tiny-llama__train_step_nls.hlo.txt`)
+//! and resolves it against the built-in manifest
+//! ([`crate::model::builtin`]) to a [`NativeExe`] — but execution runs
+//! the `ops::` kernels instead of a compiled executable. Inputs arrive
+//! positionally in the manifest's declared order and are re-keyed by
+//! name, so the callers (`train`, `pruning`, `serve`, `coordinator`)
+//! are backend-agnostic.
+
+use crate::model::{EntryPoint, Manifest, ModelConfig, PruneOpSpec};
+use crate::ops::model::{Dims, Extra, GradMode, Model, NamedTensors};
+use crate::ops::{nn, prune};
+use crate::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// A resolved native "executable".
+pub struct NativeExe {
+    pub file: String,
+    pub op: NativeOp,
+}
+
+pub enum NativeOp {
+    Entry {
+        cfg: Box<ModelConfig>,
+        name: String,
+        entry: EntryPoint,
+    },
+    Prune(PruneOpSpec),
+}
+
+impl NativeExe {
+    pub fn param_count(&self) -> usize {
+        match &self.op {
+            NativeOp::Entry { entry, .. } => entry.inputs.len(),
+            NativeOp::Prune(spec) => spec.inputs.len(),
+        }
+    }
+}
+
+pub struct NativeBackend {
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<NativeExe>>>,
+}
+
+impl Default for NativeBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend { manifest: Manifest::builtin(), cache: RefCell::new(HashMap::new()) }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Resolve an artifact file name to a native op (cached).
+    pub fn load(&self, file: &str) -> Result<Rc<NativeExe>> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let exe = self.resolve(file)?;
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn resolve(&self, file: &str) -> Result<Rc<NativeExe>> {
+        for cfg in self.manifest.configs.values() {
+            for (name, entry) in &cfg.entrypoints {
+                if entry.file == file {
+                    // fail at load time (not first execution) if the
+                    // manifest grew an entry this backend can't execute
+                    entry_spec(name)?;
+                    return Ok(Rc::new(NativeExe {
+                        file: file.to_string(),
+                        op: NativeOp::Entry {
+                            cfg: Box::new(cfg.clone()),
+                            name: name.clone(),
+                            entry: entry.clone(),
+                        },
+                    }));
+                }
+            }
+        }
+        for spec in self.manifest.prune_ops.values() {
+            if spec.file == file {
+                return Ok(Rc::new(NativeExe {
+                    file: file.to_string(),
+                    op: NativeOp::Prune(spec.clone()),
+                }));
+            }
+        }
+        bail!("'{file}' does not name any entry point or prune op in the built-in manifest")
+    }
+}
+
+/// Execute a native op over positional inputs (manifest order).
+pub fn execute(exe: &NativeExe, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    match &exe.op {
+        NativeOp::Prune(spec) => run_prune(spec, inputs),
+        NativeOp::Entry { cfg, name, entry } => run_entry(cfg, name, entry, inputs),
+    }
+}
+
+fn run_prune(spec: &PruneOpSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let mut named = NamedTensors::new();
+    for (io, t) in spec.inputs.iter().zip(inputs) {
+        named.insert(&io.name, t);
+    }
+    let (n, k) = spec.shape;
+    let w = named.f("w")?;
+    if w.len() != n * k {
+        bail!("prune op {}: weight has {} elements, expected {n}x{k}", spec.file, w.len());
+    }
+    let keep = named.f("keep_frac")?[0];
+    let (wp, mask) = match spec.kind.as_str() {
+        "wanda" => {
+            let xsq = named.f("xnorm_sq")?;
+            if xsq.len() != k {
+                bail!("prune op {}: xnorm_sq has {} elements, expected {k}", spec.file, xsq.len());
+            }
+            prune::wanda(w, xsq, keep, n, k)
+        }
+        "magnitude" => prune::magnitude(w, keep, n, k),
+        "sparsegpt" => {
+            let gram = named.f("gram")?;
+            if gram.len() != k * k {
+                bail!("prune op {}: gram has {} elements, expected {k}x{k}", spec.file, gram.len());
+            }
+            prune::sparsegpt(w, gram, keep, n, k)
+        }
+        other => bail!("unknown prune kind '{other}'"),
+    };
+    Ok(vec![
+        HostTensor::from_f32(&[n, k], wp),
+        HostTensor::from_f32(&[n, k], mask),
+    ])
+}
+
+/// Flags describing what one entry-point variant computes.
+struct EntrySpec {
+    use_adapters: bool,
+    extra: Extra,
+    train: Option<GradMode>,
+    collect: bool,
+}
+
+fn entry_spec(name: &str) -> Result<EntrySpec> {
+    let spec = |use_adapters, extra, train, collect| EntrySpec { use_adapters, extra, train, collect };
+    Ok(match name {
+        // the pallas-lowered artifact runs distinct HLO; natively both
+        // names execute the same (numerically identical) kernels
+        "forward_eval" | "forward_eval_pallas" => spec(true, Extra::None, None, false),
+        "forward_eval_base" => spec(false, Extra::None, None, false),
+        "forward_eval_prefix" => spec(false, Extra::Prefix, None, false),
+        "forward_eval_series" => spec(false, Extra::Series, None, false),
+        "forward_eval_parallel" => spec(false, Extra::Parallel, None, false),
+        "calib_stats" => spec(false, Extra::None, None, true),
+        "train_step_nls" => spec(true, Extra::None, Some(GradMode::Adapters), false),
+        "train_step_full" => spec(false, Extra::None, Some(GradMode::Base), false),
+        "train_step_prefix" => spec(false, Extra::Prefix, Some(GradMode::Prefix), false),
+        "train_step_series" => spec(false, Extra::Series, Some(GradMode::Series), false),
+        "train_step_parallel" => spec(false, Extra::Parallel, Some(GradMode::Parallel), false),
+        other => bail!("native backend does not implement entry point '{other}'"),
+    })
+}
+
+fn run_entry(
+    cfg: &ModelConfig,
+    name: &str,
+    entry: &EntryPoint,
+    inputs: &[&HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let spec = entry_spec(name)?;
+    let mut named = NamedTensors::new();
+    for (io, t) in entry.inputs.iter().zip(inputs) {
+        named.insert(&io.name, t);
+    }
+    let x_t = named.get("x")?;
+    if x_t.shape.len() != 2 || x_t.shape[1] != cfg.seq_len {
+        bail!(
+            "{name}: x has shape {:?}, expected [*, {}]",
+            x_t.shape,
+            cfg.seq_len
+        );
+    }
+    let b = x_t.shape[0];
+    let x = x_t.i32s();
+    let dims = Dims::from_config(cfg, b);
+    let rank_mask = if spec.use_adapters { Some(named.f("rank_mask")?) } else { None };
+    let model = Model {
+        dims,
+        p: &named,
+        use_adapters: spec.use_adapters,
+        rank_mask,
+        extra: spec.extra,
+    };
+
+    let Some(mode) = spec.train else {
+        // forward-only entries (eval forwards + calib_stats)
+        let fwd = model.forward(x, false, spec.collect)?;
+        if spec.collect {
+            let mut outs = Vec::with_capacity(fwd.stats.len() * 2);
+            for (site, sumsq, gram) in fwd.stats {
+                let dim = sumsq.len();
+                outs.push(HostTensor::from_f32(&[dim], sumsq));
+                outs.push(HostTensor::from_f32(&[dim, dim], gram));
+            }
+            return Ok(outs);
+        }
+        return Ok(vec![HostTensor::from_f32(
+            &[b, cfg.seq_len, cfg.vocab],
+            fwd.logits,
+        )]);
+    };
+
+    // fused train step: forward + backward + AdamW (+ mask re-application)
+    let step = named.f("step")?[0];
+    let lr = named.f("lr")?[0];
+    let y = named.get("y")?.i32s();
+    let loss_mask = named.f("loss_mask")?;
+    let (loss, mut grads) = model.loss_and_grads(x, y, loss_mask, mode)?;
+    let weight_decay = if mode == GradMode::Base { 0.01 } else { 0.0 };
+
+    let mut new_p: HashMap<&str, Vec<f32>> = HashMap::new();
+    let mut new_m: HashMap<&str, Vec<f32>> = HashMap::new();
+    let mut new_v: HashMap<&str, Vec<f32>> = HashMap::new();
+    for out in &entry.outputs {
+        let pname = out.name.as_str();
+        if pname == "loss" || pname.starts_with("m.") || pname.starts_with("v.") {
+            continue;
+        }
+        let mut p = named.f(pname)?.to_vec();
+        let mut m = named.f(&format!("m.{pname}"))?.to_vec();
+        let mut v = named.f(&format!("v.{pname}"))?.to_vec();
+        let g = grads.take(pname, p.len());
+        if g.len() != p.len() {
+            bail!("{name}: gradient/param size mismatch for '{pname}'");
+        }
+        nn::adamw(&mut p, &g, &mut m, &mut v, step, lr, weight_decay);
+        // keep pruned weights (and their optimizer state) at exactly zero
+        let mask_name = format!("mask.{pname}");
+        if named.contains(&mask_name) {
+            let mask = named.f(&mask_name)?;
+            for i in 0..p.len() {
+                p[i] *= mask[i];
+                m[i] *= mask[i];
+                v[i] *= mask[i];
+            }
+        }
+        new_p.insert(pname, p);
+        new_m.insert(pname, m);
+        new_v.insert(pname, v);
+    }
+    let mut outs = Vec::with_capacity(entry.outputs.len());
+    for out in &entry.outputs {
+        let oname = out.name.as_str();
+        let t = if oname == "loss" {
+            HostTensor::scalar_f32(loss)
+        } else if let Some(rest) = oname.strip_prefix("m.") {
+            HostTensor::from_f32(&out.shape, new_m.remove(rest).context("missing m state")?)
+        } else if let Some(rest) = oname.strip_prefix("v.") {
+            HostTensor::from_f32(&out.shape, new_v.remove(rest).context("missing v state")?)
+        } else {
+            HostTensor::from_f32(&out.shape, new_p.remove(oname).context("missing updated param")?)
+        };
+        outs.push(t);
+    }
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolves_entry_and_prune_files() {
+        let be = NativeBackend::new();
+        let e = be.load("tiny-llama__forward_eval_base.hlo.txt").unwrap();
+        assert!(matches!(&e.op, NativeOp::Entry { name, .. } if name == "forward_eval_base"));
+        assert!(e.param_count() > 1);
+        let p = be.load("prune__wanda_48x48.hlo.txt").unwrap();
+        assert!(matches!(&p.op, NativeOp::Prune(s) if s.kind == "wanda"));
+        assert_eq!(p.param_count(), 3);
+        assert!(be.load("nope.hlo.txt").is_err());
+        // cache: same Rc handed back
+        assert_eq!(be.compiled_count(), 2);
+        let _ = be.load("prune__wanda_48x48.hlo.txt").unwrap();
+        assert_eq!(be.compiled_count(), 2);
+    }
+
+    #[test]
+    fn unknown_entry_kind_is_rejected() {
+        assert!(entry_spec("train_step_quantum").is_err());
+        assert!(entry_spec("forward_eval_pallas").is_ok());
+    }
+}

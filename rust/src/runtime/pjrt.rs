@@ -1,0 +1,206 @@
+//! PJRT artifact executor (cargo feature `xla`): load AOT'd HLO text,
+//! compile once, execute many.
+//!
+//! This wraps the `xla` crate exactly the way /opt/xla-example/load_hlo
+//! does: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Every artifact is compiled at most once
+//! per process and cached. All entry points were lowered with
+//! `return_tuple=True`, so execution returns one tuple literal which is
+//! decomposed into `HostTensor`s.
+
+use crate::runtime::{Arg, DeviceBuffer};
+use crate::tensor::HostTensor;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled artifact. Cheap to clone (shared executable).
+#[derive(Clone)]
+pub struct PjrtExe {
+    inner: Rc<xla::PjRtLoadedExecutable>,
+}
+
+/// Parse the parameter count of the ENTRY computation from HLO text.
+/// The text format puts parameters as `%x = ty[...] parameter(N)` lines
+/// inside the `ENTRY <name> { ... }` block.
+fn hlo_entry_param_count(text: &str) -> Option<usize> {
+    let start = text.lines().position(|l| l.trim_start().starts_with("ENTRY "))?;
+    let mut count = 0usize;
+    for line in text.lines().skip(start + 1) {
+        let t = line.trim_start();
+        if t.starts_with('}') {
+            break;
+        }
+        if t.contains(" parameter(") {
+            count += 1;
+        }
+    }
+    Some(count)
+}
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, (PjrtExe, usize)>>,
+}
+
+impl PjrtBackend {
+    /// CPU PJRT client over an artifacts directory (`make artifacts` output).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        if !dir.join("manifest.json").exists() {
+            bail!(
+                "no manifest.json in {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        crate::info!(
+            "pjrt runtime up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtBackend { client, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Load + compile an HLO text artifact (cached by file name).
+    /// Returns the executable and its entry parameter count.
+    pub fn load(&self, file: &str) -> Result<(PjrtExe, usize)> {
+        if let Some(e) = self.cache.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let t = crate::util::log::Timer::new(&format!("compile {file}"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read HLO text {}", path.display()))?;
+        let param_count = hlo_entry_param_count(&text).unwrap_or(usize::MAX);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile {file}"))?;
+        t.stop();
+        let exe = PjrtExe { inner: Rc::new(exe) };
+        self.cache
+            .borrow_mut()
+            .insert(file.to_string(), (exe.clone(), param_count));
+        Ok((exe, param_count))
+    }
+
+    /// Upload a host tensor to a device buffer (for inputs reused across
+    /// many executions — frozen base weights, masks).
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        let lit = t.to_literal()?;
+        self.client
+            .buffer_from_host_literal(None, &lit)
+            .context("upload literal to device")
+    }
+
+    /// Literal-path execution; decomposes the output tuple.
+    pub fn run(&self, exe: &PjrtExe, name: &str, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = exe
+            .inner
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {name}"))?;
+        Self::unpack(out)
+    }
+
+    /// Buffer-path execution: mixed device buffers + per-call host tensors.
+    /// Host tensors are uploaded for this call only; `Arg::Buf` inputs are
+    /// reused device buffers (upload once via `Runtime::upload`).
+    pub fn run_args(&self, exe: &PjrtExe, name: &str, inputs: &[Arg]) -> Result<Vec<HostTensor>> {
+        // pass 1: upload the per-call host tensors (owned must outlive refs)
+        let owned: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .filter_map(|a| match a {
+                Arg::Host(t) => Some(self.upload(t)),
+                Arg::Buf(_) => None,
+            })
+            .collect::<Result<_>>()?;
+        // pass 2: assemble the argument list in order
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        let mut k = 0usize;
+        for a in inputs {
+            match a {
+                Arg::Buf(DeviceBuffer::Pjrt(b)) => refs.push(b),
+                Arg::Buf(DeviceBuffer::Native(_)) => {
+                    bail!("{name}: native device buffer passed to the pjrt backend")
+                }
+                Arg::Host(_) => {
+                    refs.push(&owned[k]);
+                    k += 1;
+                }
+            }
+        }
+        let out = exe
+            .inner
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .with_context(|| format!("execute_b {name}"))?;
+        Self::unpack(out)
+    }
+
+    fn unpack(out: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buf = out
+            .first()
+            .and_then(|v| v.first())
+            .context("empty execution result")?;
+        let tuple = buf.to_literal_sync().context("result to literal")?;
+        let parts = tuple.to_tuple().context("decompose result tuple")?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/integration.rs;
+    // here we check constructor error handling and the HLO header parser.
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let e = PjrtBackend::new("/definitely/not/a/dir");
+        assert!(e.is_err());
+        let msg = format!("{:#}", e.err().unwrap());
+        assert!(msg.contains("manifest.json"), "{msg}");
+    }
+
+    #[test]
+    fn entry_param_count_parses_text_format() {
+        let hlo = "\
+HloModule m\n\
+\n\
+region_0 {\n\
+  a = f32[] parameter(0)\n\
+  b = f32[] parameter(1)\n\
+  ROOT s = f32[] add(a, b)\n\
+}\n\
+\n\
+ENTRY main.5 {\n\
+  p0 = f32[2,2]{1,0} parameter(0)\n\
+  p1 = f32[2,2]{1,0} parameter(1)\n\
+  p2 = s32[4]{0} parameter(2)\n\
+  ROOT t = (f32[2,2]) tuple(p0)\n\
+}\n";
+        assert_eq!(hlo_entry_param_count(hlo), Some(3));
+        assert_eq!(hlo_entry_param_count("no entry here"), None);
+        assert_eq!(hlo_entry_param_count("ENTRY e {\n}\n"), Some(0));
+    }
+}

@@ -1,11 +1,13 @@
 //! Host-side tensors: the L3 representation of every model parameter,
-//! batch, mask, and statistic, with lossless conversion to/from
-//! `xla::Literal` and a simple binary checkpoint codec.
+//! batch, mask, and statistic, with a simple binary checkpoint codec and
+//! (under the `xla` feature) lossless conversion to/from `xla::Literal`.
 //!
 //! Only f32 and i32 exist in the stack (DESIGN.md §3: FP16→f32
 //! substitution), which keeps this deliberately small.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
 use std::io::{Read, Write};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -98,6 +100,7 @@ impl HostTensor {
 
     // ------------------------------------------------------ Literal I/O
 
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes: &[u8] = match &self.data {
             Data::F32(v) => unsafe {
@@ -115,6 +118,7 @@ impl HostTensor {
             .context("literal from host tensor")
     }
 
+    #[cfg(feature = "xla")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape().context("literal shape")?;
         let dims: Vec<usize> = shape.dims().iter().map(|d| *d as usize).collect();
@@ -236,6 +240,7 @@ mod tests {
         assert!(HostTensor::read_from(&mut &buf[..]).is_err());
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip() {
         let t = HostTensor::from_f32(&[2, 2], vec![1., 2., 3., 4.]);

@@ -1,21 +1,23 @@
-//! Training and evaluation drivers over AOT'd entry points.
+//! Training and evaluation drivers over runtime entry points
+//! (backend-agnostic: PJRT artifacts or the native CPU executor).
 //!
 //! Everything is *manifest-driven*: inputs are assembled by name from the
 //! entry point's recorded signature, so one driver serves all five train
 //! steps (NLS, full-FT, prefix, series, parallel) and every forward
-//! variant. The hot loop is one `execute` per step — loss, gradients and
-//! AdamW all live inside the executable (DESIGN.md §6).
+//! variant. The hot loop is one `Runtime::run_args` per step — loss,
+//! gradients and AdamW are fused inside the entry point on both backends
+//! (DESIGN.md §6).
 //!
 //! [`TrainSession`] implements the §Perf buffer-residency lever: inputs
 //! that never change across steps (the frozen, sparsified base weights —
-//! the bulk of the model) are uploaded to device once; only the small
-//! trainable tensors round-trip per step.
+//! the bulk of the model) are uploaded once via [`DeviceBuffer`]; only
+//! the small trainable tensors round-trip per step.
 
 use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
-use crate::runtime::{Arg, Exe, Runtime};
+use crate::runtime::{Arg, DeviceBuffer, Exe, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
@@ -74,7 +76,7 @@ pub struct TrainSession<'rt> {
     rt: &'rt Runtime,
     exe: Exe,
     entry: EntryPoint,
-    frozen_bufs: HashMap<String, xla::PjRtBuffer>,
+    frozen_bufs: HashMap<String, DeviceBuffer>,
     /// names (in output order) of the trainable params this entry updates
     trainable_names: Vec<String>,
 }

@@ -1,0 +1,514 @@
+//! Hermetic tier-1 suite: the cross-layer invariants of the integration
+//! suite, run end-to-end through the **native CPU backend** — no Python,
+//! no XLA, no `artifacts/` directory anywhere.
+//!
+//! Mirrors `rust/tests/integration.rs` (zero-mask forward == base
+//! forward, LoRA B=0 transparency, Wanda per-row sparsity exactness,
+//! train-step loss decrease, full-FT sparsity preservation) and
+//! `rust/tests/pipeline_e2e.rs` (full prune → NLS train → search → eval
+//! pipeline, dynamic-batching router), plus property tests for the
+//! native kernels via `util::prop`.
+
+use shears::data::batch::{Batcher, MaskMode};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::{Manifest, ModelConfig, ParamStore};
+use shears::nls::SearchSpace;
+use shears::ops::linalg;
+use shears::ops::prune as nprune;
+use shears::pruning::{self, Method};
+use shears::runtime::Runtime;
+use shears::serve::{Decoder, GenRequest};
+use shears::tensor::HostTensor;
+use shears::train::{evaluate, forward_logits, train_loop, TrainOpts};
+use shears::util::prop::check;
+use shears::util::rng::Rng;
+
+const CFG: &str = "tiny-llama";
+
+struct Env {
+    rt: Runtime,
+    manifest: Manifest,
+}
+
+impl Env {
+    fn new() -> Env {
+        let rt = Runtime::native().unwrap();
+        let manifest = rt.manifest().unwrap();
+        Env { rt, manifest }
+    }
+
+    fn cfg(&self) -> &ModelConfig {
+        self.manifest.config(CFG).unwrap()
+    }
+}
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let adapters = ParamStore::init_adapters(cfg, &mut rng);
+    (base, adapters)
+}
+
+fn eval_batch(cfg: &ModelConfig, vocab: &Vocab, seed: u64) -> shears::data::Batch {
+    let ds = dataset(Task::BoolqSim, vocab, seed, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, vocab, MaskMode::AnswerOnly);
+    batcher.epoch().into_iter().next().unwrap()
+}
+
+#[test]
+fn native_forward_is_deterministic_and_finite() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 0);
+    let entry = cfg.entry("forward_eval_base").unwrap();
+    let exe = env.rt.load(&entry.file).unwrap();
+    let batch = eval_batch(cfg, &vocab, 1);
+    let a = forward_logits(&env.rt, &exe, entry, &[&base], None, &batch).unwrap();
+    let b = forward_logits(&env.rt, &exe, entry, &[&base], None, &batch).unwrap();
+    assert_eq!(a.shape, vec![cfg.batch_eval, cfg.seq_len, cfg.vocab]);
+    assert_eq!(a.f32s(), b.f32s());
+    assert!(a.f32s().iter().all(|x| x.is_finite()));
+    assert_eq!(*env.rt.exec_count.borrow(), 2);
+}
+
+#[test]
+fn zero_rank_mask_matches_base_forward() {
+    // NLS weight-sharing invariant, natively
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, mut adapters) = init_stores(cfg, 2);
+    // make B nonzero so the mask is doing real work
+    let mut rng = Rng::new(99);
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            let t = adapters.get_mut(&p.name).unwrap();
+            rng.fill_normal(t.f32s_mut(), 0.0, 0.05);
+        }
+    }
+    let space = SearchSpace::from_config(cfg);
+    let batch = eval_batch(cfg, &vocab, 3);
+
+    let e_ad = cfg.entry("forward_eval").unwrap();
+    let exe_ad = env.rt.load(&e_ad.file).unwrap();
+    let zero_mask = HostTensor::zeros(&[space.n_modules, space.max_rank]);
+    let with_zero =
+        forward_logits(&env.rt, &exe_ad, e_ad, &[&base, &adapters], Some(&zero_mask), &batch)
+            .unwrap();
+
+    let e_base = cfg.entry("forward_eval_base").unwrap();
+    let exe_base = env.rt.load(&e_base.file).unwrap();
+    let base_only = forward_logits(&env.rt, &exe_base, e_base, &[&base], None, &batch).unwrap();
+
+    let max_diff = with_zero
+        .f32s()
+        .iter()
+        .zip(base_only.f32s())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "zero-mask forward deviates: {max_diff}");
+
+    // and a full mask with B≠0 must differ
+    let full = space.full_mask();
+    let with_full =
+        forward_logits(&env.rt, &exe_ad, e_ad, &[&base, &adapters], Some(&full), &batch).unwrap();
+    let diff = with_full
+        .f32s()
+        .iter()
+        .zip(base_only.f32s())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-4, "full-mask forward identical to base");
+}
+
+#[test]
+fn lora_b_zero_is_transparent_under_any_mask() {
+    // fresh adapters ship with B = 0 (paper §2.2 init): the adapted
+    // forward must equal the base forward whatever the rank mask says
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, adapters) = init_stores(cfg, 4);
+    let space = SearchSpace::from_config(cfg);
+    let batch = eval_batch(cfg, &vocab, 5);
+    let e_ad = cfg.entry("forward_eval").unwrap();
+    let exe_ad = env.rt.load(&e_ad.file).unwrap();
+    let e_base = cfg.entry("forward_eval_base").unwrap();
+    let exe_base = env.rt.load(&e_base.file).unwrap();
+    let base_only = forward_logits(&env.rt, &exe_base, e_base, &[&base], None, &batch).unwrap();
+    let mut rng = Rng::new(7);
+    for mask in [space.full_mask(), space.rank_mask(&space.sample(&mut rng))] {
+        let adapted =
+            forward_logits(&env.rt, &exe_ad, e_ad, &[&base, &adapters], Some(&mask), &batch)
+                .unwrap();
+        let max_diff = adapted
+            .f32s()
+            .iter()
+            .zip(base_only.f32s())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "B=0 adapters not transparent: {max_diff}");
+    }
+}
+
+#[test]
+fn pallas_alias_matches_reference_forward_exactly() {
+    // natively both entry names execute the same kernels — the alias
+    // must therefore be bit-identical (the artifact-path analogue of
+    // integration's pallas-vs-jnp 1e-3 agreement)
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, adapters) = init_stores(cfg, 6);
+    let space = SearchSpace::from_config(cfg);
+    let mask = space.rank_mask(&space.heuristic());
+    let batch = eval_batch(cfg, &vocab, 7);
+    let run = |entry_name: &str| {
+        let e = cfg.entry(entry_name).unwrap();
+        let exe = env.rt.load(&e.file).unwrap();
+        forward_logits(&env.rt, &exe, e, &[&base, &adapters], Some(&mask), &batch).unwrap()
+    };
+    assert_eq!(run("forward_eval").f32s(), run("forward_eval_pallas").f32s());
+}
+
+#[test]
+fn wanda_prune_hits_row_sparsity_natively() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base, _) = init_stores(cfg, 8);
+    let ds = dataset(Task::Gsm8kSim, &vocab, 9, cfg.batch_eval * 2, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let batches = batcher.epoch();
+    let stats = pruning::collect_stats(&env.rt, cfg, &base, &batches).unwrap();
+    for (site, dim) in &cfg.sites {
+        assert_eq!(stats.sumsq[site].shape, vec![*dim], "{site}");
+        assert_eq!(stats.gram[site].shape, vec![*dim, *dim], "{site}");
+        // Σx² is a sum of squares: strictly non-negative
+        assert!(stats.sumsq[site].f32s().iter().all(|v| *v >= 0.0), "{site}");
+    }
+    let masks = pruning::prune(
+        &env.rt, &env.manifest, cfg, &mut base, Method::Wanda, 0.5, Some(&stats),
+    )
+    .unwrap();
+    for p in &cfg.prunable {
+        let w = base.get(&p.name).unwrap();
+        let (n, k) = (p.shape[0], p.shape[1]);
+        let expect_keep = ((k as f64) * 0.5).round() as usize;
+        for row in 0..n {
+            let nz = w.f32s()[row * k..(row + 1) * k]
+                .iter()
+                .filter(|x| **x != 0.0)
+                .count();
+            assert!(
+                nz <= expect_keep,
+                "{}: row {row} has {nz} nonzeros, expected <= {expect_keep}",
+                p.name
+            );
+        }
+        let m = masks.get(&p.name).unwrap();
+        assert_eq!(m.shape, p.shape);
+    }
+}
+
+#[test]
+fn magnitude_and_sparsegpt_prune_run_natively() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base_m, _) = init_stores(cfg, 10);
+    let masks =
+        pruning::prune(&env.rt, &env.manifest, cfg, &mut base_m, Method::Magnitude, 0.4, None)
+            .unwrap();
+    assert_eq!(masks.len(), cfg.prunable.len());
+    let names: Vec<String> = cfg.prunable.iter().map(|p| p.name.clone()).collect();
+    let s = base_m.sparsity_of(&names);
+    assert!((s - 0.4).abs() < 0.05, "magnitude sparsity {s}");
+
+    let (mut base_s, _) = init_stores(cfg, 11);
+    let ds = dataset(Task::Gsm8kSim, &vocab, 12, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let stats = pruning::collect_stats(&env.rt, cfg, &base_s, &batcher.epoch()).unwrap();
+    pruning::prune(&env.rt, &env.manifest, cfg, &mut base_s, Method::SparseGpt, 0.5, Some(&stats))
+        .unwrap();
+    let s = base_s.sparsity_of(&names);
+    assert!((s - 0.5).abs() < 0.05, "sparsegpt sparsity {s}");
+}
+
+#[test]
+fn nls_train_step_reduces_loss_and_keeps_base_frozen() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, mut adapters) = init_stores(cfg, 13);
+    let base_before = base.get("layers.0.attn.q").unwrap().clone();
+    let space = SearchSpace::from_config(cfg);
+    let ds = dataset(Task::BoolqSim, &vocab, 14, 64, cfg.seq_len);
+    let mut batcher =
+        Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let opts =
+        TrainOpts { steps: 25, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0 };
+    let log = train_loop(
+        &env.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
+        Some(&space), &opts,
+    )
+    .unwrap();
+    assert_eq!(log.losses.len(), 25);
+    let head: f32 = log.losses[..5].iter().sum::<f32>() / 5.0;
+    let tail = log.mean_tail(5);
+    assert!(tail < head, "loss did not decrease: {head} -> {tail}");
+    // frozen base untouched (it rides the DeviceBuffer residency path)
+    assert_eq!(base.get("layers.0.attn.q").unwrap(), &base_before);
+    // adapters actually moved
+    let moved = cfg
+        .adapter_params
+        .iter()
+        .any(|p| adapters.get(&p.name).unwrap().f32s().iter().any(|x| x.abs() > 1e-7));
+    assert!(moved);
+}
+
+#[test]
+fn full_ft_train_step_preserves_sparsity() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (mut base, _) = init_stores(cfg, 15);
+    let masks =
+        pruning::prune(&env.rt, &env.manifest, cfg, &mut base, Method::Magnitude, 0.5, None)
+            .unwrap();
+    let ds = dataset(Task::BoolqSim, &vocab, 16, 32, cfg.seq_len);
+    let mut batcher =
+        Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let opts =
+        TrainOpts { steps: 4, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0 };
+    let frozen = ParamStore::new();
+    train_loop(
+        &env.rt, cfg, "train_step_full", &frozen, &mut base, Some(&masks), &mut batcher,
+        None, &opts,
+    )
+    .unwrap();
+    // pruned positions stay exactly zero after full fine-tuning
+    for p in &cfg.prunable {
+        let w = base.get(&p.name).unwrap();
+        let m = masks.get(&p.name).unwrap();
+        for (wi, mi) in w.f32s().iter().zip(m.f32s()) {
+            if *mi == 0.0 {
+                assert_eq!(*wi, 0.0, "{}: pruned weight resurrected", p.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_adapters_train_natively() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 17);
+    for (entry, specs) in [
+        ("train_step_prefix", &cfg.prefix_params),
+        ("train_step_series", &cfg.series_params),
+        ("train_step_parallel", &cfg.parallel_params),
+    ] {
+        let mut rng = Rng::new(3);
+        let mut extra = ParamStore::init_extra(specs, &mut rng);
+        let ds = dataset(Task::BoolqSim, &vocab, 18, 32, cfg.seq_len);
+        let mut batcher =
+            Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+        let opts =
+            TrainOpts { steps: 4, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0 };
+        let log = train_loop(
+            &env.rt, cfg, entry, &base, &mut extra, None, &mut batcher, None, &opts,
+        )
+        .unwrap();
+        assert!(log.losses.iter().all(|l| l.is_finite()), "{entry}");
+        // the corresponding eval forward accepts the trained params
+        let fname = entry.replace("train_step", "forward_eval");
+        let test = dataset(Task::BoolqSim, &vocab, 19, 8, cfg.seq_len);
+        let acc = evaluate(&env.rt, cfg, &fname, &[&base, &extra], None, &test, &vocab).unwrap();
+        assert!((0.0..=1.0).contains(&acc), "{fname}: {acc}");
+    }
+}
+
+#[test]
+fn full_pipeline_end_to_end_on_native_backend() {
+    // the acceptance-criteria run: prune → NLS super-adapter train →
+    // sub-adapter search → eval, hermetically
+    use shears::coordinator::{PipelineOpts, ShearsPipeline};
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let workdir = std::env::temp_dir().join(format!("shears_native_e2e_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&workdir);
+    let opts = PipelineOpts {
+        config: CFG.into(),
+        method: Method::Wanda,
+        sparsity: 0.5,
+        pretrain_steps: 60,
+        train_steps: 40,
+        lr: 3e-3,
+        seed: 7,
+        tasks: vec![Task::BoolqSim],
+        train_examples: 96,
+        eval_examples: 24,
+        calib_batches: 2,
+        hill_climb_budget: 0,
+        search_eval_examples: 8,
+        workdir: Some(workdir.clone()),
+    };
+    let pipeline = ShearsPipeline::new(&rt, &manifest, opts.clone()).unwrap();
+    let report = pipeline.run().unwrap();
+    assert!(
+        (report.sparsity_measured - 0.5).abs() < 0.03,
+        "sparsity {}",
+        report.sparsity_measured
+    );
+    let space = SearchSpace::from_config(manifest.config(CFG).unwrap());
+    assert_eq!(report.sub_adapter, space.heuristic());
+    assert!(report.train_log.final_loss().is_finite());
+    assert!(
+        report.train_log.mean_tail(10) < report.train_log.losses[0],
+        "NLS training did not reduce loss"
+    );
+    assert!(report.nonzero_params < report.total_params);
+    let acc = report.mean_accuracy();
+    assert!((0.0..=1.0).contains(&acc));
+
+    // pretrain checkpoint was cached; a second pipeline reuses it
+    let pipeline2 = ShearsPipeline::new(&rt, &manifest, opts).unwrap();
+    let (base2, log2) = pipeline2.pretrained_base().unwrap();
+    assert_eq!(log2.losses.len(), 0, "expected cache hit");
+    assert!(base2.numel() > 0);
+    let _ = std::fs::remove_dir_all(&workdir);
+}
+
+#[test]
+fn router_batches_concurrent_requests_natively() {
+    use shears::coordinator::EvalRouter;
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(0);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    // explicit native backend: hermetic regardless of env or artifacts
+    let router = EvalRouter::spawn(
+        "native".into(),
+        std::env::temp_dir().join("shears_no_artifacts").to_string_lossy().to_string(),
+        CFG.into(),
+        "forward_eval_base".into(),
+        vec![base],
+        std::time::Duration::from_millis(30),
+    )
+    .unwrap();
+    let router = std::sync::Arc::new(router);
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let r = router.clone();
+        let examples = dataset(Task::BoolqSim, &vocab, 100 + i, 8, cfg.seq_len);
+        handles.push(std::thread::spawn(move || r.eval(examples, None).unwrap()));
+    }
+    for h in handles {
+        let acc = h.join().unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+    }
+    let m = router.metrics().unwrap();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.examples, 32);
+    // 32 examples at batch_eval=16 need >= 2 forwards; batching should do
+    // far better than one forward per 8-example request
+    assert!(m.forwards >= 2 && m.forwards <= 4, "forwards={}", m.forwards);
+    assert!(m.mean_occupancy > 8.0, "occupancy={}", m.mean_occupancy);
+}
+
+#[test]
+fn serve_decoder_generates_natively() {
+    let env = Env::new();
+    let cfg = env.cfg();
+    let vocab = Vocab::new(cfg.vocab);
+    let (base, _) = init_stores(cfg, 20);
+    let decoder = Decoder::new(&env.rt, cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let mut rng = Rng::new(21);
+    let requests: Vec<GenRequest> = (0..6)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest { prompt: ex.tokens[..ex.answer_start].to_vec(), max_new_tokens: 3 }
+        })
+        .collect();
+    let (responses, metrics) = decoder.serve(&requests).unwrap();
+    assert_eq!(responses.len(), 6);
+    assert!(metrics.generated_tokens >= 6);
+    assert!(responses.iter().all(|r| r.new_tokens >= 1));
+}
+
+// ------------------------------------------------------ property tests
+
+#[test]
+fn prop_matmul_shape_algebra() {
+    check("identity and composition over x @ Wᵀ", 40, |g| {
+        let m = g.usize_in(1..6);
+        let k = g.usize_in(1..7);
+        let n = g.usize_in(1..6);
+        let r = g.usize_in(1..5);
+        let x = g.vec_f32(m * k..m * k + 1, -2.0, 2.0);
+        let x = if x.len() == m * k { x } else { vec![0.5; m * k] };
+        // identity: x @ Iᵀ == x
+        let mut eye = vec![0.0f32; k * k];
+        for i in 0..k {
+            eye[i * k + i] = 1.0;
+        }
+        let xi = linalg::matmul_nt(&x, &eye, m, k, k);
+        for (a, b) in xi.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // composition: (x @ Aᵀ) @ Bᵀ == x @ (B·A)ᵀ
+        let a: Vec<f32> = (0..r * k).map(|i| ((i * 31 % 17) as f32 - 8.0) * 0.1).collect();
+        let b: Vec<f32> = (0..n * r).map(|i| ((i * 13 % 11) as f32 - 5.0) * 0.1).collect();
+        let lhs = linalg::matmul_nt(&linalg::matmul_nt(&x, &a, m, k, r), &b, m, r, n);
+        let ba = linalg::matmul_nn(&b, &a, n, r, k);
+        let rhs = linalg::matmul_nt(&x, &ba, m, k, n);
+        for (p, q) in lhs.iter().zip(&rhs) {
+            assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+        }
+    });
+}
+
+#[test]
+fn prop_prune_masks_are_idempotent() {
+    check("re-pruning a pruned weight is a no-op", 40, |g| {
+        let n = g.usize_in(1..6);
+        let k = g.usize_in(2..10);
+        let keep = [0.25f32, 0.4, 0.5, 0.75][g.usize_in(0..4)];
+        let w = g.vec_f32(n * k..n * k + 1, -3.0, 3.0);
+        let w = if w.len() == n * k { w } else { vec![0.7; n * k] };
+        let (w1, m1) = nprune::magnitude(&w, keep, n, k);
+        let (w2, m2) = nprune::magnitude(&w1, keep, n, k);
+        assert_eq!(w1, w2);
+        assert_eq!(m1, m2);
+        let xsq: Vec<f32> = (0..k).map(|i| 0.1 + (i as f32) * 0.3).collect();
+        let (w1, m1) = nprune::wanda(&w, &xsq, keep, n, k);
+        let (w2, m2) = nprune::wanda(&w1, &xsq, keep, n, k);
+        assert_eq!(w1, w2);
+        assert_eq!(m1, m2);
+    });
+}
+
+#[test]
+fn prop_native_prune_respects_exact_row_budget() {
+    check("per-row keep count == round(k·keep)", 30, |g| {
+        let n = g.usize_in(1..5);
+        let k = g.usize_in(2..12);
+        // distinct magnitudes -> no score ties -> exact count
+        let w: Vec<f32> = (0..n * k).map(|i| (i + 1) as f32 * 0.01).collect();
+        let keep = g.f32_in(0.1, 0.9);
+        let (_, mask) = nprune::magnitude(&w, keep, n, k);
+        let expect = ((k as f64 * keep as f64).round() as usize).clamp(1, k);
+        for row in 0..n {
+            let kept = mask[row * k..(row + 1) * k].iter().filter(|m| **m > 0.0).count();
+            // round-half-even vs round-half-away differ only on exact ties
+            assert!(
+                (kept as i64 - expect as i64).abs() <= 1,
+                "row {row}: kept {kept}, expected ~{expect}"
+            );
+        }
+    });
+}

@@ -1,0 +1,323 @@
+//! Golden parity: native ops vs the L1/L2 reference numerics.
+//!
+//! Fixtures under `tests/fixtures/` are generated once by
+//! `python -m compile.fixtures` from the same code the artifacts are
+//! lowered from (`kernels/ref.py`, `prune.py`, `model.py`, with
+//! `jax.grad` providing the gradient ground truth) and checked in, so
+//! this suite runs with no Python anywhere. Kernel-level ops must match
+//! to 1e-5; whole-model forwards/backwards to f32 round-off over deeper
+//! accumulation chains (different summation order than XLA).
+
+use shears::model::{make_config, ConfigSpec};
+use shears::ops::model::{lora_linear, lora_linear_bwd};
+use shears::ops::{nn, prune, Dims, Extra, GradMode, Model, NamedTensors};
+use shears::tensor::HostTensor;
+use shears::util::json::Json;
+
+fn load_fixture(name: &str) -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} missing ({e}); regenerate with `python -m compile.fixtures`", path.display()));
+    Json::parse(&text).expect("fixture json")
+}
+
+fn tensor(j: &Json) -> HostTensor {
+    let shape = j.at("shape").as_shape().expect("tensor shape");
+    let data = j.at("data").as_arr().expect("tensor data");
+    if j.at("dtype").as_str() == Some("i32") {
+        HostTensor::from_i32(&shape, data.iter().map(|v| v.as_f64().unwrap() as i32).collect())
+    } else {
+        HostTensor::from_f32(&shape, data.iter().map(|v| v.as_f64().unwrap() as f32).collect())
+    }
+}
+
+fn f32v(j: &Json) -> Vec<f32> {
+    tensor(j).f32s().to_vec()
+}
+
+fn assert_close(name: &str, ours: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(ours.len(), want.len(), "{name}: length mismatch");
+    for (i, (a, b)) in ours.iter().zip(want).enumerate() {
+        let tol = atol + rtol * b.abs();
+        assert!(
+            (a - b).abs() <= tol,
+            "{name}[{i}]: ours {a} vs reference {b} (tol {tol})"
+        );
+    }
+}
+
+// ------------------------------------------------------------ kernels
+
+#[test]
+fn lora_linear_matches_l1_reference() {
+    let fx = load_fixture("kernels.json");
+    let c = fx.at("lora_linear");
+    let (x, w) = (f32v(c.at("inputs").at("x")), f32v(c.at("inputs").at("w")));
+    let (a, b) = (f32v(c.at("inputs").at("a")), f32v(c.at("inputs").at("b")));
+    let mask = f32v(c.at("inputs").at("mask"));
+    let dy = f32v(c.at("inputs").at("dy"));
+    let scale = c.at("scalars").at("scale").as_f64().unwrap() as f32;
+    let (m, k, r, n) = (5, 7, 3, 6);
+    let (y, proj) = lora_linear(&x, &w, &a, &b, &mask, scale, m, k, r, n);
+    assert_close("y", &y, &f32v(c.at("outputs").at("y")), 1e-5, 1e-5);
+    let (dx, da, db) = lora_linear_bwd(&dy, &x, &w, &a, &b, &mask, scale, &proj, m, k, r, n);
+    assert_close("dx", &dx, &f32v(c.at("outputs").at("dx")), 1e-5, 1e-5);
+    assert_close("da", &da, &f32v(c.at("outputs").at("da")), 1e-5, 1e-5);
+    assert_close("db", &db, &f32v(c.at("outputs").at("db")), 1e-5, 1e-5);
+}
+
+#[test]
+fn rmsnorm_and_vjp_match_l1_reference() {
+    let fx = load_fixture("kernels.json");
+    let c = fx.at("rmsnorm");
+    let x = f32v(c.at("inputs").at("x"));
+    let g = f32v(c.at("inputs").at("g"));
+    let dy = f32v(c.at("inputs").at("dy"));
+    let (m, d) = (4, 9);
+    let (y, inv) = nn::rmsnorm(&x, &g, m, d);
+    assert_close("y", &y, &f32v(c.at("outputs").at("y")), 1e-5, 1e-5);
+    let (dx, dg) = nn::rmsnorm_bwd(&dy, &x, &g, &inv, m, d);
+    assert_close("dx", &dx, &f32v(c.at("outputs").at("dx")), 1e-5, 1e-5);
+    assert_close("dg", &dg, &f32v(c.at("outputs").at("dg")), 1e-5, 1e-5);
+}
+
+#[test]
+fn softmax_xent_matches_lm_loss() {
+    let fx = load_fixture("kernels.json");
+    let c = fx.at("softmax_xent");
+    let logits = f32v(c.at("inputs").at("logits"));
+    let y = tensor(c.at("inputs").at("y"));
+    let mask = f32v(c.at("inputs").at("loss_mask"));
+    let (loss, dlogits) = nn::softmax_xent(&logits, y.i32s(), &mask, 8, 11);
+    let want_loss = f32v(c.at("outputs").at("loss"))[0];
+    assert!((loss - want_loss).abs() < 1e-5, "loss {loss} vs {want_loss}");
+    assert_close("dlogits", &dlogits, &f32v(c.at("outputs").at("dlogits")), 1e-6, 1e-5);
+}
+
+#[test]
+fn adamw_matches_l2_update() {
+    let fx = load_fixture("kernels.json");
+    for case in ["adamw", "adamw_nodecay"] {
+        let c = fx.at(case);
+        let mut p = f32v(c.at("inputs").at("p"));
+        let g = f32v(c.at("inputs").at("g"));
+        let mut m = f32v(c.at("inputs").at("m"));
+        let mut v = f32v(c.at("inputs").at("v"));
+        let step = c.at("scalars").at("step").as_f64().unwrap() as f32;
+        let lr = c.at("scalars").at("lr").as_f64().unwrap() as f32;
+        let wd = c.at("scalars").at("weight_decay").as_f64().unwrap() as f32;
+        nn::adamw(&mut p, &g, &mut m, &mut v, step, lr, wd);
+        assert_close(&format!("{case}.p"), &p, &f32v(c.at("outputs").at("p")), 1e-6, 1e-5);
+        assert_close(&format!("{case}.m"), &m, &f32v(c.at("outputs").at("m")), 1e-6, 1e-5);
+        assert_close(&format!("{case}.v"), &v, &f32v(c.at("outputs").at("v")), 1e-6, 1e-5);
+    }
+}
+
+#[test]
+fn prune_ops_match_reference() {
+    let fx = load_fixture("kernels.json");
+
+    let c = fx.at("wanda");
+    let w = f32v(c.at("inputs").at("w"));
+    let xsq = f32v(c.at("inputs").at("xnorm_sq"));
+    let keep = c.at("scalars").at("keep_frac").as_f64().unwrap() as f32;
+    let (wp, mask) = prune::wanda(&w, &xsq, keep, 6, 10);
+    assert_close("wanda.w", &wp, &f32v(c.at("outputs").at("w_pruned")), 1e-6, 1e-6);
+    assert_eq!(mask, f32v(c.at("outputs").at("mask")), "wanda mask");
+
+    let c = fx.at("magnitude");
+    let w = f32v(c.at("inputs").at("w"));
+    let keep = c.at("scalars").at("keep_frac").as_f64().unwrap() as f32;
+    let (wp, mask) = prune::magnitude(&w, keep, 5, 8);
+    assert_close("magnitude.w", &wp, &f32v(c.at("outputs").at("w_pruned")), 1e-6, 1e-6);
+    assert_eq!(mask, f32v(c.at("outputs").at("mask")), "magnitude mask");
+
+    let c = fx.at("sparsegpt");
+    let w = f32v(c.at("inputs").at("w"));
+    let gram = f32v(c.at("inputs").at("gram"));
+    let keep = c.at("scalars").at("keep_frac").as_f64().unwrap() as f32;
+    let (wp, mask) = prune::sparsegpt(&w, &gram, keep, 6, 8);
+    assert_eq!(mask, f32v(c.at("outputs").at("mask")), "sparsegpt mask");
+    // error-compensated survivors go through a Cholesky chain: f32
+    // round-off accumulates, so slightly looser than the direct ops
+    assert_close("sparsegpt.w", &wp, &f32v(c.at("outputs").at("w_pruned")), 1e-4, 1e-4);
+}
+
+// ------------------------------------------------------- whole model
+
+fn fixture_config(j: &Json) -> shears::model::ModelConfig {
+    let c = j.at("config");
+    let us = |k: &str| c.at(k).as_usize().unwrap();
+    make_config(&ConfigSpec {
+        name: "fixture".into(),
+        arch: c.at("arch").as_str().unwrap().into(),
+        d_model: us("d_model"),
+        n_layers: us("n_layers"),
+        n_heads: us("n_heads"),
+        d_ff: us("d_ff"),
+        vocab: us("vocab"),
+        seq_len: us("seq_len"),
+        max_rank: us("max_rank"),
+        rank_choices: c.at("rank_choices").as_shape().unwrap(),
+        lora_alpha: c.at("lora_alpha").as_f64().unwrap(),
+        targets: c
+            .at("targets")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_str().unwrap().to_string())
+            .collect(),
+        batch_train: us("batch_train"),
+        batch_eval: us("batch_eval"),
+        prefix_len: us("prefix_len"),
+        bottleneck: us("bottleneck"),
+    })
+}
+
+struct Fixture {
+    cfg: shears::model::ModelConfig,
+    inputs: Vec<(String, HostTensor)>,
+    json: Json,
+}
+
+impl Fixture {
+    fn load(name: &str) -> Fixture {
+        let json = load_fixture(name);
+        let cfg = fixture_config(&json);
+        let inputs = json
+            .at("inputs")
+            .as_obj()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), tensor(v)))
+            .collect();
+        Fixture { cfg, inputs, json }
+    }
+
+    fn named(&self) -> NamedTensors<'_> {
+        let mut named = NamedTensors::new();
+        for (k, t) in &self.inputs {
+            named.insert(k, t);
+        }
+        named
+    }
+
+    fn out(&self, name: &str) -> Vec<f32> {
+        f32v(self.json.at("outputs").at(name))
+    }
+
+    fn x(&self) -> &HostTensor {
+        &self.inputs.iter().find(|(k, _)| k == "x").unwrap().1
+    }
+}
+
+fn model_parity(file: &str) {
+    let fx = Fixture::load(file);
+    let named = fx.named();
+    let x = fx.x().i32s();
+    let dims = Dims::from_config(&fx.cfg, 2);
+    let rank_mask = named.f("rank_mask").unwrap();
+
+    // base forward
+    let base = Model { dims: dims.clone(), p: &named, use_adapters: false, rank_mask: None, extra: Extra::None };
+    let fwd = base.forward(x, false, false).unwrap();
+    assert_close("logits_base", &fwd.logits, &fx.out("logits_base"), 5e-4, 1e-4);
+
+    // adapter forward under a mixed rank mask
+    let adapted = Model {
+        dims: dims.clone(),
+        p: &named,
+        use_adapters: true,
+        rank_mask: Some(rank_mask),
+        extra: Extra::None,
+    };
+    let fwd = adapted.forward(x, false, false).unwrap();
+    assert_close("logits_adapters", &fwd.logits, &fx.out("logits_adapters"), 5e-4, 1e-4);
+
+    // calibration statistics (base forward, collect)
+    let fwd = base.forward(x, false, true).unwrap();
+    for (site, sumsq, gram) in &fwd.stats {
+        assert_close(&format!("sumsq.{site}"), sumsq, &fx.out(&format!("sumsq.{site}")), 1e-3, 1e-3);
+        assert_close(&format!("gram.{site}"), gram, &fx.out(&format!("gram.{site}")), 1e-3, 1e-3);
+    }
+
+    // NLS loss + adapter gradients vs jax.grad
+    let y = &fx.inputs.iter().find(|(k, _)| k == "y").unwrap().1;
+    let lm = named.f("loss_mask").unwrap();
+    let (loss, grads) = adapted.loss_and_grads(x, y.i32s(), lm, GradMode::Adapters).unwrap();
+    let want_loss = fx.out("loss_nls")[0];
+    assert!((loss - want_loss).abs() < 1e-4, "nls loss {loss} vs {want_loss}");
+    for p in &fx.cfg.adapter_params {
+        let ours = grads.map.get(&p.name).unwrap_or_else(|| panic!("no grad for {}", p.name));
+        assert_close(&format!("grad.{}", p.name), ours, &fx.out(&format!("grad.{}", p.name)), 5e-4, 1e-3);
+    }
+
+    // full-FT loss + base gradients vs jax.grad (embed scatter, norm
+    // gains/biases, lm_head, every matmul backward)
+    let (loss_b, grads_b) = base.loss_and_grads(x, y.i32s(), lm, GradMode::Base).unwrap();
+    let want_loss = fx.out("loss_full")[0];
+    assert!((loss_b - want_loss).abs() < 1e-4, "full loss {loss_b} vs {want_loss}");
+    for p in &fx.cfg.base_params {
+        let ours = grads_b.map.get(&p.name).unwrap_or_else(|| panic!("no grad for {}", p.name));
+        assert_close(
+            &format!("grad_base.{}", p.name),
+            ours,
+            &fx.out(&format!("grad_base.{}", p.name)),
+            5e-4,
+            2e-3,
+        );
+    }
+}
+
+#[test]
+fn llama_model_matches_jax_reference() {
+    model_parity("model_llama.json");
+}
+
+#[test]
+fn mpt_model_matches_jax_reference() {
+    model_parity("model_mpt.json");
+}
+
+#[test]
+fn peft_baselines_match_jax_reference() {
+    let fx = Fixture::load("model_llama.json");
+    let named = fx.named();
+    let x = fx.x().i32s();
+    let y = &fx.inputs.iter().find(|(k, _)| k == "y").unwrap().1;
+    let lm = named.f("loss_mask").unwrap();
+    let dims = Dims::from_config(&fx.cfg, 2);
+    for (extra, mode, kind, specs) in [
+        (Extra::Prefix, GradMode::Prefix, "prefix", &fx.cfg.prefix_params),
+        (Extra::Series, GradMode::Series, "series", &fx.cfg.series_params),
+        (Extra::Parallel, GradMode::Parallel, "parallel", &fx.cfg.parallel_params),
+    ] {
+        let model = Model { dims: dims.clone(), p: &named, use_adapters: false, rank_mask: None, extra };
+        // forward parity
+        let fwd = model.forward(x, false, false).unwrap();
+        assert_close(
+            &format!("logits_{kind}"),
+            &fwd.logits,
+            &fx.out(&format!("logits_{kind}")),
+            5e-4,
+            1e-4,
+        );
+        // gradient parity vs jax.grad over the baseline's own params
+        let (loss, grads) = model.loss_and_grads(x, y.i32s(), lm, mode).unwrap();
+        let want = fx.out(&format!("loss_{kind}"))[0];
+        assert!((loss - want).abs() < 1e-4, "{kind} loss {loss} vs {want}");
+        for p in specs {
+            let ours =
+                grads.map.get(&p.name).unwrap_or_else(|| panic!("no grad for {}", p.name));
+            assert_close(
+                &format!("grad_{kind}.{}", p.name),
+                ours,
+                &fx.out(&format!("grad_{kind}.{}", p.name)),
+                5e-4,
+                2e-3,
+            );
+        }
+    }
+}
