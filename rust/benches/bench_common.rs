@@ -46,6 +46,7 @@ pub struct Bench {
 impl Bench {
     /// Backend comes from `SHEARS_BACKEND` (native|pjrt|auto, default
     /// auto) so the same bench binary compares backends apples-to-apples.
+    #[allow(clippy::new_without_default)]
     pub fn new() -> Bench {
         let rt = Runtime::from_env("artifacts").expect("backend init");
         let manifest = rt.manifest().expect("manifest");

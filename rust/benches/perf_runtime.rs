@@ -1,48 +1,86 @@
 //! Runtime micro-benchmarks (EXPERIMENTS.md §Perf source data):
-//! executable compile time, forward/train-step latency on both execution
-//! paths (literal vs device-buffer-resident base), prune-op latency, and
-//! router/serving throughput — the numbers behind the paper's cost claims
-//! ("pruning < 5 minutes", "a pair of GPU hours" → seconds/minutes here).
+//! executable resolution time, forward latency on both execution paths
+//! (per-call literal vs buffer-resident prepared weights, single- vs
+//! multi-threaded), train-step latency, prune-op latency, and the
+//! whole-model prune wall — the numbers behind the paper's cost claims
+//! ("pruning < 5 minutes", "a pair of GPU hours" → seconds/minutes
+//! here) and this repo's prepared-weight engine speedups.
+//!
+//! The backend comes from `SHEARS_BACKEND` (section labels report it),
+//! worker count from `SHEARS_NUM_THREADS`, and `SHEARS_BENCH_FAST=1`
+//! runs a smoke pass with tiny iteration counts (CI). Besides stdout
+//! tables, a machine-readable summary lands in `BENCH_perf.json`
+//! (override with `SHEARS_BENCH_JSON`) so the perf trajectory is
+//! tracked across PRs instead of scraped from logs.
 
 #[path = "bench_common.rs"]
 mod bench_common;
 
 use bench_common::Bench;
-use shears::bench_util::{time, Table};
+use shears::bench_util::{time, Stats, Table};
 use shears::data::batch::{Batcher, MaskMode};
 use shears::data::{dataset, Task, Vocab};
 use shears::model::ParamStore;
 use shears::nls::SearchSpace;
+use shears::ops::linalg;
 use shears::pruning::{self, Method};
 use shears::runtime::Arg;
 use shears::train::TrainSession;
+use shears::util::json::{arr, num, obj, s, Json};
 use shears::util::rng::Rng;
 
 fn main() {
+    let fast = bench_common::fast();
+    let (warmup, iters) = if fast { (1, 3) } else { (3, 20) };
     let b = Bench::new();
+    let backend = b.rt.backend_name();
     let cfg = b.manifest.config("llama-sim-s").unwrap();
     let vocab = Vocab::new(cfg.vocab);
     let mut rng = Rng::new(0);
-    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut base = ParamStore::init_base(cfg, &mut rng, 0.05);
     let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
     let space = SearchSpace::from_config(cfg);
+    let max_threads = linalg::num_threads();
 
-    println!("\n== compile (XLA CPU, per artifact) ==");
+    let mut json: Vec<(&str, Json)> = vec![
+        ("bench", s("perf_runtime")),
+        ("backend", s(backend)),
+        ("config", s("llama-sim-s")),
+        ("threads", num(max_threads as f64)),
+        ("fast", Json::Bool(fast)),
+    ];
+
+    // ---- entry-point resolution ("compile") ----
+    println!("\n== compile ({backend}, per artifact) ==");
+    let mut compile = Vec::new();
     for entry in ["forward_eval", "train_step_nls", "train_step_full"] {
         let file = &cfg.entry(entry).unwrap().file;
         let t = std::time::Instant::now();
         let _ = b.rt.load(file).unwrap();
-        println!("  {entry:<18} {:>8.1} ms (cold)", t.elapsed().as_secs_f64() * 1e3);
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        println!("  {entry:<18} {ms:>8.1} ms (cold)");
+        compile.push(obj(vec![("entry", s(entry)), ("ms", num(ms))]));
     }
+    json.push(("compile", arr(compile)));
 
-    // ---- forward latency: literal vs buffer-resident params ----
+    // ---- prune the base to the paper's 50% so the sparse path engages ----
+    let prune_t = std::time::Instant::now();
+    pruning::prune(&b.rt, &b.manifest, cfg, &mut base, Method::Magnitude, 0.5, None).unwrap();
+    let prune_wall = prune_t.elapsed().as_secs_f64();
+    let names: Vec<String> = cfg.prunable.iter().map(|p| p.name.clone()).collect();
+    let sparsity = base.sparsity_of(&names);
+    println!("\n== forward_eval ({backend}, base pruned to {sparsity:.2}) ==");
+
     let entry = cfg.entry("forward_eval").unwrap().clone();
     let exe = b.rt.load(&entry.file).unwrap();
     let ds = dataset(Task::Gsm8kSim, &vocab, 1, cfg.batch_eval, cfg.seq_len);
     let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
     let batch = batcher.epoch().into_iter().next().unwrap();
     let mask = space.full_mask();
+    let tokens = (cfg.batch_eval * cfg.seq_len) as f64;
 
+    // literal path: every input a per-call host tensor → the backend
+    // re-derives the sparse gather per matmul (the pre-engine behavior)
     let mut lit_inputs: Vec<&shears::tensor::HostTensor> = Vec::new();
     for i in &entry.inputs {
         lit_inputs.push(match i.name.as_str() {
@@ -51,11 +89,7 @@ fn main() {
             n => base.get(n).or_else(|_| adapters.get(n)).unwrap(),
         });
     }
-    let s1 = time("forward_eval: all-literal path", 3, 20, || {
-        b.rt.run(&exe, &lit_inputs).unwrap();
-    });
-
-    // buffer path: base + adapters resident, batch per-call
+    // resident path: base + adapters uploaded once, prepared weights cached
     let mut resident: Vec<Option<shears::runtime::DeviceBuffer>> = Vec::new();
     for i in &entry.inputs {
         resident.push(match i.name.as_str() {
@@ -63,7 +97,7 @@ fn main() {
             n => Some(b.rt.upload(base.get(n).or_else(|_| adapters.get(n)).unwrap()).unwrap()),
         });
     }
-    let s2 = time("forward_eval: buffer-resident params", 3, 20, || {
+    let run_resident = || {
         let args: Vec<Arg> = entry
             .inputs
             .iter()
@@ -74,9 +108,41 @@ fn main() {
             })
             .collect();
         b.rt.run_args(&exe, &args).unwrap();
+    };
+
+    let measure = |label: &str, threads: usize, f: &dyn Fn()| -> Stats {
+        linalg::set_num_threads(threads);
+        let st = time(&format!("{label} [{threads}t]"), warmup, iters, || f());
+        st.print();
+        st
+    };
+    let lit_1 = measure("forward: literal (per-call prepare)", 1, &|| {
+        b.rt.run(&exe, &lit_inputs).unwrap();
+    });
+    let res_1 = measure("forward: resident (prepared cached)", 1, &run_resident);
+    let lit_n = measure("forward: literal (per-call prepare)", max_threads, &|| {
+        b.rt.run(&exe, &lit_inputs).unwrap();
+    });
+    let res_n = measure("forward: resident (prepared cached)", max_threads, &run_resident);
+
+    // steady-state allocation check: the resident eval loop may miss the
+    // arena at most once per forward (the escaping logits tensor)
+    let miss_per_eval = b.rt.scratch_stats().map(|before| {
+        let probes = 5u64;
+        for _ in 0..probes {
+            run_resident();
+        }
+        let after = b.rt.scratch_stats().unwrap();
+        let delta = after.0 - before.0;
+        assert!(
+            delta <= probes,
+            "eval forward allocates beyond the escaping logits: {delta} misses / {probes} runs"
+        );
+        delta as f64 / probes as f64
     });
 
     // ---- train-step latency (the super-adapter hot loop) ----
+    println!("\n== train_step_nls ({backend}, frozen pruned base resident) ==");
     let session = TrainSession::new(&b.rt, cfg, "train_step_nls", &base).unwrap();
     let specs: Vec<shears::model::ParamSpec> = cfg.adapter_params.clone();
     let mut m = ParamStore::zeros_like(&specs);
@@ -88,11 +154,31 @@ fn main() {
         .next()
         .unwrap();
     let mut step_no = 0usize;
-    let s3 = time("train_step_nls: fused step (frozen base resident)", 3, 20, || {
+    linalg::set_num_threads(max_threads);
+    let s3 = time("train_step_nls: fused step", warmup, iters, || {
         step_no += 1;
         session
             .step(&mut adapters, &mut m, &mut v, None, &tb, step_no, 1e-3, Some(&mask))
             .unwrap();
+    });
+    s3.print();
+    // zero-alloc assertion: a warmed train step reuses every matmul /
+    // tape buffer (only boundary tensors — updated params — allocate,
+    // and those never route through the arena)
+    let train_miss = b.rt.scratch_stats().map(|before| {
+        for _ in 0..3 {
+            step_no += 1;
+            session
+                .step(&mut adapters, &mut m, &mut v, None, &tb, step_no, 1e-3, Some(&mask))
+                .unwrap();
+        }
+        let after = b.rt.scratch_stats().unwrap();
+        let delta = after.0 - before.0;
+        assert_eq!(
+            delta, 0,
+            "steady-state train step hit the allocator {delta} times (expected 0)"
+        );
+        delta as f64
     });
 
     // ---- prune op latency ----
@@ -102,25 +188,45 @@ fn main() {
     let w = base.get(&cfg.prunable[0].name).unwrap();
     let xn = shears::tensor::HostTensor::ones(&[k]);
     let keep = shears::tensor::HostTensor::scalar_f32(0.5);
-    let s4 = time(&format!("prune op wanda {n}x{k} (pallas kernel)"), 2, 20, || {
+    let s4 = time(&format!("prune op wanda {n}x{k}"), if fast { 1 } else { 2 }, iters, || {
         b.rt.run(&pexe, &[w, &xn, &keep]).unwrap();
     });
+    s4.print();
 
-    // ---- whole-model prune wall (the "<5 minutes" claim) ----
-    let mut base2 = base.clone();
-    let t = std::time::Instant::now();
-    pruning::prune(&b.rt, &b.manifest, cfg, &mut base2, Method::Magnitude, 0.5, None).unwrap();
-    let prune_wall = t.elapsed().as_secs_f64();
-
+    // ---- summary table + JSON ----
+    let speedup_resident = lit_n.mean_ms / res_n.mean_ms;
+    let speedup_resident_1t = lit_1.mean_ms / res_1.mean_ms;
+    let speedup_threads = res_1.mean_ms / res_n.mean_ms;
     let mut table = Table::new(
-        "Perf summary (llama-sim-s)",
+        &format!("Perf summary (llama-sim-s, backend={backend}, {max_threads} threads)"),
         &["metric", "value"],
     );
-    table.row(vec!["forward (literal path)".into(), format!("{:.2} ms", s1.mean_ms)]);
-    table.row(vec!["forward (buffer-resident)".into(), format!("{:.2} ms", s2.mean_ms)]);
+    table.row(vec!["base sparsity".into(), format!("{sparsity:.2}")]);
+    table.row(vec!["forward literal, 1 thread".into(), format!("{:.2} ms", lit_1.mean_ms)]);
+    table.row(vec!["forward resident, 1 thread".into(), format!("{:.2} ms", res_1.mean_ms)]);
     table.row(vec![
-        "buffer-residency speedup".into(),
-        format!("{:.2}x", s1.mean_ms / s2.mean_ms),
+        "prepared-cache speedup (1t)".into(),
+        format!("{speedup_resident_1t:.2}x"),
+    ]);
+    table.row(vec![
+        format!("forward literal, {max_threads} threads"),
+        format!("{:.2} ms", lit_n.mean_ms),
+    ]);
+    table.row(vec![
+        format!("forward resident, {max_threads} threads"),
+        format!("{:.2} ms", res_n.mean_ms),
+    ]);
+    table.row(vec![
+        format!("prepared-cache speedup ({max_threads}t)"),
+        format!("{speedup_resident:.2}x"),
+    ]);
+    table.row(vec![
+        format!("thread scaling (resident, 1t -> {max_threads}t)"),
+        format!("{speedup_threads:.2}x"),
+    ]);
+    table.row(vec![
+        "forward throughput (resident)".into(),
+        format!("{:.0} tokens/s", tokens / (res_n.mean_ms / 1e3)),
     ]);
     table.row(vec!["train step (fused)".into(), format!("{:.2} ms", s3.mean_ms)]);
     table.row(vec![
@@ -132,5 +238,48 @@ fn main() {
     ]);
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
+    if let Some(mp) = miss_per_eval {
+        table.row(vec!["arena misses / eval forward".into(), format!("{mp:.1}")]);
+    }
+    if train_miss.is_some() {
+        table.row(vec!["arena misses / warm train step".into(), "0".into()]);
+    }
     table.print();
+
+    json.push((
+        "forward",
+        obj(vec![
+            ("sparsity", num(sparsity)),
+            ("literal_1t_ms", num(lit_1.mean_ms)),
+            ("resident_1t_ms", num(res_1.mean_ms)),
+            ("literal_ms", num(lit_n.mean_ms)),
+            ("resident_ms", num(res_n.mean_ms)),
+            ("speedup_resident_1t", num(speedup_resident_1t)),
+            ("speedup_resident", num(speedup_resident)),
+            ("speedup_threads", num(speedup_threads)),
+            ("tokens_per_s", num(tokens / (res_n.mean_ms / 1e3))),
+        ]),
+    ));
+    json.push((
+        "train_step",
+        obj(vec![
+            ("ms", num(s3.mean_ms)),
+            (
+                "tokens_per_s",
+                num((cfg.batch_train * cfg.seq_len) as f64 / (s3.mean_ms / 1e3)),
+            ),
+            ("arena_misses_steady", num(train_miss.unwrap_or(-1.0))),
+        ]),
+    ));
+    json.push((
+        "prune",
+        obj(vec![
+            ("wanda_op_ms", num(s4.mean_ms)),
+            ("whole_model_s", num(prune_wall)),
+        ]),
+    ));
+
+    let path = std::env::var("SHEARS_BENCH_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
+    std::fs::write(&path, obj(json).to_string_pretty()).expect("write bench json");
+    println!("wrote {path}");
 }

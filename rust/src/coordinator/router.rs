@@ -14,7 +14,7 @@ use crate::data::{Example, Vocab};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
-use crate::train::{exact_match, forward_logits};
+use crate::train::{exact_match, ForwardSession};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -142,10 +142,11 @@ fn router_main(
     let rt = Runtime::from_flag(backend, artifacts_dir)?;
     let manifest = rt.manifest()?;
     let cfg = manifest.config(config_name)?;
-    let entry = cfg.entry(entry_name)?;
-    let exe = rt.load(&entry.file)?;
     let vocab = Vocab::new(cfg.vocab);
+    // stores are frozen for the router's lifetime: upload once, serve
+    // every coalesced batch from resident (prepared-weight) buffers
     let store_refs: Vec<&ParamStore> = stores.iter().collect();
+    let session = ForwardSession::new(&rt, cfg, entry_name, &store_refs)?;
     let mut masks_by_key: std::collections::HashMap<Vec<u8>, HostTensor> = Default::default();
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
@@ -253,7 +254,7 @@ fn router_main(
             let batch = build_batch(&exs, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
             let mask_ref = if head_key.is_empty() { None } else { masks_by_key.get(&head_key) };
             metrics.forwards += 1;
-            match forward_logits(&rt, &exe, entry, &store_refs, mask_ref, &batch) {
+            match session.logits(&batch.x, mask_ref) {
                 Ok(logits) => {
                     for (row, p) in group.iter().enumerate() {
                         let ok = exact_match(&p.example, &logits, row, cfg.seq_len, cfg.vocab);

@@ -45,6 +45,11 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "workdir", default: Some("runs"), help: "checkpoint cache directory" },
         FlagSpec { name: "requests", default: Some("32"), help: "serve: request count" },
         FlagSpec { name: "max-new", default: Some("8"), help: "serve: max new tokens" },
+        FlagSpec {
+            name: "threads",
+            default: Some("0"),
+            help: "native kernel worker threads (0 = SHEARS_NUM_THREADS or all cores)",
+        },
     ]
 }
 
@@ -78,6 +83,12 @@ fn main() -> Result<()> {
         return Ok(());
     }
     let args = Args::parse(&argv, &flags(), &[])?;
+    // thread-count override for the native kernel engine; never changes
+    // results (deterministic row partitioning), only wall time
+    let threads = args.get_usize("threads")?;
+    if threads > 0 {
+        shears::ops::linalg::set_num_threads(threads);
+    }
     match args.subcommand.as_str() {
         "info" => cmd_info(&args),
         "pipeline" => cmd_pipeline(&args),

@@ -4,6 +4,11 @@
 //! runtime. Initialization mirrors the L2 conventions: norm gains 1,
 //! biases 0, weights N(0, 0.05); LoRA A N(0, 0.02), LoRA B zeros (the
 //! paper's §2.2 init — adapters start transparent).
+//!
+//! Every entry carries a **generation** counter, bumped on `insert` and
+//! `get_mut`: `runtime::ResidentParams` keys its uploaded buffers (and
+//! their cached prepared sparse structure) on it, so a prune step or
+//! optimizer update invalidates exactly the weights it touched.
 
 use crate::model::manifest::{ModelConfig, ParamSpec};
 use crate::tensor::HostTensor;
@@ -13,9 +18,16 @@ use std::collections::BTreeMap;
 use std::io::{BufReader, BufWriter, Write};
 use std::path::Path;
 
+#[derive(Clone, Debug)]
+struct Entry {
+    t: HostTensor,
+    generation: u64,
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct ParamStore {
-    map: BTreeMap<String, HostTensor>,
+    map: BTreeMap<String, Entry>,
+    next_gen: u64,
 }
 
 impl ParamStore {
@@ -24,16 +36,28 @@ impl ParamStore {
     }
 
     pub fn insert(&mut self, name: &str, t: HostTensor) {
-        self.map.insert(name.to_string(), t);
+        self.next_gen += 1;
+        self.map.insert(name.to_string(), Entry { t, generation: self.next_gen });
     }
 
     pub fn get(&self, name: &str) -> Result<&HostTensor> {
-        self.map.get(name).with_context(|| format!("param '{name}' missing"))
+        self.map
+            .get(name)
+            .map(|e| &e.t)
+            .with_context(|| format!("param '{name}' missing"))
     }
 
+    /// Mutable access bumps the generation: any resident copy of this
+    /// tensor (and its cached prepared structure) becomes stale.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut HostTensor> {
+        self.next_gen += 1;
+        let gen = self.next_gen;
         self.map
             .get_mut(name)
+            .map(|e| {
+                e.generation = gen;
+                &mut e.t
+            })
             .with_context(|| format!("param '{name}' missing"))
     }
 
@@ -53,6 +77,17 @@ impl ParamStore {
         self.map.keys()
     }
 
+    /// `(name, tensor, generation)` over every entry.
+    pub fn entries(&self) -> impl Iterator<Item = (&String, &HostTensor, u64)> {
+        self.map.iter().map(|(n, e)| (n, &e.t, e.generation))
+    }
+
+    /// Current generation of `name` (changes whenever the tensor may
+    /// have changed).
+    pub fn generation(&self, name: &str) -> Option<u64> {
+        self.map.get(name).map(|e| e.generation)
+    }
+
     /// Tensors in the order of `specs` (the manifest ABI order).
     pub fn ordered<'a>(&'a self, specs: &[ParamSpec]) -> Result<Vec<&'a HostTensor>> {
         specs.iter().map(|s| self.get(&s.name)).collect()
@@ -67,7 +102,7 @@ impl ParamStore {
             if t.shape != s.shape {
                 bail!("shape mismatch for {}: {:?} vs {:?}", s.name, t.shape, s.shape);
             }
-            self.map.insert(s.name.clone(), t.clone());
+            self.insert(&s.name, t.clone());
         }
         Ok(())
     }
@@ -140,21 +175,21 @@ impl ParamStore {
 
     /// Total parameters in the store.
     pub fn numel(&self) -> usize {
-        self.map.values().map(|t| t.numel()).sum()
+        self.map.values().map(|e| e.t.numel()).sum()
     }
 
     /// Non-zero parameters (paper Table 3's headline metric).
     pub fn nonzero(&self) -> usize {
-        self.map.values().map(|t| t.numel() - t.zeros_count()).sum()
+        self.map.values().map(|e| e.t.numel() - e.t.zeros_count()).sum()
     }
 
     /// Overall sparsity across a named subset (e.g. the prunable weights).
     pub fn sparsity_of(&self, names: &[String]) -> f64 {
         let (mut zeros, mut total) = (0usize, 0usize);
         for n in names {
-            if let Some(t) = self.map.get(n) {
-                zeros += t.zeros_count();
-                total += t.numel();
+            if let Some(e) = self.map.get(n) {
+                zeros += e.t.zeros_count();
+                total += e.t.numel();
             }
         }
         zeros as f64 / total.max(1) as f64
@@ -169,11 +204,11 @@ impl ParamStore {
         let mut w = BufWriter::new(f);
         w.write_all(b"SHRS")?;
         w.write_all(&(self.map.len() as u64).to_le_bytes())?;
-        for (name, t) in &self.map {
+        for (name, e) in &self.map {
             let nb = name.as_bytes();
             w.write_all(&(nb.len() as u32).to_le_bytes())?;
             w.write_all(nb)?;
-            t.write_to(&mut w)?;
+            e.t.write_to(&mut w)?;
         }
         Ok(())
     }
@@ -201,7 +236,8 @@ impl ParamStore {
             let mut nb = vec![0u8; nlen];
             std::io::Read::read_exact(&mut r, &mut nb)?;
             let name = String::from_utf8(nb).context("param name utf8")?;
-            s.map.insert(name, HostTensor::read_from(&mut r)?);
+            let t = HostTensor::read_from(&mut r)?;
+            s.insert(&name, t);
         }
         Ok(s)
     }
@@ -299,6 +335,24 @@ mod tests {
         assert_eq!(re.len(), base.len());
         assert_eq!(re.get("embed").unwrap(), base.get("embed").unwrap());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn generations_bump_on_insert_and_get_mut() {
+        let mut s = ParamStore::new();
+        s.insert("w", HostTensor::zeros(&[2]));
+        let g0 = s.generation("w").unwrap();
+        // read access leaves the generation alone
+        let _ = s.get("w").unwrap();
+        assert_eq!(s.generation("w"), Some(g0));
+        // mutable access marks the tensor changed
+        let _ = s.get_mut("w").unwrap();
+        let g1 = s.generation("w").unwrap();
+        assert!(g1 > g0);
+        // replacing bumps again
+        s.insert("w", HostTensor::ones(&[2]));
+        assert!(s.generation("w").unwrap() > g1);
+        assert_eq!(s.entries().count(), 1);
     }
 
     #[test]

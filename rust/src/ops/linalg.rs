@@ -3,18 +3,87 @@
 //! Weight convention matches the whole stack (`kernels/ref.py`): weights
 //! are `[out, in]` row-major, activations `[M, K]` row-major, so the hot
 //! product `Y = X @ Wᵀ` is a grid of contiguous-row dot products — the
-//! cache-friendly layout that needs no transposition. The dot kernel is
-//! 4-way blocked (independent partial sums) so LLVM can vectorize the
-//! f32 reduction.
+//! cache-friendly layout that needs no transposition.
 //!
-//! [`matmul_nt_auto`] is the §3.1 sparsity lever: for a pruned weight it
-//! gathers each row's nonzero (index, value) pairs and skips the zeros —
-//! ~2× fewer multiplies at the paper's 50% sparsity for an O(N·K) scan
-//! per call (amortized against the O(M·N·K) product; caching the gather
-//! per frozen weight is a planned follow-up, see ROADMAP).
+//! Three levers make this the prepared-weight kernel engine (ISSUE 2):
+//!
+//! * **[`PreparedWeight`]** — the §3.1 sparsity lever. A frozen weight is
+//!   scanned **once** into either a dense marker or a CSR gather
+//!   (`row_start`/`idx`/`val`) when it is past [`SPARSE_THRESHOLD`]
+//!   zeros; every subsequent matmul skips the zeros without re-deriving
+//!   the structure. The per-call gather of the original implementation
+//!   survives only as the fallback for unprepared host tensors
+//!   ([`matmul_nt_auto`]).
+//! * **Register-blocked tiles** — [`matmul_nt_into`] processes x-rows in
+//!   blocks of [`MR`], streaming each weight row once per block instead
+//!   of once per row (a 4× cut in weight traffic). Per output element
+//!   the accumulation order is *identical* to the scalar [`dot`] (4-way
+//!   partial sums + tail), so blocked and unblocked paths agree bitwise.
+//! * **Scoped worker threads** — every kernel dispatches contiguous
+//!   output-row ranges across a `std::thread::scope` pool sized by
+//!   `SHEARS_NUM_THREADS` (default: available parallelism; see
+//!   [`num_threads`]). Partitioning only splits *rows between* threads,
+//!   never the reduction *within* an element, so results are
+//!   bit-identical for every thread count and the golden parity
+//!   fixtures are unaffected.
+//!
+//! The `_into` variants write into caller-provided buffers (the
+//! [`crate::ops::scratch::Scratch`] arena in the model hot path) so
+//! steady-state forward/train loops do not allocate per matmul.
 
-/// Fraction of zeros in a weight above which the gather-and-skip path wins.
-const SPARSE_THRESHOLD: f64 = 0.3;
+/// Fraction of zeros in a weight above which the CSR gather path wins.
+pub const SPARSE_THRESHOLD: f64 = 0.3;
+
+/// x-row register block for the dense kernel.
+const MR: usize = 4;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Minimum multiply-accumulate ops per worker before forking another
+/// thread (amortizes `thread::scope` spawn cost).
+const DEFAULT_PAR_MIN_WORK: usize = 1 << 17;
+
+static PAR_MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_WORK);
+
+/// Lower the fork threshold so tiny shapes still take the threaded
+/// path — test/bench hook; production code leaves the default.
+/// `0` restores the default threshold.
+#[doc(hidden)]
+pub fn set_par_min_work(w: usize) {
+    let w = if w == 0 { DEFAULT_PAR_MIN_WORK } else { w };
+    PAR_MIN_WORK.store(w, Ordering::Relaxed);
+}
+
+/// 0 = uninitialized; resolved lazily from `SHEARS_NUM_THREADS` or the
+/// machine's available parallelism.
+static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Worker count for the kernel dispatchers. Resolution order:
+/// [`set_num_threads`] override > `SHEARS_NUM_THREADS` env var >
+/// `std::thread::available_parallelism()`.
+pub fn num_threads() -> usize {
+    let n = NUM_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let n = std::env::var("SHEARS_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|n| *n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    let n = n.clamp(1, 64);
+    NUM_THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the worker count (tests, CLI `--threads`). Values are
+/// clamped to `[1, 64]`; `0` falls back to env/auto resolution on the
+/// next [`num_threads`] call. Thread count never changes results, only
+/// speed.
+pub fn set_num_threads(n: usize) {
+    let n = if n == 0 { 0 } else { n.clamp(1, 64) };
+    NUM_THREADS.store(n, Ordering::Relaxed);
+}
 
 /// Blocked dot product of two equal-length slices.
 #[inline]
@@ -36,97 +105,368 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     (s0 + s1) + (s2 + s3) + tail
 }
 
-/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` (dense).
-pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(x.len(), m * k);
-    debug_assert_eq!(w.len(), n * k);
-    let mut y = vec![0.0f32; m * n];
-    for mi in 0..m {
-        let xr = &x[mi * k..(mi + 1) * k];
-        let yr = &mut y[mi * n..(mi + 1) * n];
-        for (ni, yv) in yr.iter_mut().enumerate() {
-            *yv = dot(xr, &w[ni * k..(ni + 1) * k]);
+/// Four dot products sharing one streamed `w` row. Per row the partial
+/// sums and combine order are exactly those of [`dot`], so a row
+/// computed here is bit-identical to the scalar path.
+#[inline]
+fn dot4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
+    let k = w.len();
+    let chunks = k / 4;
+    let mut s = [[0.0f32; 4]; 4];
+    for i in 0..chunks {
+        let j = i * 4;
+        for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+            s[r][0] += xr[j] * w[j];
+            s[r][1] += xr[j + 1] * w[j + 1];
+            s[r][2] += xr[j + 2] * w[j + 2];
+            s[r][3] += xr[j + 3] * w[j + 3];
         }
     }
+    let mut out = [0.0f32; 4];
+    for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+        let mut tail = 0.0f32;
+        for j in chunks * 4..k {
+            tail += xr[j] * w[j];
+        }
+        out[r] = (s[r][0] + s[r][1]) + (s[r][2] + s[r][3]) + tail;
+    }
+    out
+}
+
+// --------------------------------------------------------- threading
+
+/// Split `y` into contiguous row ranges and run `f(row_lo, row_hi,
+/// rows_slice)` on each, forking scoped workers when `rows *
+/// work_per_row` is large enough to amortize the spawns. The first
+/// chunk runs on the calling thread. Determinism: `f` computes each
+/// output element identically whatever the partition, so the thread
+/// count never changes results.
+fn parallel_rows<F>(y: &mut [f32], rows: usize, row_len: usize, work_per_row: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(y.len(), rows * row_len);
+    let total = rows.saturating_mul(work_per_row);
+    let min_work = PAR_MIN_WORK.load(Ordering::Relaxed);
+    let threads = num_threads().min(rows).min((total / min_work).max(1));
+    if threads <= 1 || row_len == 0 {
+        f(0, rows, y);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut inline: Option<(usize, &mut [f32])> = None;
+        for (ci, slice) in y.chunks_mut(chunk * row_len).enumerate() {
+            let lo = ci * chunk;
+            if ci == 0 {
+                inline = Some((lo, slice));
+                continue;
+            }
+            let hi = lo + slice.len() / row_len;
+            let fr = &f;
+            scope.spawn(move || fr(lo, hi, slice));
+        }
+        if let Some((lo, slice)) = inline {
+            let hi = lo + slice.len() / row_len;
+            f(lo, hi, slice);
+        }
+    });
+}
+
+// --------------------------------------------------- prepared weights
+
+/// Physical representation chosen for a prepared weight.
+pub enum WeightRepr {
+    /// Mostly nonzero: the dense register-blocked kernel wins.
+    Dense,
+    /// Past [`SPARSE_THRESHOLD`] zeros: per-output-row compressed
+    /// (index, value) pairs — the Wanda/magnitude-pruned base weights.
+    Csr {
+        /// `n + 1` offsets into `idx`/`val`.
+        row_start: Vec<u32>,
+        /// column (input-feature) index of each nonzero
+        idx: Vec<u32>,
+        /// nonzero values, aligned with `idx`
+        val: Vec<f32>,
+    },
+}
+
+/// A weight scanned **once** into the representation its sparsity
+/// merits. Built lazily per resident buffer (see
+/// `runtime::DeviceBuffer`) and reused by every subsequent matmul;
+/// rebuilt only when the owning buffer is re-uploaded (prune step,
+/// optimizer update — tracked by `ParamStore` generations).
+pub struct PreparedWeight {
+    /// output features (weight rows)
+    pub n: usize,
+    /// input features (weight cols)
+    pub k: usize,
+    /// nonzero count (sparsity accounting)
+    pub nnz: usize,
+    pub repr: WeightRepr,
+}
+
+impl PreparedWeight {
+    /// One O(n·k) scan deciding dense vs CSR and building the gather.
+    pub fn build(w: &[f32], n: usize, k: usize) -> PreparedWeight {
+        debug_assert_eq!(w.len(), n * k);
+        let zeros = w.iter().filter(|v| **v == 0.0).count();
+        let nnz = w.len() - zeros;
+        if (zeros as f64) < SPARSE_THRESHOLD * (w.len().max(1) as f64) {
+            return PreparedWeight { n, k, nnz, repr: WeightRepr::Dense };
+        }
+        let mut row_start = Vec::with_capacity(n + 1);
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        row_start.push(0u32);
+        for ni in 0..n {
+            for (ki, wv) in w[ni * k..(ni + 1) * k].iter().enumerate() {
+                if *wv != 0.0 {
+                    idx.push(ki as u32);
+                    val.push(*wv);
+                }
+            }
+            row_start.push(idx.len() as u32);
+        }
+        PreparedWeight { n, k, nnz, repr: WeightRepr::Csr { row_start, idx, val } }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.repr, WeightRepr::Csr { .. })
+    }
+
+    /// Fraction of nonzero entries.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.n * self.k).max(1) as f64
+    }
+}
+
+// ------------------------------------------------------------ kernels
+
+/// Dense rows `[lo, hi)` of `y = x @ wᵀ`; `y` holds exactly those rows.
+fn nt_rows(x: &[f32], w: &[f32], k: usize, n: usize, lo: usize, hi: usize, y: &mut [f32]) {
+    let mut mi = lo;
+    while mi < hi {
+        let ybase = (mi - lo) * n;
+        if mi + MR <= hi {
+            let x0 = &x[mi * k..(mi + 1) * k];
+            let x1 = &x[(mi + 1) * k..(mi + 2) * k];
+            let x2 = &x[(mi + 2) * k..(mi + 3) * k];
+            let x3 = &x[(mi + 3) * k..(mi + 4) * k];
+            for ni in 0..n {
+                let d = dot4(x0, x1, x2, x3, &w[ni * k..(ni + 1) * k]);
+                y[ybase + ni] = d[0];
+                y[ybase + n + ni] = d[1];
+                y[ybase + 2 * n + ni] = d[2];
+                y[ybase + 3 * n + ni] = d[3];
+            }
+            mi += MR;
+        } else {
+            let xr = &x[mi * k..(mi + 1) * k];
+            for (ni, yv) in y[ybase..ybase + n].iter_mut().enumerate() {
+                *yv = dot(xr, &w[ni * k..(ni + 1) * k]);
+            }
+            mi += 1;
+        }
+    }
+}
+
+/// CSR rows `[lo, hi)` of `y = x @ wᵀ`, streaming each compressed
+/// weight row across a block of x-rows. Per element: one sequential
+/// accumulator over the nonzeros in column order (the exact order the
+/// original per-call gather used).
+#[allow(clippy::too_many_arguments)]
+fn csr_rows(
+    x: &[f32],
+    row_start: &[u32],
+    idx: &[u32],
+    val: &[f32],
+    k: usize,
+    n: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f32],
+) {
+    let mut mi = lo;
+    while mi < hi {
+        let ybase = (mi - lo) * n;
+        let rows = (hi - mi).min(MR);
+        if rows == MR {
+            let x0 = &x[mi * k..(mi + 1) * k];
+            let x1 = &x[(mi + 1) * k..(mi + 2) * k];
+            let x2 = &x[(mi + 2) * k..(mi + 3) * k];
+            let x3 = &x[(mi + 3) * k..(mi + 4) * k];
+            for ni in 0..n {
+                let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
+                let mut acc = [0.0f32; 4];
+                for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
+                    let ki = *ki as usize;
+                    acc[0] += x0[ki] * wv;
+                    acc[1] += x1[ki] * wv;
+                    acc[2] += x2[ki] * wv;
+                    acc[3] += x3[ki] * wv;
+                }
+                y[ybase + ni] = acc[0];
+                y[ybase + n + ni] = acc[1];
+                y[ybase + 2 * n + ni] = acc[2];
+                y[ybase + 3 * n + ni] = acc[3];
+            }
+            mi += MR;
+        } else {
+            let xr = &x[mi * k..(mi + 1) * k];
+            for (ni, yv) in y[ybase..ybase + n].iter_mut().enumerate() {
+                let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
+                let mut acc = 0.0f32;
+                for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
+                    acc += xr[*ki as usize] * wv;
+                }
+                *yv = acc;
+            }
+            mi += 1;
+        }
+    }
+}
+
+/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` (dense, threaded). `y` is overwritten.
+pub fn matmul_nt_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(y.len(), m * n);
+    if m == 1 {
+        // serving shape: one activation row → partition output columns
+        parallel_rows(y, n, 1, k, |lo, _hi, yc| {
+            for (j, yv) in yc.iter_mut().enumerate() {
+                let ni = lo + j;
+                *yv = dot(x, &w[ni * k..(ni + 1) * k]);
+            }
+        });
+    } else {
+        parallel_rows(y, m, n, n * k, |lo, hi, yc| nt_rows(x, w, k, n, lo, hi, yc));
+    }
+}
+
+/// `y[M,N] = x[M,K] @ w[N,K]ᵀ` (dense).
+pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; m * n];
+    matmul_nt_into(x, w, m, k, n, &mut y);
     y
 }
 
+/// `y = x @ wᵀ` through a prepared representation: the CSR gather for
+/// sparse weights, the register-blocked dense kernel otherwise. `w`
+/// must be the same buffer `pw` was built from (used on the dense path).
+pub fn matmul_nt_prepared_into(
+    x: &[f32],
+    w: &[f32],
+    pw: &PreparedWeight,
+    m: usize,
+    y: &mut [f32],
+) {
+    let (k, n) = (pw.k, pw.n);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(y.len(), m * n);
+    match &pw.repr {
+        WeightRepr::Dense => matmul_nt_into(x, w, m, k, n, y),
+        WeightRepr::Csr { row_start, idx, val } => {
+            if m == 1 {
+                parallel_rows(y, n, 1, pw.nnz / n.max(1) + 1, |lo, _hi, yc| {
+                    for (j, yv) in yc.iter_mut().enumerate() {
+                        let ni = lo + j;
+                        let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
+                        let mut acc = 0.0f32;
+                        for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
+                            acc += x[*ki as usize] * wv;
+                        }
+                        *yv = acc;
+                    }
+                });
+            } else {
+                let work = n * (pw.nnz / n.max(1) + 1);
+                parallel_rows(y, m, n, work, |lo, hi, yc| {
+                    csr_rows(x, row_start, idx, val, k, n, lo, hi, yc)
+                });
+            }
+        }
+    }
+}
+
 /// `y = x @ wᵀ`, skipping zero weight entries when the weight is sparse
-/// enough (the {0,1}-masked, Wanda-pruned base weights).
+/// enough (the {0,1}-masked, Wanda-pruned base weights). Scans and
+/// gathers **per call** — callers on the hot path should hold a
+/// [`PreparedWeight`] (resident-buffer cache) and use
+/// [`matmul_nt_prepared_into`] instead.
 pub fn matmul_nt_auto(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let zeros = w.iter().filter(|v| **v == 0.0).count();
-    if (zeros as f64) < SPARSE_THRESHOLD * (w.len().max(1) as f64) {
-        return matmul_nt(x, w, m, k, n);
-    }
-    // gather per-row nonzeros once, then stream activations over them
-    let mut idx: Vec<u32> = Vec::with_capacity(w.len() - zeros);
-    let mut val: Vec<f32> = Vec::with_capacity(w.len() - zeros);
-    let mut row_start: Vec<usize> = Vec::with_capacity(n + 1);
-    row_start.push(0);
-    for ni in 0..n {
-        for (ki, wv) in w[ni * k..(ni + 1) * k].iter().enumerate() {
-            if *wv != 0.0 {
-                idx.push(ki as u32);
-                val.push(*wv);
-            }
-        }
-        row_start.push(idx.len());
-    }
     let mut y = vec![0.0f32; m * n];
-    for mi in 0..m {
-        let xr = &x[mi * k..(mi + 1) * k];
-        let yr = &mut y[mi * n..(mi + 1) * n];
-        for (ni, yv) in yr.iter_mut().enumerate() {
-            let (lo, hi) = (row_start[ni], row_start[ni + 1]);
-            let mut acc = 0.0f32;
-            for (ki, wv) in idx[lo..hi].iter().zip(&val[lo..hi]) {
-                acc += xr[*ki as usize] * wv;
-            }
-            *yv = acc;
-        }
-    }
+    matmul_nt_auto_into(x, w, m, k, n, &mut y);
     y
+}
+
+/// Per-call-prepared variant of [`matmul_nt_prepared_into`].
+pub fn matmul_nt_auto_into(x: &[f32], w: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    let pw = PreparedWeight::build(w, n, k);
+    matmul_nt_prepared_into(x, w, &pw, m, y);
+}
+
+/// `y[M,N] = a[M,K] @ b[K,N]` (row-major, axpy inner loop, threaded).
+/// `y`'s prior contents are ignored.
+pub fn matmul_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(y.len(), m * n);
+    parallel_rows(y, m, n, n * k, |lo, hi, yc| {
+        yc.fill(0.0);
+        for mi in lo..hi {
+            let ar = &a[mi * k..(mi + 1) * k];
+            let yr = &mut yc[(mi - lo) * n..(mi - lo + 1) * n];
+            for (ki, av) in ar.iter().enumerate() {
+                if *av == 0.0 {
+                    continue;
+                }
+                let br = &b[ki * n..(ki + 1) * n];
+                for (yv, bv) in yr.iter_mut().zip(br) {
+                    *yv += av * bv;
+                }
+            }
+        }
+    });
 }
 
 /// `y[M,N] = a[M,K] @ b[K,N]` (row-major, axpy inner loop).
 pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
     let mut y = vec![0.0f32; m * n];
-    for mi in 0..m {
-        let ar = &a[mi * k..(mi + 1) * k];
-        let yr = &mut y[mi * n..(mi + 1) * n];
-        for (ki, av) in ar.iter().enumerate() {
-            if *av == 0.0 {
-                continue;
-            }
+    matmul_nn_into(a, b, m, k, n, &mut y);
+    y
+}
+
+/// `y[M,N] = a[K,M]ᵀ @ b[K,N]` (gradient shape: `dW = dyᵀ @ x`),
+/// threaded over output rows. `y`'s prior contents are ignored.
+pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, y: &mut [f32]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(y.len(), m * n);
+    parallel_rows(y, m, n, n * k, |lo, hi, yc| {
+        yc.fill(0.0);
+        for ki in 0..k {
+            let ar = &a[ki * m..(ki + 1) * m];
             let br = &b[ki * n..(ki + 1) * n];
-            for (yv, bv) in yr.iter_mut().zip(br) {
-                *yv += av * bv;
+            for mi in lo..hi {
+                let av = ar[mi];
+                if av == 0.0 {
+                    continue;
+                }
+                let yr = &mut yc[(mi - lo) * n..(mi - lo + 1) * n];
+                for (yv, bv) in yr.iter_mut().zip(br) {
+                    *yv += av * bv;
+                }
             }
         }
-    }
-    y
+    });
 }
 
 /// `y[M,N] = a[K,M]ᵀ @ b[K,N]` (gradient shape: `dW = dyᵀ @ x`).
 pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
     let mut y = vec![0.0f32; m * n];
-    for ki in 0..k {
-        let ar = &a[ki * m..(ki + 1) * m];
-        let br = &b[ki * n..(ki + 1) * n];
-        for (mi, av) in ar.iter().enumerate() {
-            if *av == 0.0 {
-                continue;
-            }
-            let yr = &mut y[mi * n..(mi + 1) * n];
-            for (yv, bv) in yr.iter_mut().zip(br) {
-                *yv += av * bv;
-            }
-        }
-    }
+    matmul_tn_into(a, b, k, m, n, &mut y);
     y
 }
 
@@ -182,6 +522,71 @@ mod tests {
     }
 
     #[test]
+    fn prepared_weight_picks_repr_and_matches_dense() {
+        let (m, k, n) = (6, 9, 4);
+        let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.21).sin()).collect();
+        let dense: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.13).cos()).collect();
+        let pw = PreparedWeight::build(&dense, n, k);
+        assert!(!pw.is_sparse());
+        assert_eq!(pw.nnz, n * k);
+
+        let mut sparse = dense.clone();
+        for (i, wv) in sparse.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *wv = 0.0;
+            }
+        }
+        let pw = PreparedWeight::build(&sparse, n, k);
+        assert!(pw.is_sparse());
+        assert!((pw.density() - pw.nnz as f64 / (n * k) as f64).abs() < 1e-12);
+        let reference = naive_nt(&x, &sparse, m, k, n);
+        let mut y = vec![0.0f32; m * n];
+        matmul_nt_prepared_into(&x, &sparse, &pw, m, &mut y);
+        for (a, b) in y.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn single_row_path_matches_multi_row_kernel() {
+        // M=1 dispatches over output columns; must equal the row kernel
+        let (k, n) = (13, 11);
+        let x: Vec<f32> = (0..k).map(|i| (i as f32 * 0.7).sin()).collect();
+        let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.3).cos()).collect();
+        for (i, wv) in w.iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *wv = 0.0;
+            }
+        }
+        let naive = naive_nt(&x, &w, 1, k, n);
+        for y in [matmul_nt(&x, &w, 1, k, n), matmul_nt_auto(&x, &w, 1, k, n)] {
+            for (a, b) in y.iter().zip(&naive) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_results() {
+        // deterministic row partition: bit-identical across pool sizes
+        let (m, k, n) = (9, 17, 7);
+        let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.11).sin()).collect();
+        let w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.23).cos()).collect();
+        let before = num_threads();
+        set_par_min_work(1); // force the fork even at this tiny size
+        set_num_threads(1);
+        let y1 = matmul_nt(&x, &w, m, k, n);
+        let nn1 = matmul_nn(&x, &w, m, k, n); // w reinterpreted as [k, n]
+        set_num_threads(3);
+        let y3 = matmul_nt(&x, &w, m, k, n);
+        let nn3 = matmul_nn(&x, &w, m, k, n);
+        set_num_threads(before);
+        set_par_min_work(0);
+        assert_eq!(y1, y3);
+        assert_eq!(nn1, nn3);
+    }
+
+    #[test]
     fn nn_and_tn_agree_with_transposes() {
         let (m, k, n) = (4, 3, 6);
         let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.1 - 0.5).collect();
@@ -218,5 +623,18 @@ mod tests {
         assert_eq!(dot(&a, &b), 30.0);
         assert_eq!(dot(&a[..1], &b[..1]), 2.0);
         assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn empty_and_all_zero_weights() {
+        // all-zero weight: CSR with zero nonzeros, result all zeros
+        let (m, k, n) = (3, 5, 4);
+        let x: Vec<f32> = (0..m * k).map(|i| i as f32).collect();
+        let w = vec![0.0f32; n * k];
+        let pw = PreparedWeight::build(&w, n, k);
+        assert!(pw.is_sparse());
+        assert_eq!(pw.nnz, 0);
+        let y = matmul_nt_auto(&x, &w, m, k, n);
+        assert!(y.iter().all(|v| *v == 0.0));
     }
 }

@@ -1,10 +1,11 @@
 //! Pure-Rust compute kernels for the native CPU backend.
 //!
 //! These implement the same math the AOT'd XLA artifacts execute —
-//! blocked/sparsity-aware matmuls ([`linalg`]), norm/activation/loss
-//! primitives with hand-derived backward passes ([`nn`]), the full
-//! decoder forward/backward ([`model`]), and the Wanda / magnitude /
-//! SparseGPT-lite prune ops ([`prune`]).
+//! tiled, threaded, sparsity-aware matmuls over prepared weights
+//! ([`linalg`]), norm/activation/loss primitives with hand-derived
+//! backward passes ([`nn`]), the full decoder forward/backward over a
+//! reusable scratch arena ([`model`], [`scratch`]), and the Wanda /
+//! magnitude / SparseGPT-lite prune ops ([`prune`]).
 //!
 //! Numerics are pinned against the L1 reference (`kernels/ref.py`) by
 //! the golden-fixture suite in `rust/tests/parity.rs`; the backend that
@@ -15,7 +16,11 @@ pub mod linalg;
 pub mod model;
 pub mod nn;
 pub mod prune;
+pub mod scratch;
 
+pub use linalg::PreparedWeight;
 pub use model::{
     lora_linear, lora_linear_bwd, Dims, Extra, Forward, GradMode, Grads, Model, NamedTensors,
+    PreparedCell,
 };
+pub use scratch::Scratch;

@@ -8,6 +8,16 @@
 //! hand-derived backward pass for each trainable group (adapters, full
 //! base, prefix, series, parallel).
 //!
+//! The hot path runs on the prepared-weight kernel engine: linear
+//! weights resolve through [`NamedTensors::prepared`] to a cached
+//! [`PreparedWeight`] (CSR for pruned weights, register-blocked dense
+//! otherwise) built once per resident buffer, and every intermediate
+//! buffer comes from a [`Scratch`] arena so steady-state forward/train
+//! steps perform no per-matmul heap allocation (only the entry-point
+//! boundary tensors — logits, updated params — still allocate). The
+//! `forward`/`loss_and_grads` wrappers keep the original signatures for
+//! fixture tests and host-tensor callers.
+//!
 //! The backward formulas are validated two ways: golden fixtures from
 //! `python/compile/fixtures.py` pin the numerics against `jax.grad` in
 //! `rust/tests/parity.rs`, and finite-difference checks cover the local
@@ -15,16 +25,26 @@
 //! is to f32 round-off, not bit-exact.
 
 use crate::model::ModelConfig;
-use crate::ops::linalg::{self, add_assign, axpy};
+use crate::ops::linalg::{self, add_assign, axpy, PreparedWeight};
 use crate::ops::nn;
+use crate::ops::scratch::Scratch;
 use crate::tensor::HostTensor;
 use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
+use std::rc::Rc;
 
-/// Name → tensor view over one entry point's positional inputs.
+/// Lazily-built prepared weight slot, owned by a resident buffer
+/// (`runtime::DeviceBuffer`) and shared into [`NamedTensors`] by
+/// reference. `None` until the first matmul touches the weight.
+pub type PreparedCell = RefCell<Option<Rc<PreparedWeight>>>;
+
+/// Name → tensor view over one entry point's positional inputs, plus
+/// (for resident buffers) the prepared-weight cache cells.
 #[derive(Default)]
 pub struct NamedTensors<'a> {
     map: HashMap<&'a str, &'a HostTensor>,
+    prepared: HashMap<&'a str, &'a PreparedCell>,
 }
 
 impl<'a> NamedTensors<'a> {
@@ -34,6 +54,14 @@ impl<'a> NamedTensors<'a> {
 
     pub fn insert(&mut self, name: &'a str, t: &'a HostTensor) {
         self.map.insert(name, t);
+    }
+
+    /// Register a tensor together with its prepared-weight cache slot
+    /// (resident buffers: the slot outlives this call set, so the CSR /
+    /// dense decision is made once per upload, not once per matmul).
+    pub fn insert_prepared(&mut self, name: &'a str, t: &'a HostTensor, cell: &'a PreparedCell) {
+        self.map.insert(name, t);
+        self.prepared.insert(name, cell);
     }
 
     pub fn contains(&self, name: &str) -> bool {
@@ -49,6 +77,25 @@ impl<'a> NamedTensors<'a> {
 
     pub fn f(&self, name: &str) -> Result<&'a [f32]> {
         Ok(self.get(name)?.f32s())
+    }
+
+    /// Cached prepared form of weight `name` (`[n, k]`), built on first
+    /// use. `None` when the tensor arrived without a cache slot (plain
+    /// host tensor) — callers then fall back to the per-call path.
+    pub fn prepared(&self, name: &str, n: usize, k: usize) -> Result<Option<Rc<PreparedWeight>>> {
+        let Some(cell) = self.prepared.get(name) else {
+            return Ok(None);
+        };
+        let mut slot = cell.borrow_mut();
+        if let Some(pw) = slot.as_ref() {
+            if pw.n == n && pw.k == k {
+                return Ok(Some(pw.clone()));
+            }
+        }
+        let w = self.f(name)?;
+        let pw = Rc::new(PreparedWeight::build(w, n, k));
+        *slot = Some(pw.clone());
+        Ok(Some(pw))
     }
 }
 
@@ -118,9 +165,14 @@ pub struct Grads {
 }
 
 impl Grads {
-    fn add(&mut self, name: &str, g: Vec<f32>) {
+    /// Accumulate `g` under `name`; a buffer made redundant by an
+    /// existing accumulator goes back to the arena.
+    fn add(&mut self, sc: &Scratch, name: &str, g: Vec<f32>) {
         match self.map.get_mut(name) {
-            Some(acc) => add_assign(acc, &g),
+            Some(acc) => {
+                add_assign(acc, &g);
+                sc.give(g);
+            }
             None => {
                 self.map.insert(name.to_string(), g);
             }
@@ -137,6 +189,18 @@ enum NormTape {
     Rms(Vec<f32>),
     /// cached normalized input + 1/σ per row (mpt)
     Ln { xhat: Vec<f32>, inv: Vec<f32> },
+}
+
+impl NormTape {
+    fn release(self, sc: &Scratch) {
+        match self {
+            NormTape::Rms(inv) => sc.give(inv),
+            NormTape::Ln { xhat, inv } => {
+                sc.give(xhat);
+                sc.give(inv);
+            }
+        }
+    }
 }
 
 struct LayerTape {
@@ -160,6 +224,24 @@ struct LayerTape {
     s_z: Vec<f32>,
     p_zpre: Vec<f32>,
     p_z: Vec<f32>,
+}
+
+impl LayerTape {
+    /// Hand every cached activation back to the arena.
+    fn release(self, sc: &Scratch) {
+        for v in [
+            self.h_in, self.t_attn, self.q, self.k, self.v, self.probs, self.ctx, self.h_mid,
+            self.t_mlp, self.g_pre, self.u_pre, self.act, self.s_out_in, self.s_zpre, self.s_z,
+            self.p_zpre, self.p_z,
+        ] {
+            sc.give(v);
+        }
+        self.norm1.release(sc);
+        self.norm2.release(sc);
+        for (_, p) in self.lora_p {
+            sc.give(p);
+        }
+    }
 }
 
 struct Tape {
@@ -189,21 +271,52 @@ pub struct Model<'a> {
 }
 
 impl<'a> Model<'a> {
-    fn norm_fwd(&self, x: &[f32], name: &str, m: usize) -> Result<(Vec<f32>, NormTape)> {
+    /// `y = x @ wᵀ` for weight `name`: cached prepared representation
+    /// when the weight is resident, per-call scan-and-dispatch otherwise
+    /// (the original behavior for plain host tensors).
+    fn matw(
+        &self,
+        name: &str,
+        x: &[f32],
+        m: usize,
+        out_dim: usize,
+        in_dim: usize,
+        y: &mut [f32],
+    ) -> Result<()> {
+        let w = self.p.f(name)?;
+        match self.p.prepared(name, out_dim, in_dim)? {
+            Some(pw) => linalg::matmul_nt_prepared_into(x, w, &pw, m, y),
+            None => linalg::matmul_nt_auto_into(x, w, m, in_dim, out_dim, y),
+        }
+        Ok(())
+    }
+
+    fn norm_fwd(
+        &self,
+        sc: &Scratch,
+        x: &[f32],
+        name: &str,
+        m: usize,
+    ) -> Result<(Vec<f32>, NormTape)> {
         let d = self.dims.d;
         let g = self.p.f(&format!("{name}.g"))?;
+        let mut y = sc.take(m * d);
+        let mut inv = sc.take(m);
         if self.dims.llama {
-            let (y, inv) = nn::rmsnorm(x, g, m, d);
+            nn::rmsnorm_into(x, g, m, d, &mut y, &mut inv);
             Ok((y, NormTape::Rms(inv)))
         } else {
             let b = self.p.f(&format!("{name}.b"))?;
-            let (y, xhat, inv) = nn::layernorm(x, g, b, m, d);
+            let mut xhat = sc.take(m * d);
+            nn::layernorm_into(x, g, b, m, d, &mut y, &mut xhat, &mut inv);
             Ok((y, NormTape::Ln { xhat, inv }))
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn norm_bwd(
         &self,
+        sc: &Scratch,
         dy: &[f32],
         x: &[f32],
         name: &str,
@@ -214,19 +327,28 @@ impl<'a> Model<'a> {
     ) -> Result<Vec<f32>> {
         let d = self.dims.d;
         let g = self.p.f(&format!("{name}.g"))?;
+        let mut dx = sc.take(m * d);
         match tape {
             NormTape::Rms(inv) => {
-                let (dx, dg) = nn::rmsnorm_bwd(dy, x, g, inv, m, d);
+                let mut dg = sc.take(d);
+                nn::rmsnorm_bwd_into(dy, x, g, inv, m, d, &mut dx, &mut dg);
                 if mode == GradMode::Base {
-                    grads.add(&format!("{name}.g"), dg);
+                    grads.add(sc, &format!("{name}.g"), dg);
+                } else {
+                    sc.give(dg);
                 }
                 Ok(dx)
             }
             NormTape::Ln { xhat, inv } => {
-                let (dx, dg, db) = nn::layernorm_bwd(dy, g, xhat, inv, m, d);
+                let mut dg = sc.take(d);
+                let mut db = sc.take(d);
+                nn::layernorm_bwd_into(dy, g, xhat, inv, m, d, &mut dx, &mut dg, &mut db);
                 if mode == GradMode::Base {
-                    grads.add(&format!("{name}.g"), dg);
-                    grads.add(&format!("{name}.b"), db);
+                    grads.add(sc, &format!("{name}.g"), dg);
+                    grads.add(sc, &format!("{name}.b"), db);
+                } else {
+                    sc.give(dg);
+                    sc.give(db);
                 }
                 Ok(dx)
             }
@@ -237,25 +359,37 @@ impl<'a> Model<'a> {
     /// Returns `(y, p)` where `p` is the masked LoRA projection (tape).
     fn lin_fwd(
         &self,
+        sc: &Scratch,
         x: &[f32],
         m: usize,
         wname: &str,
         out_dim: usize,
         in_dim: usize,
     ) -> Result<(Vec<f32>, Option<Vec<f32>>)> {
-        let w = self.p.f(wname)?;
+        let mut y = sc.take(m * out_dim);
+        self.matw(wname, x, m, out_dim, in_dim, &mut y)?;
         if !self.use_adapters {
-            return Ok((linalg::matmul_nt_auto(x, w, m, in_dim, out_dim), None));
+            return Ok((y, None));
         }
         let Some(idx) = self.dims.mods.iter().position(|mo| mo == wname) else {
-            return Ok((linalg::matmul_nt_auto(x, w, m, in_dim, out_dim), None));
+            return Ok((y, None));
         };
         let r = self.dims.r;
         let a = self.p.f(&format!("lora_a.{wname}"))?;
         let b = self.p.f(&format!("lora_b.{wname}"))?;
         let rm = self.rank_mask.context("adapter forward needs a rank mask")?;
         let rm = &rm[idx * r..(idx + 1) * r];
-        let (y, proj) = lora_linear(x, w, a, b, rm, self.dims.scale, m, in_dim, r, out_dim);
+        let mut proj = sc.take(m * r);
+        linalg::matmul_nt_into(x, a, m, in_dim, r, &mut proj);
+        for row in 0..m {
+            for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
+                *pv *= rm[j];
+            }
+        }
+        let mut yl = sc.take(m * out_dim);
+        linalg::matmul_nt_into(&proj, b, m, r, out_dim, &mut yl);
+        axpy(&mut y, self.dims.scale, &yl);
+        sc.give(yl);
         Ok((y, Some(proj)))
     }
 
@@ -264,6 +398,7 @@ impl<'a> Model<'a> {
     #[allow(clippy::too_many_arguments)]
     fn lin_bwd(
         &self,
+        sc: &Scratch,
         dy: &[f32],
         x: &[f32],
         m: usize,
@@ -275,34 +410,53 @@ impl<'a> Model<'a> {
         mode: GradMode,
     ) -> Result<Vec<f32>> {
         let w = self.p.f(wname)?;
-        let dx = if let Some(proj) = lora_p.get(wname) {
+        let mut dx = sc.take(m * in_dim);
+        linalg::matmul_nn_into(dy, w, m, out_dim, in_dim, &mut dx);
+        if let Some(proj) = lora_p.get(wname) {
             let r = self.dims.r;
             let idx = self.dims.mods.iter().position(|mo| mo == wname).unwrap();
             let a = self.p.f(&format!("lora_a.{wname}"))?;
             let b = self.p.f(&format!("lora_b.{wname}"))?;
             let rm = self.rank_mask.context("adapter backward needs a rank mask")?;
             let rm = &rm[idx * r..(idx + 1) * r];
-            let (dx, da, db) =
-                lora_linear_bwd(dy, x, w, a, b, rm, self.dims.scale, proj, m, in_dim, r, out_dim);
-            if mode == GradMode::Adapters {
-                grads.add(&format!("lora_a.{wname}"), da);
-                grads.add(&format!("lora_b.{wname}"), db);
+            let scale = self.dims.scale;
+            let mut dp = sc.take(m * r);
+            linalg::matmul_nn_into(dy, b, m, out_dim, r, &mut dp);
+            for row in 0..m {
+                for (j, dpv) in dp[row * r..(row + 1) * r].iter_mut().enumerate() {
+                    *dpv *= rm[j] * scale;
+                }
             }
-            dx
-        } else {
-            linalg::matmul_nn(dy, w, m, out_dim, in_dim)
-        };
+            let mut dxl = sc.take(m * in_dim);
+            linalg::matmul_nn_into(&dp, a, m, r, in_dim, &mut dxl);
+            add_assign(&mut dx, &dxl);
+            sc.give(dxl);
+            if mode == GradMode::Adapters {
+                let mut da = sc.take(r * in_dim);
+                linalg::matmul_tn_into(&dp, x, m, r, in_dim, &mut da);
+                let mut db = sc.take(out_dim * r);
+                linalg::matmul_tn_into(dy, proj, m, out_dim, r, &mut db);
+                for dv in db.iter_mut() {
+                    *dv *= scale;
+                }
+                grads.add(sc, &format!("lora_a.{wname}"), da);
+                grads.add(sc, &format!("lora_b.{wname}"), db);
+            }
+            sc.give(dp);
+        }
         if mode == GradMode::Base {
-            grads.add(wname, linalg::matmul_tn(dy, x, m, out_dim, in_dim));
+            let mut dw = sc.take(out_dim * in_dim);
+            linalg::matmul_tn_into(dy, x, m, out_dim, in_dim, &mut dw);
+            grads.add(sc, wname, dw);
         }
         Ok(dx)
     }
 
     /// RoPE rotation tables (llama): `(cos, sin)` of shape `[S, dh/2]`.
-    fn rope_tables(&self) -> (Vec<f32>, Vec<f32>) {
+    fn rope_tables(&self, sc: &Scratch) -> (Vec<f32>, Vec<f32>) {
         let (s, half) = (self.dims.s, self.dims.dh / 2);
-        let mut cos = vec![0.0f32; s * half];
-        let mut sin = vec![0.0f32; s * half];
+        let mut cos = sc.take(s * half);
+        let mut sin = sc.take(s * half);
         for si in 0..s {
             for j in 0..half {
                 let freq = 1.0 / 10000.0f32.powf(j as f32 / half as f32);
@@ -339,9 +493,9 @@ impl<'a> Model<'a> {
     }
 
     /// `[M, d]` row-major → `[B, H, S, dh]` head-major.
-    fn split_heads(&self, x: &[f32]) -> Vec<f32> {
+    fn split_heads(&self, sc: &Scratch, x: &[f32]) -> Vec<f32> {
         let Dims { b, s, d, nh, dh, .. } = self.dims;
-        let mut out = vec![0.0f32; b * nh * s * dh];
+        let mut out = sc.take(b * nh * s * dh);
         for bi in 0..b {
             for si in 0..s {
                 let row = &x[(bi * s + si) * d..(bi * s + si + 1) * d];
@@ -355,9 +509,9 @@ impl<'a> Model<'a> {
     }
 
     /// `[B, H, S, dh]` head-major → `[M, d]` row-major.
-    fn merge_heads(&self, x: &[f32]) -> Vec<f32> {
+    fn merge_heads(&self, sc: &Scratch, x: &[f32]) -> Vec<f32> {
         let Dims { b, s, d, nh, dh, .. } = self.dims;
-        let mut out = vec![0.0f32; b * s * d];
+        let mut out = sc.take(b * s * d);
         for bi in 0..b {
             for h in 0..nh {
                 for si in 0..s {
@@ -374,7 +528,9 @@ impl<'a> Model<'a> {
         2.0f32.powf(-8.0 * (h + 1) as f32 / self.dims.nh as f32)
     }
 
-    /// Record a calibration site: `(Σx² per feature, Gram XᵀX)`.
+    /// Record a calibration site: `(Σx² per feature, Gram XᵀX)`. These
+    /// escape into the entry outputs, so they allocate (one-shot
+    /// calibration, not the steady-state loop).
     fn record(
         stats: &mut Vec<(String, Vec<f32>, Vec<f32>)>,
         site: String,
@@ -392,20 +548,34 @@ impl<'a> Model<'a> {
         stats.push((site, sumsq, gram));
     }
 
-    /// Full forward pass. `want_tape` caches activations for
-    /// [`Model::backward`]; `collect` records calibration statistics.
+    /// Full forward pass with per-call buffers (fixture tests, host-path
+    /// callers). The backend hot path uses [`Model::forward_scratch`].
     pub fn forward(&self, x_ids: &[i32], want_tape: bool, collect: bool) -> Result<Forward> {
+        self.forward_scratch(&Scratch::new(), x_ids, want_tape, collect)
+    }
+
+    /// Full forward pass over a caller-owned scratch arena. `want_tape`
+    /// caches activations for the backward pass; `collect` records
+    /// calibration statistics.
+    pub fn forward_scratch(
+        &self,
+        sc: &Scratch,
+        x_ids: &[i32],
+        want_tape: bool,
+        collect: bool,
+    ) -> Result<Forward> {
         let Dims { b, s, d, nh, dh, f, v, plen, .. } = self.dims;
         debug_assert_eq!(x_ids.len(), b * s);
         let m = b * s;
         let embed = self.p.f("embed")?;
-        let mut h = vec![0.0f32; m * d];
+        let mut h = sc.take(m * d);
         for (mi, tok) in x_ids.iter().enumerate() {
             let t = *tok as usize;
             debug_assert!(t < v, "token id {t} >= vocab {v}");
             h[mi * d..(mi + 1) * d].copy_from_slice(&embed[t * d..(t + 1) * d]);
         }
-        let (cos, sin) = if self.dims.llama { self.rope_tables() } else { (Vec::new(), Vec::new()) };
+        let (cos, sin) =
+            if self.dims.llama { self.rope_tables(sc) } else { (Vec::new(), Vec::new()) };
         let use_prefix = self.extra == Extra::Prefix;
         let skv = if use_prefix { plen + s } else { s };
         let mut stats = Vec::new();
@@ -413,15 +583,15 @@ impl<'a> Model<'a> {
 
         for i in 0..self.dims.n_layers {
             let mut lora_p = HashMap::new();
-            let h_in = h.clone();
-            let (t_attn, norm1) = self.norm_fwd(&h_in, &format!("layers.{i}.attn_norm"), m)?;
+            let h_in = h;
+            let (t_attn, norm1) = self.norm_fwd(sc, &h_in, &format!("layers.{i}.attn_norm"), m)?;
             if collect {
                 Self::record(&mut stats, format!("{i}.attn_in"), &t_attn, m, d);
             }
             let pre = format!("layers.{i}.attn.");
             let lin3 = |name: &str, tape: &mut HashMap<String, Vec<f32>>| -> Result<Vec<f32>> {
                 let wname = format!("{pre}{name}");
-                let (y, p) = self.lin_fwd(&t_attn, m, &wname, d, d)?;
+                let (y, p) = self.lin_fwd(sc, &t_attn, m, &wname, d, d)?;
                 if let Some(p) = p {
                     tape.insert(wname, p);
                 }
@@ -430,9 +600,9 @@ impl<'a> Model<'a> {
             let qf = lin3("q", &mut lora_p)?;
             let kf = lin3("k", &mut lora_p)?;
             let vf = lin3("v", &mut lora_p)?;
-            let mut q = self.split_heads(&qf);
+            let mut q = self.split_heads(sc, &qf);
             let k_base = {
-                let mut k3 = self.split_heads(&kf);
+                let mut k3 = self.split_heads(sc, &kf);
                 if self.dims.llama {
                     self.rope_apply(&mut k3, &cos, &sin, false);
                 }
@@ -441,13 +611,16 @@ impl<'a> Model<'a> {
             if self.dims.llama {
                 self.rope_apply(&mut q, &cos, &sin, false);
             }
-            let v_base = self.split_heads(&vf);
+            let v_base = self.split_heads(sc, &vf);
+            sc.give(qf);
+            sc.give(kf);
+            sc.give(vf);
             // assemble (optionally prefix-extended) K/V in [B,H,Skv,dh]
             let (k3, v3) = if use_prefix {
                 let pk = self.p.f(&format!("prefix_k.{i}"))?; // [H, P, dh]
                 let pv = self.p.f(&format!("prefix_v.{i}"))?;
-                let mut kx = vec![0.0f32; b * nh * skv * dh];
-                let mut vx = vec![0.0f32; b * nh * skv * dh];
+                let mut kx = sc.take(b * nh * skv * dh);
+                let mut vx = sc.take(b * nh * skv * dh);
                 for bi in 0..b {
                     for hh in 0..nh {
                         let dst = (bi * nh + hh) * skv * dh;
@@ -461,14 +634,16 @@ impl<'a> Model<'a> {
                             .copy_from_slice(&v_base[bsrc..bsrc + s * dh]);
                     }
                 }
+                sc.give(k_base);
+                sc.give(v_base);
                 (kx, vx)
             } else {
                 (k_base, v_base)
             };
             // scores → probs → ctx
             let inv_sqrt = 1.0 / (dh as f32).sqrt();
-            let mut probs = vec![0.0f32; b * nh * s * skv];
-            let mut ctx = vec![0.0f32; m * d];
+            let mut probs = sc.take(b * nh * s * skv);
+            let mut ctx = sc.take(m * d);
             for bi in 0..b {
                 for hh in 0..nh {
                     let bh = bi * nh + hh;
@@ -476,22 +651,24 @@ impl<'a> Model<'a> {
                     for si in 0..s {
                         let qrow = &q[(bh * s + si) * dh..(bh * s + si + 1) * dh];
                         let prow = &mut probs[(bh * s + si) * skv..(bh * s + si + 1) * skv];
-                        for t in 0..skv {
-                            let allowed = t < plen_of(use_prefix, plen) || t - plen_of(use_prefix, plen) <= si;
+                        for (t, pv) in prow.iter_mut().enumerate() {
+                            let allowed = t < plen_of(use_prefix, plen)
+                                || t - plen_of(use_prefix, plen) <= si;
                             if !allowed {
-                                prow[t] = -1e30;
+                                *pv = -1e30;
                                 continue;
                             }
                             let krow = &k3[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
-                            let mut sc = linalg::dot(qrow, krow) * inv_sqrt;
+                            let mut sc_ = linalg::dot(qrow, krow) * inv_sqrt;
                             if !self.dims.llama {
                                 let pos_k = t as f32 - plen_of(use_prefix, plen) as f32;
-                                sc += slope * -(pos_k - si as f32).abs();
+                                sc_ += slope * -(pos_k - si as f32).abs();
                             }
-                            prow[t] = sc;
+                            *pv = sc_;
                         }
                         nn::softmax_row(prow);
-                        let crow = &mut ctx[(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
+                        let crow = &mut ctx
+                            [(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
                         for t in 0..skv {
                             let pv = prow[t];
                             if pv == 0.0 {
@@ -508,40 +685,48 @@ impl<'a> Model<'a> {
             if collect {
                 Self::record(&mut stats, format!("{i}.o_in"), &ctx, m, d);
             }
-            let (attn_out, o_p) = self.lin_fwd(&ctx, m, &format!("{pre}o"), d, d)?;
+            let (attn_out, o_p) = self.lin_fwd(sc, &ctx, m, &format!("{pre}o"), d, d)?;
             if let Some(p) = o_p {
                 lora_p.insert(format!("{pre}o"), p);
             }
-            let mut h_mid = h_in.clone();
+            let mut h_mid = sc.take(m * d);
+            h_mid.copy_from_slice(&h_in);
             add_assign(&mut h_mid, &attn_out);
-            let (t_mlp, norm2) = self.norm_fwd(&h_mid, &format!("layers.{i}.mlp_norm"), m)?;
+            sc.give(attn_out);
+            let (t_mlp, norm2) = self.norm_fwd(sc, &h_mid, &format!("layers.{i}.mlp_norm"), m)?;
             if collect {
                 Self::record(&mut stats, format!("{i}.mlp_in"), &t_mlp, m, d);
             }
             let mpre = format!("layers.{i}.mlp.");
             let (g_pre, u_pre, act) = if self.dims.llama {
-                let (gp, gt) = self.lin_fwd(&t_mlp, m, &format!("{mpre}gate"), f, d)?;
+                let (gp, gt) = self.lin_fwd(sc, &t_mlp, m, &format!("{mpre}gate"), f, d)?;
                 if let Some(p) = gt {
                     lora_p.insert(format!("{mpre}gate"), p);
                 }
-                let (up, ut) = self.lin_fwd(&t_mlp, m, &format!("{mpre}up"), f, d)?;
+                let (up, ut) = self.lin_fwd(sc, &t_mlp, m, &format!("{mpre}up"), f, d)?;
                 if let Some(p) = ut {
                     lora_p.insert(format!("{mpre}up"), p);
                 }
-                let act: Vec<f32> = gp.iter().zip(&up).map(|(g, u)| nn::silu(*g) * u).collect();
+                let mut act = sc.take(m * f);
+                for ((av, g), u) in act.iter_mut().zip(&gp).zip(&up) {
+                    *av = nn::silu(*g) * u;
+                }
                 (gp, up, act)
             } else {
-                let (up, ut) = self.lin_fwd(&t_mlp, m, &format!("{mpre}up"), f, d)?;
+                let (up, ut) = self.lin_fwd(sc, &t_mlp, m, &format!("{mpre}up"), f, d)?;
                 if let Some(p) = ut {
                     lora_p.insert(format!("{mpre}up"), p);
                 }
-                let act: Vec<f32> = up.iter().map(|u| nn::gelu(*u)).collect();
+                let mut act = sc.take(m * f);
+                for (av, u) in act.iter_mut().zip(&up) {
+                    *av = nn::gelu(*u);
+                }
                 (Vec::new(), up, act)
             };
             if collect {
                 Self::record(&mut stats, format!("{i}.down_in"), &act, m, f);
             }
-            let (mut out, d_p) = self.lin_fwd(&act, m, &format!("{mpre}down"), d, f)?;
+            let (mut out, d_p) = self.lin_fwd(sc, &act, m, &format!("{mpre}down"), d, f)?;
             if let Some(p) = d_p {
                 lora_p.insert(format!("{mpre}down"), p);
             }
@@ -550,11 +735,18 @@ impl<'a> Model<'a> {
                 let sd = self.p.f(&format!("series_down.{i}"))?;
                 let su = self.p.f(&format!("series_up.{i}"))?;
                 let bn = self.dims.bn;
-                let zpre = linalg::matmul_nt(&out, sd, m, d, bn);
-                let z: Vec<f32> = zpre.iter().map(|x| x.max(0.0)).collect();
-                let add = linalg::matmul_nt(&z, su, m, bn, d);
-                let out_in = out.clone();
+                let mut zpre = sc.take(m * bn);
+                linalg::matmul_nt_into(&out, sd, m, d, bn, &mut zpre);
+                let mut z = sc.take(m * bn);
+                for (zv, zp) in z.iter_mut().zip(&zpre) {
+                    *zv = zp.max(0.0);
+                }
+                let mut add = sc.take(m * d);
+                linalg::matmul_nt_into(&z, su, m, bn, d, &mut add);
+                let mut out_in = sc.take(m * d);
+                out_in.copy_from_slice(&out);
                 add_assign(&mut out, &add);
+                sc.give(add);
                 (out_in, zpre, z)
             } else {
                 (Vec::new(), Vec::new(), Vec::new())
@@ -564,54 +756,70 @@ impl<'a> Model<'a> {
                 let pd = self.p.f(&format!("parallel_down.{i}"))?;
                 let pu = self.p.f(&format!("parallel_up.{i}"))?;
                 let bn = self.dims.bn;
-                let zpre = linalg::matmul_nt(&t_mlp, pd, m, d, bn);
-                let z: Vec<f32> = zpre.iter().map(|x| x.max(0.0)).collect();
-                let add = linalg::matmul_nt(&z, pu, m, bn, d);
+                let mut zpre = sc.take(m * bn);
+                linalg::matmul_nt_into(&t_mlp, pd, m, d, bn, &mut zpre);
+                let mut z = sc.take(m * bn);
+                for (zv, zp) in z.iter_mut().zip(&zpre) {
+                    *zv = zp.max(0.0);
+                }
+                let mut add = sc.take(m * d);
+                linalg::matmul_nt_into(&z, pu, m, bn, d, &mut add);
                 add_assign(&mut out, &add);
+                sc.give(add);
                 (zpre, z)
             } else {
                 (Vec::new(), Vec::new())
             };
-            h = h_mid.clone();
+            h = sc.take(m * d);
+            h.copy_from_slice(&h_mid);
             add_assign(&mut h, &out);
+            sc.give(out);
+            let tape = LayerTape {
+                h_in,
+                norm1,
+                t_attn,
+                q,
+                k: k3,
+                v: v3,
+                probs,
+                ctx,
+                h_mid,
+                norm2,
+                t_mlp,
+                g_pre,
+                u_pre,
+                act,
+                lora_p,
+                s_out_in,
+                s_zpre,
+                s_z,
+                p_zpre,
+                p_z,
+            };
             if want_tape {
-                layers.push(LayerTape {
-                    h_in,
-                    norm1,
-                    t_attn,
-                    q,
-                    k: k3,
-                    v: v3,
-                    probs,
-                    ctx,
-                    h_mid,
-                    norm2,
-                    t_mlp,
-                    g_pre,
-                    u_pre,
-                    act,
-                    lora_p,
-                    s_out_in,
-                    s_zpre,
-                    s_z,
-                    p_zpre,
-                    p_z,
-                });
+                layers.push(tape);
+            } else {
+                tape.release(sc);
             }
         }
+        sc.give(cos);
+        sc.give(sin);
         let h_final_in = h;
-        let (t_final, norm_f) = self.norm_fwd(&h_final_in, "final_norm", m)?;
-        let lm_head = self.p.f("lm_head")?;
-        let logits = linalg::matmul_nt(&t_final, lm_head, m, d, v);
+        let (t_final, norm_f) = self.norm_fwd(sc, &h_final_in, "final_norm", m)?;
+        let mut logits = sc.take(m * v);
+        self.matw("lm_head", &t_final, m, v, d, &mut logits)?;
         let tape = if want_tape {
             Some(Tape { layers, h_final_in, norm_f, t_final })
         } else {
+            sc.give(h_final_in);
+            sc.give(t_final);
+            norm_f.release(sc);
             None
         };
         Ok(Forward { logits, stats, tape })
     }
 
-    /// Masked cross-entropy loss + gradients for `mode`'s parameter group.
+    /// Masked cross-entropy loss + gradients with per-call buffers.
     pub fn loss_and_grads(
         &self,
         x_ids: &[i32],
@@ -619,80 +827,122 @@ impl<'a> Model<'a> {
         loss_mask: &[f32],
         mode: GradMode,
     ) -> Result<(f32, Grads)> {
-        let fwd = self.forward(x_ids, true, false)?;
-        let tape = fwd.tape.as_ref().unwrap();
+        self.loss_and_grads_scratch(&Scratch::new(), x_ids, y_ids, loss_mask, mode)
+    }
+
+    /// Masked cross-entropy loss + gradients for `mode`'s parameter
+    /// group, over a caller-owned scratch arena. Every tape and
+    /// temporary buffer returns to the arena before this returns; only
+    /// the gradient tensors themselves leave (the caller hands them
+    /// back after the optimizer update).
+    pub fn loss_and_grads_scratch(
+        &self,
+        sc: &Scratch,
+        x_ids: &[i32],
+        y_ids: &[i32],
+        loss_mask: &[f32],
+        mode: GradMode,
+    ) -> Result<(f32, Grads)> {
+        let mut fwd = self.forward_scratch(sc, x_ids, true, false)?;
+        let Tape { mut layers, h_final_in, norm_f, t_final } =
+            fwd.tape.take().expect("tape requested");
         let Dims { b, s, d, nh, dh, f, v, plen, .. } = self.dims;
         let m = b * s;
-        let (loss, dlogits) = nn::softmax_xent(&fwd.logits, y_ids, loss_mask, m, v);
+        let mut dlogits = sc.take(m * v);
+        let loss = nn::softmax_xent_into(&fwd.logits, y_ids, loss_mask, m, v, &mut dlogits);
+        sc.give(std::mem::take(&mut fwd.logits));
         let mut grads = Grads::default();
 
         let lm_head = self.p.f("lm_head")?;
         if mode == GradMode::Base {
-            grads.add("lm_head", linalg::matmul_tn(&dlogits, &tape.t_final, m, v, d));
+            let mut dw = sc.take(v * d);
+            linalg::matmul_tn_into(&dlogits, &t_final, m, v, d, &mut dw);
+            grads.add(sc, "lm_head", dw);
         }
-        let dt_final = linalg::matmul_nn(&dlogits, lm_head, m, v, d);
+        let mut dt_final = sc.take(m * d);
+        linalg::matmul_nn_into(&dlogits, lm_head, m, v, d, &mut dt_final);
+        sc.give(dlogits);
         let mut dh = self.norm_bwd(
+            sc,
             &dt_final,
-            &tape.h_final_in,
+            &h_final_in,
             "final_norm",
-            &tape.norm_f,
+            &norm_f,
             m,
             &mut grads,
             mode,
         )?;
-        let (cos, sin) = if self.dims.llama { self.rope_tables() } else { (Vec::new(), Vec::new()) };
+        sc.give(dt_final);
+        sc.give(h_final_in);
+        sc.give(t_final);
+        norm_f.release(sc);
+        let (cos, sin) =
+            if self.dims.llama { self.rope_tables(sc) } else { (Vec::new(), Vec::new()) };
         let use_prefix = self.extra == Extra::Prefix;
         let skv = if use_prefix { plen + s } else { s };
 
         for i in (0..self.dims.n_layers).rev() {
-            let lc = &tape.layers[i];
+            let lc = layers.pop().expect("layer tape");
             let mpre = format!("layers.{i}.mlp.");
-            let dout = dh.clone();
-            let mut dt2 = vec![0.0f32; m * d];
+            let mut dt2 = sc.take(m * d);
             if self.extra == Extra::Parallel {
                 let bn = self.dims.bn;
                 let pd = self.p.f(&format!("parallel_down.{i}"))?;
                 let pu = self.p.f(&format!("parallel_up.{i}"))?;
-                let mut dzp = linalg::matmul_nn(&dout, pu, m, d, bn);
+                let mut dzp = sc.take(m * bn);
+                linalg::matmul_nn_into(&dh, pu, m, d, bn, &mut dzp);
                 for (dz, zp) in dzp.iter_mut().zip(&lc.p_zpre) {
                     if *zp <= 0.0 {
                         *dz = 0.0;
                     }
                 }
                 if mode == GradMode::Parallel {
-                    grads.add(&format!("parallel_up.{i}"), linalg::matmul_tn(&dout, &lc.p_z, m, d, bn));
-                    grads.add(
-                        &format!("parallel_down.{i}"),
-                        linalg::matmul_tn(&dzp, &lc.t_mlp, m, bn, d),
-                    );
+                    let mut dpu = sc.take(d * bn);
+                    linalg::matmul_tn_into(&dh, &lc.p_z, m, d, bn, &mut dpu);
+                    grads.add(sc, &format!("parallel_up.{i}"), dpu);
+                    let mut dpd = sc.take(bn * d);
+                    linalg::matmul_tn_into(&dzp, &lc.t_mlp, m, bn, d, &mut dpd);
+                    grads.add(sc, &format!("parallel_down.{i}"), dpd);
                 }
-                add_assign(&mut dt2, &linalg::matmul_nn(&dzp, pd, m, bn, d));
+                let mut dtp = sc.take(m * d);
+                linalg::matmul_nn_into(&dzp, pd, m, bn, d, &mut dtp);
+                add_assign(&mut dt2, &dtp);
+                sc.give(dtp);
+                sc.give(dzp);
             }
-            let d_down_out = if self.extra == Extra::Series {
+            let mut ddo_owned: Option<Vec<f32>> = None;
+            if self.extra == Extra::Series {
                 let bn = self.dims.bn;
                 let sd = self.p.f(&format!("series_down.{i}"))?;
                 let su = self.p.f(&format!("series_up.{i}"))?;
-                let mut dz = linalg::matmul_nn(&dout, su, m, d, bn);
+                let mut dz = sc.take(m * bn);
+                linalg::matmul_nn_into(&dh, su, m, d, bn, &mut dz);
                 for (dzv, zp) in dz.iter_mut().zip(&lc.s_zpre) {
                     if *zp <= 0.0 {
                         *dzv = 0.0;
                     }
                 }
                 if mode == GradMode::Series {
-                    grads.add(&format!("series_up.{i}"), linalg::matmul_tn(&dout, &lc.s_z, m, d, bn));
-                    grads.add(
-                        &format!("series_down.{i}"),
-                        linalg::matmul_tn(&dz, &lc.s_out_in, m, bn, d),
-                    );
+                    let mut dsu = sc.take(d * bn);
+                    linalg::matmul_tn_into(&dh, &lc.s_z, m, d, bn, &mut dsu);
+                    grads.add(sc, &format!("series_up.{i}"), dsu);
+                    let mut dsd = sc.take(bn * d);
+                    linalg::matmul_tn_into(&dz, &lc.s_out_in, m, bn, d, &mut dsd);
+                    grads.add(sc, &format!("series_down.{i}"), dsd);
                 }
-                let mut ddo = dout.clone();
-                add_assign(&mut ddo, &linalg::matmul_nn(&dz, sd, m, bn, d));
-                ddo
-            } else {
-                dout
-            };
+                let mut ddo = sc.take(m * d);
+                ddo.copy_from_slice(&dh);
+                let mut dsx = sc.take(m * d);
+                linalg::matmul_nn_into(&dz, sd, m, bn, d, &mut dsx);
+                add_assign(&mut ddo, &dsx);
+                sc.give(dsx);
+                sc.give(dz);
+                ddo_owned = Some(ddo);
+            }
+            let d_down_out: &[f32] = ddo_owned.as_deref().unwrap_or(&dh);
             let dact = self.lin_bwd(
-                &d_down_out,
+                sc,
+                d_down_out,
                 &lc.act,
                 m,
                 &format!("{mpre}down"),
@@ -702,58 +952,94 @@ impl<'a> Model<'a> {
                 &mut grads,
                 mode,
             )?;
+            if let Some(ddo) = ddo_owned {
+                sc.give(ddo);
+            }
             if self.dims.llama {
-                let mut dg_pre = vec![0.0f32; m * f];
-                let mut du_pre = vec![0.0f32; m * f];
+                let mut dg_pre = sc.take(m * f);
+                let mut du_pre = sc.take(m * f);
                 for j in 0..m * f {
                     dg_pre[j] = dact[j] * lc.u_pre[j] * nn::dsilu(lc.g_pre[j]);
                     du_pre[j] = dact[j] * nn::silu(lc.g_pre[j]);
                 }
-                add_assign(
-                    &mut dt2,
-                    &self.lin_bwd(&dg_pre, &lc.t_mlp, m, &format!("{mpre}gate"), f, d, &lc.lora_p, &mut grads, mode)?,
-                );
-                add_assign(
-                    &mut dt2,
-                    &self.lin_bwd(&du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads, mode)?,
-                );
+                let dg = self.lin_bwd(
+                    sc, &dg_pre, &lc.t_mlp, m, &format!("{mpre}gate"), f, d, &lc.lora_p,
+                    &mut grads, mode,
+                )?;
+                add_assign(&mut dt2, &dg);
+                sc.give(dg);
+                let du = self.lin_bwd(
+                    sc, &du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads,
+                    mode,
+                )?;
+                add_assign(&mut dt2, &du);
+                sc.give(du);
+                sc.give(dg_pre);
+                sc.give(du_pre);
             } else {
-                let mut du_pre = vec![0.0f32; m * f];
+                let mut du_pre = sc.take(m * f);
                 for j in 0..m * f {
                     du_pre[j] = dact[j] * nn::dgelu(lc.u_pre[j]);
                 }
-                add_assign(
-                    &mut dt2,
-                    &self.lin_bwd(&du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads, mode)?,
-                );
+                let du = self.lin_bwd(
+                    sc, &du_pre, &lc.t_mlp, m, &format!("{mpre}up"), f, d, &lc.lora_p, &mut grads,
+                    mode,
+                )?;
+                add_assign(&mut dt2, &du);
+                sc.give(du);
+                sc.give(du_pre);
             }
-            let mut dh_mid = dh.clone();
-            add_assign(
-                &mut dh_mid,
-                &self.norm_bwd(&dt2, &lc.h_mid, &format!("layers.{i}.mlp_norm"), &lc.norm2, m, &mut grads, mode)?,
-            );
+            sc.give(dact);
+            let mut dh_mid = sc.take(m * d);
+            dh_mid.copy_from_slice(&dh);
+            let dn2 = self.norm_bwd(
+                sc,
+                &dt2,
+                &lc.h_mid,
+                &format!("layers.{i}.mlp_norm"),
+                &lc.norm2,
+                m,
+                &mut grads,
+                mode,
+            )?;
+            add_assign(&mut dh_mid, &dn2);
+            sc.give(dn2);
+            sc.give(dt2);
 
             // ---- attention block ----
             let pre = format!("layers.{i}.attn.");
-            let dctx = self.lin_bwd(&dh_mid, &lc.ctx, m, &format!("{pre}o"), d, d, &lc.lora_p, &mut grads, mode)?;
-            let mut dq = vec![0.0f32; b * nh * s * dh];
-            let mut dkx = vec![0.0f32; b * nh * skv * dh];
-            let mut dvx = vec![0.0f32; b * nh * skv * dh];
+            let dctx = self.lin_bwd(
+                sc,
+                &dh_mid,
+                &lc.ctx,
+                m,
+                &format!("{pre}o"),
+                d,
+                d,
+                &lc.lora_p,
+                &mut grads,
+                mode,
+            )?;
+            let mut dq = sc.take(b * nh * s * dh);
+            let mut dkx = sc.take(b * nh * skv * dh);
+            let mut dvx = sc.take(b * nh * skv * dh);
             let inv_sqrt = 1.0 / (dh as f32).sqrt();
-            let mut dprow = vec![0.0f32; skv];
-            let mut dsrow = vec![0.0f32; skv];
+            let mut dprow = sc.take(skv);
+            let mut dsrow = sc.take(skv);
             for bi in 0..b {
                 for hh in 0..nh {
                     let bh = bi * nh + hh;
                     for si in 0..s {
-                        let dc = &dctx[(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
+                        let dc = &dctx
+                            [(bi * s + si) * d + hh * dh..(bi * s + si) * d + (hh + 1) * dh];
                         let prow = &lc.probs[(bh * s + si) * skv..(bh * s + si + 1) * skv];
                         for t in 0..skv {
                             let vrow = &lc.v[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
                             dprow[t] = linalg::dot(dc, vrow);
                             let pv = prow[t];
                             if pv != 0.0 {
-                                let dvr = &mut dvx[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
+                                let dvr =
+                                    &mut dvx[(bh * skv + t) * dh..(bh * skv + t + 1) * dh];
                                 for (dvv, dcv) in dvr.iter_mut().zip(dc) {
                                     *dvv += pv * dcv;
                                 }
@@ -779,11 +1065,14 @@ impl<'a> Model<'a> {
                     }
                 }
             }
+            sc.give(dprow);
+            sc.give(dsrow);
+            sc.give(dctx);
             // split off prefix grads, keep the sequence part
             let (mut dk, dv) = if use_prefix {
                 if mode == GradMode::Prefix {
-                    let mut dpk = vec![0.0f32; nh * plen * dh];
-                    let mut dpv = vec![0.0f32; nh * plen * dh];
+                    let mut dpk = sc.take(nh * plen * dh);
+                    let mut dpv = sc.take(nh * plen * dh);
                     for bi in 0..b {
                         for hh in 0..nh {
                             let src = (bi * nh + hh) * skv * dh;
@@ -798,17 +1087,19 @@ impl<'a> Model<'a> {
                             );
                         }
                     }
-                    grads.add(&format!("prefix_k.{i}"), dpk);
-                    grads.add(&format!("prefix_v.{i}"), dpv);
+                    grads.add(sc, &format!("prefix_k.{i}"), dpk);
+                    grads.add(sc, &format!("prefix_v.{i}"), dpv);
                 }
-                let mut dk = vec![0.0f32; b * nh * s * dh];
-                let mut dv = vec![0.0f32; b * nh * s * dh];
+                let mut dk = sc.take(b * nh * s * dh);
+                let mut dv = sc.take(b * nh * s * dh);
                 for bh in 0..b * nh {
                     let src = bh * skv * dh + plen * dh;
                     let dst = bh * s * dh;
                     dk[dst..dst + s * dh].copy_from_slice(&dkx[src..src + s * dh]);
                     dv[dst..dst + s * dh].copy_from_slice(&dvx[src..src + s * dh]);
                 }
+                sc.give(dkx);
+                sc.give(dvx);
                 (dk, dv)
             } else {
                 (dkx, dvx)
@@ -817,33 +1108,82 @@ impl<'a> Model<'a> {
                 self.rope_apply(&mut dq, &cos, &sin, true);
                 self.rope_apply(&mut dk, &cos, &sin, true);
             }
-            let dqf = self.merge_heads(&dq);
-            let dkf = self.merge_heads(&dk);
-            let dvf = self.merge_heads(&dv);
-            let mut dt1 =
-                self.lin_bwd(&dqf, &lc.t_attn, m, &format!("{pre}q"), d, d, &lc.lora_p, &mut grads, mode)?;
-            add_assign(
-                &mut dt1,
-                &self.lin_bwd(&dkf, &lc.t_attn, m, &format!("{pre}k"), d, d, &lc.lora_p, &mut grads, mode)?,
-            );
-            add_assign(
-                &mut dt1,
-                &self.lin_bwd(&dvf, &lc.t_attn, m, &format!("{pre}v"), d, d, &lc.lora_p, &mut grads, mode)?,
-            );
-            dh = dh_mid;
-            add_assign(
-                &mut dh,
-                &self.norm_bwd(&dt1, &lc.h_in, &format!("layers.{i}.attn_norm"), &lc.norm1, m, &mut grads, mode)?,
-            );
+            let dqf = self.merge_heads(sc, &dq);
+            let dkf = self.merge_heads(sc, &dk);
+            let dvf = self.merge_heads(sc, &dv);
+            sc.give(dq);
+            sc.give(dk);
+            sc.give(dv);
+            let mut dt1 = self.lin_bwd(
+                sc,
+                &dqf,
+                &lc.t_attn,
+                m,
+                &format!("{pre}q"),
+                d,
+                d,
+                &lc.lora_p,
+                &mut grads,
+                mode,
+            )?;
+            let dtk = self.lin_bwd(
+                sc,
+                &dkf,
+                &lc.t_attn,
+                m,
+                &format!("{pre}k"),
+                d,
+                d,
+                &lc.lora_p,
+                &mut grads,
+                mode,
+            )?;
+            add_assign(&mut dt1, &dtk);
+            sc.give(dtk);
+            let dtv = self.lin_bwd(
+                sc,
+                &dvf,
+                &lc.t_attn,
+                m,
+                &format!("{pre}v"),
+                d,
+                d,
+                &lc.lora_p,
+                &mut grads,
+                mode,
+            )?;
+            add_assign(&mut dt1, &dtv);
+            sc.give(dtv);
+            sc.give(dqf);
+            sc.give(dkf);
+            sc.give(dvf);
+            sc.give(std::mem::replace(&mut dh, dh_mid));
+            let dn1 = self.norm_bwd(
+                sc,
+                &dt1,
+                &lc.h_in,
+                &format!("layers.{i}.attn_norm"),
+                &lc.norm1,
+                m,
+                &mut grads,
+                mode,
+            )?;
+            add_assign(&mut dh, &dn1);
+            sc.give(dn1);
+            sc.give(dt1);
+            lc.release(sc);
         }
+        sc.give(cos);
+        sc.give(sin);
         if mode == GradMode::Base {
-            let mut dembed = vec![0.0f32; v * d];
+            let mut dembed = sc.take(v * d);
             for (mi, tok) in x_ids.iter().enumerate() {
                 let t = *tok as usize;
                 add_assign(&mut dembed[t * d..(t + 1) * d], &dh[mi * d..(mi + 1) * d]);
             }
-            grads.add("embed", dembed);
+            grads.add(sc, "embed", dembed);
         }
+        sc.give(dh);
         Ok((loss, grads))
     }
 }
@@ -860,8 +1200,9 @@ fn plen_of(use_prefix: bool, plen: usize) -> usize {
 
 // ------------------------------------------------- fused LoRA linear
 //
-// The L1 `lora_linear_ref` contract, standalone (used by `Model` and
-// pinned against golden fixtures in rust/tests/parity.rs):
+// The L1 `lora_linear_ref` contract, standalone (used by the parity
+// fixtures in rust/tests/parity.rs; the model hot path runs the same
+// math through `lin_fwd`/`lin_bwd` over the scratch arena):
 //   Y = X @ Wᵀ + ((X @ Aᵀ)·mask) @ Bᵀ · scale
 
 /// Forward; returns `(y, p)` where `p = (x@Aᵀ)·mask` is the tape entry

@@ -1,0 +1,148 @@
+//! Reusable scratch-buffer arena for the native hot path.
+//!
+//! Every matmul in the decoder forward/backward used to allocate (and
+//! zero) a fresh `Vec<f32>`; at steady state the shapes repeat exactly,
+//! so [`Scratch`] keeps returned buffers in capacity-keyed buckets and
+//! hands them back on the next [`Scratch::take`]. After one warm-up
+//! pass a train/eval loop performs **no per-matmul heap allocation** —
+//! only the entry-point boundary (batch in, logits / updated params
+//! out) still allocates, because those tensors escape to the caller.
+//!
+//! Interior mutability keeps the borrow story simple: the model layer
+//! passes `&Scratch` everywhere and the pool lives in a `RefCell` (the
+//! native backend is single-threaded at this level; kernel workers
+//! never touch the arena).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+/// Capacity-bucketed pool of `f32` buffers.
+#[derive(Default)]
+pub struct Scratch {
+    /// capacity → stack of idle buffers with exactly that capacity
+    pool: RefCell<BTreeMap<usize, Vec<Vec<f32>>>>,
+    /// takes that found no pooled buffer and had to allocate
+    misses: std::cell::Cell<u64>,
+    /// total takes (misses / takes = steady-state health)
+    takes: std::cell::Cell<u64>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` elements: pooled when a
+    /// buffer with sufficient capacity is idle, freshly allocated
+    /// otherwise (a "miss" — steady-state loops should stop missing
+    /// after their first iteration).
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.takes.set(self.takes.get() + 1);
+        let mut pool = self.pool.borrow_mut();
+        // smallest idle buffer that fits
+        let cap = pool
+            .range_mut(len..)
+            .find(|(_, stack)| !stack.is_empty())
+            .map(|(cap, _)| *cap);
+        drop(pool);
+        match cap {
+            Some(cap) => {
+                let mut v = {
+                    let mut pool = self.pool.borrow_mut();
+                    let stack = pool.get_mut(&cap).expect("bucket vanished");
+                    let v = stack.pop().expect("bucket emptied");
+                    if stack.is_empty() {
+                        pool.remove(&cap);
+                    }
+                    v
+                };
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => {
+                self.misses.set(self.misses.get() + 1);
+                vec![0.0f32; len]
+            }
+        }
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn give(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let cap = v.capacity();
+        self.pool.borrow_mut().entry(cap).or_default().push(v);
+    }
+
+    /// Allocating takes so far (grows only while the pool is cold).
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    /// Total takes served.
+    pub fn takes(&self) -> u64 {
+        self.takes.get()
+    }
+
+    /// Idle buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.borrow().values().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_returned_buffers() {
+        let s = Scratch::new();
+        let a = s.take(16);
+        assert_eq!(a.len(), 16);
+        assert_eq!(s.misses(), 1);
+        s.give(a);
+        assert_eq!(s.pooled(), 1);
+        let b = s.take(16);
+        assert_eq!(b.len(), 16);
+        assert_eq!(s.misses(), 1, "second take must hit the pool");
+        assert!(b.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn smaller_requests_reuse_larger_buffers() {
+        let s = Scratch::new();
+        s.give(Vec::with_capacity(64));
+        let v = s.take(10);
+        assert_eq!(v.len(), 10);
+        assert_eq!(s.misses(), 0);
+        s.give(v);
+        // buffer went back under its (>= 64) capacity bucket
+        assert_eq!(s.pooled(), 1);
+        assert!(s.take(64).capacity() >= 64);
+        assert_eq!(s.misses(), 0);
+    }
+
+    #[test]
+    fn zeroing_erases_previous_contents() {
+        let s = Scratch::new();
+        let mut v = s.take(4);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        s.give(v);
+        assert!(s.take(4).iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    fn steady_state_stops_missing() {
+        let s = Scratch::new();
+        for _ in 0..3 {
+            let a = s.take(8);
+            let b = s.take(32);
+            s.give(a);
+            s.give(b);
+        }
+        assert_eq!(s.misses(), 2, "only the cold pass may allocate");
+        assert_eq!(s.takes(), 6);
+    }
+}

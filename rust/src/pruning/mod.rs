@@ -96,6 +96,12 @@ fn accumulate(acc: &mut HostTensor, t: &HostTensor) {
 /// Sparsify every prunable weight of `base` in place to `sparsity`
 /// (fraction of zeros). Returns the per-weight {0,1} masks (keyed by the
 /// weight name, as `train_step_full` expects).
+///
+/// Replacing each weight bumps its `ParamStore` generation, so any
+/// resident copy (`runtime::ResidentParams`, `train::ForwardSession`)
+/// re-uploads it on the next sync and the native backend rebuilds its
+/// prepared CSR structure from the *pruned* values — the post-prune
+/// forwards are where the cached sparse gather pays off.
 pub fn prune(
     rt: &Runtime,
     manifest: &Manifest,

@@ -18,25 +18,45 @@
 //!
 //! [`DeviceBuffer`] abstracts the §Perf buffer-residency lever: on PJRT
 //! an uploaded buffer lives on device and skips per-step literal
-//! round-trips; on native it simply pins a host copy, keeping
-//! `TrainSession` backend-agnostic.
+//! round-trips; on native it pins a host copy **plus the weight's
+//! prepared sparse/dense structure** ([`NativeBuffer`]), so eval/search/
+//! serve loops over thousands of sub-adapter configs never re-derive
+//! the CSR gather of a frozen pruned weight. [`ResidentParams`] keeps a
+//! whole `ParamStore` resident, re-uploading only weights whose
+//! generation changed (prune step, optimizer update) — cached structure
+//! is invalidated exactly when a weight actually changes.
 
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 
-use crate::model::Manifest;
+use crate::model::{Manifest, ParamStore};
+use crate::ops::model::PreparedCell;
 use crate::tensor::HostTensor;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
+use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+
+/// Native resident buffer: a pinned host copy plus the lazily-built
+/// prepared-weight slot shared into the kernels on every execution.
+pub struct NativeBuffer {
+    pub tensor: HostTensor,
+    pub prepared: PreparedCell,
+}
+
+impl NativeBuffer {
+    pub fn new(tensor: HostTensor) -> NativeBuffer {
+        NativeBuffer { tensor, prepared: PreparedCell::default() }
+    }
+}
 
 /// Backend-resident input reused across many executions (frozen base
 /// weights, masks).
 pub enum DeviceBuffer {
-    /// native backend: a pinned host copy
-    Native(HostTensor),
+    /// native backend: a pinned host copy + prepared-weight cache
+    Native(NativeBuffer),
     #[cfg(feature = "xla")]
     Pjrt(xla::PjRtBuffer),
 }
@@ -196,14 +216,26 @@ impl Runtime {
         }
     }
 
+    /// `(misses, takes)` of the native scratch arena — `misses` stops
+    /// growing once steady-state loops reuse every buffer. `None` on
+    /// PJRT (no host-side arena).
+    pub fn scratch_stats(&self) -> Option<(u64, u64)> {
+        match &self.inner {
+            Inner::Native(n) => Some((n.scratch().misses(), n.scratch().takes())),
+            #[cfg(feature = "xla")]
+            Inner::Pjrt(_) => None,
+        }
+    }
+
     /// Pin a host tensor backend-side for reuse across executions.
     ///
     /// On native this clones once to take ownership (the caller's store
     /// keeps its copy — acceptable at current model scale; sharing via
-    /// refcounted stores is a future lever if bases grow large).
+    /// refcounted stores is a future lever if bases grow large) and
+    /// attaches an empty prepared-weight slot, filled at first use.
     pub fn upload(&self, t: &HostTensor) -> Result<DeviceBuffer> {
         match &self.inner {
-            Inner::Native(_) => Ok(DeviceBuffer::Native(t.clone())),
+            Inner::Native(_) => Ok(DeviceBuffer::Native(NativeBuffer::new(t.clone()))),
             #[cfg(feature = "xla")]
             Inner::Pjrt(p) => Ok(DeviceBuffer::Pjrt(p.upload(t)?)),
         }
@@ -231,12 +263,18 @@ impl Runtime {
         }
     }
 
-    /// All-host-tensor execution path.
+    /// All-host-tensor execution path (no cross-call prepared caching;
+    /// hot loops should upload their frozen weights and use
+    /// [`Runtime::run_args`]).
     pub fn run(&self, exe: &Exe, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         Self::check_arity(exe, inputs.len())?;
         *self.exec_count.borrow_mut() += 1;
         match &self.inner {
-            Inner::Native(_) => native::execute(Self::native_exe(exe)?, inputs),
+            Inner::Native(n) => {
+                let resolved: Vec<native::ExecInput> =
+                    inputs.iter().map(|t| native::ExecInput::host(t)).collect();
+                n.execute(Self::native_exe(exe)?, &resolved)
+            }
             #[cfg(feature = "xla")]
             Inner::Pjrt(p) => match &exe.kind {
                 ExeKind::Pjrt(pe) => p.run(pe, &exe.name, inputs),
@@ -247,17 +285,21 @@ impl Runtime {
         }
     }
 
-    /// Mixed resident-buffer / host-tensor execution path.
+    /// Mixed resident-buffer / host-tensor execution path. Resident
+    /// buffers carry their prepared-weight cache into the kernels.
     pub fn run_args(&self, exe: &Exe, inputs: &[Arg]) -> Result<Vec<HostTensor>> {
         Self::check_arity(exe, inputs.len())?;
         *self.exec_count.borrow_mut() += 1;
         match &self.inner {
-            Inner::Native(_) => {
-                let resolved: Vec<&HostTensor> = inputs
+            Inner::Native(n) => {
+                let resolved: Vec<native::ExecInput> = inputs
                     .iter()
                     .map(|a| match a {
-                        Arg::Host(t) => Ok(*t),
-                        Arg::Buf(DeviceBuffer::Native(t)) => Ok(t),
+                        Arg::Host(t) => Ok(native::ExecInput::host(t)),
+                        Arg::Buf(DeviceBuffer::Native(nb)) => Ok(native::ExecInput {
+                            t: &nb.tensor,
+                            prepared: Some(&nb.prepared),
+                        }),
                         #[cfg(feature = "xla")]
                         Arg::Buf(DeviceBuffer::Pjrt(_)) => bail!(
                             "{}: pjrt device buffer passed to the native backend",
@@ -265,7 +307,7 @@ impl Runtime {
                         ),
                     })
                     .collect::<Result<_>>()?;
-                native::execute(Self::native_exe(exe)?, &resolved)
+                n.execute(Self::native_exe(exe)?, &resolved)
             }
             #[cfg(feature = "xla")]
             Inner::Pjrt(p) => match &exe.kind {
@@ -275,6 +317,54 @@ impl Runtime {
                 }
             },
         }
+    }
+}
+
+// ------------------------------------------------- resident param stores
+
+/// A `ParamStore` kept resident backend-side, synced by `(name,
+/// generation)`: unchanged weights keep their uploaded buffer **and**
+/// its cached prepared sparse/dense structure across calls; a weight
+/// whose generation bumped (prune step, optimizer update, checkpoint
+/// reload) is re-uploaded, so cached structure is rebuilt exactly when
+/// the weight actually changed — never stale, never re-derived
+/// needlessly. Tracks one store; use one instance per store.
+#[derive(Default)]
+pub struct ResidentParams {
+    bufs: HashMap<String, (u64, DeviceBuffer)>,
+}
+
+impl ResidentParams {
+    pub fn new() -> ResidentParams {
+        ResidentParams::default()
+    }
+
+    /// Upload new/changed entries, drop removed ones. Cheap no-op when
+    /// nothing changed.
+    pub fn sync(&mut self, rt: &Runtime, store: &ParamStore) -> Result<()> {
+        self.bufs.retain(|name, _| store.contains(name));
+        for (name, t, generation) in store.entries() {
+            let stale = match self.bufs.get(name) {
+                Some((g, _)) => *g != generation,
+                None => true,
+            };
+            if stale {
+                self.bufs.insert(name.clone(), (generation, rt.upload(t)?));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DeviceBuffer> {
+        self.bufs.get(name).map(|(_, b)| b)
+    }
+
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
     }
 }
 
@@ -320,9 +410,49 @@ mod tests {
         let rt = Runtime::native().unwrap();
         let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         match rt.upload(&t).unwrap() {
-            DeviceBuffer::Native(copy) => assert_eq!(copy, t),
+            DeviceBuffer::Native(nb) => {
+                assert_eq!(nb.tensor, t);
+                assert!(nb.prepared.borrow().is_none(), "prepared cache must be lazy");
+            }
             #[cfg(feature = "xla")]
             DeviceBuffer::Pjrt(_) => panic!("native runtime returned a pjrt buffer"),
         }
+    }
+
+    #[test]
+    fn resident_params_resync_only_on_generation_bump() {
+        let rt = Runtime::native().unwrap();
+        let mut store = ParamStore::new();
+        store.insert("w", HostTensor::from_f32(&[2, 2], vec![1.0, 0.0, 0.0, 2.0]));
+        store.insert("b", HostTensor::from_f32(&[2], vec![0.5, -0.5]));
+        let mut res = ResidentParams::new();
+        res.sync(&rt, &store).unwrap();
+        assert_eq!(res.len(), 2);
+        let before = match res.get("w").unwrap() {
+            DeviceBuffer::Native(nb) => nb.tensor.clone(),
+            #[cfg(feature = "xla")]
+            _ => unreachable!(),
+        };
+        // no-change sync keeps the resident tensor identical
+        res.sync(&rt, &store).unwrap();
+        match res.get("w").unwrap() {
+            DeviceBuffer::Native(nb) => assert_eq!(nb.tensor, before),
+            #[cfg(feature = "xla")]
+            _ => unreachable!(),
+        }
+        // mutate w (generation bump) → re-upload with the new contents
+        store.get_mut("w").unwrap().f32s_mut()[0] = 9.0;
+        res.sync(&rt, &store).unwrap();
+        match res.get("w").unwrap() {
+            DeviceBuffer::Native(nb) => assert_eq!(nb.tensor.f32s()[0], 9.0),
+            #[cfg(feature = "xla")]
+            _ => unreachable!(),
+        }
+        // removing a param drops its resident buffer on the next sync
+        let mut store2 = ParamStore::new();
+        store2.insert("w", HostTensor::from_f32(&[1], vec![3.0]));
+        res.sync(&rt, &store2).unwrap();
+        assert_eq!(res.len(), 1);
+        assert!(res.get("b").is_none());
     }
 }

@@ -8,15 +8,40 @@
 //! positionally in the manifest's declared order and are re-keyed by
 //! name, so the callers (`train`, `pruning`, `serve`, `coordinator`)
 //! are backend-agnostic.
+//!
+//! Two pieces of cross-call state make this the fast path:
+//!
+//! * each [`ExecInput`] may carry the prepared-weight cache cell of its
+//!   resident buffer, so the CSR/dense structure of a frozen weight is
+//!   derived once per upload rather than once per matmul;
+//! * the backend owns a [`Scratch`] arena threaded through the model,
+//!   so steady-state forward/train steps reuse every intermediate
+//!   buffer instead of reallocating it.
 
 use crate::model::{EntryPoint, Manifest, ModelConfig, PruneOpSpec};
-use crate::ops::model::{Dims, Extra, GradMode, Model, NamedTensors};
+use crate::ops::model::{Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};
+use crate::ops::scratch::Scratch;
 use crate::ops::{nn, prune};
 use crate::tensor::HostTensor;
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+
+/// One positional execution input: the tensor plus (for resident
+/// buffers) its prepared-weight cache slot.
+#[derive(Clone, Copy)]
+pub struct ExecInput<'a> {
+    pub t: &'a HostTensor,
+    pub prepared: Option<&'a PreparedCell>,
+}
+
+impl<'a> ExecInput<'a> {
+    /// A per-call host tensor (no cross-call prepared cache).
+    pub fn host(t: &'a HostTensor) -> ExecInput<'a> {
+        ExecInput { t, prepared: None }
+    }
+}
 
 /// A resolved native "executable".
 pub struct NativeExe {
@@ -45,6 +70,8 @@ impl NativeExe {
 pub struct NativeBackend {
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<NativeExe>>>,
+    /// arena reused across executions (zero-alloc steady state)
+    scratch: Scratch,
 }
 
 impl Default for NativeBackend {
@@ -55,7 +82,16 @@ impl Default for NativeBackend {
 
 impl NativeBackend {
     pub fn new() -> Self {
-        NativeBackend { manifest: Manifest::builtin(), cache: RefCell::new(HashMap::new()) }
+        NativeBackend {
+            manifest: Manifest::builtin(),
+            cache: RefCell::new(HashMap::new()),
+            scratch: Scratch::new(),
+        }
+    }
+
+    /// The backend's scratch arena (bench/test introspection).
+    pub fn scratch(&self) -> &Scratch {
+        &self.scratch
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -106,18 +142,22 @@ impl NativeBackend {
     }
 }
 
-/// Execute a native op over positional inputs (manifest order).
-pub fn execute(exe: &NativeExe, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    match &exe.op {
-        NativeOp::Prune(spec) => run_prune(spec, inputs),
-        NativeOp::Entry { cfg, name, entry } => run_entry(cfg, name, entry, inputs),
+impl NativeBackend {
+    /// Execute a native op over positional inputs (manifest order).
+    pub fn execute(&self, exe: &NativeExe, inputs: &[ExecInput]) -> Result<Vec<HostTensor>> {
+        match &exe.op {
+            NativeOp::Prune(spec) => run_prune(spec, inputs),
+            NativeOp::Entry { cfg, name, entry } => {
+                run_entry(cfg, name, entry, inputs, &self.scratch)
+            }
+        }
     }
 }
 
-fn run_prune(spec: &PruneOpSpec, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+fn run_prune(spec: &PruneOpSpec, inputs: &[ExecInput]) -> Result<Vec<HostTensor>> {
     let mut named = NamedTensors::new();
-    for (io, t) in spec.inputs.iter().zip(inputs) {
-        named.insert(&io.name, t);
+    for (io, ei) in spec.inputs.iter().zip(inputs) {
+        named.insert(&io.name, ei.t);
     }
     let (n, k) = spec.shape;
     let w = named.f("w")?;
@@ -181,12 +221,16 @@ fn run_entry(
     cfg: &ModelConfig,
     name: &str,
     entry: &EntryPoint,
-    inputs: &[&HostTensor],
+    inputs: &[ExecInput],
+    sc: &Scratch,
 ) -> Result<Vec<HostTensor>> {
     let spec = entry_spec(name)?;
     let mut named = NamedTensors::new();
-    for (io, t) in entry.inputs.iter().zip(inputs) {
-        named.insert(&io.name, t);
+    for (io, ei) in entry.inputs.iter().zip(inputs) {
+        match ei.prepared {
+            Some(cell) => named.insert_prepared(&io.name, ei.t, cell),
+            None => named.insert(&io.name, ei.t),
+        }
     }
     let x_t = named.get("x")?;
     if x_t.shape.len() != 2 || x_t.shape[1] != cfg.seq_len {
@@ -210,7 +254,7 @@ fn run_entry(
 
     let Some(mode) = spec.train else {
         // forward-only entries (eval forwards + calib_stats)
-        let fwd = model.forward(x, false, spec.collect)?;
+        let fwd = model.forward_scratch(sc, x, false, spec.collect)?;
         if spec.collect {
             let mut outs = Vec::with_capacity(fwd.stats.len() * 2);
             for (site, sumsq, gram) in fwd.stats {
@@ -231,7 +275,7 @@ fn run_entry(
     let lr = named.f("lr")?[0];
     let y = named.get("y")?.i32s();
     let loss_mask = named.f("loss_mask")?;
-    let (loss, mut grads) = model.loss_and_grads(x, y, loss_mask, mode)?;
+    let (loss, mut grads) = model.loss_and_grads_scratch(sc, x, y, loss_mask, mode)?;
     let weight_decay = if mode == GradMode::Base { 0.01 } else { 0.0 };
 
     let mut new_p: HashMap<&str, Vec<f32>> = HashMap::new();
@@ -250,6 +294,7 @@ fn run_entry(
             bail!("{name}: gradient/param size mismatch for '{pname}'");
         }
         nn::adamw(&mut p, &g, &mut m, &mut v, step, lr, weight_decay);
+        sc.give(g);
         // keep pruned weights (and their optimizer state) at exactly zero
         let mask_name = format!("mask.{pname}");
         if named.contains(&mask_name) {

@@ -8,9 +8,10 @@
 //! Latency/throughput metrics come out per run (examples/serve_demo.rs).
 
 use crate::data::Vocab;
-use crate::model::{EntryPoint, ModelConfig, ParamStore};
-use crate::runtime::{Exe, Runtime};
+use crate::model::{ModelConfig, ParamStore};
+use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
+use crate::train::ForwardSession;
 use anyhow::{Context, Result};
 use std::time::Instant;
 
@@ -41,18 +42,21 @@ pub struct ServeMetrics {
     pub mean_batch_occupancy: f64,
 }
 
-/// Greedy batched decoder over a forward entry point.
+/// Greedy batched decoder over a forward entry point. The parameter
+/// stores are uploaded once at construction (prepared sparse weights
+/// cached), so every wave forward runs the resident fast path.
 pub struct Decoder<'rt> {
-    rt: &'rt Runtime,
     cfg: &'rt ModelConfig,
-    entry: EntryPoint,
-    exe: Exe,
-    stores: Vec<&'rt ParamStore>,
+    session: ForwardSession<'rt>,
     rank_mask: Option<HostTensor>,
     pub vocab: Vocab,
 }
 
 impl<'rt> Decoder<'rt> {
+    /// `stores` are uploaded here, at construction; the decoder serves
+    /// from its resident copies. If a store changes afterwards (prune,
+    /// fine-tune step), call [`Decoder::sync`] to re-upload the changed
+    /// weights before serving again.
     pub fn new(
         rt: &'rt Runtime,
         cfg: &'rt ModelConfig,
@@ -60,9 +64,14 @@ impl<'rt> Decoder<'rt> {
         stores: Vec<&'rt ParamStore>,
         rank_mask: Option<HostTensor>,
     ) -> Result<Self> {
-        let entry = cfg.entry(entry_name)?.clone();
-        let exe = rt.load(&entry.file)?;
-        Ok(Decoder { rt, cfg, entry, exe, stores, rank_mask, vocab: Vocab::new(cfg.vocab) })
+        let session = ForwardSession::new(rt, cfg, entry_name, &stores)?;
+        Ok(Decoder { cfg, session, rank_mask, vocab: Vocab::new(cfg.vocab) })
+    }
+
+    /// Re-upload weights whose store generation changed since
+    /// construction (cheap no-op otherwise).
+    pub fn sync(&mut self, stores: &[&ParamStore]) -> Result<()> {
+        self.session.sync(stores)
     }
 
     /// Serve a queue of requests with wave-style continuous batching.
@@ -168,21 +177,7 @@ impl<'rt> Decoder<'rt> {
     }
 
     fn forward(&self, x: &HostTensor) -> Result<HostTensor> {
-        let mut args: Vec<&HostTensor> = Vec::with_capacity(self.entry.inputs.len());
-        for i in &self.entry.inputs {
-            let t = match i.name.as_str() {
-                "x" => x,
-                "rank_mask" => self.rank_mask.as_ref().context("decoder needs rank mask")?,
-                name => self
-                    .stores
-                    .iter()
-                    .find_map(|s| s.get(name).ok())
-                    .with_context(|| format!("input '{name}' not found"))?,
-            };
-            args.push(t);
-        }
-        let outs = self.rt.run(&self.exe, &args)?;
-        outs.into_iter().next().context("no logits")
+        self.session.logits(x, self.rank_mask.as_ref())
     }
 }
 

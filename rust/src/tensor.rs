@@ -86,6 +86,22 @@ impl HostTensor {
         }
     }
 
+    /// Elementwise closeness against another f32 tensor:
+    /// `|a - b| <= atol + rtol·|b|` for every element, same shape.
+    /// Returns the first offending index (test/diagnostic helper).
+    pub fn approx_eq(&self, other: &HostTensor, atol: f32, rtol: f32) -> Result<(), String> {
+        if self.shape != other.shape {
+            return Err(format!("shape {:?} vs {:?}", self.shape, other.shape));
+        }
+        for (i, (a, b)) in self.f32s().iter().zip(other.f32s()).enumerate() {
+            let tol = atol + rtol * b.abs();
+            if (a - b).abs() > tol {
+                return Err(format!("[{i}]: {a} vs {b} (tol {tol})"));
+            }
+        }
+        Ok(())
+    }
+
     /// Count of exactly-zero entries (sparsity accounting, paper Table 3).
     pub fn zeros_count(&self) -> usize {
         match &self.data {

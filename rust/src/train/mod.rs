@@ -17,10 +17,10 @@ use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
-use crate::runtime::{Arg, DeviceBuffer, Exe, Runtime};
+use crate::runtime::{Arg, DeviceBuffer, Exe, ResidentParams, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 
 /// Cosine learning-rate schedule with linear warmup.
@@ -251,8 +251,78 @@ pub fn train_loop(
 
 // ------------------------------------------------------------- evaluation
 
+/// A forward entry point with every parameter store resident: uploads
+/// once at construction, then serves batch-after-batch forwards with
+/// cached prepared weights — the hot loop of [`evaluate`], the eval
+/// router, and the serving decoder. [`ForwardSession::sync`] re-uploads
+/// only weights whose store generation changed (prune step, optimizer
+/// update), so cached sparse structure is never stale.
+pub struct ForwardSession<'rt> {
+    rt: &'rt Runtime,
+    exe: Exe,
+    entry: EntryPoint,
+    resident: Vec<ResidentParams>,
+}
+
+impl<'rt> ForwardSession<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        cfg: &ModelConfig,
+        entry_name: &str,
+        stores: &[&ParamStore],
+    ) -> Result<Self> {
+        let entry = cfg.entry(entry_name)?.clone();
+        let exe = rt.load(&entry.file)?;
+        let mut session = ForwardSession {
+            rt,
+            exe,
+            entry,
+            resident: stores.iter().map(|_| ResidentParams::new()).collect(),
+        };
+        session.sync(stores)?;
+        Ok(session)
+    }
+
+    /// Re-upload any weights whose generation changed; cheap no-op
+    /// otherwise. `stores` must align with the construction-time order.
+    pub fn sync(&mut self, stores: &[&ParamStore]) -> Result<()> {
+        ensure!(
+            stores.len() == self.resident.len(),
+            "ForwardSession::sync: {} stores, session built over {}",
+            stores.len(),
+            self.resident.len()
+        );
+        for (res, store) in self.resident.iter_mut().zip(stores) {
+            res.sync(self.rt, store)?;
+        }
+        Ok(())
+    }
+
+    /// One forward over the `[B, S]` token batch; returns the logits.
+    pub fn logits(&self, x: &HostTensor, rank_mask: Option<&HostTensor>) -> Result<HostTensor> {
+        let mut args: Vec<Arg> = Vec::with_capacity(self.entry.inputs.len());
+        for i in &self.entry.inputs {
+            let name = i.name.as_str();
+            args.push(match name {
+                "x" => Arg::Host(x),
+                "rank_mask" => Arg::Host(rank_mask.context("forward needs a rank mask")?),
+                _ => Arg::Buf(
+                    self.resident
+                        .iter()
+                        .find_map(|r| r.get(name))
+                        .with_context(|| format!("input '{name}' not resident in any store"))?,
+                ),
+            });
+        }
+        let outs = self.rt.run_args(&self.exe, &args)?;
+        outs.into_iter().next().context("forward produced no outputs")
+    }
+}
+
 /// Teacher-forced exact-match accuracy over answer spans (the paper's
-/// answer-accuracy protocol; see data/mod.rs).
+/// answer-accuracy protocol; see data/mod.rs). Parameters ride the
+/// resident-buffer path: uploaded once, prepared weights cached across
+/// all batches.
 pub fn evaluate(
     rt: &Runtime,
     cfg: &ModelConfig,
@@ -262,13 +332,12 @@ pub fn evaluate(
     examples: &[Example],
     vocab: &Vocab,
 ) -> Result<f64> {
-    let entry = cfg.entry(entry_name)?;
-    let exe = rt.load(&entry.file)?;
+    let session = ForwardSession::new(rt, cfg, entry_name, stores)?;
     let batcher = Batcher::new(examples, cfg.batch_eval, cfg.seq_len, vocab, MaskMode::AnswerOnly);
     let (mut correct, mut total) = (0usize, 0usize);
     let mut ex_idx = 0usize;
     for batch in batcher.epoch() {
-        let logits = forward_logits(rt, &exe, entry, stores, rank_mask, &batch)?;
+        let logits = session.logits(&batch.x, rank_mask)?;
         let v = cfg.vocab;
         let s = cfg.seq_len;
         for row in 0..batch.real {

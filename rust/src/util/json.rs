@@ -107,6 +107,8 @@ impl Json {
 
     // ------------------------------------------------------------ emit
 
+    // inherent by design: this is the compact-emit primitive, not Display
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0, false);

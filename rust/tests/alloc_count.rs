@@ -1,0 +1,212 @@
+//! Zero-alloc steady state, verified with a counting global allocator.
+//!
+//! Two levels of assertion:
+//!
+//! 1. **Kernel level** — a prepared (dense or CSR) matmul into a
+//!    caller buffer performs exactly **zero** heap allocations on the
+//!    single-threaded path (multi-thread dispatch allocates only
+//!    `thread::scope` bookkeeping, never data buffers).
+//! 2. **Model level** — a warmed-up forward over the scratch arena
+//!    allocates only the escaping boundary tensor (logits) plus small
+//!    name-formatting strings: total bytes far below a single matmul
+//!    intermediate, proving no matmul output is reallocated per call.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+/// (allocation count, bytes) performed by `f`.
+fn counted<R>(f: impl FnOnce() -> R) -> (u64, u64, R) {
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let b0 = BYTES.load(Ordering::Relaxed);
+    let r = f();
+    (
+        ALLOCS.load(Ordering::Relaxed) - a0,
+        BYTES.load(Ordering::Relaxed) - b0,
+        r,
+    )
+}
+
+/// The counter is process-global and cargo runs tests on parallel
+/// threads — serialize the measured sections so counts are attributable.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+use shears::ops::linalg::{self, PreparedWeight};
+use shears::ops::Scratch;
+
+#[test]
+fn prepared_matmuls_are_zero_alloc_single_threaded() {
+    let _guard = serial();
+    linalg::set_num_threads(1);
+    let (m, k, n) = (24, 33, 17);
+    let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.13).sin()).collect();
+    let dense: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.29).cos()).collect();
+    let mut sparse = dense.clone();
+    for (i, wv) in sparse.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *wv = 0.0;
+        }
+    }
+    let pw_dense = PreparedWeight::build(&dense, n, k);
+    let pw_sparse = PreparedWeight::build(&sparse, n, k);
+    assert!(!pw_dense.is_sparse());
+    assert!(pw_sparse.is_sparse());
+
+    let mut y = vec![0.0f32; m * n];
+    // warm nothing — these kernels must not touch the heap at all
+    for (w, pw) in [(&dense, &pw_dense), (&sparse, &pw_sparse)] {
+        let (allocs, bytes, ()) = counted(|| {
+            for _ in 0..10 {
+                linalg::matmul_nt_prepared_into(&x, w, pw, m, &mut y);
+            }
+        });
+        assert_eq!(
+            (allocs, bytes),
+            (0, 0),
+            "prepared matmul allocated (sparse={})",
+            pw.is_sparse()
+        );
+    }
+    // accumulation kernels into caller buffers: also zero-alloc
+    let b_nn: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).sin()).collect();
+    let mut y_nn = vec![0.0f32; m * n];
+    // tn shapes: a is [K2, M2] = x reinterpreted as [m, k], b is [K2, N2]
+    let (k2, m2, n2) = (m, k, 11);
+    let b_tn: Vec<f32> = (0..k2 * n2).map(|i| (i as f32 * 0.05).cos()).collect();
+    let mut y_tn = vec![0.0f32; m2 * n2];
+    let (allocs, bytes, ()) = counted(|| {
+        linalg::matmul_nn_into(&x, &b_nn, m, k, n, &mut y_nn);
+        linalg::matmul_tn_into(&x, &b_tn, k2, m2, n2, &mut y_tn);
+    });
+    assert_eq!((allocs, bytes), (0, 0), "nn/tn kernels allocated");
+}
+
+#[test]
+fn warm_forward_reuses_all_matmul_buffers() {
+    use shears::model::ParamStore;
+    use shears::ops::model::{Dims, Extra, Model, NamedTensors};
+    use shears::runtime::Runtime;
+    use shears::util::rng::Rng;
+
+    let _guard = serial();
+    linalg::set_num_threads(1);
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let mut rng = Rng::new(5);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+
+    let mut named = NamedTensors::new();
+    for (name, t, _) in base.entries() {
+        named.insert(name, t);
+    }
+    let b = 4usize;
+    let dims = Dims::from_config(cfg, b);
+    let x: Vec<i32> = (0..b * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+    let model = Model { dims, p: &named, use_adapters: false, rank_mask: None, extra: Extra::None };
+
+    let sc = Scratch::new();
+    // two warm-up passes fill the arena with every shape the forward needs
+    for _ in 0..2 {
+        let _ = model.forward_scratch(&sc, &x, false, false).unwrap();
+    }
+    let misses_warm = sc.misses();
+    let m = b * cfg.seq_len;
+    let logits_bytes = (m * cfg.vocab * 4) as u64;
+    let smallest_matmul_bytes = (m * cfg.d_model * 4) as u64;
+
+    let (allocs, bytes, _fwd) =
+        counted(|| model.forward_scratch(&sc, &x, false, false).unwrap());
+
+    // arena steady state: the only miss per call is the escaping logits
+    assert_eq!(
+        sc.misses(),
+        misses_warm + 1,
+        "warm forward missed the arena beyond the logits escape"
+    );
+    // heap traffic: logits + small format!-strings; if any matmul
+    // intermediate were reallocated per call, bytes would jump by at
+    // least one m×d buffer on top of this bound
+    assert!(
+        bytes < logits_bytes + smallest_matmul_bytes,
+        "warm forward allocated {bytes} bytes (logits alone is {logits_bytes}) — \
+         a matmul intermediate is leaking from the arena"
+    );
+    assert!(allocs < 200, "warm forward made {allocs} allocations");
+}
+
+#[test]
+fn warm_train_step_has_zero_arena_misses() {
+    use shears::data::batch::{Batcher, MaskMode};
+    use shears::data::{dataset, Task, Vocab};
+    use shears::model::ParamStore;
+    use shears::nls::SearchSpace;
+    use shears::runtime::Runtime;
+    use shears::train::TrainSession;
+    use shears::util::rng::Rng;
+
+    let _guard = serial();
+    linalg::set_num_threads(1);
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(6);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    let space = SearchSpace::from_config(cfg);
+    let mask = space.full_mask();
+    let ds = dataset(Task::BoolqSim, &vocab, 7, cfg.batch_train, cfg.seq_len);
+    let batch = Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly)
+        .epoch()
+        .into_iter()
+        .next()
+        .unwrap();
+
+    let session = TrainSession::new(&rt, cfg, "train_step_nls", &base).unwrap();
+    let specs: Vec<shears::model::ParamSpec> = cfg.adapter_params.clone();
+    let mut m = ParamStore::zeros_like(&specs);
+    let mut v = ParamStore::zeros_like(&specs);
+    for step in 1..=3 {
+        session.step(&mut adapters, &mut m, &mut v, None, &batch, step, 1e-3, Some(&mask)).unwrap();
+    }
+    let before = rt.scratch_stats().unwrap().0;
+    for step in 4..=6 {
+        session.step(&mut adapters, &mut m, &mut v, None, &batch, step, 1e-3, Some(&mask)).unwrap();
+    }
+    let after = rt.scratch_stats().unwrap().0;
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state train steps still allocate matmul/tape buffers"
+    );
+}

@@ -1,0 +1,168 @@
+//! Prepared-weight cache invalidation: resident buffers cache the CSR /
+//! dense structure of frozen weights, so the one thing that must never
+//! happen is serving *stale* structure after a weight changes. These
+//! tests drive the real invalidation chain — `ParamStore` generation →
+//! `ResidentParams::sync` re-upload → fresh `PreparedWeight` — and pin
+//! every resident-path result against the uncached host path (which
+//! re-derives everything per call and therefore cannot be stale).
+
+use shears::data::batch::{Batcher, MaskMode};
+use shears::data::{dataset, Task, Vocab};
+use shears::model::{ModelConfig, ParamStore};
+use shears::ops::{linalg, nn};
+use shears::pruning::{self, Method};
+use shears::runtime::Runtime;
+use shears::tensor::HostTensor;
+use shears::train::{forward_logits, ForwardSession};
+use shears::util::rng::Rng;
+
+const CFG: &str = "tiny-llama";
+
+fn setup() -> (Runtime, ModelConfig, ParamStore, shears::data::batch::Batch) {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(CFG).unwrap().clone();
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(11);
+    let base = ParamStore::init_base(&cfg, &mut rng, 0.05);
+    let ds = dataset(Task::BoolqSim, &vocab, 12, cfg.batch_eval, cfg.seq_len);
+    let batcher = Batcher::new(&ds, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
+    let batch = batcher.epoch().into_iter().next().unwrap();
+    (rt, cfg, base, batch)
+}
+
+/// Uncached reference: the host path re-keys and re-prepares every
+/// call, so it always reflects the store's current contents.
+fn host_logits(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    base: &ParamStore,
+    batch: &shears::data::batch::Batch,
+) -> HostTensor {
+    let entry = cfg.entry("forward_eval_base").unwrap();
+    let exe = rt.load(&entry.file).unwrap();
+    forward_logits(rt, &exe, entry, &[base], None, batch).unwrap()
+}
+
+#[test]
+fn prune_invalidates_cached_sparse_structure() {
+    let (rt, cfg, mut base, batch) = setup();
+    let manifest = rt.manifest().unwrap();
+
+    // 1. resident session over the dense base
+    let mut session = ForwardSession::new(&rt, &cfg, "forward_eval_base", &[&base]).unwrap();
+    let dense_resident = session.logits(&batch.x, None).unwrap();
+    dense_resident
+        .approx_eq(&host_logits(&rt, &cfg, &base, &batch), 1e-5, 1e-5)
+        .expect("dense resident vs host");
+
+    // 2. prune → generations bump → sync re-uploads → CSR rebuilt from
+    // the pruned values
+    pruning::prune(&rt, &manifest, &cfg, &mut base, Method::Magnitude, 0.5, None).unwrap();
+    session.sync(&[&base]).unwrap();
+    let pruned_resident = session.logits(&batch.x, None).unwrap();
+    let pruned_host = host_logits(&rt, &cfg, &base, &batch);
+    pruned_resident
+        .approx_eq(&pruned_host, 1e-5, 1e-5)
+        .expect("pruned resident vs host (stale cache?)");
+
+    // and pruning actually changed the function — the cached result
+    // must NOT equal the dense one
+    assert!(
+        dense_resident.approx_eq(&pruned_resident, 1e-4, 1e-4).is_err(),
+        "pruning changed no logits — cache served stale dense weights"
+    );
+}
+
+#[test]
+fn optimizer_update_rebuilds_cached_structure() {
+    let (rt, cfg, mut base, batch) = setup();
+    let manifest = rt.manifest().unwrap();
+    // start from a *pruned* base so the resident path caches CSR
+    pruning::prune(&rt, &manifest, &cfg, &mut base, Method::Magnitude, 0.5, None).unwrap();
+    let mut session = ForwardSession::new(&rt, &cfg, "forward_eval_base", &[&base]).unwrap();
+    let before = session.logits(&batch.x, None).unwrap();
+
+    // AdamW-update one pruned weight in place (get_mut bumps the
+    // generation): surviving entries move, zeros may resurrect — the
+    // cached CSR is wrong on both counts until rebuilt
+    let wname = &cfg.prunable[0].name;
+    let gen_before = base.generation(wname).unwrap();
+    {
+        let w = base.get_mut(wname).unwrap().f32s_mut();
+        let g: Vec<f32> = (0..w.len()).map(|i| ((i % 7) as f32 - 3.0) * 0.1).collect();
+        let mut m = vec![0.0f32; w.len()];
+        let mut v = vec![0.0f32; w.len()];
+        nn::adamw(w, &g, &mut m, &mut v, 1.0, 0.05, 0.0);
+    }
+    session.sync(&[&base]).unwrap();
+    let after = session.logits(&batch.x, None).unwrap();
+    let after_host = host_logits(&rt, &cfg, &base, &batch);
+    after
+        .approx_eq(&after_host, 1e-5, 1e-5)
+        .expect("post-update resident vs host (stale cache?)");
+    assert!(
+        before.approx_eq(&after, 1e-4, 1e-4).is_err(),
+        "optimizer update changed no logits — cache never rebuilt"
+    );
+
+    // without sync() the session would serve the old weights — prove
+    // the generation actually moved so sync had something to see
+    assert!(
+        base.generation(wname).unwrap() > gen_before,
+        "get_mut did not bump the generation"
+    );
+}
+
+#[test]
+fn resident_and_host_paths_agree_at_every_sparsity() {
+    // the CSR kernel vs the per-call gather vs dense: one function
+    let (rt, cfg, mut base, batch) = setup();
+    let manifest = rt.manifest().unwrap();
+    for sparsity in [0.0, 0.4, 0.7] {
+        if sparsity > 0.0 {
+            pruning::prune(&rt, &manifest, &cfg, &mut base, Method::Magnitude, sparsity, None)
+                .unwrap();
+        }
+        let mut session = ForwardSession::new(&rt, &cfg, "forward_eval_base", &[&base]).unwrap();
+        session.sync(&[&base]).unwrap();
+        let resident = session.logits(&batch.x, None).unwrap();
+        resident
+            .approx_eq(&host_logits(&rt, &cfg, &base, &batch), 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("sparsity {sparsity}: {e}"));
+        // repeated calls serve the cached structure bit-identically
+        let again = session.logits(&batch.x, None).unwrap();
+        assert_eq!(resident.f32s(), again.f32s(), "cached forward not deterministic");
+    }
+}
+
+#[test]
+fn prepared_weight_cell_is_built_once_and_reused() {
+    // unit-level: the same cell must hand back the same Rc, and a
+    // replacement weight must not be visible through the old cell
+    use shears::ops::{NamedTensors, PreparedCell};
+    let (n, k) = (6, 10);
+    let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.37).sin()).collect();
+    for (i, wv) in w.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *wv = 0.0;
+        }
+    }
+    let wt = HostTensor::from_f32(&[n, k], w.clone());
+    let cell = PreparedCell::default();
+    let mut named = NamedTensors::new();
+    named.insert_prepared("w", &wt, &cell);
+    let p1 = named.prepared("w", n, k).unwrap().unwrap();
+    let p2 = named.prepared("w", n, k).unwrap().unwrap();
+    assert!(std::rc::Rc::ptr_eq(&p1, &p2), "cell rebuilt instead of reused");
+    assert!(p1.is_sparse());
+    assert_eq!(p1.nnz, w.iter().filter(|x| **x != 0.0).count());
+
+    // the prepared matmul over the cached structure equals a fresh build
+    let m = 3;
+    let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.21).cos()).collect();
+    let mut y_cached = vec![0.0f32; m * n];
+    linalg::matmul_nt_prepared_into(&x, &w, &p1, m, &mut y_cached);
+    let y_fresh = linalg::matmul_nt_auto(&x, &w, m, k, n);
+    assert_eq!(y_cached, y_fresh);
+}

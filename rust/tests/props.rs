@@ -8,6 +8,7 @@ use shears::data::batch::{build_batch, MaskMode};
 use shears::data::{dataset, Example, Task, Vocab};
 use shears::model::ParamStore;
 use shears::nls::{SearchSpace, SubAdapterConfig};
+use shears::ops::linalg;
 use shears::search::{hill_climb, non_dominated_sort, CachedEvaluator};
 use shears::tensor::HostTensor;
 use shears::train::exact_match;
@@ -255,6 +256,65 @@ fn sub_adapter_param_accounting_matches_mask_mass() {
         let expected: usize = cfg.active_params(&space.dims);
         assert_eq!(expected, active_rows as usize * (din + dout));
     });
+}
+
+/// Threaded kernels must match the single-threaded kernels **bitwise**:
+/// the worker pool partitions output rows, never the reduction inside
+/// an element, so SHEARS_NUM_THREADS can only change wall time. Odd
+/// shapes (nothing divisible by tile or thread count), the M=1 serving
+/// shape, and empty/all-zero weights all included.
+#[test]
+fn threaded_kernels_match_single_threaded_bitwise() {
+    linalg::set_par_min_work(1); // fork even at property-test sizes
+    check("threaded == single-threaded", 40, |g| {
+        let m = *g.choice(&[1usize, 2, 3, 5, 9, 17]);
+        let k = *g.choice(&[1usize, 3, 7, 13, 33]);
+        let n = *g.choice(&[1usize, 2, 5, 11, 19]);
+        let x = {
+            let v = g.vec_f32(m * k..m * k + 1, -2.0, 2.0);
+            if v.len() == m * k { v } else { vec![0.3; m * k] }
+        };
+        let mut w = {
+            let v = g.vec_f32(n * k..n * k + 1, -2.0, 2.0);
+            if v.len() == n * k { v } else { vec![-0.7; n * k] }
+        };
+        // sparsity regimes: dense, ~half-zero, all-zero
+        match g.usize_in(0..3) {
+            0 => {}
+            1 => {
+                for (i, wv) in w.iter_mut().enumerate() {
+                    if i % 2 == 0 {
+                        *wv = 0.0;
+                    }
+                }
+            }
+            _ => w.iter_mut().for_each(|wv| *wv = 0.0),
+        }
+        let b_nn = {
+            let v = g.vec_f32(k * n..k * n + 1, -1.0, 1.0);
+            if v.len() == k * n { v } else { vec![0.5; k * n] }
+        };
+        // tn reads a as [K2=m, M2=k] and needs b of [K2, N2=n]
+        let b_tn = {
+            let v = g.vec_f32(m * n..m * n + 1, -1.0, 1.0);
+            if v.len() == m * n { v } else { vec![-0.25; m * n] }
+        };
+        linalg::set_num_threads(1);
+        let nt1 = linalg::matmul_nt(&x, &w, m, k, n);
+        let auto1 = linalg::matmul_nt_auto(&x, &w, m, k, n);
+        let nn1 = linalg::matmul_nn(&x, &b_nn, m, k, n);
+        let tn1 = linalg::matmul_tn(&x, &b_tn, m, k, n);
+        for threads in [2usize, 7] {
+            linalg::set_num_threads(threads);
+            assert_eq!(nt1, linalg::matmul_nt(&x, &w, m, k, n), "nt @{threads}t");
+            assert_eq!(auto1, linalg::matmul_nt_auto(&x, &w, m, k, n), "auto @{threads}t");
+            assert_eq!(nn1, linalg::matmul_nn(&x, &b_nn, m, k, n), "nn @{threads}t");
+            assert_eq!(tn1, linalg::matmul_tn(&x, &b_tn, m, k, n), "tn @{threads}t");
+        }
+        linalg::set_num_threads(1);
+    });
+    linalg::set_num_threads(0); // back to env/auto resolution
+    linalg::set_par_min_work(0); // restore the default fork threshold
 }
 
 /// Example invariant shared by training and eval: the answer span sits
