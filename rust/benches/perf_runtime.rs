@@ -1,17 +1,23 @@
 //! Runtime micro-benchmarks (EXPERIMENTS.md §Perf source data):
 //! executable resolution time, forward latency on both execution paths
 //! (per-call literal vs buffer-resident prepared weights, single- vs
-//! multi-threaded), train-step latency, prune-op latency, and the
-//! whole-model prune wall — the numbers behind the paper's cost claims
-//! ("pruning < 5 minutes", "a pair of GPU hours" → seconds/minutes
-//! here) and this repo's prepared-weight engine speedups.
+//! multi-threaded), kernel-engine comparisons (SIMD+pool vs the
+//! pre-engine scalar+scope kernels, pool-vs-scope at the M=1 serving
+//! shape, dense vs CSC sparse-aware backward), train-step latency on
+//! both engines, prune-op latency, and the whole-model prune wall —
+//! the numbers behind the paper's cost claims ("pruning < 5 minutes",
+//! "a pair of GPU hours" → seconds/minutes here) and this repo's
+//! kernel-engine speedups.
 //!
 //! The backend comes from `SHEARS_BACKEND` (section labels report it),
-//! worker count from `SHEARS_NUM_THREADS`, and `SHEARS_BENCH_FAST=1`
-//! runs a smoke pass with tiny iteration counts (CI). Besides stdout
-//! tables, a machine-readable summary lands in `BENCH_perf.json`
-//! (override with `SHEARS_BENCH_JSON`) so the perf trajectory is
-//! tracked across PRs instead of scraped from logs.
+//! worker count from `SHEARS_NUM_THREADS`, SIMD/pool gates from
+//! `SHEARS_SIMD`/`SHEARS_POOL` (the engine sections flip them
+//! explicitly), and `SHEARS_BENCH_FAST=1` runs a smoke pass with tiny
+//! iteration counts (CI). Besides stdout tables, a machine-readable
+//! summary lands in `BENCH_perf.json` (override with
+//! `SHEARS_BENCH_JSON`) so the perf trajectory is tracked across PRs
+//! instead of scraped from logs — PR 3's snapshot is committed as
+//! `BENCH_pr3.json`.
 
 #[path = "bench_common.rs"]
 mod bench_common;
@@ -41,12 +47,17 @@ fn main() {
     let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
     let space = SearchSpace::from_config(cfg);
     let max_threads = linalg::num_threads();
+    // ambient engine config (SHEARS_SIMD / SHEARS_POOL); the engine
+    // comparison sections flip the gates and restore these after
+    let (simd0, pool0) = (linalg::simd_enabled(), linalg::pool_enabled());
 
     let mut json: Vec<(&str, Json)> = vec![
         ("bench", s("perf_runtime")),
         ("backend", s(backend)),
         ("config", s("llama-sim-s")),
         ("threads", num(max_threads as f64)),
+        ("simd", Json::Bool(linalg::simd_enabled())),
+        ("pool", Json::Bool(linalg::pool_enabled())),
         ("fast", Json::Bool(fast)),
     ];
 
@@ -155,13 +166,87 @@ fn main() {
         .unwrap();
     let mut step_no = 0usize;
     linalg::set_num_threads(max_threads);
-    let s3 = time("train_step_nls: fused step", warmup, iters, || {
+    let s3 = time("train_step_nls: fused step (simd+pool)", warmup, iters, || {
         step_no += 1;
         session
             .step(&mut adapters, &mut m, &mut v, None, &tb, step_no, 1e-3, Some(&mask))
             .unwrap();
     });
     s3.print();
+    // the same fused step on the pre-engine kernels: scalar dots,
+    // per-call thread::scope spawns (the PR 2 baseline)
+    linalg::set_simd_enabled(false);
+    linalg::set_pool_enabled(false);
+    let s3_pr2 = time("train_step_nls: fused step (scalar+scope)", warmup, iters, || {
+        step_no += 1;
+        session
+            .step(&mut adapters, &mut m, &mut v, None, &tb, step_no, 1e-3, Some(&mask))
+            .unwrap();
+    });
+    s3_pr2.print();
+    linalg::set_simd_enabled(simd0);
+    linalg::set_pool_enabled(pool0);
+
+    // ---- kernel engine microbenches (dense/simd, M=1 pool, CSC bwd) ----
+    println!("\n== kernels (synthetic, {max_threads} threads) ==");
+    let (kn, kk, km) = (512usize, 512usize, 64usize);
+    let kw_dense: Vec<f32> = (0..kn * kk).map(|i| (i as f32 * 0.11).sin()).collect();
+    let mut kw_sparse = kw_dense.clone();
+    for (i, wv) in kw_sparse.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *wv = 0.0; // 50% — the paper's headline sparsity
+        }
+    }
+    let kx: Vec<f32> = (0..km * kk).map(|i| (i as f32 * 0.07).cos()).collect();
+    let kdy: Vec<f32> = (0..km * kn).map(|i| (i as f32 * 0.05).sin()).collect();
+    let mut ky = vec![0.0f32; km * kn];
+    let mut kdx = vec![0.0f32; km * kk];
+    let kpw = shears::ops::PreparedWeight::build(&kw_sparse, kn, kk);
+    let _ = kpw.csc(); // build the CSC outside the timed region
+
+    // (a) dense nt matmul: this PR's SIMD+pool engine vs the PR 2
+    // scalar+scope engine — the acceptance comparison
+    linalg::set_simd_enabled(true);
+    linalg::set_pool_enabled(true);
+    let eng = time(&format!("dense nt {km}x{kk}x{kn}: simd+pool"), warmup, iters, || {
+        linalg::matmul_nt_into(&kx, &kw_dense, km, kk, kn, &mut ky);
+    });
+    eng.print();
+    linalg::set_simd_enabled(false);
+    linalg::set_pool_enabled(false);
+    let pr2 = time(&format!("dense nt {km}x{kk}x{kn}: scalar+scope"), warmup, iters, || {
+        linalg::matmul_nt_into(&kx, &kw_dense, km, kk, kn, &mut ky);
+    });
+    pr2.print();
+
+    // (b) M=1 serving decode shape: persistent pool vs per-call scope
+    // (SIMD on in both, isolating spawn cost)
+    linalg::set_simd_enabled(true);
+    let mut ky1 = vec![0.0f32; kn];
+    linalg::set_pool_enabled(true);
+    let m1_pool = time(&format!("nt 1x{kk}x{kn}: pool"), warmup, iters.max(20), || {
+        linalg::matmul_nt_into(&kx[..kk], &kw_dense, 1, kk, kn, &mut ky1);
+    });
+    m1_pool.print();
+    linalg::set_pool_enabled(false);
+    let m1_scope = time(&format!("nt 1x{kk}x{kn}: scope"), warmup, iters.max(20), || {
+        linalg::matmul_nt_into(&kx[..kk], &kw_dense, 1, kk, kn, &mut ky1);
+    });
+    m1_scope.print();
+    // back to the ambient gates so section (c) measures the same
+    // configuration the JSON header records
+    linalg::set_simd_enabled(simd0);
+    linalg::set_pool_enabled(pool0);
+
+    // (c) backward dx = dy @ W at 50% sparsity: dense axpy vs cached CSC
+    let bwd_dense = time(&format!("bwd nn {km}x{kn}x{kk}: dense"), warmup, iters, || {
+        linalg::matmul_nn_into(&kdy, &kw_sparse, km, kn, kk, &mut kdx);
+    });
+    bwd_dense.print();
+    let bwd_csc = time(&format!("bwd nn {km}x{kn}x{kk}: csc (50% sparse)"), warmup, iters, || {
+        linalg::matmul_nn_prepared_into(&kdy, &kw_sparse, &kpw, km, &mut kdx);
+    });
+    bwd_csc.print();
     // zero-alloc assertion: a warmed train step reuses every matmul /
     // tape buffer (only boundary tensors — updated params — allocate,
     // and those never route through the arena)
@@ -228,12 +313,42 @@ fn main() {
         "forward throughput (resident)".into(),
         format!("{:.0} tokens/s", tokens / (res_n.mean_ms / 1e3)),
     ]);
-    table.row(vec!["train step (fused)".into(), format!("{:.2} ms", s3.mean_ms)]);
+    table.row(vec!["train step (fused, simd+pool)".into(), format!("{:.2} ms", s3.mean_ms)]);
+    table.row(vec![
+        "train step (fused, scalar+scope)".into(),
+        format!("{:.2} ms", s3_pr2.mean_ms),
+    ]);
+    table.row(vec![
+        "train-step engine speedup".into(),
+        format!("{:.2}x", s3_pr2.mean_ms / s3.mean_ms),
+    ]);
     table.row(vec![
         "train throughput".into(),
         format!(
             "{:.0} tokens/s",
             (cfg.batch_train * cfg.seq_len) as f64 / (s3.mean_ms / 1e3)
+        ),
+    ]);
+    table.row(vec![
+        "dense nt: simd+pool vs scalar+scope".into(),
+        format!("{:.2} / {:.2} ms ({:.2}x)", eng.mean_ms, pr2.mean_ms, pr2.mean_ms / eng.mean_ms),
+    ]);
+    table.row(vec![
+        "M=1 nt: pool vs scope".into(),
+        format!(
+            "{:.3} / {:.3} ms ({:.2}x)",
+            m1_pool.mean_ms,
+            m1_scope.mean_ms,
+            m1_scope.mean_ms / m1_pool.mean_ms
+        ),
+    ]);
+    table.row(vec![
+        "bwd dx=dy@W: csc vs dense @50%".into(),
+        format!(
+            "{:.2} / {:.2} ms ({:.2}x)",
+            bwd_csc.mean_ms,
+            bwd_dense.mean_ms,
+            bwd_dense.mean_ms / bwd_csc.mean_ms
         ),
     ]);
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
@@ -264,11 +379,27 @@ fn main() {
         "train_step",
         obj(vec![
             ("ms", num(s3.mean_ms)),
+            ("ms_scalar_scope", num(s3_pr2.mean_ms)),
+            ("speedup_engine", num(s3_pr2.mean_ms / s3.mean_ms)),
             (
                 "tokens_per_s",
                 num((cfg.batch_train * cfg.seq_len) as f64 / (s3.mean_ms / 1e3)),
             ),
             ("arena_misses_steady", num(train_miss.unwrap_or(-1.0))),
+        ]),
+    ));
+    json.push((
+        "kernels",
+        obj(vec![
+            ("dense_nt_simd_pool_ms", num(eng.mean_ms)),
+            ("dense_nt_scalar_scope_ms", num(pr2.mean_ms)),
+            ("speedup_engine", num(pr2.mean_ms / eng.mean_ms)),
+            ("m1_nt_pool_ms", num(m1_pool.mean_ms)),
+            ("m1_nt_scope_ms", num(m1_scope.mean_ms)),
+            ("speedup_pool_m1", num(m1_scope.mean_ms / m1_pool.mean_ms)),
+            ("bwd_dense_ms", num(bwd_dense.mean_ms)),
+            ("bwd_csc_ms", num(bwd_csc.mean_ms)),
+            ("speedup_csc_bwd", num(bwd_dense.mean_ms / bwd_csc.mean_ms)),
         ]),
     ));
     json.push((

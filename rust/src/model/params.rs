@@ -7,8 +7,10 @@
 //!
 //! Every entry carries a **generation** counter, bumped on `insert` and
 //! `get_mut`: `runtime::ResidentParams` keys its uploaded buffers (and
-//! their cached prepared sparse structure) on it, so a prune step or
-//! optimizer update invalidates exactly the weights it touched.
+//! their cached prepared structure — the CSR forward gather *and* the
+//! CSC backward view, which live inside one `PreparedWeight`) on it, so
+//! a prune step or optimizer update invalidates exactly the weights it
+//! touched, across both the forward and backward kernel paths.
 
 use crate::model::manifest::{ModelConfig, ParamSpec};
 use crate::tensor::HostTensor;

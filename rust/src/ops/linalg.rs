@@ -5,27 +5,45 @@
 //! product `Y = X @ Wᵀ` is a grid of contiguous-row dot products — the
 //! cache-friendly layout that needs no transposition.
 //!
-//! Three levers make this the prepared-weight kernel engine (ISSUE 2):
+//! Four levers make this the kernel engine (ISSUE 2 + ISSUE 3):
 //!
 //! * **[`PreparedWeight`]** — the §3.1 sparsity lever. A frozen weight is
 //!   scanned **once** into either a dense marker or a CSR gather
 //!   (`row_start`/`idx`/`val`) when it is past [`SPARSE_THRESHOLD`]
 //!   zeros; every subsequent matmul skips the zeros without re-deriving
-//!   the structure. The per-call gather of the original implementation
-//!   survives only as the fallback for unprepared host tensors
-//!   ([`matmul_nt_auto`]).
+//!   the structure. Since ISSUE 3 a CSR weight also lazily caches a
+//!   **CSC (column-major) companion** ([`CscView`]) so the backward
+//!   `dx = dy @ W` ([`matmul_nn_prepared_into`]) is sparsity-aware too —
+//!   the step that turns 50% sparsity into a training-time speedup, not
+//!   just a forward one. The per-call gather survives only as the
+//!   fallback for unprepared host tensors ([`matmul_nt_auto`]).
+//! * **SIMD-shaped microkernels** — every reduction (dense dots, CSR/CSC
+//!   gathers, the `nn.rs` norm/softmax sums through the `reduce_*`
+//!   helpers) runs over **8 explicit accumulator lanes** with a scalar
+//!   tail and a fixed combine tree: the safe-Rust shape LLVM turns into
+//!   `f32x8` vector code. `SHEARS_SIMD=off` ([`set_simd_enabled`])
+//!   selects the pre-SIMD scalar kernels instead; each mode is
+//!   bit-stable and thread-invariant on its own, and the two agree to
+//!   f32 round-off (elementwise kernels like [`axpy`] are bit-identical
+//!   across modes — only reduction order differs).
 //! * **Register-blocked tiles** — [`matmul_nt_into`] processes x-rows in
 //!   blocks of [`MR`], streaming each weight row once per block instead
 //!   of once per row (a 4× cut in weight traffic). Per output element
-//!   the accumulation order is *identical* to the scalar [`dot`] (4-way
-//!   partial sums + tail), so blocked and unblocked paths agree bitwise.
-//! * **Scoped worker threads** — every kernel dispatches contiguous
-//!   output-row ranges across a `std::thread::scope` pool sized by
-//!   `SHEARS_NUM_THREADS` (default: available parallelism; see
-//!   [`num_threads`]). Partitioning only splits *rows between* threads,
-//!   never the reduction *within* an element, so results are
-//!   bit-identical for every thread count and the golden parity
-//!   fixtures are unaffected.
+//!   the accumulation order is *identical* to the unblocked [`dot`]
+//!   (same lanes, same combine), so blocked and unblocked paths agree
+//!   bitwise within a SIMD mode.
+//! * **Persistent worker pool** — kernels dispatch contiguous output-row
+//!   ranges to parked worker threads ([`pool`]) instead of spawning a
+//!   `std::thread::scope` per call, so small matmuls (the M=1 serving
+//!   decode shape, sub-adapter search) stop paying spawn cost.
+//!   `SHEARS_NUM_THREADS` / [`set_num_threads`] still size the dispatch
+//!   (resizes between dispatches are safe: sizing is read per dispatch
+//!   and the pool only grows, under its own lock); `SHEARS_POOL=off`
+//!   ([`set_pool_enabled`]) restores the scoped per-call dispatch.
+//!   Partitioning only splits *rows between* workers, never the
+//!   reduction *within* an element, so results are bit-identical for
+//!   every thread count and either dispatch mechanism, and the golden
+//!   parity fixtures are unaffected.
 //!
 //! The `_into` variants write into caller-provided buffers (the
 //! [`crate::ops::scratch::Scratch`] arena in the model hot path) so
@@ -37,10 +55,16 @@ pub const SPARSE_THRESHOLD: f64 = 0.3;
 /// x-row register block for the dense kernel.
 const MR: usize = 4;
 
+/// Accumulator lanes in the SIMD-shaped kernels (the AVX2 `f32x8`
+/// width; also two NEON `f32x4`s).
+const LANES: usize = 8;
+
+use std::cell::OnceCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Minimum multiply-accumulate ops per worker before forking another
-/// thread (amortizes `thread::scope` spawn cost).
+/// Minimum multiply-accumulate ops per worker before handing work to
+/// the pool (amortizes wake/claim overhead; with the scoped fallback it
+/// amortizes spawns, as before).
 const DEFAULT_PAR_MIN_WORK: usize = 1 << 17;
 
 static PAR_MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_WORK);
@@ -79,16 +103,99 @@ pub fn num_threads() -> usize {
 /// Override the worker count (tests, CLI `--threads`). Values are
 /// clamped to `[1, 64]`; `0` falls back to env/auto resolution on the
 /// next [`num_threads`] call. Thread count never changes results, only
-/// speed.
+/// speed — and it never touches the live pool: each dispatch reads the
+/// count once and the pool grows lazily under its own lock, so calling
+/// this between (or even during) dispatches cannot race a running job.
 pub fn set_num_threads(n: usize) {
     let n = if n == 0 { 0 } else { n.clamp(1, 64) };
     NUM_THREADS.store(n, Ordering::Relaxed);
 }
 
-/// Blocked dot product of two equal-length slices.
+// ------------------------------------------------------- feature gates
+
+/// 0 = resolve from env, 1 = on, 2 = off.
+static SIMD_MODE: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether the 8-lane SIMD-shaped kernels are active (default) or the
+/// pre-SIMD scalar kernels (`SHEARS_SIMD=off|0|false`). Both modes are
+/// deterministic and thread-invariant; they differ at f32 round-off in
+/// reductions only.
+pub fn simd_enabled() -> bool {
+    match SIMD_MODE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let off = std::env::var("SHEARS_SIMD")
+                .map(|v| matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false"))
+                .unwrap_or(false);
+            SIMD_MODE.store(if off { 2 } else { 1 }, Ordering::Relaxed);
+            !off
+        }
+    }
+}
+
+/// Force the SIMD mode (tests, benches). Overrides `SHEARS_SIMD`.
+pub fn set_simd_enabled(on: bool) {
+    SIMD_MODE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// 0 = resolve from env, 1 = on, 2 = off.
+static POOL_MODE: AtomicUsize = AtomicUsize::new(0);
+
+/// Whether multi-threaded dispatch uses the persistent worker pool
+/// (default) or a per-call `std::thread::scope`
+/// (`SHEARS_POOL=off|0|false|scope`). Results are bit-identical either
+/// way — this is purely a wall-clock / debugging lever.
+pub fn pool_enabled() -> bool {
+    match POOL_MODE.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let off = std::env::var("SHEARS_POOL")
+                .map(|v| matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false" | "scope"))
+                .unwrap_or(false);
+            POOL_MODE.store(if off { 2 } else { 1 }, Ordering::Relaxed);
+            !off
+        }
+    }
+}
+
+/// Force the dispatch mechanism (tests, benches). Overrides `SHEARS_POOL`.
+pub fn set_pool_enabled(on: bool) {
+    POOL_MODE.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+// ----------------------------------------------------------- dot cores
+
+/// Fixed combine tree over the 8 lane partials — shared by every laned
+/// reduction so equal lane contents always produce equal bits.
 #[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
+fn hsum(s: &[f32; LANES]) -> f32 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+/// 8-lane dot: lane `l` accumulates elements `j ≡ l (mod 8)` of the
+/// chunked prefix, the tail is sequential, combine via [`hsum`].
+#[inline]
+fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = [0.0f32; LANES];
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for (av, bv) in ac.by_ref().zip(bc.by_ref()) {
+        for l in 0..LANES {
+            s[l] += av[l] * bv[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (av, bv) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += av * bv;
+    }
+    hsum(&s) + tail
+}
+
+/// Pre-SIMD dot (4-way partial sums) — the `SHEARS_SIMD=off` kernel.
+#[inline]
+fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
     let chunks = a.len() / 4;
     let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
     for i in 0..chunks {
@@ -105,11 +212,50 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     (s0 + s1) + (s2 + s3) + tail
 }
 
-/// Four dot products sharing one streamed `w` row. Per row the partial
-/// sums and combine order are exactly those of [`dot`], so a row
-/// computed here is bit-identical to the scalar path.
+/// Dot product of two equal-length slices (mode-gated).
 #[inline]
-fn dot4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if simd_enabled() {
+        dot_lanes(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+/// Four 8-lane dots sharing one streamed `w` row. Per row the lane
+/// assignment and combine order are exactly those of [`dot_lanes`], so
+/// a row computed here is bit-identical to the unblocked path.
+#[inline]
+fn dot4_lanes(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
+    let k = w.len();
+    let chunks = k / LANES;
+    let mut s = [[0.0f32; LANES]; MR];
+    for i in 0..chunks {
+        let j = i * LANES;
+        let wv = &w[j..j + LANES];
+        for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+            let xv = &xr[j..j + LANES];
+            for l in 0..LANES {
+                s[r][l] += xv[l] * wv[l];
+            }
+        }
+    }
+    let mut out = [0.0f32; MR];
+    for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+        let mut tail = 0.0f32;
+        for j in chunks * LANES..k {
+            tail += xr[j] * w[j];
+        }
+        out[r] = hsum(&s[r]) + tail;
+    }
+    out
+}
+
+/// Pre-SIMD blocked dot: per row the partial sums and combine order are
+/// exactly those of [`dot_scalar`].
+#[inline]
+fn dot4_scalar(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
     let k = w.len();
     let chunks = k / 4;
     let mut s = [[0.0f32; 4]; 4];
@@ -133,19 +279,219 @@ fn dot4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
     out
 }
 
+/// Four dot products sharing one streamed `w` row; per row bit-identical
+/// to [`dot`] in the same SIMD mode.
+#[inline]
+fn dot4(x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32], w: &[f32]) -> [f32; 4] {
+    if simd_enabled() {
+        dot4_lanes(x0, x1, x2, x3, w)
+    } else {
+        dot4_scalar(x0, x1, x2, x3, w)
+    }
+}
+
+/// Sequential gather dot over one compressed (index, value) run — the
+/// pre-SIMD CSR/CSC element kernel.
+#[inline]
+fn gather_dot_scalar(x: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (ki, wv) in idx.iter().zip(val) {
+        acc += x[*ki as usize] * wv;
+    }
+    acc
+}
+
+/// 8-lane gather dot (lane assignment/combine as [`dot_lanes`]).
+#[inline]
+fn gather_dot_lanes(x: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+    let mut s = [0.0f32; LANES];
+    let mut ic = idx.chunks_exact(LANES);
+    let mut vc = val.chunks_exact(LANES);
+    for (iv, vv) in ic.by_ref().zip(vc.by_ref()) {
+        for l in 0..LANES {
+            s[l] += x[iv[l] as usize] * vv[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (ki, wv) in ic.remainder().iter().zip(vc.remainder()) {
+        tail += x[*ki as usize] * wv;
+    }
+    hsum(&s) + tail
+}
+
+/// Gather dot over a compressed run (mode-gated): one element of a
+/// CSR forward or CSC backward matmul.
+#[inline]
+fn gather_dot(x: &[f32], idx: &[u32], val: &[f32]) -> f32 {
+    if simd_enabled() {
+        gather_dot_lanes(x, idx, val)
+    } else {
+        gather_dot_scalar(x, idx, val)
+    }
+}
+
+/// Four gather dots sharing one streamed (index, value) run; per row
+/// bit-identical to [`gather_dot`] in the same SIMD mode.
+#[inline]
+fn gather_dot4(
+    x0: &[f32],
+    x1: &[f32],
+    x2: &[f32],
+    x3: &[f32],
+    idx: &[u32],
+    val: &[f32],
+) -> [f32; 4] {
+    if simd_enabled() {
+        let mut s = [[0.0f32; LANES]; MR];
+        let mut ic = idx.chunks_exact(LANES);
+        let mut vc = val.chunks_exact(LANES);
+        for (iv, vv) in ic.by_ref().zip(vc.by_ref()) {
+            for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+                for l in 0..LANES {
+                    s[r][l] += xr[iv[l] as usize] * vv[l];
+                }
+            }
+        }
+        let (ir, vr) = (ic.remainder(), vc.remainder());
+        let mut out = [0.0f32; MR];
+        for (r, xr) in [x0, x1, x2, x3].into_iter().enumerate() {
+            let mut tail = 0.0f32;
+            for (ki, wv) in ir.iter().zip(vr) {
+                tail += xr[*ki as usize] * wv;
+            }
+            out[r] = hsum(&s[r]) + tail;
+        }
+        out
+    } else {
+        let mut acc = [0.0f32; MR];
+        for (ki, wv) in idx.iter().zip(val) {
+            let ki = *ki as usize;
+            acc[0] += x0[ki] * wv;
+            acc[1] += x1[ki] * wv;
+            acc[2] += x2[ki] * wv;
+            acc[3] += x3[ki] * wv;
+        }
+        acc
+    }
+}
+
+// ------------------------------------------------- reduction helpers
+//
+// Row-level reductions for the `nn.rs` norm / softmax / cross-entropy
+// paths. Each has an 8-lane form (fixed [`hsum`] combine) and a plain
+// sequential fallback matching the pre-SIMD accumulation order exactly,
+// selected by [`simd_enabled`]. Both modes are bit-stable; they differ
+// only at f32 round-off.
+
+/// Generic laned reduction over `term(j)` for `j in 0..len`.
+#[inline]
+fn lane_reduce(len: usize, mut term: impl FnMut(usize) -> f32) -> f32 {
+    let chunks = len / LANES;
+    let mut s = [0.0f32; LANES];
+    for i in 0..chunks {
+        let j = i * LANES;
+        for l in 0..LANES {
+            s[l] += term(j + l);
+        }
+    }
+    let mut tail = 0.0f32;
+    for j in chunks * LANES..len {
+        tail += term(j);
+    }
+    hsum(&s) + tail
+}
+
+/// `Σ x` (softmax normalizer over exp'd rows).
+#[inline]
+pub fn reduce_sum(x: &[f32]) -> f32 {
+    if simd_enabled() {
+        lane_reduce(x.len(), |j| x[j])
+    } else {
+        x.iter().sum()
+    }
+}
+
+/// `Σ x²` (RMSNorm mean square).
+#[inline]
+pub fn reduce_sum_sq(x: &[f32]) -> f32 {
+    if simd_enabled() {
+        lane_reduce(x.len(), |j| x[j] * x[j])
+    } else {
+        x.iter().map(|v| v * v).sum()
+    }
+}
+
+/// `Σ (x − mu)²` (LayerNorm variance numerator).
+#[inline]
+pub fn reduce_sq_dev(x: &[f32], mu: f32) -> f32 {
+    if simd_enabled() {
+        lane_reduce(x.len(), |j| (x[j] - mu) * (x[j] - mu))
+    } else {
+        x.iter().map(|v| (v - mu) * (v - mu)).sum()
+    }
+}
+
+/// `Σ a·b` with a *sequential* scalar fallback (the nn.rs reduction
+/// shape; the matmul [`dot`] keeps its own 4-way scalar fallback).
+#[inline]
+pub fn reduce_dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if simd_enabled() {
+        lane_reduce(a.len(), |j| a[j] * b[j])
+    } else {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+}
+
+/// `Σ (a·b)·c` (norm backward mixed terms).
+#[inline]
+pub fn reduce_dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    if simd_enabled() {
+        lane_reduce(a.len(), |j| a[j] * b[j] * c[j])
+    } else {
+        let mut acc = 0.0f32;
+        for j in 0..a.len() {
+            acc += a[j] * b[j] * c[j];
+        }
+        acc
+    }
+}
+
+/// `Σ exp(x − shift)` (log-sum-exp inner sum).
+#[inline]
+pub fn reduce_sum_exp(x: &[f32], shift: f32) -> f32 {
+    if simd_enabled() {
+        lane_reduce(x.len(), |j| (x[j] - shift).exp())
+    } else {
+        x.iter().map(|v| (v - shift).exp()).sum()
+    }
+}
+
 // --------------------------------------------------------- threading
 
+/// Shareable base pointer for handing disjoint row chunks of one output
+/// buffer to pool workers.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
 /// Split `y` into contiguous row ranges and run `f(row_lo, row_hi,
-/// rows_slice)` on each, forking scoped workers when `rows *
-/// work_per_row` is large enough to amortize the spawns. The first
-/// chunk runs on the calling thread. Determinism: `f` computes each
-/// output element identically whatever the partition, so the thread
-/// count never changes results.
+/// rows_slice)` on each, dispatching ranges to the persistent worker
+/// pool when `rows * work_per_row` is large enough to be worth it.
+/// Determinism: the partition depends only on `(rows, threads)` and `f`
+/// computes each output element identically whatever the partition, so
+/// neither the thread count nor the dispatch mechanism (pool, scoped
+/// fallback, inline) ever changes results.
 fn parallel_rows<F>(y: &mut [f32], rows: usize, row_len: usize, work_per_row: usize, f: F)
 where
     F: Fn(usize, usize, &mut [f32]) + Sync,
 {
-    debug_assert_eq!(y.len(), rows * row_len);
+    // hard assert: the raw-pointer chunking below relies on this bound
+    // even in release builds (the unsafe block's SAFETY argument)
+    assert_eq!(y.len(), rows * row_len, "parallel_rows: output length mismatch");
     let total = rows.saturating_mul(work_per_row);
     let min_work = PAR_MIN_WORK.load(Ordering::Relaxed);
     let threads = num_threads().min(rows).min((total / min_work).max(1));
@@ -154,23 +500,232 @@ where
         return;
     }
     let chunk = rows.div_ceil(threads);
+    let n_chunks = rows.div_ceil(chunk);
+    let base = SendPtr(y.as_mut_ptr());
+    let run_chunk = move |ci: usize| {
+        let lo = ci * chunk;
+        let hi = rows.min(lo + chunk);
+        // SAFETY: chunk ranges [lo, hi) are disjoint across `ci` and lie
+        // inside `y`, so every invocation gets an exclusive sub-slice;
+        // both dispatchers guarantee all invocations finish before
+        // `parallel_rows` returns, bounding the borrow of `y`.
+        let rows_slice = unsafe {
+            std::slice::from_raw_parts_mut(base.0.add(lo * row_len), (hi - lo) * row_len)
+        };
+        f(lo, hi, rows_slice);
+    };
+    if pool_enabled() {
+        pool::run(n_chunks, &run_chunk);
+    } else {
+        scope_run(n_chunks, &run_chunk);
+    }
+}
+
+/// Per-call `thread::scope` dispatch — the pre-pool mechanism, kept as
+/// the `SHEARS_POOL=off` escape hatch, the pool's busy/nested fallback,
+/// and the bench baseline for the spawn-cost comparison. Bit-identical
+/// to the pool path (same partition, same per-chunk work).
+fn scope_run(n_chunks: usize, job: &(dyn Fn(usize) + Sync)) {
     std::thread::scope(|scope| {
-        let mut inline: Option<(usize, &mut [f32])> = None;
-        for (ci, slice) in y.chunks_mut(chunk * row_len).enumerate() {
-            let lo = ci * chunk;
-            if ci == 0 {
-                inline = Some((lo, slice));
-                continue;
-            }
-            let hi = lo + slice.len() / row_len;
-            let fr = &f;
-            scope.spawn(move || fr(lo, hi, slice));
+        for ci in 1..n_chunks {
+            scope.spawn(move || job(ci));
         }
-        if let Some((lo, slice)) = inline {
-            let hi = lo + slice.len() / row_len;
-            f(lo, hi, slice);
-        }
+        job(0);
     });
+}
+
+/// Persistent kernel worker pool: parked threads claim row-chunk
+/// indices of the current job over a shared counter, so small matmuls
+/// (M=1 serving decode, sub-adapter search eval) stop paying per-call
+/// `thread::scope` spawn cost.
+///
+/// Invariants:
+/// * one job in flight at a time (`DISPATCH`); a dispatch that finds
+///   the pool busy — kernels racing from another thread, or a nested
+///   dispatch — falls back to [`scope_run`] rather than blocking, so
+///   the pool can never deadlock against itself;
+/// * [`run`] does not return (not even by unwind) until every claimed
+///   chunk finished and all unclaimed chunks are retracted, so the
+///   type-erased borrow of the job closure never outlives the call;
+/// * [`set_num_threads`] never touches the pool. Sizing is read per
+///   dispatch and workers are only ever *added*, under the state lock;
+///   excess workers simply find no chunk to claim. Resizing between
+///   dispatches therefore cannot race a live job (pinned by
+///   `tests/pool_threads.rs`).
+mod pool {
+    use std::sync::{Condvar, Mutex, MutexGuard, OnceLock, TryLockError};
+
+    /// Borrow of the dispatcher's job closure with the lifetime erased;
+    /// dereferenced only between job publication and the completion
+    /// wait in [`DispatchGuard::drop`], while the closure is alive.
+    #[derive(Clone, Copy)]
+    struct JobRef(*const (dyn Fn(usize) + Sync + 'static));
+    unsafe impl Send for JobRef {}
+
+    struct State {
+        job: Option<JobRef>,
+        n_chunks: usize,
+        /// next chunk index to claim (work is claimed, not assigned, so
+        /// a slow worker never stalls the others)
+        next: usize,
+        /// chunks not yet completed (claimed or unclaimed)
+        pending: usize,
+        /// worker threads spawned so far (grow-only, ≤ 63)
+        workers: usize,
+        worker_panicked: bool,
+    }
+
+    struct Shared {
+        state: Mutex<State>,
+        /// workers park here between jobs
+        work_cv: Condvar,
+        /// the dispatcher parks here until `pending == 0`
+        done_cv: Condvar,
+    }
+
+    static POOL: OnceLock<Shared> = OnceLock::new();
+    /// Serializes dispatches; `try_lock` keeps concurrent callers on
+    /// the scoped fallback instead of queueing them.
+    static DISPATCH: Mutex<()> = Mutex::new(());
+
+    fn lock(m: &Mutex<State>) -> MutexGuard<'_, State> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Run `job(0..n_chunks)` across the pool plus the calling thread;
+    /// returns once every chunk completed.
+    pub(super) fn run(n_chunks: usize, job: &(dyn Fn(usize) + Sync)) {
+        let _dispatch = match DISPATCH.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                // pool busy (concurrent or nested kernels): scoped
+                // dispatch produces bit-identical results
+                super::scope_run(n_chunks, job);
+                return;
+            }
+        };
+        let shared = POOL.get_or_init(|| Shared {
+            state: Mutex::new(State {
+                job: None,
+                n_chunks: 0,
+                next: 0,
+                pending: 0,
+                workers: 0,
+                worker_panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        // SAFETY: lifetime erasure only — `DispatchGuard` below keeps
+        // this dispatch alive until no worker can still reach the
+        // pointer, and `DISPATCH` guarantees no other job replaces it.
+        let erased: *const (dyn Fn(usize) + Sync + 'static) = unsafe { std::mem::transmute(job) };
+        let job_ref = JobRef(erased);
+        {
+            let mut st = lock(&shared.state);
+            while st.workers + 1 < n_chunks {
+                // the calling thread works too, hence `+ 1`
+                match std::thread::Builder::new()
+                    .name("shears-kernel".into())
+                    .spawn(worker_loop)
+                {
+                    Ok(_) => st.workers += 1,
+                    // degraded environment: the caller just runs more
+                    // chunks itself — results are unaffected
+                    Err(_) => break,
+                }
+            }
+            st.job = Some(job_ref);
+            st.n_chunks = n_chunks;
+            st.next = 0;
+            st.pending = n_chunks;
+        }
+        shared.work_cv.notify_all();
+        let guard = DispatchGuard { shared };
+        // the dispatching thread claims chunks alongside the workers
+        loop {
+            let mut st = lock(&shared.state);
+            if st.next >= st.n_chunks {
+                break;
+            }
+            let ci = st.next;
+            st.next += 1;
+            drop(st);
+            // a claimed chunk must decrement `pending` even if it
+            // panics, or the guard's completion wait would deadlock
+            // during the unwind
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(ci)));
+            let mut st = lock(&shared.state);
+            st.pending -= 1;
+            if st.pending == 0 {
+                shared.done_cv.notify_all();
+            }
+            drop(st);
+            if let Err(payload) = result {
+                // the guard retracts unclaimed chunks and waits out
+                // in-flight workers before the unwind continues
+                std::panic::resume_unwind(payload);
+            }
+        }
+        // waits for in-flight worker chunks, then clears the job
+        drop(guard);
+    }
+
+    /// Retracts unclaimed chunks, waits out in-flight ones, and clears
+    /// the job — also on unwind, so a panicking chunk on the calling
+    /// thread cannot leave a worker holding the erased closure pointer.
+    struct DispatchGuard<'a> {
+        shared: &'a Shared,
+    }
+
+    impl Drop for DispatchGuard<'_> {
+        fn drop(&mut self) {
+            let mut st = lock(&self.shared.state);
+            st.pending -= st.n_chunks - st.next;
+            st.next = st.n_chunks;
+            while st.pending > 0 {
+                st = self.shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            let panicked = std::mem::replace(&mut st.worker_panicked, false);
+            drop(st);
+            if panicked && !std::thread::panicking() {
+                panic!("a kernel pool worker panicked (worker backtrace on stderr)");
+            }
+        }
+    }
+
+    fn worker_loop() {
+        let shared = POOL.get().expect("pool published before workers spawn");
+        let mut st = lock(&shared.state);
+        loop {
+            if let Some(job) = st.job {
+                if st.next < st.n_chunks {
+                    let ci = st.next;
+                    st.next += 1;
+                    drop(st);
+                    // SAFETY: the dispatcher cannot return before this
+                    // chunk decrements `pending`, so the closure behind
+                    // `job` is still alive here.
+                    let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        (unsafe { &*job.0 })(ci)
+                    }))
+                    .is_ok();
+                    st = lock(&shared.state);
+                    if !ok {
+                        st.worker_panicked = true;
+                    }
+                    st.pending -= 1;
+                    if st.pending == 0 {
+                        shared.done_cv.notify_all();
+                    }
+                    continue;
+                }
+            }
+            st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
 }
 
 // --------------------------------------------------- prepared weights
@@ -191,11 +746,27 @@ pub enum WeightRepr {
     },
 }
 
+/// Column-major companion of a CSR weight: per input feature (weight
+/// column) the output features holding a nonzero there, rows ascending.
+/// Drives the sparsity-aware backward `dx[·,k] = Σ_n dy[·,n]·W[n,k]`
+/// as a gather over column `k` ([`matmul_nn_prepared_into`]).
+pub struct CscView {
+    /// `k + 1` offsets into `rows`/`val`.
+    pub col_start: Vec<u32>,
+    /// weight-row (output-feature) index of each nonzero
+    pub rows: Vec<u32>,
+    /// nonzero values, aligned with `rows`
+    pub val: Vec<f32>,
+}
+
 /// A weight scanned **once** into the representation its sparsity
 /// merits. Built lazily per resident buffer (see
 /// `runtime::DeviceBuffer`) and reused by every subsequent matmul;
 /// rebuilt only when the owning buffer is re-uploaded (prune step,
-/// optimizer update — tracked by `ParamStore` generations).
+/// optimizer update — tracked by `ParamStore` generations). The CSC
+/// companion for the backward pass rides the same lifecycle: built on
+/// the first backward through the weight, dropped with the whole
+/// `PreparedWeight` on invalidation.
 pub struct PreparedWeight {
     /// output features (weight rows)
     pub n: usize,
@@ -204,16 +775,27 @@ pub struct PreparedWeight {
     /// nonzero count (sparsity accounting)
     pub nnz: usize,
     pub repr: WeightRepr,
+    /// lazily-built column-major view (CSR weights only)
+    csc: OnceCell<CscView>,
 }
 
 impl PreparedWeight {
     /// One O(n·k) scan deciding dense vs CSR and building the gather.
     pub fn build(w: &[f32], n: usize, k: usize) -> PreparedWeight {
+        Self::build_with_threshold(w, n, k, SPARSE_THRESHOLD)
+    }
+
+    /// [`PreparedWeight::build`] with an explicit zero-fraction
+    /// threshold — `0.0` forces the CSR/CSC path even for dense
+    /// weights (kernel-parity tests); any threshold above `1.0`
+    /// forces the dense path (at exactly `1.0` an all-zero weight
+    /// still goes CSR, since the comparison is strict).
+    pub fn build_with_threshold(w: &[f32], n: usize, k: usize, threshold: f64) -> PreparedWeight {
         debug_assert_eq!(w.len(), n * k);
         let zeros = w.iter().filter(|v| **v == 0.0).count();
         let nnz = w.len() - zeros;
-        if (zeros as f64) < SPARSE_THRESHOLD * (w.len().max(1) as f64) {
-            return PreparedWeight { n, k, nnz, repr: WeightRepr::Dense };
+        if (zeros as f64) < threshold * (w.len().max(1) as f64) {
+            return PreparedWeight { n, k, nnz, repr: WeightRepr::Dense, csc: OnceCell::new() };
         }
         let mut row_start = Vec::with_capacity(n + 1);
         let mut idx = Vec::with_capacity(nnz);
@@ -228,7 +810,13 @@ impl PreparedWeight {
             }
             row_start.push(idx.len() as u32);
         }
-        PreparedWeight { n, k, nnz, repr: WeightRepr::Csr { row_start, idx, val } }
+        PreparedWeight {
+            n,
+            k,
+            nnz,
+            repr: WeightRepr::Csr { row_start, idx, val },
+            csc: OnceCell::new(),
+        }
     }
 
     pub fn is_sparse(&self) -> bool {
@@ -238,6 +826,43 @@ impl PreparedWeight {
     /// Fraction of nonzero entries.
     pub fn density(&self) -> f64 {
         self.nnz as f64 / (self.n * self.k).max(1) as f64
+    }
+
+    /// The cached column-major view (`None` for dense weights). Built
+    /// by counting sort from the CSR arrays on first call — once per
+    /// buffer upload, not once per backward matmul.
+    pub fn csc(&self) -> Option<&CscView> {
+        let WeightRepr::Csr { row_start, idx, val } = &self.repr else {
+            return None;
+        };
+        Some(self.csc.get_or_init(|| {
+            let mut col_start = vec![0u32; self.k + 1];
+            for ki in idx {
+                col_start[*ki as usize + 1] += 1;
+            }
+            for ki in 0..self.k {
+                col_start[ki + 1] += col_start[ki];
+            }
+            let mut cursor = col_start.clone();
+            let mut rows = vec![0u32; idx.len()];
+            let mut cval = vec![0.0f32; idx.len()];
+            // CSR rows visited in ascending `ni` ⇒ rows ascending per column
+            for ni in 0..self.n {
+                let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
+                for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
+                    let c = &mut cursor[*ki as usize];
+                    rows[*c as usize] = ni as u32;
+                    cval[*c as usize] = *wv;
+                    *c += 1;
+                }
+            }
+            CscView { col_start, rows, val: cval }
+        }))
+    }
+
+    /// Whether the CSC companion has been materialized (tests/metrics).
+    pub fn csc_built(&self) -> bool {
+        self.csc.get().is_some()
     }
 }
 
@@ -272,9 +897,8 @@ fn nt_rows(x: &[f32], w: &[f32], k: usize, n: usize, lo: usize, hi: usize, y: &m
 }
 
 /// CSR rows `[lo, hi)` of `y = x @ wᵀ`, streaming each compressed
-/// weight row across a block of x-rows. Per element: one sequential
-/// accumulator over the nonzeros in column order (the exact order the
-/// original per-call gather used).
+/// weight row across a block of x-rows. Per element: one [`gather_dot`]
+/// over the nonzeros in column order, whatever the block shape.
 #[allow(clippy::too_many_arguments)]
 fn csr_rows(
     x: &[f32],
@@ -290,37 +914,69 @@ fn csr_rows(
     let mut mi = lo;
     while mi < hi {
         let ybase = (mi - lo) * n;
-        let rows = (hi - mi).min(MR);
-        if rows == MR {
+        if mi + MR <= hi {
             let x0 = &x[mi * k..(mi + 1) * k];
             let x1 = &x[(mi + 1) * k..(mi + 2) * k];
             let x2 = &x[(mi + 2) * k..(mi + 3) * k];
             let x3 = &x[(mi + 3) * k..(mi + 4) * k];
             for ni in 0..n {
                 let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
-                let mut acc = [0.0f32; 4];
-                for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
-                    let ki = *ki as usize;
-                    acc[0] += x0[ki] * wv;
-                    acc[1] += x1[ki] * wv;
-                    acc[2] += x2[ki] * wv;
-                    acc[3] += x3[ki] * wv;
-                }
-                y[ybase + ni] = acc[0];
-                y[ybase + n + ni] = acc[1];
-                y[ybase + 2 * n + ni] = acc[2];
-                y[ybase + 3 * n + ni] = acc[3];
+                let a = gather_dot4(x0, x1, x2, x3, &idx[s..e], &val[s..e]);
+                y[ybase + ni] = a[0];
+                y[ybase + n + ni] = a[1];
+                y[ybase + 2 * n + ni] = a[2];
+                y[ybase + 3 * n + ni] = a[3];
             }
             mi += MR;
         } else {
             let xr = &x[mi * k..(mi + 1) * k];
             for (ni, yv) in y[ybase..ybase + n].iter_mut().enumerate() {
                 let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
-                let mut acc = 0.0f32;
-                for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
-                    acc += xr[*ki as usize] * wv;
-                }
-                *yv = acc;
+                *yv = gather_dot(xr, &idx[s..e], &val[s..e]);
+            }
+            mi += 1;
+        }
+    }
+}
+
+/// CSC rows `[lo, hi)` of `dx = dy @ w`: element `(mi, ki)` gathers
+/// column `ki`'s nonzeros against the `dy` row — the same gather-dot
+/// the CSR forward uses, so per-element accumulation order is
+/// partition- and block-invariant.
+#[allow(clippy::too_many_arguments)]
+fn csc_rows(
+    dy: &[f32],
+    col_start: &[u32],
+    rows: &[u32],
+    val: &[f32],
+    n: usize,
+    k: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f32],
+) {
+    let mut mi = lo;
+    while mi < hi {
+        let ybase = (mi - lo) * k;
+        if mi + MR <= hi {
+            let d0 = &dy[mi * n..(mi + 1) * n];
+            let d1 = &dy[(mi + 1) * n..(mi + 2) * n];
+            let d2 = &dy[(mi + 2) * n..(mi + 3) * n];
+            let d3 = &dy[(mi + 3) * n..(mi + 4) * n];
+            for ki in 0..k {
+                let (s, e) = (col_start[ki] as usize, col_start[ki + 1] as usize);
+                let a = gather_dot4(d0, d1, d2, d3, &rows[s..e], &val[s..e]);
+                y[ybase + ki] = a[0];
+                y[ybase + k + ki] = a[1];
+                y[ybase + 2 * k + ki] = a[2];
+                y[ybase + 3 * k + ki] = a[3];
+            }
+            mi += MR;
+        } else {
+            let dr = &dy[mi * n..(mi + 1) * n];
+            for (ki, yv) in y[ybase..ybase + k].iter_mut().enumerate() {
+                let (s, e) = (col_start[ki] as usize, col_start[ki + 1] as usize);
+                *yv = gather_dot(dr, &rows[s..e], &val[s..e]);
             }
             mi += 1;
         }
@@ -373,11 +1029,7 @@ pub fn matmul_nt_prepared_into(
                     for (j, yv) in yc.iter_mut().enumerate() {
                         let ni = lo + j;
                         let (s, e) = (row_start[ni] as usize, row_start[ni + 1] as usize);
-                        let mut acc = 0.0f32;
-                        for (ki, wv) in idx[s..e].iter().zip(&val[s..e]) {
-                            acc += x[*ki as usize] * wv;
-                        }
-                        *yv = acc;
+                        *yv = gather_dot(x, &idx[s..e], &val[s..e]);
                     }
                 });
             } else {
@@ -422,10 +1074,7 @@ pub fn matmul_nn_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, y: &mu
                 if *av == 0.0 {
                     continue;
                 }
-                let br = &b[ki * n..(ki + 1) * n];
-                for (yv, bv) in yr.iter_mut().zip(br) {
-                    *yv += av * bv;
-                }
+                axpy(yr, *av, &b[ki * n..(ki + 1) * n]);
             }
         }
     });
@@ -436,6 +1085,39 @@ pub fn matmul_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     let mut y = vec![0.0f32; m * n];
     matmul_nn_into(a, b, m, k, n, &mut y);
     y
+}
+
+/// `dx[M,K] = dy[M,N] @ w[N,K]` through a prepared representation — the
+/// backward companion of [`matmul_nt_prepared_into`] (`w` row-major
+/// `[n, k]`, the same buffer `pw` was built from). Sparse weights route
+/// through the cached [`CscView`] and skip the pruned zeros; dense
+/// weights take the threaded axpy kernel. `dx` is overwritten.
+pub fn matmul_nn_prepared_into(
+    dy: &[f32],
+    w: &[f32],
+    pw: &PreparedWeight,
+    m: usize,
+    dx: &mut [f32],
+) {
+    let (n, k) = (pw.n, pw.k);
+    debug_assert_eq!(dy.len(), m * n);
+    debug_assert_eq!(dx.len(), m * k);
+    match pw.csc() {
+        None => matmul_nn_into(dy, w, m, n, k, dx),
+        Some(csc) => {
+            let (cs, rs, vs) = (&csc.col_start, &csc.rows, &csc.val);
+            parallel_rows(dx, m, k, pw.nnz.max(1), |lo, hi, yc| {
+                csc_rows(dy, cs, rs, vs, n, k, lo, hi, yc)
+            });
+        }
+    }
+}
+
+/// `dx[M,K] = dy[M,N] @ w[N,K]` through a prepared representation.
+pub fn matmul_nn_prepared(dy: &[f32], w: &[f32], pw: &PreparedWeight, m: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; m * pw.k];
+    matmul_nn_prepared_into(dy, w, pw, m, &mut dx);
+    dx
 }
 
 /// `y[M,N] = a[K,M]ᵀ @ b[K,N]` (gradient shape: `dW = dyᵀ @ x`),
@@ -455,9 +1137,7 @@ pub fn matmul_tn_into(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, y: &mu
                     continue;
                 }
                 let yr = &mut yc[(mi - lo) * n..(mi - lo + 1) * n];
-                for (yv, bv) in yr.iter_mut().zip(br) {
-                    *yv += av * bv;
-                }
+                axpy(yr, av, br);
             }
         }
     });
@@ -470,19 +1150,48 @@ pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32>
     y
 }
 
-/// `y += x`, elementwise.
+/// `y += x`, elementwise. Lane-chunked when SIMD is on; elementwise
+/// updates are order-independent per element, so both modes produce
+/// bit-identical results (unlike the gated reductions).
 pub fn add_assign(y: &mut [f32], x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yv, xv) in y.iter_mut().zip(x) {
-        *yv += xv;
+    if simd_enabled() {
+        let mut yc = y.chunks_exact_mut(LANES);
+        let mut xc = x.chunks_exact(LANES);
+        for (yv, xv) in yc.by_ref().zip(xc.by_ref()) {
+            for l in 0..LANES {
+                yv[l] += xv[l];
+            }
+        }
+        for (yv, xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *yv += xv;
+        }
+    } else {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += xv;
+        }
     }
 }
 
-/// `y += s * x`, elementwise.
+/// `y += s * x`, elementwise. Like [`add_assign`], bit-identical across
+/// SIMD modes.
 pub fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
     debug_assert_eq!(y.len(), x.len());
-    for (yv, xv) in y.iter_mut().zip(x) {
-        *yv += s * xv;
+    if simd_enabled() {
+        let mut yc = y.chunks_exact_mut(LANES);
+        let mut xc = x.chunks_exact(LANES);
+        for (yv, xv) in yc.by_ref().zip(xc.by_ref()) {
+            for l in 0..LANES {
+                yv[l] += s * xv[l];
+            }
+        }
+        for (yv, xv) in yc.into_remainder().iter_mut().zip(xc.remainder()) {
+            *yv += s * xv;
+        }
+    } else {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += s * xv;
+        }
     }
 }
 
@@ -496,6 +1205,18 @@ mod tests {
             for ni in 0..n {
                 for ki in 0..k {
                     y[mi * n + ni] += x[mi * k + ki] * w[ni * k + ki];
+                }
+            }
+        }
+        y
+    }
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut y = vec![0.0; m * n];
+        for mi in 0..m {
+            for ki in 0..k {
+                for ni in 0..n {
+                    y[mi * n + ni] += a[mi * k + ki] * b[ki * n + ni];
                 }
             }
         }
@@ -623,6 +1344,12 @@ mod tests {
         assert_eq!(dot(&a, &b), 30.0);
         assert_eq!(dot(&a[..1], &b[..1]), 2.0);
         assert_eq!(dot(&[], &[]), 0.0);
+        // exercise the laned chunk + tail split explicitly
+        let long: Vec<f32> = (0..19).map(|i| i as f32 * 0.5).collect();
+        let ones = vec![1.0f32; 19];
+        let want: f32 = long.iter().sum();
+        assert!((dot_lanes(&long, &ones) - want).abs() < 1e-4);
+        assert!((dot_scalar(&long, &ones) - want).abs() < 1e-4);
     }
 
     #[test]
@@ -636,5 +1363,109 @@ mod tests {
         assert_eq!(pw.nnz, 0);
         let y = matmul_nt_auto(&x, &w, m, k, n);
         assert!(y.iter().all(|v| *v == 0.0));
+        // and the CSC backward of an all-zero weight is all zeros
+        let dy: Vec<f32> = (0..m * n).map(|i| i as f32).collect();
+        let dx = matmul_nn_prepared(&dy, &w, &pw, m);
+        assert!(dx.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn csc_view_is_a_faithful_transpose_index() {
+        let (n, k) = (5, 9);
+        let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.31).sin()).collect();
+        for (i, wv) in w.iter_mut().enumerate() {
+            if i % 3 != 1 {
+                *wv = 0.0;
+            }
+        }
+        let pw = PreparedWeight::build(&w, n, k);
+        assert!(pw.is_sparse());
+        assert!(!pw.csc_built());
+        let csc = pw.csc().expect("sparse weight has a csc view");
+        assert!(pw.csc_built());
+        assert_eq!(csc.col_start.len(), k + 1);
+        assert_eq!(csc.rows.len(), pw.nnz);
+        // every (row, col, val) triple of the original weight, exactly once
+        let mut seen = 0usize;
+        for ki in 0..k {
+            let (s, e) = (csc.col_start[ki] as usize, csc.col_start[ki + 1] as usize);
+            let mut prev = None;
+            for (ni, wv) in csc.rows[s..e].iter().zip(&csc.val[s..e]) {
+                assert_eq!(*wv, w[*ni as usize * k + ki], "value mismatch at ({ni}, {ki})");
+                if let Some(p) = prev {
+                    assert!(p < *ni, "rows not ascending in col {ki}");
+                }
+                prev = Some(*ni);
+                seen += 1;
+            }
+        }
+        assert_eq!(seen, pw.nnz);
+        // repeated access hands back the same cached view
+        assert!(std::ptr::eq(csc, pw.csc().unwrap()));
+    }
+
+    #[test]
+    fn nn_prepared_matches_dense_backward_at_every_sparsity() {
+        let (m, n, k) = (6, 8, 10); // dy [m, n] @ w [n, k]
+        let dy: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.17).sin()).collect();
+        for keep_mod in [1usize, 2, 5, 100] {
+            let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.23).cos()).collect();
+            for (i, wv) in w.iter_mut().enumerate() {
+                if i % keep_mod != 0 {
+                    *wv = 0.0;
+                }
+            }
+            let pw = PreparedWeight::build(&w, n, k);
+            let reference = naive_nn(&dy, &w, m, n, k);
+            let dx = matmul_nn_prepared(&dy, &w, &pw, m);
+            for (i, (a, b)) in dx.iter().zip(&reference).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "keep_mod {keep_mod} sparse={} dx[{i}]: {a} vs {b}",
+                    pw.is_sparse()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forced_threshold_routes_dense_weights_through_csr_and_csc() {
+        let (m, n, k) = (4, 6, 7);
+        let w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.13).cos()).collect();
+        let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.29).sin()).collect();
+        let dy: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.41).sin()).collect();
+        let pw = PreparedWeight::build_with_threshold(&w, n, k, 0.0);
+        assert!(pw.is_sparse(), "threshold 0 must force CSR");
+        assert_eq!(pw.nnz, n * k);
+        let mut y = vec![0.0f32; m * n];
+        matmul_nt_prepared_into(&x, &w, &pw, m, &mut y);
+        for (a, b) in y.iter().zip(&naive_nt(&x, &w, m, k, n)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        let dx = matmul_nn_prepared(&dy, &w, &pw, m);
+        for (a, b) in dx.iter().zip(&naive_nn(&dy, &w, m, n, k)) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn reduce_helpers_match_naive_sums() {
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 * 0.7).sin()).collect();
+        let y: Vec<f32> = (0..37).map(|i| (i as f32 * 0.3).cos()).collect();
+        let z: Vec<f32> = (0..37).map(|i| 1.0 + 0.01 * i as f32).collect();
+        let naive_sum: f32 = x.iter().sum();
+        let naive_sq: f32 = x.iter().map(|v| v * v).sum();
+        let mu = naive_sum / 37.0;
+        let naive_dev: f32 = x.iter().map(|v| (v - mu) * (v - mu)).sum();
+        let naive_dot: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let naive_dot3: f32 = (0..37).map(|j| x[j] * y[j] * z[j]).sum();
+        let naive_exp: f32 = x.iter().map(|v| (v - 0.5).exp()).sum();
+        assert!((reduce_sum(&x) - naive_sum).abs() < 1e-4);
+        assert!((reduce_sum_sq(&x) - naive_sq).abs() < 1e-4);
+        assert!((reduce_sq_dev(&x, mu) - naive_dev).abs() < 1e-4);
+        assert!((reduce_dot(&x, &y) - naive_dot).abs() < 1e-4);
+        assert!((reduce_dot3(&x, &y, &z) - naive_dot3).abs() < 1e-4);
+        assert!((reduce_sum_exp(&x, 0.5) - naive_exp).abs() < 1e-3);
+        assert_eq!(reduce_sum(&[]), 0.0);
     }
 }

@@ -7,8 +7,35 @@
 //! reusable scratch arena ([`model`], [`scratch`]), and the Wanda /
 //! magnitude / SparseGPT-lite prune ops ([`prune`]).
 //!
+//! # Kernel architecture
+//!
+//! The hot path is layered so each concern stays independent and every
+//! layer is deterministic on its own:
+//!
+//! 1. **Element kernels** (`linalg`): dense dots, CSR/CSC gather dots,
+//!    and the `reduce_*` row reductions, each in two gated forms — an
+//!    8-lane SIMD shape (explicit `f32x8`-style accumulators with a
+//!    scalar tail and a fixed combine tree, which LLVM autovectorizes)
+//!    and the pre-SIMD scalar form (`SHEARS_SIMD=off`). Within a mode,
+//!    blocked and unblocked paths agree **bitwise** per element.
+//! 2. **Representation** (`linalg::PreparedWeight`): one scan per
+//!    resident buffer picks register-blocked dense vs CSR (> 30%
+//!    zeros); sparse weights lazily add a CSC (column-major) companion
+//!    on the first backward, so `dx = dy @ W` skips zeros too.
+//!    Invalidation is by `ParamStore` generation via buffer re-upload.
+//! 3. **Dispatch** (`linalg` worker pool): contiguous output-row ranges
+//!    are claimed by persistent parked workers (`SHEARS_NUM_THREADS`
+//!    sized, `SHEARS_POOL=off` falls back to per-call `thread::scope`).
+//!    Partitioning never splits the reduction inside an element, so
+//!    results are bit-identical at any thread count and under either
+//!    dispatch mechanism.
+//! 4. **Memory** (`scratch`): all intermediates come from a
+//!    capacity-bucketed arena owned by the backend; steady-state
+//!    forward/train steps allocate nothing per matmul.
+//!
 //! Numerics are pinned against the L1 reference (`kernels/ref.py`) by
-//! the golden-fixture suite in `rust/tests/parity.rs`; the backend that
+//! the golden-fixture suite in `rust/tests/parity.rs` (including the
+//! forced-sparse CSR/CSC paths against `jax.grad`); the backend that
 //! marshals manifest entry points onto these kernels lives in
 //! [`crate::runtime::native`].
 

@@ -15,8 +15,12 @@
 //! buffer comes from a [`Scratch`] arena so steady-state forward/train
 //! steps perform no per-matmul heap allocation (only the entry-point
 //! boundary tensors — logits, updated params — still allocate). The
-//! `forward`/`loss_and_grads` wrappers keep the original signatures for
-//! fixture tests and host-tensor callers.
+//! backward pass is sparsity-aware too: `dx = dy @ W` for a frozen
+//! pruned weight routes through the cached CSC companion of the same
+//! `PreparedWeight` ([`Model::matw_bwd`]), so a 50%-sparse base weight
+//! costs half the multiply-accumulates in training as well as in the
+//! forward. The `forward`/`loss_and_grads` wrappers keep the original
+//! signatures for fixture tests and host-tensor callers.
 //!
 //! The backward formulas are validated two ways: golden fixtures from
 //! `python/compile/fixtures.py` pin the numerics against `jax.grad` in
@@ -291,6 +295,28 @@ impl<'a> Model<'a> {
         Ok(())
     }
 
+    /// `dx = dy @ w` for weight `name` (`[out_dim, in_dim]` row-major):
+    /// the backward companion of [`Model::matw`]. Resident pruned
+    /// weights take the cached CSC gather (skipping the zeros); dense
+    /// or unprepared host weights take the dense axpy kernel, which is
+    /// what the per-call path always did.
+    fn matw_bwd(
+        &self,
+        name: &str,
+        dy: &[f32],
+        m: usize,
+        out_dim: usize,
+        in_dim: usize,
+        dx: &mut [f32],
+    ) -> Result<()> {
+        let w = self.p.f(name)?;
+        match self.p.prepared(name, out_dim, in_dim)? {
+            Some(pw) => linalg::matmul_nn_prepared_into(dy, w, &pw, m, dx),
+            None => linalg::matmul_nn_into(dy, w, m, out_dim, in_dim, dx),
+        }
+        Ok(())
+    }
+
     fn norm_fwd(
         &self,
         sc: &Scratch,
@@ -409,9 +435,8 @@ impl<'a> Model<'a> {
         grads: &mut Grads,
         mode: GradMode,
     ) -> Result<Vec<f32>> {
-        let w = self.p.f(wname)?;
         let mut dx = sc.take(m * in_dim);
-        linalg::matmul_nn_into(dy, w, m, out_dim, in_dim, &mut dx);
+        self.matw_bwd(wname, dy, m, out_dim, in_dim, &mut dx)?;
         if let Some(proj) = lora_p.get(wname) {
             let r = self.dims.r;
             let idx = self.dims.mods.iter().position(|mo| mo == wname).unwrap();
@@ -853,14 +878,13 @@ impl<'a> Model<'a> {
         sc.give(std::mem::take(&mut fwd.logits));
         let mut grads = Grads::default();
 
-        let lm_head = self.p.f("lm_head")?;
         if mode == GradMode::Base {
             let mut dw = sc.take(v * d);
             linalg::matmul_tn_into(&dlogits, &t_final, m, v, d, &mut dw);
             grads.add(sc, "lm_head", dw);
         }
         let mut dt_final = sc.take(m * d);
-        linalg::matmul_nn_into(&dlogits, lm_head, m, v, d, &mut dt_final);
+        self.matw_bwd("lm_head", &dlogits, m, v, d, &mut dt_final)?;
         sc.give(dlogits);
         let mut dh = self.norm_bwd(
             sc,

@@ -9,9 +9,11 @@
 //! out) still allocates, because those tensors escape to the caller.
 //!
 //! Interior mutability keeps the borrow story simple: the model layer
-//! passes `&Scratch` everywhere and the pool lives in a `RefCell` (the
-//! native backend is single-threaded at this level; kernel workers
-//! never touch the arena).
+//! passes `&Scratch` everywhere and the pool lives in a `RefCell`. The
+//! native backend is single-threaded at this level; the persistent
+//! kernel worker pool (`linalg`) only ever writes into row chunks of
+//! buffers the model layer already took — workers never touch the
+//! arena itself, so it needs no synchronization.
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;

@@ -19,12 +19,15 @@
 //! [`DeviceBuffer`] abstracts the §Perf buffer-residency lever: on PJRT
 //! an uploaded buffer lives on device and skips per-step literal
 //! round-trips; on native it pins a host copy **plus the weight's
-//! prepared sparse/dense structure** ([`NativeBuffer`]), so eval/search/
-//! serve loops over thousands of sub-adapter configs never re-derive
-//! the CSR gather of a frozen pruned weight. [`ResidentParams`] keeps a
-//! whole `ParamStore` resident, re-uploading only weights whose
-//! generation changed (prune step, optimizer update) — cached structure
-//! is invalidated exactly when a weight actually changes.
+//! prepared sparse/dense structure** ([`NativeBuffer`]) — the CSR
+//! forward gather *and* its lazily-built CSC companion for the
+//! backward `dx = dy @ W` — so eval/search/serve loops over thousands
+//! of sub-adapter configs, and training loops over a frozen pruned
+//! base, never re-derive either view. [`ResidentParams`] keeps a whole
+//! `ParamStore` resident, re-uploading only weights whose generation
+//! changed (prune step, optimizer update) — cached structure (CSC
+//! included, it lives inside the same `PreparedWeight`) is invalidated
+//! exactly when a weight actually changes.
 
 pub mod native;
 #[cfg(feature = "xla")]

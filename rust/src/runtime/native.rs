@@ -12,11 +12,16 @@
 //! Two pieces of cross-call state make this the fast path:
 //!
 //! * each [`ExecInput`] may carry the prepared-weight cache cell of its
-//!   resident buffer, so the CSR/dense structure of a frozen weight is
-//!   derived once per upload rather than once per matmul;
+//!   resident buffer, so the CSR/dense structure of a frozen weight —
+//!   and, for train entries, the CSC companion its backward gathers
+//!   through — is derived once per upload rather than once per matmul;
 //! * the backend owns a [`Scratch`] arena threaded through the model,
 //!   so steady-state forward/train steps reuse every intermediate
 //!   buffer instead of reallocating it.
+//!
+//! The kernels themselves dispatch over the persistent worker pool in
+//! `ops::linalg` (sized by `SHEARS_NUM_THREADS`); execution here stays
+//! single-threaded at the entry-point level.
 
 use crate::model::{EntryPoint, Manifest, ModelConfig, PruneOpSpec};
 use crate::ops::model::{Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};

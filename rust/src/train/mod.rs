@@ -10,18 +10,20 @@
 //!
 //! [`TrainSession`] implements the §Perf buffer-residency lever: inputs
 //! that never change across steps (the frozen, sparsified base weights —
-//! the bulk of the model) are uploaded once via [`DeviceBuffer`]; only
-//! the small trainable tensors round-trip per step.
+//! the bulk of the model) ride a [`ResidentParams`] store synced by
+//! `ParamStore` generation, so the backend keeps their prepared
+//! CSR/CSC structure across steps and [`TrainSession::sync`] refreshes
+//! exactly the weights a prune/edit touched; only the small trainable
+//! tensors round-trip per step.
 
 use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
-use crate::runtime::{Arg, DeviceBuffer, Exe, ResidentParams, Runtime};
+use crate::runtime::{Arg, Exe, ResidentParams, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
-use std::collections::HashMap;
 
 /// Cosine learning-rate schedule with linear warmup.
 pub fn lr_at(step: usize, total: usize, peak: f64, warmup: usize) -> f64 {
@@ -71,12 +73,19 @@ impl TrainLog {
 }
 
 /// A live training session for one entry point: frozen inputs resident on
-/// device, trainable state round-tripping per step.
+/// device (kept fresh by `ParamStore` generation via
+/// [`TrainSession::sync`]), trainable state round-tripping per step.
+///
+/// On the native backend the resident frozen weights carry their
+/// prepared CSR/CSC structure across steps, so a pruned base weight's
+/// forward *and* backward matmuls skip the zeros on every step without
+/// re-deriving anything.
 pub struct TrainSession<'rt> {
     rt: &'rt Runtime,
     exe: Exe,
     entry: EntryPoint,
-    frozen_bufs: HashMap<String, DeviceBuffer>,
+    /// resident copies of the frozen store, keyed by generation
+    frozen: ResidentParams,
     /// names (in output order) of the trainable params this entry updates
     trainable_names: Vec<String>,
 }
@@ -92,12 +101,6 @@ impl<'rt> TrainSession<'rt> {
     ) -> Result<Self> {
         let entry = cfg.entry(entry_name)?.clone();
         let exe = rt.load(&entry.file)?;
-        let mut frozen_bufs = HashMap::new();
-        for i in &entry.inputs {
-            if frozen.contains(&i.name) {
-                frozen_bufs.insert(i.name.clone(), rt.upload(frozen.get(&i.name)?)?);
-            }
-        }
         let trainable_names = entry
             .outputs
             .iter()
@@ -106,11 +109,22 @@ impl<'rt> TrainSession<'rt> {
             })
             .map(|o| o.name.clone())
             .collect();
-        Ok(TrainSession { rt, exe, entry, frozen_bufs, trainable_names })
+        let mut session =
+            TrainSession { rt, exe, entry, frozen: ResidentParams::new(), trainable_names };
+        session.sync(frozen)?;
+        Ok(session)
     }
 
     pub fn trainable_names(&self) -> &[String] {
         &self.trainable_names
+    }
+
+    /// Re-upload frozen inputs whose `ParamStore` generation changed
+    /// (prune step, external weight edit) — cached prepared sparse /
+    /// CSC structure rebuilds from the new values on first use. Cheap
+    /// no-op when nothing changed.
+    pub fn sync(&mut self, frozen: &ParamStore) -> Result<()> {
+        self.frozen.sync(self.rt, frozen)
     }
 
     /// One fused train step. Updates `trainable`, `m`, `v` in place and
@@ -132,7 +146,7 @@ impl<'rt> TrainSession<'rt> {
         let mut args: Vec<Arg> = Vec::with_capacity(self.entry.inputs.len());
         for i in &self.entry.inputs {
             let name = i.name.as_str();
-            if let Some(buf) = self.frozen_bufs.get(name) {
+            if let Some(buf) = self.frozen.get(name) {
                 args.push(Arg::Buf(buf));
                 continue;
             }

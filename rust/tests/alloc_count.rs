@@ -67,6 +67,9 @@ use shears::ops::Scratch;
 fn prepared_matmuls_are_zero_alloc_single_threaded() {
     let _guard = serial();
     linalg::set_num_threads(1);
+    // resolve the env-var gates up front: the first call reads the
+    // environment (which may allocate); later calls are an atomic load
+    let _ = (linalg::simd_enabled(), linalg::pool_enabled());
     let (m, k, n) = (24, 33, 17);
     let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.13).sin()).collect();
     let dense: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.29).cos()).collect();
@@ -96,6 +99,19 @@ fn prepared_matmuls_are_zero_alloc_single_threaded() {
             pw.is_sparse()
         );
     }
+    // CSC backward: building the view allocates once (per weight, not
+    // per matmul) — after that the gather kernel is zero-alloc too
+    let dy: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.11).sin()).collect();
+    let mut dx = vec![0.0f32; m * k];
+    linalg::matmul_nn_prepared_into(&dy, &sparse, &pw_sparse, m, &mut dx); // warms the CSC cell
+    assert!(pw_sparse.csc_built());
+    let (allocs, bytes, ()) = counted(|| {
+        for _ in 0..10 {
+            linalg::matmul_nn_prepared_into(&dy, &sparse, &pw_sparse, m, &mut dx);
+        }
+    });
+    assert_eq!((allocs, bytes), (0, 0), "warm CSC backward allocated");
+
     // accumulation kernels into caller buffers: also zero-alloc
     let b_nn: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.07).sin()).collect();
     let mut y_nn = vec![0.0f32; m * n];

@@ -10,9 +10,11 @@
 
 use shears::model::{make_config, ConfigSpec};
 use shears::ops::model::{lora_linear, lora_linear_bwd};
-use shears::ops::{nn, prune, Dims, Extra, GradMode, Model, NamedTensors};
+use shears::ops::{nn, prune, Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};
+use shears::ops::{linalg::PreparedWeight, Grads};
 use shears::tensor::HostTensor;
 use shears::util::json::Json;
+use std::rc::Rc;
 
 fn load_fixture(name: &str) -> Json {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -271,9 +273,105 @@ fn model_parity(file: &str) {
     }
 }
 
+/// The resident-path gather kernels against the same golden fixtures:
+/// every 2-D weight gets a prepared cell **force-built sparse**
+/// (threshold 0), so the CSR gather produces every forward matmul and
+/// the cached CSC view produces every backward `dx = dy @ W` — if
+/// either compressed view dropped, duplicated, or misplaced a single
+/// entry, the `jax.grad` comparison below would catch it.
+fn model_parity_prepared(file: &str) {
+    let fx = Fixture::load(file);
+    // force-sparse prepared cells for every 2-D f32 input (only names
+    // the model resolves as matmul weights are ever consulted)
+    let cells: Vec<(String, PreparedCell)> = fx
+        .inputs
+        .iter()
+        .filter(|(_, t)| t.is_f32() && t.shape.len() == 2)
+        .map(|(name, t)| {
+            let (n, k) = (t.shape[0], t.shape[1]);
+            let pw = PreparedWeight::build_with_threshold(t.f32s(), n, k, 0.0);
+            assert!(pw.is_sparse(), "{name}: threshold 0 must force CSR");
+            let cell = PreparedCell::default();
+            *cell.borrow_mut() = Some(Rc::new(pw));
+            (name.clone(), cell)
+        })
+        .collect();
+    let mut named = NamedTensors::new();
+    for (k, t) in &fx.inputs {
+        match cells.iter().find(|(n, _)| n == k) {
+            Some((_, cell)) => named.insert_prepared(k, t, cell),
+            None => named.insert(k, t),
+        }
+    }
+    let x = fx.x().i32s();
+    let y = &fx.inputs.iter().find(|(k, _)| k == "y").unwrap().1;
+    let lm = named.f("loss_mask").unwrap();
+    let dims = Dims::from_config(&fx.cfg, 2);
+    let rank_mask = named.f("rank_mask").unwrap();
+
+    let check_grads = |grads: &Grads, specs: &[shears::model::ParamSpec], tag: &str| {
+        for p in specs {
+            let ours = grads.map.get(&p.name).unwrap_or_else(|| panic!("no grad for {}", p.name));
+            assert_close(
+                &format!("{tag}.{}", p.name),
+                ours,
+                &fx.out(&format!("{tag}.{}", p.name)),
+                5e-4,
+                2e-3,
+            );
+        }
+    };
+
+    // adapter forward + NLS gradients through CSR forward / CSC backward
+    let adapted = Model {
+        dims: dims.clone(),
+        p: &named,
+        use_adapters: true,
+        rank_mask: Some(rank_mask),
+        extra: Extra::None,
+    };
+    let fwd = adapted.forward(x, false, false).unwrap();
+    assert_close("logits_adapters/prepared", &fwd.logits, &fx.out("logits_adapters"), 5e-4, 1e-4);
+    let (loss, grads) = adapted.loss_and_grads(x, y.i32s(), lm, GradMode::Adapters).unwrap();
+    let want_loss = fx.out("loss_nls")[0];
+    assert!((loss - want_loss).abs() < 1e-4, "nls loss {loss} vs {want_loss}");
+    check_grads(&grads, &fx.cfg.adapter_params, "grad");
+
+    // full-FT gradients: embed scatter + every matmul backward via CSC
+    let base = Model {
+        dims: dims.clone(),
+        p: &named,
+        use_adapters: false,
+        rank_mask: None,
+        extra: Extra::None,
+    };
+    let (loss_b, grads_b) = base.loss_and_grads(x, y.i32s(), lm, GradMode::Base).unwrap();
+    let want_loss = fx.out("loss_full")[0];
+    assert!((loss_b - want_loss).abs() < 1e-4, "full loss {loss_b} vs {want_loss}");
+    check_grads(&grads_b, &fx.cfg.base_params, "grad_base");
+
+    // the backward actually went through the cached CSC views
+    let (name, cell) = cells
+        .iter()
+        .find(|(n, _)| n.contains("attn.q"))
+        .expect("an attention weight has a cell");
+    let pw = cell.borrow().clone().unwrap();
+    assert!(pw.csc_built(), "{name}: backward never materialized the CSC view");
+}
+
 #[test]
 fn llama_model_matches_jax_reference() {
     model_parity("model_llama.json");
+}
+
+#[test]
+fn llama_prepared_csr_forward_csc_backward_match_jax_reference() {
+    model_parity_prepared("model_llama.json");
+}
+
+#[test]
+fn mpt_prepared_csr_forward_csc_backward_match_jax_reference() {
+    model_parity_prepared("model_mpt.json");
 }
 
 #[test]

@@ -1,0 +1,126 @@
+//! Persistent-pool edge cases: resizing the thread count between
+//! dispatches, resizing *while* other threads are mid-workload, and the
+//! `SHEARS_POOL=off` scoped fallback must all be bit-identical — the
+//! pool and the thread count are pure wall-clock levers.
+//!
+//! Every test here asserts invariance under thread-count and dispatch
+//! changes, so the tests may safely run concurrently (and flip the
+//! globals under each other).
+
+use shears::ops::linalg::{self, PreparedWeight};
+
+/// Deterministic operands: x `[m, k]`, w `[n, k]` with ~half zeros (so
+/// the prepared paths go CSR/CSC), plus a dy `[m, n]` for the backward.
+fn operands(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.17).sin()).collect();
+    let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.29).cos()).collect();
+    for (i, wv) in w.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *wv = 0.0;
+        }
+    }
+    let dy: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.41).sin()).collect();
+    (x, w, dy)
+}
+
+/// Every kernel family once: dense nt, prepared (CSR) nt, the M=1
+/// serving shape, nn, tn, and the prepared (CSC) backward.
+fn all_kernels(
+    x: &[f32],
+    w: &[f32],
+    dy: &[f32],
+    pw: &PreparedWeight,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let mut nt_p = vec![0.0f32; m * n];
+    linalg::matmul_nt_prepared_into(x, w, pw, m, &mut nt_p);
+    let mut m1 = vec![0.0f32; n];
+    linalg::matmul_nt_prepared_into(&x[..k], w, pw, 1, &mut m1);
+    vec![
+        linalg::matmul_nt(x, w, m, k, n),
+        nt_p,
+        m1,
+        linalg::matmul_nn(dy, w, m, n, k), // w reinterpreted as [n, k] row-major
+        linalg::matmul_tn(dy, x, m, n, k), // dW-shaped product
+        linalg::matmul_nn_prepared(dy, w, pw, m),
+    ]
+}
+
+#[test]
+fn resize_between_dispatches_is_bit_identical() {
+    linalg::set_par_min_work(1); // fork even at test sizes
+    let pool_was = linalg::pool_enabled();
+    let (m, k, n) = (9, 33, 17);
+    let (x, w, dy) = operands(m, k, n);
+    let pw = PreparedWeight::build(&w, n, k);
+    assert!(pw.is_sparse());
+
+    linalg::set_num_threads(1);
+    let reference = all_kernels(&x, &w, &dy, &pw, m, k, n);
+    // resize across {1, 2, 7} (and back) mid-workload: every dispatch
+    // re-reads the count, the pool only grows, results never move
+    for threads in [2usize, 7, 1, 7, 2, 1, 7] {
+        linalg::set_num_threads(threads);
+        assert_eq!(
+            all_kernels(&x, &w, &dy, &pw, m, k, n),
+            reference,
+            "results moved at {threads} threads"
+        );
+    }
+    // the scoped fallback must agree bitwise with the pool too
+    linalg::set_pool_enabled(false);
+    for threads in [1usize, 2, 7] {
+        linalg::set_num_threads(threads);
+        assert_eq!(
+            all_kernels(&x, &w, &dy, &pw, m, k, n),
+            reference,
+            "scoped dispatch moved results at {threads} threads"
+        );
+    }
+    linalg::set_pool_enabled(pool_was);
+    linalg::set_num_threads(0);
+    linalg::set_par_min_work(0);
+}
+
+#[test]
+fn concurrent_dispatch_and_resize_stress() {
+    // several threads hammer the kernels while the main thread resizes
+    // the pool under them: no deadlock, no torn output, every result
+    // bit-identical to the single-threaded reference. (Concurrent
+    // dispatches exercise the pool's busy fallback as well.)
+    linalg::set_par_min_work(1);
+    let (m, k, n) = (13, 24, 19);
+    let (x, w, dy) = operands(m, k, n);
+
+    linalg::set_num_threads(1);
+    let pw = PreparedWeight::build(&w, n, k);
+    assert!(pw.is_sparse());
+    let reference = all_kernels(&x, &w, &dy, &pw, m, k, n);
+
+    std::thread::scope(|scope| {
+        for _ in 0..3 {
+            scope.spawn(|| {
+                // PreparedWeight is deliberately single-thread-owned
+                // (interior OnceCell, like the Rc cells it lives in),
+                // so each racing thread builds its own — the build is
+                // deterministic, so results must still match exactly
+                let pw = PreparedWeight::build(&w, n, k);
+                for _ in 0..25 {
+                    assert_eq!(
+                        all_kernels(&x, &w, &dy, &pw, m, k, n),
+                        reference,
+                        "kernel result moved under a concurrent resize"
+                    );
+                }
+            });
+        }
+        for round in 0..40 {
+            linalg::set_num_threads([1, 2, 7, 3, 5][round % 5]);
+            std::thread::yield_now();
+        }
+    });
+    linalg::set_num_threads(0);
+    linalg::set_par_min_work(0);
+}

@@ -9,11 +9,12 @@
 use shears::data::batch::{Batcher, MaskMode};
 use shears::data::{dataset, Task, Vocab};
 use shears::model::{ModelConfig, ParamStore};
+use shears::nls::SearchSpace;
 use shears::ops::{linalg, nn};
 use shears::pruning::{self, Method};
 use shears::runtime::Runtime;
 use shears::tensor::HostTensor;
-use shears::train::{forward_logits, ForwardSession};
+use shears::train::{forward_logits, ForwardSession, TrainSession};
 use shears::util::rng::Rng;
 
 const CFG: &str = "tiny-llama";
@@ -134,6 +135,123 @@ fn resident_and_host_paths_agree_at_every_sparsity() {
         let again = session.logits(&batch.x, None).unwrap();
         assert_eq!(resident.f32s(), again.f32s(), "cached forward not deterministic");
     }
+}
+
+/// Uncached reference for one fused train step: every input a per-call
+/// host tensor, so the backward's `dx = dy @ W` re-derives everything
+/// and cannot serve a stale CSC view. Returns the updated trainable
+/// store (adapters for `train_step_nls`).
+#[allow(clippy::too_many_arguments)]
+fn host_train_step(
+    rt: &Runtime,
+    cfg: &ModelConfig,
+    entry_name: &str,
+    base: &ParamStore,
+    trainable: &ParamStore,
+    m: &ParamStore,
+    v: &ParamStore,
+    batch: &shears::data::batch::Batch,
+    rank_mask: &HostTensor,
+) -> ParamStore {
+    let entry = cfg.entry(entry_name).unwrap();
+    let exe = rt.load(&entry.file).unwrap();
+    let step_t = HostTensor::scalar_f32(1.0);
+    let lr_t = HostTensor::scalar_f32(1e-3);
+    let inputs: Vec<&HostTensor> = entry
+        .inputs
+        .iter()
+        .map(|i| {
+            let name = i.name.as_str();
+            if let Some(rest) = name.strip_prefix("m.") {
+                return m.get(rest).unwrap();
+            }
+            if let Some(rest) = name.strip_prefix("v.") {
+                return v.get(rest).unwrap();
+            }
+            match name {
+                "step" => &step_t,
+                "lr" => &lr_t,
+                "x" => &batch.x,
+                "y" => &batch.y,
+                "loss_mask" => &batch.loss_mask,
+                "rank_mask" => rank_mask,
+                _ => base.get(name).or_else(|_| trainable.get(name)).unwrap(),
+            }
+        })
+        .collect();
+    let outs = rt.run(&exe, &inputs).unwrap();
+    let mut updated = trainable.clone();
+    for (spec, t) in entry.outputs.iter().zip(outs) {
+        if spec.name != "loss" && !spec.name.starts_with("m.") && !spec.name.starts_with("v.") {
+            updated.insert(&spec.name, t);
+        }
+    }
+    updated
+}
+
+#[test]
+fn csc_backward_rides_the_generation_invalidation() {
+    // the training counterpart of the forward tests above: a frozen
+    // pruned base's backward (`dx = dy @ W` through the cached CSC)
+    // must match the uncached host path, and must be rebuilt when the
+    // base changes — driven end-to-end through TrainSession::sync
+    let (rt, cfg, mut base, _) = setup();
+    let manifest = rt.manifest().unwrap();
+    let vocab = Vocab::new(cfg.vocab);
+    let ds = dataset(Task::BoolqSim, &vocab, 8, cfg.batch_train, cfg.seq_len);
+    let batch = Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly)
+        .epoch()
+        .into_iter()
+        .next()
+        .unwrap();
+    pruning::prune(&rt, &manifest, &cfg, &mut base, Method::Magnitude, 0.5, None).unwrap();
+
+    let mut rng = Rng::new(23);
+    let adapters0 = ParamStore::init_adapters(&cfg, &mut rng);
+    let m0 = ParamStore::zeros_like(&cfg.adapter_params);
+    let v0 = ParamStore::zeros_like(&cfg.adapter_params);
+    let mask = SearchSpace::from_config(&cfg).full_mask();
+
+    let mut session = TrainSession::new(&rt, &cfg, "train_step_nls", &base).unwrap();
+    let step_resident = |session: &TrainSession| -> ParamStore {
+        let mut a = adapters0.clone();
+        let mut m = m0.clone();
+        let mut v = v0.clone();
+        session.step(&mut a, &mut m, &mut v, None, &batch, 1, 1e-3, Some(&mask)).unwrap();
+        a
+    };
+
+    // 1. resident (CSC-cached) step == uncached host step
+    let res1 = step_resident(&session);
+    let host1 =
+        host_train_step(&rt, &cfg, "train_step_nls", &base, &adapters0, &m0, &v0, &batch, &mask);
+    for name in session.trainable_names() {
+        res1.get(name)
+            .unwrap()
+            .approx_eq(host1.get(name).unwrap(), 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("{name}: resident vs host (stale CSC?): {e}"));
+    }
+
+    // 2. re-prune the base deeper → generations bump → sync re-uploads
+    // → the CSC rebuilds from the new values
+    pruning::prune(&rt, &manifest, &cfg, &mut base, Method::Magnitude, 0.7, None).unwrap();
+    session.sync(&base).unwrap();
+    let res2 = step_resident(&session);
+    let host2 =
+        host_train_step(&rt, &cfg, "train_step_nls", &base, &adapters0, &m0, &v0, &batch, &mask);
+    let mut some_changed = false;
+    for name in session.trainable_names() {
+        res2.get(name)
+            .unwrap()
+            .approx_eq(host2.get(name).unwrap(), 1e-5, 1e-5)
+            .unwrap_or_else(|e| panic!("{name}: post-prune resident vs host (stale CSC?): {e}"));
+        some_changed |=
+            res1.get(name).unwrap().approx_eq(res2.get(name).unwrap(), 0.0, 1e-6).is_err();
+    }
+    assert!(
+        some_changed,
+        "re-pruning changed no adapter update — the backward never saw the new base"
+    );
 }
 
 #[test]

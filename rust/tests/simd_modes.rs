@@ -1,0 +1,162 @@
+//! `SHEARS_SIMD` escape hatch: the 8-lane kernels and the pre-SIMD
+//! scalar kernels are both always compiled in; each mode is bit-stable
+//! and thread-invariant on its own, elementwise kernels agree bitwise
+//! across modes, and reductions agree to f32 round-off.
+//!
+//! These tests flip the process-global SIMD mode, which *does* change
+//! reduction bits — so they live in their own test binary and
+//! serialize on a local mutex (no other test in this binary computes
+//! kernels outside the lock).
+
+use shears::ops::linalg::{self, PreparedWeight};
+use shears::ops::nn;
+use std::sync::Mutex;
+
+static SIMD_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SIMD_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn operands(m: usize, k: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.23).sin()).collect();
+    let mut w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.19).cos()).collect();
+    for (i, wv) in w.iter_mut().enumerate() {
+        if i % 2 == 0 {
+            *wv = 0.0;
+        }
+    }
+    let dy: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.31).cos()).collect();
+    (x, w, dy)
+}
+
+fn assert_close(tag: &str, a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (p, q)) in a.iter().zip(b).enumerate() {
+        let t = tol * (1.0 + q.abs());
+        assert!((p - q).abs() <= t, "{tag}[{i}]: simd {p} vs scalar {q}");
+    }
+}
+
+#[test]
+fn simd_and_scalar_kernels_agree_to_roundoff() {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    // odd shapes: lane tails, block tails, M=1, everything
+    for (m, k, n) in [(1usize, 13usize, 11usize), (5, 33, 7), (9, 8, 16), (6, 70, 19)] {
+        let (x, w, dy) = operands(m, k, n);
+        let pw = PreparedWeight::build(&w, n, k);
+
+        linalg::set_simd_enabled(true);
+        let nt_on = linalg::matmul_nt(&x, &w, m, k, n);
+        let auto_on = linalg::matmul_nt_auto(&x, &w, m, k, n);
+        let bwd_on = linalg::matmul_nn_prepared(&dy, &w, &pw, m);
+
+        linalg::set_simd_enabled(false);
+        let nt_off = linalg::matmul_nt(&x, &w, m, k, n);
+        let auto_off = linalg::matmul_nt_auto(&x, &w, m, k, n);
+        // fresh prepared weight: the CSC cache itself is mode-free, but
+        // build one per mode to mirror real invalidation behavior
+        let pw_off = PreparedWeight::build(&w, n, k);
+        let bwd_off = linalg::matmul_nn_prepared(&dy, &w, &pw_off, m);
+
+        assert_close(&format!("nt {m}x{k}x{n}"), &nt_on, &nt_off, 1e-5);
+        assert_close(&format!("auto {m}x{k}x{n}"), &auto_on, &auto_off, 1e-5);
+        assert_close(&format!("nn_prepared {m}x{k}x{n}"), &bwd_on, &bwd_off, 1e-5);
+    }
+    linalg::set_simd_enabled(was);
+}
+
+#[test]
+fn elementwise_kernels_are_bit_identical_across_modes() {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    let (m, k, n) = (7, 21, 13);
+    let (x, w, dy) = operands(m, k, n);
+
+    // nn/tn accumulate per element in ki order in both modes — the lane
+    // split only groups output columns, so bits must not move
+    linalg::set_simd_enabled(true);
+    let nn_on = linalg::matmul_nn(&dy, &w, m, n, k);
+    let tn_on = linalg::matmul_tn(&dy, &x, m, n, k);
+    let mut ax_on = x.clone();
+    linalg::axpy(&mut ax_on, 0.37, &w[..x.len()]);
+    linalg::set_simd_enabled(false);
+    let nn_off = linalg::matmul_nn(&dy, &w, m, n, k);
+    let tn_off = linalg::matmul_tn(&dy, &x, m, n, k);
+    let mut ax_off = x.clone();
+    linalg::axpy(&mut ax_off, 0.37, &w[..x.len()]);
+    linalg::set_simd_enabled(was);
+
+    assert_eq!(nn_on, nn_off, "matmul_nn bits moved across SIMD modes");
+    assert_eq!(tn_on, tn_off, "matmul_tn bits moved across SIMD modes");
+    assert_eq!(ax_on, ax_off, "axpy bits moved across SIMD modes");
+}
+
+#[test]
+fn scalar_mode_is_thread_invariant_bitwise() {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    linalg::set_simd_enabled(false);
+    linalg::set_par_min_work(1);
+    let (m, k, n) = (9, 17, 12);
+    let (x, w, dy) = operands(m, k, n);
+    let pw = PreparedWeight::build(&w, n, k);
+    linalg::set_num_threads(1);
+    let nt1 = linalg::matmul_nt(&x, &w, m, k, n);
+    let bwd1 = linalg::matmul_nn_prepared(&dy, &w, &pw, m);
+    for threads in [2usize, 7] {
+        linalg::set_num_threads(threads);
+        assert_eq!(nt1, linalg::matmul_nt(&x, &w, m, k, n), "scalar nt @{threads}t");
+        assert_eq!(
+            bwd1,
+            linalg::matmul_nn_prepared(&dy, &w, &pw, m),
+            "scalar csc backward @{threads}t"
+        );
+    }
+    linalg::set_num_threads(0);
+    linalg::set_par_min_work(0);
+    linalg::set_simd_enabled(was);
+}
+
+#[test]
+fn nn_reductions_agree_across_modes() {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    let (m, d, vocab) = (3usize, 37usize, 29usize);
+    let x: Vec<f32> = (0..m * d).map(|i| (i as f32 * 0.7).sin()).collect();
+    let g: Vec<f32> = (0..d).map(|i| 1.0 + 0.02 * i as f32).collect();
+    let b: Vec<f32> = (0..d).map(|i| 0.01 * i as f32).collect();
+    let dy: Vec<f32> = (0..m * d).map(|i| (i as f32 * 0.3).cos()).collect();
+    let logits: Vec<f32> = (0..m * vocab).map(|i| (i as f32 * 0.13).sin() * 3.0).collect();
+    let y: Vec<i32> = (0..m).map(|i| (i * 7 % vocab) as i32).collect();
+    let mask = vec![1.0f32; m];
+
+    let run = || {
+        let (ry, rinv) = nn::rmsnorm(&x, &g, m, d);
+        let (rdx, rdg) = nn::rmsnorm_bwd(&dy, &x, &g, &rinv, m, d);
+        let (ly, xhat, linv) = nn::layernorm(&x, &g, &b, m, d);
+        let (ldx, ldg, ldb) = nn::layernorm_bwd(&dy, &g, &xhat, &linv, m, d);
+        let (loss, dlogits) = nn::softmax_xent(&logits, &y, &mask, m, vocab);
+        (ry, rdx, rdg, ly, ldx, ldg, ldb, vec![loss], dlogits)
+    };
+    linalg::set_simd_enabled(true);
+    let on = run();
+    linalg::set_simd_enabled(false);
+    let off = run();
+    linalg::set_simd_enabled(was);
+
+    for (tag, a, b) in [
+        ("rmsnorm.y", &on.0, &off.0),
+        ("rmsnorm.dx", &on.1, &off.1),
+        ("rmsnorm.dg", &on.2, &off.2),
+        ("layernorm.y", &on.3, &off.3),
+        ("layernorm.dx", &on.4, &off.4),
+        ("layernorm.dg", &on.5, &off.5),
+        ("layernorm.db", &on.6, &off.6),
+        ("xent.loss", &on.7, &off.7),
+        ("xent.dlogits", &on.8, &off.8),
+    ] {
+        assert_close(tag, a, b, 1e-5);
+    }
+}
