@@ -55,8 +55,13 @@ fn main() -> anyhow::Result<()> {
 
     println!("== serving {} math prompts (sparse base, unmerged adapters) ==", requests.len());
     let (_resp, m) = decoder.serve(&requests)?;
+    let path = if m.decode_steps > 0 {
+        format!("KV decode ({} prefills + {} steps)", m.prefills, m.decode_steps)
+    } else {
+        "wave re-forward".to_string()
+    };
     println!(
-        "wave batching : {:>7.1} tok/s  occupancy {:>4.1}/{}  p50 {:>6.1} ms  p99 {:>6.1} ms",
+        "batched {path} : {:>7.1} tok/s  occupancy {:>4.1}/{}  p50 {:>6.1} ms  p99 {:>6.1} ms",
         m.tokens_per_sec, m.mean_batch_occupancy, cfg.batch_eval, m.p50_latency_ms, m.p99_latency_ms
     );
 

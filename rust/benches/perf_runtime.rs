@@ -4,7 +4,9 @@
 //! multi-threaded), kernel-engine comparisons (SIMD+pool vs the
 //! pre-engine scalar+scope kernels, pool-vs-scope at the M=1 serving
 //! shape, dense vs CSC sparse-aware backward), train-step latency on
-//! both engines, prune-op latency, and the whole-model prune wall —
+//! both engines, the serving comparison (KV-cached incremental decode
+//! vs the full re-forward wave decoder, greedy sequences asserted
+//! identical), prune-op latency, and the whole-model prune wall —
 //! the numbers behind the paper's cost claims ("pruning < 5 minutes",
 //! "a pair of GPU hours" → seconds/minutes here) and this repo's
 //! kernel-engine speedups.
@@ -266,6 +268,64 @@ fn main() {
         delta as f64
     });
 
+    // ---- serving: KV-cached incremental decode vs full re-forward ----
+    println!("\n== serve: KV decode vs re-forward ({backend}, {max_threads} threads) ==");
+    linalg::set_num_threads(max_threads);
+    let decoder = shears::serve::Decoder::new(
+        &b.rt,
+        cfg,
+        "forward_eval",
+        vec![&base, &adapters],
+        Some(mask.clone()),
+    )
+    .unwrap();
+    let mut srng = Rng::new(17);
+    let n_req = if fast { 8 } else { 2 * cfg.batch_eval };
+    let max_new = if fast { 4 } else { 12 };
+    let sreqs: Vec<shears::serve::GenRequest> = (0..n_req)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut srng, cfg.seq_len);
+            shears::serve::GenRequest {
+                prompt: ex.tokens[..ex.answer_start.min(cfg.seq_len / 2)].to_vec(),
+                max_new_tokens: max_new,
+            }
+        })
+        .collect();
+    let s_iters = if fast { 2 } else { 8 };
+    let (ref_resp, ref_m) = decoder.serve_reforward(&sreqs).unwrap();
+    let re_stats = time("serve: full re-forward / wave", warmup, s_iters, || {
+        decoder.serve_reforward(&sreqs).unwrap();
+    });
+    re_stats.print();
+    let ref_tok_s = ref_m.generated_tokens as f64 / (re_stats.mean_ms / 1e3);
+    let serve_decode = if b.rt.supports_decode() {
+        let (inc_resp, inc_m) = decoder.serve_incremental(&sreqs).unwrap();
+        // acceptance: the KV path must pick identical greedy tokens
+        for (a, c) in inc_resp.iter().zip(&ref_resp) {
+            assert_eq!(a.tokens, c.tokens, "decode path diverged from re-forward");
+        }
+        let inc_stats = time("serve: incremental (prefill+decode)", warmup, s_iters, || {
+            decoder.serve_incremental(&sreqs).unwrap();
+        });
+        inc_stats.print();
+        // steady-state allocation check: repeat serve calls reuse every
+        // decode-step buffer from the warm arena
+        if let Some(before) = b.rt.scratch_stats() {
+            decoder.serve_incremental(&sreqs).unwrap();
+            let after = b.rt.scratch_stats().unwrap();
+            assert_eq!(
+                after.0 - before.0,
+                0,
+                "warm incremental serve still allocates arena buffers"
+            );
+        }
+        let inc_tok_s = inc_m.generated_tokens as f64 / (inc_stats.mean_ms / 1e3);
+        Some((inc_tok_s, inc_m))
+    } else {
+        println!("  (no incremental decode on this backend — re-forward only)");
+        None
+    };
+
     // ---- prune op latency ----
     let (n, k) = (cfg.prunable[0].shape[0], cfg.prunable[0].shape[1]);
     let op = b.manifest.prune_op("wanda", n, k).unwrap();
@@ -351,6 +411,23 @@ fn main() {
             bwd_dense.mean_ms / bwd_csc.mean_ms
         ),
     ]);
+    table.row(vec![
+        "serve re-forward".into(),
+        format!("{ref_tok_s:.0} tok/s ({:.2} ms / queue)", re_stats.mean_ms),
+    ]);
+    if let Some((inc_tok_s, inc_m)) = &serve_decode {
+        table.row(vec![
+            "serve KV decode".into(),
+            format!(
+                "{inc_tok_s:.0} tok/s ({} prefills + {} steps, occ {:.1})",
+                inc_m.prefills, inc_m.decode_steps, inc_m.mean_batch_occupancy
+            ),
+        ]);
+        table.row(vec![
+            "serve decode speedup".into(),
+            format!("{:.2}x", inc_tok_s / ref_tok_s),
+        ]);
+    }
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
     if let Some(mp) = miss_per_eval {
@@ -402,6 +479,20 @@ fn main() {
             ("speedup_csc_bwd", num(bwd_dense.mean_ms / bwd_csc.mean_ms)),
         ]),
     ));
+    let mut serve_obj = vec![
+        ("requests", num(n_req as f64)),
+        ("new_tokens_per_queue", num(ref_m.generated_tokens as f64)),
+        ("reforward_tok_per_s", num(ref_tok_s)),
+        ("reforward_ms", num(re_stats.mean_ms)),
+    ];
+    if let Some((inc_tok_s, inc_m)) = &serve_decode {
+        serve_obj.push(("decode_tok_per_s", num(*inc_tok_s)));
+        serve_obj.push(("speedup_decode", num(inc_tok_s / ref_tok_s)));
+        serve_obj.push(("prefills", num(inc_m.prefills as f64)));
+        serve_obj.push(("decode_steps", num(inc_m.decode_steps as f64)));
+        serve_obj.push(("mean_occupancy", num(inc_m.mean_batch_occupancy)));
+    }
+    json.push(("serve", obj(serve_obj)));
     json.push((
         "prune",
         obj(vec![

@@ -297,5 +297,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         metrics.p50_latency_ms,
         metrics.p99_latency_ms
     );
+    if metrics.decode_steps > 0 {
+        println!(
+            "decode path: {} prefills + {} KV-cached steps ({} truncated prompts)",
+            metrics.prefills, metrics.decode_steps, metrics.truncated_prompts
+        );
+    }
     Ok(())
 }

@@ -32,6 +32,12 @@
 //! 4. **Memory** (`scratch`): all intermediates come from a
 //!    capacity-bucketed arena owned by the backend; steady-state
 //!    forward/train steps allocate nothing per matmul.
+//! 5. **Serving** (`model::DecodeModel` + `model::DecodeState`): the
+//!    KV-cached incremental decode path — a name-free binding of a
+//!    forward entry over per-slot cache columns, mirroring the batch
+//!    forward kernel-for-kernel so prefill + one-token steps reproduce
+//!    the padded re-forward logits at O(1) cost per token (warm steps
+//!    are allocation-free).
 //!
 //! Numerics are pinned against the L1 reference (`kernels/ref.py`) by
 //! the golden-fixture suite in `rust/tests/parity.rs` (including the
@@ -47,7 +53,7 @@ pub mod scratch;
 
 pub use linalg::PreparedWeight;
 pub use model::{
-    lora_linear, lora_linear_bwd, Dims, Extra, Forward, GradMode, Grads, Model, NamedTensors,
-    PreparedCell,
+    lora_linear, lora_linear_bwd, DecodeModel, DecodeState, Dims, Extra, Forward, GradMode, Grads,
+    Model, NamedTensors, PreparedCell,
 };
 pub use scratch::Scratch;

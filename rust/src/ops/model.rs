@@ -33,7 +33,7 @@ use crate::ops::linalg::{self, add_assign, axpy, PreparedWeight};
 use crate::ops::nn;
 use crate::ops::scratch::Scratch;
 use crate::tensor::HostTensor;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -482,14 +482,7 @@ impl<'a> Model<'a> {
         let (s, half) = (self.dims.s, self.dims.dh / 2);
         let mut cos = sc.take(s * half);
         let mut sin = sc.take(s * half);
-        for si in 0..s {
-            for j in 0..half {
-                let freq = 1.0 / 10000.0f32.powf(j as f32 / half as f32);
-                let ang = si as f32 * freq;
-                cos[si * half + j] = ang.cos();
-                sin[si * half + j] = ang.sin();
-            }
-        }
+        fill_rope_tables(&mut cos, &mut sin, s, half);
         (cos, sin)
     }
 
@@ -550,7 +543,7 @@ impl<'a> Model<'a> {
     }
 
     fn alibi_slope(&self, h: usize) -> f32 {
-        2.0f32.powf(-8.0 * (h + 1) as f32 / self.dims.nh as f32)
+        alibi_slope(h, self.dims.nh)
     }
 
     /// Record a calibration site: `(Σx² per feature, Gram XᵀX)`. These
@@ -1219,6 +1212,641 @@ fn plen_of(use_prefix: bool, plen: usize) -> usize {
         plen
     } else {
         0
+    }
+}
+
+/// ALiBi slope of head `h` out of `nh` — one definition shared by the
+/// batch forward and the decode path, like [`fill_rope_tables`].
+fn alibi_slope(h: usize, nh: usize) -> f32 {
+    2.0f32.powf(-8.0 * (h + 1) as f32 / nh as f32)
+}
+
+/// Fill RoPE rotation tables of shape `[s, half]`. The one definition
+/// shared by the batch forward ([`Model::rope_tables`]) and the decode
+/// cache ([`DecodeState::new`]), so positional parity between the two
+/// paths is structural, not a convention.
+fn fill_rope_tables(cos: &mut [f32], sin: &mut [f32], s: usize, half: usize) {
+    for si in 0..s {
+        for j in 0..half {
+            let freq = 1.0 / 10000.0f32.powf(j as f32 / half as f32);
+            let ang = si as f32 * freq;
+            cos[si * half + j] = ang.cos();
+            sin[si * half + j] = ang.sin();
+        }
+    }
+}
+
+// ------------------------------------------------- KV-cached decoding
+//
+// The serving-path engine: instead of re-running a full `[B, S]` padded
+// forward per generated token, [`DecodeModel::prefill`] runs the prompt
+// once (populating per-layer K/V caches) and [`DecodeModel::decode_step`]
+// advances every active sequence by one token — batched `M = active`
+// matmuls through the frozen sparse base and the unmerged LoRA adapters,
+// RoPE/ALiBi applied at each row's absolute position, attention reduced
+// against the cached K/V with the same `linalg::dot` SIMD reductions the
+// full forward uses.
+//
+// Numerical contract: every kernel call and accumulation loop mirrors
+// [`Model::forward_scratch`] exactly — score rows are padded to the full
+// `seq_len` window with `-1e30` before `softmax_row` so the softmax
+// reduction sees the same lane layout, and matmul rows are
+// block/partition-invariant — so prefill + decode steps reproduce the
+// padded re-forward logits for the same positions (greedy decode picks
+// identical tokens).
+//
+// [`DecodeModel`] is a *name-free binding*: weight slices, cached
+// [`PreparedWeight`]s, LoRA A/B slices, and rank-mask windows are
+// resolved from [`NamedTensors`] once at bind time, so the steady-state
+// step does no hashing, no `format!`, and — over a warm [`Scratch`]
+// arena — no heap allocation at all (`rust/tests/alloc_count.rs` pins
+// this). Rebind after weights change (`ForwardSession::sync`).
+
+/// Per-layer, per-slot K/V cache columns for incremental decoding.
+///
+/// Layout per layer: `[slots, heads, cap, head_dim]` row-major, where
+/// `cap == seq_len` of the model configuration. Each batch slot owns a
+/// column of the cache plus its own length, so continuous-batching
+/// admission resets exactly the joining slot ([`DecodeState::reset`] /
+/// the implicit reset in [`DecodeModel::prefill`]) and never disturbs
+/// in-flight neighbors.
+pub struct DecodeState {
+    slots: usize,
+    cap: usize,
+    nh: usize,
+    dh: usize,
+    n_layers: usize,
+    llama: bool,
+    /// per layer `[slots * nh * cap * dh]` roped key rows
+    kc: Vec<Vec<f32>>,
+    /// per layer `[slots * nh * cap * dh]` value rows
+    vc: Vec<Vec<f32>>,
+    /// tokens cached per slot
+    len: Vec<usize>,
+    /// RoPE tables `[cap, dh/2]` (empty for ALiBi archs)
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl DecodeState {
+    /// Allocate caches for `slots` concurrent sequences of `cfg`'s
+    /// window length. This is the one allocating call of the decode
+    /// path; steps reuse it for the decoder's lifetime.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> DecodeState {
+        let (nh, cap) = (cfg.n_heads, cfg.seq_len);
+        let dh = cfg.d_model / nh;
+        let llama = cfg.arch == "llama";
+        let per_layer = slots * nh * cap * dh;
+        let (cos, sin) = if llama {
+            let half = dh / 2;
+            let mut cos = vec![0.0f32; cap * half];
+            let mut sin = vec![0.0f32; cap * half];
+            fill_rope_tables(&mut cos, &mut sin, cap, half);
+            (cos, sin)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        DecodeState {
+            slots,
+            cap,
+            nh,
+            dh,
+            n_layers: cfg.n_layers,
+            llama,
+            kc: (0..cfg.n_layers).map(|_| vec![0.0f32; per_layer]).collect(),
+            vc: (0..cfg.n_layers).map(|_| vec![0.0f32; per_layer]).collect(),
+            len: vec![0; slots],
+            cos,
+            sin,
+        }
+    }
+
+    /// Drop `slot`'s cached context (admission of a new request).
+    pub fn reset(&mut self, slot: usize) {
+        self.len[slot] = 0;
+    }
+
+    /// Tokens currently cached for `slot`.
+    pub fn cached_len(&self, slot: usize) -> usize {
+        self.len[slot]
+    }
+
+    /// Concurrent sequence capacity.
+    pub fn n_slots(&self) -> usize {
+        self.slots
+    }
+
+    /// Context-window capacity per slot (the config's `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+/// LoRA adapter binding of one linear: A/B weight slices plus this
+/// module's window of the elastic rank mask.
+struct BoundLora<'a> {
+    a: &'a [f32],
+    b: &'a [f32],
+    mask: &'a [f32],
+}
+
+/// One linear of the decode path, resolved at bind time: weight slice,
+/// the resident buffer's cached [`PreparedWeight`] (CSR for pruned
+/// weights), and the unmerged adapter if this module carries one.
+struct BoundLinear<'a> {
+    w: &'a [f32],
+    pw: Option<Rc<PreparedWeight>>,
+    out: usize,
+    inp: usize,
+    lora: Option<BoundLora<'a>>,
+}
+
+impl BoundLinear<'_> {
+    /// `y = x @ Wᵀ (+ scale·((x@Aᵀ)·mask)@Bᵀ)` over `m` rows — the
+    /// decode-path mirror of [`Model::lin_fwd`] (same kernels in the
+    /// same order), minus the backward tape.
+    fn fwd(&self, sc: &Scratch, x: &[f32], m: usize, scale: f32, y: &mut [f32]) {
+        match &self.pw {
+            Some(pw) => linalg::matmul_nt_prepared_into(x, self.w, pw, m, y),
+            None => linalg::matmul_nt_auto_into(x, self.w, m, self.inp, self.out, y),
+        }
+        if let Some(l) = &self.lora {
+            let r = l.mask.len();
+            let mut proj = sc.take(m * r);
+            linalg::matmul_nt_into(x, l.a, m, self.inp, r, &mut proj);
+            for row in 0..m {
+                for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
+                    *pv *= l.mask[j];
+                }
+            }
+            let mut yl = sc.take(m * self.out);
+            linalg::matmul_nt_into(&proj, l.b, m, r, self.out, &mut yl);
+            axpy(y, scale, &yl);
+            sc.give(yl);
+            sc.give(proj);
+        }
+    }
+}
+
+/// One decoder block's bound weights.
+struct BoundLayer<'a> {
+    norm1_g: &'a [f32],
+    norm1_b: Option<&'a [f32]>,
+    q: BoundLinear<'a>,
+    k: BoundLinear<'a>,
+    v: BoundLinear<'a>,
+    o: BoundLinear<'a>,
+    norm2_g: &'a [f32],
+    norm2_b: Option<&'a [f32]>,
+    gate: Option<BoundLinear<'a>>,
+    up: BoundLinear<'a>,
+    down: BoundLinear<'a>,
+}
+
+/// Which (slot, position) each row of a decode batch belongs to.
+#[derive(Clone, Copy)]
+enum Rows<'s> {
+    /// prefill: one slot, contiguous positions `p0..p0+m`
+    Contig { slot: usize, p0: usize },
+    /// decode step: row `r` is `slots[r]` at its current cache length
+    PerRow { slots: &'s [usize] },
+}
+
+impl Rows<'_> {
+    #[inline]
+    fn slot_pos(&self, r: usize, len: &[usize]) -> (usize, usize) {
+        match *self {
+            Rows::Contig { slot, p0 } => (slot, p0 + r),
+            Rows::PerRow { slots } => {
+                let sl = slots[r];
+                (sl, len[sl])
+            }
+        }
+    }
+}
+
+/// A forward entry bound for incremental decoding: every weight
+/// resolved once (slices + prepared cells shared with the resident
+/// forward path), adapters unmerged per the paper's §4.4 deployment
+/// claim. Build via [`DecodeModel::bind`]; drive via
+/// [`DecodeModel::prefill`] / [`DecodeModel::decode_step`].
+pub struct DecodeModel<'a> {
+    d: usize,
+    nh: usize,
+    dh: usize,
+    f: usize,
+    v: usize,
+    cap: usize,
+    llama: bool,
+    scale: f32,
+    embed: &'a [f32],
+    layers: Vec<BoundLayer<'a>>,
+    final_g: &'a [f32],
+    final_b: Option<&'a [f32]>,
+    lm_head: BoundLinear<'a>,
+}
+
+/// Resolve one linear (and its adapter, when `use_adapters` and the
+/// module is an adapter target) from the named tensors.
+fn bind_linear<'a>(
+    cfg: &ModelConfig,
+    p: &NamedTensors<'a>,
+    use_adapters: bool,
+    rank_mask: Option<&'a [f32]>,
+    name: &str,
+    out: usize,
+    inp: usize,
+) -> Result<BoundLinear<'a>> {
+    let w = p.f(name)?;
+    ensure!(
+        w.len() == out * inp,
+        "decode bind: weight '{name}' has {} values, expected {out}x{inp}",
+        w.len()
+    );
+    let pw = p.prepared(name, out, inp)?;
+    let lora = if use_adapters {
+        match cfg.adapter_modules.iter().position(|m| m == name) {
+            Some(idx) => {
+                let r = cfg.max_rank;
+                let rm = rank_mask.context("adapter decode binding needs a rank mask")?;
+                Some(BoundLora {
+                    a: p.f(&format!("lora_a.{name}"))?,
+                    b: p.f(&format!("lora_b.{name}"))?,
+                    mask: &rm[idx * r..(idx + 1) * r],
+                })
+            }
+            None => None,
+        }
+    } else {
+        None
+    };
+    Ok(BoundLinear { w, pw, out, inp, lora })
+}
+
+impl<'a> DecodeModel<'a> {
+    /// Resolve every weight of the plain (non-prefix/series/parallel)
+    /// forward into a name-free binding. Prepared-weight cells are
+    /// shared with the resident forward path, so the CSR structure of a
+    /// pruned base weight is derived once per upload — never per step.
+    pub fn bind(
+        cfg: &ModelConfig,
+        p: &NamedTensors<'a>,
+        use_adapters: bool,
+        rank_mask: Option<&'a [f32]>,
+    ) -> Result<DecodeModel<'a>> {
+        let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+        let llama = cfg.arch == "llama";
+        let lin = |name: String, out: usize, inp: usize| {
+            bind_linear(cfg, p, use_adapters, rank_mask, &name, out, inp)
+        };
+        let norm_b = |name: String| -> Result<Option<&'a [f32]>> {
+            if llama {
+                Ok(None)
+            } else {
+                Ok(Some(p.f(&format!("{name}.b"))?))
+            }
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let pre = format!("layers.{i}.");
+            layers.push(BoundLayer {
+                norm1_g: p.f(&format!("{pre}attn_norm.g"))?,
+                norm1_b: norm_b(format!("{pre}attn_norm"))?,
+                q: lin(format!("{pre}attn.q"), d, d)?,
+                k: lin(format!("{pre}attn.k"), d, d)?,
+                v: lin(format!("{pre}attn.v"), d, d)?,
+                o: lin(format!("{pre}attn.o"), d, d)?,
+                norm2_g: p.f(&format!("{pre}mlp_norm.g"))?,
+                norm2_b: norm_b(format!("{pre}mlp_norm"))?,
+                gate: if llama {
+                    Some(lin(format!("{pre}mlp.gate"), f, d)?)
+                } else {
+                    None
+                },
+                up: lin(format!("{pre}mlp.up"), f, d)?,
+                down: lin(format!("{pre}mlp.down"), d, f)?,
+            });
+        }
+        let embed = p.f("embed")?;
+        ensure!(
+            embed.len() == v * d,
+            "decode bind: embed has {} values, expected {v}x{d}",
+            embed.len()
+        );
+        Ok(DecodeModel {
+            d,
+            nh: cfg.n_heads,
+            dh: d / cfg.n_heads,
+            f,
+            v,
+            cap: cfg.seq_len,
+            llama,
+            scale: cfg.lora_scale(),
+            embed,
+            layers,
+            final_g: p.f("final_norm.g")?,
+            final_b: norm_b("final_norm".to_string())?,
+            lm_head: bind_linear(cfg, p, use_adapters, rank_mask, "lm_head", v, d)?,
+        })
+    }
+
+    /// Vocabulary size (logits row width).
+    pub fn vocab(&self) -> usize {
+        self.v
+    }
+
+    /// Context-window capacity (the config's `seq_len`).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    fn check_state(&self, st: &DecodeState) -> Result<()> {
+        ensure!(
+            st.cap == self.cap
+                && st.nh == self.nh
+                && st.dh == self.dh
+                && st.n_layers == self.layers.len()
+                && st.llama == self.llama,
+            "decode state was built for a different model configuration"
+        );
+        Ok(())
+    }
+
+    fn embed_rows(&self, tokens: &[i32], h: &mut [f32]) -> Result<()> {
+        let d = self.d;
+        for (mi, tok) in tokens.iter().enumerate() {
+            ensure!(
+                *tok >= 0 && (*tok as usize) < self.v,
+                "token id {tok} outside vocab {}",
+                self.v
+            );
+            let t = *tok as usize;
+            h[mi * d..(mi + 1) * d].copy_from_slice(&self.embed[t * d..(t + 1) * d]);
+        }
+        Ok(())
+    }
+
+    /// Row-wise norm over `m` rows (RMSNorm or LayerNorm per arch).
+    fn norm_rows(
+        &self,
+        sc: &Scratch,
+        x: &[f32],
+        g: &[f32],
+        b: Option<&[f32]>,
+        m: usize,
+    ) -> Vec<f32> {
+        let d = self.d;
+        let mut y = sc.take(m * d);
+        let mut inv = sc.take(m);
+        match b {
+            None => nn::rmsnorm_into(x, g, m, d, &mut y, &mut inv),
+            Some(bb) => {
+                let mut xhat = sc.take(m * d);
+                nn::layernorm_into(x, g, bb, m, d, &mut y, &mut xhat, &mut inv);
+                sc.give(xhat);
+            }
+        }
+        sc.give(inv);
+        y
+    }
+
+    /// In-place RoPE rotation of one head slice at absolute `pos`
+    /// (forward branch of [`Model::rope_apply`], same table values).
+    #[inline]
+    fn rope_rot(&self, cos: &[f32], sin: &[f32], x: &mut [f32], pos: usize) {
+        let half = self.dh / 2;
+        for j in 0..half {
+            let (c, sn) = (cos[pos * half + j], sin[pos * half + j]);
+            let x1 = x[j];
+            let x2 = x[half + j];
+            x[j] = x1 * c - x2 * sn;
+            x[half + j] = x1 * sn + x2 * c;
+        }
+    }
+
+    fn alibi_slope(&self, h: usize) -> f32 {
+        alibi_slope(h, self.nh)
+    }
+
+    /// One decoder block over `m` rows: project Q/K/V, append this
+    /// step's K/V to each row's cache column at its absolute position,
+    /// attend against the cached context, then the MLP. Consumes `h`,
+    /// returns the next hidden state (both arena-owned).
+    fn block(
+        &self,
+        sc: &Scratch,
+        st: &mut DecodeState,
+        li: usize,
+        rows: Rows,
+        h: Vec<f32>,
+        m: usize,
+    ) -> Vec<f32> {
+        let (d, nh, dh, cap) = (self.d, self.nh, self.dh, self.cap);
+        let lay = &self.layers[li];
+        let t1 = self.norm_rows(sc, &h, lay.norm1_g, lay.norm1_b, m);
+        let mut q = sc.take(m * d);
+        lay.q.fwd(sc, &t1, m, self.scale, &mut q);
+        let mut kk = sc.take(m * d);
+        lay.k.fwd(sc, &t1, m, self.scale, &mut kk);
+        let mut vv = sc.take(m * d);
+        lay.v.fwd(sc, &t1, m, self.scale, &mut vv);
+        sc.give(t1);
+        // split borrows: cache planes are written, lengths/tables read
+        let DecodeState { kc, vc, len, cos, sin, .. } = st;
+        let (kcl, vcl) = (&mut kc[li], &mut vc[li]);
+        for r in 0..m {
+            let (sl, pos) = rows.slot_pos(r, len);
+            for hh in 0..nh {
+                let ks = &mut kk[r * d + hh * dh..r * d + (hh + 1) * dh];
+                if self.llama {
+                    self.rope_rot(cos, sin, ks, pos);
+                }
+                let dst = ((sl * nh + hh) * cap + pos) * dh;
+                kcl[dst..dst + dh].copy_from_slice(ks);
+                vcl[dst..dst + dh].copy_from_slice(&vv[r * d + hh * dh..r * d + (hh + 1) * dh]);
+                let qs = &mut q[r * d + hh * dh..r * d + (hh + 1) * dh];
+                if self.llama {
+                    self.rope_rot(cos, sin, qs, pos);
+                }
+            }
+        }
+        sc.give(kk);
+        sc.give(vv);
+        // attention against the cached K/V: score rows padded to the
+        // full window with -1e30 (same softmax lane layout as the
+        // padded re-forward), reductions via the SIMD linalg::dot
+        let inv_sqrt = 1.0 / (dh as f32).sqrt();
+        let mut ctx = sc.take(m * d);
+        let mut srow = sc.take(cap);
+        let DecodeState { kc, vc, len, .. } = st;
+        let (kcl, vcl) = (&kc[li], &vc[li]);
+        for r in 0..m {
+            let (sl, pos) = rows.slot_pos(r, len);
+            for hh in 0..nh {
+                let qrow = &q[r * d + hh * dh..r * d + (hh + 1) * dh];
+                let slope = if self.llama { 0.0 } else { self.alibi_slope(hh) };
+                for (t, sv) in srow.iter_mut().enumerate() {
+                    if t > pos {
+                        *sv = -1e30;
+                        continue;
+                    }
+                    let kof = ((sl * nh + hh) * cap + t) * dh;
+                    let mut sc_ = linalg::dot(qrow, &kcl[kof..kof + dh]) * inv_sqrt;
+                    if !self.llama {
+                        sc_ += slope * -(t as f32 - pos as f32).abs();
+                    }
+                    *sv = sc_;
+                }
+                nn::softmax_row(&mut srow);
+                let crow = &mut ctx[r * d + hh * dh..r * d + (hh + 1) * dh];
+                for (t, pv) in srow.iter().enumerate() {
+                    if *pv == 0.0 {
+                        continue;
+                    }
+                    let vof = ((sl * nh + hh) * cap + t) * dh;
+                    for (cv, vv2) in crow.iter_mut().zip(&vcl[vof..vof + dh]) {
+                        *cv += pv * vv2;
+                    }
+                }
+            }
+        }
+        sc.give(srow);
+        sc.give(q);
+        let mut attn = sc.take(m * d);
+        lay.o.fwd(sc, &ctx, m, self.scale, &mut attn);
+        sc.give(ctx);
+        // residual adds run in place: decode keeps no backward tape, so
+        // `h` itself becomes h_mid and then the block output (same
+        // elementwise adds as the forward, no extra copies)
+        let mut h = h;
+        add_assign(&mut h, &attn);
+        sc.give(attn);
+        let t2 = self.norm_rows(sc, &h, lay.norm2_g, lay.norm2_b, m);
+        let mut act = sc.take(m * self.f);
+        match &lay.gate {
+            Some(gate) => {
+                let mut gp = sc.take(m * self.f);
+                gate.fwd(sc, &t2, m, self.scale, &mut gp);
+                let mut up = sc.take(m * self.f);
+                lay.up.fwd(sc, &t2, m, self.scale, &mut up);
+                for ((av, g), u) in act.iter_mut().zip(&gp).zip(&up) {
+                    *av = nn::silu(*g) * u;
+                }
+                sc.give(gp);
+                sc.give(up);
+            }
+            None => {
+                let mut up = sc.take(m * self.f);
+                lay.up.fwd(sc, &t2, m, self.scale, &mut up);
+                for (av, u) in act.iter_mut().zip(&up) {
+                    *av = nn::gelu(*u);
+                }
+                sc.give(up);
+            }
+        }
+        sc.give(t2);
+        let mut out = sc.take(m * d);
+        lay.down.fwd(sc, &act, m, self.scale, &mut out);
+        sc.give(act);
+        add_assign(&mut h, &out);
+        sc.give(out);
+        h
+    }
+
+    /// Run `tokens` (a full prompt) through the model, filling `slot`'s
+    /// cache column, and write the **final position's** logits (the
+    /// next-token distribution) into `logits` (`[vocab]`). Any previous
+    /// context in the slot is discarded; other slots are untouched.
+    pub fn prefill(
+        &self,
+        sc: &Scratch,
+        st: &mut DecodeState,
+        slot: usize,
+        tokens: &[i32],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.check_state(st)?;
+        ensure!(slot < st.slots, "slot {slot} out of range ({} slots)", st.slots);
+        ensure!(!tokens.is_empty(), "prefill needs at least one token");
+        ensure!(
+            tokens.len() <= self.cap,
+            "prompt of {} tokens exceeds the {}-token window",
+            tokens.len(),
+            self.cap
+        );
+        ensure!(
+            logits.len() == self.v,
+            "prefill logits buffer holds {} values, expected vocab {}",
+            logits.len(),
+            self.v
+        );
+        st.reset(slot);
+        let (m, d) = (tokens.len(), self.d);
+        let mut h = sc.take(m * d);
+        self.embed_rows(tokens, &mut h)?;
+        for li in 0..self.layers.len() {
+            h = self.block(sc, st, li, Rows::Contig { slot, p0: 0 }, h, m);
+        }
+        let tf = self.norm_rows(sc, &h[(m - 1) * d..m * d], self.final_g, self.final_b, 1);
+        self.lm_head.fwd(sc, &tf, 1, self.scale, logits);
+        sc.give(tf);
+        sc.give(h);
+        st.len[slot] = m;
+        Ok(())
+    }
+
+    /// Advance the strictly-ascending active `slots` by one token each
+    /// (`tokens[r]` is appended to `slots[r]`'s context) and write each
+    /// row's next-token logits into `logits` (`[slots.len(), vocab]`).
+    /// Allocation-free once the arena is warm.
+    pub fn decode_step(
+        &self,
+        sc: &Scratch,
+        st: &mut DecodeState,
+        slots: &[usize],
+        tokens: &[i32],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        self.check_state(st)?;
+        let m = slots.len();
+        ensure!(m > 0, "decode step needs at least one active slot");
+        ensure!(
+            tokens.len() == m,
+            "decode step got {} tokens for {m} slots",
+            tokens.len()
+        );
+        ensure!(
+            logits.len() == m * self.v,
+            "decode logits buffer holds {} values, expected {m}x{}",
+            logits.len(),
+            self.v
+        );
+        for (i, &sl) in slots.iter().enumerate() {
+            ensure!(sl < st.slots, "slot {sl} out of range ({} slots)", st.slots);
+            ensure!(
+                i == 0 || slots[i - 1] < sl,
+                "decode slots must be strictly ascending"
+            );
+            ensure!(
+                st.len[sl] < self.cap,
+                "slot {sl} context window is full ({} tokens)",
+                self.cap
+            );
+        }
+        let d = self.d;
+        let mut h = sc.take(m * d);
+        self.embed_rows(tokens, &mut h)?;
+        for li in 0..self.layers.len() {
+            h = self.block(sc, st, li, Rows::PerRow { slots }, h, m);
+        }
+        let tf = self.norm_rows(sc, &h, self.final_g, self.final_b, m);
+        self.lm_head.fwd(sc, &tf, m, self.scale, logits);
+        sc.give(tf);
+        sc.give(h);
+        for &sl in slots {
+            st.len[sl] += 1;
+        }
+        Ok(())
     }
 }
 

@@ -34,7 +34,8 @@ pub mod native;
 pub mod pjrt;
 
 use crate::model::{Manifest, ParamStore};
-use crate::ops::model::PreparedCell;
+use crate::ops::model::{DecodeModel, PreparedCell};
+pub use crate::ops::model::DecodeState;
 use crate::tensor::HostTensor;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -64,10 +65,14 @@ pub enum DeviceBuffer {
     Pjrt(xla::PjRtBuffer),
 }
 
-/// Execution input: a resident buffer or a per-call host tensor.
+/// Execution input: a resident buffer, a per-call host tensor, or —
+/// for [`Runtime::bind_decode`] only — a positional hole where the
+/// decode path supplies the value itself (the `x` token batch).
 pub enum Arg<'a> {
     Buf(&'a DeviceBuffer),
     Host(&'a HostTensor),
+    /// Input the decode engine replaces; rejected by full executions.
+    Absent,
 }
 
 /// A loaded entry point, bound to the backend that produced it.
@@ -303,6 +308,9 @@ impl Runtime {
                             t: &nb.tensor,
                             prepared: Some(&nb.prepared),
                         }),
+                        Arg::Absent => {
+                            bail!("{}: absent input passed to a full execution", exe.name)
+                        }
                         #[cfg(feature = "xla")]
                         Arg::Buf(DeviceBuffer::Pjrt(_)) => bail!(
                             "{}: pjrt device buffer passed to the native backend",
@@ -320,6 +328,134 @@ impl Runtime {
                 }
             },
         }
+    }
+}
+
+// --------------------------------------------------- incremental decode
+
+impl Runtime {
+    /// Whether this backend has a KV-cached incremental decode path.
+    /// The native executor does; PJRT serves via full re-forward.
+    pub fn supports_decode(&self) -> bool {
+        match &self.inner {
+            Inner::Native(_) => true,
+            #[cfg(feature = "xla")]
+            Inner::Pjrt(_) => false,
+        }
+    }
+
+    /// Whether `exe` can actually be bound for incremental decoding on
+    /// this backend: native **and** a plain forward entry (train steps,
+    /// calibration, and the PEFT-baseline forwards cannot).
+    /// [`crate::serve::Decoder`] dispatches on this, so a bind error on
+    /// a decodable entry surfaces instead of silently degrading to the
+    /// re-forward path.
+    pub fn decodable(&self, exe: &Exe) -> bool {
+        match &self.inner {
+            Inner::Native(_) => match Self::native_exe(exe) {
+                Ok(ne) => ne.decodable(),
+                Err(_) => false,
+            },
+            #[cfg(feature = "xla")]
+            Inner::Pjrt(_) => false,
+        }
+    }
+
+    /// Bind a plain forward entry for incremental decoding. `inputs`
+    /// align positionally with the entry signature exactly as in
+    /// [`Runtime::run_args`]; pass [`Arg::Absent`] for the per-batch
+    /// `x` input (the decode calls supply tokens directly). Resident
+    /// buffers carry their prepared-weight cells into the binding, so
+    /// decode steps ride the same cached CSR/dense structures as the
+    /// batch forward. Rebind after any weight re-upload (`sync`).
+    pub fn bind_decode<'p>(
+        &'p self,
+        exe: &'p Exe,
+        inputs: &[Arg<'p>],
+    ) -> Result<DecodeSession<'p>> {
+        Self::check_arity(exe, inputs.len())?;
+        match &self.inner {
+            Inner::Native(n) => {
+                let resolved: Vec<Option<native::ExecInput<'p>>> = inputs
+                    .iter()
+                    .map(|a| match a {
+                        Arg::Absent => Ok(None),
+                        Arg::Host(t) => Ok(Some(native::ExecInput::host(t))),
+                        Arg::Buf(DeviceBuffer::Native(nb)) => Ok(Some(native::ExecInput {
+                            t: &nb.tensor,
+                            prepared: Some(&nb.prepared),
+                        })),
+                        #[cfg(feature = "xla")]
+                        Arg::Buf(DeviceBuffer::Pjrt(_)) => bail!(
+                            "{}: pjrt device buffer passed to the native backend",
+                            exe.name
+                        ),
+                    })
+                    .collect::<Result<_>>()?;
+                let model = n.bind_decode(Self::native_exe(exe)?, &resolved)?;
+                Ok(DecodeSession { rt: self, model })
+            }
+            #[cfg(feature = "xla")]
+            Inner::Pjrt(_) => bail!(
+                "incremental decode requires the native backend \
+                 (pjrt serves via full re-forward)"
+            ),
+        }
+    }
+}
+
+/// A forward entry bound for KV-cached decoding, tied to the runtime's
+/// scratch arena. Steps count as executions (`Runtime::exec_count`).
+/// Steady-state [`DecodeSession::decode_step`]s are allocation-free
+/// once the arena is warm.
+pub struct DecodeSession<'p> {
+    rt: &'p Runtime,
+    model: DecodeModel<'p>,
+}
+
+impl DecodeSession<'_> {
+    fn scratch(&self) -> &crate::ops::Scratch {
+        match &self.rt.inner {
+            Inner::Native(n) => n.scratch(),
+            #[cfg(feature = "xla")]
+            Inner::Pjrt(_) => unreachable!("decode sessions only bind on native"),
+        }
+    }
+
+    /// Run a prompt through `slot`'s cache column; final-position
+    /// logits land in `logits` (`[vocab]`). Resets only that slot.
+    pub fn prefill(
+        &self,
+        st: &mut DecodeState,
+        slot: usize,
+        tokens: &[i32],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        *self.rt.exec_count.borrow_mut() += 1;
+        self.model.prefill(self.scratch(), st, slot, tokens, logits)
+    }
+
+    /// Advance the ascending active `slots` one token each; per-row
+    /// next-token logits land in `logits` (`[slots.len(), vocab]`).
+    pub fn decode_step(
+        &self,
+        st: &mut DecodeState,
+        slots: &[usize],
+        tokens: &[i32],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        *self.rt.exec_count.borrow_mut() += 1;
+        self.model.decode_step(self.scratch(), st, slots, tokens, logits)
+    }
+
+    /// Vocabulary size (logits row width) of the bound entry.
+    pub fn vocab(&self) -> usize {
+        self.model.vocab()
+    }
+
+    /// Context-window capacity per slot.
+    pub fn capacity(&self) -> usize {
+        self.model.capacity()
     }
 }
 

@@ -22,13 +22,19 @@
 //! The kernels themselves dispatch over the persistent worker pool in
 //! `ops::linalg` (sized by `SHEARS_NUM_THREADS`); execution here stays
 //! single-threaded at the entry-point level.
+//!
+//! Serving additionally gets a third piece of cross-call state:
+//! [`NativeBackend::bind_decode`] resolves a plain forward entry into a
+//! name-free [`DecodeModel`] (weight slices + the resident prepared
+//! cells) so KV-cached prefill/decode steps skip per-call name
+//! resolution entirely — see `ops::model`'s decode section.
 
 use crate::model::{EntryPoint, Manifest, ModelConfig, PruneOpSpec};
-use crate::ops::model::{Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};
+use crate::ops::model::{DecodeModel, Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};
 use crate::ops::scratch::Scratch;
 use crate::ops::{nn, prune};
 use crate::tensor::HostTensor;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
@@ -68,6 +74,19 @@ impl NativeExe {
         match &self.op {
             NativeOp::Entry { entry, .. } => entry.inputs.len(),
             NativeOp::Prune(spec) => spec.inputs.len(),
+        }
+    }
+
+    /// Whether this op has an incremental decode path: plain forward
+    /// entries only (train steps, calibration, prune ops, and the
+    /// prefix/series/parallel baseline forwards do not).
+    pub fn decodable(&self) -> bool {
+        match &self.op {
+            NativeOp::Entry { name, .. } => match entry_spec(name) {
+                Ok(s) => s.train.is_none() && !s.collect && s.extra == Extra::None,
+                Err(_) => false,
+            },
+            NativeOp::Prune(_) => false,
         }
     }
 }
@@ -156,6 +175,39 @@ impl NativeBackend {
                 run_entry(cfg, name, entry, inputs, &self.scratch)
             }
         }
+    }
+
+    /// Bind a plain forward entry for KV-cached incremental decoding: a
+    /// name-free [`DecodeModel`] holding weight slices and the resident
+    /// buffers' prepared-weight cells (shared with the batch forward
+    /// path, so the CSR structure of a pruned weight is derived once
+    /// per upload). `inputs` align positionally with the entry's
+    /// manifest signature; per-batch inputs the decode path replaces
+    /// (`x`) arrive as `None`.
+    pub fn bind_decode<'p>(
+        &self,
+        exe: &'p NativeExe,
+        inputs: &[Option<ExecInput<'p>>],
+    ) -> Result<DecodeModel<'p>> {
+        let NativeOp::Entry { cfg, name, entry } = &exe.op else {
+            bail!("'{}' is a prune op — nothing to decode", exe.file);
+        };
+        let spec = entry_spec(name)?;
+        ensure!(
+            spec.train.is_none() && !spec.collect && spec.extra == Extra::None,
+            "entry point '{name}' has no incremental decode path (plain forwards only)"
+        );
+        let mut named = NamedTensors::new();
+        for (io, ei) in entry.inputs.iter().zip(inputs) {
+            if let Some(ei) = ei {
+                match ei.prepared {
+                    Some(cell) => named.insert_prepared(&io.name, ei.t, cell),
+                    None => named.insert(&io.name, ei.t),
+                }
+            }
+        }
+        let rank_mask = if spec.use_adapters { Some(named.f("rank_mask")?) } else { None };
+        DecodeModel::bind(cfg, &named, spec.use_adapters, rank_mask)
     }
 }
 

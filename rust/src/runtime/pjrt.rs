@@ -132,7 +132,7 @@ impl PjrtBackend {
             .iter()
             .filter_map(|a| match a {
                 Arg::Host(t) => Some(self.upload(t)),
-                Arg::Buf(_) => None,
+                Arg::Buf(_) | Arg::Absent => None,
             })
             .collect::<Result<_>>()?;
         // pass 2: assemble the argument list in order
@@ -147,6 +147,9 @@ impl PjrtBackend {
                 Arg::Host(_) => {
                     refs.push(&owned[k]);
                     k += 1;
+                }
+                Arg::Absent => {
+                    bail!("{name}: absent input passed to a full execution")
                 }
             }
         }

@@ -2,23 +2,37 @@
 //!
 //! Demonstrates the paper's §4.4 deployment claim — the Shears model
 //! serves inference with adapters *unmerged* (merging would destroy the
-//! base-weight sparsity) — as a minimal continuous-batching decoder:
-//! requests join a wave, every wave step runs ONE forward for all active
-//! sequences, finished sequences retire and new requests take their slot.
-//! Latency/throughput metrics come out per run (examples/serve_demo.rs).
+//! base-weight sparsity) — as a continuous-batching decoder. On the
+//! native backend generation is **KV-cached incremental decoding**
+//! ([`Decoder::serve_incremental`]): each admitted request is prefilled
+//! once into its slot's cache column, then every wave step advances all
+//! active sequences by one token through batched `M = active` prepared
+//! matmuls — O(1) transformer work per token instead of the O(seq_len)
+//! full re-forward the wave decoder pays. The re-forward path
+//! ([`Decoder::serve_reforward`]) remains as the PJRT fallback and the
+//! parity baseline: greedy token sequences are identical between the
+//! two (`rust/tests/decode.rs`).
+//!
+//! Latency/throughput metrics come out per run (examples/serve_demo.rs,
+//! `perf_runtime`'s `serve` section).
 
 use crate::data::Vocab;
 use crate::model::{ModelConfig, ParamStore};
-use crate::runtime::Runtime;
+use crate::runtime::{DecodeSession, DecodeState, Runtime};
 use crate::tensor::HostTensor;
 use crate::train::ForwardSession;
 use anyhow::{Context, Result};
+use std::cell::RefCell;
 use std::time::Instant;
 
 /// One generation request.
 #[derive(Clone, Debug)]
 pub struct GenRequest {
     pub prompt: Vec<i32>,
+    /// Budget for generated tokens. The decoder always produces at
+    /// least one token per request (the retire check runs after the
+    /// first greedy pick, as the wave decoder always did), so a budget
+    /// of 0 behaves like 1.
     pub max_new_tokens: usize,
 }
 
@@ -28,28 +42,85 @@ pub struct GenResponse {
     pub tokens: Vec<i32>,
     pub new_tokens: usize,
     pub latency_ms: f64,
+    /// The prompt exceeded the context window and was cut to `seq_len−1`
+    /// tokens before decoding (no silent truncation).
+    pub prompt_truncated: bool,
 }
 
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     pub requests: u64,
     pub generated_tokens: u64,
+    /// model executions of any kind (prefills + decode steps, or wave
+    /// re-forwards on the fallback path)
     pub forwards: u64,
+    /// prompt prefills (incremental path only)
+    pub prefills: u64,
+    /// batched one-token steps (incremental path only)
+    pub decode_steps: u64,
+    pub truncated_prompts: u64,
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// mean active slots per batched step (decode steps on the
+    /// incremental path, wave forwards on the re-forward path)
     pub mean_batch_occupancy: f64,
+}
+
+/// Greedy pick over one logits row. Ties resolve to the **highest**
+/// index (`max_by` keeps the last maximum) — one shared helper so both
+/// decoding paths agree even on degenerate rows.
+fn argmax(row: &[f32], fallback: i32) -> i32 {
+    row.iter()
+        .enumerate()
+        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(idx, _)| idx as i32)
+        .unwrap_or(fallback)
+}
+
+/// Clamp a prompt to the decode window: at most `s − 1` tokens are
+/// admitted so at least one generated position fits. Empty prompts are
+/// seeded with `pad` (the model needs one position to predict from).
+/// Returns the admitted tokens and whether the prompt was cut.
+fn admit_prompt(prompt: &[i32], s: usize, pad: i32) -> (Vec<i32>, bool) {
+    let truncated = prompt.len() > s - 1;
+    let mut toks = prompt[..prompt.len().min(s - 1)].to_vec();
+    if toks.is_empty() {
+        toks.push(pad);
+    }
+    (toks, truncated)
+}
+
+/// Retirement rule shared by both decoding paths: EOS, the request's
+/// new-token budget, or a full context window.
+fn finished(next: i32, eos: i32, new_count: usize, max_new: usize, len: usize, s: usize) -> bool {
+    next == eos || new_count >= max_new || len >= s
+}
+
+/// One in-flight request occupying a batch slot.
+struct Slot {
+    req: usize,
+    toks: Vec<i32>,
+    /// prompt tokens actually admitted (new-token accounting base)
+    admitted: usize,
+    truncated: bool,
+    started: Instant,
 }
 
 /// Greedy batched decoder over a forward entry point. The parameter
 /// stores are uploaded once at construction (prepared sparse weights
-/// cached), so every wave forward runs the resident fast path.
+/// cached), so generation runs the resident fast path — incrementally
+/// KV-cached on the native backend, wave re-forward otherwise.
 pub struct Decoder<'rt> {
     cfg: &'rt ModelConfig,
     session: ForwardSession<'rt>,
     rank_mask: Option<HostTensor>,
     pub vocab: Vocab,
+    /// K/V caches reused across [`Decoder::serve_incremental`] calls
+    /// (every admission prefill resets its slot, so stale contents are
+    /// never read) — spares the per-call cache allocation + zero-fill.
+    state: RefCell<Option<DecodeState>>,
 }
 
 impl<'rt> Decoder<'rt> {
@@ -65,38 +136,189 @@ impl<'rt> Decoder<'rt> {
         rank_mask: Option<HostTensor>,
     ) -> Result<Self> {
         let session = ForwardSession::new(rt, cfg, entry_name, &stores)?;
-        Ok(Decoder { cfg, session, rank_mask, vocab: Vocab::new(cfg.vocab) })
+        Ok(Decoder {
+            cfg,
+            session,
+            rank_mask,
+            vocab: Vocab::new(cfg.vocab),
+            state: RefCell::new(None),
+        })
     }
 
     /// Re-upload weights whose store generation changed since
-    /// construction (cheap no-op otherwise).
+    /// construction (cheap no-op otherwise). Decode bindings are built
+    /// per [`Decoder::serve`] call, so they are never stale.
     pub fn sync(&mut self, stores: &[&ParamStore]) -> Result<()> {
         self.session.sync(stores)
     }
 
-    /// Serve a queue of requests with wave-style continuous batching.
+    /// Serve a queue of requests with continuous batching, picking the
+    /// fastest decoding path this backend **and entry** support.
+    /// Entries the decode engine cannot bind (PJRT, the prefix/series/
+    /// parallel baseline forwards) keep the wave re-forward path that
+    /// always served them; a bind failure on a decodable entry is a
+    /// real error and propagates instead of silently degrading.
     pub fn serve(&self, requests: &[GenRequest]) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        if self.session.supports_decode() {
+            self.serve_incremental(requests)
+        } else {
+            self.serve_reforward(requests)
+        }
+    }
+
+    /// KV-cached continuous batching (native backend): admission
+    /// prefills exactly the joining slot's cache column, every wave
+    /// step is one batched `decode_step` over the active slots.
+    pub fn serve_incremental(
+        &self,
+        requests: &[GenRequest],
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let session = self.session.decoder(self.rank_mask.as_ref())?;
+        self.serve_with(session, requests)
+    }
+
+    /// Incremental decoding over an already-bound decode session.
+    fn serve_with(
+        &self,
+        session: DecodeSession<'_>,
+        requests: &[GenRequest],
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
         let b = self.cfg.batch_eval;
         let s = self.cfg.seq_len;
+        let v = self.cfg.vocab;
+        let eos = self.vocab.eos;
+        let start_all = Instant::now();
+        // reuse the cached K/V planes when present (prefill resets each
+        // joining slot, so a previous queue's contents are never read)
+        let mut st = self
+            .state
+            .borrow_mut()
+            .take()
+            .filter(|st| st.n_slots() == b)
+            .unwrap_or_else(|| self.session.decode_state(b));
+        let mut metrics = ServeMetrics { requests: requests.len() as u64, ..Default::default() };
+        let mut responses: Vec<Option<GenResponse>> = (0..requests.len()).map(|_| None).collect();
+        let mut latencies: Vec<f64> = Vec::new();
+        let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+        let mut next_req = 0usize;
+        let mut occupancy_sum = 0usize;
+        // reused step buffers: warm steps allocate nothing below this fn
+        let mut row_logits = vec![0.0f32; v];
+        let mut step_logits = vec![0.0f32; b * v];
+        let mut active: Vec<usize> = Vec::with_capacity(b);
+        let mut step_tokens: Vec<i32> = Vec::with_capacity(b);
+
+        loop {
+            // admission: each free slot prefills one pending request
+            // (resetting only that slot's cache column)
+            for slot in 0..b {
+                if slots[slot].is_some() || next_req >= requests.len() {
+                    continue;
+                }
+                let req = next_req;
+                next_req += 1;
+                let r = &requests[req];
+                let started = Instant::now();
+                let (mut toks, truncated) = admit_prompt(&r.prompt, s, self.vocab.pad);
+                let admitted = toks.len();
+                if truncated {
+                    metrics.truncated_prompts += 1;
+                }
+                session.prefill(&mut st, slot, &toks, &mut row_logits)?;
+                metrics.prefills += 1;
+                metrics.forwards += 1;
+                let next = argmax(&row_logits, eos);
+                toks.push(next);
+                metrics.generated_tokens += 1;
+                let new_count = toks.len() - admitted;
+                if finished(next, eos, new_count, r.max_new_tokens, toks.len(), s) {
+                    let lat = started.elapsed().as_secs_f64() * 1e3;
+                    latencies.push(lat);
+                    responses[req] = Some(GenResponse {
+                        tokens: toks,
+                        new_tokens: new_count,
+                        latency_ms: lat,
+                        prompt_truncated: truncated,
+                    });
+                } else {
+                    slots[slot] = Some(Slot { req, toks, admitted, truncated, started });
+                }
+            }
+            active.clear();
+            step_tokens.clear();
+            for (slot, state) in slots.iter().enumerate() {
+                if let Some(sl) = state {
+                    active.push(slot);
+                    step_tokens.push(*sl.toks.last().expect("active slot has tokens"));
+                }
+            }
+            if active.is_empty() {
+                if next_req >= requests.len() {
+                    break;
+                }
+                continue; // everything admitted finished at prefill; admit more
+            }
+            // one batched step: every active sequence advances a token
+            let out = &mut step_logits[..active.len() * v];
+            session.decode_step(&mut st, &active, &step_tokens, out)?;
+            metrics.decode_steps += 1;
+            metrics.forwards += 1;
+            occupancy_sum += active.len();
+            for (row, &slot) in active.iter().enumerate() {
+                let state = slots[slot].as_mut().expect("active slot");
+                let next = argmax(&step_logits[row * v..(row + 1) * v], eos);
+                state.toks.push(next);
+                metrics.generated_tokens += 1;
+                let new_count = state.toks.len() - state.admitted;
+                let max_new = requests[state.req].max_new_tokens;
+                if finished(next, eos, new_count, max_new, state.toks.len(), s) {
+                    let state = slots[slot].take().expect("active slot");
+                    let lat = state.started.elapsed().as_secs_f64() * 1e3;
+                    latencies.push(lat);
+                    responses[state.req] = Some(GenResponse {
+                        tokens: state.toks,
+                        new_tokens: new_count,
+                        latency_ms: lat,
+                        prompt_truncated: state.truncated,
+                    });
+                }
+            }
+        }
+        *self.state.borrow_mut() = Some(st);
+        finalize(metrics, start_all, occupancy_sum, latencies, responses, true)
+    }
+
+    /// Full re-forward wave decoding: every step recomputes the whole
+    /// padded `[batch, seq_len]` context. PJRT fallback and the parity
+    /// baseline for the incremental path.
+    pub fn serve_reforward(
+        &self,
+        requests: &[GenRequest],
+    ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        let b = self.cfg.batch_eval;
+        let s = self.cfg.seq_len;
+        let eos = self.vocab.eos;
         let start_all = Instant::now();
         let mut metrics = ServeMetrics { requests: requests.len() as u64, ..Default::default() };
-        let mut responses: Vec<Option<GenResponse>> = vec![None; requests.len()];
+        let mut responses: Vec<Option<GenResponse>> = (0..requests.len()).map(|_| None).collect();
         let mut latencies: Vec<f64> = Vec::new();
-
-        // active slots: (request index, tokens so far, start time)
+        let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
         let mut next_req = 0usize;
-        let mut slots: Vec<Option<(usize, Vec<i32>, Instant)>> = vec![None; b];
         let mut occupancy_sum = 0usize;
 
         loop {
             // admit new requests into free slots (continuous batching)
             for slot in slots.iter_mut() {
                 if slot.is_none() && next_req < requests.len() {
-                    let r = &requests[next_req];
-                    let mut toks = r.prompt.clone();
-                    toks.truncate(s - 1);
-                    *slot = Some((next_req, toks, Instant::now()));
+                    let req = next_req;
                     next_req += 1;
+                    let (toks, truncated) =
+                        admit_prompt(&requests[req].prompt, s, self.vocab.pad);
+                    if truncated {
+                        metrics.truncated_prompts += 1;
+                    }
+                    let admitted = toks.len();
+                    *slot = Some(Slot { req, toks, admitted, truncated, started: Instant::now() });
                 }
             }
             let active: Vec<usize> = (0..b).filter(|i| slots[*i].is_some()).collect();
@@ -108,77 +330,74 @@ impl<'rt> Decoder<'rt> {
             // build the wave batch: each active slot's context, padded
             let mut x = vec![self.vocab.pad; b * s];
             for &i in &active {
-                let (_, toks, _) = slots[i].as_ref().unwrap();
-                for (t, tok) in toks.iter().enumerate() {
+                let state = slots[i].as_ref().unwrap();
+                for (t, tok) in state.toks.iter().enumerate() {
                     x[i * s + t] = *tok;
                 }
             }
             let xt = HostTensor::from_i32(&[b, s], x);
-            let logits = self.forward(&xt)?;
+            let logits = self.session.logits(&xt, self.rank_mask.as_ref())?;
             metrics.forwards += 1;
 
             // greedy next token per active slot, retire finished
             let v = self.cfg.vocab;
+            let data = logits.f32s();
             for &i in &active {
-                let (req_idx, toks, started) = slots[i].take().unwrap();
-                let pos = toks.len() - 1;
+                let state = slots[i].as_mut().unwrap();
+                let pos = state.toks.len() - 1;
                 let off = (i * s + pos) * v;
-                let data = logits.f32s();
-                let slice = &data[off..off + v];
-                let next = slice
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, c| a.1.partial_cmp(c.1).unwrap_or(std::cmp::Ordering::Equal))
-                    .map(|(idx, _)| idx as i32)
-                    .unwrap_or(self.vocab.eos);
-                let mut toks = toks;
-                toks.push(next);
+                let next = argmax(&data[off..off + v], eos);
+                state.toks.push(next);
                 metrics.generated_tokens += 1;
-                let new_count = toks.len() - requests[req_idx].prompt.len().min(s - 1);
-                let done = next == self.vocab.eos
-                    || new_count >= requests[req_idx].max_new_tokens
-                    || toks.len() >= s;
-                if done {
-                    let lat = started.elapsed().as_secs_f64() * 1e3;
+                let new_count = state.toks.len() - state.admitted;
+                let max_new = requests[state.req].max_new_tokens;
+                if finished(next, eos, new_count, max_new, state.toks.len(), s) {
+                    let state = slots[i].take().unwrap();
+                    let lat = state.started.elapsed().as_secs_f64() * 1e3;
                     latencies.push(lat);
-                    responses[req_idx] = Some(GenResponse {
-                        tokens: toks,
+                    responses[state.req] = Some(GenResponse {
+                        tokens: state.toks,
                         new_tokens: new_count,
                         latency_ms: lat,
+                        prompt_truncated: state.truncated,
                     });
-                } else {
-                    slots[i] = Some((req_idx, toks, started));
                 }
             }
         }
+        finalize(metrics, start_all, occupancy_sum, latencies, responses, false)
+    }
+}
 
-        metrics.wall_secs = start_all.elapsed().as_secs_f64();
-        metrics.tokens_per_sec = metrics.generated_tokens as f64 / metrics.wall_secs.max(1e-9);
-        metrics.mean_batch_occupancy = if metrics.forwards > 0 {
-            occupancy_sum as f64 / metrics.forwards as f64
-        } else {
+/// Shared metric finalization. Occupancy averages over batched steps:
+/// decode steps on the incremental path, wave forwards otherwise.
+fn finalize(
+    mut metrics: ServeMetrics,
+    start_all: Instant,
+    occupancy_sum: usize,
+    mut latencies: Vec<f64>,
+    responses: Vec<Option<GenResponse>>,
+    incremental: bool,
+) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+    metrics.wall_secs = start_all.elapsed().as_secs_f64();
+    metrics.tokens_per_sec = metrics.generated_tokens as f64 / metrics.wall_secs.max(1e-9);
+    let steps = if incremental { metrics.decode_steps } else { metrics.forwards };
+    metrics.mean_batch_occupancy =
+        if steps > 0 { occupancy_sum as f64 / steps as f64 } else { 0.0 };
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pct = |p: f64| {
+        if latencies.is_empty() {
             0.0
-        };
-        latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-        let pct = |p: f64| {
-            if latencies.is_empty() {
-                0.0
-            } else {
-                latencies[((latencies.len() - 1) as f64 * p) as usize]
-            }
-        };
-        metrics.p50_latency_ms = pct(0.5);
-        metrics.p99_latency_ms = pct(0.99);
-        let responses = responses
-            .into_iter()
-            .map(|r| r.context("request never completed"))
-            .collect::<Result<Vec<_>>>()?;
-        Ok((responses, metrics))
-    }
-
-    fn forward(&self, x: &HostTensor) -> Result<HostTensor> {
-        self.session.logits(x, self.rank_mask.as_ref())
-    }
+        } else {
+            latencies[((latencies.len() - 1) as f64 * p) as usize]
+        }
+    };
+    metrics.p50_latency_ms = pct(0.5);
+    metrics.p99_latency_ms = pct(0.99);
+    let responses = responses
+        .into_iter()
+        .map(|r| r.context("request never completed"))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((responses, metrics))
 }
 
 #[cfg(test)]
@@ -186,10 +405,47 @@ mod tests {
     use super::*;
 
     #[test]
-    fn request_response_shapes() {
-        let r = GenRequest { prompt: vec![1, 5, 9], max_new_tokens: 4 };
-        assert_eq!(r.prompt.len(), 3);
-        let resp = GenResponse { tokens: vec![1, 5, 9, 2], new_tokens: 1, latency_ms: 1.0 };
-        assert_eq!(resp.tokens.len(), 4);
+    fn admit_clamps_to_window_and_flags() {
+        let prompt: Vec<i32> = (0..10).collect();
+        let (toks, truncated) = admit_prompt(&prompt, 8, 0);
+        assert_eq!(toks.len(), 7, "admits at most s-1 tokens");
+        assert_eq!(toks, prompt[..7]);
+        assert!(truncated);
+        let (toks, truncated) = admit_prompt(&prompt[..3], 8, 0);
+        assert_eq!(toks, prompt[..3]);
+        assert!(!truncated);
+        // exactly s-1 fits without truncation
+        let (toks, truncated) = admit_prompt(&prompt[..7], 8, 0);
+        assert_eq!(toks.len(), 7);
+        assert!(!truncated);
+    }
+
+    #[test]
+    fn empty_prompt_is_seeded_with_pad() {
+        let (toks, truncated) = admit_prompt(&[], 8, 5);
+        assert_eq!(toks, vec![5]);
+        assert!(!truncated);
+    }
+
+    #[test]
+    fn retirement_rule_covers_eos_budget_and_window() {
+        let (eos, s) = (2, 48);
+        assert!(finished(eos, eos, 1, 10, 5, s), "eos retires");
+        assert!(finished(7, eos, 10, 10, 5, s), "budget retires");
+        assert!(finished(7, eos, 1, 10, s, s), "full window retires");
+        assert!(!finished(7, eos, 1, 10, 5, s), "otherwise keep going");
+    }
+
+    #[test]
+    fn argmax_breaks_ties_toward_highest_index() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0], -1), 2);
+        assert_eq!(argmax(&[], 9), 9, "empty row falls back");
+        // a prompt filling the window still yields >= 1 generated token
+        let (toks, truncated) = admit_prompt(&(0..100).collect::<Vec<i32>>(), 48, 0);
+        assert!(truncated);
+        assert_eq!(toks.len(), 47);
+        // the decoder appends one token before any retirement check, so
+        // new_count >= 1 even for truncated prompts
+        assert!(!finished(7, 2, 0, 4, toks.len(), 48));
     }
 }

@@ -20,7 +20,7 @@ use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
-use crate::runtime::{Arg, Exe, ResidentParams, Runtime};
+use crate::runtime::{Arg, DecodeSession, DecodeState, Exe, ResidentParams, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -276,6 +276,8 @@ pub struct ForwardSession<'rt> {
     exe: Exe,
     entry: EntryPoint,
     resident: Vec<ResidentParams>,
+    /// configuration snapshot (decode-state construction, shape checks)
+    cfg: ModelConfig,
 }
 
 impl<'rt> ForwardSession<'rt> {
@@ -292,6 +294,7 @@ impl<'rt> ForwardSession<'rt> {
             exe,
             entry,
             resident: stores.iter().map(|_| ResidentParams::new()).collect(),
+            cfg: cfg.clone(),
         };
         session.sync(stores)?;
         Ok(session)
@@ -312,13 +315,25 @@ impl<'rt> ForwardSession<'rt> {
         Ok(())
     }
 
-    /// One forward over the `[B, S]` token batch; returns the logits.
-    pub fn logits(&self, x: &HostTensor, rank_mask: Option<&HostTensor>) -> Result<HostTensor> {
-        let mut args: Vec<Arg> = Vec::with_capacity(self.entry.inputs.len());
+    /// Resolve this entry's inputs positionally: `x` from the caller
+    /// ([`Arg::Absent`] for decode bindings, which supply tokens
+    /// directly), the rank mask when the entry declares one, and
+    /// everything else from the resident stores. One resolution shared
+    /// by [`ForwardSession::logits`] and [`ForwardSession::decoder`] so
+    /// the two paths cannot drift.
+    fn entry_args<'p>(
+        &'p self,
+        x: Option<&'p HostTensor>,
+        rank_mask: Option<&'p HostTensor>,
+    ) -> Result<Vec<Arg<'p>>> {
+        let mut args: Vec<Arg<'p>> = Vec::with_capacity(self.entry.inputs.len());
         for i in &self.entry.inputs {
             let name = i.name.as_str();
             args.push(match name {
-                "x" => Arg::Host(x),
+                "x" => match x {
+                    Some(t) => Arg::Host(t),
+                    None => Arg::Absent,
+                },
                 "rank_mask" => Arg::Host(rank_mask.context("forward needs a rank mask")?),
                 _ => Arg::Buf(
                     self.resident
@@ -328,8 +343,35 @@ impl<'rt> ForwardSession<'rt> {
                 ),
             });
         }
+        Ok(args)
+    }
+
+    /// One forward over the `[B, S]` token batch; returns the logits.
+    pub fn logits(&self, x: &HostTensor, rank_mask: Option<&HostTensor>) -> Result<HostTensor> {
+        let args = self.entry_args(Some(x), rank_mask)?;
         let outs = self.rt.run_args(&self.exe, &args)?;
         outs.into_iter().next().context("forward produced no outputs")
+    }
+
+    /// Whether this session can serve the KV-cached incremental decode
+    /// path: native backend **and** a plain forward entry (the PEFT
+    /// baseline forwards re-forward instead).
+    pub fn supports_decode(&self) -> bool {
+        self.rt.decodable(&self.exe)
+    }
+
+    /// Fresh per-slot K/V caches for `slots` concurrent sequences.
+    pub fn decode_state(&self, slots: usize) -> DecodeState {
+        DecodeState::new(&self.cfg, slots)
+    }
+
+    /// Bind this session's resident weights for incremental decoding.
+    /// The binding shares the resident prepared-weight cells, so decode
+    /// steps ride the cached CSR/dense structures; rebind after
+    /// [`ForwardSession::sync`] re-uploads anything.
+    pub fn decoder<'p>(&'p self, rank_mask: Option<&'p HostTensor>) -> Result<DecodeSession<'p>> {
+        let args = self.entry_args(None, rank_mask)?;
+        self.rt.bind_decode(&self.exe, &args)
     }
 }
 

@@ -181,6 +181,51 @@ fn warm_forward_reuses_all_matmul_buffers() {
 }
 
 #[test]
+fn warm_decode_steps_are_zero_alloc() {
+    use shears::model::ParamStore;
+    use shears::runtime::Runtime;
+    use shears::train::ForwardSession;
+    use shears::util::rng::Rng;
+
+    let _guard = serial();
+    linalg::set_num_threads(1);
+    let _ = (linalg::simd_enabled(), linalg::pool_enabled());
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let mut rng = Rng::new(9);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let session = ForwardSession::new(&rt, cfg, "forward_eval_base", &[&base]).unwrap();
+    let dec = session.decoder(None).unwrap();
+    let mut st = session.decode_state(2);
+    let mut logits = vec![0.0f32; 2 * cfg.vocab];
+
+    // warm: prefill both slots, then a few batched steps so the arena
+    // holds every shape the step needs (incl. the CSR/dense prepare,
+    // built once at first touch of each resident weight)
+    let prompt: Vec<i32> = (1..8).collect();
+    for slot in 0..2 {
+        dec.prefill(&mut st, slot, &prompt, &mut logits[..cfg.vocab]).unwrap();
+    }
+    for _ in 0..3 {
+        dec.decode_step(&mut st, &[0, 1], &[3, 5], &mut logits).unwrap();
+    }
+
+    // the decode binding is name-free (no hashing, no format!) and the
+    // arena is warm: a steady-state step must not touch the heap at all
+    let (allocs, bytes, ()) = counted(|| {
+        for _ in 0..5 {
+            dec.decode_step(&mut st, &[0, 1], &[3, 5], &mut logits).unwrap();
+        }
+    });
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "warm decode step touched the heap ({allocs} allocations, {bytes} bytes)"
+    );
+}
+
+#[test]
 fn warm_train_step_has_zero_arena_misses() {
     use shears::data::batch::{Batcher, MaskMode};
     use shears::data::{dataset, Task, Vocab};

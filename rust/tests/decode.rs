@@ -1,0 +1,404 @@
+//! KV-cached incremental decoding: parity against the full re-forward
+//! path, on the golden fixtures (both archs, both SIMD modes, dense and
+//! forced-sparse prepared weights) and at the serving level (greedy
+//! token sequences, admission/retire behavior, truncation signaling,
+//! occupancy metrics).
+//!
+//! Tests in this binary flip the process-global SIMD mode, so they all
+//! serialize on one mutex (the same discipline as tests/simd_modes.rs).
+
+use shears::model::{make_config, ConfigSpec, ModelConfig, ParamStore};
+use shears::ops::linalg::{self, PreparedWeight};
+use shears::ops::{DecodeModel, DecodeState, Dims, Extra, Model, NamedTensors, PreparedCell, Scratch};
+use shears::runtime::Runtime;
+use shears::serve::{Decoder, GenRequest};
+use shears::tensor::HostTensor;
+use shears::util::json::Json;
+use shears::util::rng::Rng;
+use std::rc::Rc;
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ------------------------------------------------------ fixture loading
+
+fn load_fixture(name: &str) -> Json {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} missing ({e})", path.display()));
+    Json::parse(&text).expect("fixture json")
+}
+
+fn tensor(j: &Json) -> HostTensor {
+    let shape = j.at("shape").as_shape().expect("tensor shape");
+    let data = j.at("data").as_arr().expect("tensor data");
+    if j.at("dtype").as_str() == Some("i32") {
+        HostTensor::from_i32(&shape, data.iter().map(|v| v.as_f64().unwrap() as i32).collect())
+    } else {
+        HostTensor::from_f32(&shape, data.iter().map(|v| v.as_f64().unwrap() as f32).collect())
+    }
+}
+
+fn fixture_config(j: &Json) -> ModelConfig {
+    let c = j.at("config");
+    let us = |k: &str| c.at(k).as_usize().unwrap();
+    make_config(&ConfigSpec {
+        name: "fixture".into(),
+        arch: c.at("arch").as_str().unwrap().into(),
+        d_model: us("d_model"),
+        n_layers: us("n_layers"),
+        n_heads: us("n_heads"),
+        d_ff: us("d_ff"),
+        vocab: us("vocab"),
+        seq_len: us("seq_len"),
+        max_rank: us("max_rank"),
+        rank_choices: c.at("rank_choices").as_shape().unwrap(),
+        lora_alpha: c.at("lora_alpha").as_f64().unwrap(),
+        targets: c
+            .at("targets")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_str().unwrap().to_string())
+            .collect(),
+        batch_train: us("batch_train"),
+        batch_eval: us("batch_eval"),
+        prefix_len: us("prefix_len"),
+        bottleneck: us("bottleneck"),
+    })
+}
+
+fn assert_close(tag: &str, ours: &[f32], want: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(ours.len(), want.len(), "{tag}: length mismatch");
+    for (i, (a, b)) in ours.iter().zip(want).enumerate() {
+        let tol = atol + rtol * b.abs();
+        assert!((a - b).abs() <= tol, "{tag}[{i}]: decode {a} vs forward {b} (tol {tol})");
+    }
+}
+
+// ------------------------------------------------- fixture-level parity
+
+/// Prefill + batched one-token steps must reproduce the full forward's
+/// logits at every position, for the base model and under the elastic
+/// rank mask, with host weights or forced-sparse prepared cells.
+fn decode_matches_full_forward(file: &str, force_sparse: bool) {
+    let fx = load_fixture(file);
+    let cfg = fixture_config(&fx);
+    let inputs: Vec<(String, HostTensor)> = fx
+        .at("inputs")
+        .as_obj()
+        .unwrap()
+        .iter()
+        .map(|(k, v)| (k.clone(), tensor(v)))
+        .collect();
+    let cells: Vec<(String, PreparedCell)> = if force_sparse {
+        inputs
+            .iter()
+            .filter(|(_, t)| t.is_f32() && t.shape.len() == 2)
+            .map(|(name, t)| {
+                let (n, k) = (t.shape[0], t.shape[1]);
+                let pw = PreparedWeight::build_with_threshold(t.f32s(), n, k, 0.0);
+                assert!(pw.is_sparse(), "{name}: threshold 0 must force CSR");
+                let cell = PreparedCell::default();
+                *cell.borrow_mut() = Some(Rc::new(pw));
+                (name.clone(), cell)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut named = NamedTensors::new();
+    for (k, t) in &inputs {
+        match cells.iter().find(|(n, _)| n == k) {
+            Some((_, cell)) => named.insert_prepared(k, t, cell),
+            None => named.insert(k, t),
+        }
+    }
+    let x = inputs.iter().find(|(k, _)| k == "x").unwrap().1.i32s();
+    let rank_mask = named.f("rank_mask").unwrap();
+    let (b, s, v) = (2usize, cfg.seq_len, cfg.vocab);
+    let sc = Scratch::new();
+
+    for use_adapters in [false, true] {
+        let model = Model {
+            dims: Dims::from_config(&cfg, b),
+            p: &named,
+            use_adapters,
+            rank_mask: use_adapters.then_some(rank_mask),
+            extra: Extra::None,
+        };
+        let full = model.forward(x, false, false).unwrap().logits;
+        let dec = DecodeModel::bind(&cfg, &named, use_adapters, use_adapters.then_some(rank_mask))
+            .unwrap();
+        let mut st = DecodeState::new(&cfg, b);
+        let mut row = vec![0.0f32; v];
+        let mut step = vec![0.0f32; b * v];
+        let t0 = s / 2;
+        let tag = |p: usize, r: usize| format!("{file} adapters={use_adapters} pos={p} row={r}");
+        for r in 0..b {
+            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], &mut row).unwrap();
+            assert_eq!(st.cached_len(r), t0);
+            let want = &full[(r * s + t0 - 1) * v..(r * s + t0) * v];
+            assert_close(&tag(t0 - 1, r), &row, want, 1e-5, 1e-5);
+        }
+        // advance both slots in one batched step per position, teacher-
+        // forcing the fixture's tokens so every row stays comparable
+        for p in t0..s {
+            let toks = [x[p], x[s + p]];
+            dec.decode_step(&sc, &mut st, &[0, 1], &toks, &mut step).unwrap();
+            for r in 0..b {
+                let want = &full[(r * s + p) * v..(r * s + p + 1) * v];
+                assert_close(&tag(p, r), &step[r * v..(r + 1) * v], want, 1e-5, 1e-5);
+            }
+        }
+        // admission reset touches only the joining slot: re-prefill slot
+        // 0 with row 1's prompt while slot 1 keeps decoding its own
+        let mut st = DecodeState::new(&cfg, b);
+        for r in 0..b {
+            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], &mut row).unwrap();
+        }
+        dec.prefill(&sc, &mut st, 0, &x[s..s + t0 + 1], &mut row).unwrap();
+        let want = &full[(s + t0) * v..(s + t0 + 1) * v];
+        assert_close(
+            &format!("{file} adapters={use_adapters} re-prefill slot0"),
+            &row,
+            want,
+            1e-5,
+            1e-5,
+        );
+        let toks = [x[s + t0 + 1], x[s + t0]];
+        dec.decode_step(&sc, &mut st, &[0, 1], &toks, &mut step).unwrap();
+        assert_close(
+            &format!("{file} adapters={use_adapters} reset slot0"),
+            &step[..v],
+            &full[(s + t0 + 1) * v..(s + t0 + 2) * v],
+            1e-5,
+            1e-5,
+        );
+        assert_close(
+            &format!("{file} adapters={use_adapters} undisturbed slot1"),
+            &step[v..2 * v],
+            &full[(s + t0) * v..(s + t0 + 1) * v],
+            1e-5,
+            1e-5,
+        );
+    }
+}
+
+fn parity_matrix(file: &str) {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    for simd in [true, false] {
+        linalg::set_simd_enabled(simd);
+        decode_matches_full_forward(file, false);
+        decode_matches_full_forward(file, true);
+    }
+    linalg::set_simd_enabled(was);
+}
+
+#[test]
+fn llama_decode_matches_full_forward_all_modes() {
+    parity_matrix("model_llama.json");
+}
+
+#[test]
+fn mpt_decode_matches_full_forward_all_modes() {
+    parity_matrix("model_mpt.json");
+}
+
+// --------------------------------------------------- serve-level parity
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    // nonzero B so the unmerged adapters actually shift the logits
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            rng.fill_normal(adapters.get_mut(&p.name).unwrap().f32s_mut(), 0.0, 0.05);
+        }
+    }
+    (base, adapters)
+}
+
+fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRequest> {
+    use shears::data::{Task, Vocab};
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest { prompt: ex.tokens[..ex.answer_start].to_vec(), max_new_tokens: max_new }
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_and_reforward_paths_generate_identical_tokens() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, adapters) = init_stores(cfg, 31);
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let decoder = Decoder::new(
+        &rt,
+        cfg,
+        "forward_eval",
+        vec![&base, &adapters],
+        Some(space.full_mask()),
+    )
+    .unwrap();
+    // more requests than slots (batch_eval=16) forces slot reuse
+    let reqs = requests(cfg, 20, 77, 4);
+    let (inc, im) = decoder.serve_incremental(&reqs).unwrap();
+    let (ref_, rm) = decoder.serve_reforward(&reqs).unwrap();
+    assert_eq!(inc.len(), ref_.len());
+    for (i, (a, b)) in inc.iter().zip(&ref_).enumerate() {
+        assert_eq!(a.tokens, b.tokens, "request {i}: paths diverged");
+        assert_eq!(a.new_tokens, b.new_tokens, "request {i}");
+        assert_eq!(a.prompt_truncated, b.prompt_truncated, "request {i}");
+    }
+    assert_eq!(im.generated_tokens, rm.generated_tokens);
+    assert_eq!(im.prefills, reqs.len() as u64, "one prefill per admitted request");
+    assert!(im.decode_steps > 0);
+    assert_eq!(im.forwards, im.prefills + im.decode_steps);
+    assert!(im.mean_batch_occupancy > 0.0 && im.mean_batch_occupancy <= 16.0);
+    // the re-forward baseline reports wave forwards, never decode stats
+    assert_eq!(rm.prefills, 0);
+    assert_eq!(rm.decode_steps, 0);
+    assert!(rm.forwards > 0);
+}
+
+#[test]
+fn serve_dispatches_to_incremental_on_native() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 5);
+    let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let reqs = requests(cfg, 6, 11, 3);
+    let (responses, metrics) = decoder.serve(&reqs).unwrap();
+    assert_eq!(responses.len(), 6);
+    assert!(metrics.prefills == 6, "native serve must take the KV path");
+    assert!(responses.iter().all(|r| r.new_tokens >= 1));
+}
+
+#[test]
+fn unsupported_entries_fall_back_to_reforward() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 3);
+    // the prefix baseline has no incremental decode path: serve() must
+    // keep the wave re-forward route instead of erroring
+    let prefix = ParamStore::zeros_like(&cfg.prefix_params);
+    let decoder =
+        Decoder::new(&rt, cfg, "forward_eval_prefix", vec![&base, &prefix], None).unwrap();
+    let reqs = requests(cfg, 3, 55, 2);
+    let (responses, metrics) = decoder.serve(&reqs).unwrap();
+    assert_eq!(responses.len(), 3);
+    assert_eq!(metrics.prefills, 0, "prefix entry must take the re-forward path");
+    assert!(metrics.forwards > 0);
+    assert!(responses.iter().all(|r| r.new_tokens >= 1));
+}
+
+#[test]
+fn truncated_prompts_complete_and_are_flagged() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let s = cfg.seq_len;
+    let (base, _) = init_stores(cfg, 8);
+    let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let long: Vec<i32> = (0..(s as i32 + 10)).map(|i| (i % 50) + 4).collect();
+    let reqs = vec![
+        GenRequest { prompt: long, max_new_tokens: 5 },
+        GenRequest { prompt: vec![], max_new_tokens: 2 },
+    ];
+    for (resp, m) in [
+        decoder.serve_incremental(&reqs).unwrap(),
+        decoder.serve_reforward(&reqs).unwrap(),
+    ] {
+        // a window-filling prompt no longer "completes" silently with
+        // zero signal: it is flagged and still yields >= 1 new token
+        assert!(resp[0].prompt_truncated);
+        assert!(resp[0].new_tokens >= 1);
+        assert!(resp[0].tokens.len() <= s);
+        let admitted: Vec<i32> = (0..(s as i32 - 1)).map(|i| (i % 50) + 4).collect();
+        assert_eq!(resp[0].tokens[..s - 1], admitted[..]);
+        assert_eq!(m.truncated_prompts, 1);
+        // empty prompt: seeded with pad instead of panicking
+        assert!(!resp[1].prompt_truncated);
+        assert!(resp[1].new_tokens >= 1 && resp[1].new_tokens <= 2);
+    }
+}
+
+#[test]
+fn admission_is_fifo_and_slots_never_mix() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    // two slots only: retirement must free a slot for the next request
+    let mut cfg = manifest.config("tiny-llama").unwrap().clone();
+    cfg.batch_eval = 2;
+    let (base, _) = init_stores(&cfg, 12);
+    let decoder = Decoder::new(&rt, &cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let mut reqs = requests(&cfg, 5, 21, 3);
+    reqs[1].max_new_tokens = 1; // retires early, freeing its slot
+    let (responses, metrics) = decoder.serve(&reqs).unwrap();
+    assert_eq!(responses.len(), 5);
+    for (i, (resp, req)) in responses.iter().zip(&reqs).enumerate() {
+        let admitted = req.prompt.len().min(cfg.seq_len - 1).max(1);
+        assert!(
+            resp.tokens.len() > admitted,
+            "request {i} generated nothing"
+        );
+        assert_eq!(
+            resp.tokens[..admitted.min(req.prompt.len())],
+            req.prompt[..admitted.min(req.prompt.len())],
+            "request {i}: response does not extend its own prompt (slot mixup)"
+        );
+        assert_eq!(resp.new_tokens, resp.tokens.len() - admitted, "request {i}");
+        assert!(resp.new_tokens <= req.max_new_tokens, "request {i} overshot");
+    }
+    assert_eq!(responses[1].new_tokens, 1);
+    assert_eq!(metrics.prefills, 5);
+    assert!(metrics.mean_batch_occupancy > 0.0 && metrics.mean_batch_occupancy <= 2.0);
+}
+
+#[test]
+fn generation_never_continues_past_eos() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 40);
+    let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let vocab = shears::data::Vocab::new(cfg.vocab);
+    // no new-token budget in play: sequences run to EOS or a full window
+    let reqs = requests(cfg, 8, 99, usize::MAX);
+    let (responses, _) = decoder.serve(&reqs).unwrap();
+    for (i, (resp, req)) in responses.iter().zip(&reqs).enumerate() {
+        let admitted = req.prompt.len().min(cfg.seq_len - 1).max(1);
+        let generated = &resp.tokens[admitted..];
+        assert!(!generated.is_empty(), "request {i}");
+        for tok in &generated[..generated.len() - 1] {
+            assert_ne!(*tok, vocab.eos, "request {i} generated past EOS");
+        }
+        let last = *generated.last().unwrap();
+        assert!(
+            last == vocab.eos || resp.tokens.len() == cfg.seq_len,
+            "request {i} retired with neither EOS nor a full window"
+        );
+    }
+}

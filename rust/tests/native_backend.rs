@@ -438,6 +438,11 @@ fn serve_decoder_generates_natively() {
     assert_eq!(responses.len(), 6);
     assert!(metrics.generated_tokens >= 6);
     assert!(responses.iter().all(|r| r.new_tokens >= 1));
+    // the native backend serves through the KV-cached decode engine:
+    // one prefill per request, then batched one-token steps
+    assert_eq!(metrics.prefills, 6);
+    assert_eq!(metrics.forwards, metrics.prefills + metrics.decode_steps);
+    assert!(responses.iter().all(|r| !r.prompt_truncated));
 }
 
 // ------------------------------------------------------ property tests

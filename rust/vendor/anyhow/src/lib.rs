@@ -8,7 +8,7 @@
 //! * [`Result`] — alias with `Error` as the default error type.
 //! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
 //!   `Option`.
-//! * [`anyhow!`] / [`bail!`] macros.
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] macros.
 //!
 //! Unlike the real crate there is no backtrace capture and no downcasting;
 //! source errors are flattened into the message chain at conversion time.
@@ -130,6 +130,21 @@ macro_rules! bail {
     };
 }
 
+/// Early-return with an [`Error`] when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            $crate::bail!(concat!("condition failed: ", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +179,18 @@ mod tests {
         assert_eq!(format!("{:#}", inner(9).unwrap_err()), "too big: 9");
         let e = anyhow!("code {}", 7);
         assert_eq!(format!("{e}"), "code 7");
+    }
+
+    #[test]
+    fn ensure_bails_with_message() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            ensure!(x != 5);
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(format!("{:#}", f(12).unwrap_err()), "x too big: 12");
+        assert!(format!("{:#}", f(5).unwrap_err()).contains("x != 5"));
     }
 
     #[test]
