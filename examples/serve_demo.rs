@@ -6,16 +6,19 @@
 //! make artifacts && cargo run --release --example serve_demo
 //! ```
 //!
-//! Runs the same request set twice — batch size 1 vs wave batching — to
-//! show what the L3 batching layer buys on this backend.
+//! Runs the same request set three ways — wave batching, one request at
+//! a time, and the async server driven from four submitter threads with
+//! mixed deadlines — to show what the L3 batching + scheduling layers
+//! buy on this backend.
 
 use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{Task, Vocab};
 use shears::nls::SearchSpace;
 use shears::pruning::Method;
 use shears::runtime::Runtime;
-use shears::serve::{Decoder, GenRequest};
+use shears::serve::{Decoder, GenRequest, ServeServer, ServerOpts, Submit};
 use shears::util::rng::Rng;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::from_env("artifacts")?;
@@ -43,13 +46,16 @@ fn main() -> anyhow::Result<()> {
     let mask = space.rank_mask(&space.heuristic());
 
     let decoder =
-        Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], Some(mask))?;
+        Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], Some(mask.clone()))?;
 
     let mut rng = Rng::new(9);
     let requests: Vec<GenRequest> = (0..48)
         .map(|_| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
-            GenRequest { prompt: ex.tokens[..=ex.answer_start.min(ex.tokens.len() - 1) - 1].to_vec(), max_new_tokens: 6 }
+            GenRequest::new(
+                ex.tokens[..=ex.answer_start.min(ex.tokens.len() - 1) - 1].to_vec(),
+                6,
+            )
         })
         .collect();
 
@@ -76,14 +82,96 @@ fn main() -> anyhow::Result<()> {
         lat.push(t1.elapsed().as_secs_f64() * 1e3);
     }
     let wall = t.elapsed().as_secs_f64();
-    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    shears::util::sort_for_percentiles(&mut lat);
     println!(
         "sequential    : {:>7.1} tok/s  occupancy  1.0/{}  p50 {:>6.1} ms  p99 {:>6.1} ms",
         seq_tokens as f64 / wall,
         cfg.batch_eval,
-        lat[lat.len() / 2],
-        lat[(lat.len() - 1).min(lat.len() * 99 / 100)]
+        shears::util::percentile(&lat, 0.50),
+        shears::util::percentile(&lat, 0.99)
     );
     println!("\nbatching speedup: {:.1}x", m.tokens_per_sec / (seq_tokens as f64 / wall));
+
+    // async frontend: four submitter threads share the queue; half the
+    // traffic carries deadlines, so admission is EDF instead of FIFO.
+    // The server thread owns its own backend + stores (they are not
+    // `Send`), exactly like the eval router. The server always decodes
+    // natively, so skip the comparison when the rows above measured a
+    // different backend — an async-vs-batch line must not attribute a
+    // backend difference to the scheduling layer.
+    if !rt.supports_decode() {
+        println!("\n(async server demo skipped — the sections above ran a non-native backend;");
+        println!(" rerun with SHEARS_BACKEND=native for an apples-to-apples async comparison)");
+        return Ok(());
+    }
+    println!("\n== async server: 4 submitter threads, EDF admission (native decode) ==");
+    let server = ServeServer::spawn(
+        ServerOpts {
+            backend: "native".into(),
+            config: "tiny-llama".into(),
+            entry: "forward_eval".into(),
+            queue_cap: requests.len(),
+            ..Default::default()
+        },
+        vec![base.clone(), adapters.clone()],
+        Some(mask),
+    )?;
+    std::thread::scope(|scope| {
+        for (t, chunk) in requests.chunks(requests.len() / 4).enumerate() {
+            let h = server.handle();
+            scope.spawn(move || {
+                let streams: Vec<_> = chunk
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, r)| {
+                        // every other request gets a 250 ms deadline
+                        let r = if i % 2 == 0 {
+                            r.clone().with_deadline(Duration::from_millis(250))
+                        } else {
+                            r.clone()
+                        };
+                        match h.submit(r) {
+                            Submit::Accepted(s) => Some(s),
+                            Submit::Rejected(why) => {
+                                eprintln!("submitter {t}: rejected ({why:?})");
+                                None
+                            }
+                        }
+                    })
+                    .collect();
+                for (i, mut s) in streams.into_iter().enumerate() {
+                    // tokens stream per-request; drain then take the
+                    // final response
+                    let mut n = 0usize;
+                    while s.next_token().is_some() {
+                        n += 1;
+                    }
+                    if let Ok(resp) = s.wait() {
+                        assert_eq!(n, resp.new_tokens, "stream delivered every token");
+                        if t == 0 && i == 0 {
+                            println!(
+                                "  first stream: {} tokens, ttft {:.1} ms, admitted #{}",
+                                resp.new_tokens, resp.ttft_ms, resp.admission_seq
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let am = server.shutdown()?;
+    println!(
+        "async queue   : {:>7.1} tok/s  occupancy {:>4.1}/{}  p50 {:>6.1} ms  p99 {:>6.1} ms",
+        am.tokens_per_sec,
+        am.mean_batch_occupancy,
+        cfg.batch_eval,
+        am.p50_latency_ms,
+        am.p99_latency_ms
+    );
+    println!(
+        "                ttft p50 {:.1} ms / p99 {:.1} ms, {} deadline misses, \
+         max queue depth {}",
+        am.p50_ttft_ms, am.p99_ttft_ms, am.deadline_misses, am.max_queue_depth
+    );
     Ok(())
 }

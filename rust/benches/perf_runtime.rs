@@ -6,7 +6,10 @@
 //! shape, dense vs CSC sparse-aware backward), train-step latency on
 //! both engines, the serving comparison (KV-cached incremental decode
 //! vs the full re-forward wave decoder, greedy sequences asserted
-//! identical), prune-op latency, and the whole-model prune wall —
+//! identical), the `serve.async` offered-load sweep (the EDF async
+//! frontend at several arrival gaps vs the batch API: tok/s, TTFT and
+//! p99 percentiles, deadline misses, `serve_async.*` JSON keys),
+//! prune-op latency, and the whole-model prune wall —
 //! the numbers behind the paper's cost claims ("pruning < 5 minutes",
 //! "a pair of GPU hours" → seconds/minutes here) and this repo's
 //! kernel-engine speedups.
@@ -285,10 +288,10 @@ fn main() {
     let sreqs: Vec<shears::serve::GenRequest> = (0..n_req)
         .map(|_| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut srng, cfg.seq_len);
-            shears::serve::GenRequest {
-                prompt: ex.tokens[..ex.answer_start.min(cfg.seq_len / 2)].to_vec(),
-                max_new_tokens: max_new,
-            }
+            shears::serve::GenRequest::new(
+                ex.tokens[..ex.answer_start.min(cfg.seq_len / 2)].to_vec(),
+                max_new,
+            )
         })
         .collect();
     let s_iters = if fast { 2 } else { 8 };
@@ -324,6 +327,80 @@ fn main() {
     } else {
         println!("  (no incremental decode on this backend — re-forward only)");
         None
+    };
+
+    // ---- serve.async: offered-load sweep through the async frontend ----
+    // Four submitter threads drive the EDF queue at different arrival
+    // gaps (0 = burst); every request carries a 250 ms deadline so the
+    // miss counter is exercised. Compared against the batch-API decode
+    // throughput measured above.
+    let serve_async: Vec<(u64, f64, shears::serve::ServeMetrics)> = if b.rt.supports_decode() {
+        use shears::serve::{ServeServer, ServerOpts, Submit};
+        println!("\n== serve.async: offered-load sweep (4 submitters, EDF queue) ==");
+        let gaps_ms: &[u64] = if fast { &[0, 2] } else { &[0, 1, 4] };
+        let submitters = 4usize;
+        let mut rows = Vec::new();
+        for &gap in gaps_ms {
+            let server = ServeServer::spawn(
+                ServerOpts {
+                    backend: "native".into(),
+                    config: "llama-sim-s".into(),
+                    entry: "forward_eval".into(),
+                    queue_cap: sreqs.len() * 2,
+                    ..Default::default()
+                },
+                vec![base.clone(), adapters.clone()],
+                Some(mask.clone()),
+            )
+            .unwrap();
+            let t0 = std::time::Instant::now();
+            std::thread::scope(|scope| {
+                for t in 0..submitters {
+                    let h = server.handle();
+                    let mine: Vec<shears::serve::GenRequest> = sreqs
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i % submitters == t)
+                        .map(|(_, r)| {
+                            r.clone().with_deadline(std::time::Duration::from_millis(250))
+                        })
+                        .collect();
+                    scope.spawn(move || {
+                        let mut streams = Vec::new();
+                        for r in mine {
+                            if gap > 0 {
+                                std::thread::sleep(std::time::Duration::from_millis(gap));
+                            }
+                            match h.submit(r) {
+                                Submit::Accepted(s) => streams.push(s),
+                                Submit::Rejected(why) => {
+                                    panic!("bench submission rejected: {why:?}")
+                                }
+                            }
+                        }
+                        for s in streams {
+                            s.wait().unwrap();
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            let m = server.shutdown().unwrap();
+            let tok_s = m.generated_tokens as f64 / wall.max(1e-9);
+            assert_eq!(m.rejected, 0, "sweep sized under queue_cap");
+            assert_eq!(m.requests, sreqs.len() as u64);
+            println!(
+                "  gap {gap:>2} ms: {tok_s:>8.0} tok/s  ttft p50 {:>6.2} / p99 {:>6.2} ms  \
+                 p99 lat {:>7.2} ms  misses {:>2}  max depth {:>2}",
+                m.p50_ttft_ms, m.p99_ttft_ms, m.p99_latency_ms, m.deadline_misses,
+                m.max_queue_depth
+            );
+            rows.push((gap, tok_s, m));
+        }
+        rows
+    } else {
+        println!("\n  (serve.async skipped — no incremental decode on this backend)");
+        Vec::new()
     };
 
     // ---- prune op latency ----
@@ -428,6 +505,21 @@ fn main() {
             format!("{:.2}x", inc_tok_s / ref_tok_s),
         ]);
     }
+    if let Some((gap, tok_s, am)) = serve_async.first().map(|(g, t, m)| (*g, *t, m)) {
+        table.row(vec![
+            format!("serve async (burst, gap {gap} ms)"),
+            format!(
+                "{tok_s:.0} tok/s (ttft p50 {:.2} ms, p99 lat {:.2} ms, {} misses)",
+                am.p50_ttft_ms, am.p99_latency_ms, am.deadline_misses
+            ),
+        ]);
+        if let Some((inc_tok_s, _)) = &serve_decode {
+            table.row(vec![
+                "serve async vs batch API".into(),
+                format!("{:.2}x", tok_s / inc_tok_s),
+            ]);
+        }
+    }
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
     if let Some(mp) = miss_per_eval {
@@ -493,6 +585,30 @@ fn main() {
         serve_obj.push(("mean_occupancy", num(inc_m.mean_batch_occupancy)));
     }
     json.push(("serve", obj(serve_obj)));
+    if !serve_async.is_empty() {
+        let sweep: Vec<Json> = serve_async
+            .iter()
+            .map(|(gap, tok_s, m)| {
+                obj(vec![
+                    ("gap_ms", num(*gap as f64)),
+                    ("tok_per_s", num(*tok_s)),
+                    ("ttft_p50_ms", num(m.p50_ttft_ms)),
+                    ("ttft_p99_ms", num(m.p99_ttft_ms)),
+                    ("p50_latency_ms", num(m.p50_latency_ms)),
+                    ("p99_latency_ms", num(m.p99_latency_ms)),
+                    ("deadline_misses", num(m.deadline_misses as f64)),
+                    ("rejected", num(m.rejected as f64)),
+                    ("max_queue_depth", num(m.max_queue_depth as f64)),
+                    ("mean_occupancy", num(m.mean_batch_occupancy)),
+                ])
+            })
+            .collect();
+        let mut sa = vec![("submitters", num(4.0)), ("sweep", arr(sweep))];
+        if let Some((inc_tok_s, _)) = &serve_decode {
+            sa.push(("batch_api_tok_per_s", num(*inc_tok_s)));
+        }
+        json.push(("serve_async", obj(sa)));
+    }
     json.push((
         "prune",
         obj(vec![

@@ -281,17 +281,13 @@ fn send_metrics(tx: &Sender<RouterMetrics>, m: &RouterMetrics, lat: &[f64]) {
     } else {
         0.0
     };
+    // shared nearest-rank percentile (crate::util) — small samples
+    // report the true tail instead of an interior element, and the
+    // router cannot drift from the serving metrics path
     let mut sorted = lat.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let pct = |p: f64| -> f64 {
-        if sorted.is_empty() {
-            0.0
-        } else {
-            sorted[((sorted.len() - 1) as f64 * p) as usize]
-        }
-    };
-    out.p50_latency_ms = pct(0.50);
-    out.p99_latency_ms = pct(0.99);
+    crate::util::sort_for_percentiles(&mut sorted);
+    out.p50_latency_ms = crate::util::percentile(&sorted, 0.50);
+    out.p99_latency_ms = crate::util::percentile(&sorted, 0.99);
     let _ = tx.send(out);
 }
 

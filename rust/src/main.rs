@@ -19,7 +19,7 @@ use shears::coordinator::{PipelineOpts, ShearsPipeline};
 use shears::data::{self, Task, Vocab};
 use shears::pruning::Method;
 use shears::runtime::Runtime;
-use shears::serve::{Decoder, GenRequest};
+use shears::serve::{Decoder, GenRequest, ServeServer, ServerOpts, Submit};
 use shears::train::evaluate;
 use shears::util::rng::Rng;
 
@@ -45,6 +45,21 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "workdir", default: Some("runs"), help: "checkpoint cache directory" },
         FlagSpec { name: "requests", default: Some("32"), help: "serve: request count" },
         FlagSpec { name: "max-new", default: Some("8"), help: "serve: max new tokens" },
+        FlagSpec {
+            name: "submitters",
+            default: Some("0"),
+            help: "serve: submitter threads driving the async queue (0 = batch API)",
+        },
+        FlagSpec {
+            name: "queue-cap",
+            default: Some("64"),
+            help: "serve: async pending-queue bound (submissions past it are rejected)",
+        },
+        FlagSpec {
+            name: "deadline-ms",
+            default: Some("0"),
+            help: "serve: per-request deadline for EDF admission (0 = best effort)",
+        },
         FlagSpec {
             name: "threads",
             default: Some("0"),
@@ -275,19 +290,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
     let (base, _) = pipeline.pretrained_base()?;
-    let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None)?;
     let vocab = Vocab::new(cfg.vocab);
     let mut rng = Rng::new(7);
+    let deadline_ms = args.get_usize("deadline-ms")?;
     let requests: Vec<GenRequest> = (0..args.get_usize("requests")?)
         .map(|_| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
-            GenRequest {
-                prompt: ex.tokens[..ex.answer_start].to_vec(),
-                max_new_tokens: args.get_usize("max-new").unwrap_or(8),
+            let mut r = GenRequest::new(
+                ex.tokens[..ex.answer_start].to_vec(),
+                args.get_usize("max-new").unwrap_or(8),
+            );
+            if deadline_ms > 0 {
+                r = r.with_deadline(std::time::Duration::from_millis(deadline_ms as u64));
             }
+            r
         })
         .collect();
-    let (_responses, metrics) = decoder.serve(&requests)?;
+
+    let submitters = args.get_usize("submitters")?;
+    let metrics = if submitters == 0 {
+        // synchronous batch API: fixed slice, FIFO admission, blocks
+        let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None)?;
+        let (_responses, metrics) = decoder.serve(&requests)?;
+        metrics
+    } else {
+        // async frontend: the server thread owns its own backend + the
+        // stores; N submitter threads drive the deadline-ordered queue
+        let server = ServeServer::spawn(
+            ServerOpts {
+                backend: args.get("backend").to_string(),
+                artifacts_dir: args.get("artifacts").to_string(),
+                config: args.get("config").to_string(),
+                entry: "forward_eval_base".into(),
+                slots: 0,
+                queue_cap: args.get_usize("queue-cap")?,
+            },
+            vec![base],
+            None,
+        )?;
+        let per = requests.len().div_ceil(submitters.max(1));
+        std::thread::scope(|scope| {
+            for (t, chunk) in requests.chunks(per.max(1)).enumerate() {
+                let h = server.handle();
+                scope.spawn(move || {
+                    let streams: Vec<_> = chunk
+                        .iter()
+                        .filter_map(|r| match h.submit(r.clone()) {
+                            Submit::Accepted(s) => Some(s),
+                            Submit::Rejected(why) => {
+                                eprintln!("submitter {t}: request rejected ({why:?})");
+                                None
+                            }
+                        })
+                        .collect();
+                    for s in streams {
+                        if let Err(e) = s.wait() {
+                            eprintln!("submitter {t}: {e:#}");
+                        }
+                    }
+                });
+            }
+        });
+        let metrics = server.shutdown()?;
+        println!(
+            "async queue [{submitters} submitters]: ttft p50 {:.1} ms / p99 {:.1} ms, \
+             {} deadline misses, {} rejected, max queue depth {}",
+            metrics.p50_ttft_ms,
+            metrics.p99_ttft_ms,
+            metrics.deadline_misses,
+            metrics.rejected,
+            metrics.max_queue_depth
+        );
+        metrics
+    };
     println!(
         "served {} requests: {:.1} tok/s, occupancy {:.1}/{}, p50 {:.1} ms, p99 {:.1} ms",
         metrics.requests,

@@ -3,18 +3,37 @@
 //! Demonstrates the paper's §4.4 deployment claim — the Shears model
 //! serves inference with adapters *unmerged* (merging would destroy the
 //! base-weight sparsity) — as a continuous-batching decoder. On the
-//! native backend generation is **KV-cached incremental decoding**
-//! ([`Decoder::serve_incremental`]): each admitted request is prefilled
-//! once into its slot's cache column, then every wave step advances all
-//! active sequences by one token through batched `M = active` prepared
-//! matmuls — O(1) transformer work per token instead of the O(seq_len)
-//! full re-forward the wave decoder pays. The re-forward path
-//! ([`Decoder::serve_reforward`]) remains as the PJRT fallback and the
-//! parity baseline: greedy token sequences are identical between the
-//! two (`rust/tests/decode.rs`).
+//! native backend generation is **KV-cached incremental decoding**: each
+//! admitted request is prefilled once into its slot's cache column, then
+//! every wave step advances all active sequences by one token through
+//! batched `M = active` prepared matmuls — O(1) transformer work per
+//! token instead of the O(seq_len) full re-forward the wave decoder
+//! pays. The re-forward path ([`Decoder::serve_reforward`]) remains as
+//! the PJRT fallback and the parity baseline: greedy token sequences are
+//! identical between the two (`rust/tests/decode.rs`).
 //!
-//! Latency/throughput metrics come out per run (examples/serve_demo.rs,
-//! `perf_runtime`'s `serve` section).
+//! Two frontends share the decode machinery:
+//!
+//! * [`Decoder::serve`] — the synchronous batch API: a fixed request
+//!   slice, FIFO admission, blocks until the queue drains.
+//! * [`server::ServeServer`] — the asynchronous frontend: any thread
+//!   submits [`GenRequest`]s (optionally carrying a deadline and a
+//!   priority) over a channel and gets a streaming handle back, while a
+//!   dedicated runtime thread owns the decoder and fills free KV slots
+//!   from a deadline-ordered pending queue (EDF with FIFO tie-break).
+//!
+//! Both are built on [`StepEngine`], the resumable admit/step/retire
+//! core: one decode binding held across the loop, one batched decode
+//! step per call, so the server can interleave queue polls between
+//! steps without re-binding or re-prefilling anything.
+//!
+//! Latency metrics clock from **submission** (the `serve()` call on the
+//! batch path, `submit()` on the async path), so queue wait is visible
+//! in p50/p99 and in the time-to-first-token percentiles.
+
+pub mod server;
+
+pub use server::{RejectReason, ServeServer, ServerOpts, StreamHandle, Submit, SubmitHandle};
 
 use crate::data::Vocab;
 use crate::model::{ModelConfig, ParamStore};
@@ -23,7 +42,7 @@ use crate::tensor::HostTensor;
 use crate::train::ForwardSession;
 use anyhow::{Context, Result};
 use std::cell::RefCell;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One generation request.
 #[derive(Clone, Debug)]
@@ -34,6 +53,32 @@ pub struct GenRequest {
     /// first greedy pick, as the wave decoder always did), so a budget
     /// of 0 behaves like 1.
     pub max_new_tokens: usize,
+    /// Completion budget relative to submission (`submit()` on the
+    /// async server, the `serve()` call on the batch path). The async
+    /// server admits pending requests earliest-deadline-first; a
+    /// request finishing after its deadline is flagged on its response
+    /// and counted in [`ServeMetrics::deadline_misses`]. `None` = best
+    /// effort, admitted after every deadlined request.
+    pub deadline: Option<Duration>,
+    /// Orders the queue among equal deadlines (and within the
+    /// no-deadline class): higher admits first, FIFO breaks the rest.
+    pub priority: i32,
+}
+
+impl GenRequest {
+    pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
+        GenRequest { prompt, max_new_tokens, deadline: None, priority: 0 }
+    }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> GenRequest {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> GenRequest {
+        self.priority = priority;
+        self
+    }
 }
 
 /// Completed generation.
@@ -41,7 +86,16 @@ pub struct GenRequest {
 pub struct GenResponse {
     pub tokens: Vec<i32>,
     pub new_tokens: usize,
+    /// submission → completion, queue wait included
     pub latency_ms: f64,
+    /// submission → first generated token (the prefill's greedy pick)
+    pub ttft_ms: f64,
+    /// the request had a deadline and completed after it
+    pub deadline_missed: bool,
+    /// order this request was admitted to a KV slot (0-based); under
+    /// the async server this exposes the EDF schedule, on the batch
+    /// path it equals the FIFO request order
+    pub admission_seq: u64,
     /// The prompt exceeded the context window and was cut to `seq_len−1`
     /// tokens before decoding (no silent truncation).
     pub prompt_truncated: bool,
@@ -61,31 +115,62 @@ pub struct ServeMetrics {
     pub truncated_prompts: u64,
     pub wall_secs: f64,
     pub tokens_per_sec: f64,
+    /// end-to-end (submission → completion) percentiles, nearest-rank.
+    /// Batch path: exact over the served slice; async server: over a
+    /// bounded window of the most recent completions (see
+    /// `server::METRIC_WINDOW`), so long-lived servers stay O(1).
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// submission → first-token percentiles, nearest-rank (same
+    /// windowing as the latency percentiles)
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    /// completed requests that blew their deadline
+    pub deadline_misses: u64,
+    /// submissions refused at queue capacity (async server only)
+    pub rejected: u64,
+    /// pending queue length at snapshot time (async server only)
+    pub queue_depth: u64,
+    /// pending queue high-water mark (async server only)
+    pub max_queue_depth: u64,
     /// mean active slots per batched step (decode steps on the
     /// incremental path, wave forwards on the re-forward path)
     pub mean_batch_occupancy: f64,
 }
 
 /// Greedy pick over one logits row. Ties resolve to the **highest**
-/// index (`max_by` keeps the last maximum) — one shared helper so both
-/// decoding paths agree even on degenerate rows.
+/// index — one shared helper so both decoding paths agree even on
+/// degenerate rows. NaN entries lose deterministically (a NaN logit
+/// must never make the pick depend on scan order); an all-NaN or empty
+/// row yields `fallback`.
 fn argmax(row: &[f32], fallback: i32) -> i32 {
-    row.iter()
-        .enumerate()
-        .max_by(|a, c| a.1.partial_cmp(c.1).unwrap_or(std::cmp::Ordering::Equal))
-        .map(|(idx, _)| idx as i32)
-        .unwrap_or(fallback)
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &x) in row.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        // `x >= b` keeps the later index on ties
+        let better = match best {
+            Some((_, b)) => x >= b,
+            None => true,
+        };
+        if better {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i as i32).unwrap_or(fallback)
 }
 
 /// Clamp a prompt to the decode window: at most `s − 1` tokens are
 /// admitted so at least one generated position fits. Empty prompts are
 /// seeded with `pad` (the model needs one position to predict from).
-/// Returns the admitted tokens and whether the prompt was cut.
+/// Returns the admitted tokens (with capacity for the full window, so
+/// in-flight token pushes never reallocate) and whether the prompt was
+/// cut.
 fn admit_prompt(prompt: &[i32], s: usize, pad: i32) -> (Vec<i32>, bool) {
     let truncated = prompt.len() > s - 1;
-    let mut toks = prompt[..prompt.len().min(s - 1)].to_vec();
+    let mut toks = Vec::with_capacity(s);
+    toks.extend_from_slice(&prompt[..prompt.len().min(s - 1)]);
     if toks.is_empty() {
         toks.push(pad);
     }
@@ -100,20 +185,255 @@ fn finished(next: i32, eos: i32, new_count: usize, max_new: usize, len: usize, s
 
 /// One in-flight request occupying a batch slot.
 struct Slot {
-    req: usize,
+    /// caller-side identity (batch path: index into the request slice;
+    /// async server: submission sequence number)
+    id: u64,
     toks: Vec<i32>,
     /// prompt tokens actually admitted (new-token accounting base)
     admitted: usize,
     truncated: bool,
-    started: Instant,
+    max_new: usize,
+    /// when the request entered the system, NOT when it won a slot —
+    /// latency and TTFT both clock queue wait
+    submitted: Instant,
+    deadline: Option<Instant>,
+    first_token_at: Option<Instant>,
+    admission_seq: u64,
 }
+
+/// Build the response for a retiring slot. Latency spans submission →
+/// now (queue wait included); TTFT spans submission → first greedy
+/// pick. Moves the token buffer — no allocation on the retire path.
+fn complete(sl: Slot) -> GenResponse {
+    let now = Instant::now();
+    let latency_ms = now.duration_since(sl.submitted).as_secs_f64() * 1e3;
+    let ttft_ms = sl
+        .first_token_at
+        .map(|t| t.duration_since(sl.submitted).as_secs_f64() * 1e3)
+        .unwrap_or(latency_ms);
+    GenResponse {
+        new_tokens: sl.toks.len() - sl.admitted,
+        latency_ms,
+        ttft_ms,
+        deadline_missed: sl.deadline.is_some_and(|d| now > d),
+        admission_seq: sl.admission_seq,
+        prompt_truncated: sl.truncated,
+        tokens: sl.toks,
+    }
+}
+
+// ------------------------------------------------------- step engine
+
+/// The resumable core of KV-cached serving: a decode binding plus the
+/// per-slot bookkeeping, exposed as `admit` / `step` / (implicit)
+/// retire so a caller can interleave its own work — queue polls,
+/// stream delivery — between decode steps without re-binding the
+/// session or re-prefilling anything. [`Decoder::serve_incremental`]
+/// drives it to drain a fixed slice; [`server::ServeServer`]'s runtime
+/// thread drives it forever.
+///
+/// Warm steps are allocation-free: token buffers carry window capacity
+/// from admission, step scratch is preallocated, retirement *moves*
+/// the token buffer into the response (`rust/tests/alloc_count.rs`).
+pub struct StepEngine<'d> {
+    session: DecodeSession<'d>,
+    st: DecodeState,
+    slots: Vec<Option<Slot>>,
+    eos: i32,
+    pad: i32,
+    /// context window (tokens per slot)
+    s: usize,
+    /// vocab (logits row width)
+    v: usize,
+    admissions: u64,
+    prefills: u64,
+    decode_steps: u64,
+    generated_tokens: u64,
+    truncated_prompts: u64,
+    occupancy_sum: u64,
+    // reused step buffers: warm admit/step cycles allocate nothing here
+    row_logits: Vec<f32>,
+    step_logits: Vec<f32>,
+    active: Vec<usize>,
+    step_tokens: Vec<i32>,
+}
+
+impl<'d> StepEngine<'d> {
+    /// `st` fixes the slot count; prefill resets each joining slot, so
+    /// a recycled state's stale contents are never read.
+    pub fn new(session: DecodeSession<'d>, st: DecodeState, vocab: &Vocab) -> StepEngine<'d> {
+        let n = st.n_slots();
+        let s = session.capacity();
+        let v = session.vocab();
+        StepEngine {
+            session,
+            st,
+            slots: (0..n).map(|_| None).collect(),
+            eos: vocab.eos,
+            pad: vocab.pad,
+            s,
+            v,
+            admissions: 0,
+            prefills: 0,
+            decode_steps: 0,
+            generated_tokens: 0,
+            truncated_prompts: 0,
+            occupancy_sum: 0,
+            row_logits: vec![0.0; v],
+            step_logits: vec![0.0; n * v],
+            active: Vec::with_capacity(n),
+            step_tokens: Vec::with_capacity(n),
+        }
+    }
+
+    /// Total KV slots.
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently decoding a request.
+    pub fn active_slots(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Context-window capacity per slot.
+    pub fn window(&self) -> usize {
+        self.s
+    }
+
+    pub fn prefill_count(&self) -> u64 {
+        self.prefills
+    }
+
+    pub fn decode_step_count(&self) -> u64 {
+        self.decode_steps
+    }
+
+    /// Admit one request into the first free slot: clamp the prompt,
+    /// prefill that slot's cache column, pick the first token (emitted
+    /// through `on_token`). Returns the finished response if the
+    /// request retires at prefill (EOS / exhausted budget); otherwise
+    /// the slot joins the next [`StepEngine::step`]. Errors if no slot
+    /// is free — callers gate on [`StepEngine::has_free_slot`].
+    pub fn admit(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        max_new: usize,
+        submitted: Instant,
+        deadline: Option<Instant>,
+        on_token: &mut dyn FnMut(u64, i32),
+    ) -> Result<Option<GenResponse>> {
+        let slot = self.slots.iter().position(|s| s.is_none()).context("admit: no free slot")?;
+        let (mut toks, truncated) = admit_prompt(prompt, self.s, self.pad);
+        let admitted = toks.len();
+        if truncated {
+            self.truncated_prompts += 1;
+        }
+        self.session.prefill(&mut self.st, slot, &toks, &mut self.row_logits)?;
+        self.prefills += 1;
+        let next = argmax(&self.row_logits, self.eos);
+        toks.push(next);
+        self.generated_tokens += 1;
+        let first_token_at = Some(Instant::now());
+        on_token(id, next);
+        let admission_seq = self.admissions;
+        self.admissions += 1;
+        let sl = Slot {
+            id,
+            toks,
+            admitted,
+            truncated,
+            max_new,
+            submitted,
+            deadline,
+            first_token_at,
+            admission_seq,
+        };
+        if finished(next, self.eos, sl.toks.len() - admitted, max_new, sl.toks.len(), self.s) {
+            return Ok(Some(complete(sl)));
+        }
+        self.slots[slot] = Some(sl);
+        Ok(None)
+    }
+
+    /// One batched decode step over every occupied slot: each active
+    /// sequence advances a token (emitted through `on_token`); retiring
+    /// requests are pushed into `retired` (pre-size it to
+    /// [`StepEngine::slots`] and drain between calls — pushes within
+    /// that capacity never allocate). No-op when nothing is active.
+    pub fn step(
+        &mut self,
+        on_token: &mut dyn FnMut(u64, i32),
+        retired: &mut Vec<(u64, GenResponse)>,
+    ) -> Result<()> {
+        self.active.clear();
+        self.step_tokens.clear();
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(sl) = s {
+                self.active.push(i);
+                self.step_tokens.push(*sl.toks.last().expect("active slot has tokens"));
+            }
+        }
+        if self.active.is_empty() {
+            return Ok(());
+        }
+        let out = &mut self.step_logits[..self.active.len() * self.v];
+        self.session.decode_step(&mut self.st, &self.active, &self.step_tokens, out)?;
+        self.decode_steps += 1;
+        self.occupancy_sum += self.active.len() as u64;
+        for (row, &slot) in self.active.iter().enumerate() {
+            let sl = self.slots[slot].as_mut().expect("active slot");
+            let next = argmax(&self.step_logits[row * self.v..(row + 1) * self.v], self.eos);
+            sl.toks.push(next);
+            self.generated_tokens += 1;
+            on_token(sl.id, next);
+            let new_count = sl.toks.len() - sl.admitted;
+            if finished(next, self.eos, new_count, sl.max_new, sl.toks.len(), self.s) {
+                let sl = self.slots[slot].take().expect("active slot");
+                retired.push((sl.id, complete(sl)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Clear every occupied slot (error recovery), returning the ids of
+    /// the requests that were in flight so the caller can fail them.
+    pub fn abort_active(&mut self) -> Vec<u64> {
+        self.slots.iter_mut().filter_map(|s| s.take().map(|sl| sl.id)).collect()
+    }
+
+    /// Fold the engine's cumulative counters into a metrics record.
+    pub fn fold_metrics(&self, m: &mut ServeMetrics) {
+        m.prefills = self.prefills;
+        m.decode_steps = self.decode_steps;
+        m.forwards = self.prefills + self.decode_steps;
+        m.generated_tokens = self.generated_tokens;
+        m.truncated_prompts = self.truncated_prompts;
+        m.mean_batch_occupancy = if self.decode_steps > 0 {
+            self.occupancy_sum as f64 / self.decode_steps as f64
+        } else {
+            0.0
+        };
+    }
+
+    /// Recover the K/V planes for reuse (see [`Decoder::recycle`]).
+    pub fn into_state(self) -> DecodeState {
+        self.st
+    }
+}
+
+// ----------------------------------------------------------- decoder
 
 /// Greedy batched decoder over a forward entry point. The parameter
 /// stores are uploaded once at construction (prepared sparse weights
 /// cached), so generation runs the resident fast path — incrementally
 /// KV-cached on the native backend, wave re-forward otherwise.
 pub struct Decoder<'rt> {
-    cfg: &'rt ModelConfig,
     session: ForwardSession<'rt>,
     rank_mask: Option<HostTensor>,
     pub vocab: Vocab,
@@ -125,19 +445,20 @@ pub struct Decoder<'rt> {
 
 impl<'rt> Decoder<'rt> {
     /// `stores` are uploaded here, at construction; the decoder serves
-    /// from its resident copies. If a store changes afterwards (prune,
-    /// fine-tune step), call [`Decoder::sync`] to re-upload the changed
-    /// weights before serving again.
+    /// from its resident copies (the session keeps its own `cfg`
+    /// snapshot, so nothing here borrows past the runtime). If a store
+    /// changes afterwards (prune, fine-tune step), call
+    /// [`Decoder::sync`] to re-upload the changed weights before
+    /// serving again.
     pub fn new(
         rt: &'rt Runtime,
-        cfg: &'rt ModelConfig,
+        cfg: &ModelConfig,
         entry_name: &str,
-        stores: Vec<&'rt ParamStore>,
+        stores: Vec<&ParamStore>,
         rank_mask: Option<HostTensor>,
     ) -> Result<Self> {
         let session = ForwardSession::new(rt, cfg, entry_name, &stores)?;
         Ok(Decoder {
-            cfg,
             session,
             rank_mask,
             vocab: Vocab::new(cfg.vocab),
@@ -150,6 +471,38 @@ impl<'rt> Decoder<'rt> {
     /// per [`Decoder::serve`] call, so they are never stale.
     pub fn sync(&mut self, stores: &[&ParamStore]) -> Result<()> {
         self.session.sync(stores)
+    }
+
+    /// Whether this decoder can run the KV-cached incremental path
+    /// (native backend + a plain forward entry).
+    pub fn supports_decode(&self) -> bool {
+        self.session.supports_decode()
+    }
+
+    /// The model configuration this decoder serves.
+    pub fn config(&self) -> &ModelConfig {
+        self.session.config()
+    }
+
+    /// Bind a fresh [`StepEngine`] over this decoder's resident
+    /// weights, reusing the cached K/V planes when their slot count
+    /// still matches `config().batch_eval`. Give the planes back with
+    /// [`Decoder::recycle`] when the drive loop ends.
+    pub fn step_engine(&self) -> Result<StepEngine<'_>> {
+        let b = self.session.config().batch_eval;
+        let session = self.session.decoder(self.rank_mask.as_ref())?;
+        let st = self
+            .state
+            .borrow_mut()
+            .take()
+            .filter(|st| st.n_slots() == b)
+            .unwrap_or_else(|| self.session.decode_state(b));
+        Ok(StepEngine::new(session, st, &self.vocab))
+    }
+
+    /// Stash an engine's K/V planes for the next [`Decoder::step_engine`].
+    pub fn recycle(&self, st: DecodeState) {
+        *self.state.borrow_mut() = Some(st);
     }
 
     /// Serve a queue of requests with continuous batching, picking the
@@ -173,119 +526,55 @@ impl<'rt> Decoder<'rt> {
         &self,
         requests: &[GenRequest],
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let session = self.session.decoder(self.rank_mask.as_ref())?;
-        self.serve_with(session, requests)
+        let engine = self.step_engine()?;
+        self.serve_with(engine, requests)
     }
 
-    /// Incremental decoding over an already-bound decode session.
+    /// Drain a fixed request slice through a [`StepEngine`]: FIFO
+    /// admission into free slots, one batched step per wave.
     fn serve_with(
         &self,
-        session: DecodeSession<'_>,
+        mut engine: StepEngine<'_>,
         requests: &[GenRequest],
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let b = self.cfg.batch_eval;
-        let s = self.cfg.seq_len;
-        let v = self.cfg.vocab;
-        let eos = self.vocab.eos;
         let start_all = Instant::now();
-        // reuse the cached K/V planes when present (prefill resets each
-        // joining slot, so a previous queue's contents are never read)
-        let mut st = self
-            .state
-            .borrow_mut()
-            .take()
-            .filter(|st| st.n_slots() == b)
-            .unwrap_or_else(|| self.session.decode_state(b));
         let mut metrics = ServeMetrics { requests: requests.len() as u64, ..Default::default() };
         let mut responses: Vec<Option<GenResponse>> = (0..requests.len()).map(|_| None).collect();
-        let mut latencies: Vec<f64> = Vec::new();
-        let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
+        let mut retired: Vec<(u64, GenResponse)> = Vec::with_capacity(engine.slots());
         let mut next_req = 0usize;
-        let mut occupancy_sum = 0usize;
-        // reused step buffers: warm steps allocate nothing below this fn
-        let mut row_logits = vec![0.0f32; v];
-        let mut step_logits = vec![0.0f32; b * v];
-        let mut active: Vec<usize> = Vec::with_capacity(b);
-        let mut step_tokens: Vec<i32> = Vec::with_capacity(b);
+        let mut sink = |_id: u64, _tok: i32| {};
 
         loop {
             // admission: each free slot prefills one pending request
-            // (resetting only that slot's cache column)
-            for slot in 0..b {
-                if slots[slot].is_some() || next_req >= requests.len() {
-                    continue;
-                }
-                let req = next_req;
+            // (resetting only that slot's cache column). Every request
+            // is stamped with the serve() entry time, so a long queue
+            // shows up in its latency, not just the decode tail.
+            while engine.has_free_slot() && next_req < requests.len() {
+                let id = next_req as u64;
+                let r = &requests[next_req];
                 next_req += 1;
-                let r = &requests[req];
-                let started = Instant::now();
-                let (mut toks, truncated) = admit_prompt(&r.prompt, s, self.vocab.pad);
-                let admitted = toks.len();
-                if truncated {
-                    metrics.truncated_prompts += 1;
-                }
-                session.prefill(&mut st, slot, &toks, &mut row_logits)?;
-                metrics.prefills += 1;
-                metrics.forwards += 1;
-                let next = argmax(&row_logits, eos);
-                toks.push(next);
-                metrics.generated_tokens += 1;
-                let new_count = toks.len() - admitted;
-                if finished(next, eos, new_count, r.max_new_tokens, toks.len(), s) {
-                    let lat = started.elapsed().as_secs_f64() * 1e3;
-                    latencies.push(lat);
-                    responses[req] = Some(GenResponse {
-                        tokens: toks,
-                        new_tokens: new_count,
-                        latency_ms: lat,
-                        prompt_truncated: truncated,
-                    });
-                } else {
-                    slots[slot] = Some(Slot { req, toks, admitted, truncated, started });
+                let deadline = r.deadline.and_then(|d| start_all.checked_add(d));
+                if let Some(resp) =
+                    engine.admit(id, &r.prompt, r.max_new_tokens, start_all, deadline, &mut sink)?
+                {
+                    responses[id as usize] = Some(resp);
                 }
             }
-            active.clear();
-            step_tokens.clear();
-            for (slot, state) in slots.iter().enumerate() {
-                if let Some(sl) = state {
-                    active.push(slot);
-                    step_tokens.push(*sl.toks.last().expect("active slot has tokens"));
-                }
-            }
-            if active.is_empty() {
+            if engine.active_slots() == 0 {
                 if next_req >= requests.len() {
                     break;
                 }
                 continue; // everything admitted finished at prefill; admit more
             }
             // one batched step: every active sequence advances a token
-            let out = &mut step_logits[..active.len() * v];
-            session.decode_step(&mut st, &active, &step_tokens, out)?;
-            metrics.decode_steps += 1;
-            metrics.forwards += 1;
-            occupancy_sum += active.len();
-            for (row, &slot) in active.iter().enumerate() {
-                let state = slots[slot].as_mut().expect("active slot");
-                let next = argmax(&step_logits[row * v..(row + 1) * v], eos);
-                state.toks.push(next);
-                metrics.generated_tokens += 1;
-                let new_count = state.toks.len() - state.admitted;
-                let max_new = requests[state.req].max_new_tokens;
-                if finished(next, eos, new_count, max_new, state.toks.len(), s) {
-                    let state = slots[slot].take().expect("active slot");
-                    let lat = state.started.elapsed().as_secs_f64() * 1e3;
-                    latencies.push(lat);
-                    responses[state.req] = Some(GenResponse {
-                        tokens: state.toks,
-                        new_tokens: new_count,
-                        latency_ms: lat,
-                        prompt_truncated: state.truncated,
-                    });
-                }
+            engine.step(&mut sink, &mut retired)?;
+            for (id, resp) in retired.drain(..) {
+                responses[id as usize] = Some(resp);
             }
         }
-        *self.state.borrow_mut() = Some(st);
-        finalize(metrics, start_all, occupancy_sum, latencies, responses, true)
+        engine.fold_metrics(&mut metrics);
+        self.recycle(engine.into_state());
+        finalize(metrics, start_all, responses)
     }
 
     /// Full re-forward wave decoding: every step recomputes the whole
@@ -295,30 +584,44 @@ impl<'rt> Decoder<'rt> {
         &self,
         requests: &[GenRequest],
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
-        let b = self.cfg.batch_eval;
-        let s = self.cfg.seq_len;
+        let cfg = self.session.config();
+        let b = cfg.batch_eval;
+        let s = cfg.seq_len;
+        let v = cfg.vocab;
         let eos = self.vocab.eos;
         let start_all = Instant::now();
         let mut metrics = ServeMetrics { requests: requests.len() as u64, ..Default::default() };
         let mut responses: Vec<Option<GenResponse>> = (0..requests.len()).map(|_| None).collect();
-        let mut latencies: Vec<f64> = Vec::new();
         let mut slots: Vec<Option<Slot>> = (0..b).map(|_| None).collect();
         let mut next_req = 0usize;
         let mut occupancy_sum = 0usize;
+        let mut admissions = 0u64;
 
         loop {
-            // admit new requests into free slots (continuous batching)
+            // admit new requests into free slots (continuous batching);
+            // the latency clock started at serve() entry for everyone
             for slot in slots.iter_mut() {
                 if slot.is_none() && next_req < requests.len() {
                     let req = next_req;
                     next_req += 1;
-                    let (toks, truncated) =
-                        admit_prompt(&requests[req].prompt, s, self.vocab.pad);
+                    let r = &requests[req];
+                    let (toks, truncated) = admit_prompt(&r.prompt, s, self.vocab.pad);
                     if truncated {
                         metrics.truncated_prompts += 1;
                     }
                     let admitted = toks.len();
-                    *slot = Some(Slot { req, toks, admitted, truncated, started: Instant::now() });
+                    *slot = Some(Slot {
+                        id: req as u64,
+                        toks,
+                        admitted,
+                        truncated,
+                        max_new: r.max_new_tokens,
+                        submitted: start_all,
+                        deadline: r.deadline.and_then(|d| start_all.checked_add(d)),
+                        first_token_at: None,
+                        admission_seq: admissions,
+                    });
+                    admissions += 1;
                 }
             }
             let active: Vec<usize> = (0..b).filter(|i| slots[*i].is_some()).collect();
@@ -340,63 +643,57 @@ impl<'rt> Decoder<'rt> {
             metrics.forwards += 1;
 
             // greedy next token per active slot, retire finished
-            let v = self.cfg.vocab;
             let data = logits.f32s();
             for &i in &active {
-                let state = slots[i].as_mut().unwrap();
-                let pos = state.toks.len() - 1;
+                let sl = slots[i].as_mut().unwrap();
+                let pos = sl.toks.len() - 1;
                 let off = (i * s + pos) * v;
                 let next = argmax(&data[off..off + v], eos);
-                state.toks.push(next);
+                sl.toks.push(next);
                 metrics.generated_tokens += 1;
-                let new_count = state.toks.len() - state.admitted;
-                let max_new = requests[state.req].max_new_tokens;
-                if finished(next, eos, new_count, max_new, state.toks.len(), s) {
-                    let state = slots[i].take().unwrap();
-                    let lat = state.started.elapsed().as_secs_f64() * 1e3;
-                    latencies.push(lat);
-                    responses[state.req] = Some(GenResponse {
-                        tokens: state.toks,
-                        new_tokens: new_count,
-                        latency_ms: lat,
-                        prompt_truncated: state.truncated,
-                    });
+                if sl.first_token_at.is_none() {
+                    sl.first_token_at = Some(Instant::now());
+                }
+                let new_count = sl.toks.len() - sl.admitted;
+                if finished(next, eos, new_count, sl.max_new, sl.toks.len(), s) {
+                    let sl = slots[i].take().unwrap();
+                    responses[sl.id as usize] = Some(complete(sl));
                 }
             }
         }
-        finalize(metrics, start_all, occupancy_sum, latencies, responses, false)
+        metrics.mean_batch_occupancy = if metrics.forwards > 0 {
+            occupancy_sum as f64 / metrics.forwards as f64
+        } else {
+            0.0
+        };
+        finalize(metrics, start_all, responses)
     }
 }
 
-/// Shared metric finalization. Occupancy averages over batched steps:
-/// decode steps on the incremental path, wave forwards otherwise.
+/// Shared metric finalization: wall/throughput, nearest-rank latency +
+/// TTFT percentiles and deadline misses read off the completed
+/// responses (occupancy is set by the caller — the two paths average
+/// over different step kinds).
 fn finalize(
     mut metrics: ServeMetrics,
     start_all: Instant,
-    occupancy_sum: usize,
-    mut latencies: Vec<f64>,
     responses: Vec<Option<GenResponse>>,
-    incremental: bool,
 ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
     metrics.wall_secs = start_all.elapsed().as_secs_f64();
     metrics.tokens_per_sec = metrics.generated_tokens as f64 / metrics.wall_secs.max(1e-9);
-    let steps = if incremental { metrics.decode_steps } else { metrics.forwards };
-    metrics.mean_batch_occupancy =
-        if steps > 0 { occupancy_sum as f64 / steps as f64 } else { 0.0 };
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
-    let pct = |p: f64| {
-        if latencies.is_empty() {
-            0.0
-        } else {
-            latencies[((latencies.len() - 1) as f64 * p) as usize]
-        }
-    };
-    metrics.p50_latency_ms = pct(0.5);
-    metrics.p99_latency_ms = pct(0.99);
     let responses = responses
         .into_iter()
         .map(|r| r.context("request never completed"))
         .collect::<Result<Vec<_>>>()?;
+    let mut lat: Vec<f64> = responses.iter().map(|r| r.latency_ms).collect();
+    let mut ttft: Vec<f64> = responses.iter().map(|r| r.ttft_ms).collect();
+    crate::util::sort_for_percentiles(&mut lat);
+    crate::util::sort_for_percentiles(&mut ttft);
+    metrics.p50_latency_ms = crate::util::percentile(&lat, 0.50);
+    metrics.p99_latency_ms = crate::util::percentile(&lat, 0.99);
+    metrics.p50_ttft_ms = crate::util::percentile(&ttft, 0.50);
+    metrics.p99_ttft_ms = crate::util::percentile(&ttft, 0.99);
+    metrics.deadline_misses = responses.iter().filter(|r| r.deadline_missed).count() as u64;
     Ok((responses, metrics))
 }
 
@@ -418,6 +715,8 @@ mod tests {
         let (toks, truncated) = admit_prompt(&prompt[..7], 8, 0);
         assert_eq!(toks.len(), 7);
         assert!(!truncated);
+        // window capacity up front: in-flight pushes never reallocate
+        assert!(toks.capacity() >= 8);
     }
 
     #[test]
@@ -447,5 +746,33 @@ mod tests {
         // the decoder appends one token before any retirement check, so
         // new_count >= 1 even for truncated prompts
         assert!(!finished(7, 2, 0, 4, toks.len(), 48));
+    }
+
+    #[test]
+    fn argmax_nan_loses_deterministically() {
+        // a NaN anywhere must not capture the pick or break ties
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0], -1), 2);
+        assert_eq!(argmax(&[f32::NAN, 1.0, f32::NAN], -1), 1);
+        assert_eq!(argmax(&[3.0, f32::NAN, 1.0], -1), 0);
+        // scan-order invariance: reversing the finite values mirrors
+        // the pick; the NaN never wins from either direction
+        assert_eq!(argmax(&[f32::NAN, 5.0, 4.0], -1), 1);
+        assert_eq!(argmax(&[4.0, 5.0, f32::NAN], -1), 1);
+        // ties still resolve to the highest index with NaNs interleaved
+        assert_eq!(argmax(&[3.0, f32::NAN, 3.0], -1), 2);
+        // all-NaN rows fall back exactly like empty rows
+        assert_eq!(argmax(&[f32::NAN, f32::NAN], 7), 7);
+        // -inf is a real (losing) value, not a NaN
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN], -1), 0);
+    }
+
+    #[test]
+    fn request_builders_set_scheduling_fields() {
+        let r = GenRequest::new(vec![1, 2], 4);
+        assert_eq!(r.deadline, None);
+        assert_eq!(r.priority, 0);
+        let r = r.with_deadline(Duration::from_millis(250)).with_priority(3);
+        assert_eq!(r.deadline, Some(Duration::from_millis(250)));
+        assert_eq!(r.priority, 3);
     }
 }

@@ -1,0 +1,782 @@
+//! Asynchronous serving frontend: submit from any thread, stream
+//! tokens back, deadline-ordered admission.
+//!
+//! Mirrors the `coordinator::router::EvalRouter` thread-owns-backend
+//! pattern: PJRT handles and the native exe cache are not `Send`, so a
+//! dedicated runtime thread builds its own [`Runtime`] + [`Decoder`]
+//! from an explicit spec and drives a [`StepEngine`] in a continuous
+//! admission loop —
+//!
+//! ```text
+//!   ingest (drain the channel; block only when fully idle)
+//!   admit  (free KV slots fill from the pending queue: earliest
+//!           deadline first, priority then FIFO as tie-breaks)
+//!   step   (one batched decode step; stream each token out)
+//! ```
+//!
+//! — so queue polls interleave between decode steps without ever
+//! re-binding the decode session. Backpressure is a bounded pending
+//! queue: [`SubmitHandle::submit`] returns [`Submit::Rejected`] past
+//! `queue_cap` undrained requests instead of buffering unboundedly (or
+//! hanging the caller). Submitters get a [`StreamHandle`] delivering
+//! per-token progress and the final [`GenResponse`]; delivery into a
+//! stream's preallocated buffer keeps warm decode steps allocation-free
+//! on the runtime thread.
+
+use super::{Decoder, GenRequest, GenResponse, ServeMetrics, StepEngine};
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+use crate::tensor::HostTensor;
+use anyhow::{Context, Result};
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AOrd};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// Server construction spec. Like the eval router, the backend is an
+/// explicit choice (`native|pjrt|auto`, the `--backend` grammar) so a
+/// spawner's selection is never overridden by env auto-detection.
+#[derive(Clone, Debug)]
+pub struct ServerOpts {
+    pub backend: String,
+    pub artifacts_dir: String,
+    /// model config name in the backend's manifest
+    pub config: String,
+    /// forward entry to serve (must support incremental decode)
+    pub entry: String,
+    /// concurrent KV slots; 0 = the config's `batch_eval`
+    pub slots: usize,
+    /// bounded pending queue: submissions past this many undrained
+    /// requests come back [`Submit::Rejected`]
+    pub queue_cap: usize,
+}
+
+impl Default for ServerOpts {
+    fn default() -> ServerOpts {
+        ServerOpts {
+            backend: "native".into(),
+            artifacts_dir: "artifacts".into(),
+            config: "tiny-llama".into(),
+            entry: "forward_eval_base".into(),
+            slots: 0,
+            queue_cap: 64,
+        }
+    }
+}
+
+/// Outcome of a submission attempt.
+pub enum Submit {
+    Accepted(StreamHandle),
+    Rejected(RejectReason),
+}
+
+impl Submit {
+    /// Convenience: the stream handle, or an error naming the reason.
+    pub fn accepted(self) -> Result<StreamHandle> {
+        match self {
+            Submit::Accepted(h) => Ok(h),
+            Submit::Rejected(r) => anyhow::bail!("submission rejected: {r:?}"),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// the pending queue is at `queue_cap` — shed load or retry later
+    QueueFull,
+    /// the server is shutting down (or its thread is gone)
+    ShuttingDown,
+}
+
+// ------------------------------------------------------------ streams
+
+struct StreamInner {
+    /// generated tokens in arrival order (prompt tokens not included)
+    tokens: Vec<i32>,
+    done: Option<std::result::Result<GenResponse, String>>,
+}
+
+/// One request's delivery cell: the runtime thread pushes tokens and
+/// the final response; the submitter blocks on the condvar. The token
+/// buffer is preallocated at submission, so warm-path pushes on the
+/// runtime thread never allocate.
+pub(crate) struct StreamShared {
+    inner: Mutex<StreamInner>,
+    cv: Condvar,
+}
+
+impl StreamShared {
+    fn new(capacity: usize) -> StreamShared {
+        StreamShared {
+            inner: Mutex::new(StreamInner { tokens: Vec::with_capacity(capacity), done: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, StreamInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub(crate) fn push_token(&self, t: i32) {
+        self.lock().tokens.push(t);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn finish(&self, r: std::result::Result<GenResponse, String>) {
+        let mut g = self.lock();
+        if g.done.is_none() {
+            g.done = Some(r);
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Caller-side handle to one in-flight request: iterate generated
+/// tokens as they land, then collect the final [`GenResponse`].
+pub struct StreamHandle {
+    shared: Arc<StreamShared>,
+    read: usize,
+    id: u64,
+}
+
+impl StreamHandle {
+    /// Submission sequence number (also the FIFO tie-break key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the next generated token arrives; `None` once the
+    /// request is finished and every token has been consumed.
+    pub fn next_token(&mut self) -> Option<i32> {
+        let mut g = self.shared.lock();
+        loop {
+            if self.read < g.tokens.len() {
+                let t = g.tokens[self.read];
+                self.read += 1;
+                return Some(t);
+            }
+            if g.done.is_some() {
+                return None;
+            }
+            g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Non-blocking variant of [`StreamHandle::next_token`]: `None`
+    /// means "nothing new yet", not necessarily finished.
+    pub fn try_next_token(&mut self) -> Option<i32> {
+        let g = self.shared.lock();
+        if self.read < g.tokens.len() {
+            let t = g.tokens[self.read];
+            self.read += 1;
+            return Some(t);
+        }
+        None
+    }
+
+    /// Block until the request completes; the response's latency/TTFT
+    /// clocks started at submission, so queue wait is included.
+    pub fn wait(self) -> Result<GenResponse> {
+        let mut g = self.shared.lock();
+        loop {
+            if let Some(done) = &g.done {
+                return done
+                    .clone()
+                    .map_err(|e| anyhow::anyhow!("request {}: {e}", self.id));
+            }
+            g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+// ------------------------------------------------------ pending queue
+
+/// A submitted request waiting for a KV slot.
+struct Queued {
+    req: GenRequest,
+    /// submission sequence number — the FIFO tie-break
+    id: u64,
+    submitted: Instant,
+    /// absolute deadline resolved at submission
+    deadline: Option<Instant>,
+    stream: Arc<StreamShared>,
+}
+
+/// Admission order: earliest deadline first (every deadlined request
+/// ahead of the best-effort class), then higher priority, then FIFO.
+/// `BinaryHeap<Reverse<Queued>>` pops the minimum under this order.
+impl Ord for Queued {
+    fn cmp(&self, other: &Self) -> Ordering {
+        let by_deadline = match (self.deadline, other.deadline) {
+            (Some(a), Some(b)) => a.cmp(&b),
+            (Some(_), None) => Ordering::Less,
+            (None, Some(_)) => Ordering::Greater,
+            (None, None) => Ordering::Equal,
+        };
+        by_deadline
+            .then_with(|| other.req.priority.cmp(&self.req.priority))
+            .then_with(|| self.id.cmp(&other.id))
+    }
+}
+
+impl PartialOrd for Queued {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Queued {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Queued {}
+
+// ------------------------------------------------------------- server
+
+enum Msg {
+    Request(Queued),
+    Metrics(Sender<ServeMetrics>),
+    /// hold admission (requests keep queueing; in-flight slots keep
+    /// decoding) — drain control for tests and maintenance
+    Pause,
+    Resume,
+    /// stop accepting, drain pending + in-flight, reply final metrics
+    Shutdown(Option<Sender<ServeMetrics>>),
+}
+
+/// Submit-side state shared between every handle and the runtime
+/// thread. The depth gauge counts accepted-but-not-yet-admitted
+/// requests (channel + pending queue), which is exactly what the
+/// `queue_cap` backpressure bound applies to.
+struct Shared {
+    depth: AtomicUsize,
+    max_depth: AtomicU64,
+    rejected: AtomicU64,
+    accepting: AtomicBool,
+    /// set by the runtime thread right before its final channel drain:
+    /// a submitter observing it after a successful send fails its own
+    /// stream (idempotently), closing the drain/send race — see
+    /// [`SubmitHandle::submit`]
+    closed: AtomicBool,
+    seq: AtomicU64,
+    /// context window, published by the runtime thread before readiness
+    /// (sizes stream buffers so token delivery never reallocates)
+    window: AtomicUsize,
+    queue_cap: usize,
+}
+
+/// Cloneable, `Send` submission endpoint — one per submitter thread.
+#[derive(Clone)]
+pub struct SubmitHandle {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+}
+
+impl SubmitHandle {
+    /// Try to enqueue a request. Non-blocking: past `queue_cap`
+    /// undrained submissions (or after shutdown) this returns
+    /// [`Submit::Rejected`] immediately — callers shed load instead of
+    /// hanging. On acceptance the request is stamped `submitted = now`,
+    /// its relative deadline resolved against that instant.
+    pub fn submit(&self, req: GenRequest) -> Submit {
+        if !self.shared.accepting.load(AOrd::Acquire) {
+            return Submit::Rejected(RejectReason::ShuttingDown);
+        }
+        // reserve a queue token or reject — never overshoots the cap
+        let mut d = self.shared.depth.load(AOrd::Relaxed);
+        loop {
+            if d >= self.shared.queue_cap {
+                self.shared.rejected.fetch_add(1, AOrd::Relaxed);
+                return Submit::Rejected(RejectReason::QueueFull);
+            }
+            match self.shared.depth.compare_exchange_weak(d, d + 1, AOrd::AcqRel, AOrd::Relaxed) {
+                Ok(_) => break,
+                Err(cur) => d = cur,
+            }
+        }
+        self.shared.max_depth.fetch_max(d as u64 + 1, AOrd::Relaxed);
+        let submitted = Instant::now();
+        let deadline = req.deadline.and_then(|dl| submitted.checked_add(dl));
+        let id = self.shared.seq.fetch_add(1, AOrd::Relaxed);
+        // generated tokens ≤ min(budget, window): full capacity up
+        // front keeps the runtime thread's token pushes allocation-free
+        let window = self.shared.window.load(AOrd::Acquire).max(1);
+        let capacity = req.max_new_tokens.saturating_add(1).min(window);
+        let stream = Arc::new(StreamShared::new(capacity));
+        let q = Queued { req, id, submitted, deadline, stream: stream.clone() };
+        if self.tx.send(Msg::Request(q)).is_err() {
+            self.shared.depth.fetch_sub(1, AOrd::AcqRel);
+            return Submit::Rejected(RejectReason::ShuttingDown);
+        }
+        // Shutdown race: if `closed` is still false here (SeqCst order),
+        // our send completed before the runtime thread's final drain
+        // began, so the message is guaranteed to be processed (served or
+        // failed). If it reads true, the drain may already have ended —
+        // fail the stream ourselves; `finish` is idempotent, so whoever
+        // got there first wins and the caller never hangs.
+        if self.shared.closed.load(AOrd::SeqCst) {
+            stream.finish(Err("server shutting down".into()));
+        }
+        Submit::Accepted(StreamHandle { shared: stream, read: 0, id })
+    }
+
+    /// Snapshot the server's cumulative metrics. Blocks for the reply.
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Metrics(tx)).ok().context("serve server gone")?;
+        rx.recv().context("serve server dropped metrics reply")
+    }
+}
+
+/// Handle to the serving thread; dropping it shuts the server down
+/// (draining accepted work first).
+pub struct ServeServer {
+    handle: SubmitHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeServer {
+    /// Spawn the runtime thread, which builds its own backend from
+    /// `opts` and owns `stores` (uploaded once; prepared sparse
+    /// structure cached for the server's lifetime). Fails fast — and
+    /// visibly — if the backend, config, or entry can't serve the
+    /// incremental decode path.
+    pub fn spawn(
+        opts: ServerOpts,
+        stores: Vec<ParamStore>,
+        rank_mask: Option<HostTensor>,
+    ) -> Result<ServeServer> {
+        let (tx, rx) = channel::<Msg>();
+        let shared = Arc::new(Shared {
+            depth: AtomicUsize::new(0),
+            max_depth: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            accepting: AtomicBool::new(true),
+            closed: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            window: AtomicUsize::new(0),
+            queue_cap: opts.queue_cap,
+        });
+        let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let shared_t = shared.clone();
+        let join = std::thread::Builder::new()
+            .name("shears-serve-server".into())
+            .spawn(move || server_main(rx, opts, stores, rank_mask, shared_t, ready_tx))
+            .context("spawn serve-server thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = join.join();
+                anyhow::bail!("serve server failed to start: {e}");
+            }
+            Err(_) => {
+                let _ = join.join();
+                anyhow::bail!("serve server died during startup");
+            }
+        }
+        Ok(ServeServer { handle: SubmitHandle { tx, shared }, join: Some(join) })
+    }
+
+    /// A cloneable submission endpoint for other threads.
+    pub fn handle(&self) -> SubmitHandle {
+        self.handle.clone()
+    }
+
+    pub fn submit(&self, req: GenRequest) -> Submit {
+        self.handle.submit(req)
+    }
+
+    pub fn metrics(&self) -> Result<ServeMetrics> {
+        self.handle.metrics()
+    }
+
+    /// Hold admission (submissions still queue, in-flight requests keep
+    /// decoding). With admission paused the pending queue orders fully
+    /// before any pop — deterministic EDF, used by tests and drains.
+    pub fn pause(&self) -> Result<()> {
+        self.handle.tx.send(Msg::Pause).ok().context("serve server gone")
+    }
+
+    pub fn resume(&self) -> Result<()> {
+        self.handle.tx.send(Msg::Resume).ok().context("serve server gone")
+    }
+
+    /// Stop accepting, drain every accepted request, join the thread,
+    /// and return the final cumulative metrics.
+    pub fn shutdown(mut self) -> Result<ServeMetrics> {
+        self.handle.shared.accepting.store(false, AOrd::Release);
+        let (tx, rx) = channel();
+        self.handle.tx.send(Msg::Shutdown(Some(tx))).ok().context("serve server gone")?;
+        let m = rx.recv().context("serve server dropped final metrics")?;
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        Ok(m)
+    }
+}
+
+impl Drop for ServeServer {
+    fn drop(&mut self) {
+        self.handle.shared.accepting.store(false, AOrd::Release);
+        let _ = self.handle.tx.send(Msg::Shutdown(None));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ------------------------------------------------------ runtime thread
+
+/// Completions sampled for percentile snapshots. A ring over the most
+/// recent window keeps a long-lived server O(1) in memory and bounds
+/// the per-snapshot sort, instead of cloning + sorting an ever-growing
+/// history on the decode thread. Exact (full-history) percentiles
+/// until the window fills — which covers every test and bench run.
+const METRIC_WINDOW: usize = 4096;
+
+struct LoopState {
+    pending: BinaryHeap<Reverse<Queued>>,
+    paused: bool,
+    open: bool,
+    /// accepted submissions seen by the runtime thread
+    requests: u64,
+    /// completed requests (ring write cursor)
+    completed: u64,
+    misses: u64,
+    /// latency/TTFT rings, paired by index (same request)
+    lat: Vec<f64>,
+    ttft: Vec<f64>,
+}
+
+fn record_done(state: &mut LoopState, resp: &GenResponse) {
+    if state.lat.len() < METRIC_WINDOW {
+        state.lat.push(resp.latency_ms);
+        state.ttft.push(resp.ttft_ms);
+    } else {
+        let i = (state.completed as usize) % METRIC_WINDOW;
+        state.lat[i] = resp.latency_ms;
+        state.ttft[i] = resp.ttft_ms;
+    }
+    state.completed += 1;
+    if resp.deadline_missed {
+        state.misses += 1;
+    }
+}
+
+fn snapshot(
+    state: &LoopState,
+    engine: &StepEngine<'_>,
+    shared: &Shared,
+    started: Instant,
+) -> ServeMetrics {
+    let mut m = ServeMetrics { requests: state.requests, ..Default::default() };
+    engine.fold_metrics(&mut m);
+    m.wall_secs = started.elapsed().as_secs_f64();
+    m.tokens_per_sec = m.generated_tokens as f64 / m.wall_secs.max(1e-9);
+    m.queue_depth = shared.depth.load(AOrd::Acquire) as u64;
+    m.max_queue_depth = shared.max_depth.load(AOrd::Relaxed);
+    m.rejected = shared.rejected.load(AOrd::Relaxed);
+    m.deadline_misses = state.misses;
+    // percentiles over the bounded recent-completion window (exact
+    // full-history until METRIC_WINDOW requests have completed)
+    let mut lat = state.lat.clone();
+    let mut ttft = state.ttft.clone();
+    crate::util::sort_for_percentiles(&mut lat);
+    crate::util::sort_for_percentiles(&mut ttft);
+    m.p50_latency_ms = crate::util::percentile(&lat, 0.50);
+    m.p99_latency_ms = crate::util::percentile(&lat, 0.99);
+    m.p50_ttft_ms = crate::util::percentile(&ttft, 0.50);
+    m.p99_ttft_ms = crate::util::percentile(&ttft, 0.99);
+    m
+}
+
+fn handle_msg(
+    msg: Msg,
+    state: &mut LoopState,
+    engine: &StepEngine<'_>,
+    shared: &Shared,
+    started: Instant,
+    final_reply: &mut Option<Sender<ServeMetrics>>,
+) {
+    match msg {
+        Msg::Request(q) => {
+            state.requests += 1;
+            state.pending.push(Reverse(q));
+        }
+        Msg::Metrics(tx) => {
+            let _ = tx.send(snapshot(state, engine, shared, started));
+        }
+        Msg::Pause => state.paused = true,
+        Msg::Resume => state.paused = false,
+        Msg::Shutdown(reply) => {
+            state.open = false;
+            state.paused = false; // a paused drain would never finish
+            shared.accepting.store(false, AOrd::Release);
+            if reply.is_some() {
+                *final_reply = reply;
+            }
+        }
+    }
+}
+
+fn server_main(
+    rx: Receiver<Msg>,
+    opts: ServerOpts,
+    stores: Vec<ParamStore>,
+    rank_mask: Option<HostTensor>,
+    shared: Arc<Shared>,
+    ready: Sender<std::result::Result<(), String>>,
+) {
+    // startup: any failure reports through the readiness handshake so
+    // spawn() errors instead of leaving submitters to hang
+    macro_rules! try_start {
+        ($e:expr) => {
+            match $e {
+                Ok(v) => v,
+                Err(e) => {
+                    shared.accepting.store(false, AOrd::Release);
+                    let _ = ready.send(Err(format!("{:#}", e)));
+                    return;
+                }
+            }
+        };
+    }
+    let rt = try_start!(Runtime::from_flag(&opts.backend, &opts.artifacts_dir));
+    let manifest = try_start!(rt.manifest());
+    let mut cfg = try_start!(manifest.config(&opts.config)).clone();
+    if opts.slots > 0 {
+        cfg.batch_eval = opts.slots;
+    }
+    let store_refs: Vec<&ParamStore> = stores.iter().collect();
+    let decoder = try_start!(Decoder::new(&rt, &cfg, &opts.entry, store_refs, rank_mask));
+    if !decoder.supports_decode() {
+        shared.accepting.store(false, AOrd::Release);
+        let _ = ready.send(Err(format!(
+            "entry '{}' has no incremental decode path on backend '{}' — the async server \
+             schedules admit/step waves; serve this entry through Decoder::serve instead",
+            opts.entry,
+            rt.backend_name()
+        )));
+        return;
+    }
+    let mut engine = try_start!(decoder.step_engine());
+    shared.window.store(engine.window(), AOrd::Release);
+    let _ = ready.send(Ok(()));
+
+    let started = Instant::now();
+    let mut state = LoopState {
+        pending: BinaryHeap::new(),
+        paused: false,
+        open: true,
+        requests: 0,
+        completed: 0,
+        misses: 0,
+        lat: Vec::new(),
+        ttft: Vec::new(),
+    };
+    let mut streams: HashMap<u64, Arc<StreamShared>> = HashMap::new();
+    let mut retired: Vec<(u64, GenResponse)> = Vec::with_capacity(engine.slots());
+    let mut final_reply: Option<Sender<ServeMetrics>> = None;
+
+    loop {
+        // ---- 1. ingest: block only when there is nothing to decode
+        // and nothing admissible; otherwise drain without waiting so
+        // queue polls interleave between decode steps
+        if state.open {
+            let idle = engine.active_slots() == 0 && (state.pending.is_empty() || state.paused);
+            if idle {
+                match rx.recv() {
+                    Ok(m) => {
+                        handle_msg(m, &mut state, &engine, &shared, started, &mut final_reply)
+                    }
+                    Err(_) => {
+                        state.open = false;
+                        state.paused = false;
+                    }
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(m) => {
+                        handle_msg(m, &mut state, &engine, &shared, started, &mut final_reply)
+                    }
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        state.open = false;
+                        state.paused = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if !state.open && state.pending.is_empty() && engine.active_slots() == 0 {
+            break;
+        }
+
+        // ---- 2. admission: free KV slots fill earliest-deadline-first
+        if !state.paused {
+            while engine.has_free_slot() {
+                let Some(Reverse(q)) = state.pending.pop() else { break };
+                shared.depth.fetch_sub(1, AOrd::AcqRel);
+                let Queued { req, id, submitted, deadline, stream } = q;
+                let mut on_token = |_id: u64, t: i32| stream.push_token(t);
+                match engine.admit(
+                    id,
+                    &req.prompt,
+                    req.max_new_tokens,
+                    submitted,
+                    deadline,
+                    &mut on_token,
+                ) {
+                    Ok(Some(resp)) => {
+                        record_done(&mut state, &resp);
+                        stream.finish(Ok(resp));
+                    }
+                    Ok(None) => {
+                        streams.insert(id, stream);
+                    }
+                    Err(e) => stream.finish(Err(format!("{e:#}"))),
+                }
+            }
+        }
+
+        // ---- 3. one batched decode step over the active slots
+        if engine.active_slots() > 0 {
+            let step_res = {
+                let mut on_token = |id: u64, t: i32| {
+                    if let Some(s) = streams.get(&id) {
+                        s.push_token(t);
+                    }
+                };
+                engine.step(&mut on_token, &mut retired)
+            };
+            match step_res {
+                Ok(()) => {
+                    for (id, resp) in retired.drain(..) {
+                        record_done(&mut state, &resp);
+                        if let Some(s) = streams.remove(&id) {
+                            s.finish(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    // fail the in-flight requests, keep serving: the
+                    // queue and future submissions stay live
+                    let msg = format!("{e:#}");
+                    for id in engine.abort_active() {
+                        if let Some(s) = streams.remove(&id) {
+                            s.finish(Err(msg.clone()));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // drained: publish `closed` BEFORE the final sweep. Any send that
+    // completed while `closed` still read false is visible to the
+    // try_recv loop below; a send that observes `closed == true` fails
+    // its own stream (see submit) — between the two, no accepted
+    // request can be left hanging.
+    shared.closed.store(true, AOrd::SeqCst);
+    let final_m = snapshot(&state, &engine, &shared, started);
+    while let Ok(m) = rx.try_recv() {
+        match m {
+            Msg::Request(q) => {
+                shared.depth.fetch_sub(1, AOrd::AcqRel);
+                q.stream.finish(Err("server shutting down".into()));
+            }
+            Msg::Metrics(tx) => {
+                let _ = tx.send(final_m.clone());
+            }
+            Msg::Shutdown(Some(tx)) => {
+                let _ = tx.send(final_m.clone());
+            }
+            _ => {}
+        }
+    }
+    if let Some(tx) = final_reply {
+        let _ = tx.send(final_m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn queued(id: u64, deadline_ms: Option<u64>, priority: i32, base: Instant) -> Queued {
+        Queued {
+            req: GenRequest::new(vec![1], 1).with_priority(priority),
+            id,
+            submitted: base,
+            deadline: deadline_ms.map(|ms| base + Duration::from_millis(ms)),
+            stream: Arc::new(StreamShared::new(2)),
+        }
+    }
+
+    #[test]
+    fn pending_queue_pops_edf_then_priority_then_fifo() {
+        let base = Instant::now();
+        let mut heap: BinaryHeap<Reverse<Queued>> = BinaryHeap::new();
+        // submitted out of order: best-effort first, then deadlines
+        heap.push(Reverse(queued(0, None, 0, base))); // best effort, FIFO-early
+        heap.push(Reverse(queued(1, Some(500), 0, base))); // late deadline
+        heap.push(Reverse(queued(2, Some(100), 0, base))); // early deadline
+        heap.push(Reverse(queued(3, None, 5, base))); // best effort, high prio
+        heap.push(Reverse(queued(4, Some(100), 3, base))); // same deadline, higher prio
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|Reverse(q)| q.id)).collect();
+        // earliest deadline first; equal deadlines by priority; the
+        // no-deadline class last, priority then FIFO
+        assert_eq!(order, vec![4, 2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn fifo_breaks_full_ties() {
+        let base = Instant::now();
+        let mut heap: BinaryHeap<Reverse<Queued>> = BinaryHeap::new();
+        let d = Some(250);
+        heap.push(Reverse(queued(7, d, 1, base)));
+        heap.push(Reverse(queued(3, d, 1, base)));
+        heap.push(Reverse(queued(5, d, 1, base)));
+        let order: Vec<u64> = std::iter::from_fn(|| heap.pop().map(|Reverse(q)| q.id)).collect();
+        assert_eq!(order, vec![3, 5, 7], "equal deadline+priority is FIFO");
+    }
+
+    #[test]
+    fn stream_handle_reads_tokens_then_completion() {
+        let shared = Arc::new(StreamShared::new(4));
+        shared.push_token(11);
+        shared.push_token(12);
+        let mut h = StreamHandle { shared: shared.clone(), read: 0, id: 0 };
+        assert_eq!(h.try_next_token(), Some(11));
+        assert_eq!(h.next_token(), Some(12));
+        assert_eq!(h.try_next_token(), None, "nothing new yet");
+        shared.finish(Ok(GenResponse {
+            tokens: vec![1, 11, 12],
+            new_tokens: 2,
+            latency_ms: 1.0,
+            ttft_ms: 0.5,
+            deadline_missed: false,
+            admission_seq: 0,
+            prompt_truncated: false,
+        }));
+        assert_eq!(h.next_token(), None, "done and fully consumed");
+        let resp = h.wait().unwrap();
+        assert_eq!(resp.tokens, vec![1, 11, 12]);
+    }
+
+    #[test]
+    fn stream_error_surfaces_from_wait() {
+        let shared = Arc::new(StreamShared::new(1));
+        shared.finish(Err("backend exploded".into()));
+        let h = StreamHandle { shared, read: 0, id: 9 };
+        let e = h.wait().unwrap_err();
+        assert!(format!("{e:#}").contains("backend exploded"));
+    }
+}

@@ -300,6 +300,14 @@ impl<'rt> ForwardSession<'rt> {
         Ok(session)
     }
 
+    /// The configuration snapshot this session was built over. Taken at
+    /// construction, so consumers that move across threads with the
+    /// session's owner (the serving decoder handed to the async server
+    /// thread) need no borrow of the manifest that produced it.
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
     /// Re-upload any weights whose generation changed; cheap no-op
     /// otherwise. `stores` must align with the construction-time order.
     pub fn sync(&mut self, stores: &[&ParamStore]) -> Result<()> {

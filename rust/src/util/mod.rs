@@ -5,3 +5,51 @@ pub mod json;
 pub mod log;
 pub mod prop;
 pub mod rng;
+
+/// Sort a latency sample ascending for [`percentile`]. NaNs (which a
+/// healthy metrics path never produces) sort as equal so the sort stays
+/// total instead of panicking.
+pub fn sort_for_percentiles(values: &mut [f64]) {
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}
+
+/// Nearest-rank percentile over an **ascending-sorted** sample: the
+/// smallest element with at least ⌈p·n⌉ values ≤ it. Unlike floor
+/// indexing (`sorted[((n-1) as f64 * p) as usize]`), this reports the
+/// true tail for small samples — at n=20, p=0.99 yields the maximum,
+/// not element 18. Shared by `serve` and the eval router so the two
+/// metric paths cannot drift. Empty input → 0.0.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        // ⌈0.99·20⌉ = 20 → the maximum (floor indexing reported 19.0)
+        assert_eq!(percentile(&v, 0.99), 20.0);
+        assert_eq!(percentile(&v, 0.5), 10.0);
+        assert_eq!(percentile(&v, 1.0), 20.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        // n=4, p50: ⌈2⌉ = rank 2
+        assert_eq!(percentile(&[1.0, 2.0, 3.0, 4.0], 0.5), 2.0);
+    }
+
+    #[test]
+    fn sort_for_percentiles_orders_ascending() {
+        let mut v = vec![3.0, 1.0, 2.0];
+        sort_for_percentiles(&mut v);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        assert_eq!(percentile(&v, 0.99), 3.0);
+    }
+}

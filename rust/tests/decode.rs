@@ -234,7 +234,7 @@ fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRe
     (0..n)
         .map(|_| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
-            GenRequest { prompt: ex.tokens[..ex.answer_start].to_vec(), max_new_tokens: max_new }
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), max_new)
         })
         .collect()
 }
@@ -321,10 +321,7 @@ fn truncated_prompts_complete_and_are_flagged() {
     let (base, _) = init_stores(cfg, 8);
     let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None).unwrap();
     let long: Vec<i32> = (0..(s as i32 + 10)).map(|i| (i % 50) + 4).collect();
-    let reqs = vec![
-        GenRequest { prompt: long, max_new_tokens: 5 },
-        GenRequest { prompt: vec![], max_new_tokens: 2 },
-    ];
+    let reqs = vec![GenRequest::new(long, 5), GenRequest::new(vec![], 2)];
     for (resp, m) in [
         decoder.serve_incremental(&reqs).unwrap(),
         decoder.serve_reforward(&reqs).unwrap(),

@@ -431,7 +431,7 @@ fn serve_decoder_generates_natively() {
     let requests: Vec<GenRequest> = (0..6)
         .map(|_| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
-            GenRequest { prompt: ex.tokens[..ex.answer_start].to_vec(), max_new_tokens: 3 }
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), 3)
         })
         .collect();
     let (responses, metrics) = decoder.serve(&requests).unwrap();

@@ -1,0 +1,342 @@
+//! Async serving frontend (`serve::ServeServer`): greedy sequence
+//! identity with the synchronous batch path under concurrent
+//! submitters (both builtin architectures), deterministic EDF admission
+//! at two slots, bounded-queue backpressure (rejections, not hangs),
+//! deadline-miss accounting, streaming delivery, shutdown semantics,
+//! and the submission-stamped latency clock on the batch path.
+
+use shears::model::{ModelConfig, ParamStore};
+use shears::runtime::Runtime;
+use shears::serve::{
+    Decoder, GenRequest, GenResponse, RejectReason, ServeServer, ServerOpts, Submit,
+};
+use shears::util::rng::Rng;
+use std::time::Duration;
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    // nonzero B so the unmerged adapters actually shift the logits
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            rng.fill_normal(adapters.get_mut(&p.name).unwrap().f32s_mut(), 0.0, 0.05);
+        }
+    }
+    (base, adapters)
+}
+
+fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRequest> {
+    use shears::data::{Task, Vocab};
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), max_new)
+        })
+        .collect()
+}
+
+fn opts(config: &str, entry: &str) -> ServerOpts {
+    ServerOpts { config: config.into(), entry: entry.into(), ..Default::default() }
+}
+
+/// N submitter threads racing through the async server must produce,
+/// per request, exactly the token sequence the synchronous batch path
+/// produces — KV slots are isolated and greedy decoding is
+/// deterministic, so admission order must not leak into content. Also
+/// pins streaming delivery: the handle yields precisely the generated
+/// suffix, in order.
+fn async_matches_batch(config: &str, n_req: usize, seed: u64) {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(config).unwrap();
+    let (base, adapters) = init_stores(cfg, seed);
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let mask = space.full_mask();
+    let decoder = Decoder::new(
+        &rt,
+        cfg,
+        "forward_eval",
+        vec![&base, &adapters],
+        Some(mask.clone()),
+    )
+    .unwrap();
+    let reqs = requests(cfg, n_req, seed ^ 0x5A, 4);
+    let (batch, _) = decoder.serve(&reqs).unwrap();
+
+    let stores = vec![base, adapters];
+    let server = ServeServer::spawn(opts(config, "forward_eval"), stores, Some(mask)).unwrap();
+    let n_threads = 4usize;
+    let mut results: Vec<Option<(GenResponse, Vec<i32>)>> = (0..reqs.len()).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut workers = Vec::new();
+        for t in 0..n_threads {
+            let h = server.handle();
+            let mine: Vec<(usize, GenRequest)> = reqs
+                .iter()
+                .cloned()
+                .enumerate()
+                .filter(|(i, _)| i % n_threads == t)
+                .collect();
+            workers.push(scope.spawn(move || {
+                // submit everything first so the queue actually fills,
+                // then drain token streams and final responses
+                let streams: Vec<_> = mine
+                    .into_iter()
+                    .map(|(i, r)| (i, h.submit(r).accepted().expect("under queue_cap")))
+                    .collect();
+                let mut out = Vec::new();
+                for (i, mut s) in streams {
+                    let mut streamed = Vec::new();
+                    while let Some(tok) = s.next_token() {
+                        streamed.push(tok);
+                    }
+                    out.push((i, s.wait().unwrap(), streamed));
+                }
+                out
+            }));
+        }
+        for w in workers {
+            for (i, resp, streamed) in w.join().unwrap() {
+                results[i] = Some((resp, streamed));
+            }
+        }
+    });
+
+    let mut seqs = Vec::new();
+    for (i, (b, r)) in batch.iter().zip(&results).enumerate() {
+        let (resp, streamed) = r.as_ref().expect("every request completed");
+        assert_eq!(resp.tokens, b.tokens, "{config} request {i}: async diverged from batch");
+        assert_eq!(resp.new_tokens, b.new_tokens, "{config} request {i}");
+        assert_eq!(resp.prompt_truncated, b.prompt_truncated, "{config} request {i}");
+        assert_eq!(
+            streamed[..],
+            resp.tokens[resp.tokens.len() - resp.new_tokens..],
+            "{config} request {i}: stream must deliver exactly the generated suffix"
+        );
+        assert!(resp.ttft_ms <= resp.latency_ms + 1e-6, "{config} request {i}: ttft > latency");
+        assert!(!resp.deadline_missed, "no deadlines were set");
+        seqs.push(resp.admission_seq);
+    }
+    // admissions are a permutation of 0..n — every slot grant accounted
+    seqs.sort_unstable();
+    assert_eq!(seqs, (0..n_req as u64).collect::<Vec<u64>>());
+
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, n_req as u64);
+    assert_eq!(m.prefills, n_req as u64, "one prefill per admitted request");
+    assert_eq!(m.forwards, m.prefills + m.decode_steps);
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.deadline_misses, 0);
+    assert_eq!(m.queue_depth, 0, "shutdown drains the queue");
+    assert!(m.max_queue_depth >= 1, "submissions pass through the gauge");
+    assert!(m.p50_ttft_ms > 0.0 && m.p99_ttft_ms >= m.p50_ttft_ms);
+    assert!(m.p99_latency_ms >= m.p50_latency_ms);
+}
+
+#[test]
+fn concurrent_submitters_match_batch_path_llama() {
+    async_matches_batch("tiny-llama", 12, 31);
+}
+
+#[test]
+fn concurrent_submitters_match_batch_path_mpt() {
+    async_matches_batch("mpt-sim", 8, 13);
+}
+
+/// With admission paused the pending queue orders fully before any pop,
+/// so the schedule is deterministic: earliest deadline first, then the
+/// no-deadline class by priority, FIFO last — regardless of submission
+/// order — observable through `admission_seq` at two KV slots.
+#[test]
+fn edf_admission_order_at_two_slots() {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 5);
+    let server = ServeServer::spawn(
+        ServerOpts { slots: 2, queue_cap: 16, ..opts("tiny-llama", "forward_eval_base") },
+        vec![base],
+        None,
+    )
+    .unwrap();
+    server.pause().unwrap();
+    let reqs = requests(cfg, 4, 11, 3);
+    // submission order deliberately scrambled vs the expected schedule
+    let best_effort = server.submit(reqs[0].clone()).accepted().unwrap();
+    let late = server
+        .submit(reqs[1].clone().with_deadline(Duration::from_secs(5)))
+        .accepted()
+        .unwrap();
+    let early = server
+        .submit(reqs[2].clone().with_deadline(Duration::from_millis(500)))
+        .accepted()
+        .unwrap();
+    let high_prio = server.submit(reqs[3].clone().with_priority(5)).accepted().unwrap();
+    server.resume().unwrap();
+    let r_best = best_effort.wait().unwrap();
+    let r_late = late.wait().unwrap();
+    let r_early = early.wait().unwrap();
+    let r_prio = high_prio.wait().unwrap();
+    assert!(
+        r_early.admission_seq < r_late.admission_seq,
+        "earliest deadline admits first ({} vs {})",
+        r_early.admission_seq,
+        r_late.admission_seq
+    );
+    assert!(
+        r_late.admission_seq < r_prio.admission_seq,
+        "any deadline beats the best-effort class"
+    );
+    assert!(
+        r_prio.admission_seq < r_best.admission_seq,
+        "priority orders the best-effort class ahead of FIFO"
+    );
+    let mut seqs = vec![
+        r_best.admission_seq,
+        r_late.admission_seq,
+        r_early.admission_seq,
+        r_prio.admission_seq,
+    ];
+    seqs.sort_unstable();
+    assert_eq!(seqs, vec![0, 1, 2, 3]);
+    server.shutdown().unwrap();
+}
+
+/// The pending queue is bounded: the submission past `queue_cap` comes
+/// back `Rejected(QueueFull)` immediately — an error the caller sees,
+/// never a hang — while every accepted request still completes.
+#[test]
+fn capacity_overflow_rejects_instead_of_hanging() {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 8);
+    let server = ServeServer::spawn(
+        ServerOpts { queue_cap: 3, ..opts("tiny-llama", "forward_eval_base") },
+        vec![base],
+        None,
+    )
+    .unwrap();
+    server.pause().unwrap(); // queue fills deterministically
+    let reqs = requests(cfg, 4, 21, 2);
+    let accepted: Vec<_> = reqs[..3]
+        .iter()
+        .map(|r| server.submit(r.clone()).accepted().unwrap())
+        .collect();
+    match server.submit(reqs[3].clone()) {
+        Submit::Rejected(RejectReason::QueueFull) => {}
+        Submit::Rejected(other) => panic!("wrong rejection: {other:?}"),
+        Submit::Accepted(_) => panic!("4th submission must bounce off queue_cap=3"),
+    }
+    server.resume().unwrap();
+    for (i, s) in accepted.into_iter().enumerate() {
+        let resp = s.wait().unwrap();
+        assert!(resp.new_tokens >= 1, "accepted request {i} completed");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(m.max_queue_depth, 3);
+}
+
+/// A zero-length deadline is unmeetable: the response is flagged and
+/// the miss counted, but the request is still served to completion.
+#[test]
+fn unmeetable_deadline_is_counted_not_dropped() {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 40);
+    let stores = vec![base];
+    let server = ServeServer::spawn(opts("tiny-llama", "forward_eval_base"), stores, None).unwrap();
+    let req = requests(cfg, 1, 3, 2).pop().unwrap().with_deadline(Duration::ZERO);
+    let resp = server.submit(req).accepted().unwrap().wait().unwrap();
+    assert!(resp.deadline_missed, "completion after an already-expired deadline");
+    assert!(resp.new_tokens >= 1, "missed deadlines still serve");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.deadline_misses, 1);
+}
+
+/// After shutdown the server stops accepting: a late submit is rejected
+/// with `ShuttingDown` (not a hang), while everything accepted before
+/// the drain completed normally.
+#[test]
+fn shutdown_rejects_new_work_after_draining() {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 12);
+    let stores = vec![base];
+    let server = ServeServer::spawn(opts("tiny-llama", "forward_eval_base"), stores, None).unwrap();
+    let reqs = requests(cfg, 2, 9, 3);
+    let s = server.submit(reqs[0].clone()).accepted().unwrap();
+    assert!(s.wait().unwrap().new_tokens >= 1);
+    let late_handle = server.handle();
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 1);
+    match late_handle.submit(reqs[1].clone()) {
+        Submit::Rejected(RejectReason::ShuttingDown) => {}
+        Submit::Rejected(other) => panic!("wrong rejection: {other:?}"),
+        Submit::Accepted(_) => panic!("post-shutdown submission must be rejected"),
+    }
+}
+
+/// A bad spec fails at spawn with a visible error — submitters never
+/// get a handle into a dead server.
+#[test]
+fn spawn_fails_fast_on_undecodable_entry_and_bad_config() {
+    let (base, prefix) = {
+        let rt = Runtime::native().unwrap();
+        let manifest = rt.manifest().unwrap();
+        let cfg = manifest.config("tiny-llama").unwrap();
+        let (base, _) = init_stores(cfg, 3);
+        (base, ParamStore::zeros_like(&cfg.prefix_params))
+    };
+    // the prefix baseline has no incremental decode path
+    let e = ServeServer::spawn(
+        opts("tiny-llama", "forward_eval_prefix"),
+        vec![base.clone(), prefix],
+        None,
+    )
+    .unwrap_err();
+    assert!(format!("{e:#}").contains("decode"), "{e:#}");
+    let e = ServeServer::spawn(opts("no-such-config", "forward_eval_base"), vec![base], None)
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("no-such-config"), "{e:#}");
+}
+
+/// Batch-path satellite: the latency clock starts at the `serve()`
+/// call, not at slot admission. With one KV slot the queue is strictly
+/// sequential, so each request's first token happens after its
+/// predecessor completed — and because every request shares the
+/// serve-entry clock, TTFT and latency must reflect that queue wait.
+#[test]
+fn batch_latency_clocks_from_serve_entry_not_admission() {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let mut cfg = manifest.config("tiny-llama").unwrap().clone();
+    cfg.batch_eval = 1; // one slot: requests run strictly one after another
+    let (base, _) = init_stores(&cfg, 17);
+    let decoder = Decoder::new(&rt, &cfg, "forward_eval_base", vec![&base], None).unwrap();
+    let reqs = requests(&cfg, 3, 29, 4);
+    let (resp, m) = decoder.serve(&reqs).unwrap();
+    for (i, r) in resp.iter().enumerate() {
+        assert_eq!(r.admission_seq, i as u64, "single slot admits FIFO");
+        assert!(r.ttft_ms <= r.latency_ms + 1e-6, "request {i}");
+    }
+    // queue wait is visible: request i's first token cannot precede
+    // request i-1's completion on the shared clock
+    assert!(
+        resp[1].ttft_ms >= resp[0].latency_ms,
+        "request 1 ttft {} < request 0 latency {} — clock started at admission again",
+        resp[1].ttft_ms,
+        resp[0].latency_ms
+    );
+    assert!(resp[2].ttft_ms >= resp[1].latency_ms);
+    // nearest-rank percentiles over 3 samples: p99 is the maximum
+    let max_lat = resp.iter().map(|r| r.latency_ms).fold(0.0f64, f64::max);
+    assert!((m.p99_latency_ms - max_lat).abs() < 1e-9, "p99 over n=3 must be the max");
+}
