@@ -92,6 +92,41 @@ fn main() -> anyhow::Result<()> {
     );
     println!("\nbatching speedup: {:.1}x", m.tokens_per_sec / (seq_tokens as f64 / wall));
 
+    // multi-tenant: three tenants share the sparse base, each serving
+    // its own NLS sub-adapter (a rank-mask slice of the one super-
+    // adapter — adapters stay KB-scale, so tenancy is nearly free).
+    // Requests carry their tenant's id; each KV slot decodes under its
+    // own binding, untagged rows ride the construction-time default.
+    if rt.supports_decode() {
+        println!("\n== multi-tenant: 3 tenant sub-adapters over one shared base ==");
+        for (id, sub) in [
+            ("tenant-max", space.maximal()),
+            ("tenant-mid", space.heuristic()),
+            ("tenant-min", space.minimal()),
+        ] {
+            decoder.register_adapter(id, &space.rank_mask(&sub))?;
+        }
+        let tagged: Vec<GenRequest> = requests
+            .iter()
+            .enumerate()
+            .map(|(i, r)| match i % 4 {
+                0 => r.clone().with_adapter("tenant-max"),
+                1 => r.clone().with_adapter("tenant-mid"),
+                2 => r.clone().with_adapter("tenant-min"),
+                _ => r.clone(), // bare default binding
+            })
+            .collect();
+        let (_resp, tm) = decoder.serve(&tagged)?;
+        println!(
+            "mixed batch   : {:>7.1} tok/s  occupancy {:>4.1}/{}  ({} resident adapters, {} KiB)",
+            tm.tokens_per_sec,
+            tm.mean_batch_occupancy,
+            cfg.batch_eval,
+            decoder.adapter_ids().len(),
+            decoder.adapter_bytes() / 1024
+        );
+    }
+
     // async frontend: four submitter threads share the queue; half the
     // traffic carries deadlines, so admission is EDF instead of FIFO.
     // The server thread owns its own backend + stores (they are not
@@ -116,6 +151,10 @@ fn main() -> anyhow::Result<()> {
         vec![base.clone(), adapters.clone()],
         Some(mask),
     )?;
+    // tenants register against the live server (hot path: builds the
+    // binding on the runtime thread); a third of the traffic below is
+    // tagged, exercising submit-time resolution
+    server.register_adapter("tenant-mid", &space.rank_mask(&space.heuristic()))?;
     std::thread::scope(|scope| {
         for (t, chunk) in requests.chunks(requests.len() / 4).enumerate() {
             let h = server.handle();
@@ -124,12 +163,16 @@ fn main() -> anyhow::Result<()> {
                     .iter()
                     .enumerate()
                     .filter_map(|(i, r)| {
-                        // every other request gets a 250 ms deadline
-                        let r = if i % 2 == 0 {
+                        // every other request gets a 250 ms deadline,
+                        // every third decodes under the registered tenant
+                        let mut r = if i % 2 == 0 {
                             r.clone().with_deadline(Duration::from_millis(250))
                         } else {
                             r.clone()
                         };
+                        if i % 3 == 0 {
+                            r = r.with_adapter("tenant-mid");
+                        }
                         match h.submit(r) {
                             Submit::Accepted(s) => Some(s),
                             Submit::Rejected(why) => {

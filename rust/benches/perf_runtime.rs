@@ -403,6 +403,69 @@ fn main() {
         Vec::new()
     };
 
+    // ---- serve.multi_tenant: mixed per-slot bindings in one batch ----
+    // Three tenants (distinct rank-mask sub-adapters of the resident
+    // super-network) plus untagged default rows: per-row LoRA
+    // application vs the uniform fast path measured above. Greedy
+    // tokens must match what each tenant's isolated decoder picks.
+    let serve_mt: Option<(f64, f64, u64, shears::serve::ServeMetrics)> = if b.rt.supports_decode()
+    {
+        println!("\n== serve.multi_tenant: 3 tenant sub-adapters + default rows ==");
+        let subs = [
+            ("tenant-max", space.maximal()),
+            ("tenant-mid", space.heuristic()),
+            ("tenant-min", space.minimal()),
+        ];
+        for (id, sub) in &subs {
+            decoder.register_adapter(id, &space.rank_mask(sub)).unwrap();
+        }
+        let tagged: Vec<shears::serve::GenRequest> = sreqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| match i % 4 {
+                t @ 0..=2 => r.clone().with_adapter(subs[t].0),
+                _ => r.clone(), // construction-time default binding
+            })
+            .collect();
+        let (mt_resp, mt_m) = decoder.serve_incremental(&tagged).unwrap();
+        // acceptance: per-slot binding must not perturb the other rows —
+        // each tenant's rows match a single-tenant decoder bit-for-bit
+        for (t, (_, sub)) in subs.iter().enumerate() {
+            let iso = shears::serve::Decoder::new(
+                &b.rt,
+                cfg,
+                "forward_eval",
+                vec![&base, &adapters],
+                Some(space.rank_mask(sub)),
+            )
+            .unwrap();
+            let mine: Vec<shears::serve::GenRequest> = sreqs
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % 4 == t)
+                .map(|(_, r)| r.clone())
+                .collect();
+            let (iso_resp, _) = iso.serve_incremental(&mine).unwrap();
+            for (j, i) in (0..tagged.len()).filter(|i| i % 4 == t).enumerate() {
+                assert_eq!(
+                    mt_resp[i].tokens, iso_resp[j].tokens,
+                    "tenant {t} row {i} diverged from its isolated decoder"
+                );
+            }
+        }
+        let mt_stats = time("serve: mixed-tenant incremental", warmup, s_iters, || {
+            decoder.serve_incremental(&tagged).unwrap();
+        });
+        mt_stats.print();
+        let mt_tok_s = mt_m.generated_tokens as f64 / (mt_stats.mean_ms / 1e3);
+        let bytes = decoder.adapter_bytes() as u64;
+        println!("  3 resident tenants, {bytes} adapter bytes");
+        Some((mt_tok_s, mt_stats.mean_ms, bytes, mt_m))
+    } else {
+        println!("\n  (serve.multi_tenant skipped — no incremental decode on this backend)");
+        None
+    };
+
     // ---- prune op latency ----
     let (n, k) = (cfg.prunable[0].shape[0], cfg.prunable[0].shape[1]);
     let op = b.manifest.prune_op("wanda", n, k).unwrap();
@@ -520,6 +583,22 @@ fn main() {
             ]);
         }
     }
+    if let Some((mt_tok_s, _, bytes, mt_m)) = &serve_mt {
+        table.row(vec![
+            "serve mixed-tenant".into(),
+            format!(
+                "{mt_tok_s:.0} tok/s (3 tenants, {} KiB resident, occ {:.1})",
+                bytes / 1024,
+                mt_m.mean_batch_occupancy
+            ),
+        ]);
+        if let Some((inc_tok_s, _)) = &serve_decode {
+            table.row(vec![
+                "per-slot binding overhead".into(),
+                format!("{:.2}x vs uniform", inc_tok_s / mt_tok_s),
+            ]);
+        }
+    }
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
     if let Some(mp) = miss_per_eval {
@@ -608,6 +687,20 @@ fn main() {
             sa.push(("batch_api_tok_per_s", num(*inc_tok_s)));
         }
         json.push(("serve_async", obj(sa)));
+    }
+    if let Some((mt_tok_s, mt_ms, bytes, mt_m)) = &serve_mt {
+        let mut mt = vec![
+            ("tenants", num(3.0)),
+            ("tok_per_s", num(*mt_tok_s)),
+            ("ms", num(*mt_ms)),
+            ("adapter_bytes", num(*bytes as f64)),
+            ("mean_occupancy", num(mt_m.mean_batch_occupancy)),
+            ("decode_steps", num(mt_m.decode_steps as f64)),
+        ];
+        if let Some((inc_tok_s, _)) = &serve_decode {
+            mt.push(("overhead_vs_uniform", num(inc_tok_s / mt_tok_s)));
+        }
+        json.push(("serve_multi_tenant", obj(mt)));
     }
     json.push((
         "prune",

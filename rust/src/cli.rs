@@ -81,9 +81,32 @@ impl Args {
         Ok(self.get(name).parse()?)
     }
 
+    /// Byte-size flag: a plain count, or with a `k`/`m`/`g` suffix
+    /// (binary multiples, case-insensitive) — `64k`, `2M`, `1g`.
+    pub fn get_bytes(&self, name: &str) -> Result<usize> {
+        parse_bytes(self.get(name))
+            .map_err(|e| anyhow::anyhow!("flag --{name}: {e:#}"))
+    }
+
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+}
+
+/// Parse `"512"`, `"64k"`, `"2M"`, `"1g"` into a byte count
+/// (binary multiples). Overflow and junk suffixes are errors.
+pub fn parse_bytes(s: &str) -> Result<usize> {
+    let s = s.trim();
+    let (digits, shift) = match s.char_indices().last() {
+        Some((i, 'k' | 'K')) => (&s[..i], 10),
+        Some((i, 'm' | 'M')) => (&s[..i], 20),
+        Some((i, 'g' | 'G')) => (&s[..i], 30),
+        _ => (s, 0),
+    };
+    let n: usize = digits.trim().parse()?;
+    n.checked_shl(shift)
+        .filter(|v| v >> shift == n)
+        .ok_or_else(|| anyhow::anyhow!("byte size '{s}' overflows"))
 }
 
 pub fn usage(flags: &[FlagSpec], switches: &[&str]) -> String {
@@ -145,5 +168,16 @@ mod tests {
     #[test]
     fn flag_without_value_errors() {
         assert!(Args::parse(&argv(&["t", "--steps"]), &flags(), &[]).is_err());
+    }
+
+    #[test]
+    fn byte_sizes_parse_with_binary_suffixes() {
+        assert_eq!(parse_bytes("0").unwrap(), 0);
+        assert_eq!(parse_bytes("512").unwrap(), 512);
+        assert_eq!(parse_bytes("64k").unwrap(), 64 << 10);
+        assert_eq!(parse_bytes("2M").unwrap(), 2 << 20);
+        assert_eq!(parse_bytes("1g").unwrap(), 1 << 30);
+        assert!(parse_bytes("12q").is_err());
+        assert!(parse_bytes("").is_err());
     }
 }

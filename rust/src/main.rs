@@ -61,6 +61,18 @@ fn flags() -> Vec<FlagSpec> {
             help: "serve: per-request deadline for EDF admission (0 = best effort)",
         },
         FlagSpec {
+            name: "tenants",
+            default: Some("0"),
+            help: "serve: register N tenant sub-adapters and tag requests \
+                   round-robin (0 = single-tenant base entry)",
+        },
+        FlagSpec {
+            name: "adapter-budget",
+            default: Some("0"),
+            help: "serve: resident adapter byte budget, k/m/g suffixes ok \
+                   (0 = unlimited; LRU-evicts idle adapters past it)",
+        },
+        FlagSpec {
             name: "threads",
             default: Some("0"),
             help: "native kernel worker threads (0 = SHEARS_NUM_THREADS or all cores)",
@@ -293,8 +305,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let vocab = Vocab::new(cfg.vocab);
     let mut rng = Rng::new(7);
     let deadline_ms = args.get_usize("deadline-ms")?;
+
+    // multi-tenant mode: N tenants share the sparse base, each serving
+    // its own NLS sub-adapter (a rank-mask over one shared LoRA store);
+    // requests are tagged round-robin, with every (N+1)-th left on the
+    // bare-base default
+    let tenants = args.get_usize("tenants")?;
+    let budget = args.get_bytes("adapter-budget")?;
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let tenant_masks: Vec<(String, shears::tensor::HostTensor)> = {
+        let mut trng = Rng::new(args.get_usize("seed")? as u64 ^ 0x7E4A);
+        (0..tenants)
+            .map(|t| (format!("tenant-{t}"), space.rank_mask(&space.sample(&mut trng))))
+            .collect()
+    };
+    let entry = if tenants > 0 { "forward_eval" } else { "forward_eval_base" };
+
     let requests: Vec<GenRequest> = (0..args.get_usize("requests")?)
-        .map(|_| {
+        .map(|i| {
             let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
             let mut r = GenRequest::new(
                 ex.tokens[..ex.answer_start].to_vec(),
@@ -303,31 +331,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if deadline_ms > 0 {
                 r = r.with_deadline(std::time::Duration::from_millis(deadline_ms as u64));
             }
+            if tenants > 0 && i % (tenants + 1) != tenants {
+                r = r.with_adapter(tenant_masks[i % (tenants + 1)].0.clone());
+            }
             r
         })
         .collect();
 
+    let adapters = (tenants > 0)
+        .then(|| shears::model::ParamStore::init_adapters(cfg, &mut Rng::new(0xADA9)));
     let submitters = args.get_usize("submitters")?;
     let metrics = if submitters == 0 {
         // synchronous batch API: fixed slice, FIFO admission, blocks
-        let decoder = Decoder::new(&rt, cfg, "forward_eval_base", vec![&base], None)?;
+        let mut stores = vec![&base];
+        stores.extend(adapters.as_ref());
+        let decoder = Decoder::new(&rt, cfg, entry, stores, None)?;
+        decoder.set_adapter_budget(budget)?;
+        for (id, mask) in &tenant_masks {
+            decoder.register_adapter(id, mask)?;
+        }
         let (_responses, metrics) = decoder.serve(&requests)?;
+        if tenants > 0 {
+            println!(
+                "tenants: {} resident adapters, {} bytes",
+                decoder.adapter_ids().len(),
+                decoder.adapter_bytes()
+            );
+        }
         metrics
     } else {
         // async frontend: the server thread owns its own backend + the
         // stores; N submitter threads drive the deadline-ordered queue
+        let mut stores = vec![base];
+        stores.extend(adapters);
         let server = ServeServer::spawn(
             ServerOpts {
                 backend: args.get("backend").to_string(),
                 artifacts_dir: args.get("artifacts").to_string(),
                 config: args.get("config").to_string(),
-                entry: "forward_eval_base".into(),
+                entry: entry.into(),
                 slots: 0,
                 queue_cap: args.get_usize("queue-cap")?,
+                adapter_budget_bytes: budget,
             },
-            vec![base],
+            stores,
             None,
         )?;
+        for (id, mask) in &tenant_masks {
+            server.register_adapter(id, mask)?;
+        }
         let per = requests.len().div_ceil(submitters.max(1));
         std::thread::scope(|scope| {
             for (t, chunk) in requests.chunks(per.max(1)).enumerate() {

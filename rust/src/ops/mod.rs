@@ -53,7 +53,7 @@ pub mod scratch;
 
 pub use linalg::PreparedWeight;
 pub use model::{
-    lora_linear, lora_linear_bwd, DecodeModel, DecodeState, Dims, Extra, Forward, GradMode, Grads,
-    Model, NamedTensors, PreparedCell,
+    lora_linear, lora_linear_bwd, AdapterBinding, DecodeModel, DecodeState, Dims, Extra, Forward,
+    GradMode, Grads, Model, NamedTensors, PreparedCell, RowAdapters,
 };
 pub use scratch::Scratch;

@@ -37,6 +37,7 @@ use anyhow::{ensure, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Lazily-built prepared weight slot, owned by a resident buffer
 /// (`runtime::DeviceBuffer`) and shared into [`NamedTensors`] by
@@ -1342,49 +1343,193 @@ impl DecodeState {
     }
 }
 
-/// LoRA adapter binding of one linear: A/B weight slices plus this
-/// module's window of the elastic rank mask.
-struct BoundLora<'a> {
-    a: &'a [f32],
-    b: &'a [f32],
-    mask: &'a [f32],
+/// One adapter target's owned LoRA weights plus its window of the
+/// elastic rank mask: A `[rank, inp]`, B `[out, rank]`, mask `[rank]`.
+/// Sites are ordered by the module's position in
+/// `ModelConfig::adapter_modules`.
+#[derive(Clone, Debug)]
+pub struct AdapterSite {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    mask: Vec<f32>,
+    out: usize,
+    inp: usize,
+}
+
+/// A tenant's complete sub-adapter, detached from any one decoder:
+/// owned LoRA A/B copies for every adapter target plus the tenant's
+/// NLS rank-mask windows. One shared [`DecodeModel`] base serves many
+/// bindings — each slot of a batched [`DecodeModel::decode_step`] can
+/// apply its own, so mixed-tenant batches share the base matmuls,
+/// KV cache, and prepared-weight cells built in earlier PRs.
+#[derive(Clone, Debug)]
+pub struct AdapterBinding {
+    sites: Vec<AdapterSite>,
+    bytes: usize,
+}
+
+impl AdapterBinding {
+    /// Resolve one tenant's sub-adapter from an entry's LoRA tensors
+    /// plus that tenant's rank-mask values
+    /// (`[n_modules * max_rank]`, see `nls::SearchSpace::rank_mask`).
+    pub fn from_named(
+        cfg: &ModelConfig,
+        p: &NamedTensors,
+        rank_mask: &[f32],
+    ) -> Result<AdapterBinding> {
+        let r = cfg.max_rank;
+        let mods = &cfg.adapter_modules;
+        ensure!(
+            rank_mask.len() == mods.len() * r,
+            "rank mask holds {} values, expected {} modules x max rank {r}",
+            rank_mask.len(),
+            mods.len()
+        );
+        let mut sites = Vec::with_capacity(mods.len());
+        let mut bytes = std::mem::size_of::<AdapterBinding>();
+        for (idx, name) in mods.iter().enumerate() {
+            let at = p.get(&format!("lora_a.{name}"))?;
+            let bt = p.get(&format!("lora_b.{name}"))?;
+            ensure!(
+                at.shape.len() == 2 && at.shape[0] == r,
+                "adapter bind: lora_a.{name} has shape {:?}, expected [{r}, inp]",
+                at.shape
+            );
+            ensure!(
+                bt.shape.len() == 2 && bt.shape[1] == r,
+                "adapter bind: lora_b.{name} has shape {:?}, expected [out, {r}]",
+                bt.shape
+            );
+            let site = AdapterSite {
+                a: at.f32s().to_vec(),
+                b: bt.f32s().to_vec(),
+                mask: rank_mask[idx * r..(idx + 1) * r].to_vec(),
+                out: bt.shape[0],
+                inp: at.shape[1],
+            };
+            bytes += std::mem::size_of::<AdapterSite>()
+                + (site.a.len() + site.b.len() + site.mask.len()) * std::mem::size_of::<f32>();
+            sites.push(site);
+        }
+        Ok(AdapterBinding { sites, bytes })
+    }
+
+    /// Approximate resident size (owned weight copies + masks) — the
+    /// unit of the serving registry's byte budget.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// A site-less binding with a synthetic byte size — registry
+    /// accounting tests only (fails [`DecodeModel::check_adapter`]).
+    #[doc(hidden)]
+    pub fn synthetic(bytes: usize) -> AdapterBinding {
+        AdapterBinding { sites: Vec::new(), bytes }
+    }
+
+    /// Number of adapter target sites.
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+}
+
+/// Which adapter each row of a decode batch applies (`None` rows run
+/// the bare sparse base).
+#[derive(Clone, Copy)]
+pub enum RowAdapters<'b> {
+    /// Every row shares one binding (or none) — prefill, and
+    /// single-tenant decode.
+    Uniform(Option<&'b AdapterBinding>),
+    /// Row `r` applies `rows[r]` — mixed-tenant decode. `Arc` so the
+    /// engine's reused per-step buffer clones without allocating.
+    PerRow(&'b [Option<Arc<AdapterBinding>>]),
 }
 
 /// One linear of the decode path, resolved at bind time: weight slice,
 /// the resident buffer's cached [`PreparedWeight`] (CSR for pruned
-/// weights), and the unmerged adapter if this module carries one.
+/// weights), and this module's index into each tenant's
+/// [`AdapterBinding`] sites if it is an adapter target.
 struct BoundLinear<'a> {
     w: &'a [f32],
     pw: Option<Rc<PreparedWeight>>,
     out: usize,
     inp: usize,
-    lora: Option<BoundLora<'a>>,
+    site: Option<usize>,
 }
 
 impl BoundLinear<'_> {
     /// `y = x @ Wᵀ (+ scale·((x@Aᵀ)·mask)@Bᵀ)` over `m` rows — the
     /// decode-path mirror of [`Model::lin_fwd`] (same kernels in the
-    /// same order), minus the backward tape.
-    fn fwd(&self, sc: &Scratch, x: &[f32], m: usize, scale: f32, y: &mut [f32]) {
+    /// same order), minus the backward tape. The adapter term uses each
+    /// row's own binding; rows sharing one binding batch the LoRA
+    /// matmuls (the kernels are row-count invariant, so per-row and
+    /// batched application are bit-identical).
+    fn fwd(
+        &self,
+        sc: &Scratch,
+        x: &[f32],
+        m: usize,
+        scale: f32,
+        ads: &RowAdapters,
+        y: &mut [f32],
+    ) {
         match &self.pw {
             Some(pw) => linalg::matmul_nt_prepared_into(x, self.w, pw, m, y),
             None => linalg::matmul_nt_auto_into(x, self.w, m, self.inp, self.out, y),
         }
-        if let Some(l) = &self.lora {
-            let r = l.mask.len();
-            let mut proj = sc.take(m * r);
-            linalg::matmul_nt_into(x, l.a, m, self.inp, r, &mut proj);
-            for row in 0..m {
-                for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
-                    *pv *= l.mask[j];
+        let Some(site) = self.site else { return };
+        match ads {
+            RowAdapters::Uniform(None) => {}
+            RowAdapters::Uniform(Some(b)) => {
+                self.apply_lora(sc, x, 0, m, scale, &b.sites[site], y)
+            }
+            RowAdapters::PerRow(rows) => {
+                let uniform = rows[1..].iter().all(|r| match (&rows[0], r) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+                    _ => false,
+                });
+                if uniform {
+                    if let Some(b) = &rows[0] {
+                        self.apply_lora(sc, x, 0, m, scale, &b.sites[site], y);
+                    }
+                    return;
+                }
+                for (r, ad) in rows.iter().enumerate() {
+                    if let Some(b) = ad {
+                        self.apply_lora(sc, x, r, 1, scale, &b.sites[site], y);
+                    }
                 }
             }
-            let mut yl = sc.take(m * self.out);
-            linalg::matmul_nt_into(&proj, l.b, m, r, self.out, &mut yl);
-            axpy(y, scale, &yl);
-            sc.give(yl);
-            sc.give(proj);
         }
+    }
+
+    /// Adapter term for rows `row0..row0+m`, all applying site `s`.
+    fn apply_lora(
+        &self,
+        sc: &Scratch,
+        x: &[f32],
+        row0: usize,
+        m: usize,
+        scale: f32,
+        s: &AdapterSite,
+        y: &mut [f32],
+    ) {
+        let r = s.mask.len();
+        let xs = &x[row0 * self.inp..(row0 + m) * self.inp];
+        let ys = &mut y[row0 * self.out..(row0 + m) * self.out];
+        let mut proj = sc.take(m * r);
+        linalg::matmul_nt_into(xs, &s.a, m, self.inp, r, &mut proj);
+        for row in 0..m {
+            for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
+                *pv *= s.mask[j];
+            }
+        }
+        let mut yl = sc.take(m * self.out);
+        linalg::matmul_nt_into(&proj, &s.b, m, r, self.out, &mut yl);
+        axpy(ys, scale, &yl);
+        sc.give(yl);
+        sc.give(proj);
     }
 }
 
@@ -1444,15 +1589,17 @@ pub struct DecodeModel<'a> {
     final_g: &'a [f32],
     final_b: Option<&'a [f32]>,
     lm_head: BoundLinear<'a>,
+    /// `(out, inp)` of each adapter target, in `adapter_modules` order;
+    /// empty when the entry runs base-only.
+    site_dims: Vec<(usize, usize)>,
 }
 
-/// Resolve one linear (and its adapter, when `use_adapters` and the
-/// module is an adapter target) from the named tensors.
+/// Resolve one linear from the named tensors, recording its adapter
+/// site index when `use_adapters` and the module is an adapter target.
 fn bind_linear<'a>(
     cfg: &ModelConfig,
     p: &NamedTensors<'a>,
     use_adapters: bool,
-    rank_mask: Option<&'a [f32]>,
     name: &str,
     out: usize,
     inp: usize,
@@ -1464,23 +1611,12 @@ fn bind_linear<'a>(
         w.len()
     );
     let pw = p.prepared(name, out, inp)?;
-    let lora = if use_adapters {
-        match cfg.adapter_modules.iter().position(|m| m == name) {
-            Some(idx) => {
-                let r = cfg.max_rank;
-                let rm = rank_mask.context("adapter decode binding needs a rank mask")?;
-                Some(BoundLora {
-                    a: p.f(&format!("lora_a.{name}"))?,
-                    b: p.f(&format!("lora_b.{name}"))?,
-                    mask: &rm[idx * r..(idx + 1) * r],
-                })
-            }
-            None => None,
-        }
+    let site = if use_adapters {
+        cfg.adapter_modules.iter().position(|m| m == name)
     } else {
         None
     };
-    Ok(BoundLinear { w, pw, out, inp, lora })
+    Ok(BoundLinear { w, pw, out, inp, site })
 }
 
 impl<'a> DecodeModel<'a> {
@@ -1492,12 +1628,11 @@ impl<'a> DecodeModel<'a> {
         cfg: &ModelConfig,
         p: &NamedTensors<'a>,
         use_adapters: bool,
-        rank_mask: Option<&'a [f32]>,
     ) -> Result<DecodeModel<'a>> {
         let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
         let llama = cfg.arch == "llama";
         let lin = |name: String, out: usize, inp: usize| {
-            bind_linear(cfg, p, use_adapters, rank_mask, &name, out, inp)
+            bind_linear(cfg, p, use_adapters, &name, out, inp)
         };
         let norm_b = |name: String| -> Result<Option<&'a [f32]>> {
             if llama {
@@ -1533,6 +1668,41 @@ impl<'a> DecodeModel<'a> {
             "decode bind: embed has {} values, expected {v}x{d}",
             embed.len()
         );
+        let lm_head = bind_linear(cfg, p, use_adapters, "lm_head", v, d)?;
+        // Record each adapter target's dims so tenant bindings can be
+        // shape-checked before a batched step applies them.
+        let mut dims = vec![None; if use_adapters { cfg.adapter_modules.len() } else { 0 }];
+        {
+            let mut note = |l: &BoundLinear| {
+                if let Some(i) = l.site {
+                    dims[i] = Some((l.out, l.inp));
+                }
+            };
+            for lay in &layers {
+                note(&lay.q);
+                note(&lay.k);
+                note(&lay.v);
+                note(&lay.o);
+                if let Some(g) = &lay.gate {
+                    note(g);
+                }
+                note(&lay.up);
+                note(&lay.down);
+            }
+            note(&lm_head);
+        }
+        let site_dims = dims
+            .into_iter()
+            .enumerate()
+            .map(|(i, sd)| {
+                sd.with_context(|| {
+                    format!(
+                        "adapter module '{}' is not bound by the decode path",
+                        cfg.adapter_modules[i]
+                    )
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
         Ok(DecodeModel {
             d,
             nh: cfg.n_heads,
@@ -1546,8 +1716,44 @@ impl<'a> DecodeModel<'a> {
             layers,
             final_g: p.f("final_norm.g")?,
             final_b: norm_b("final_norm".to_string())?,
-            lm_head: bind_linear(cfg, p, use_adapters, rank_mask, "lm_head", v, d)?,
+            lm_head,
+            site_dims,
         })
+    }
+
+    /// Whether this binding resolved adapter target sites (i.e. the
+    /// entry carries unmerged LoRA and tenant bindings can apply).
+    pub fn has_adapter_sites(&self) -> bool {
+        !self.site_dims.is_empty()
+    }
+
+    /// Verify a tenant binding matches this base's adapter targets
+    /// (site count and per-site dims) — a mismatched binding is an
+    /// error up front, not an out-of-bounds panic mid-batch.
+    pub fn check_adapter(&self, b: &AdapterBinding) -> Result<()> {
+        ensure!(
+            !self.site_dims.is_empty(),
+            "decode binding is base-only (no adapter sites); cannot apply a tenant adapter"
+        );
+        ensure!(
+            b.sites.len() == self.site_dims.len(),
+            "adapter binding has {} sites, model expects {}",
+            b.sites.len(),
+            self.site_dims.len()
+        );
+        for (i, (s, &(out, inp))) in b.sites.iter().zip(&self.site_dims).enumerate() {
+            let r = s.mask.len();
+            ensure!(
+                s.out == out
+                    && s.inp == inp
+                    && s.a.len() == r * inp
+                    && s.b.len() == out * r,
+                "adapter site {i} is [{}, {}] rank {r}, model expects [{out}, {inp}]",
+                s.out,
+                s.inp
+            );
+        }
+        Ok(())
     }
 
     /// Vocabulary size (logits row width).
@@ -1638,6 +1844,7 @@ impl<'a> DecodeModel<'a> {
         st: &mut DecodeState,
         li: usize,
         rows: Rows,
+        ads: &RowAdapters,
         h: Vec<f32>,
         m: usize,
     ) -> Vec<f32> {
@@ -1645,11 +1852,11 @@ impl<'a> DecodeModel<'a> {
         let lay = &self.layers[li];
         let t1 = self.norm_rows(sc, &h, lay.norm1_g, lay.norm1_b, m);
         let mut q = sc.take(m * d);
-        lay.q.fwd(sc, &t1, m, self.scale, &mut q);
+        lay.q.fwd(sc, &t1, m, self.scale, ads, &mut q);
         let mut kk = sc.take(m * d);
-        lay.k.fwd(sc, &t1, m, self.scale, &mut kk);
+        lay.k.fwd(sc, &t1, m, self.scale, ads, &mut kk);
         let mut vv = sc.take(m * d);
-        lay.v.fwd(sc, &t1, m, self.scale, &mut vv);
+        lay.v.fwd(sc, &t1, m, self.scale, ads, &mut vv);
         sc.give(t1);
         // split borrows: cache planes are written, lengths/tables read
         let DecodeState { kc, vc, len, cos, sin, .. } = st;
@@ -1713,7 +1920,7 @@ impl<'a> DecodeModel<'a> {
         sc.give(srow);
         sc.give(q);
         let mut attn = sc.take(m * d);
-        lay.o.fwd(sc, &ctx, m, self.scale, &mut attn);
+        lay.o.fwd(sc, &ctx, m, self.scale, ads, &mut attn);
         sc.give(ctx);
         // residual adds run in place: decode keeps no backward tape, so
         // `h` itself becomes h_mid and then the block output (same
@@ -1726,9 +1933,9 @@ impl<'a> DecodeModel<'a> {
         match &lay.gate {
             Some(gate) => {
                 let mut gp = sc.take(m * self.f);
-                gate.fwd(sc, &t2, m, self.scale, &mut gp);
+                gate.fwd(sc, &t2, m, self.scale, ads, &mut gp);
                 let mut up = sc.take(m * self.f);
-                lay.up.fwd(sc, &t2, m, self.scale, &mut up);
+                lay.up.fwd(sc, &t2, m, self.scale, ads, &mut up);
                 for ((av, g), u) in act.iter_mut().zip(&gp).zip(&up) {
                     *av = nn::silu(*g) * u;
                 }
@@ -1737,7 +1944,7 @@ impl<'a> DecodeModel<'a> {
             }
             None => {
                 let mut up = sc.take(m * self.f);
-                lay.up.fwd(sc, &t2, m, self.scale, &mut up);
+                lay.up.fwd(sc, &t2, m, self.scale, ads, &mut up);
                 for (av, u) in act.iter_mut().zip(&up) {
                     *av = nn::gelu(*u);
                 }
@@ -1746,7 +1953,7 @@ impl<'a> DecodeModel<'a> {
         }
         sc.give(t2);
         let mut out = sc.take(m * d);
-        lay.down.fwd(sc, &act, m, self.scale, &mut out);
+        lay.down.fwd(sc, &act, m, self.scale, ads, &mut out);
         sc.give(act);
         add_assign(&mut h, &out);
         sc.give(out);
@@ -1757,15 +1964,20 @@ impl<'a> DecodeModel<'a> {
     /// cache column, and write the **final position's** logits (the
     /// next-token distribution) into `logits` (`[vocab]`). Any previous
     /// context in the slot is discarded; other slots are untouched.
+    /// `adapter` is the slot's tenant binding (`None` = bare base).
     pub fn prefill(
         &self,
         sc: &Scratch,
         st: &mut DecodeState,
         slot: usize,
         tokens: &[i32],
+        adapter: Option<&AdapterBinding>,
         logits: &mut [f32],
     ) -> Result<()> {
         self.check_state(st)?;
+        if let Some(b) = adapter {
+            self.check_adapter(b)?;
+        }
         ensure!(slot < st.slots, "slot {slot} out of range ({} slots)", st.slots);
         ensure!(!tokens.is_empty(), "prefill needs at least one token");
         ensure!(
@@ -1781,14 +1993,15 @@ impl<'a> DecodeModel<'a> {
             self.v
         );
         st.reset(slot);
+        let ads = RowAdapters::Uniform(adapter);
         let (m, d) = (tokens.len(), self.d);
         let mut h = sc.take(m * d);
         self.embed_rows(tokens, &mut h)?;
         for li in 0..self.layers.len() {
-            h = self.block(sc, st, li, Rows::Contig { slot, p0: 0 }, h, m);
+            h = self.block(sc, st, li, Rows::Contig { slot, p0: 0 }, &ads, h, m);
         }
         let tf = self.norm_rows(sc, &h[(m - 1) * d..m * d], self.final_g, self.final_b, 1);
-        self.lm_head.fwd(sc, &tf, 1, self.scale, logits);
+        self.lm_head.fwd(sc, &tf, 1, self.scale, &ads, logits);
         sc.give(tf);
         sc.give(h);
         st.len[slot] = m;
@@ -1798,13 +2011,17 @@ impl<'a> DecodeModel<'a> {
     /// Advance the strictly-ascending active `slots` by one token each
     /// (`tokens[r]` is appended to `slots[r]`'s context) and write each
     /// row's next-token logits into `logits` (`[slots.len(), vocab]`).
-    /// Allocation-free once the arena is warm.
+    /// `adapters` selects each row's tenant binding; a mixed batch is
+    /// bit-identical to running each row in its own decoder (the
+    /// matmul kernels are row-count invariant). Allocation-free once
+    /// the arena is warm.
     pub fn decode_step(
         &self,
         sc: &Scratch,
         st: &mut DecodeState,
         slots: &[usize],
         tokens: &[i32],
+        adapters: RowAdapters,
         logits: &mut [f32],
     ) -> Result<()> {
         self.check_state(st)?;
@@ -1821,6 +2038,20 @@ impl<'a> DecodeModel<'a> {
             logits.len(),
             self.v
         );
+        match &adapters {
+            RowAdapters::Uniform(Some(b)) => self.check_adapter(b)?,
+            RowAdapters::Uniform(None) => {}
+            RowAdapters::PerRow(rows) => {
+                ensure!(
+                    rows.len() == m,
+                    "decode step got {} row adapters for {m} slots",
+                    rows.len()
+                );
+                for b in rows.iter().flatten() {
+                    self.check_adapter(b)?;
+                }
+            }
+        }
         for (i, &sl) in slots.iter().enumerate() {
             ensure!(sl < st.slots, "slot {sl} out of range ({} slots)", st.slots);
             ensure!(
@@ -1837,10 +2068,10 @@ impl<'a> DecodeModel<'a> {
         let mut h = sc.take(m * d);
         self.embed_rows(tokens, &mut h)?;
         for li in 0..self.layers.len() {
-            h = self.block(sc, st, li, Rows::PerRow { slots }, h, m);
+            h = self.block(sc, st, li, Rows::PerRow { slots }, &adapters, h, m);
         }
         let tf = self.norm_rows(sc, &h, self.final_g, self.final_b, m);
-        self.lm_head.fwd(sc, &tf, m, self.scale, logits);
+        self.lm_head.fwd(sc, &tf, m, self.scale, &adapters, logits);
         sc.give(tf);
         sc.give(h);
         for &sl in slots {

@@ -34,7 +34,7 @@ pub mod native;
 pub mod pjrt;
 
 use crate::model::{Manifest, ParamStore};
-use crate::ops::model::{DecodeModel, PreparedCell};
+use crate::ops::model::{AdapterBinding, DecodeModel, PreparedCell, RowAdapters};
 pub use crate::ops::model::DecodeState;
 use crate::tensor::HostTensor;
 use anyhow::{bail, Result};
@@ -42,6 +42,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;
+use std::sync::Arc;
 
 /// Native resident buffer: a pinned host copy plus the lazily-built
 /// prepared-weight slot shared into the kernels on every execution.
@@ -63,6 +64,18 @@ pub enum DeviceBuffer {
     Native(NativeBuffer),
     #[cfg(feature = "xla")]
     Pjrt(xla::PjRtBuffer),
+}
+
+impl DeviceBuffer {
+    /// Host view of the resident tensor. `None` on device-only
+    /// backends (PJRT) where reading back requires a transfer.
+    pub fn host(&self) -> Option<&HostTensor> {
+        match self {
+            DeviceBuffer::Native(nb) => Some(&nb.tensor),
+            #[cfg(feature = "xla")]
+            DeviceBuffer::Pjrt(_) => None,
+        }
+    }
 }
 
 /// Execution input: a resident buffer, a per-call host tensor, or —
@@ -392,8 +405,12 @@ impl Runtime {
                         ),
                     })
                     .collect::<Result<_>>()?;
-                let model = n.bind_decode(Self::native_exe(exe)?, &resolved)?;
-                Ok(DecodeSession { rt: self, model })
+                let (model, default) = n.bind_decode(Self::native_exe(exe)?, &resolved)?;
+                Ok(DecodeSession {
+                    rt: self,
+                    model,
+                    default_adapter: default.map(Arc::new),
+                })
             }
             #[cfg(feature = "xla")]
             Inner::Pjrt(_) => bail!(
@@ -411,6 +428,10 @@ impl Runtime {
 pub struct DecodeSession<'p> {
     rt: &'p Runtime,
     model: DecodeModel<'p>,
+    /// The binding resolved from the entry's own LoRA inputs at bind
+    /// time (the single-tenant behaviour of earlier PRs); `None` when
+    /// the entry is base-only or bound without a rank mask.
+    default_adapter: Option<Arc<AdapterBinding>>,
 }
 
 impl DecodeSession<'_> {
@@ -422,8 +443,26 @@ impl DecodeSession<'_> {
         }
     }
 
+    /// The adapter resolved from the entry's own inputs at bind time,
+    /// applied when a slot names no tenant of its own.
+    pub fn default_adapter(&self) -> Option<&Arc<AdapterBinding>> {
+        self.default_adapter.as_ref()
+    }
+
+    /// Whether the bound entry carries unmerged LoRA sites (tenant
+    /// bindings can only apply when it does).
+    pub fn supports_adapters(&self) -> bool {
+        self.model.has_adapter_sites()
+    }
+
+    /// Shape-check a tenant binding against the bound base.
+    pub fn check_adapter(&self, b: &AdapterBinding) -> Result<()> {
+        self.model.check_adapter(b)
+    }
+
     /// Run a prompt through `slot`'s cache column; final-position
     /// logits land in `logits` (`[vocab]`). Resets only that slot.
+    /// Applies the session default adapter.
     pub fn prefill(
         &self,
         st: &mut DecodeState,
@@ -431,12 +470,26 @@ impl DecodeSession<'_> {
         tokens: &[i32],
         logits: &mut [f32],
     ) -> Result<()> {
+        self.prefill_as(st, slot, tokens, self.default_adapter.as_deref(), logits)
+    }
+
+    /// [`DecodeSession::prefill`] under an explicit tenant binding
+    /// (`None` = bare sparse base, not the session default).
+    pub fn prefill_as(
+        &self,
+        st: &mut DecodeState,
+        slot: usize,
+        tokens: &[i32],
+        adapter: Option<&AdapterBinding>,
+        logits: &mut [f32],
+    ) -> Result<()> {
         *self.rt.exec_count.borrow_mut() += 1;
-        self.model.prefill(self.scratch(), st, slot, tokens, logits)
+        self.model.prefill(self.scratch(), st, slot, tokens, adapter, logits)
     }
 
     /// Advance the ascending active `slots` one token each; per-row
     /// next-token logits land in `logits` (`[slots.len(), vocab]`).
+    /// Applies the session default adapter to every row.
     pub fn decode_step(
         &self,
         st: &mut DecodeState,
@@ -445,7 +498,35 @@ impl DecodeSession<'_> {
         logits: &mut [f32],
     ) -> Result<()> {
         *self.rt.exec_count.borrow_mut() += 1;
-        self.model.decode_step(self.scratch(), st, slots, tokens, logits)
+        self.model.decode_step(
+            self.scratch(),
+            st,
+            slots,
+            tokens,
+            RowAdapters::Uniform(self.default_adapter.as_deref()),
+            logits,
+        )
+    }
+
+    /// [`DecodeSession::decode_step`] with per-row tenant bindings:
+    /// row `r` applies `adapters[r]` (`None` = bare sparse base).
+    pub fn decode_step_rows(
+        &self,
+        st: &mut DecodeState,
+        slots: &[usize],
+        tokens: &[i32],
+        adapters: &[Option<Arc<AdapterBinding>>],
+        logits: &mut [f32],
+    ) -> Result<()> {
+        *self.rt.exec_count.borrow_mut() += 1;
+        self.model.decode_step(
+            self.scratch(),
+            st,
+            slots,
+            tokens,
+            RowAdapters::PerRow(adapters),
+            logits,
+        )
     }
 
     /// Vocabulary size (logits row width) of the bound entry.

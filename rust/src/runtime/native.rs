@@ -30,7 +30,9 @@
 //! resolution entirely — see `ops::model`'s decode section.
 
 use crate::model::{EntryPoint, Manifest, ModelConfig, PruneOpSpec};
-use crate::ops::model::{DecodeModel, Dims, Extra, GradMode, Model, NamedTensors, PreparedCell};
+use crate::ops::model::{
+    AdapterBinding, DecodeModel, Dims, Extra, GradMode, Model, NamedTensors, PreparedCell,
+};
 use crate::ops::scratch::Scratch;
 use crate::ops::{nn, prune};
 use crate::tensor::HostTensor;
@@ -183,12 +185,16 @@ impl NativeBackend {
     /// path, so the CSR structure of a pruned weight is derived once
     /// per upload). `inputs` align positionally with the entry's
     /// manifest signature; per-batch inputs the decode path replaces
-    /// (`x`) arrive as `None`.
+    /// (`x`) arrive as `None`. For adapter entries also returns the
+    /// default [`AdapterBinding`] resolved from the entry's own LoRA
+    /// tensors and rank mask — `None` when the rank-mask input was
+    /// left absent (callers then serve the bare base by default and
+    /// supply per-slot tenant bindings themselves).
     pub fn bind_decode<'p>(
         &self,
         exe: &'p NativeExe,
         inputs: &[Option<ExecInput<'p>>],
-    ) -> Result<DecodeModel<'p>> {
+    ) -> Result<(DecodeModel<'p>, Option<AdapterBinding>)> {
         let NativeOp::Entry { cfg, name, entry } = &exe.op else {
             bail!("'{}' is a prune op — nothing to decode", exe.file);
         };
@@ -206,8 +212,15 @@ impl NativeBackend {
                 }
             }
         }
-        let rank_mask = if spec.use_adapters { Some(named.f("rank_mask")?) } else { None };
-        DecodeModel::bind(cfg, &named, spec.use_adapters, rank_mask)
+        let model = DecodeModel::bind(cfg, &named, spec.use_adapters)?;
+        let default = if spec.use_adapters && named.contains("rank_mask") {
+            let binding = AdapterBinding::from_named(cfg, &named, named.f("rank_mask")?)?;
+            model.check_adapter(&binding)?;
+            Some(binding)
+        } else {
+            None
+        };
+        Ok((model, default))
     }
 }
 

@@ -27,21 +27,33 @@
 //! step per call, so the server can interleave queue polls between
 //! steps without re-binding or re-prefilling anything.
 //!
+//! Serving is **multi-tenant**: adapter identity lives on the slot,
+//! not the decoder. Requests may name a registered tenant adapter
+//! ([`GenRequest::adapter`], resolved through [`AdapterRegistry`]),
+//! and one batched decode step applies each active slot's own LoRA
+//! windows + rank-mask over the shared frozen sparse base — greedy
+//! outputs are bit-identical to running each tenant in an isolated
+//! decoder (`rust/tests/multi_tenant.rs`).
+//!
 //! Latency metrics clock from **submission** (the `serve()` call on the
 //! batch path, `submit()` on the async path), so queue wait is visible
 //! in p50/p99 and in the time-to-first-token percentiles.
 
+pub mod registry;
 pub mod server;
 
+pub use registry::{binding_from_store, AdapterId, AdapterRegistry};
 pub use server::{RejectReason, ServeServer, ServerOpts, StreamHandle, Submit, SubmitHandle};
 
 use crate::data::Vocab;
 use crate::model::{ModelConfig, ParamStore};
+use crate::ops::model::AdapterBinding;
 use crate::runtime::{DecodeSession, DecodeState, Runtime};
 use crate::tensor::HostTensor;
 use crate::train::ForwardSession;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::cell::RefCell;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// One generation request.
@@ -63,11 +75,17 @@ pub struct GenRequest {
     /// Orders the queue among equal deadlines (and within the
     /// no-deadline class): higher admits first, FIFO breaks the rest.
     pub priority: i32,
+    /// Tenant adapter this request decodes under. `None` = the server
+    /// default (the registry's pinned default, else the decoder's
+    /// construction-time binding). A named adapter must be registered
+    /// — unknown ids are rejected at submit/admit time
+    /// ([`RejectReason::UnknownAdapter`] on the async path).
+    pub adapter: Option<AdapterId>,
 }
 
 impl GenRequest {
     pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
-        GenRequest { prompt, max_new_tokens, deadline: None, priority: 0 }
+        GenRequest { prompt, max_new_tokens, deadline: None, priority: 0, adapter: None }
     }
 
     pub fn with_deadline(mut self, deadline: Duration) -> GenRequest {
@@ -77,6 +95,11 @@ impl GenRequest {
 
     pub fn with_priority(mut self, priority: i32) -> GenRequest {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_adapter(mut self, adapter: impl Into<AdapterId>) -> GenRequest {
+        self.adapter = Some(adapter.into());
         self
     }
 }
@@ -166,11 +189,15 @@ fn argmax(row: &[f32], fallback: i32) -> i32 {
 /// seeded with `pad` (the model needs one position to predict from).
 /// Returns the admitted tokens (with capacity for the full window, so
 /// in-flight token pushes never reallocate) and whether the prompt was
-/// cut.
+/// cut. `s == 0` must never reach here — [`Decoder::new`] and
+/// [`ServeServer::spawn`] reject zero-window configs up front — but
+/// the arithmetic saturates rather than underflowing `usize` if it
+/// does (the old `s - 1` panicked in debug and wrapped in release).
 fn admit_prompt(prompt: &[i32], s: usize, pad: i32) -> (Vec<i32>, bool) {
-    let truncated = prompt.len() > s - 1;
-    let mut toks = Vec::with_capacity(s);
-    toks.extend_from_slice(&prompt[..prompt.len().min(s - 1)]);
+    let keep = s.saturating_sub(1);
+    let truncated = prompt.len() > keep;
+    let mut toks = Vec::with_capacity(s.max(1));
+    toks.extend_from_slice(&prompt[..prompt.len().min(keep)]);
     if toks.is_empty() {
         toks.push(pad);
     }
@@ -199,6 +226,9 @@ struct Slot {
     deadline: Option<Instant>,
     first_token_at: Option<Instant>,
     admission_seq: u64,
+    /// tenant binding this slot decodes under (`None` = bare base);
+    /// holding the `Arc` marks the adapter in-flight to the registry
+    adapter: Option<Arc<AdapterBinding>>,
 }
 
 /// Build the response for a retiring slot. Latency spans submission →
@@ -252,10 +282,12 @@ pub struct StepEngine<'d> {
     truncated_prompts: u64,
     occupancy_sum: u64,
     // reused step buffers: warm admit/step cycles allocate nothing here
+    // (Arc clones into step_adapters are refcount bumps, not allocations)
     row_logits: Vec<f32>,
     step_logits: Vec<f32>,
     active: Vec<usize>,
     step_tokens: Vec<i32>,
+    step_adapters: Vec<Option<Arc<AdapterBinding>>>,
 }
 
 impl<'d> StepEngine<'d> {
@@ -283,6 +315,7 @@ impl<'d> StepEngine<'d> {
             step_logits: vec![0.0; n * v],
             active: Vec::with_capacity(n),
             step_tokens: Vec::with_capacity(n),
+            step_adapters: Vec::with_capacity(n),
         }
     }
 
@@ -314,11 +347,13 @@ impl<'d> StepEngine<'d> {
     }
 
     /// Admit one request into the first free slot: clamp the prompt,
-    /// prefill that slot's cache column, pick the first token (emitted
-    /// through `on_token`). Returns the finished response if the
-    /// request retires at prefill (EOS / exhausted budget); otherwise
-    /// the slot joins the next [`StepEngine::step`]. Errors if no slot
-    /// is free — callers gate on [`StepEngine::has_free_slot`].
+    /// prefill that slot's cache column under `adapter` (the slot's
+    /// tenant binding; `None` = the session default resolved at bind
+    /// time), pick the first token (emitted through `on_token`).
+    /// Returns the finished response if the request retires at prefill
+    /// (EOS / exhausted budget); otherwise the slot joins the next
+    /// [`StepEngine::step`]. Errors if no slot is free — callers gate
+    /// on [`StepEngine::has_free_slot`].
     pub fn admit(
         &mut self,
         id: u64,
@@ -326,15 +361,18 @@ impl<'d> StepEngine<'d> {
         max_new: usize,
         submitted: Instant,
         deadline: Option<Instant>,
+        adapter: Option<Arc<AdapterBinding>>,
         on_token: &mut dyn FnMut(u64, i32),
     ) -> Result<Option<GenResponse>> {
         let slot = self.slots.iter().position(|s| s.is_none()).context("admit: no free slot")?;
+        let adapter = adapter.or_else(|| self.session.default_adapter().cloned());
         let (mut toks, truncated) = admit_prompt(prompt, self.s, self.pad);
         let admitted = toks.len();
         if truncated {
             self.truncated_prompts += 1;
         }
-        self.session.prefill(&mut self.st, slot, &toks, &mut self.row_logits)?;
+        self.session
+            .prefill_as(&mut self.st, slot, &toks, adapter.as_deref(), &mut self.row_logits)?;
         self.prefills += 1;
         let next = argmax(&self.row_logits, self.eos);
         toks.push(next);
@@ -353,6 +391,7 @@ impl<'d> StepEngine<'d> {
             deadline,
             first_token_at,
             admission_seq,
+            adapter,
         };
         if finished(next, self.eos, sl.toks.len() - admitted, max_new, sl.toks.len(), self.s) {
             return Ok(Some(complete(sl)));
@@ -373,17 +412,28 @@ impl<'d> StepEngine<'d> {
     ) -> Result<()> {
         self.active.clear();
         self.step_tokens.clear();
+        self.step_adapters.clear();
         for (i, s) in self.slots.iter().enumerate() {
             if let Some(sl) = s {
                 self.active.push(i);
                 self.step_tokens.push(*sl.toks.last().expect("active slot has tokens"));
+                self.step_adapters.push(sl.adapter.clone());
             }
         }
         if self.active.is_empty() {
             return Ok(());
         }
         let out = &mut self.step_logits[..self.active.len() * self.v];
-        self.session.decode_step(&mut self.st, &self.active, &self.step_tokens, out)?;
+        self.session.decode_step_rows(
+            &mut self.st,
+            &self.active,
+            &self.step_tokens,
+            &self.step_adapters,
+            out,
+        )?;
+        // drop the step's Arc clones now, not at the next step: a
+        // retiring slot must release its registry in-flight pin here
+        self.step_adapters.clear();
         self.decode_steps += 1;
         self.occupancy_sum += self.active.len() as u64;
         for (row, &slot) in self.active.iter().enumerate() {
@@ -441,6 +491,8 @@ pub struct Decoder<'rt> {
     /// (every admission prefill resets its slot, so stale contents are
     /// never read) — spares the per-call cache allocation + zero-fill.
     state: RefCell<Option<DecodeState>>,
+    /// tenant adapters requests may name (`GenRequest::adapter`)
+    registry: RefCell<AdapterRegistry>,
 }
 
 impl<'rt> Decoder<'rt> {
@@ -457,13 +509,75 @@ impl<'rt> Decoder<'rt> {
         stores: Vec<&ParamStore>,
         rank_mask: Option<HostTensor>,
     ) -> Result<Self> {
+        ensure!(
+            cfg.seq_len > 0,
+            "decode window is zero (cfg.seq_len = 0): no position to predict from"
+        );
         let session = ForwardSession::new(rt, cfg, entry_name, &stores)?;
         Ok(Decoder {
             session,
             rank_mask,
             vocab: Vocab::new(cfg.vocab),
             state: RefCell::new(None),
+            registry: RefCell::new(AdapterRegistry::new(0)),
         })
+    }
+
+    /// Register (or hot-swap) tenant `id` as a sub-adapter of this
+    /// decoder's resident super-network LoRA weights: `rank_mask`
+    /// selects the tenant's active heads (`SearchSpace::rank_mask`).
+    /// Requires an adapter-carrying entry (`forward_eval*`, not
+    /// `forward_eval_base`).
+    pub fn register_adapter(&self, id: &str, rank_mask: &HostTensor) -> Result<()> {
+        let binding = self.session.adapter_binding(rank_mask)?;
+        self.registry.borrow_mut().register(id, binding)
+    }
+
+    /// Build (without registering) a tenant binding over this
+    /// decoder's resident super-network LoRA weights — the async
+    /// server registers into its own shared registry.
+    pub fn adapter_binding(&self, rank_mask: &HostTensor) -> Result<AdapterBinding> {
+        self.session.adapter_binding(rank_mask)
+    }
+
+    /// Register (or hot-swap) tenant `id` from an externally-built
+    /// binding (e.g. [`binding_from_store`] over a checkpoint's
+    /// adapter store).
+    pub fn register_adapter_binding(&self, id: &str, binding: AdapterBinding) -> Result<()> {
+        self.registry.borrow_mut().register(id, binding)
+    }
+
+    /// Remove tenant `id`; errors while its binding is still held by
+    /// an active slot, a queued request, or the pinned default.
+    pub fn deregister_adapter(&self, id: &str) -> Result<()> {
+        self.registry.borrow_mut().deregister(id)
+    }
+
+    /// Pin a registered adapter as the default for requests naming no
+    /// tenant (`None` restores the construction-time binding).
+    pub fn pin_default_adapter(&self, id: Option<&str>) -> Result<()> {
+        self.registry.borrow_mut().pin_default(id)
+    }
+
+    /// Cap resident adapter bytes (`0` = unlimited); evicts idle LRU
+    /// entries if shrinking requires it.
+    pub fn set_adapter_budget(&self, bytes: usize) -> Result<()> {
+        self.registry.borrow_mut().set_budget(bytes)
+    }
+
+    /// Total bytes of registered resident adapters.
+    pub fn adapter_bytes(&self) -> usize {
+        self.registry.borrow().resident_bytes()
+    }
+
+    /// Registered adapter ids, sorted.
+    pub fn adapter_ids(&self) -> Vec<AdapterId> {
+        self.registry.borrow().ids()
+    }
+
+    /// Whether `id` is registered.
+    pub fn has_adapter(&self, id: &str) -> bool {
+        self.registry.borrow().contains(id)
     }
 
     /// Re-upload weights whose store generation changed since
@@ -554,9 +668,20 @@ impl<'rt> Decoder<'rt> {
                 let r = &requests[next_req];
                 next_req += 1;
                 let deadline = r.deadline.and_then(|d| start_all.checked_add(d));
-                if let Some(resp) =
-                    engine.admit(id, &r.prompt, r.max_new_tokens, start_all, deadline, &mut sink)?
-                {
+                let adapter = self
+                    .registry
+                    .borrow_mut()
+                    .resolve(r.adapter.as_deref())
+                    .with_context(|| format!("request {id}"))?;
+                if let Some(resp) = engine.admit(
+                    id,
+                    &r.prompt,
+                    r.max_new_tokens,
+                    start_all,
+                    deadline,
+                    adapter,
+                    &mut sink,
+                )? {
                     responses[id as usize] = Some(resp);
                 }
             }
@@ -584,6 +709,11 @@ impl<'rt> Decoder<'rt> {
         &self,
         requests: &[GenRequest],
     ) -> Result<(Vec<GenResponse>, ServeMetrics)> {
+        ensure!(
+            requests.iter().all(|r| r.adapter.is_none()),
+            "per-request adapters need the KV-cached decode path; \
+             the re-forward fallback serves the construction-time binding only"
+        );
         let cfg = self.session.config();
         let b = cfg.batch_eval;
         let s = cfg.seq_len;
@@ -724,6 +854,39 @@ mod tests {
         let (toks, truncated) = admit_prompt(&[], 8, 5);
         assert_eq!(toks, vec![5]);
         assert!(!truncated);
+    }
+
+    #[test]
+    fn zero_window_admission_saturates_instead_of_underflowing() {
+        // s == 0 is rejected at Decoder/ServeServer construction, but
+        // the clamp itself must not underflow usize (debug panic /
+        // release wraparound admitting ~usize::MAX tokens)
+        let (toks, truncated) = admit_prompt(&[1, 2, 3], 0, 9);
+        assert_eq!(toks, vec![9], "nothing fits; pad-seeded");
+        assert!(truncated);
+        let (toks, truncated) = admit_prompt(&[], 0, 9);
+        assert_eq!(toks, vec![9]);
+        assert!(!truncated);
+    }
+
+    #[test]
+    fn one_token_window_admits_pad_only() {
+        // s == 1: zero prompt positions fit (the one slot is reserved
+        // for generation), any non-empty prompt is truncated away
+        let (toks, truncated) = admit_prompt(&[4, 5], 1, 7);
+        assert_eq!(toks, vec![7]);
+        assert!(truncated);
+        let (toks, truncated) = admit_prompt(&[], 1, 7);
+        assert_eq!(toks, vec![7]);
+        assert!(!truncated);
+    }
+
+    #[test]
+    fn with_adapter_tags_the_request() {
+        let r = GenRequest::new(vec![1], 4);
+        assert_eq!(r.adapter, None);
+        let r = r.with_adapter("tenant-a");
+        assert_eq!(r.adapter.as_deref(), Some("tenant-a"));
     }
 
     #[test]

@@ -1,0 +1,390 @@
+//! Multi-tenant adapter registry: `AdapterId -> AdapterBinding`.
+//!
+//! The production shape of Shears serving is one shared frozen sparse
+//! base and many KB-scale tenant sub-adapters (NLS makes every
+//! sub-adapter a rank-mask prefix over the same super-network LoRA
+//! weights). The registry keeps resident bindings under a configurable
+//! byte budget with LRU eviction, and pins an optional default applied
+//! to requests that name no tenant.
+//!
+//! In-flight tracking is structural: the registry holds one `Arc` per
+//! binding, and every queued request or occupied decode slot holds a
+//! clone, so `Arc::strong_count == 1` means idle. Evicting (or
+//! deregistering) a binding that is still referenced is an **error**,
+//! never a stall — the caller decides whether to retry, grow the
+//! budget, or shed load.
+
+use crate::model::{ModelConfig, ParamStore};
+use crate::ops::model::{AdapterBinding, NamedTensors};
+use anyhow::{bail, ensure, Context, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Tenant adapter identifier (request-visible).
+pub type AdapterId = String;
+
+struct Entry {
+    binding: Arc<AdapterBinding>,
+    bytes: usize,
+    /// logical LRU clock value at last touch (register/resolve)
+    last_used: u64,
+}
+
+/// Resident tenant bindings under a byte budget, plus the pinned
+/// server default. Deterministic: LRU order is a logical clock bumped
+/// on register/resolve, no wall time.
+pub struct AdapterRegistry {
+    entries: HashMap<AdapterId, Entry>,
+    default_: Option<Arc<AdapterBinding>>,
+    /// resident-bytes ceiling; `0` = unlimited
+    budget: usize,
+    clock: u64,
+}
+
+impl AdapterRegistry {
+    /// An empty registry. `budget_bytes == 0` means unlimited.
+    pub fn new(budget_bytes: usize) -> AdapterRegistry {
+        AdapterRegistry {
+            entries: HashMap::new(),
+            default_: None,
+            budget: budget_bytes,
+            clock: 0,
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Total bytes of registered resident bindings (the pinned default
+    /// is counted only while it is also a registered entry).
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+
+    /// Number of registered adapters.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether no adapters are registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Registered ids, sorted (deterministic listing).
+    pub fn ids(&self) -> Vec<AdapterId> {
+        let mut v: Vec<AdapterId> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Whether `id` is registered.
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.contains_key(id)
+    }
+
+    /// The configured budget in bytes (`0` = unlimited).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Plan the LRU evictions needed to keep `extra` more bytes
+    /// resident, ignoring any existing entry named `replace` (it is
+    /// about to be swapped out). Only idle entries — registry holds
+    /// the sole `Arc` — are evictable; if the budget still cannot be
+    /// met, this errors without touching the registry.
+    fn plan_evictions(&self, extra: usize, replace: Option<&str>) -> Result<Vec<AdapterId>> {
+        if self.budget == 0 {
+            return Ok(Vec::new());
+        }
+        let counted = |id: &str| replace != Some(id);
+        let mut resident: usize = self
+            .entries
+            .iter()
+            .filter(|(id, _)| counted(id))
+            .map(|(_, e)| e.bytes)
+            .sum();
+        let mut victims = Vec::new();
+        if resident + extra <= self.budget {
+            return Ok(victims);
+        }
+        let mut idle: Vec<(&AdapterId, &Entry)> = self
+            .entries
+            .iter()
+            .filter(|(id, e)| counted(id) && Arc::strong_count(&e.binding) == 1)
+            .collect();
+        idle.sort_by_key(|(_, e)| e.last_used);
+        for (id, e) in idle {
+            if resident + extra <= self.budget {
+                break;
+            }
+            resident -= e.bytes;
+            victims.push(id.clone());
+        }
+        ensure!(
+            resident + extra <= self.budget,
+            "fitting {extra} more bytes under the {}-byte adapter budget would require \
+             evicting in-flight adapters ({resident} bytes pinned by active slots or requests)",
+            self.budget
+        );
+        Ok(victims)
+    }
+
+    /// Register (or hot-swap) `id`. Evicts least-recently-used *idle*
+    /// adapters as needed to fit the byte budget; fails — mutating
+    /// nothing — if the binding alone exceeds the budget or fitting it
+    /// would evict an adapter with in-flight slots. Hot-swapping an
+    /// in-flight id is allowed: slots already decoding keep their old
+    /// binding (their `Arc` clones) until they retire, while new
+    /// admissions resolve the replacement.
+    pub fn register(&mut self, id: &str, binding: AdapterBinding) -> Result<()> {
+        let bytes = binding.bytes();
+        if self.budget > 0 {
+            ensure!(
+                bytes <= self.budget,
+                "adapter '{id}' needs {bytes} bytes, over the {}-byte registry budget",
+                self.budget
+            );
+        }
+        let victims = self
+            .plan_evictions(bytes, Some(id))
+            .with_context(|| format!("registering adapter '{id}'"))?;
+        for v in &victims {
+            self.entries.remove(v);
+        }
+        let last_used = self.tick();
+        self.entries.insert(
+            id.to_string(),
+            Entry { binding: Arc::new(binding), bytes, last_used },
+        );
+        Ok(())
+    }
+
+    /// Remove `id`. Errors if unknown, or if the binding is still
+    /// referenced (active slots, queued requests, or the pinned
+    /// default).
+    pub fn deregister(&mut self, id: &str) -> Result<()> {
+        let e = self
+            .entries
+            .get(id)
+            .with_context(|| format!("unknown adapter '{id}'"))?;
+        ensure!(
+            Arc::strong_count(&e.binding) == 1,
+            "adapter '{id}' is in flight (active slots, queued requests, or pinned \
+             as default) — cannot deregister"
+        );
+        self.entries.remove(id);
+        Ok(())
+    }
+
+    /// Resolve a request's adapter choice: `Some(id)` must be
+    /// registered (unknown ids are an error — submit-time rejection),
+    /// `None` falls back to the pinned default (which may itself be
+    /// `None` = the session/base default). Touches the LRU clock.
+    pub fn resolve(&mut self, id: Option<&str>) -> Result<Option<Arc<AdapterBinding>>> {
+        match id {
+            None => Ok(self.default_.clone()),
+            Some(id) => {
+                let t = self.tick();
+                let e = self
+                    .entries
+                    .get_mut(id)
+                    .with_context(|| format!("unknown adapter '{id}'"))?;
+                e.last_used = t;
+                Ok(Some(e.binding.clone()))
+            }
+        }
+    }
+
+    /// Pin a registered adapter as the default for requests that name
+    /// no tenant (`None` clears the pin). The pin holds an `Arc`
+    /// clone, so a pinned adapter is never evicted.
+    pub fn pin_default(&mut self, id: Option<&str>) -> Result<()> {
+        match id {
+            None => {
+                self.default_ = None;
+                Ok(())
+            }
+            Some(id) => {
+                let e = self
+                    .entries
+                    .get(id)
+                    .with_context(|| format!("unknown adapter '{id}'"))?;
+                self.default_ = Some(e.binding.clone());
+                Ok(())
+            }
+        }
+    }
+
+    /// Pin an out-of-registry default binding (the decoder's own
+    /// construction-time adapter); budget accounting ignores it.
+    pub fn set_default_binding(&mut self, b: Option<Arc<AdapterBinding>>) {
+        self.default_ = b;
+    }
+
+    /// The pinned default, if any.
+    pub fn default_binding(&self) -> Option<&Arc<AdapterBinding>> {
+        self.default_.as_ref()
+    }
+
+    /// Change the byte budget (`0` = unlimited), evicting idle LRU
+    /// entries if shrinking requires it; errors — leaving budget and
+    /// entries untouched — when only in-flight adapters remain over
+    /// the new ceiling.
+    pub fn set_budget(&mut self, budget_bytes: usize) -> Result<()> {
+        let old = std::mem::replace(&mut self.budget, budget_bytes);
+        match self.plan_evictions(0, None) {
+            Ok(victims) => {
+                for v in &victims {
+                    self.entries.remove(v);
+                }
+                Ok(())
+            }
+            Err(e) => {
+                self.budget = old;
+                Err(e.context("shrinking adapter budget"))
+            }
+        }
+    }
+}
+
+/// Resolve one tenant's binding from a standalone adapter
+/// [`ParamStore`] (checkpoint loads, CLI registration) rather than a
+/// live `ForwardSession`. `rank_mask` is the tenant's
+/// `[n_modules * max_rank]` mask values (see
+/// `nls::SearchSpace::rank_mask`).
+pub fn binding_from_store(
+    cfg: &ModelConfig,
+    store: &ParamStore,
+    rank_mask: &[f32],
+) -> Result<AdapterBinding> {
+    let mut names = Vec::with_capacity(cfg.adapter_modules.len() * 2);
+    for m in &cfg.adapter_modules {
+        names.push(format!("lora_a.{m}"));
+        names.push(format!("lora_b.{m}"));
+    }
+    let mut named = NamedTensors::new();
+    for n in &names {
+        named.insert(n, store.get(n)?);
+    }
+    AdapterBinding::from_named(cfg, &named, rank_mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg_with(budget: usize, items: &[(&str, usize)]) -> AdapterRegistry {
+        let mut r = AdapterRegistry::new(budget);
+        for (id, bytes) in items {
+            r.register(id, AdapterBinding::synthetic(*bytes)).unwrap();
+        }
+        r
+    }
+
+    #[test]
+    fn register_resolve_round_trip() {
+        let mut r = reg_with(0, &[("a", 100), ("b", 200)]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.resident_bytes(), 300);
+        assert!(r.resolve(Some("a")).unwrap().is_some());
+        assert!(r.resolve(None).unwrap().is_none());
+        let err = r.resolve(Some("nope")).unwrap_err();
+        assert!(err.to_string().contains("unknown adapter"), "{err:#}");
+        assert_eq!(r.ids(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn lru_eviction_stays_under_budget() {
+        let mut r = reg_with(250, &[("a", 100), ("b", 100)]);
+        // touch "a" so "b" is the LRU victim
+        r.resolve(Some("a")).unwrap();
+        r.register("c", AdapterBinding::synthetic(100)).unwrap();
+        assert!(r.resident_bytes() <= 250);
+        assert!(r.contains("a") && r.contains("c") && !r.contains("b"));
+        // evicted id can re-register (round trip)
+        r.resolve(Some("c")).unwrap();
+        r.register("b", AdapterBinding::synthetic(100)).unwrap();
+        assert!(r.contains("b") && !r.contains("a"));
+        assert!(r.resident_bytes() <= 250);
+    }
+
+    #[test]
+    fn single_adapter_over_budget_rejected() {
+        let mut r = AdapterRegistry::new(50);
+        let err = r.register("big", AdapterBinding::synthetic(51)).unwrap_err();
+        assert!(err.to_string().contains("over the 50-byte"), "{err:#}");
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn in_flight_adapters_are_not_evicted() {
+        let mut r = reg_with(250, &[("a", 100), ("b", 100)]);
+        // hold both bindings as an active slot would
+        let ha = r.resolve(Some("a")).unwrap();
+        let hb = r.resolve(Some("b")).unwrap();
+        let err = r.register("c", AdapterBinding::synthetic(100)).unwrap_err();
+        assert!(err.to_string().contains("in-flight"), "{err:#}");
+        // failed registration mutates nothing
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.resident_bytes(), 200);
+        drop(ha);
+        drop(hb);
+        r.register("c", AdapterBinding::synthetic(100)).unwrap();
+        assert!(r.resident_bytes() <= 250);
+    }
+
+    #[test]
+    fn hot_swap_keeps_old_binding_for_active_slots() {
+        let mut r = reg_with(0, &[("a", 100)]);
+        let old = r.resolve(Some("a")).unwrap().unwrap();
+        // swap while in flight: allowed; the old Arc stays alive
+        r.register("a", AdapterBinding::synthetic(150)).unwrap();
+        let new = r.resolve(Some("a")).unwrap().unwrap();
+        assert!(!Arc::ptr_eq(&old, &new));
+        assert_eq!(old.bytes(), 100);
+        assert_eq!(new.bytes(), 150);
+        assert_eq!(r.resident_bytes(), 150);
+    }
+
+    #[test]
+    fn deregister_in_flight_is_an_error() {
+        let mut r = reg_with(0, &[("a", 100)]);
+        let hold = r.resolve(Some("a")).unwrap();
+        assert!(r.deregister("a").is_err());
+        drop(hold);
+        r.deregister("a").unwrap();
+        assert!(r.deregister("a").is_err());
+    }
+
+    #[test]
+    fn pinned_default_resists_eviction() {
+        let mut r = reg_with(250, &[("a", 100), ("b", 100)]);
+        r.pin_default(Some("a")).unwrap();
+        // "a" is older than "b" but pinned, so "b" is evicted instead
+        let err = r.register("c", AdapterBinding::synthetic(200)).unwrap_err();
+        assert!(err.to_string().contains("in-flight"), "{err:#}");
+        r.register("c", AdapterBinding::synthetic(100)).unwrap();
+        assert!(r.contains("a") && r.contains("c") && !r.contains("b"));
+        assert!(r.resolve(None).unwrap().is_some());
+        r.pin_default(None).unwrap();
+        assert!(r.resolve(None).unwrap().is_none());
+    }
+
+    #[test]
+    fn shrinking_budget_evicts_idle_only() {
+        let mut r = reg_with(0, &[("a", 100), ("b", 100)]);
+        let hold = r.resolve(Some("b")).unwrap();
+        // "a" is idle and can go; "b" is pinned by the hold
+        r.set_budget(100).unwrap();
+        assert!(!r.contains("a") && r.contains("b"));
+        let err = r.set_budget(50).unwrap_err();
+        assert!(err.to_string().contains("in-flight"), "{err:#}");
+        assert_eq!(r.budget_bytes(), 100);
+        drop(hold);
+        r.set_budget(50).unwrap();
+        assert!(r.is_empty());
+    }
+}

@@ -23,8 +23,9 @@
 //! stream's preallocated buffer keeps warm decode steps allocation-free
 //! on the runtime thread.
 
-use super::{Decoder, GenRequest, GenResponse, ServeMetrics, StepEngine};
+use super::{AdapterId, AdapterRegistry, Decoder, GenRequest, GenResponse, ServeMetrics, StepEngine};
 use crate::model::ParamStore;
+use crate::ops::model::AdapterBinding;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use anyhow::{Context, Result};
@@ -51,6 +52,9 @@ pub struct ServerOpts {
     /// bounded pending queue: submissions past this many undrained
     /// requests come back [`Submit::Rejected`]
     pub queue_cap: usize,
+    /// resident tenant-adapter byte budget (LRU eviction past it);
+    /// `0` = unlimited
+    pub adapter_budget_bytes: usize,
 }
 
 impl Default for ServerOpts {
@@ -62,6 +66,7 @@ impl Default for ServerOpts {
             entry: "forward_eval_base".into(),
             slots: 0,
             queue_cap: 64,
+            adapter_budget_bytes: 0,
         }
     }
 }
@@ -88,6 +93,9 @@ pub enum RejectReason {
     QueueFull,
     /// the server is shutting down (or its thread is gone)
     ShuttingDown,
+    /// the request names an adapter id that is not registered —
+    /// register it (or fix the id) and resubmit
+    UnknownAdapter,
 }
 
 // ------------------------------------------------------------ streams
@@ -203,6 +211,10 @@ struct Queued {
     /// absolute deadline resolved at submission
     deadline: Option<Instant>,
     stream: Arc<StreamShared>,
+    /// tenant binding resolved at submit time (`None` = server
+    /// default); holding the `Arc` pins the adapter against eviction
+    /// while the request queues
+    adapter: Option<Arc<AdapterBinding>>,
 }
 
 /// Admission order: earliest deadline first (every deadlined request
@@ -241,6 +253,14 @@ impl Eq for Queued {}
 enum Msg {
     Request(Queued),
     Metrics(Sender<ServeMetrics>),
+    /// build a tenant binding from the resident super-network weights
+    /// (only the runtime thread owns the session) and insert it into
+    /// the shared registry
+    RegisterAdapter {
+        id: AdapterId,
+        rank_mask: HostTensor,
+        reply: Sender<std::result::Result<(), String>>,
+    },
     /// hold admission (requests keep queueing; in-flight slots keep
     /// decoding) — drain control for tests and maintenance
     Pause,
@@ -275,18 +295,40 @@ struct Shared {
 pub struct SubmitHandle {
     tx: Sender<Msg>,
     shared: Arc<Shared>,
+    /// tenant registry shared with the runtime thread: submit-time
+    /// resolution here, binding construction + insertion over there
+    registry: Arc<Mutex<AdapterRegistry>>,
+}
+
+fn lock_registry(m: &Mutex<AdapterRegistry>) -> MutexGuard<'_, AdapterRegistry> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 impl SubmitHandle {
     /// Try to enqueue a request. Non-blocking: past `queue_cap`
-    /// undrained submissions (or after shutdown) this returns
-    /// [`Submit::Rejected`] immediately — callers shed load instead of
-    /// hanging. On acceptance the request is stamped `submitted = now`,
-    /// its relative deadline resolved against that instant.
+    /// undrained submissions, after shutdown, or naming an
+    /// unregistered adapter, this returns [`Submit::Rejected`]
+    /// immediately — callers shed load instead of hanging. Every
+    /// rejection path counts into [`ServeMetrics::rejected`], so the
+    /// counter reconciles with caller-observed rejects. On acceptance
+    /// the request is stamped `submitted = now`, its relative deadline
+    /// resolved against that instant and its adapter binding pinned.
     pub fn submit(&self, req: GenRequest) -> Submit {
         if !self.shared.accepting.load(AOrd::Acquire) {
+            self.shared.rejected.fetch_add(1, AOrd::Relaxed);
             return Submit::Rejected(RejectReason::ShuttingDown);
         }
+        // resolve the tenant before reserving a queue token: an
+        // unknown id rejects without consuming capacity. The binding
+        // is fixed here — a later hot-swap does not retarget queued
+        // requests.
+        let adapter = match lock_registry(&self.registry).resolve(req.adapter.as_deref()) {
+            Ok(b) => b,
+            Err(_) => {
+                self.shared.rejected.fetch_add(1, AOrd::Relaxed);
+                return Submit::Rejected(RejectReason::UnknownAdapter);
+            }
+        };
         // reserve a queue token or reject — never overshoots the cap
         let mut d = self.shared.depth.load(AOrd::Relaxed);
         loop {
@@ -299,7 +341,6 @@ impl SubmitHandle {
                 Err(cur) => d = cur,
             }
         }
-        self.shared.max_depth.fetch_max(d as u64 + 1, AOrd::Relaxed);
         let submitted = Instant::now();
         let deadline = req.deadline.and_then(|dl| submitted.checked_add(dl));
         let id = self.shared.seq.fetch_add(1, AOrd::Relaxed);
@@ -308,11 +349,17 @@ impl SubmitHandle {
         let window = self.shared.window.load(AOrd::Acquire).max(1);
         let capacity = req.max_new_tokens.saturating_add(1).min(window);
         let stream = Arc::new(StreamShared::new(capacity));
-        let q = Queued { req, id, submitted, deadline, stream: stream.clone() };
+        let q = Queued { req, id, submitted, deadline, stream: stream.clone(), adapter };
         if self.tx.send(Msg::Request(q)).is_err() {
             self.shared.depth.fetch_sub(1, AOrd::AcqRel);
+            self.shared.rejected.fetch_add(1, AOrd::Relaxed);
             return Submit::Rejected(RejectReason::ShuttingDown);
         }
+        // the high-water mark records only after the send succeeds —
+        // a failed send releases its reservation above, and counting
+        // it first would let the gauge exceed any depth the queue
+        // actually reached
+        self.shared.max_depth.fetch_max(d as u64 + 1, AOrd::Relaxed);
         // Shutdown race: if `closed` is still false here (SeqCst order),
         // our send completed before the runtime thread's final drain
         // began, so the message is guaranteed to be processed (served or
@@ -330,6 +377,54 @@ impl SubmitHandle {
         let (tx, rx) = channel();
         self.tx.send(Msg::Metrics(tx)).ok().context("serve server gone")?;
         rx.recv().context("serve server dropped metrics reply")
+    }
+
+    /// Register (or hot-swap) tenant `id` as a sub-adapter of the
+    /// server's resident super-network LoRA weights: `rank_mask`
+    /// selects its active heads. The binding is built on the runtime
+    /// thread (it owns the session); this blocks for the outcome.
+    /// Slots already decoding under a swapped-out binding keep it
+    /// until they retire.
+    pub fn register_adapter(&self, id: &str, rank_mask: &HostTensor) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::RegisterAdapter {
+                id: id.to_string(),
+                rank_mask: rank_mask.clone(),
+                reply: tx,
+            })
+            .ok()
+            .context("serve server gone")?;
+        rx.recv()
+            .context("serve server dropped register reply")?
+            .map_err(|e| anyhow::anyhow!("register adapter '{id}': {e}"))
+    }
+
+    /// Remove tenant `id`; errors while queued requests or active
+    /// slots still hold its binding.
+    pub fn deregister_adapter(&self, id: &str) -> Result<()> {
+        lock_registry(&self.registry).deregister(id)
+    }
+
+    /// Pin a registered adapter as the default for requests naming no
+    /// tenant (`None` restores the construction-time binding).
+    pub fn pin_default_adapter(&self, id: Option<&str>) -> Result<()> {
+        lock_registry(&self.registry).pin_default(id)
+    }
+
+    /// Cap resident adapter bytes (`0` = unlimited).
+    pub fn set_adapter_budget(&self, bytes: usize) -> Result<()> {
+        lock_registry(&self.registry).set_budget(bytes)
+    }
+
+    /// Total bytes of registered resident adapters.
+    pub fn adapter_bytes(&self) -> usize {
+        lock_registry(&self.registry).resident_bytes()
+    }
+
+    /// Registered adapter ids, sorted.
+    pub fn adapter_ids(&self) -> Vec<AdapterId> {
+        lock_registry(&self.registry).ids()
     }
 }
 
@@ -363,10 +458,12 @@ impl ServeServer {
             queue_cap: opts.queue_cap,
         });
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
+        let registry = Arc::new(Mutex::new(AdapterRegistry::new(opts.adapter_budget_bytes)));
         let shared_t = shared.clone();
+        let registry_t = registry.clone();
         let join = std::thread::Builder::new()
             .name("shears-serve-server".into())
-            .spawn(move || server_main(rx, opts, stores, rank_mask, shared_t, ready_tx))
+            .spawn(move || server_main(rx, opts, stores, rank_mask, shared_t, registry_t, ready_tx))
             .context("spawn serve-server thread")?;
         match ready_rx.recv() {
             Ok(Ok(())) => {}
@@ -379,7 +476,7 @@ impl ServeServer {
                 anyhow::bail!("serve server died during startup");
             }
         }
-        Ok(ServeServer { handle: SubmitHandle { tx, shared }, join: Some(join) })
+        Ok(ServeServer { handle: SubmitHandle { tx, shared, registry }, join: Some(join) })
     }
 
     /// A cloneable submission endpoint for other threads.
@@ -393,6 +490,36 @@ impl ServeServer {
 
     pub fn metrics(&self) -> Result<ServeMetrics> {
         self.handle.metrics()
+    }
+
+    /// See [`SubmitHandle::register_adapter`].
+    pub fn register_adapter(&self, id: &str, rank_mask: &HostTensor) -> Result<()> {
+        self.handle.register_adapter(id, rank_mask)
+    }
+
+    /// See [`SubmitHandle::deregister_adapter`].
+    pub fn deregister_adapter(&self, id: &str) -> Result<()> {
+        self.handle.deregister_adapter(id)
+    }
+
+    /// See [`SubmitHandle::pin_default_adapter`].
+    pub fn pin_default_adapter(&self, id: Option<&str>) -> Result<()> {
+        self.handle.pin_default_adapter(id)
+    }
+
+    /// See [`SubmitHandle::set_adapter_budget`].
+    pub fn set_adapter_budget(&self, bytes: usize) -> Result<()> {
+        self.handle.set_adapter_budget(bytes)
+    }
+
+    /// See [`SubmitHandle::adapter_bytes`].
+    pub fn adapter_bytes(&self) -> usize {
+        self.handle.adapter_bytes()
+    }
+
+    /// See [`SubmitHandle::adapter_ids`].
+    pub fn adapter_ids(&self) -> Vec<AdapterId> {
+        self.handle.adapter_ids()
     }
 
     /// Hold admission (submissions still queue, in-flight requests keep
@@ -499,6 +626,8 @@ fn handle_msg(
     msg: Msg,
     state: &mut LoopState,
     engine: &StepEngine<'_>,
+    decoder: &Decoder<'_>,
+    registry: &Mutex<AdapterRegistry>,
     shared: &Shared,
     started: Instant,
     final_reply: &mut Option<Sender<ServeMetrics>>,
@@ -510,6 +639,13 @@ fn handle_msg(
         }
         Msg::Metrics(tx) => {
             let _ = tx.send(snapshot(state, engine, shared, started));
+        }
+        Msg::RegisterAdapter { id, rank_mask, reply } => {
+            let r = decoder
+                .adapter_binding(&rank_mask)
+                .and_then(|b| lock_registry(registry).register(&id, b))
+                .map_err(|e| format!("{e:#}"));
+            let _ = reply.send(r);
         }
         Msg::Pause => state.paused = true,
         Msg::Resume => state.paused = false,
@@ -530,6 +666,7 @@ fn server_main(
     stores: Vec<ParamStore>,
     rank_mask: Option<HostTensor>,
     shared: Arc<Shared>,
+    registry: Arc<Mutex<AdapterRegistry>>,
     ready: Sender<std::result::Result<(), String>>,
 ) {
     // startup: any failure reports through the readiness handshake so
@@ -591,9 +728,16 @@ fn server_main(
             let idle = engine.active_slots() == 0 && (state.pending.is_empty() || state.paused);
             if idle {
                 match rx.recv() {
-                    Ok(m) => {
-                        handle_msg(m, &mut state, &engine, &shared, started, &mut final_reply)
-                    }
+                    Ok(m) => handle_msg(
+                        m,
+                        &mut state,
+                        &engine,
+                        &decoder,
+                        &registry,
+                        &shared,
+                        started,
+                        &mut final_reply,
+                    ),
                     Err(_) => {
                         state.open = false;
                         state.paused = false;
@@ -602,9 +746,16 @@ fn server_main(
             }
             loop {
                 match rx.try_recv() {
-                    Ok(m) => {
-                        handle_msg(m, &mut state, &engine, &shared, started, &mut final_reply)
-                    }
+                    Ok(m) => handle_msg(
+                        m,
+                        &mut state,
+                        &engine,
+                        &decoder,
+                        &registry,
+                        &shared,
+                        started,
+                        &mut final_reply,
+                    ),
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => {
                         state.open = false;
@@ -623,7 +774,7 @@ fn server_main(
             while engine.has_free_slot() {
                 let Some(Reverse(q)) = state.pending.pop() else { break };
                 shared.depth.fetch_sub(1, AOrd::AcqRel);
-                let Queued { req, id, submitted, deadline, stream } = q;
+                let Queued { req, id, submitted, deadline, stream, adapter } = q;
                 let mut on_token = |_id: u64, t: i32| stream.push_token(t);
                 match engine.admit(
                     id,
@@ -631,6 +782,7 @@ fn server_main(
                     req.max_new_tokens,
                     submitted,
                     deadline,
+                    adapter,
                     &mut on_token,
                 ) {
                     Ok(Some(resp)) => {
@@ -697,6 +849,9 @@ fn server_main(
             Msg::Shutdown(Some(tx)) => {
                 let _ = tx.send(final_m.clone());
             }
+            Msg::RegisterAdapter { reply, .. } => {
+                let _ = reply.send(Err("server shutting down".into()));
+            }
             _ => {}
         }
     }
@@ -717,6 +872,7 @@ mod tests {
             submitted: base,
             deadline: deadline_ms.map(|ms| base + Duration::from_millis(ms)),
             stream: Arc::new(StreamShared::new(2)),
+            adapter: None,
         }
     }
 

@@ -20,6 +20,7 @@ use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
+use crate::ops::model::{AdapterBinding, NamedTensors};
 use crate::runtime::{Arg, DecodeSession, DecodeState, Exe, ResidentParams, Runtime};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
@@ -342,7 +343,15 @@ impl<'rt> ForwardSession<'rt> {
                     Some(t) => Arg::Host(t),
                     None => Arg::Absent,
                 },
-                "rank_mask" => Arg::Host(rank_mask.context("forward needs a rank mask")?),
+                // a full forward needs mask values; a decode binding
+                // (x absent) may omit them — the session then serves
+                // the bare base by default and per-slot tenant
+                // bindings carry their own masks
+                "rank_mask" => match (rank_mask, &x) {
+                    (Some(t), _) => Arg::Host(t),
+                    (None, None) => Arg::Absent,
+                    (None, Some(_)) => bail!("forward needs a rank mask"),
+                },
                 _ => Arg::Buf(
                     self.resident
                         .iter()
@@ -380,6 +389,34 @@ impl<'rt> ForwardSession<'rt> {
     pub fn decoder<'p>(&'p self, rank_mask: Option<&'p HostTensor>) -> Result<DecodeSession<'p>> {
         let args = self.entry_args(None, rank_mask)?;
         self.rt.bind_decode(&self.exe, &args)
+    }
+
+    /// Whether the bound entry declares the unmerged-adapter inputs
+    /// (a rank mask), i.e. per-tenant bindings can apply to it.
+    pub fn supports_adapters(&self) -> bool {
+        self.entry.inputs.iter().any(|i| i.name == "rank_mask")
+    }
+
+    /// Resolve one tenant's [`AdapterBinding`] from this session's
+    /// resident LoRA tensors plus the tenant's rank-mask values. The
+    /// binding owns copies of the (KB-scale) adapter weights, so it
+    /// survives weight re-uploads and can be shared across slots and
+    /// threads.
+    pub fn adapter_binding(&self, rank_mask: &HostTensor) -> Result<AdapterBinding> {
+        ensure!(
+            self.supports_adapters(),
+            "entry '{}' runs base-only (no adapter inputs to bind)",
+            self.exe.name
+        );
+        let mut named = NamedTensors::new();
+        for i in &self.entry.inputs {
+            let name = i.name.as_str();
+            if let Some(t) = self.resident.iter().find_map(|r| r.get(name)).and_then(|b| b.host())
+            {
+                named.insert(name, t);
+            }
+        }
+        AdapterBinding::from_named(&self.cfg, &named, rank_mask.f32s())
     }
 }
 

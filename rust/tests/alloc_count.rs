@@ -261,8 +261,8 @@ fn warm_engine_steps_are_zero_alloc_under_server_loop() {
         let now = Instant::now();
         let p1: Vec<i32> = (1..8).collect();
         let p2: Vec<i32> = (4..12).collect();
-        if engine.admit(0, &p1, usize::MAX, now, None, &mut sink).unwrap().is_some()
-            || engine.admit(1, &p2, usize::MAX, now, None, &mut sink).unwrap().is_some()
+        if engine.admit(0, &p1, usize::MAX, now, None, None, &mut sink).unwrap().is_some()
+            || engine.admit(1, &p2, usize::MAX, now, None, None, &mut sink).unwrap().is_some()
         {
             continue; // a sequence retired at prefill; try the next seed
         }

@@ -9,7 +9,10 @@
 
 use shears::model::{make_config, ConfigSpec, ModelConfig, ParamStore};
 use shears::ops::linalg::{self, PreparedWeight};
-use shears::ops::{DecodeModel, DecodeState, Dims, Extra, Model, NamedTensors, PreparedCell, Scratch};
+use shears::ops::{
+    AdapterBinding, DecodeModel, DecodeState, Dims, Extra, Model, NamedTensors, PreparedCell,
+    RowAdapters, Scratch,
+};
 use shears::runtime::Runtime;
 use shears::serve::{Decoder, GenRequest};
 use shears::tensor::HostTensor;
@@ -134,15 +137,17 @@ fn decode_matches_full_forward(file: &str, force_sparse: bool) {
             extra: Extra::None,
         };
         let full = model.forward(x, false, false).unwrap().logits;
-        let dec = DecodeModel::bind(&cfg, &named, use_adapters, use_adapters.then_some(rank_mask))
-            .unwrap();
+        let dec = DecodeModel::bind(&cfg, &named, use_adapters).unwrap();
+        let binding = use_adapters
+            .then(|| AdapterBinding::from_named(&cfg, &named, rank_mask).unwrap());
+        let ad = binding.as_ref();
         let mut st = DecodeState::new(&cfg, b);
         let mut row = vec![0.0f32; v];
         let mut step = vec![0.0f32; b * v];
         let t0 = s / 2;
         let tag = |p: usize, r: usize| format!("{file} adapters={use_adapters} pos={p} row={r}");
         for r in 0..b {
-            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], &mut row).unwrap();
+            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], ad, &mut row).unwrap();
             assert_eq!(st.cached_len(r), t0);
             let want = &full[(r * s + t0 - 1) * v..(r * s + t0) * v];
             assert_close(&tag(t0 - 1, r), &row, want, 1e-5, 1e-5);
@@ -151,7 +156,8 @@ fn decode_matches_full_forward(file: &str, force_sparse: bool) {
         // forcing the fixture's tokens so every row stays comparable
         for p in t0..s {
             let toks = [x[p], x[s + p]];
-            dec.decode_step(&sc, &mut st, &[0, 1], &toks, &mut step).unwrap();
+            dec.decode_step(&sc, &mut st, &[0, 1], &toks, RowAdapters::Uniform(ad), &mut step)
+                .unwrap();
             for r in 0..b {
                 let want = &full[(r * s + p) * v..(r * s + p + 1) * v];
                 assert_close(&tag(p, r), &step[r * v..(r + 1) * v], want, 1e-5, 1e-5);
@@ -161,9 +167,9 @@ fn decode_matches_full_forward(file: &str, force_sparse: bool) {
         // 0 with row 1's prompt while slot 1 keeps decoding its own
         let mut st = DecodeState::new(&cfg, b);
         for r in 0..b {
-            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], &mut row).unwrap();
+            dec.prefill(&sc, &mut st, r, &x[r * s..r * s + t0], ad, &mut row).unwrap();
         }
-        dec.prefill(&sc, &mut st, 0, &x[s..s + t0 + 1], &mut row).unwrap();
+        dec.prefill(&sc, &mut st, 0, &x[s..s + t0 + 1], ad, &mut row).unwrap();
         let want = &full[(s + t0) * v..(s + t0 + 1) * v];
         assert_close(
             &format!("{file} adapters={use_adapters} re-prefill slot0"),
@@ -173,7 +179,8 @@ fn decode_matches_full_forward(file: &str, force_sparse: bool) {
             1e-5,
         );
         let toks = [x[s + t0 + 1], x[s + t0]];
-        dec.decode_step(&sc, &mut st, &[0, 1], &toks, &mut step).unwrap();
+        dec.decode_step(&sc, &mut st, &[0, 1], &toks, RowAdapters::Uniform(ad), &mut step)
+            .unwrap();
         assert_close(
             &format!("{file} adapters={use_adapters} reset slot0"),
             &step[..v],

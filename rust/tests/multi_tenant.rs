@@ -1,0 +1,346 @@
+//! Multi-tenant serving: per-slot adapter identity (a mixed-tenant
+//! batch must be bit-identical to isolated single-tenant decoders, on
+//! both builtin architectures and both SIMD modes), registry LRU
+//! eviction / re-register round trips, in-flight protection, unknown-
+//! adapter rejection at submit, and the serve-path metric regressions
+//! (rejected undercount, queue-depth gauge overshoot, zero-window
+//! construction).
+//!
+//! The identity tests flip the process-global SIMD mode, so everything
+//! here serializes on one mutex (same discipline as tests/decode.rs).
+
+use shears::model::{ModelConfig, ParamStore};
+use shears::nls::SearchSpace;
+use shears::ops::linalg;
+use shears::runtime::Runtime;
+use shears::serve::{Decoder, GenRequest, RejectReason, ServeServer, ServerOpts, Submit};
+use shears::util::rng::Rng;
+use std::sync::Mutex;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    // nonzero B so the unmerged adapters actually shift the logits —
+    // otherwise every tenant would trivially match the bare base
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            rng.fill_normal(adapters.get_mut(&p.name).unwrap().f32s_mut(), 0.0, 0.05);
+        }
+    }
+    (base, adapters)
+}
+
+fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRequest> {
+    use shears::data::{Task, Vocab};
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), max_new)
+        })
+        .collect()
+}
+
+fn opts(config: &str, entry: &str) -> ServerOpts {
+    ServerOpts { config: config.into(), entry: entry.into(), ..Default::default() }
+}
+
+// --------------------------------------------- mixed-tenant identity
+
+/// The acceptance property: a batch mixing ≥ 3 tenants (three distinct
+/// rank-masks plus untagged bare-base rows) must produce, per request,
+/// exactly the token sequence an isolated single-tenant `Decoder`
+/// produces for it. KV slots are independent and the kernels are
+/// row-count invariant, so tenancy must not leak across rows.
+fn mixed_matches_isolated(config: &str, seed: u64) {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(config).unwrap();
+    let (base, adapters) = init_stores(cfg, seed);
+    let space = SearchSpace::from_config(cfg);
+    let subs = [
+        ("tenant-max", space.maximal()),
+        ("tenant-mid", space.heuristic()),
+        ("tenant-min", space.minimal()),
+    ];
+    let masks: Vec<_> = subs.iter().map(|(_, s)| space.rank_mask(s)).collect();
+    for (i, a) in masks.iter().enumerate() {
+        for b in &masks[i + 1..] {
+            assert_ne!(a.f32s(), b.f32s(), "tenant rank-masks must differ");
+        }
+    }
+
+    // mixed decoder: no construction-time mask, so untagged requests
+    // decode under the bare sparse base
+    let mixed = Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], None).unwrap();
+    for ((id, _), mask) in subs.iter().zip(&masks) {
+        mixed.register_adapter(id, mask).unwrap();
+    }
+    let reqs = requests(cfg, 8, seed ^ 0x5A, 4);
+    let tenant_of = |i: usize| i % 4; // 3 = untagged (bare base)
+    let tagged: Vec<GenRequest> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| match tenant_of(i) {
+            t @ 0..=2 => r.clone().with_adapter(subs[t].0),
+            _ => r.clone(),
+        })
+        .collect();
+    let (mixed_resp, mm) = mixed.serve(&tagged).unwrap();
+    assert!(mm.decode_steps > 0, "{config}: mixed batch must ride the KV decode path");
+
+    // four isolated single-tenant decoders, each serving only its rows
+    for t in 0..4 {
+        let mask = (t < 3).then(|| masks[t].clone());
+        let iso = Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], mask).unwrap();
+        let mine: Vec<GenRequest> = reqs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| tenant_of(*i) == t)
+            .map(|(_, r)| r.clone())
+            .collect();
+        let (iso_resp, _) = iso.serve(&mine).unwrap();
+        for (j, i) in (0..reqs.len()).filter(|i| tenant_of(*i) == t).enumerate() {
+            assert_eq!(
+                mixed_resp[i].tokens, iso_resp[j].tokens,
+                "{config} request {i} (tenant {t}): mixed batch diverged from the \
+                 isolated single-tenant decoder"
+            );
+            assert_eq!(mixed_resp[i].new_tokens, iso_resp[j].new_tokens, "{config} request {i}");
+        }
+    }
+}
+
+fn identity_matrix(config: &str, seed: u64) {
+    let _g = lock();
+    let was = linalg::simd_enabled();
+    for simd in [true, false] {
+        linalg::set_simd_enabled(simd);
+        mixed_matches_isolated(config, seed);
+    }
+    linalg::set_simd_enabled(was);
+}
+
+#[test]
+fn mixed_tenants_match_isolated_decoders_llama() {
+    identity_matrix("tiny-llama", 33);
+}
+
+#[test]
+fn mixed_tenants_match_isolated_decoders_mpt() {
+    identity_matrix("mpt-sim", 17);
+}
+
+// --------------------------------------------------- registry behavior
+
+/// LRU eviction under a byte budget, observed end-to-end: registering
+/// past the budget evicts the least-recently-used idle tenant, resident
+/// bytes stay under the cap, serving an evicted id fails with a visible
+/// error, and re-registering it serves bit-identically again.
+#[test]
+fn lru_eviction_and_reregister_round_trip() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, adapters) = init_stores(cfg, 23);
+    let space = SearchSpace::from_config(cfg);
+    let decoder = Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], None).unwrap();
+
+    let mask_a = space.rank_mask(&space.maximal());
+    decoder.register_adapter("a", &mask_a).unwrap();
+    let one = decoder.adapter_bytes();
+    assert!(one > 0, "a resident binding accounts its bytes");
+    // budget fits exactly two resident adapters
+    decoder.set_adapter_budget(2 * one).unwrap();
+    decoder.register_adapter("b", &space.rank_mask(&space.heuristic())).unwrap();
+    decoder.register_adapter("c", &space.rank_mask(&space.minimal())).unwrap();
+    assert_eq!(decoder.adapter_ids(), vec!["b".to_string(), "c".to_string()], "a was LRU");
+    assert!(decoder.adapter_bytes() <= 2 * one, "resident bytes stay under budget");
+
+    let reqs = requests(cfg, 2, 5, 3);
+    let tag_a: Vec<GenRequest> = reqs.iter().map(|r| r.clone().with_adapter("a")).collect();
+    let e = decoder.serve(&tag_a).unwrap_err();
+    assert!(format!("{e:#}").contains("unknown adapter"), "{e:#}");
+
+    // re-register the evicted tenant (evicting "b" in turn) and check
+    // it serves exactly what a dedicated decoder produces
+    decoder.register_adapter("a", &mask_a).unwrap();
+    assert_eq!(decoder.adapter_ids(), vec!["a".to_string(), "c".to_string()]);
+    let (resp, _) = decoder.serve(&tag_a).unwrap();
+    let iso = Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], Some(mask_a)).unwrap();
+    let (want, _) = iso.serve(&reqs).unwrap();
+    for (r, w) in resp.iter().zip(&want) {
+        assert_eq!(r.tokens, w.tokens, "re-registered tenant must serve identically");
+    }
+}
+
+/// A single adapter larger than the whole budget is rejected up front —
+/// and the rejection leaves the registry untouched.
+#[test]
+fn over_budget_adapter_rejected_without_side_effects() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, adapters) = init_stores(cfg, 29);
+    let space = SearchSpace::from_config(cfg);
+    let decoder = Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], None).unwrap();
+    decoder.set_adapter_budget(1).unwrap();
+    let e = decoder.register_adapter("huge", &space.rank_mask(&space.maximal())).unwrap_err();
+    assert!(format!("{e:#}").contains("budget"), "{e:#}");
+    assert!(decoder.adapter_ids().is_empty());
+    assert_eq!(decoder.adapter_bytes(), 0);
+}
+
+/// While a queued request holds a tenant's binding, that tenant is
+/// in-flight: registering another adapter that would require evicting
+/// it errors (instead of stalling or corrupting the slot), and so does
+/// an explicit deregister. Both succeed once the request retires.
+#[test]
+fn in_flight_binding_blocks_eviction_and_deregister() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, adapters) = init_stores(cfg, 7);
+    let space = SearchSpace::from_config(cfg);
+    let server =
+        ServeServer::spawn(opts("tiny-llama", "forward_eval"), vec![base, adapters], None).unwrap();
+    server.register_adapter("busy", &space.rank_mask(&space.maximal())).unwrap();
+    let one = server.adapter_bytes();
+    server.set_adapter_budget(one).unwrap(); // exactly one resident fits
+
+    server.pause().unwrap(); // the submission stays queued, binding pinned
+    let req = requests(cfg, 1, 3, 2).pop().unwrap().with_adapter("busy");
+    let stream = server.submit(req).accepted().unwrap();
+
+    let e = server.register_adapter("newbie", &space.rank_mask(&space.minimal())).unwrap_err();
+    assert!(format!("{e:#}").contains("in-flight"), "{e:#}");
+    let e = server.deregister_adapter("busy").unwrap_err();
+    assert!(format!("{e:#}").contains("in flight"), "{e:#}");
+
+    server.resume().unwrap();
+    assert!(stream.wait().unwrap().new_tokens >= 1);
+    // retirement released the pin: the same operations now succeed
+    server.register_adapter("newbie", &space.rank_mask(&space.minimal())).unwrap();
+    assert_eq!(server.adapter_ids(), vec!["newbie".to_string()], "busy was evicted as LRU");
+    assert!(server.adapter_bytes() <= one);
+    server.shutdown().unwrap();
+}
+
+// ------------------------------------------------ serve-path regressions
+
+/// Naming an unregistered adapter rejects at submit with
+/// `UnknownAdapter` — counted into `ServeMetrics::rejected` — and the
+/// same request succeeds once the tenant is registered.
+#[test]
+fn unknown_adapter_rejected_at_submit() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, adapters) = init_stores(cfg, 11);
+    let space = SearchSpace::from_config(cfg);
+    let server =
+        ServeServer::spawn(opts("tiny-llama", "forward_eval"), vec![base, adapters], None).unwrap();
+    let req = requests(cfg, 1, 13, 2).pop().unwrap().with_adapter("ghost");
+    match server.submit(req.clone()) {
+        Submit::Rejected(RejectReason::UnknownAdapter) => {}
+        Submit::Rejected(other) => panic!("wrong rejection: {other:?}"),
+        Submit::Accepted(_) => panic!("unregistered tenant must be rejected at submit"),
+    }
+    server.register_adapter("ghost", &space.rank_mask(&space.heuristic())).unwrap();
+    let resp = server.submit(req).accepted().unwrap().wait().unwrap();
+    assert!(resp.new_tokens >= 1);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.rejected, 1, "the UnknownAdapter rejection must be counted");
+}
+
+/// `ServeMetrics::rejected` must reconcile with every rejection the
+/// callers actually observed — the ShuttingDown paths used to be
+/// dropped from the count — and `max_queue_depth` must never exceed a
+/// depth the queue actually reached (the gauge used to record before a
+/// failed send released its reservation).
+#[test]
+fn rejected_counter_reconciles_with_observed_rejects() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let (base, _) = init_stores(cfg, 19);
+    let server = ServeServer::spawn(
+        ServerOpts { queue_cap: 1, ..opts("tiny-llama", "forward_eval_base") },
+        vec![base],
+        None,
+    )
+    .unwrap();
+    server.pause().unwrap();
+    let reqs = requests(cfg, 2, 3, 8);
+    let h = server.handle();
+    let accepted = server.submit(reqs[0].clone()).accepted().unwrap();
+    let mut observed = 0u64;
+    match server.submit(reqs[1].clone()) {
+        Submit::Rejected(RejectReason::QueueFull) => observed += 1,
+        other => panic!("2nd submission past queue_cap=1 must bounce, got {:?}", kind(&other)),
+    }
+    // shutdown on a helper thread: it flips `accepting` then blocks on
+    // the drain; probe until a submitter sees ShuttingDown (every probe
+    // rejects — the queue is still full until the drain admits)
+    let drainer = std::thread::spawn(move || server.shutdown().unwrap());
+    loop {
+        match h.submit(reqs[1].clone()) {
+            Submit::Rejected(r) => {
+                observed += 1;
+                if r == RejectReason::ShuttingDown {
+                    break;
+                }
+                assert_eq!(r, RejectReason::QueueFull);
+            }
+            Submit::Accepted(_) => panic!("probe accepted past a full queue"),
+        }
+    }
+    assert!(accepted.wait().unwrap().new_tokens >= 1, "accepted work still drains");
+    let m = drainer.join().unwrap();
+    assert_eq!(m.requests, 1);
+    assert_eq!(
+        m.rejected, observed,
+        "rejected must count every caller-observed rejection (QueueFull and ShuttingDown)"
+    );
+    assert!(
+        m.max_queue_depth <= 1,
+        "gauge {} exceeds queue_cap=1 — recorded before the send succeeded",
+        m.max_queue_depth
+    );
+}
+
+fn kind(s: &Submit) -> String {
+    match s {
+        Submit::Accepted(_) => "Accepted".into(),
+        Submit::Rejected(r) => format!("{r:?}"),
+    }
+}
+
+/// A zero-token context window can serve nothing: construction fails
+/// with a visible error instead of admitting prompts into an underflow
+/// (`admit_prompt` used to compute `0 - 1` on the window).
+#[test]
+fn zero_window_config_rejected_at_construction() {
+    let _g = lock();
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let mut cfg = manifest.config("tiny-llama").unwrap().clone();
+    let (base, _) = init_stores(&cfg, 3);
+    cfg.seq_len = 0;
+    let e = Decoder::new(&rt, &cfg, "forward_eval_base", vec![&base], None).unwrap_err();
+    assert!(format!("{e:#}").contains("window"), "{e:#}");
+}
