@@ -466,6 +466,97 @@ fn main() {
         None
     };
 
+    // ---- serve.fault: recovery latency + throughput under faults ----
+    // Two numbers ride the trajectory: how long a quarantine recovery
+    // (re-prefill of every active slot after a failed batched step)
+    // takes vs a clean decode step, and what periodic injected step
+    // errors cost the async server end to end. Recovered tokens must
+    // stay bit-identical to the fault-free re-forward reference.
+    let serve_fault: Option<(f64, f64, f64, shears::serve::ServeMetrics)> = if b.rt
+        .supports_decode()
+    {
+        use shears::serve::{Admission, FaultPlan, ServeServer, ServerOpts, Submit};
+        println!("\n== serve.fault: quarantine recovery + faulty-path throughput ==");
+        // engine level: time the recovery step directly
+        let mut engine = decoder.step_engine().unwrap();
+        let mut sink = |_id: u64, _t: i32| {};
+        let mut eng_retired = Vec::with_capacity(engine.slots());
+        let now = std::time::Instant::now();
+        for (i, r) in sreqs.iter().take(engine.slots().min(4)).enumerate() {
+            let adm = Admission {
+                id: i as u64,
+                prompt: &r.prompt,
+                max_new: usize::MAX,
+                submitted: now,
+                deadline: None,
+                wall_deadline: None,
+                adapter: None,
+            };
+            let _ = engine.admit(adm, &mut sink).unwrap();
+        }
+        // warm clean steps, then time one clean step and one recovery
+        for _ in 0..3 {
+            engine.step(&mut sink, &mut eng_retired).unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        engine.step(&mut sink, &mut eng_retired).unwrap();
+        let clean_step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let survivors = engine.active_slots();
+        engine.set_fault_plan(FaultPlan::none().error_at(0));
+        let t0 = std::time::Instant::now();
+        engine.step(&mut sink, &mut eng_retired).unwrap();
+        let recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "  quarantine recovery: {recovery_ms:.2} ms for {survivors} slots \
+             (clean step {clean_step_ms:.3} ms)"
+        );
+        decoder.recycle(engine.into_state());
+
+        // server level: periodic injected step errors, burst submission
+        let server = ServeServer::spawn(
+            ServerOpts {
+                backend: "native".into(),
+                config: "llama-sim-s".into(),
+                entry: "forward_eval".into(),
+                queue_cap: sreqs.len() * 2,
+                // fires at step attempts 2, 10, 18, … — early enough to
+                // hit even the SHEARS_BENCH_FAST window (max_new = 4)
+                fault: FaultPlan::none().error_every(2, 8),
+                ..Default::default()
+            },
+            vec![base.clone(), adapters.clone()],
+            Some(mask.clone()),
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let streams: Vec<_> = sreqs
+            .iter()
+            .map(|r| match server.submit(r.clone()) {
+                Submit::Accepted(s) => s,
+                Submit::Rejected(why) => panic!("bench submission rejected: {why:?}"),
+            })
+            .collect();
+        let faulty_resp: Vec<_> = streams.into_iter().map(|s| s.wait().unwrap()).collect();
+        let wall = t0.elapsed().as_secs_f64();
+        let fm = server.shutdown().unwrap();
+        // acceptance: every request recovered, to the reference tokens
+        for (a, c) in faulty_resp.iter().zip(&ref_resp) {
+            assert_eq!(a.tokens, c.tokens, "faulty-path recovery diverged from reference");
+        }
+        assert_eq!(fm.faults, 0, "error_every must quarantine-recover, not fault");
+        let tok_s_faulty = fm.generated_tokens as f64 / wall.max(1e-9);
+        println!(
+            "  faulty path (error every 8 steps): {tok_s_faulty:>8.0} tok/s  \
+             {} quarantine recoveries, {} extra prefills",
+            fm.quarantined,
+            fm.prefills.saturating_sub(sreqs.len() as u64)
+        );
+        Some((recovery_ms, clean_step_ms, tok_s_faulty, fm))
+    } else {
+        println!("\n  (serve.fault skipped — no incremental decode on this backend)");
+        None
+    };
+
     // ---- prune op latency ----
     let (n, k) = (cfg.prunable[0].shape[0], cfg.prunable[0].shape[1]);
     let op = b.manifest.prune_op("wanda", n, k).unwrap();
@@ -599,6 +690,19 @@ fn main() {
             ]);
         }
     }
+    if let Some((recovery_ms, clean_step_ms, tok_s_faulty, fm)) = &serve_fault {
+        table.row(vec![
+            "serve fault recovery".into(),
+            format!("{recovery_ms:.2} ms (clean step {clean_step_ms:.3} ms)"),
+        ]);
+        table.row(vec![
+            "serve under faults".into(),
+            format!(
+                "{tok_s_faulty:.0} tok/s ({} recoveries, {} restarts)",
+                fm.quarantined, fm.restarts
+            ),
+        ]);
+    }
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
     if let Some(mp) = miss_per_eval {
@@ -701,6 +805,22 @@ fn main() {
             mt.push(("overhead_vs_uniform", num(inc_tok_s / mt_tok_s)));
         }
         json.push(("serve_multi_tenant", obj(mt)));
+    }
+    if let Some((recovery_ms, clean_step_ms, tok_s_faulty, fm)) = &serve_fault {
+        let mut sf = vec![
+            ("recovery_ms", num(*recovery_ms)),
+            ("clean_step_ms", num(*clean_step_ms)),
+            ("recovery_vs_step", num(recovery_ms / clean_step_ms.max(1e-9))),
+            ("tok_s_faulty", num(*tok_s_faulty)),
+            ("quarantined", num(fm.quarantined as f64)),
+            ("restarts", num(fm.restarts as f64)),
+            ("faults", num(fm.faults as f64)),
+            ("prefills", num(fm.prefills as f64)),
+        ];
+        if let Some((inc_tok_s, _)) = &serve_decode {
+            sf.push(("overhead_vs_clean", num(inc_tok_s / tok_s_faulty.max(1e-9))));
+        }
+        json.push(("serve_fault", obj(sf)));
     }
     json.push((
         "prune",

@@ -61,6 +61,18 @@ fn flags() -> Vec<FlagSpec> {
             help: "serve: per-request deadline for EDF admission (0 = best effort)",
         },
         FlagSpec {
+            name: "max-wall-ms",
+            default: Some("0"),
+            help: "serve: hard per-request wall-clock budget — requests past it \
+                   are cancelled mid-decode, freeing their KV slot (0 = unbounded)",
+        },
+        FlagSpec {
+            name: "restart-budget",
+            default: Some("3"),
+            help: "serve: supervised engine rebuilds tolerated after panics before \
+                   the async server shuts down cleanly (SHEARS_FAULT arms drills)",
+        },
+        FlagSpec {
             name: "tenants",
             default: Some("0"),
             help: "serve: register N tenant sub-adapters and tag requests \
@@ -305,6 +317,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let vocab = Vocab::new(cfg.vocab);
     let mut rng = Rng::new(7);
     let deadline_ms = args.get_usize("deadline-ms")?;
+    let max_wall_ms = args.get_usize("max-wall-ms")?;
 
     // multi-tenant mode: N tenants share the sparse base, each serving
     // its own NLS sub-adapter (a rank-mask over one shared LoRA store);
@@ -330,6 +343,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
             if deadline_ms > 0 {
                 r = r.with_deadline(std::time::Duration::from_millis(deadline_ms as u64));
+            }
+            if max_wall_ms > 0 {
+                r = r.with_max_wall_ms(max_wall_ms as u64);
             }
             if tenants > 0 && i % (tenants + 1) != tenants {
                 r = r.with_adapter(tenant_masks[i % (tenants + 1)].0.clone());
@@ -373,6 +389,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 slots: 0,
                 queue_cap: args.get_usize("queue-cap")?,
                 adapter_budget_bytes: budget,
+                restart_budget: args.get_usize("restart-budget")? as u32,
+                // deadlines stay advisory on the CLI; max_wall (above)
+                // is the enforced budget. An empty fault plan means
+                // SHEARS_FAULT drills arm automatically at spawn.
+                ..Default::default()
             },
             stores,
             None,
@@ -428,6 +449,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "decode path: {} prefills + {} KV-cached steps ({} truncated prompts)",
             metrics.prefills, metrics.decode_steps, metrics.truncated_prompts
+        );
+    }
+    if metrics.faults + metrics.cancelled + metrics.quarantined + metrics.restarts > 0 {
+        println!(
+            "fault tolerance: {} faults, {} cancelled, {} quarantine recoveries, {} restarts",
+            metrics.faults, metrics.cancelled, metrics.quarantined, metrics.restarts
         );
     }
     Ok(())

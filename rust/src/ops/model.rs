@@ -2074,11 +2074,29 @@ impl<'a> DecodeModel<'a> {
         self.lm_head.fwd(sc, &tf, m, self.scale, &adapters, logits);
         sc.give(tf);
         sc.give(h);
+        // Failure atomicity the serving layer's recovery depends on:
+        // every validation above runs before any compute, and sequence
+        // lengths advance only here, after all compute succeeded. K/V
+        // writes for a step that errors out land at positions >= len
+        // and are never read — the next prefill/step overwrites them —
+        // so a failed step leaves each slot exactly at its pre-step
+        // position and `prefill` can rebuild any column from the
+        // token history alone (see `serve::StepEngine::recover_step`).
         for &sl in slots {
             st.len[sl] += 1;
         }
         Ok(())
     }
+}
+
+/// Whether a logits row is safe to trust: all values finite. NaN/±inf
+/// anywhere in a row means that slot's KV column may be poisoned (a
+/// numeric blow-up propagates forward through the cache), so the
+/// serving layer quarantines the slot instead of sampling from it.
+/// SIMD-mode independent — it reads the already-materialized row.
+#[inline]
+pub fn logits_row_finite(row: &[f32]) -> bool {
+    row.iter().all(|x| x.is_finite())
 }
 
 // ------------------------------------------------- fused LoRA linear

@@ -1,0 +1,454 @@
+//! Deterministic fault injection for the serving stack, plus the
+//! attributable-fault taxonomy every recovery path reports through.
+//!
+//! A [`FaultPlan`] schedules injected failures against the engine's
+//! cumulative **step-attempt counter** (every call to
+//! [`super::StepEngine::step`] with at least one active slot consumes
+//! one attempt, whether or not it completes), so a given plan replays
+//! the exact same failure at the exact same point in every run — the
+//! recovery paths in `serve/server.rs` are pinned by tests, not by
+//! hoping a real fault shows up. The counter lives on the plan itself
+//! and the supervisor moves the plan from a dead engine to its
+//! replacement, so injections keep their global indices across a
+//! supervised restart (a `panic@N+1` plan exhausts the restart budget
+//! deterministically).
+//!
+//! Plans come from the API ([`super::ServerOpts`]`::fault`,
+//! [`super::StepEngine::set_fault_plan`]) or — when the API plan is
+//! empty — from the `SHEARS_FAULT` environment variable, so operators
+//! can run recovery drills against a live binary. Grammar:
+//! comma-separated `kind@start[+period][:arg]`, attempts 0-based:
+//!
+//! ```text
+//!   panic@3       panic inside step attempt 3 (exercises the supervisor)
+//!   error@5       step attempt 5 fails; every slot recovers via re-prefill
+//!   error@5:1     …and slot 1's recovery prefill fails too (quarantine)
+//!   nan@4:2       poison slot 2's logits row with NaN on attempt 4
+//!   delay@2:8     sleep 8 ms before attempt 2 (deadline-overrun tests)
+//!   panic@6+10    periodic: fires on attempts 6, 16, 26, …
+//! ```
+//!
+//! An **empty plan is a single branch** on the hot path
+//! ([`FaultPlan::is_empty`]) — no counter bookkeeping, no scan — so
+//! the fault layer rides in production builds without costing the
+//! zero-alloc warm step anything (`rust/tests/alloc_count.rs`).
+
+use anyhow::{bail, Context, Result};
+use std::fmt;
+
+/// Why a request ended without a normal completion — shared by
+/// injected and organic failures so stream errors and
+/// [`super::GenResponse`]`::fault` stay attributable either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// the engine step panicked (caught by the server's supervisor;
+    /// every in-flight request fails and the engine is rebuilt)
+    StepPanic,
+    /// the batched decode step errored and this slot's own recovery
+    /// re-prefill failed too
+    StepError,
+    /// the slot's logits row contained NaN/±inf — its KV column is no
+    /// longer trusted
+    NanLogits,
+    /// past `GenRequest::deadline` with `ServerOpts::enforce_deadlines`
+    DeadlineExceeded,
+    /// past the hard per-request `GenRequest::max_wall` budget
+    WallClockExceeded,
+    /// cancelled by the caller (`StreamHandle::cancel`)
+    Cancelled,
+    /// the caller dropped its `StreamHandle` before the stream ended
+    Abandoned,
+    /// the server is going away (restart budget exhausted / drain)
+    Shutdown,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::StepPanic => "step-panic",
+            FaultKind::StepError => "step-error",
+            FaultKind::NanLogits => "nan-logits",
+            FaultKind::DeadlineExceeded => "deadline-exceeded",
+            FaultKind::WallClockExceeded => "wall-clock-exceeded",
+            FaultKind::Cancelled => "cancelled",
+            FaultKind::Abandoned => "abandoned",
+            FaultKind::Shutdown => "shutdown",
+        }
+    }
+
+    /// Cancellations are the caller's (or the clock's) doing; faults
+    /// are the engine's. The two feed different metrics counters.
+    pub fn is_cancellation(self) -> bool {
+        matches!(
+            self,
+            FaultKind::DeadlineExceeded
+                | FaultKind::WallClockExceeded
+                | FaultKind::Cancelled
+                | FaultKind::Abandoned
+        )
+    }
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One failed or cancelled request's attribution record: request id,
+/// the KV slot it occupied (`None` = it never left the queue), what
+/// kind of fault, and the underlying detail. Carried on
+/// [`super::GenResponse`]`::fault` and formatted into stream errors so
+/// a multi-tenant operator can tell whose request died, where, and why.
+#[derive(Clone, Debug)]
+pub struct ServeFault {
+    pub request: u64,
+    pub slot: Option<usize>,
+    pub kind: FaultKind,
+    pub detail: String,
+}
+
+impl fmt::Display for ServeFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.slot {
+            Some(s) => {
+                write!(f, "request {} (slot {s}) fault {}: {}", self.request, self.kind, self.detail)
+            }
+            None => {
+                write!(f, "request {} (queued) fault {}: {}", self.request, self.kind, self.detail)
+            }
+        }
+    }
+}
+
+/// What to inject.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InjectKind {
+    /// panic inside the engine step — exercises `catch_unwind`
+    /// supervision and the restart budget
+    Panic,
+    /// the batched step returns an error before touching the model;
+    /// `slot` (if set) also fails its recovery re-prefill, so exactly
+    /// that request retires with a [`FaultKind::StepError`] fault
+    Error { slot: Option<usize> },
+    /// overwrite `slot`'s logits row with NaN after the model step —
+    /// exercises the non-finite quarantine
+    NanLogits { slot: usize },
+    /// sleep `ms` before the step — deadline/wall-clock overrun tests
+    Delay { ms: u64 },
+}
+
+/// An [`InjectKind`] scheduled against the step-attempt counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Injection {
+    /// first attempt (0-based) this fires on
+    pub at: u64,
+    /// re-fire every `period` attempts after `at`; `0` = fire once
+    pub period: u64,
+    pub kind: InjectKind,
+}
+
+impl Injection {
+    fn fires(&self, attempt: u64) -> bool {
+        if attempt < self.at {
+            return false;
+        }
+        if self.period == 0 {
+            attempt == self.at
+        } else {
+            (attempt - self.at) % self.period == 0
+        }
+    }
+}
+
+/// Everything firing on one step attempt — plain copyable data, built
+/// without allocating, so consulting the plan keeps warm steps
+/// alloc-free even with injections armed (just not firing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Fire {
+    /// the attempt index this record describes (for error messages)
+    pub attempt: u64,
+    pub delay_ms: u64,
+    pub panic: bool,
+    pub error: bool,
+    /// slot whose recovery prefill the injected error also poisons
+    pub error_slot: Option<usize>,
+    /// slot whose logits row gets poisoned with NaN
+    pub nan_slot: Option<usize>,
+}
+
+impl Fire {
+    pub fn is_clean(&self) -> bool {
+        self.delay_ms == 0 && !self.panic && !self.error && self.nan_slot.is_none()
+    }
+}
+
+/// A deterministic fault schedule (see the module docs for the
+/// grammar and counter semantics).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    injections: Vec<Injection>,
+    attempts: u64,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// An empty plan is the production state: the engine's only cost
+    /// is this check.
+    pub fn is_empty(&self) -> bool {
+        self.injections.is_empty()
+    }
+
+    /// Step attempts consumed so far (survives engine rebuilds — the
+    /// supervisor moves the plan, counter and all).
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    pub fn push(&mut self, inj: Injection) {
+        self.injections.push(inj);
+    }
+
+    pub fn panic_at(mut self, at: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::Panic });
+        self
+    }
+
+    pub fn panic_every(mut self, at: u64, period: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period, kind: InjectKind::Panic });
+        self
+    }
+
+    pub fn error_at(mut self, at: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::Error { slot: None } });
+        self
+    }
+
+    pub fn error_at_slot(mut self, at: u64, slot: usize) -> FaultPlan {
+        self.injections
+            .push(Injection { at, period: 0, kind: InjectKind::Error { slot: Some(slot) } });
+        self
+    }
+
+    pub fn error_every(mut self, at: u64, period: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period, kind: InjectKind::Error { slot: None } });
+        self
+    }
+
+    pub fn nan_at(mut self, at: u64, slot: usize) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::NanLogits { slot } });
+        self
+    }
+
+    pub fn delay_at(mut self, at: u64, ms: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::Delay { ms } });
+        self
+    }
+
+    /// Consume one step attempt and collect what fires on it. Called
+    /// by the engine once per step with a non-empty plan; never
+    /// allocates.
+    pub fn fire(&mut self) -> Fire {
+        let attempt = self.attempts;
+        self.attempts += 1;
+        let mut f = Fire { attempt, ..Fire::default() };
+        for inj in &self.injections {
+            if !inj.fires(attempt) {
+                continue;
+            }
+            match inj.kind {
+                InjectKind::Panic => f.panic = true,
+                InjectKind::Error { slot } => {
+                    f.error = true;
+                    if slot.is_some() {
+                        f.error_slot = slot;
+                    }
+                }
+                InjectKind::NanLogits { slot } => {
+                    // first match wins — one quarantine target per step
+                    if f.nan_slot.is_none() {
+                        f.nan_slot = Some(slot);
+                    }
+                }
+                InjectKind::Delay { ms } => f.delay_ms += ms,
+            }
+        }
+        f
+    }
+
+    /// Parse the `SHEARS_FAULT` grammar (module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, sched) = part
+                .split_once('@')
+                .with_context(|| format!("fault '{part}': expected kind@start[+period][:arg]"))?;
+            let (sched, arg) = match sched.split_once(':') {
+                Some((s, a)) => (s, Some(a)),
+                None => (sched, None),
+            };
+            let (at, period) = match sched.split_once('+') {
+                Some((a, p)) => (
+                    a.parse::<u64>().with_context(|| format!("fault '{part}': bad start '{a}'"))?,
+                    p.parse::<u64>()
+                        .with_context(|| format!("fault '{part}': bad period '{p}'"))?,
+                ),
+                None => (
+                    sched
+                        .parse::<u64>()
+                        .with_context(|| format!("fault '{part}': bad start '{sched}'"))?,
+                    0,
+                ),
+            };
+            let parse_arg = |what: &str| -> Result<u64> {
+                arg.with_context(|| format!("fault '{part}': '{kind}' needs :{what}"))?
+                    .parse::<u64>()
+                    .with_context(|| format!("fault '{part}': bad {what}"))
+            };
+            let kind = match kind {
+                "panic" => {
+                    ensure_no_arg(part, arg)?;
+                    InjectKind::Panic
+                }
+                "error" => InjectKind::Error {
+                    slot: match arg {
+                        Some(_) => Some(parse_arg("slot")? as usize),
+                        None => None,
+                    },
+                },
+                "nan" => InjectKind::NanLogits { slot: parse_arg("slot")? as usize },
+                "delay" => InjectKind::Delay { ms: parse_arg("ms")? },
+                other => bail!("fault '{part}': unknown kind '{other}' (panic|error|nan|delay)"),
+            };
+            plan.injections.push(Injection { at, period, kind });
+        }
+        Ok(plan)
+    }
+
+    /// The `SHEARS_FAULT` plan, `None` when unset or blank. A parse
+    /// error is a real error — a typoed drill must fail loudly, not
+    /// silently run fault-free.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var("SHEARS_FAULT") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(FaultPlan::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+fn ensure_no_arg(part: &str, arg: Option<&str>) -> Result<()> {
+    if arg.is_some() {
+        bail!("fault '{part}': 'panic' takes no :arg");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_every_kind_and_schedule() {
+        let p = FaultPlan::parse("panic@3, error@5:1 ,nan@4:2,delay@2:8,error@7+100").unwrap();
+        assert_eq!(p.injections.len(), 5);
+        assert_eq!(p.injections[0], Injection { at: 3, period: 0, kind: InjectKind::Panic });
+        assert_eq!(
+            p.injections[1],
+            Injection { at: 5, period: 0, kind: InjectKind::Error { slot: Some(1) } }
+        );
+        assert_eq!(
+            p.injections[2],
+            Injection { at: 4, period: 0, kind: InjectKind::NanLogits { slot: 2 } }
+        );
+        assert_eq!(p.injections[3], Injection { at: 2, period: 0, kind: InjectKind::Delay { ms: 8 } });
+        assert_eq!(
+            p.injections[4],
+            Injection { at: 7, period: 100, kind: InjectKind::Error { slot: None } }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("panic").is_err(), "missing @start");
+        assert!(FaultPlan::parse("panic@x").is_err(), "bad start");
+        assert!(FaultPlan::parse("nan@3").is_err(), "nan needs a slot");
+        assert!(FaultPlan::parse("delay@3").is_err(), "delay needs ms");
+        assert!(FaultPlan::parse("panic@3:1").is_err(), "panic takes no arg");
+        assert!(FaultPlan::parse("explode@1").is_err(), "unknown kind");
+        assert!(FaultPlan::parse("error@1+z").is_err(), "bad period");
+        let p = FaultPlan::parse(" ").unwrap();
+        assert!(p.is_empty(), "blank spec is the empty plan");
+    }
+
+    #[test]
+    fn one_shot_fires_exactly_once_periodic_repeats() {
+        let one = Injection { at: 3, period: 0, kind: InjectKind::Panic };
+        assert!(!one.fires(2));
+        assert!(one.fires(3));
+        assert!(!one.fires(4));
+        let rep = Injection { at: 6, period: 10, kind: InjectKind::Panic };
+        assert!(!rep.fires(5));
+        assert!(rep.fires(6));
+        assert!(!rep.fires(7));
+        assert!(rep.fires(16));
+        assert!(rep.fires(26));
+    }
+
+    #[test]
+    fn fire_advances_the_attempt_counter_and_aggregates() {
+        let mut p = FaultPlan::none().delay_at(1, 4).nan_at(1, 2).error_at_slot(1, 0);
+        let f0 = p.fire();
+        assert_eq!(f0.attempt, 0);
+        assert!(f0.is_clean());
+        let f1 = p.fire();
+        assert_eq!(f1.attempt, 1);
+        assert!(!f1.is_clean());
+        assert_eq!(f1.delay_ms, 4);
+        assert_eq!(f1.nan_slot, Some(2));
+        assert!(f1.error);
+        assert_eq!(f1.error_slot, Some(0));
+        assert!(!f1.panic);
+        assert!(p.fire().is_clean());
+        assert_eq!(p.attempts(), 3);
+    }
+
+    #[test]
+    fn fault_display_is_attributable() {
+        let f = ServeFault {
+            request: 7,
+            slot: Some(2),
+            kind: FaultKind::NanLogits,
+            detail: "non-finite logits row".into(),
+        };
+        let s = f.to_string();
+        assert!(s.contains("request 7"), "{s}");
+        assert!(s.contains("slot 2"), "{s}");
+        assert!(s.contains("nan-logits"), "{s}");
+        let q = ServeFault {
+            request: 9,
+            slot: None,
+            kind: FaultKind::Shutdown,
+            detail: "restart budget exhausted".into(),
+        };
+        assert!(q.to_string().contains("(queued)"));
+    }
+
+    #[test]
+    fn cancellation_kinds_partition_the_taxonomy() {
+        for k in [
+            FaultKind::DeadlineExceeded,
+            FaultKind::WallClockExceeded,
+            FaultKind::Cancelled,
+            FaultKind::Abandoned,
+        ] {
+            assert!(k.is_cancellation(), "{k}");
+        }
+        for k in [FaultKind::StepPanic, FaultKind::StepError, FaultKind::NanLogits, FaultKind::Shutdown]
+        {
+            assert!(!k.is_cancellation(), "{k}");
+        }
+    }
+}

@@ -38,16 +38,29 @@
 //! Latency metrics clock from **submission** (the `serve()` call on the
 //! batch path, `submit()` on the async path), so queue wait is visible
 //! in p50/p99 and in the time-to-first-token percentiles.
+//!
+//! Serving is **fault-tolerant**: a non-finite logits row or a failed
+//! decode step quarantines *that slot only* (the request retires with
+//! an attributable [`ServeFault`] instead of failing the batch, and
+//! surviving slots rebuild their suspect KV columns via re-prefill —
+//! bit-identical to the uninterrupted run by the decode≡prefill parity
+//! `rust/tests/decode.rs` pins). Panics are caught by the async
+//! server's supervisor, which rebuilds the engine from the resident
+//! base weights under a bounded restart budget. The [`fault`] module's
+//! deterministic injection harness (`SHEARS_FAULT`) pins every one of
+//! these paths in `rust/tests/serve_faults.rs`.
 
+pub mod fault;
 pub mod registry;
 pub mod server;
 
+pub use fault::{FaultKind, FaultPlan, ServeFault};
 pub use registry::{binding_from_store, AdapterId, AdapterRegistry};
 pub use server::{RejectReason, ServeServer, ServerOpts, StreamHandle, Submit, SubmitHandle};
 
 use crate::data::Vocab;
 use crate::model::{ModelConfig, ParamStore};
-use crate::ops::model::AdapterBinding;
+use crate::ops::model::{logits_row_finite, AdapterBinding};
 use crate::runtime::{DecodeSession, DecodeState, Runtime};
 use crate::tensor::HostTensor;
 use crate::train::ForwardSession;
@@ -81,11 +94,24 @@ pub struct GenRequest {
     /// — unknown ids are rejected at submit/admit time
     /// ([`RejectReason::UnknownAdapter`] on the async path).
     pub adapter: Option<AdapterId>,
+    /// Hard wall-clock budget from submission. Unlike `deadline` — a
+    /// scheduling hint that is only *counted* when missed — this is
+    /// always **enforced**: a request still queued or decoding past it
+    /// is actively cancelled (fault kind `wall-clock-exceeded`),
+    /// freeing its KV slot for the next request. `None` = unbounded.
+    pub max_wall: Option<Duration>,
 }
 
 impl GenRequest {
     pub fn new(prompt: Vec<i32>, max_new_tokens: usize) -> GenRequest {
-        GenRequest { prompt, max_new_tokens, deadline: None, priority: 0, adapter: None }
+        GenRequest {
+            prompt,
+            max_new_tokens,
+            deadline: None,
+            priority: 0,
+            adapter: None,
+            max_wall: None,
+        }
     }
 
     pub fn with_deadline(mut self, deadline: Duration) -> GenRequest {
@@ -100,6 +126,13 @@ impl GenRequest {
 
     pub fn with_adapter(mut self, adapter: impl Into<AdapterId>) -> GenRequest {
         self.adapter = Some(adapter.into());
+        self
+    }
+
+    /// Hard wall-clock cancellation budget, in milliseconds from
+    /// submission (see [`GenRequest::max_wall`]).
+    pub fn with_max_wall_ms(mut self, ms: u64) -> GenRequest {
+        self.max_wall = Some(Duration::from_millis(ms));
         self
     }
 }
@@ -122,6 +155,13 @@ pub struct GenResponse {
     /// The prompt exceeded the context window and was cut to `seq_len−1`
     /// tokens before decoding (no silent truncation).
     pub prompt_truncated: bool,
+    /// `Some` when the request ended **abnormally** — quarantined by a
+    /// fault, cancelled past a deadline/wall budget, or aborted —
+    /// with the attribution record (request id, slot, fault kind).
+    /// `tokens` still holds everything generated before retirement.
+    /// The async server surfaces this as a stream error instead of a
+    /// normal completion.
+    pub fault: Option<ServeFault>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -159,6 +199,17 @@ pub struct ServeMetrics {
     /// mean active slots per batched step (decode steps on the
     /// incremental path, wave forwards on the re-forward path)
     pub mean_batch_occupancy: f64,
+    /// supervised engine rebuilds after a caught panic (async server)
+    pub restarts: u64,
+    /// requests retired by an engine fault (panic, unrecovered step
+    /// error, non-finite logits) — disjoint from `cancelled`
+    pub faults: u64,
+    /// requests actively cancelled: caller `cancel()`, abandoned
+    /// stream handle, enforced deadline, or `max_wall` budget
+    pub cancelled: u64,
+    /// suspect KV columns rebuilt via recovery re-prefill after a
+    /// failed batched step (the slot survived and kept decoding)
+    pub quarantined: u64,
 }
 
 /// Greedy pick over one logits row. Ties resolve to the **highest**
@@ -224,6 +275,9 @@ struct Slot {
     /// latency and TTFT both clock queue wait
     submitted: Instant,
     deadline: Option<Instant>,
+    /// absolute hard-cancellation point (`submitted + max_wall`);
+    /// unlike `deadline`, always enforced by [`StepEngine::cancel_expired`]
+    wall_deadline: Option<Instant>,
     first_token_at: Option<Instant>,
     admission_seq: u64,
     /// tenant binding this slot decodes under (`None` = bare base);
@@ -248,11 +302,43 @@ fn complete(sl: Slot) -> GenResponse {
         deadline_missed: sl.deadline.is_some_and(|d| now > d),
         admission_seq: sl.admission_seq,
         prompt_truncated: sl.truncated,
+        fault: None,
         tokens: sl.toks,
     }
 }
 
+/// Build the fault-tagged response for a slot retiring **abnormally**
+/// (quarantine, cancellation, abort): same shape as [`complete`] — the
+/// partial token buffer moves out — plus the attribution record the
+/// async server formats into the stream error.
+fn fault_complete(sl: Slot, slot: usize, kind: FaultKind, detail: String) -> GenResponse {
+    let request = sl.id;
+    let mut resp = complete(sl);
+    resp.fault = Some(ServeFault { request, slot: Some(slot), kind, detail });
+    resp
+}
+
 // ------------------------------------------------------- step engine
+
+/// Admission parameters for [`StepEngine::admit`]: one request's
+/// identity plus its scheduling/cancellation envelope, resolved to
+/// absolute instants by the caller (the two frontends clock from
+/// different submission points).
+pub struct Admission<'r> {
+    pub id: u64,
+    pub prompt: &'r [i32],
+    pub max_new: usize,
+    /// when the request entered the system (latency/TTFT base)
+    pub submitted: Instant,
+    /// advisory completion target (EDF scheduling; enforced only when
+    /// the server opts in)
+    pub deadline: Option<Instant>,
+    /// hard cancellation point (`submitted + max_wall`); always
+    /// enforced by [`StepEngine::cancel_expired`]
+    pub wall_deadline: Option<Instant>,
+    /// tenant binding (`None` = the session default)
+    pub adapter: Option<Arc<AdapterBinding>>,
+}
 
 /// The resumable core of KV-cached serving: a decode binding plus the
 /// per-slot bookkeeping, exposed as `admit` / `step` / (implicit)
@@ -281,6 +367,11 @@ pub struct StepEngine<'d> {
     generated_tokens: u64,
     truncated_prompts: u64,
     occupancy_sum: u64,
+    faults: u64,
+    cancelled: u64,
+    quarantined: u64,
+    /// deterministic injection schedule; empty = one branch per step
+    fault: FaultPlan,
     // reused step buffers: warm admit/step cycles allocate nothing here
     // (Arc clones into step_adapters are refcount bumps, not allocations)
     row_logits: Vec<f32>,
@@ -311,6 +402,10 @@ impl<'d> StepEngine<'d> {
             generated_tokens: 0,
             truncated_prompts: 0,
             occupancy_sum: 0,
+            faults: 0,
+            cancelled: 0,
+            quarantined: 0,
+            fault: FaultPlan::none(),
             row_logits: vec![0.0; v],
             step_logits: vec![0.0; n * v],
             active: Vec::with_capacity(n),
@@ -347,26 +442,20 @@ impl<'d> StepEngine<'d> {
     }
 
     /// Admit one request into the first free slot: clamp the prompt,
-    /// prefill that slot's cache column under `adapter` (the slot's
-    /// tenant binding; `None` = the session default resolved at bind
-    /// time), pick the first token (emitted through `on_token`).
-    /// Returns the finished response if the request retires at prefill
-    /// (EOS / exhausted budget); otherwise the slot joins the next
-    /// [`StepEngine::step`]. Errors if no slot is free — callers gate
-    /// on [`StepEngine::has_free_slot`].
+    /// prefill that slot's cache column under the admission's tenant
+    /// binding (`None` = the session default resolved at bind time),
+    /// pick the first token (emitted through `on_token`). Returns the
+    /// finished response if the request retires at prefill (EOS /
+    /// exhausted budget / non-finite logits). Errors if no slot is
+    /// free — callers gate on [`StepEngine::has_free_slot`].
     pub fn admit(
         &mut self,
-        id: u64,
-        prompt: &[i32],
-        max_new: usize,
-        submitted: Instant,
-        deadline: Option<Instant>,
-        adapter: Option<Arc<AdapterBinding>>,
+        adm: Admission<'_>,
         on_token: &mut dyn FnMut(u64, i32),
     ) -> Result<Option<GenResponse>> {
         let slot = self.slots.iter().position(|s| s.is_none()).context("admit: no free slot")?;
-        let adapter = adapter.or_else(|| self.session.default_adapter().cloned());
-        let (mut toks, truncated) = admit_prompt(prompt, self.s, self.pad);
+        let adapter = adm.adapter.or_else(|| self.session.default_adapter().cloned());
+        let (mut toks, truncated) = admit_prompt(adm.prompt, self.s, self.pad);
         let admitted = toks.len();
         if truncated {
             self.truncated_prompts += 1;
@@ -374,26 +463,51 @@ impl<'d> StepEngine<'d> {
         self.session
             .prefill_as(&mut self.st, slot, &toks, adapter.as_deref(), &mut self.row_logits)?;
         self.prefills += 1;
+        let admission_seq = self.admissions;
+        self.admissions += 1;
+        if !logits_row_finite(&self.row_logits) {
+            // poisoned before the first pick: retire without emitting a
+            // token, and leave the slot free (nothing trusts its KV)
+            self.faults += 1;
+            let sl = Slot {
+                id: adm.id,
+                toks,
+                admitted,
+                truncated,
+                max_new: adm.max_new,
+                submitted: adm.submitted,
+                deadline: adm.deadline,
+                wall_deadline: adm.wall_deadline,
+                first_token_at: None,
+                admission_seq,
+                adapter,
+            };
+            return Ok(Some(fault_complete(
+                sl,
+                slot,
+                FaultKind::NanLogits,
+                "non-finite logits at prefill".to_string(),
+            )));
+        }
         let next = argmax(&self.row_logits, self.eos);
         toks.push(next);
         self.generated_tokens += 1;
         let first_token_at = Some(Instant::now());
-        on_token(id, next);
-        let admission_seq = self.admissions;
-        self.admissions += 1;
+        on_token(adm.id, next);
         let sl = Slot {
-            id,
+            id: adm.id,
             toks,
             admitted,
             truncated,
-            max_new,
-            submitted,
-            deadline,
+            max_new: adm.max_new,
+            submitted: adm.submitted,
+            deadline: adm.deadline,
+            wall_deadline: adm.wall_deadline,
             first_token_at,
             admission_seq,
             adapter,
         };
-        if finished(next, self.eos, sl.toks.len() - admitted, max_new, sl.toks.len(), self.s) {
+        if finished(next, self.eos, sl.toks.len() - admitted, adm.max_new, sl.toks.len(), self.s) {
             return Ok(Some(complete(sl)));
         }
         self.slots[slot] = Some(sl);
@@ -405,6 +519,18 @@ impl<'d> StepEngine<'d> {
     /// requests are pushed into `retired` (pre-size it to
     /// [`StepEngine::slots`] and drain between calls — pushes within
     /// that capacity never allocate). No-op when nothing is active.
+    ///
+    /// Fault containment: `decode_step` validates everything before
+    /// touching per-slot state and bumps sequence lengths only after
+    /// all compute succeeds (see `ops::model::decode_step`), so a
+    /// failed step leaves every slot at its pre-step position. Recovery
+    /// therefore re-prefills each survivor's column from its token
+    /// history — bit-identical continuation by the prefill/step logits
+    /// equivalence pinned in `tests/decode.rs` — and retires only the
+    /// slot the failure is attributable to. A non-finite logits row
+    /// quarantines just that slot. Panics (injected or real) are NOT
+    /// caught here — the async server supervises them with
+    /// `catch_unwind` and a full engine rebuild.
     pub fn step(
         &mut self,
         on_token: &mut dyn FnMut(u64, i32),
@@ -423,22 +549,69 @@ impl<'d> StepEngine<'d> {
         if self.active.is_empty() {
             return Ok(());
         }
+        // deterministic fault injection: one `is_empty` branch when no
+        // plan is armed (the production hot path), otherwise advance
+        // the plan's step-attempt counter and apply whatever fires
+        let mut injected_nan: Option<usize> = None;
+        if !self.fault.is_empty() {
+            let f = self.fault.fire();
+            if f.delay_ms > 0 {
+                std::thread::sleep(Duration::from_millis(f.delay_ms));
+            }
+            if f.panic {
+                panic!("injected step panic (attempt {})", f.attempt);
+            }
+            if f.error {
+                self.step_adapters.clear();
+                let poison = f.error_slot.filter(|s| self.slots.get(*s).is_some_and(|x| x.is_some()));
+                return self.recover_step("injected step error", poison, on_token, retired);
+            }
+            injected_nan = f.nan_slot;
+        }
         let out = &mut self.step_logits[..self.active.len() * self.v];
-        self.session.decode_step_rows(
+        let stepped = self.session.decode_step_rows(
             &mut self.st,
             &self.active,
             &self.step_tokens,
             &self.step_adapters,
             out,
-        )?;
+        );
         // drop the step's Arc clones now, not at the next step: a
         // retiring slot must release its registry in-flight pin here
         self.step_adapters.clear();
+        if let Err(e) = stepped {
+            // no slot advanced (decode_step's failure atomicity); no
+            // single slot is attributable, so quarantine-recover all
+            return self.recover_step(&format!("step failed: {e:#}"), None, on_token, retired);
+        }
+        if let Some(slot) = injected_nan {
+            if let Some(row) = self.active.iter().position(|&s| s == slot) {
+                self.step_logits[row * self.v] = f32::NAN;
+            }
+        }
         self.decode_steps += 1;
         self.occupancy_sum += self.active.len() as u64;
         for (row, &slot) in self.active.iter().enumerate() {
+            let logits = &self.step_logits[row * self.v..(row + 1) * self.v];
+            if !logits_row_finite(logits) {
+                // this slot's KV column is suspect: quarantine it alone;
+                // the batch's other rows are untouched by construction
+                // (row-independent kernels, pinned in multi_tenant.rs)
+                let sl = self.slots[slot].take().expect("active slot");
+                self.faults += 1;
+                retired.push((
+                    sl.id,
+                    fault_complete(
+                        sl,
+                        slot,
+                        FaultKind::NanLogits,
+                        format!("non-finite logits row at decode step {}", self.decode_steps),
+                    ),
+                ));
+                continue;
+            }
             let sl = self.slots[slot].as_mut().expect("active slot");
-            let next = argmax(&self.step_logits[row * self.v..(row + 1) * self.v], self.eos);
+            let next = argmax(logits, self.eos);
             sl.toks.push(next);
             self.generated_tokens += 1;
             on_token(sl.id, next);
@@ -451,10 +624,154 @@ impl<'d> StepEngine<'d> {
         Ok(())
     }
 
-    /// Clear every occupied slot (error recovery), returning the ids of
-    /// the requests that were in flight so the caller can fail them.
-    pub fn abort_active(&mut self) -> Vec<u64> {
-        self.slots.iter_mut().filter_map(|s| s.take().map(|sl| sl.id)).collect()
+    /// Recover from a failed decode step without trusting any slot's
+    /// KV cache: re-prefill each surviving slot's column from its token
+    /// history (advancing it the one token the failed step owed it),
+    /// and retire `poison` — the slot the failure is attributable to —
+    /// with a fault response. Only a recovery prefill that *itself*
+    /// fails retires its slot too; everything else continues
+    /// bit-identically (prefill's final-row logits ≡ `decode_step`
+    /// logits, pinned in `tests/decode.rs`).
+    fn recover_step(
+        &mut self,
+        cause: &str,
+        poison: Option<usize>,
+        on_token: &mut dyn FnMut(u64, i32),
+        retired: &mut Vec<(u64, GenResponse)>,
+    ) -> Result<()> {
+        let active = std::mem::take(&mut self.active);
+        for &slot in &active {
+            let sl = self.slots[slot].as_mut().expect("active slot");
+            if poison == Some(slot) {
+                let sl = self.slots[slot].take().expect("active slot");
+                self.faults += 1;
+                retired.push((
+                    sl.id,
+                    fault_complete(sl, slot, FaultKind::StepError, cause.to_string()),
+                ));
+                continue;
+            }
+            let refill = self.session.prefill_as(
+                &mut self.st,
+                slot,
+                &sl.toks,
+                sl.adapter.as_deref(),
+                &mut self.row_logits,
+            );
+            if let Err(e) = refill {
+                let sl = self.slots[slot].take().expect("active slot");
+                self.faults += 1;
+                retired.push((
+                    sl.id,
+                    fault_complete(
+                        sl,
+                        slot,
+                        FaultKind::StepError,
+                        format!("{cause}; recovery prefill failed: {e:#}"),
+                    ),
+                ));
+                continue;
+            }
+            self.prefills += 1;
+            self.quarantined += 1;
+            if !logits_row_finite(&self.row_logits) {
+                let sl = self.slots[slot].take().expect("active slot");
+                self.faults += 1;
+                retired.push((
+                    sl.id,
+                    fault_complete(
+                        sl,
+                        slot,
+                        FaultKind::NanLogits,
+                        format!("{cause}; non-finite logits after recovery prefill"),
+                    ),
+                ));
+                continue;
+            }
+            let next = argmax(&self.row_logits, self.eos);
+            let sl = self.slots[slot].as_mut().expect("active slot");
+            sl.toks.push(next);
+            self.generated_tokens += 1;
+            on_token(sl.id, next);
+            let new_count = sl.toks.len() - sl.admitted;
+            if finished(next, self.eos, new_count, sl.max_new, sl.toks.len(), self.s) {
+                let sl = self.slots[slot].take().expect("active slot");
+                retired.push((sl.id, complete(sl)));
+            }
+        }
+        self.active = active;
+        Ok(())
+    }
+
+    /// Cancel one in-flight request by id (stream cancel / abandoned
+    /// handle / queue preemption), freeing its slot immediately. The
+    /// partial tokens ride the fault response. Returns `None` when `id`
+    /// is not in flight (already retired — cancellation raced EOS).
+    pub fn abort(&mut self, id: u64, kind: FaultKind, detail: &str) -> Option<GenResponse> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|sl| sl.id == id))?;
+        let sl = self.slots[slot].take().expect("matched slot");
+        self.cancelled += 1;
+        Some(fault_complete(sl, slot, kind, detail.to_string()))
+    }
+
+    /// Retire every in-flight request whose hard wall-clock budget
+    /// (`max_wall`) — or, when `enforce_deadlines`, whose deadline —
+    /// has passed at `now`. Freed slots are immediately admittable.
+    pub fn cancel_expired(
+        &mut self,
+        now: Instant,
+        enforce_deadlines: bool,
+        retired: &mut Vec<(u64, GenResponse)>,
+    ) {
+        for slot in 0..self.slots.len() {
+            let Some(sl) = self.slots[slot].as_ref() else { continue };
+            let (kind, limit) = if sl.wall_deadline.is_some_and(|d| now > d) {
+                (FaultKind::WallClockExceeded, "max_wall")
+            } else if enforce_deadlines && sl.deadline.is_some_and(|d| now > d) {
+                (FaultKind::DeadlineExceeded, "deadline")
+            } else {
+                continue;
+            };
+            let sl = self.slots[slot].take().expect("matched slot");
+            self.cancelled += 1;
+            retired.push((
+                sl.id,
+                fault_complete(sl, slot, kind, format!("{limit} exceeded mid-decode")),
+            ));
+        }
+    }
+
+    /// Clear every occupied slot (supervised restart / shutdown),
+    /// retiring each with a fault response so the caller can fail its
+    /// stream attributably. Counts toward `faults`, not `cancelled`.
+    pub fn abort_all(
+        &mut self,
+        kind: FaultKind,
+        detail: &str,
+        retired: &mut Vec<(u64, GenResponse)>,
+    ) {
+        for slot in 0..self.slots.len() {
+            if let Some(sl) = self.slots[slot].take() {
+                self.faults += 1;
+                retired.push((sl.id, fault_complete(sl, slot, kind, detail.to_string())));
+            }
+        }
+    }
+
+    /// Arm a deterministic fault-injection plan (testing / chaos
+    /// drills). The plan's step-attempt counter lives on the plan, so
+    /// moving it across an engine rebuild preserves the schedule.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = plan;
+    }
+
+    /// Take the armed plan (counter state included) — the supervisor
+    /// moves it onto the rebuilt engine after a panic.
+    pub fn take_fault_plan(&mut self) -> FaultPlan {
+        std::mem::take(&mut self.fault)
     }
 
     /// Fold the engine's cumulative counters into a metrics record.
@@ -464,6 +781,9 @@ impl<'d> StepEngine<'d> {
         m.forwards = self.prefills + self.decode_steps;
         m.generated_tokens = self.generated_tokens;
         m.truncated_prompts = self.truncated_prompts;
+        m.faults = self.faults;
+        m.cancelled = self.cancelled;
+        m.quarantined = self.quarantined;
         m.mean_batch_occupancy = if self.decode_steps > 0 {
             self.occupancy_sum as f64 / self.decode_steps as f64
         } else {
@@ -667,21 +987,21 @@ impl<'rt> Decoder<'rt> {
                 let id = next_req as u64;
                 let r = &requests[next_req];
                 next_req += 1;
-                let deadline = r.deadline.and_then(|d| start_all.checked_add(d));
                 let adapter = self
                     .registry
                     .borrow_mut()
                     .resolve(r.adapter.as_deref())
                     .with_context(|| format!("request {id}"))?;
-                if let Some(resp) = engine.admit(
+                let adm = Admission {
                     id,
-                    &r.prompt,
-                    r.max_new_tokens,
-                    start_all,
-                    deadline,
+                    prompt: &r.prompt,
+                    max_new: r.max_new_tokens,
+                    submitted: start_all,
+                    deadline: r.deadline.and_then(|d| start_all.checked_add(d)),
+                    wall_deadline: r.max_wall.and_then(|d| start_all.checked_add(d)),
                     adapter,
-                    &mut sink,
-                )? {
+                };
+                if let Some(resp) = engine.admit(adm, &mut sink)? {
                     responses[id as usize] = Some(resp);
                 }
             }
@@ -691,6 +1011,9 @@ impl<'rt> Decoder<'rt> {
                 }
                 continue; // everything admitted finished at prefill; admit more
             }
+            // hard wall-clock budgets are enforced even on the batch
+            // path (deadlines stay advisory here, as they always were)
+            engine.cancel_expired(Instant::now(), false, &mut retired);
             // one batched step: every active sequence advances a token
             engine.step(&mut sink, &mut retired)?;
             for (id, resp) in retired.drain(..) {
@@ -748,15 +1071,34 @@ impl<'rt> Decoder<'rt> {
                         max_new: r.max_new_tokens,
                         submitted: start_all,
                         deadline: r.deadline.and_then(|d| start_all.checked_add(d)),
+                        wall_deadline: r.max_wall.and_then(|d| start_all.checked_add(d)),
                         first_token_at: None,
                         admission_seq: admissions,
+                        adapter: None,
                     });
                     admissions += 1;
                 }
             }
+            // hard wall-clock budgets hold on this path too
+            let now = Instant::now();
+            for i in 0..b {
+                if slots[i].as_ref().is_some_and(|sl| sl.wall_deadline.is_some_and(|d| now > d)) {
+                    let sl = slots[i].take().unwrap();
+                    metrics.cancelled += 1;
+                    responses[sl.id as usize] = Some(fault_complete(
+                        sl,
+                        i,
+                        FaultKind::WallClockExceeded,
+                        "max_wall exceeded mid-decode".to_string(),
+                    ));
+                }
+            }
             let active: Vec<usize> = (0..b).filter(|i| slots[*i].is_some()).collect();
             if active.is_empty() {
-                break;
+                if next_req >= requests.len() {
+                    break;
+                }
+                continue; // the sweep freed every slot; admit the rest
             }
             occupancy_sum += active.len();
 
@@ -934,8 +1276,22 @@ mod tests {
         let r = GenRequest::new(vec![1, 2], 4);
         assert_eq!(r.deadline, None);
         assert_eq!(r.priority, 0);
-        let r = r.with_deadline(Duration::from_millis(250)).with_priority(3);
+        assert_eq!(r.max_wall, None);
+        let r = r
+            .with_deadline(Duration::from_millis(250))
+            .with_priority(3)
+            .with_max_wall_ms(900);
         assert_eq!(r.deadline, Some(Duration::from_millis(250)));
         assert_eq!(r.priority, 3);
+        assert_eq!(r.max_wall, Some(Duration::from_millis(900)));
+    }
+
+    #[test]
+    fn finite_row_check_matches_contract() {
+        assert!(logits_row_finite(&[1.0, -2.5, 0.0]));
+        assert!(logits_row_finite(&[]), "empty row has nothing non-finite");
+        assert!(!logits_row_finite(&[1.0, f32::NAN]));
+        assert!(!logits_row_finite(&[f32::INFINITY, 0.0]));
+        assert!(!logits_row_finite(&[f32::NEG_INFINITY]));
     }
 }

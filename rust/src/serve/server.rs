@@ -22,19 +22,38 @@
 //! per-token progress and the final [`GenResponse`]; delivery into a
 //! stream's preallocated buffer keeps warm decode steps allocation-free
 //! on the runtime thread.
+//!
+//! The loop is **supervised**: admit and step run under `catch_unwind`,
+//! so a panic fails only the in-flight streams (each with an
+//! attributable [`ServeFault`] error) and the engine is rebuilt from
+//! the decoder's resident base weights — fresh K/V planes, same
+//! prepared sparse weights — under a bounded restart budget with
+//! exponential backoff. Budget exhausted, the server stops accepting,
+//! drains its queue as rejected, and goes down cleanly (no hung
+//! handles). Between steps a reap sweep enforces hard per-request
+//! wall-clock budgets (`GenRequest::max_wall`), deadlines when
+//! [`ServerOpts::enforce_deadlines`] is set, explicit
+//! [`StreamHandle::cancel`] calls, and abandoned handles (dropped
+//! before the stream ended) — each frees its KV slot immediately.
+//! Fault drills arm [`ServerOpts::fault`] or `SHEARS_FAULT`
+//! (`serve::fault` has the grammar).
 
-use super::{AdapterId, AdapterRegistry, Decoder, GenRequest, GenResponse, ServeMetrics, StepEngine};
+use super::{
+    AdapterId, AdapterRegistry, Admission, Decoder, FaultKind, FaultPlan, GenRequest, GenResponse,
+    ServeFault, ServeMetrics, StepEngine,
+};
 use crate::model::ParamStore;
 use crate::ops::model::AdapterBinding;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use anyhow::{Context, Result};
+use std::cell::Cell;
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AOrd};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
-use std::time::Instant;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
+use std::time::{Duration, Instant};
 
 /// Server construction spec. Like the eval router, the backend is an
 /// explicit choice (`native|pjrt|auto`, the `--backend` grammar) so a
@@ -55,6 +74,21 @@ pub struct ServerOpts {
     /// resident tenant-adapter byte budget (LRU eviction past it);
     /// `0` = unlimited
     pub adapter_budget_bytes: usize,
+    /// actively cancel requests past their `GenRequest::deadline`
+    /// (fault kind `deadline-exceeded`). Off by default: deadlines
+    /// stay the advisory EDF hint they have always been, and misses
+    /// are merely counted. `max_wall` is enforced regardless.
+    pub enforce_deadlines: bool,
+    /// supervised engine rebuilds tolerated after panics before the
+    /// server gives up and shuts down cleanly
+    pub restart_budget: u32,
+    /// backoff before restart `n` is `restart_backoff_ms << (n-1)`,
+    /// capped at 64× — keeps a crash loop from spinning hot
+    pub restart_backoff_ms: u64,
+    /// deterministic fault-injection plan (drills/tests). Empty = one
+    /// branch per step. When empty, `SHEARS_FAULT` is consulted at
+    /// spawn so drills work against an unmodified binary.
+    pub fault: FaultPlan,
 }
 
 impl Default for ServerOpts {
@@ -67,6 +101,10 @@ impl Default for ServerOpts {
             slots: 0,
             queue_cap: 64,
             adapter_budget_bytes: 0,
+            enforce_deadlines: false,
+            restart_budget: 3,
+            restart_backoff_ms: 20,
+            fault: FaultPlan::none(),
         }
     }
 }
@@ -113,6 +151,10 @@ struct StreamInner {
 pub(crate) struct StreamShared {
     inner: Mutex<StreamInner>,
     cv: Condvar,
+    /// set by [`StreamHandle::cancel`]; the runtime thread polls it in
+    /// its reap sweep and frees the KV slot (no channel round-trip, so
+    /// cancellation works even while the server is mid-step)
+    cancel: AtomicBool,
 }
 
 impl StreamShared {
@@ -120,6 +162,7 @@ impl StreamShared {
         StreamShared {
             inner: Mutex::new(StreamInner { tokens: Vec::with_capacity(capacity), done: None }),
             cv: Condvar::new(),
+            cancel: AtomicBool::new(false),
         }
     }
 
@@ -185,15 +228,33 @@ impl StreamHandle {
         None
     }
 
+    /// Ask the server to cancel this request: if still queued it is
+    /// dropped at admission, if decoding its KV slot is freed at the
+    /// next reap sweep. Delivery is asynchronous — the stream then
+    /// finishes with a `cancelled` fault error (or with the normal
+    /// response, if completion raced the cancel). Idempotent.
+    pub fn cancel(&self) {
+        self.shared.cancel.store(true, AOrd::Release);
+    }
+
     /// Block until the request completes; the response's latency/TTFT
-    /// clocks started at submission, so queue wait is included.
+    /// clocks started at submission, so queue wait is included. A
+    /// request that faulted, was cancelled, or was shed returns an
+    /// error carrying its request id, slot, and fault kind
+    /// ([`ServeFault`]'s display), so operators can attribute it.
     pub fn wait(self) -> Result<GenResponse> {
         let mut g = self.shared.lock();
         loop {
             if let Some(done) = &g.done {
-                return done
-                    .clone()
-                    .map_err(|e| anyhow::anyhow!("request {}: {e}", self.id));
+                return done.clone().map_err(|e| {
+                    // fault errors already lead with "request N (slot
+                    // S)" attribution — don't stutter the prefix
+                    if e.starts_with("request ") {
+                        anyhow::anyhow!("{e}")
+                    } else {
+                        anyhow::anyhow!("request {}: {e}", self.id)
+                    }
+                });
             }
             g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
         }
@@ -288,6 +349,10 @@ struct Shared {
     /// (sizes stream buffers so token delivery never reallocates)
     window: AtomicUsize,
     queue_cap: usize,
+    /// written by the runtime thread as it exits, so `metrics()` and
+    /// `shutdown()` still return the final numbers after the server
+    /// took itself down (restart budget exhausted) and the channel died
+    final_metrics: Mutex<Option<ServeMetrics>>,
 }
 
 /// Cloneable, `Send` submission endpoint — one per submitter thread.
@@ -302,6 +367,16 @@ pub struct SubmitHandle {
 
 fn lock_registry(m: &Mutex<AdapterRegistry>) -> MutexGuard<'_, AdapterRegistry> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The exited runtime thread's last snapshot (see `Shared::final_metrics`).
+fn final_metrics(shared: &Shared) -> Result<ServeMetrics> {
+    shared
+        .final_metrics
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+        .context("serve server gone before publishing final metrics")
 }
 
 impl SubmitHandle {
@@ -372,11 +447,19 @@ impl SubmitHandle {
         Submit::Accepted(StreamHandle { shared: stream, read: 0, id })
     }
 
-    /// Snapshot the server's cumulative metrics. Blocks for the reply.
+    /// Snapshot the server's cumulative metrics. Blocks for the reply;
+    /// after the runtime thread exited (shutdown, or it took itself
+    /// down when the restart budget ran out) this returns its final
+    /// numbers instead of erroring.
     pub fn metrics(&self) -> Result<ServeMetrics> {
         let (tx, rx) = channel();
-        self.tx.send(Msg::Metrics(tx)).ok().context("serve server gone")?;
-        rx.recv().context("serve server dropped metrics reply")
+        if self.tx.send(Msg::Metrics(tx)).is_err() {
+            return final_metrics(&self.shared);
+        }
+        match rx.recv() {
+            Ok(m) => Ok(m),
+            Err(_) => final_metrics(&self.shared),
+        }
     }
 
     /// Register (or hot-swap) tenant `id` as a sub-adapter of the
@@ -456,6 +539,7 @@ impl ServeServer {
             seq: AtomicU64::new(0),
             window: AtomicUsize::new(0),
             queue_cap: opts.queue_cap,
+            final_metrics: Mutex::new(None),
         });
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
         let registry = Arc::new(Mutex::new(AdapterRegistry::new(opts.adapter_budget_bytes)));
@@ -534,16 +618,21 @@ impl ServeServer {
     }
 
     /// Stop accepting, drain every accepted request, join the thread,
-    /// and return the final cumulative metrics.
+    /// and return the final cumulative metrics. Still succeeds after
+    /// the runtime thread took itself down (restart budget exhausted) —
+    /// the final snapshot is read from the shared cell instead.
     pub fn shutdown(mut self) -> Result<ServeMetrics> {
         self.handle.shared.accepting.store(false, AOrd::Release);
         let (tx, rx) = channel();
-        self.handle.tx.send(Msg::Shutdown(Some(tx))).ok().context("serve server gone")?;
-        let m = rx.recv().context("serve server dropped final metrics")?;
+        let sent = self.handle.tx.send(Msg::Shutdown(Some(tx))).is_ok();
+        let m = if sent { rx.recv().ok() } else { None };
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
-        Ok(m)
+        match m {
+            Some(m) => Ok(m),
+            None => final_metrics(&self.handle.shared),
+        }
     }
 }
 
@@ -566,6 +655,49 @@ impl Drop for ServeServer {
 /// until the window fills — which covers every test and bench run.
 const METRIC_WINDOW: usize = 4096;
 
+// --------------------------------------------------- panic supervision
+
+thread_local! {
+    /// true while the runtime thread runs a supervised engine region —
+    /// the process-wide delegating hook stays quiet for those panics
+    /// (they are caught and become attributable stream errors) while
+    /// every other thread's panics keep printing as before
+    static SUPERVISED: Cell<bool> = const { Cell::new(false) };
+}
+
+static HOOK: Once = Once::new();
+
+fn install_supervised_hook() {
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPERVISED.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Run `f` under `catch_unwind`, returning a panicking region's
+/// payload as a string. `AssertUnwindSafe` is sound because both
+/// callers respond to `Err` by discarding the engine the panic
+/// interrupted (supervised restart) — no torn state is ever reused.
+fn supervised<T>(f: impl FnOnce() -> T) -> std::result::Result<T, String> {
+    install_supervised_hook();
+    SUPERVISED.with(|s| s.set(true));
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    SUPERVISED.with(|s| s.set(false));
+    r.map_err(|p| {
+        if let Some(s) = p.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = p.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "panic with non-string payload".to_string()
+        }
+    })
+}
+
 struct LoopState {
     pending: BinaryHeap<Reverse<Queued>>,
     paused: bool,
@@ -578,6 +710,15 @@ struct LoopState {
     /// latency/TTFT rings, paired by index (same request)
     lat: Vec<f64>,
     ttft: Vec<f64>,
+    /// supervised engine rebuilds performed so far
+    restarts: u32,
+    /// requests cancelled/shed before ever touching a KV slot (the
+    /// engine counts in-flight cancellations; `snapshot` adds the two)
+    queue_cancelled: u64,
+    /// counters inherited from engines retired by supervised restarts —
+    /// `fold_metrics` *sets* fields, so pre-restart work would vanish
+    /// from snapshots without this
+    carried: ServeMetrics,
 }
 
 fn record_done(state: &mut LoopState, resp: &GenResponse) {
@@ -595,6 +736,94 @@ fn record_done(state: &mut LoopState, resp: &GenResponse) {
     }
 }
 
+/// Sum engine-owned counters from `c` into `into` (the occupancy mean
+/// merges weighted by decode steps). Used both to accumulate a retired
+/// engine into `LoopState::carried` and to add `carried` back into a
+/// live snapshot.
+fn merge_counters(into: &mut ServeMetrics, c: &ServeMetrics) {
+    let steps = into.decode_steps + c.decode_steps;
+    if steps > 0 {
+        into.mean_batch_occupancy = (into.mean_batch_occupancy * into.decode_steps as f64
+            + c.mean_batch_occupancy * c.decode_steps as f64)
+            / steps as f64;
+    }
+    into.prefills += c.prefills;
+    into.decode_steps += c.decode_steps;
+    into.forwards += c.forwards;
+    into.generated_tokens += c.generated_tokens;
+    into.truncated_prompts += c.truncated_prompts;
+    into.faults += c.faults;
+    into.cancelled += c.cancelled;
+    into.quarantined += c.quarantined;
+}
+
+/// Deliver retired responses to their streams: clean completions
+/// record into the latency rings and resolve `Ok`; faulted/cancelled
+/// ones resolve `Err` with the [`ServeFault`] attribution string. The
+/// rings track successful completions only, so a burst of
+/// cancellations cannot skew the latency percentiles.
+fn deliver(
+    retired: &mut Vec<(u64, GenResponse)>,
+    state: &mut LoopState,
+    streams: &mut HashMap<u64, Arc<StreamShared>>,
+) {
+    for (id, resp) in retired.drain(..) {
+        let stream = streams.remove(&id);
+        match &resp.fault {
+            None => {
+                record_done(state, &resp);
+                if let Some(s) = stream {
+                    s.finish(Ok(resp));
+                }
+            }
+            Some(f) => {
+                if let Some(s) = stream {
+                    s.finish(Err(f.to_string()));
+                }
+            }
+        }
+    }
+}
+
+/// A panic (or an engine-wide error) escaped a supervised region: fail
+/// every in-flight stream attributably, then rebuild the engine over
+/// the decoder's resident prepared weights — fresh K/V planes, the old
+/// (suspect) state dropped — carrying the fault plan's attempt counter
+/// and the dead engine's metrics counters across. Sleeps the
+/// exponential backoff before rebuilding. Returns `false` when the
+/// restart budget is exhausted (or the rebuild itself fails): the
+/// caller takes the server down cleanly.
+fn supervise_restart<'d>(
+    engine: &mut StepEngine<'d>,
+    decoder: &'d Decoder<'_>,
+    detail: &str,
+    opts: &ServerOpts,
+    state: &mut LoopState,
+    streams: &mut HashMap<u64, Arc<StreamShared>>,
+    retired: &mut Vec<(u64, GenResponse)>,
+) -> bool {
+    engine.abort_all(FaultKind::StepPanic, detail, retired);
+    deliver(retired, state, streams);
+    if state.restarts >= opts.restart_budget {
+        return false;
+    }
+    state.restarts += 1;
+    let backoff = opts.restart_backoff_ms.saturating_mul(1 << (state.restarts - 1).min(6));
+    if backoff > 0 {
+        std::thread::sleep(Duration::from_millis(backoff));
+    }
+    let plan = engine.take_fault_plan();
+    let Ok(mut fresh) = decoder.step_engine() else {
+        return false;
+    };
+    fresh.set_fault_plan(plan);
+    let mut c = ServeMetrics::default();
+    engine.fold_metrics(&mut c);
+    merge_counters(&mut state.carried, &c);
+    *engine = fresh;
+    true
+}
+
 fn snapshot(
     state: &LoopState,
     engine: &StepEngine<'_>,
@@ -603,6 +832,9 @@ fn snapshot(
 ) -> ServeMetrics {
     let mut m = ServeMetrics { requests: state.requests, ..Default::default() };
     engine.fold_metrics(&mut m);
+    merge_counters(&mut m, &state.carried);
+    m.restarts = state.restarts as u64;
+    m.cancelled += state.queue_cancelled;
     m.wall_secs = started.elapsed().as_secs_f64();
     m.tokens_per_sec = m.generated_tokens as f64 / m.wall_secs.max(1e-9);
     m.queue_depth = shared.depth.load(AOrd::Acquire) as u64;
@@ -702,6 +934,14 @@ fn server_main(
         return;
     }
     let mut engine = try_start!(decoder.step_engine());
+    // fault plan: the API plan wins; `SHEARS_FAULT` drills arm only
+    // when it is empty. A typoed spec fails spawn loudly instead of
+    // silently running fault-free.
+    if !opts.fault.is_empty() {
+        engine.set_fault_plan(opts.fault.clone());
+    } else if let Some(plan) = try_start!(FaultPlan::from_env()) {
+        engine.set_fault_plan(plan);
+    }
     shared.window.store(engine.window(), AOrd::Release);
     let _ = ready.send(Ok(()));
 
@@ -715,9 +955,13 @@ fn server_main(
         misses: 0,
         lat: Vec::new(),
         ttft: Vec::new(),
+        restarts: 0,
+        queue_cancelled: 0,
+        carried: ServeMetrics::default(),
     };
     let mut streams: HashMap<u64, Arc<StreamShared>> = HashMap::new();
     let mut retired: Vec<(u64, GenResponse)> = Vec::with_capacity(engine.slots());
+    let mut reap: Vec<(u64, FaultKind)> = Vec::with_capacity(engine.slots());
     let mut final_reply: Option<Sender<ServeMetrics>> = None;
 
     loop {
@@ -768,65 +1012,173 @@ fn server_main(
         if !state.open && state.pending.is_empty() && engine.active_slots() == 0 {
             break;
         }
+        let mut budget_exhausted = false;
 
-        // ---- 2. admission: free KV slots fill earliest-deadline-first
+        // ---- 2. reap: hard wall-clock budgets (and deadlines when
+        // enforced), explicit cancels, abandoned handles — freed slots
+        // refill in this same iteration's admission
+        if engine.active_slots() > 0 {
+            engine.cancel_expired(Instant::now(), opts.enforce_deadlines, &mut retired);
+            reap.clear();
+            for (&id, s) in streams.iter() {
+                if s.cancel.load(AOrd::Acquire) {
+                    reap.push((id, FaultKind::Cancelled));
+                } else if Arc::strong_count(s) == 1 {
+                    // the map holds the last Arc: the caller dropped its
+                    // handle — stop decoding for nobody
+                    reap.push((id, FaultKind::Abandoned));
+                }
+            }
+            for &(id, kind) in reap.iter() {
+                let detail = match kind {
+                    FaultKind::Cancelled => "cancelled by caller",
+                    _ => "stream handle dropped before completion",
+                };
+                if let Some(resp) = engine.abort(id, kind, detail) {
+                    retired.push((id, resp));
+                }
+            }
+            deliver(&mut retired, &mut state, &mut streams);
+        }
+
+        // ---- 3. admission: free KV slots fill earliest-deadline-first
         if !state.paused {
             while engine.has_free_slot() {
                 let Some(Reverse(q)) = state.pending.pop() else { break };
                 shared.depth.fetch_sub(1, AOrd::AcqRel);
                 let Queued { req, id, submitted, deadline, stream, adapter } = q;
-                let mut on_token = |_id: u64, t: i32| stream.push_token(t);
-                match engine.admit(
+                let now = Instant::now();
+                let wall_deadline = req.max_wall.and_then(|d| submitted.checked_add(d));
+                // queue-side preemption: don't spend a prefill on a
+                // request already cancelled, abandoned, or out of
+                // wall-clock budget
+                let shed = if stream.cancel.load(AOrd::Acquire) {
+                    Some((FaultKind::Cancelled, "cancelled by caller while queued"))
+                } else if Arc::strong_count(&stream) == 1 {
+                    Some((FaultKind::Abandoned, "stream handle dropped while queued"))
+                } else if wall_deadline.is_some_and(|d| now > d) {
+                    Some((FaultKind::WallClockExceeded, "max_wall exceeded while queued"))
+                } else if opts.enforce_deadlines && deadline.is_some_and(|d| now > d) {
+                    Some((FaultKind::DeadlineExceeded, "deadline exceeded while queued"))
+                } else {
+                    None
+                };
+                if let Some((kind, detail)) = shed {
+                    state.queue_cancelled += 1;
+                    let f = ServeFault { request: id, slot: None, kind, detail: detail.into() };
+                    stream.finish(Err(f.to_string()));
+                    continue;
+                }
+                let adm = Admission {
                     id,
-                    &req.prompt,
-                    req.max_new_tokens,
+                    prompt: &req.prompt,
+                    max_new: req.max_new_tokens,
                     submitted,
                     deadline,
+                    wall_deadline,
                     adapter,
-                    &mut on_token,
-                ) {
-                    Ok(Some(resp)) => {
-                        record_done(&mut state, &resp);
-                        stream.finish(Ok(resp));
-                    }
-                    Ok(None) => {
+                };
+                let mut on_token = |_id: u64, t: i32| stream.push_token(t);
+                match supervised(|| engine.admit(adm, &mut on_token)) {
+                    Ok(Ok(Some(resp))) => match &resp.fault {
+                        None => {
+                            record_done(&mut state, &resp);
+                            stream.finish(Ok(resp));
+                        }
+                        Some(f) => stream.finish(Err(f.to_string())),
+                    },
+                    Ok(Ok(None)) => {
                         streams.insert(id, stream);
                     }
-                    Err(e) => stream.finish(Err(format!("{e:#}"))),
+                    Ok(Err(e)) => stream.finish(Err(format!("request {id}: {e:#}"))),
+                    Err(panic_msg) => {
+                        let f = ServeFault {
+                            request: id,
+                            slot: None,
+                            kind: FaultKind::StepPanic,
+                            detail: format!("engine panicked during admit: {panic_msg}"),
+                        };
+                        stream.finish(Err(f.to_string()));
+                        let detail = format!("engine panicked: {panic_msg}");
+                        budget_exhausted = !supervise_restart(
+                            &mut engine,
+                            &decoder,
+                            &detail,
+                            &opts,
+                            &mut state,
+                            &mut streams,
+                            &mut retired,
+                        );
+                        break;
+                    }
                 }
             }
         }
 
-        // ---- 3. one batched decode step over the active slots
-        if engine.active_slots() > 0 {
-            let step_res = {
+        // ---- 4. one batched decode step over the active slots
+        if !budget_exhausted && engine.active_slots() > 0 {
+            let step_res = supervised(|| {
                 let mut on_token = |id: u64, t: i32| {
                     if let Some(s) = streams.get(&id) {
                         s.push_token(t);
                     }
                 };
                 engine.step(&mut on_token, &mut retired)
-            };
+            });
             match step_res {
-                Ok(()) => {
-                    for (id, resp) in retired.drain(..) {
-                        record_done(&mut state, &resp);
-                        if let Some(s) = streams.remove(&id) {
-                            s.finish(Ok(resp));
-                        }
-                    }
+                Ok(Ok(())) => deliver(&mut retired, &mut state, &mut streams),
+                Ok(Err(e)) => {
+                    // step() quarantine-recovers per-slot failures
+                    // internally, so an error escaping it is
+                    // engine-wide — restart, same as a panic
+                    let detail = format!("engine step failed: {e:#}");
+                    deliver(&mut retired, &mut state, &mut streams);
+                    budget_exhausted = !supervise_restart(
+                        &mut engine,
+                        &decoder,
+                        &detail,
+                        &opts,
+                        &mut state,
+                        &mut streams,
+                        &mut retired,
+                    );
                 }
-                Err(e) => {
-                    // fail the in-flight requests, keep serving: the
-                    // queue and future submissions stay live
-                    let msg = format!("{e:#}");
-                    for id in engine.abort_active() {
-                        if let Some(s) = streams.remove(&id) {
-                            s.finish(Err(msg.clone()));
-                        }
-                    }
+                Err(panic_msg) => {
+                    // rows that retired cleanly before the panic still
+                    // deliver — their responses are complete
+                    deliver(&mut retired, &mut state, &mut streams);
+                    let detail = format!("engine panicked: {panic_msg}");
+                    budget_exhausted = !supervise_restart(
+                        &mut engine,
+                        &decoder,
+                        &detail,
+                        &opts,
+                        &mut state,
+                        &mut streams,
+                        &mut retired,
+                    );
                 }
             }
+        }
+
+        if budget_exhausted {
+            // restart budget exhausted (or the rebuild failed): stop
+            // accepting, shed the queue as rejected, exit cleanly —
+            // every accepted request resolves, no handle hangs
+            shared.accepting.store(false, AOrd::Release);
+            state.open = false;
+            while let Some(Reverse(q)) = state.pending.pop() {
+                shared.depth.fetch_sub(1, AOrd::AcqRel);
+                shared.rejected.fetch_add(1, AOrd::Relaxed);
+                let f = ServeFault {
+                    request: q.id,
+                    slot: None,
+                    kind: FaultKind::Shutdown,
+                    detail: "restart budget exhausted".into(),
+                };
+                q.stream.finish(Err(f.to_string()));
+            }
+            break;
         }
     }
 
@@ -837,6 +1189,7 @@ fn server_main(
     // request can be left hanging.
     shared.closed.store(true, AOrd::SeqCst);
     let final_m = snapshot(&state, &engine, &shared, started);
+    *shared.final_metrics.lock().unwrap_or_else(|e| e.into_inner()) = Some(final_m.clone());
     while let Ok(m) = rx.try_recv() {
         match m {
             Msg::Request(q) => {
@@ -921,6 +1274,7 @@ mod tests {
             deadline_missed: false,
             admission_seq: 0,
             prompt_truncated: false,
+            fault: None,
         }));
         assert_eq!(h.next_token(), None, "done and fully consumed");
         let resp = h.wait().unwrap();
@@ -933,6 +1287,74 @@ mod tests {
         shared.finish(Err("backend exploded".into()));
         let h = StreamHandle { shared, read: 0, id: 9 };
         let e = h.wait().unwrap_err();
-        assert!(format!("{e:#}").contains("backend exploded"));
+        let s = format!("{e:#}");
+        assert!(s.contains("backend exploded"));
+        assert!(s.contains("request 9"), "bare errors gain attribution: {s}");
+    }
+
+    #[test]
+    fn wait_does_not_stutter_fault_attribution() {
+        let f = ServeFault {
+            request: 5,
+            slot: Some(1),
+            kind: FaultKind::StepPanic,
+            detail: "injected".into(),
+        };
+        let shared = Arc::new(StreamShared::new(1));
+        shared.finish(Err(f.to_string()));
+        let h = StreamHandle { shared, read: 0, id: 5 };
+        let s = format!("{:#}", h.wait().unwrap_err());
+        assert!(s.contains("request 5 (slot 1)"), "{s}");
+        assert!(!s.contains("request 5: request 5"), "double prefix: {s}");
+    }
+
+    #[test]
+    fn cancel_flag_reaches_the_shared_cell() {
+        let shared = Arc::new(StreamShared::new(1));
+        let h = StreamHandle { shared: shared.clone(), read: 0, id: 0 };
+        assert!(!shared.cancel.load(AOrd::Acquire));
+        h.cancel();
+        h.cancel(); // idempotent
+        assert!(shared.cancel.load(AOrd::Acquire));
+        // completion can still race in; first finish wins either way
+        shared.finish(Err("cancelled".into()));
+        assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn supervised_catches_and_stringifies_panics() {
+        assert_eq!(supervised(|| 7).unwrap(), 7);
+        let e = supervised(|| panic!("boom {}", 3)).unwrap_err();
+        assert!(e.contains("boom 3"), "{e}");
+        let e = supervised(|| std::panic::panic_any(42u32)).unwrap_err();
+        assert!(e.contains("non-string"), "{e}");
+        // the hook restores non-supervised behavior afterwards
+        assert!(!SUPERVISED.with(|s| s.get()));
+    }
+
+    #[test]
+    fn merge_counters_sums_and_weights_occupancy() {
+        let mut a = ServeMetrics {
+            decode_steps: 10,
+            mean_batch_occupancy: 2.0,
+            prefills: 3,
+            faults: 1,
+            ..Default::default()
+        };
+        let b = ServeMetrics {
+            decode_steps: 30,
+            mean_batch_occupancy: 4.0,
+            prefills: 5,
+            cancelled: 2,
+            quarantined: 7,
+            ..Default::default()
+        };
+        merge_counters(&mut a, &b);
+        assert_eq!(a.decode_steps, 40);
+        assert_eq!(a.prefills, 8);
+        assert_eq!(a.faults, 1);
+        assert_eq!(a.cancelled, 2);
+        assert_eq!(a.quarantined, 7);
+        assert!((a.mean_batch_occupancy - 3.5).abs() < 1e-12, "10×2 + 30×4 over 40");
     }
 }

@@ -1,0 +1,496 @@
+//! Fault tolerance on the serving stack, pinned with the deterministic
+//! injection harness (`serve::FaultPlan`): a targeted fault fails ONLY
+//! the targeted request — with an error naming its request id, slot,
+//! and fault kind — while every non-faulted slot's token stream stays
+//! bit-identical to a fault-free run (both builtin architectures);
+//! injected step errors quarantine-recover every survivor via re-
+//! prefill; injected panics are supervised into engine rebuilds up to
+//! the restart budget, after which the server sheds its queue and shuts
+//! down cleanly with no hung `StreamHandle`; enforced deadlines,
+//! `max_wall` budgets, explicit `cancel()`, and abandoned handles all
+//! actively cancel mid-decode. The last test doubles as the CI fault
+//! drill: it arms no API plan, so whatever `SHEARS_FAULT` the
+//! environment sets (every injector kind, in the workflow) must still
+//! resolve every accepted stream attributably.
+//!
+//! Scheduling determinism the targeted tests lean on: submissions are
+//! queued under `pause()` and admitted FIFO (no deadlines, equal
+//! priority) into ascending free slots, and with `slots >= n` no slot
+//! is ever reused — so request `i`'s slot is its index among the
+//! requests that survived prefill. Bit-identity across different batch
+//! compositions is the row-count invariance already pinned in
+//! `tests/decode.rs` and `tests/multi_tenant.rs`.
+
+use shears::model::{ModelConfig, ParamStore};
+use shears::runtime::Runtime;
+use shears::serve::{
+    Decoder, FaultPlan, GenRequest, GenResponse, RejectReason, ServeMetrics, ServeServer,
+    ServerOpts, Submit,
+};
+use shears::tensor::HostTensor;
+use shears::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    // nonzero B so the unmerged adapters actually shift the logits
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            rng.fill_normal(adapters.get_mut(&p.name).unwrap().f32s_mut(), 0.0, 0.05);
+        }
+    }
+    (base, adapters)
+}
+
+fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRequest> {
+    use shears::data::{Task, Vocab};
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), max_new)
+        })
+        .collect()
+}
+
+/// Requests plus their fault-free reference run. The control comes
+/// from the synchronous batch path (`Decoder::serve`), which never
+/// consults `SHEARS_FAULT` — so controls stay clean even under the CI
+/// drill environment.
+struct Fixture {
+    config: String,
+    reqs: Vec<GenRequest>,
+    control: Vec<GenResponse>,
+    stores: Vec<ParamStore>,
+    mask: HostTensor,
+}
+
+fn fixture(config: &str, n: usize, seed: u64, max_new: usize) -> Fixture {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(config).unwrap();
+    let (base, adapters) = init_stores(cfg, seed);
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let mask = space.full_mask();
+    let decoder =
+        Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], Some(mask.clone())).unwrap();
+    let reqs = requests(cfg, n, seed ^ 0x5A, max_new);
+    let (control, _) = decoder.serve(&reqs).unwrap();
+    Fixture { config: config.into(), reqs, control, stores: vec![base, adapters], mask }
+}
+
+impl Fixture {
+    fn opts(&self) -> ServerOpts {
+        ServerOpts {
+            config: self.config.clone(),
+            entry: "forward_eval".into(),
+            slots: self.reqs.len(),
+            restart_backoff_ms: 1,
+            ..Default::default()
+        }
+    }
+
+    fn spawn(&self, opts: ServerOpts) -> ServeServer {
+        ServeServer::spawn(opts, self.stores.clone(), Some(self.mask.clone())).unwrap()
+    }
+
+    /// The request that decodes longest in the control run — the
+    /// deterministic fault target. Guards against a degenerate init
+    /// where nothing survives to the injection point.
+    fn longest(&self) -> usize {
+        let t = (0..self.control.len()).max_by_key(|&i| self.control[i].new_tokens).unwrap();
+        assert!(
+            self.control[t].new_tokens >= 3,
+            "fixture degenerate: longest control sequence generated only {} tokens",
+            self.control[t].new_tokens
+        );
+        t
+    }
+
+    /// KV slot request `i` lands in: its index among the requests that
+    /// actually occupied a slot (a request retiring at prefill leaves
+    /// its slot free for the next admission).
+    fn slot_of(&self, i: usize) -> usize {
+        self.control[..i].iter().filter(|r| r.new_tokens >= 2).count()
+    }
+}
+
+/// Queue every request under `pause()`, resume, wait all, shut down.
+/// Returns per-request outcomes (Err = the stream's error string) and
+/// the final metrics. Request `i`'s submission id is `i`.
+fn run(fx: &Fixture, opts: ServerOpts) -> (Vec<Result<GenResponse, String>>, ServeMetrics) {
+    let server = fx.spawn(opts);
+    server.pause().unwrap();
+    let handles: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    let results: Vec<_> =
+        handles.into_iter().map(|h| h.wait().map_err(|e| format!("{e:#}"))).collect();
+    let m = server.shutdown().unwrap();
+    (results, m)
+}
+
+fn assert_matches_control(fx: &Fixture, i: usize, r: &Result<GenResponse, String>) {
+    let resp = r.as_ref().unwrap_or_else(|e| {
+        panic!("{} request {i}: non-faulted request errored: {e}", fx.config)
+    });
+    assert_eq!(
+        resp.tokens, fx.control[i].tokens,
+        "{} request {i}: non-faulted slot diverged from the fault-free run",
+        fx.config
+    );
+    assert_eq!(resp.new_tokens, fx.control[i].new_tokens, "{} request {i}", fx.config);
+}
+
+// ------------------------------------------------ targeted NaN fault
+
+/// A NaN poisoned into one slot's logits row retires exactly that
+/// request — attributably — and moves no other slot's tokens by a bit.
+fn nan_fault_quarantines_only_the_target(config: &str, seed: u64) {
+    let fx = fixture(config, 4, seed, 8);
+    let t = fx.longest();
+    let slot = fx.slot_of(t);
+    let (results, m) =
+        run(&fx, ServerOpts { fault: FaultPlan::none().nan_at(1, slot), ..fx.opts() });
+    for (i, r) in results.iter().enumerate() {
+        if i == t {
+            let e = r.as_ref().expect_err("the poisoned slot must fail its stream");
+            assert!(e.contains(&format!("request {t}")), "unattributable: {e}");
+            assert!(e.contains(&format!("(slot {slot})")), "missing slot: {e}");
+            assert!(e.contains("nan-logits"), "missing kind: {e}");
+        } else {
+            assert_matches_control(&fx, i, r);
+        }
+    }
+    assert_eq!(m.faults, 1, "exactly the targeted request faulted");
+    assert_eq!(m.restarts, 0);
+    assert_eq!(m.cancelled, 0);
+    assert_eq!(m.quarantined, 0, "a NaN row retires its slot, nobody else re-prefills");
+}
+
+#[test]
+fn nan_fault_quarantines_only_the_target_llama() {
+    nan_fault_quarantines_only_the_target("tiny-llama", 41);
+}
+
+#[test]
+fn nan_fault_quarantines_only_the_target_mpt() {
+    nan_fault_quarantines_only_the_target("mpt-sim", 17);
+}
+
+// ------------------------------------------- step-error quarantine
+
+/// An injected batched-step error recovers every slot by re-prefilling
+/// its token history: all requests complete, bit-identical to the
+/// fault-free run (prefill ≡ step logits parity), with the quarantine
+/// recoveries visible in the metrics.
+fn step_error_recovery_is_bit_identical(config: &str, seed: u64) {
+    let fx = fixture(config, 4, seed, 8);
+    fx.longest(); // fixture sanity: someone is alive at the injection
+    let (results, m) = run(&fx, ServerOpts { fault: FaultPlan::none().error_at(1), ..fx.opts() });
+    for (i, r) in results.iter().enumerate() {
+        assert_matches_control(&fx, i, r);
+    }
+    assert!(m.quarantined >= 1, "recovery re-prefills must be counted");
+    assert_eq!(m.faults, 0, "every slot recovered");
+    assert_eq!(m.restarts, 0, "per-slot recovery never restarts the engine");
+    assert!(
+        m.prefills > fx.reqs.len() as u64,
+        "recovery prefills show up in the prefill counter"
+    );
+}
+
+#[test]
+fn step_error_recovery_is_bit_identical_llama() {
+    step_error_recovery_is_bit_identical("tiny-llama", 23);
+}
+
+#[test]
+fn step_error_recovery_is_bit_identical_mpt() {
+    step_error_recovery_is_bit_identical("mpt-sim", 29);
+}
+
+/// An error whose attribution pins one slot (its recovery prefill
+/// fails too) retires exactly that request with a `step-error` fault;
+/// every other slot recovers bit-identically.
+#[test]
+fn targeted_step_error_fails_one_slot_and_recovers_the_rest() {
+    let fx = fixture("tiny-llama", 4, 47, 8);
+    let t = fx.longest();
+    let slot = fx.slot_of(t);
+    let (results, m) =
+        run(&fx, ServerOpts { fault: FaultPlan::none().error_at_slot(1, slot), ..fx.opts() });
+    for (i, r) in results.iter().enumerate() {
+        if i == t {
+            let e = r.as_ref().expect_err("the poisoned slot must fail its stream");
+            assert!(e.contains(&format!("request {t}")), "unattributable: {e}");
+            assert!(e.contains("step-error"), "missing kind: {e}");
+            assert!(e.contains("injected step error"), "missing detail: {e}");
+        } else {
+            assert_matches_control(&fx, i, r);
+        }
+    }
+    assert_eq!(m.faults, 1);
+    assert_eq!(m.restarts, 0);
+}
+
+// --------------------------------------------- supervised restarts
+
+/// A panic inside the engine step is caught by the supervisor: every
+/// in-flight stream fails with a `step-panic` error naming its
+/// request, the engine is rebuilt from the resident base weights, and
+/// the server keeps serving — a second round of the same requests
+/// completes bit-identically to the fault-free run.
+#[test]
+fn panic_is_supervised_and_the_server_keeps_serving() {
+    let fx = fixture("tiny-llama", 4, 57, 8);
+    fx.longest();
+    let server =
+        fx.spawn(ServerOpts { fault: FaultPlan::none().panic_at(1), ..fx.opts() });
+    server.pause().unwrap();
+    let handles: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    let mut faulted = 0u64;
+    for (i, h) in handles.into_iter().enumerate() {
+        // alive at the injected attempt 1 ⇔ the control run generated
+        // ≥ 3 tokens (prefill + two steps)
+        if fx.control[i].new_tokens >= 3 {
+            let e = format!("{:#}", h.wait().expect_err("in-flight at the panic"));
+            assert!(e.contains(&format!("request {i}")), "unattributable: {e}");
+            assert!(e.contains("step-panic"), "missing kind: {e}");
+            faulted += 1;
+        } else {
+            let r = h.wait().map_err(|e| format!("{e:#}"));
+            assert_matches_control(&fx, i, &r);
+        }
+    }
+    assert!(faulted >= 1, "the guarded fixture keeps someone in flight at attempt 1");
+
+    // the rebuilt engine serves the same prompts bit-identically
+    server.pause().unwrap();
+    let round2: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    for (i, h) in round2.into_iter().enumerate() {
+        let r = h.wait().map_err(|e| format!("{e:#}"));
+        assert_matches_control(&fx, i, &r);
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.restarts, 1, "one supervised rebuild");
+    assert_eq!(m.faults, faulted, "faults = the streams the panic killed");
+    assert_eq!(m.requests, 2 * fx.reqs.len() as u64);
+}
+
+/// Past the restart budget the server stops digging: it fails the
+/// in-flight streams, sheds the queue, refuses new work, and exits its
+/// runtime thread cleanly — `metrics()` and `shutdown()` still return
+/// the final numbers, and no `StreamHandle` is left hanging.
+#[test]
+fn restart_budget_exhaustion_shuts_down_cleanly() {
+    let fx = fixture("tiny-llama", 12, 77, 6);
+    // four requests that survive prefill (so panics always catch
+    // someone in flight), served two at a time
+    let picks: Vec<usize> = (0..fx.reqs.len()).filter(|&i| fx.control[i].new_tokens >= 2).collect();
+    assert!(picks.len() >= 4, "fixture degenerate: {} usable requests", picks.len());
+    let reqs: Vec<GenRequest> = picks[..4].iter().map(|&i| fx.reqs[i].clone()).collect();
+    let server = fx.spawn(ServerOpts {
+        slots: 2,
+        restart_budget: 1,
+        fault: FaultPlan::none().panic_every(0, 1), // every step attempt panics
+        ..fx.opts()
+    });
+    let late = server.handle();
+    server.pause().unwrap();
+    let handles: Vec<_> =
+        reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    // every accepted stream resolves (reaching the end of this loop IS
+    // the no-hung-handle assertion) — all with step-panic attribution
+    for h in handles {
+        let e = format!("{:#}", h.wait().expect_err("all in-flight work dies by panic"));
+        assert!(e.contains("step-panic"), "missing kind: {e}");
+    }
+    // the server takes itself down; new work bounces. A submission can
+    // race the few instructions between the last stream failing and
+    // the accepting flag dropping — it still resolves (never hangs).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match late.submit(reqs[0].clone()) {
+            Submit::Rejected(RejectReason::ShuttingDown) => break,
+            Submit::Rejected(other) => panic!("wrong rejection: {other:?}"),
+            Submit::Accepted(h) => {
+                let _ = h.wait();
+            }
+        }
+        assert!(Instant::now() < deadline, "server kept accepting after budget exhaustion");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let m = late.metrics().expect("final metrics survive the runtime thread");
+    assert_eq!(m.restarts, 1, "budget allowed exactly one rebuild");
+    assert_eq!(m.faults, 4, "all four requests died to panics");
+    assert_eq!(m.requests, 4);
+    let m2 = server.shutdown().expect("shutdown succeeds after self-termination");
+    assert_eq!(m2.restarts, 1);
+}
+
+// ------------------------------------- deadlines, budgets, cancels
+
+/// With `enforce_deadlines` the deadline stops being advisory: a
+/// request past it is actively cancelled mid-decode with an
+/// attributable `deadline-exceeded` error.
+#[test]
+fn enforced_deadline_cancels_the_request() {
+    let fx = fixture("tiny-llama", 4, 23, 4);
+    let t = fx.longest();
+    let server = fx.spawn(ServerOpts {
+        slots: 1,
+        enforce_deadlines: true,
+        // 20 ms per step attempt guarantees the 1 ms deadline expires
+        // while the request is still decoding
+        fault: FaultPlan::parse("delay@0+1:20").unwrap(),
+        ..fx.opts()
+    });
+    let req = fx.reqs[t].clone().with_deadline(Duration::from_millis(1));
+    let h = server.submit(req).accepted().unwrap();
+    let e = format!("{:#}", h.wait().expect_err("enforced deadlines cancel"));
+    assert!(e.contains("deadline-exceeded"), "missing kind: {e}");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.faults, 0, "a cancellation is not an engine fault");
+}
+
+/// `max_wall` is a hard budget enforced regardless of
+/// `enforce_deadlines` (which stays off here, its default — the
+/// request's ordinary deadline is expired too and must NOT be the
+/// reported kind).
+#[test]
+fn max_wall_budget_is_always_enforced() {
+    let fx = fixture("tiny-llama", 4, 23, 4);
+    let t = fx.longest();
+    let server = fx.spawn(ServerOpts {
+        slots: 1,
+        fault: FaultPlan::parse("delay@0+1:20").unwrap(),
+        ..fx.opts()
+    });
+    let req = fx.reqs[t]
+        .clone()
+        .with_deadline(Duration::from_millis(1))
+        .with_max_wall_ms(1);
+    let h = server.submit(req).accepted().unwrap();
+    let e = format!("{:#}", h.wait().expect_err("max_wall cancels"));
+    assert!(e.contains("wall-clock-exceeded"), "missing kind: {e}");
+    assert!(!e.contains("deadline-exceeded"), "advisory deadline misattributed: {e}");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.faults, 0);
+}
+
+/// A request whose wall budget expires while it is still queued is
+/// shed at admission — no prefill is spent on it.
+#[test]
+fn expired_wall_budget_sheds_while_queued() {
+    let fx = fixture("tiny-llama", 4, 23, 4);
+    let server = fx.spawn(ServerOpts { slots: 1, ..fx.opts() });
+    server.pause().unwrap();
+    let h = server
+        .submit(fx.reqs[0].clone().with_max_wall_ms(1))
+        .accepted()
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(10));
+    server.resume().unwrap();
+    let e = format!("{:#}", h.wait().expect_err("expired budget sheds"));
+    assert!(e.contains("wall-clock-exceeded"), "missing kind: {e}");
+    assert!(e.contains("(queued)"), "shed before any slot, so no slot to name: {e}");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.prefills, 0, "no prefill spent on a dead request");
+}
+
+/// `StreamHandle::cancel` frees the KV slot mid-decode; the stream
+/// errors with a `cancelled` fault and the slot immediately serves the
+/// next request.
+#[test]
+fn explicit_cancel_frees_the_slot_for_the_next_request() {
+    let fx = fixture("tiny-llama", 4, 23, 4);
+    let t = fx.longest();
+    let server = fx.spawn(ServerOpts {
+        slots: 1,
+        // slow steps so the cancel always lands before completion
+        fault: FaultPlan::parse("delay@0+1:25").unwrap(),
+        ..fx.opts()
+    });
+    let mut h = server.submit(fx.reqs[t].clone()).accepted().unwrap();
+    assert!(h.next_token().is_some(), "request is in flight before the cancel");
+    h.cancel();
+    let e = format!("{:#}", h.wait().expect_err("cancelled streams error"));
+    assert!(e.contains("cancelled"), "missing kind: {e}");
+    // the freed slot serves the next request to a normal completion
+    let next = (t + 1) % fx.reqs.len();
+    let r = server.submit(fx.reqs[next].clone()).accepted().unwrap().wait().unwrap();
+    assert!(r.new_tokens >= 1);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.cancelled, 1);
+}
+
+/// Dropping a `StreamHandle` with the request still decoding is an
+/// abandonment: the reap sweep notices nobody is listening and frees
+/// the slot instead of decoding for a dead consumer. This is the
+/// regression test for the abandoned-stream slot leak.
+#[test]
+fn abandoned_stream_frees_its_slot() {
+    let fx = fixture("tiny-llama", 4, 23, 4);
+    let t = fx.longest();
+    let server = fx.spawn(ServerOpts {
+        slots: 1,
+        fault: FaultPlan::parse("delay@0+1:25").unwrap(),
+        ..fx.opts()
+    });
+    let hd = server.handle();
+    let mut h = server.submit(fx.reqs[t].clone()).accepted().unwrap();
+    assert!(h.next_token().is_some(), "request is in flight before the drop");
+    drop(h); // nobody will ever wait() — the server must notice
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = hd.metrics().unwrap();
+        if m.cancelled >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "abandoned stream never reaped — slot leaked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // the freed slot still serves
+    let next = (t + 1) % fx.reqs.len();
+    let r = server.submit(fx.reqs[next].clone()).accepted().unwrap().wait().unwrap();
+    assert!(r.new_tokens >= 1);
+    server.shutdown().unwrap();
+}
+
+// ----------------------------------------------------- env drill
+
+/// The CI fault drill: this test arms NO API plan, so the server arms
+/// whatever `SHEARS_FAULT` sets (the workflow leg runs it with every
+/// injector kind: delay, error, nan, panic). Unset, it runs fault-free.
+/// Either way the contract is the same — every accepted stream
+/// resolves, attributably, and shutdown returns final metrics.
+#[test]
+fn env_fault_drill_resolves_every_stream() {
+    let fx = fixture("tiny-llama", 6, 101, 6);
+    let server = fx.spawn(ServerOpts { slots: 3, ..fx.opts() });
+    let handles: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    for h in handles {
+        match h.wait() {
+            Ok(r) => assert!(r.new_tokens >= 1),
+            Err(e) => {
+                let s = format!("{e:#}");
+                assert!(s.contains("request"), "unattributable stream error: {s}");
+            }
+        }
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, fx.reqs.len() as u64);
+}
