@@ -491,6 +491,7 @@ fn main() {
                 deadline: None,
                 wall_deadline: None,
                 adapter: None,
+                degraded: None,
             };
             let _ = engine.admit(adm, &mut sink).unwrap();
         }
@@ -554,6 +555,85 @@ fn main() {
         Some((recovery_ms, clean_step_ms, tok_s_faulty, fm))
     } else {
         println!("\n  (serve.fault skipped — no incremental decode on this backend)");
+        None
+    };
+
+    // ---- serve.brownout: degraded-path throughput vs full rank ----
+    // The same burst through the async server twice: controller off
+    // (full-rank adapters) vs pinned `Degraded` at fraction 0.5 (every
+    // opted-in admission binds the cached prefix sub-adapter). Reports
+    // what elastic degradation buys per token and that the controller's
+    // own bookkeeping doesn't eat the gain.
+    let serve_brownout: Option<(f64, f64, shears::serve::ServeMetrics)> = if b.rt.supports_decode()
+    {
+        use shears::serve::{BrownoutOpts, BrownoutThresholds, ServeServer, ServerOpts, Submit};
+        println!("\n== serve.brownout: elastic sub-adapter degradation ==");
+        let run = |bo: BrownoutOpts| {
+            let degrading = bo.enabled;
+            let server = ServeServer::spawn(
+                ServerOpts {
+                    backend: "native".into(),
+                    config: "llama-sim-s".into(),
+                    entry: "forward_eval".into(),
+                    queue_cap: sreqs.len() * 2,
+                    brownout: bo,
+                    ..Default::default()
+                },
+                vec![base.clone(), adapters.clone()],
+                Some(mask.clone()),
+            )
+            .unwrap();
+            server.pause().unwrap();
+            let streams: Vec<_> = sreqs
+                .iter()
+                .map(|r| match server.submit(r.clone().with_allow_degraded(true)) {
+                    Submit::Accepted(s) => s,
+                    Submit::Rejected(why) => panic!("bench submission rejected: {why:?}"),
+                })
+                .collect();
+            if degrading {
+                // queued load is the signal: poll until the controller
+                // reaches Degraded so the whole burst admits degraded
+                let spin = std::time::Instant::now();
+                while server.metrics().unwrap().brownout_state != 1 {
+                    assert!(
+                        spin.elapsed().as_secs() < 5,
+                        "brownout controller never armed for the bench"
+                    );
+                }
+            }
+            let t0 = std::time::Instant::now();
+            server.resume().unwrap();
+            for s in streams {
+                s.wait().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let m = server.shutdown().unwrap();
+            (m.generated_tokens as f64 / wall.max(1e-9), m)
+        };
+        let (tok_s_full, _) = run(BrownoutOpts::default());
+        let bo = BrownoutOpts {
+            enabled: true,
+            fraction: 0.5,
+            default_allow_degraded: true,
+            degrade: BrownoutThresholds {
+                queue_hi: 0,
+                queue_lo: 0,
+                ..BrownoutThresholds::UNREACHABLE
+            },
+            dwell_up: 1,
+            dwell_down: 1_000_000,
+            ..BrownoutOpts::default()
+        };
+        let (tok_s_degraded, dm) = run(bo);
+        println!(
+            "  degraded fraction 0.5: {tok_s_degraded:>8.0} tok/s  (full rank {tok_s_full:.0}, \
+             {} degraded admissions, {} transitions)",
+            dm.degraded, dm.brownout_transitions
+        );
+        Some((tok_s_full, tok_s_degraded, dm))
+    } else {
+        println!("\n  (serve.brownout skipped — no incremental decode on this backend)");
         None
     };
 
@@ -703,6 +783,15 @@ fn main() {
             ),
         ]);
     }
+    if let Some((tok_s_full, tok_s_degraded, dm)) = &serve_brownout {
+        table.row(vec![
+            "serve degraded (fraction 0.5)".into(),
+            format!(
+                "{tok_s_degraded:.0} tok/s vs {tok_s_full:.0} full-rank ({} degraded)",
+                dm.degraded
+            ),
+        ]);
+    }
     table.row(vec!["wanda prune op".into(), format!("{:.2} ms", s4.mean_ms)]);
     table.row(vec!["whole-model prune wall".into(), format!("{prune_wall:.2} s")]);
     if let Some(mp) = miss_per_eval {
@@ -821,6 +910,20 @@ fn main() {
             sf.push(("overhead_vs_clean", num(inc_tok_s / tok_s_faulty.max(1e-9))));
         }
         json.push(("serve_fault", obj(sf)));
+    }
+    if let Some((tok_s_full, tok_s_degraded, dm)) = &serve_brownout {
+        json.push((
+            "serve_brownout",
+            obj(vec![
+                ("tok_s_full", num(*tok_s_full)),
+                ("tok_s_degraded", num(*tok_s_degraded)),
+                ("degradation_speedup", num(tok_s_degraded / tok_s_full.max(1e-9))),
+                ("degraded", num(dm.degraded as f64)),
+                ("shed", num(dm.shed as f64)),
+                ("transitions", num(dm.brownout_transitions as f64)),
+                ("degraded_secs", num(dm.brownout_degraded_secs)),
+            ]),
+        ));
     }
     json.push((
         "prune",

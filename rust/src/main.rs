@@ -89,8 +89,41 @@ fn flags() -> Vec<FlagSpec> {
             default: Some("0"),
             help: "native kernel worker threads (0 = SHEARS_NUM_THREADS or all cores)",
         },
+        FlagSpec {
+            name: "brownout-fraction",
+            default: Some("0.5"),
+            help: "serve: LoRA rank fraction for degraded admissions \
+                   (prefix sub-adapter; needs --brownout)",
+        },
+        FlagSpec {
+            name: "brownout-step-hi-ms",
+            default: Some("0"),
+            help: "serve: EWMA step latency that trips Degraded; lo = hi/2, \
+                   Shedding at 4x (0 = latency signal unused)",
+        },
+        FlagSpec {
+            name: "brownout-queue-hi",
+            default: Some("0"),
+            help: "serve: queue depth that trips Degraded; lo = hi/2, \
+                   Shedding near queue-cap (0 = 3/4 of --queue-cap)",
+        },
+        FlagSpec {
+            name: "brownout-miss-hi",
+            default: Some("0"),
+            help: "serve: deadline-miss rate (0..1) over recent completions \
+                   that trips Degraded; lo = hi/2 (0 = miss signal unused)",
+        },
+        FlagSpec {
+            name: "shed-horizon-ms",
+            default: Some("1000"),
+            help: "serve: while Shedding, admit only what fits this latency \
+                   horizon; excess submissions are rejected as Overloaded",
+        },
     ]
 }
+
+/// Switches (value-less flags) shared by all subcommands.
+const SWITCHES: &[&str] = &["brownout"];
 
 fn parse_tasks(spec: &str) -> Result<Vec<Task>> {
     let all: Vec<Task> = Task::MATH.iter().chain(Task::COMMONSENSE.iter()).copied().collect();
@@ -118,10 +151,10 @@ fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
         eprintln!("usage: shears <info|pipeline|eval|serve> [flags]\n");
-        eprintln!("{}", usage(&flags(), &[]));
+        eprintln!("{}", usage(&flags(), SWITCHES));
         return Ok(());
     }
-    let args = Args::parse(&argv, &flags(), &[])?;
+    let args = Args::parse(&argv, &flags(), SWITCHES)?;
     // thread-count override for the native kernel engine; never changes
     // results (deterministic row partitioning), only wall time
     let threads = args.get_usize("threads")?;
@@ -357,6 +390,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let adapters = (tenants > 0)
         .then(|| shears::model::ParamStore::init_adapters(cfg, &mut Rng::new(0xADA9)));
     let submitters = args.get_usize("submitters")?;
+
+    // overload-adaptive serving: --brownout arms the controller with
+    // operator-friendly derived thresholds (lo = hi/2 hysteresis bands,
+    // Shedding one tier above Degraded) — see serve::BrownoutOpts for
+    // the raw knobs
+    let brownout = {
+        let mut b = shears::serve::BrownoutOpts::default();
+        if args.has("brownout") {
+            b.enabled = true;
+            // CLI traffic opts in: the point of the flag is to degrade
+            // rank rather than miss deadlines
+            b.default_allow_degraded = true;
+            b.fraction = args.get_f64("brownout-fraction")? as f32;
+            b.shed_horizon_ms = args.get_f64("shed-horizon-ms")?;
+            let step_hi = args.get_f64("brownout-step-hi-ms")?;
+            if step_hi > 0.0 {
+                b.degrade.step_ms_hi = step_hi;
+                b.degrade.step_ms_lo = step_hi * 0.5;
+                b.shed.step_ms_hi = step_hi * 4.0;
+                b.shed.step_ms_lo = step_hi;
+            }
+            let queue_cap = args.get_usize("queue-cap")?;
+            let queue_hi = match args.get_usize("brownout-queue-hi")? {
+                0 => (queue_cap * 3 / 4).max(1),
+                n => n,
+            };
+            b.degrade.queue_hi = queue_hi;
+            b.degrade.queue_lo = queue_hi / 2;
+            b.shed.queue_hi = queue_cap.saturating_sub(1).max(queue_hi);
+            b.shed.queue_lo = queue_hi;
+            let miss_hi = args.get_f64("brownout-miss-hi")?;
+            if miss_hi > 0.0 {
+                b.degrade.miss_hi = miss_hi;
+                b.degrade.miss_lo = miss_hi * 0.5;
+            }
+        }
+        b
+    };
+    if args.has("brownout") && submitters == 0 {
+        eprintln!("--brownout needs the async frontend; add --submitters >= 1");
+    }
     let metrics = if submitters == 0 {
         // synchronous batch API: fixed slice, FIFO admission, blocks
         let mut stores = vec![&base];
@@ -390,6 +464,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 queue_cap: args.get_usize("queue-cap")?,
                 adapter_budget_bytes: budget,
                 restart_budget: args.get_usize("restart-budget")? as u32,
+                brownout: brownout.clone(),
                 // deadlines stay advisory on the CLI; max_wall (above)
                 // is the enforced budget. An empty fault plan means
                 // SHEARS_FAULT drills arm automatically at spawn.
@@ -455,6 +530,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "fault tolerance: {} faults, {} cancelled, {} quarantine recoveries, {} restarts",
             metrics.faults, metrics.cancelled, metrics.quarantined, metrics.restarts
+        );
+    }
+    if brownout.enabled {
+        println!(
+            "brownout: {} degraded admissions (rank x{:.2}), {} shed, \
+             {} transitions, {:.1}s degraded / {:.1}s shedding",
+            metrics.degraded,
+            brownout.fraction,
+            metrics.shed,
+            metrics.brownout_transitions,
+            metrics.brownout_degraded_secs,
+            metrics.brownout_shedding_secs
         );
     }
     Ok(())

@@ -17,8 +17,26 @@ use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{Read, Write};
 use std::path::Path;
+
+/// Trailer magic closing the integrity footer appended by
+/// [`ParamStore::save`]. Footer layout, after the record payload:
+/// `[payload_len u64 le][fnv1a64 u64 le][b"SHF1"]`. Files without it
+/// (written before the footer existed) still load.
+const FOOTER_MAGIC: &[u8; 4] = b"SHF1";
+const FOOTER_LEN: usize = 8 + 8 + 4;
+
+/// FNV-1a 64-bit: tiny, dependency-free, and plenty to catch torn or
+/// bit-flipped checkpoints (this is corruption detection, not crypto).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
 
 #[derive(Clone, Debug)]
 struct Entry {
@@ -199,47 +217,131 @@ impl ParamStore {
 
     // ------------------------------------------------------- checkpoints
 
-    /// Binary checkpoint: [count u64] then (name, tensor) records.
+    /// Binary checkpoint: `"SHRS"`, `[count u64]`, then (name, tensor)
+    /// records, closed by an integrity footer (see [`FOOTER_MAGIC`]).
+    ///
+    /// The write is **atomic**: the payload goes to a temp file in the
+    /// same directory, is fsynced, and is renamed over `path`. A crash
+    /// (or a supervisor kill) mid-save leaves the previous checkpoint
+    /// intact — readers never observe a half-written file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let f = std::fs::File::create(path.as_ref())
-            .with_context(|| format!("create {}", path.as_ref().display()))?;
-        let mut w = BufWriter::new(f);
-        w.write_all(b"SHRS")?;
-        w.write_all(&(self.map.len() as u64).to_le_bytes())?;
+        let path = path.as_ref();
+        // serialize in memory first so the checksum covers exactly the
+        // bytes that land on disk
+        let mut payload = Vec::new();
+        payload.extend_from_slice(b"SHRS");
+        payload.extend_from_slice(&(self.map.len() as u64).to_le_bytes());
         for (name, e) in &self.map {
             let nb = name.as_bytes();
-            w.write_all(&(nb.len() as u32).to_le_bytes())?;
-            w.write_all(nb)?;
-            e.t.write_to(&mut w)?;
+            payload.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+            payload.extend_from_slice(nb);
+            e.t.write_to(&mut payload)?;
+        }
+        let checksum = fnv1a64(&payload);
+
+        // same-directory temp file so the final rename never crosses a
+        // filesystem boundary (cross-device renames are not atomic)
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("checkpoint"));
+        tmp_name.push(".tmp");
+        let tmp = path.with_file_name(tmp_name);
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        f.write_all(&payload)?;
+        f.write_all(&(payload.len() as u64).to_le_bytes())?;
+        f.write_all(&checksum.to_le_bytes())?;
+        f.write_all(FOOTER_MAGIC)?;
+        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+        // best-effort directory fsync so the rename itself is durable;
+        // some platforms refuse to open directories — not fatal
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(dir) {
+                    let _ = d.sync_all();
+                }
+            }
         }
         Ok(())
     }
 
+    /// Load a checkpoint, validating the integrity footer when present.
+    /// Corruption (bad checksum, truncation, trailing bytes, impossible
+    /// record claims) is a clean `corrupt checkpoint` error — never a
+    /// panic, never a partially-filled store. Footer-less files written
+    /// by older versions still load.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let f = std::fs::File::open(path.as_ref())
-            .with_context(|| format!("open {}", path.as_ref().display()))?;
-        let mut r = BufReader::new(f);
+        let path = path.as_ref();
+        let buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+        let payload = match Self::verify_footer(&buf)? {
+            Some(len) => &buf[..len],
+            None => &buf[..], // legacy footer-less checkpoint
+        };
+        Self::parse(payload)
+    }
+
+    /// `Ok(Some(payload_len))` when `buf` ends in a verified integrity
+    /// footer, `Ok(None)` for legacy footer-less files, `Err` when a
+    /// footer is present but its claims don't hold.
+    fn verify_footer(buf: &[u8]) -> Result<Option<usize>> {
+        if buf.len() < FOOTER_LEN || &buf[buf.len() - 4..] != FOOTER_MAGIC {
+            return Ok(None);
+        }
+        let fstart = buf.len() - FOOTER_LEN;
+        let payload_len =
+            u64::from_le_bytes(buf[fstart..fstart + 8].try_into().unwrap()) as usize;
+        let stored = u64::from_le_bytes(buf[fstart + 8..fstart + 16].try_into().unwrap());
+        if payload_len != fstart {
+            bail!(
+                "corrupt checkpoint: footer claims {payload_len} payload bytes, file has {fstart}"
+            );
+        }
+        let actual = fnv1a64(&buf[..payload_len]);
+        if actual != stored {
+            bail!(
+                "corrupt checkpoint: checksum mismatch (stored {stored:#018x}, computed {actual:#018x})"
+            );
+        }
+        Ok(Some(payload_len))
+    }
+
+    fn parse(payload: &[u8]) -> Result<Self> {
+        let mut r = std::io::Cursor::new(payload);
         let mut magic = [0u8; 4];
-        std::io::Read::read_exact(&mut r, &mut magic)?;
+        r.read_exact(&mut magic).context("corrupt checkpoint: truncated header")?;
         if &magic != b"SHRS" {
             bail!("not a shears checkpoint");
         }
         let mut b8 = [0u8; 8];
-        std::io::Read::read_exact(&mut r, &mut b8)?;
+        r.read_exact(&mut b8).context("corrupt checkpoint: truncated header")?;
         let count = u64::from_le_bytes(b8) as usize;
         let mut s = Self::new();
-        for _ in 0..count {
+        for i in 0..count {
             let mut b4 = [0u8; 4];
-            std::io::Read::read_exact(&mut r, &mut b4)?;
+            r.read_exact(&mut b4)
+                .with_context(|| format!("corrupt checkpoint: truncated at record {i} of {count}"))?;
             let nlen = u32::from_le_bytes(b4) as usize;
             if nlen > 4096 {
                 bail!("corrupt checkpoint: name length {nlen}");
             }
             let mut nb = vec![0u8; nlen];
-            std::io::Read::read_exact(&mut r, &mut nb)?;
+            r.read_exact(&mut nb)
+                .with_context(|| format!("corrupt checkpoint: truncated at record {i} of {count}"))?;
             let name = String::from_utf8(nb).context("param name utf8")?;
-            let t = HostTensor::read_from(&mut r)?;
+            let t = HostTensor::read_from(&mut r)
+                .with_context(|| format!("corrupt checkpoint: record {i} ('{name}')"))?;
             s.insert(&name, t);
+        }
+        let pos = r.position() as usize;
+        if pos != payload.len() {
+            bail!(
+                "corrupt checkpoint: {} trailing bytes after {count} records",
+                payload.len() - pos
+            );
         }
         Ok(s)
     }
@@ -336,6 +438,27 @@ mod tests {
         let re = ParamStore::load(&path).unwrap();
         assert_eq!(re.len(), base.len());
         assert_eq!(re.get("embed").unwrap(), base.get("embed").unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn save_leaves_footer_and_no_temp_file() {
+        let cfg = mini_config();
+        let base = ParamStore::init_base(&cfg, &mut Rng::new(5), 0.05);
+        let dir = std::env::temp_dir().join("shears_test_ckpt_footer");
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("params.bin");
+        base.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[bytes.len() - 4..], FOOTER_MAGIC, "footer trailer magic");
+        assert!(
+            !dir.join("params.bin.tmp").exists(),
+            "temp file is renamed away, not left behind"
+        );
+        // overwrite-in-place (the common checkpoint cadence) keeps working
+        base.save(&path).unwrap();
+        let re = ParamStore::load(&path).unwrap();
+        assert_eq!(re.len(), base.len());
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1008,6 +1008,79 @@ pub fn matmul_nt(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32>
     y
 }
 
+/// Dense rows `[lo, hi)` of `y = x @ wᵀ` where weight row `ni` is the
+/// `k`-prefix of the `ws`-long stored row at `w[ni * ws..]`. Each dot
+/// reads one contiguous length-`k` slice, so per-element results are
+/// bit-identical to [`nt_rows`] over a repacked `[n, k]` buffer.
+#[allow(clippy::too_many_arguments)]
+fn nt_rows_strided(
+    x: &[f32],
+    w: &[f32],
+    k: usize,
+    n: usize,
+    ws: usize,
+    lo: usize,
+    hi: usize,
+    y: &mut [f32],
+) {
+    let mut mi = lo;
+    while mi < hi {
+        let ybase = (mi - lo) * n;
+        if mi + MR <= hi {
+            let x0 = &x[mi * k..(mi + 1) * k];
+            let x1 = &x[(mi + 1) * k..(mi + 2) * k];
+            let x2 = &x[(mi + 2) * k..(mi + 3) * k];
+            let x3 = &x[(mi + 3) * k..(mi + 4) * k];
+            for ni in 0..n {
+                let d = dot4(x0, x1, x2, x3, &w[ni * ws..ni * ws + k]);
+                y[ybase + ni] = d[0];
+                y[ybase + n + ni] = d[1];
+                y[ybase + 2 * n + ni] = d[2];
+                y[ybase + 3 * n + ni] = d[3];
+            }
+            mi += MR;
+        } else {
+            let xr = &x[mi * k..(mi + 1) * k];
+            for (ni, yv) in y[ybase..ybase + n].iter_mut().enumerate() {
+                *yv = dot(xr, &w[ni * ws..ni * ws + k]);
+            }
+            mi += 1;
+        }
+    }
+}
+
+/// `y[M,N] = x[M,K] @ wᵀ` where weight row `ni` is the `k`-prefix of
+/// the `ws`-long stored row at `w[ni * ws..]` — a rank-truncated
+/// prefix sub-adapter's B term reads its parent's `[N, ws]` buffer in
+/// place, no repack. With `ws == k` this computes exactly
+/// [`matmul_nt_into`] (callers on the hot path branch to that kernel
+/// so the full-rank path stays byte-for-byte the same code).
+pub fn matmul_nt_strided_into(
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ws: usize,
+    y: &mut [f32],
+) {
+    debug_assert!(k <= ws && k > 0);
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), n * ws);
+    debug_assert_eq!(y.len(), m * n);
+    if m == 1 {
+        // serving shape: one activation row → partition output columns
+        parallel_rows(y, n, 1, k, |lo, _hi, yc| {
+            for (j, yv) in yc.iter_mut().enumerate() {
+                let ni = lo + j;
+                *yv = dot(x, &w[ni * ws..ni * ws + k]);
+            }
+        });
+    } else {
+        parallel_rows(y, m, n, n * k, |lo, hi, yc| nt_rows_strided(x, w, k, n, ws, lo, hi, yc));
+    }
+}
+
 /// `y = x @ wᵀ` through a prepared representation: the CSR gather for
 /// sparse weights, the register-blocked dense kernel otherwise. `w`
 /// must be the same buffer `pw` was built from (used on the dense path).
@@ -1285,6 +1358,31 @@ mod tests {
                 assert!((a - b).abs() < 1e-5);
             }
         }
+    }
+
+    #[test]
+    fn strided_nt_matches_repacked_prefix() {
+        // reading the k-prefix of ws-long rows in place must be
+        // bit-identical to repacking those prefixes into [n, k] —
+        // both the m=1 column path and the blocked row kernel
+        let (k, n, ws) = (3, 11, 8);
+        let w: Vec<f32> = (0..n * ws).map(|i| (i as f32 * 0.19).cos()).collect();
+        let mut packed = vec![0.0f32; n * k];
+        for ni in 0..n {
+            packed[ni * k..(ni + 1) * k].copy_from_slice(&w[ni * ws..ni * ws + k]);
+        }
+        for m in [1usize, 6] {
+            let x: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.41).sin()).collect();
+            let reference = matmul_nt(&x, &packed, m, k, n);
+            let mut y = vec![0.0f32; m * n];
+            matmul_nt_strided_into(&x, &w, m, k, n, ws, &mut y);
+            assert_eq!(y, reference, "m={m}");
+        }
+        // full-width stride degenerates to the plain kernel
+        let x: Vec<f32> = (0..2 * ws).map(|i| (i as f32 * 0.07).sin()).collect();
+        let mut y = vec![0.0f32; 2 * n];
+        matmul_nt_strided_into(&x, &w, 2, ws, n, ws, &mut y);
+        assert_eq!(y, matmul_nt(&x, &w, 2, ws, n));
     }
 
     #[test]

@@ -1343,15 +1343,21 @@ impl DecodeState {
     }
 }
 
-/// One adapter target's owned LoRA weights plus its window of the
-/// elastic rank mask: A `[rank, inp]`, B `[out, rank]`, mask `[rank]`.
-/// Sites are ordered by the module's position in
-/// `ModelConfig::adapter_modules`.
+/// One adapter target's LoRA weights plus its window of the elastic
+/// rank mask: A `[rank, inp]`, B `[out, rank]`, mask `[active]` with
+/// `active <= rank`. Sites are ordered by the module's position in
+/// `ModelConfig::adapter_modules`. A/B live behind `Arc`s so a prefix
+/// sub-binding ([`AdapterBinding::prefix`]) shares its parent's
+/// buffers and applies a rank-truncated window of them in place —
+/// NLS's prefix nesting means truncation IS the sub-adapter.
 #[derive(Clone, Debug)]
 pub struct AdapterSite {
-    a: Vec<f32>,
-    b: Vec<f32>,
+    a: Arc<Vec<f32>>,
+    b: Arc<Vec<f32>>,
     mask: Vec<f32>,
+    /// physical rank of the stored A/B buffers (B's row stride); the
+    /// active rank window is `mask.len()`
+    rank: usize,
     out: usize,
     inp: usize,
 }
@@ -1401,9 +1407,10 @@ impl AdapterBinding {
                 bt.shape
             );
             let site = AdapterSite {
-                a: at.f32s().to_vec(),
-                b: bt.f32s().to_vec(),
+                a: Arc::new(at.f32s().to_vec()),
+                b: Arc::new(bt.f32s().to_vec()),
                 mask: rank_mask[idx * r..(idx + 1) * r].to_vec(),
+                rank: r,
                 out: bt.shape[0],
                 inp: at.shape[1],
             };
@@ -1430,6 +1437,56 @@ impl AdapterBinding {
     /// Number of adapter target sites.
     pub fn n_sites(&self) -> usize {
         self.sites.len()
+    }
+
+    /// Derive the prefix sub-binding keeping `ceil(fraction * active)`
+    /// ranks (min 1) of every site's mask window — the brownout
+    /// controller's degradation rung. A/B buffers are **shared**
+    /// (`Arc` clones): the sub-binding reads rank-truncated windows of
+    /// its parent's weights in place, so deriving one allocates only
+    /// the truncated mask copies. NLS prefix nesting
+    /// (`rank_mask_is_prefix`) makes the truncation a legitimate
+    /// sub-adapter, not an arbitrary projection. `fraction >= 1`
+    /// yields a full-window clone (still sharing buffers).
+    pub fn prefix(&self, fraction: f32) -> AdapterBinding {
+        let f = if fraction.is_finite() { fraction.clamp(0.0, 1.0) } else { 1.0 };
+        let mut sites = Vec::with_capacity(self.sites.len());
+        let mut bytes = std::mem::size_of::<AdapterBinding>();
+        for s in &self.sites {
+            let keep = ((f * s.mask.len() as f32).ceil() as usize).clamp(1, s.mask.len());
+            let site = AdapterSite {
+                a: Arc::clone(&s.a),
+                b: Arc::clone(&s.b),
+                mask: s.mask[..keep].to_vec(),
+                rank: s.rank,
+                out: s.out,
+                inp: s.inp,
+            };
+            bytes += std::mem::size_of::<AdapterSite>()
+                + site.mask.len() * std::mem::size_of::<f32>();
+            sites.push(site);
+        }
+        AdapterBinding { sites, bytes }
+    }
+
+    /// Largest active rank window across sites — the per-slot load
+    /// unit the serving fault injector's `rankdelay` kind scales by
+    /// (a degraded prefix sub-binding reports a smaller value than
+    /// its parent).
+    pub fn active_rank(&self) -> usize {
+        self.sites.iter().map(|s| s.mask.len()).max().unwrap_or(0)
+    }
+
+    /// Active over physical rank, summed across sites — `1.0` for a
+    /// full binding, smaller for a prefix sub-binding; reported on
+    /// degraded [`crate::serve::GenResponse`]s.
+    pub fn rank_fraction(&self) -> f32 {
+        let phys: usize = self.sites.iter().map(|s| s.rank).sum();
+        if phys == 0 {
+            return 1.0;
+        }
+        let act: usize = self.sites.iter().map(|s| s.mask.len()).sum();
+        act as f32 / phys as f32
     }
 }
 
@@ -1519,14 +1576,24 @@ impl BoundLinear<'_> {
         let xs = &x[row0 * self.inp..(row0 + m) * self.inp];
         let ys = &mut y[row0 * self.out..(row0 + m) * self.out];
         let mut proj = sc.take(m * r);
-        linalg::matmul_nt_into(xs, &s.a, m, self.inp, r, &mut proj);
+        // A is [rank, inp] row-major, so the active window is a
+        // contiguous prefix — the same slice (the whole buffer) when
+        // the binding runs at full rank.
+        linalg::matmul_nt_into(xs, &s.a[..r * self.inp], m, self.inp, r, &mut proj);
         for row in 0..m {
             for (j, pv) in proj[row * r..(row + 1) * r].iter_mut().enumerate() {
                 *pv *= s.mask[j];
             }
         }
         let mut yl = sc.take(m * self.out);
-        linalg::matmul_nt_into(&proj, &s.b, m, r, self.out, &mut yl);
+        // B is [out, rank] row-major: full-rank bindings take the
+        // plain kernel (bit-identical to pre-prefix code), truncated
+        // windows read the length-r prefix of each rank-stride row.
+        if r == s.rank {
+            linalg::matmul_nt_into(&proj, &s.b[..], m, r, self.out, &mut yl);
+        } else {
+            linalg::matmul_nt_strided_into(&proj, &s.b[..], m, r, self.out, s.rank, &mut yl);
+        }
         axpy(ys, scale, &yl);
         sc.give(yl);
         sc.give(proj);
@@ -1746,11 +1813,15 @@ impl<'a> DecodeModel<'a> {
             ensure!(
                 s.out == out
                     && s.inp == inp
-                    && s.a.len() == r * inp
-                    && s.b.len() == out * r,
-                "adapter site {i} is [{}, {}] rank {r}, model expects [{out}, {inp}]",
+                    && s.a.len() == s.rank * inp
+                    && s.b.len() == out * s.rank
+                    && r >= 1
+                    && r <= s.rank,
+                "adapter site {i} is [{}, {}] rank {}/{} active, model expects [{out}, {inp}]",
                 s.out,
-                s.inp
+                s.inp,
+                r,
+                s.rank
             );
         }
         Ok(())

@@ -1,0 +1,567 @@
+//! Overload brownout controller for the serving runtime.
+//!
+//! Tracks three load signals — EWMA decode-step latency, submit-queue
+//! depth, and the deadline-miss rate over a ring of recent completions
+//! — and drives a hysteresis state machine:
+//!
+//! ```text
+//!   Normal  --hot(degrade)×dwell_up-->  Degraded  --hot(shed)×dwell_up-->  Shedding
+//!   Normal  <-cool(degrade)×dwell_down- Degraded  <-cool(shed)×dwell_down- Shedding
+//! ```
+//!
+//! In `Degraded`, newly admitted requests that opt in are bound to a
+//! cheaper prefix sub-adapter (`AdapterBinding::prefix`) instead of
+//! missing deadlines. In `Shedding`, submissions past the admissible
+//! horizon are rejected with `RejectReason::Overloaded` — never
+//! silently dropped. A state moves at most one rung per evaluation,
+//! and only after `dwell_up`/`dwell_down` consecutive agreeing
+//! evaluations, so the controller cannot flap on a noisy signal.
+//!
+//! The controller is pure bookkeeping: no clocks of its own (the
+//! server passes `Instant`s in), no allocation after construction (the
+//! miss ring is preallocated), and with `enabled: false` every hook is
+//! an observed no-op — the server's output is bit-identical to a build
+//! without the controller. Determinism in tests comes from driving the
+//! signals with `FaultPlan` latency injection.
+
+use std::time::{Duration, Instant};
+
+/// Brownout rung. Encoded in metrics as a gauge via [`BrownoutState::gauge`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BrownoutState {
+    /// Below thresholds: admission untouched, controller observe-only.
+    Normal,
+    /// Opted-in admissions are bound to a prefix sub-adapter.
+    Degraded,
+    /// Degraded, plus submissions past the admissible horizon are
+    /// rejected `Overloaded`.
+    Shedding,
+}
+
+impl BrownoutState {
+    /// Metrics encoding: 0 = Normal, 1 = Degraded, 2 = Shedding.
+    pub fn gauge(self) -> u64 {
+        match self {
+            BrownoutState::Normal => 0,
+            BrownoutState::Degraded => 1,
+            BrownoutState::Shedding => 2,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BrownoutState::Normal => "normal",
+            BrownoutState::Degraded => "degraded",
+            BrownoutState::Shedding => "shedding",
+        }
+    }
+}
+
+/// Trip/clear thresholds for one rung of the ladder. The rung trips
+/// ("hot") when ANY signal reaches its `_hi`, and clears ("cool") only
+/// when ALL signals are at or below their `_lo` — the gap between the
+/// two is the hysteresis dead zone where the rung holds.
+#[derive(Clone, Copy, Debug)]
+pub struct BrownoutThresholds {
+    /// EWMA decode-step latency, milliseconds.
+    pub step_ms_hi: f64,
+    pub step_ms_lo: f64,
+    /// Submit-queue depth (queued, not yet admitted).
+    pub queue_hi: usize,
+    pub queue_lo: usize,
+    /// Deadline-miss fraction over the recent-completions ring, 0..=1.
+    pub miss_hi: f64,
+    pub miss_lo: f64,
+}
+
+impl BrownoutThresholds {
+    /// Thresholds no real load can reach: the rung never trips, and
+    /// (vacuously) always reads cool. The armed-but-unreachable
+    /// configuration used by the bit-identity drills.
+    pub const UNREACHABLE: BrownoutThresholds = BrownoutThresholds {
+        step_ms_hi: f64::INFINITY,
+        step_ms_lo: f64::INFINITY,
+        queue_hi: usize::MAX,
+        queue_lo: usize::MAX,
+        miss_hi: f64::INFINITY,
+        miss_lo: f64::INFINITY,
+    };
+}
+
+/// Controller configuration, carried in `ServerOpts::brownout`.
+#[derive(Clone, Debug)]
+pub struct BrownoutOpts {
+    /// Master switch. Off (the default) means the server never
+    /// constructs load signals and admission is byte-for-byte the
+    /// pre-brownout path.
+    pub enabled: bool,
+    /// Rank fraction served to degraded admissions (per site:
+    /// `ceil(fraction × active_rank)` prefix rows, min 1).
+    pub fraction: f32,
+    /// Policy for requests that leave `GenRequest::allow_degraded`
+    /// unset.
+    pub default_allow_degraded: bool,
+    /// EWMA smoothing factor for step latency and steps-per-request,
+    /// in (0, 1]; 1.0 tracks only the most recent observation.
+    pub alpha: f64,
+    /// Normal ⇄ Degraded thresholds.
+    pub degrade: BrownoutThresholds,
+    /// Degraded ⇄ Shedding thresholds.
+    pub shed: BrownoutThresholds,
+    /// Consecutive hot evaluations before escalating one rung.
+    pub dwell_up: u32,
+    /// Consecutive cool evaluations before de-escalating one rung.
+    pub dwell_down: u32,
+    /// While shedding: the backlog the server is still willing to
+    /// accept, expressed as milliseconds of estimated work
+    /// (`admissible depth = horizon / (step_ms × steps_per_request)`).
+    /// 0 rejects every submission while shedding.
+    pub shed_horizon_ms: f64,
+    /// Length of the deadline-miss ring (recent clean completions).
+    pub miss_window: usize,
+}
+
+impl Default for BrownoutOpts {
+    fn default() -> Self {
+        BrownoutOpts {
+            enabled: false,
+            fraction: 0.5,
+            default_allow_degraded: false,
+            alpha: 0.2,
+            degrade: BrownoutThresholds::UNREACHABLE,
+            shed: BrownoutThresholds::UNREACHABLE,
+            dwell_up: 3,
+            dwell_down: 5,
+            shed_horizon_ms: 1_000.0,
+            miss_window: 64,
+        }
+    }
+}
+
+/// The hysteresis state machine plus its load signals. Lives in the
+/// server loop's `LoopState`, so it survives supervised engine
+/// restarts — an overload does not reset because the engine was
+/// rebuilt.
+#[derive(Debug)]
+pub struct BrownoutController {
+    opts: BrownoutOpts,
+    state: BrownoutState,
+    /// EWMA decode-step latency, ms (`None` until the first step).
+    step_ms: Option<f64>,
+    /// EWMA decode steps per completed request — the per-request cost
+    /// model behind the admissible horizon.
+    steps_per_req: Option<f64>,
+    /// Ring of recent clean completions: `true` = missed its advisory
+    /// deadline. Preallocated; `miss_len` counts the valid entries.
+    miss_ring: Vec<bool>,
+    miss_next: usize,
+    miss_len: usize,
+    hot_streak: u32,
+    cool_streak: u32,
+    transitions: u64,
+    /// Time-in-state accounting, accrued at each evaluation.
+    last_eval: Option<Instant>,
+    degraded_secs: f64,
+    shedding_secs: f64,
+}
+
+impl BrownoutController {
+    pub fn new(opts: BrownoutOpts) -> Self {
+        let window = opts.miss_window.max(1);
+        BrownoutController {
+            opts,
+            state: BrownoutState::Normal,
+            step_ms: None,
+            steps_per_req: None,
+            miss_ring: vec![false; window],
+            miss_next: 0,
+            miss_len: 0,
+            hot_streak: 0,
+            cool_streak: 0,
+            transitions: 0,
+            last_eval: None,
+            degraded_secs: 0.0,
+            shedding_secs: 0.0,
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.opts.enabled
+    }
+
+    pub fn state(&self) -> BrownoutState {
+        self.state
+    }
+
+    /// Whether admissions should bind prefix sub-adapters right now
+    /// (both brownout rungs degrade; `Shedding` additionally rejects).
+    pub fn degrading(&self) -> bool {
+        self.opts.enabled && self.state != BrownoutState::Normal
+    }
+
+    pub fn fraction(&self) -> f32 {
+        self.opts.fraction
+    }
+
+    pub fn default_allow_degraded(&self) -> bool {
+        self.opts.default_allow_degraded
+    }
+
+    pub fn transitions(&self) -> u64 {
+        self.transitions
+    }
+
+    pub fn degraded_secs(&self) -> f64 {
+        self.degraded_secs
+    }
+
+    pub fn shedding_secs(&self) -> f64 {
+        self.shedding_secs
+    }
+
+    /// Current EWMA step latency in ms (0 before any step).
+    pub fn ewma_step_ms(&self) -> f64 {
+        self.step_ms.unwrap_or(0.0)
+    }
+
+    /// Deadline-miss fraction over the ring (0 while empty).
+    pub fn miss_rate(&self) -> f64 {
+        if self.miss_len == 0 {
+            return 0.0;
+        }
+        let missed = self.miss_ring[..self.miss_len].iter().filter(|&&m| m).count();
+        missed as f64 / self.miss_len as f64
+    }
+
+    fn ewma(prev: Option<f64>, x: f64, alpha: f64) -> f64 {
+        match prev {
+            None => x,
+            Some(p) => p + alpha * (x - p),
+        }
+    }
+
+    /// Feed one successful engine step's wall time. No-op when
+    /// disabled; never allocates.
+    pub fn observe_step(&mut self, dur: Duration) {
+        if !self.opts.enabled {
+            return;
+        }
+        let ms = dur.as_secs_f64() * 1e3;
+        self.step_ms = Some(Self::ewma(self.step_ms, ms, self.opts.alpha));
+    }
+
+    /// Feed one clean completion: how many tokens it decoded and
+    /// whether it missed its advisory deadline. No-op when disabled;
+    /// never allocates (the ring is preallocated).
+    pub fn observe_completion(&mut self, new_tokens: usize, deadline_missed: bool) {
+        if !self.opts.enabled {
+            return;
+        }
+        self.miss_ring[self.miss_next] = deadline_missed;
+        self.miss_next = (self.miss_next + 1) % self.miss_ring.len();
+        self.miss_len = (self.miss_len + 1).min(self.miss_ring.len());
+        // one decode step per generated token while resident
+        self.steps_per_req =
+            Some(Self::ewma(self.steps_per_req, new_tokens.max(1) as f64, self.opts.alpha));
+    }
+
+    fn hot(&self, th: &BrownoutThresholds, queue_depth: usize) -> bool {
+        self.ewma_step_ms() >= th.step_ms_hi
+            || queue_depth >= th.queue_hi
+            || self.miss_rate() >= th.miss_hi
+    }
+
+    fn cool(&self, th: &BrownoutThresholds, queue_depth: usize) -> bool {
+        self.ewma_step_ms() <= th.step_ms_lo
+            && queue_depth <= th.queue_lo
+            && self.miss_rate() <= th.miss_lo
+    }
+
+    fn transition(&mut self, next: BrownoutState) {
+        self.state = next;
+        self.transitions += 1;
+        self.hot_streak = 0;
+        self.cool_streak = 0;
+    }
+
+    /// One control-loop evaluation: accrue time-in-state, update the
+    /// dwell streaks against the current rung's thresholds, and move
+    /// at most one rung. Returns the (possibly new) state. No-op in
+    /// `Normal` unless a signal trips — which is what keeps a run with
+    /// the controller armed below thresholds bit-identical to one with
+    /// it off.
+    pub fn evaluate(&mut self, now: Instant, queue_depth: usize) -> BrownoutState {
+        if !self.opts.enabled {
+            return self.state;
+        }
+        if let Some(prev) = self.last_eval {
+            let dt = now.saturating_duration_since(prev).as_secs_f64();
+            match self.state {
+                BrownoutState::Normal => {}
+                BrownoutState::Degraded => self.degraded_secs += dt,
+                BrownoutState::Shedding => self.shedding_secs += dt,
+            }
+        }
+        self.last_eval = Some(now);
+
+        // this rung's escalate/clear signals
+        let (hot, cool) = match self.state {
+            BrownoutState::Normal => (self.hot(&self.opts.degrade, queue_depth), false),
+            BrownoutState::Degraded => (
+                self.hot(&self.opts.shed, queue_depth),
+                self.cool(&self.opts.degrade, queue_depth),
+            ),
+            BrownoutState::Shedding => (false, self.cool(&self.opts.shed, queue_depth)),
+        };
+        if hot {
+            self.hot_streak += 1;
+            self.cool_streak = 0;
+        } else if cool {
+            self.cool_streak += 1;
+            self.hot_streak = 0;
+        } else {
+            // dead zone: hold the rung, reset both streaks
+            self.hot_streak = 0;
+            self.cool_streak = 0;
+        }
+
+        if self.hot_streak >= self.opts.dwell_up.max(1) {
+            match self.state {
+                BrownoutState::Normal => self.transition(BrownoutState::Degraded),
+                BrownoutState::Degraded => self.transition(BrownoutState::Shedding),
+                BrownoutState::Shedding => {}
+            }
+        } else if self.cool_streak >= self.opts.dwell_down.max(1) {
+            match self.state {
+                BrownoutState::Normal => {}
+                BrownoutState::Degraded => self.transition(BrownoutState::Normal),
+                BrownoutState::Shedding => self.transition(BrownoutState::Degraded),
+            }
+        }
+        self.state
+    }
+
+    /// While `Shedding`: how deep the submit queue may grow before new
+    /// submissions bounce `Overloaded` — the shed horizon divided by
+    /// the estimated per-request cost. `usize::MAX` in every other
+    /// state (no shedding).
+    pub fn admissible_depth(&self, queue_cap: usize) -> usize {
+        if self.state != BrownoutState::Shedding {
+            return usize::MAX;
+        }
+        let per_req_ms = self.ewma_step_ms() * self.steps_per_req.unwrap_or(1.0);
+        if per_req_ms <= f64::EPSILON {
+            // no cost model yet: shed everything past the horizon flag
+            return if self.opts.shed_horizon_ms > 0.0 { queue_cap } else { 0 };
+        }
+        ((self.opts.shed_horizon_ms / per_req_ms).floor() as usize).min(queue_cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reachable() -> BrownoutOpts {
+        BrownoutOpts {
+            enabled: true,
+            alpha: 1.0,
+            degrade: BrownoutThresholds {
+                step_ms_hi: 10.0,
+                step_ms_lo: 2.0,
+                queue_hi: usize::MAX,
+                queue_lo: usize::MAX,
+                miss_hi: f64::INFINITY,
+                miss_lo: f64::INFINITY,
+            },
+            shed: BrownoutThresholds {
+                step_ms_hi: 50.0,
+                step_ms_lo: 8.0,
+                queue_hi: usize::MAX,
+                queue_lo: usize::MAX,
+                miss_hi: f64::INFINITY,
+                miss_lo: f64::INFINITY,
+            },
+            dwell_up: 2,
+            dwell_down: 2,
+            ..BrownoutOpts::default()
+        }
+    }
+
+    fn eval_n(c: &mut BrownoutController, t0: Instant, from: u32, n: u32, ms: f64) -> BrownoutState {
+        let mut st = c.state();
+        for i in from..from + n {
+            c.observe_step(Duration::from_secs_f64(ms * 1e-3));
+            st = c.evaluate(t0 + Duration::from_millis(u64::from(i)), 0);
+        }
+        st
+    }
+
+    #[test]
+    fn escalates_only_after_dwell_up_consecutive_hot_evals() {
+        let mut c = BrownoutController::new(reachable());
+        let t0 = Instant::now();
+        assert_eq!(eval_n(&mut c, t0, 0, 1, 20.0), BrownoutState::Normal, "one hot eval holds");
+        assert_eq!(eval_n(&mut c, t0, 1, 1, 20.0), BrownoutState::Degraded, "dwell_up = 2 trips");
+        assert_eq!(c.transitions(), 1);
+        // two shed-hot evals escalate the next rung
+        assert_eq!(eval_n(&mut c, t0, 2, 2, 60.0), BrownoutState::Shedding);
+        assert_eq!(c.transitions(), 2);
+    }
+
+    #[test]
+    fn alternating_hot_and_dead_zone_never_escalates() {
+        let mut c = BrownoutController::new(reachable());
+        let t0 = Instant::now();
+        for i in 0..10u32 {
+            // hot (20ms) alternating with dead-zone (5ms: above lo=2, below hi=10)
+            let ms = if i % 2 == 0 { 20.0 } else { 5.0 };
+            assert_eq!(eval_n(&mut c, t0, i, 1, ms), BrownoutState::Normal, "flap guard at {i}");
+        }
+        assert_eq!(c.transitions(), 0);
+    }
+
+    #[test]
+    fn recovers_one_rung_at_a_time_with_dwell_down() {
+        let mut c = BrownoutController::new(reachable());
+        let t0 = Instant::now();
+        eval_n(&mut c, t0, 0, 2, 20.0); // -> Degraded
+        eval_n(&mut c, t0, 2, 2, 60.0); // -> Shedding
+        assert_eq!(c.state(), BrownoutState::Shedding);
+        // fast steps: cool for both rungs, but only one rung per dwell
+        assert_eq!(eval_n(&mut c, t0, 4, 1, 1.0), BrownoutState::Shedding);
+        assert_eq!(eval_n(&mut c, t0, 5, 1, 1.0), BrownoutState::Degraded);
+        assert_eq!(eval_n(&mut c, t0, 6, 2, 1.0), BrownoutState::Normal);
+        assert_eq!(c.transitions(), 4);
+    }
+
+    #[test]
+    fn unreachable_thresholds_stay_normal_under_any_load() {
+        let mut c = BrownoutController::new(BrownoutOpts { enabled: true, ..Default::default() });
+        let t0 = Instant::now();
+        for i in 0..50u32 {
+            c.observe_step(Duration::from_millis(500));
+            c.observe_completion(4, true);
+            assert_eq!(
+                c.evaluate(t0 + Duration::from_millis(u64::from(i)), 1_000_000),
+                BrownoutState::Normal
+            );
+        }
+        assert_eq!(c.transitions(), 0);
+    }
+
+    #[test]
+    fn disabled_controller_is_inert() {
+        let mut c = BrownoutController::new(BrownoutOpts {
+            enabled: false,
+            dwell_up: 1,
+            degrade: BrownoutThresholds {
+                step_ms_hi: 0.0,
+                step_ms_lo: 0.0,
+                queue_hi: 0,
+                queue_lo: 0,
+                miss_hi: 0.0,
+                miss_lo: 0.0,
+            },
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        c.observe_step(Duration::from_secs(1));
+        c.observe_completion(8, true);
+        assert_eq!(c.evaluate(t0, 100), BrownoutState::Normal);
+        assert!(!c.degrading());
+        assert_eq!(c.transitions(), 0);
+        assert_eq!(c.ewma_step_ms(), 0.0, "disabled controller records nothing");
+    }
+
+    #[test]
+    fn queue_depth_alone_can_trip_and_drive_shedding() {
+        let mut c = BrownoutController::new(BrownoutOpts {
+            enabled: true,
+            dwell_up: 1,
+            dwell_down: 1_000_000,
+            degrade: BrownoutThresholds {
+                queue_hi: 2,
+                queue_lo: 0,
+                ..BrownoutThresholds::UNREACHABLE
+            },
+            shed: BrownoutThresholds {
+                queue_hi: 2,
+                queue_lo: 0,
+                ..BrownoutThresholds::UNREACHABLE
+            },
+            shed_horizon_ms: 0.0,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(c.evaluate(t0, 2), BrownoutState::Degraded, "one rung per evaluation");
+        assert_eq!(c.evaluate(t0 + Duration::from_millis(1), 2), BrownoutState::Shedding);
+        assert_eq!(c.admissible_depth(64), 0, "zero horizon sheds everything");
+        // huge dwell_down: empty queue does not de-escalate within the test
+        assert_eq!(c.evaluate(t0 + Duration::from_millis(2), 0), BrownoutState::Shedding);
+        assert_eq!(c.admissible_depth(64), 0);
+    }
+
+    #[test]
+    fn admissible_depth_is_horizon_over_estimated_request_cost() {
+        let mut c = BrownoutController::new(BrownoutOpts {
+            enabled: true,
+            alpha: 1.0,
+            dwell_up: 1,
+            degrade: BrownoutThresholds { queue_hi: 1, ..BrownoutThresholds::UNREACHABLE },
+            shed: BrownoutThresholds { queue_hi: 1, ..BrownoutThresholds::UNREACHABLE },
+            shed_horizon_ms: 100.0,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        assert_eq!(c.admissible_depth(64), usize::MAX, "not shedding yet");
+        c.observe_step(Duration::from_millis(5));
+        c.observe_completion(4, false); // 5ms × 4 steps = 20ms per request
+        c.evaluate(t0, 1);
+        c.evaluate(t0 + Duration::from_millis(1), 1);
+        assert_eq!(c.state(), BrownoutState::Shedding);
+        assert_eq!(c.admissible_depth(64), 5, "100ms horizon / 20ms per request");
+        assert_eq!(c.admissible_depth(3), 3, "clamped to the queue cap");
+    }
+
+    #[test]
+    fn time_in_state_accrues_per_rung() {
+        let mut c = BrownoutController::new(BrownoutOpts {
+            enabled: true,
+            alpha: 1.0,
+            dwell_up: 1,
+            dwell_down: 1,
+            degrade: BrownoutThresholds {
+                step_ms_hi: 10.0,
+                step_ms_lo: 2.0,
+                ..BrownoutThresholds::UNREACHABLE
+            },
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        c.observe_step(Duration::from_millis(20));
+        c.evaluate(t0, 0); // -> Degraded at t0
+        c.evaluate(t0 + Duration::from_millis(250), 0); // 250ms degraded (dead zone holds)
+        assert!(c.degraded_secs() >= 0.25 - 1e-9, "degraded_secs = {}", c.degraded_secs());
+        assert_eq!(c.state(), BrownoutState::Degraded, "20ms EWMA sits in the dead zone");
+        assert_eq!(c.shedding_secs(), 0.0);
+    }
+
+    #[test]
+    fn miss_ring_wraps_and_rates_recent_completions() {
+        let mut c = BrownoutController::new(BrownoutOpts {
+            enabled: true,
+            miss_window: 4,
+            ..Default::default()
+        });
+        assert_eq!(c.miss_rate(), 0.0);
+        for _ in 0..4 {
+            c.observe_completion(3, true);
+        }
+        assert_eq!(c.miss_rate(), 1.0);
+        for _ in 0..3 {
+            c.observe_completion(3, false);
+        }
+        assert_eq!(c.miss_rate(), 0.25, "ring of 4 holds one stale miss");
+    }
+}

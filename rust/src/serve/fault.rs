@@ -25,6 +25,10 @@
 //!   error@5:1     …and slot 1's recovery prefill fails too (quarantine)
 //!   nan@4:2       poison slot 2's logits row with NaN on attempt 4
 //!   delay@2:8     sleep 8 ms before attempt 2 (deadline-overrun tests)
+//!   rankdelay@0+1:50  every attempt, sleep 50 µs × the sum of active
+//!                     slots' adapter ranks — emulates compute that
+//!                     scales with LoRA rank, so brownout degradation
+//!                     (rank truncation) measurably buys back latency
 //!   panic@6+10    periodic: fires on attempts 6, 16, 26, …
 //! ```
 //!
@@ -136,6 +140,12 @@ pub enum InjectKind {
     NanLogits { slot: usize },
     /// sleep `ms` before the step — deadline/wall-clock overrun tests
     Delay { ms: u64 },
+    /// sleep `us` microseconds **per active adapter rank** before the
+    /// step (the engine multiplies by the sum of active slots'
+    /// [`crate::ops::model::AdapterBinding::active_rank`]) — a
+    /// deterministic stand-in for rank-proportional compute, the load
+    /// model the brownout overload drills are pinned against
+    RankDelay { us: u64 },
 }
 
 /// An [`InjectKind`] scheduled against the step-attempt counter.
@@ -169,6 +179,9 @@ pub struct Fire {
     /// the attempt index this record describes (for error messages)
     pub attempt: u64,
     pub delay_ms: u64,
+    /// microseconds to sleep per unit of active adapter rank in the
+    /// batch (the engine supplies the rank sum)
+    pub rank_delay_us: u64,
     pub panic: bool,
     pub error: bool,
     /// slot whose recovery prefill the injected error also poisons
@@ -179,7 +192,11 @@ pub struct Fire {
 
 impl Fire {
     pub fn is_clean(&self) -> bool {
-        self.delay_ms == 0 && !self.panic && !self.error && self.nan_slot.is_none()
+        self.delay_ms == 0
+            && self.rank_delay_us == 0
+            && !self.panic
+            && !self.error
+            && self.nan_slot.is_none()
     }
 }
 
@@ -248,6 +265,16 @@ impl FaultPlan {
         self
     }
 
+    pub fn rank_delay_at(mut self, at: u64, us: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::RankDelay { us } });
+        self
+    }
+
+    pub fn rank_delay_every(mut self, at: u64, period: u64, us: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period, kind: InjectKind::RankDelay { us } });
+        self
+    }
+
     /// Consume one step attempt and collect what fires on it. Called
     /// by the engine once per step with a non-empty plan; never
     /// allocates.
@@ -274,6 +301,7 @@ impl FaultPlan {
                     }
                 }
                 InjectKind::Delay { ms } => f.delay_ms += ms,
+                InjectKind::RankDelay { us } => f.rank_delay_us += us,
             }
         }
         f
@@ -321,7 +349,10 @@ impl FaultPlan {
                 },
                 "nan" => InjectKind::NanLogits { slot: parse_arg("slot")? as usize },
                 "delay" => InjectKind::Delay { ms: parse_arg("ms")? },
-                other => bail!("fault '{part}': unknown kind '{other}' (panic|error|nan|delay)"),
+                "rankdelay" => InjectKind::RankDelay { us: parse_arg("us")? },
+                other => {
+                    bail!("fault '{part}': unknown kind '{other}' (panic|error|nan|delay|rankdelay)")
+                }
             };
             plan.injections.push(Injection { at, period, kind });
         }
@@ -352,8 +383,9 @@ mod tests {
 
     #[test]
     fn parse_covers_every_kind_and_schedule() {
-        let p = FaultPlan::parse("panic@3, error@5:1 ,nan@4:2,delay@2:8,error@7+100").unwrap();
-        assert_eq!(p.injections.len(), 5);
+        let p = FaultPlan::parse("panic@3, error@5:1 ,nan@4:2,delay@2:8,error@7+100,rankdelay@0+1:50")
+            .unwrap();
+        assert_eq!(p.injections.len(), 6);
         assert_eq!(p.injections[0], Injection { at: 3, period: 0, kind: InjectKind::Panic });
         assert_eq!(
             p.injections[1],
@@ -368,6 +400,10 @@ mod tests {
             p.injections[4],
             Injection { at: 7, period: 100, kind: InjectKind::Error { slot: None } }
         );
+        assert_eq!(
+            p.injections[5],
+            Injection { at: 0, period: 1, kind: InjectKind::RankDelay { us: 50 } }
+        );
     }
 
     #[test]
@@ -376,6 +412,7 @@ mod tests {
         assert!(FaultPlan::parse("panic@x").is_err(), "bad start");
         assert!(FaultPlan::parse("nan@3").is_err(), "nan needs a slot");
         assert!(FaultPlan::parse("delay@3").is_err(), "delay needs ms");
+        assert!(FaultPlan::parse("rankdelay@3").is_err(), "rankdelay needs us");
         assert!(FaultPlan::parse("panic@3:1").is_err(), "panic takes no arg");
         assert!(FaultPlan::parse("explode@1").is_err(), "unknown kind");
         assert!(FaultPlan::parse("error@1+z").is_err(), "bad period");
@@ -399,7 +436,8 @@ mod tests {
 
     #[test]
     fn fire_advances_the_attempt_counter_and_aggregates() {
-        let mut p = FaultPlan::none().delay_at(1, 4).nan_at(1, 2).error_at_slot(1, 0);
+        let mut p =
+            FaultPlan::none().delay_at(1, 4).nan_at(1, 2).error_at_slot(1, 0).rank_delay_at(1, 9);
         let f0 = p.fire();
         assert_eq!(f0.attempt, 0);
         assert!(f0.is_clean());
@@ -407,6 +445,7 @@ mod tests {
         assert_eq!(f1.attempt, 1);
         assert!(!f1.is_clean());
         assert_eq!(f1.delay_ms, 4);
+        assert_eq!(f1.rank_delay_us, 9);
         assert_eq!(f1.nan_slot, Some(2));
         assert!(f1.error);
         assert_eq!(f1.error_slot, Some(0));

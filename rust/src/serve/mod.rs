@@ -49,11 +49,23 @@
 //! base weights under a bounded restart budget. The [`fault`] module's
 //! deterministic injection harness (`SHEARS_FAULT`) pins every one of
 //! these paths in `rust/tests/serve_faults.rs`.
+//!
+//! Serving is **overload-adaptive**: the async server's [`brownout`]
+//! controller watches EWMA step latency, queue depth, and the
+//! deadline-miss rate, and under pressure binds opted-in admissions to
+//! a cheaper *prefix sub-adapter* ([`AdapterBinding::prefix`] — the
+//! NLS search space is prefix-nested, so rank truncation is itself a
+//! legitimate sub-adapter) before it ever sheds work; past the
+//! admissible horizon it rejects explicitly
+//! ([`RejectReason::Overloaded`]), never silently
+//! (`rust/tests/serve_overload.rs`).
 
+pub mod brownout;
 pub mod fault;
 pub mod registry;
 pub mod server;
 
+pub use brownout::{BrownoutController, BrownoutOpts, BrownoutState, BrownoutThresholds};
 pub use fault::{FaultKind, FaultPlan, ServeFault};
 pub use registry::{binding_from_store, AdapterId, AdapterRegistry};
 pub use server::{RejectReason, ServeServer, ServerOpts, StreamHandle, Submit, SubmitHandle};
@@ -100,6 +112,15 @@ pub struct GenRequest {
     /// is actively cancelled (fault kind `wall-clock-exceeded`),
     /// freeing its KV slot for the next request. `None` = unbounded.
     pub max_wall: Option<Duration>,
+    /// Whether this request may be served a cheaper **prefix
+    /// sub-adapter** while the server is browning out (see
+    /// [`brownout::BrownoutOpts`]): under `Degraded`/`Shedding` an
+    /// opted-in admission is bound to
+    /// `AdapterBinding::prefix(fraction)` instead of risking its
+    /// deadline. The response reports what was served
+    /// ([`GenResponse::degraded`] + [`GenResponse::rank_fraction`]).
+    /// `None` defers to `ServerOpts::brownout.default_allow_degraded`.
+    pub allow_degraded: Option<bool>,
 }
 
 impl GenRequest {
@@ -111,6 +132,7 @@ impl GenRequest {
             priority: 0,
             adapter: None,
             max_wall: None,
+            allow_degraded: None,
         }
     }
 
@@ -135,6 +157,13 @@ impl GenRequest {
         self.max_wall = Some(Duration::from_millis(ms));
         self
     }
+
+    /// Opt in to (or out of) brownout degradation (see
+    /// [`GenRequest::allow_degraded`]).
+    pub fn with_allow_degraded(mut self, allow: bool) -> GenRequest {
+        self.allow_degraded = Some(allow);
+        self
+    }
 }
 
 /// Completed generation.
@@ -155,6 +184,15 @@ pub struct GenResponse {
     /// The prompt exceeded the context window and was cut to `seq_len−1`
     /// tokens before decoding (no silent truncation).
     pub prompt_truncated: bool,
+    /// Served under a brownout **prefix sub-adapter** instead of the
+    /// full binding (the request opted in via
+    /// [`GenRequest::allow_degraded`] while the controller was past
+    /// `Normal`). Never silently: degraded responses always say so.
+    pub degraded: bool,
+    /// Fraction of the adapter's active rank actually served —
+    /// `1.0` for non-degraded responses, the prefix sub-binding's
+    /// [`AdapterBinding::rank_fraction`] otherwise.
+    pub rank_fraction: f32,
     /// `Some` when the request ended **abnormally** — quarantined by a
     /// fault, cancelled past a deadline/wall budget, or aborted —
     /// with the attribution record (request id, slot, fault kind).
@@ -210,6 +248,21 @@ pub struct ServeMetrics {
     /// suspect KV columns rebuilt via recovery re-prefill after a
     /// failed batched step (the slot survived and kept decoding)
     pub quarantined: u64,
+    /// requests admitted under a brownout prefix sub-adapter
+    pub degraded: u64,
+    /// submissions rejected `Overloaded` by brownout shedding — a
+    /// third bucket disjoint from `requests` and `rejected`, so
+    /// `requests + rejected + shed` reconciles with submissions
+    pub shed: u64,
+    /// brownout rung at snapshot: 0 normal, 1 degraded, 2 shedding
+    /// (async server only; see [`BrownoutState::gauge`])
+    pub brownout_state: u64,
+    /// brownout state-machine transitions since spawn
+    pub brownout_transitions: u64,
+    /// cumulative seconds the controller has spent in `Degraded`
+    pub brownout_degraded_secs: f64,
+    /// cumulative seconds the controller has spent in `Shedding`
+    pub brownout_shedding_secs: f64,
 }
 
 /// Greedy pick over one logits row. Ties resolve to the **highest**
@@ -283,6 +336,9 @@ struct Slot {
     /// tenant binding this slot decodes under (`None` = bare base);
     /// holding the `Arc` marks the adapter in-flight to the registry
     adapter: Option<Arc<AdapterBinding>>,
+    /// `Some(rank_fraction)` when `adapter` is a brownout prefix
+    /// sub-binding rather than the request's full resolved binding
+    degraded: Option<f32>,
 }
 
 /// Build the response for a retiring slot. Latency spans submission →
@@ -302,6 +358,8 @@ fn complete(sl: Slot) -> GenResponse {
         deadline_missed: sl.deadline.is_some_and(|d| now > d),
         admission_seq: sl.admission_seq,
         prompt_truncated: sl.truncated,
+        degraded: sl.degraded.is_some(),
+        rank_fraction: sl.degraded.unwrap_or(1.0),
         fault: None,
         tokens: sl.toks,
     }
@@ -338,6 +396,10 @@ pub struct Admission<'r> {
     pub wall_deadline: Option<Instant>,
     /// tenant binding (`None` = the session default)
     pub adapter: Option<Arc<AdapterBinding>>,
+    /// `Some(rank_fraction)` when `adapter` is a brownout prefix
+    /// sub-binding (the async server derives it at admission while
+    /// the controller is past `Normal`; `None` on the batch path)
+    pub degraded: Option<f32>,
 }
 
 /// The resumable core of KV-cached serving: a decode binding plus the
@@ -370,6 +432,7 @@ pub struct StepEngine<'d> {
     faults: u64,
     cancelled: u64,
     quarantined: u64,
+    degraded_admissions: u64,
     /// deterministic injection schedule; empty = one branch per step
     fault: FaultPlan,
     // reused step buffers: warm admit/step cycles allocate nothing here
@@ -405,6 +468,7 @@ impl<'d> StepEngine<'d> {
             faults: 0,
             cancelled: 0,
             quarantined: 0,
+            degraded_admissions: 0,
             fault: FaultPlan::none(),
             row_logits: vec![0.0; v],
             step_logits: vec![0.0; n * v],
@@ -441,6 +505,14 @@ impl<'d> StepEngine<'d> {
         self.decode_steps
     }
 
+    /// The session's construction-time binding — what an admission
+    /// naming no tenant decodes under, and therefore the parent the
+    /// brownout controller derives prefix sub-bindings from for such
+    /// requests.
+    pub fn default_adapter(&self) -> Option<&Arc<AdapterBinding>> {
+        self.session.default_adapter()
+    }
+
     /// Admit one request into the first free slot: clamp the prompt,
     /// prefill that slot's cache column under the admission's tenant
     /// binding (`None` = the session default resolved at bind time),
@@ -459,6 +531,9 @@ impl<'d> StepEngine<'d> {
         let admitted = toks.len();
         if truncated {
             self.truncated_prompts += 1;
+        }
+        if adm.degraded.is_some() {
+            self.degraded_admissions += 1;
         }
         self.session
             .prefill_as(&mut self.st, slot, &toks, adapter.as_deref(), &mut self.row_logits)?;
@@ -481,6 +556,7 @@ impl<'d> StepEngine<'d> {
                 first_token_at: None,
                 admission_seq,
                 adapter,
+                degraded: adm.degraded,
             };
             return Ok(Some(fault_complete(
                 sl,
@@ -506,6 +582,7 @@ impl<'d> StepEngine<'d> {
             first_token_at,
             admission_seq,
             adapter,
+            degraded: adm.degraded,
         };
         if finished(next, self.eos, sl.toks.len() - admitted, adm.max_new, sl.toks.len(), self.s) {
             return Ok(Some(complete(sl)));
@@ -557,6 +634,27 @@ impl<'d> StepEngine<'d> {
             let f = self.fault.fire();
             if f.delay_ms > 0 {
                 std::thread::sleep(Duration::from_millis(f.delay_ms));
+            }
+            if f.rank_delay_us > 0 {
+                // rank-proportional latency: emulate compute that scales
+                // with the Σ of active slots' bound adapter ranks, so
+                // brownout drills can prove prefix degradation buys
+                // deterministic wall-clock headroom
+                // a slot with no explicit binding decodes on the
+                // session default adapter — charge that rank, so only
+                // a truly adapter-less engine is free
+                let units: u64 = self
+                    .step_adapters
+                    .iter()
+                    .map(|a| {
+                        a.as_ref()
+                            .or(self.session.default_adapter())
+                            .map_or(0, |b| b.active_rank() as u64)
+                    })
+                    .sum();
+                if units > 0 {
+                    std::thread::sleep(Duration::from_micros(f.rank_delay_us * units));
+                }
             }
             if f.panic {
                 panic!("injected step panic (attempt {})", f.attempt);
@@ -784,6 +882,7 @@ impl<'d> StepEngine<'d> {
         m.faults = self.faults;
         m.cancelled = self.cancelled;
         m.quarantined = self.quarantined;
+        m.degraded = self.degraded_admissions;
         m.mean_batch_occupancy = if self.decode_steps > 0 {
             self.occupancy_sum as f64 / self.decode_steps as f64
         } else {
@@ -1000,6 +1099,7 @@ impl<'rt> Decoder<'rt> {
                     deadline: r.deadline.and_then(|d| start_all.checked_add(d)),
                     wall_deadline: r.max_wall.and_then(|d| start_all.checked_add(d)),
                     adapter,
+                    degraded: None,
                 };
                 if let Some(resp) = engine.admit(adm, &mut sink)? {
                     responses[id as usize] = Some(resp);
@@ -1075,6 +1175,7 @@ impl<'rt> Decoder<'rt> {
                         first_token_at: None,
                         admission_seq: admissions,
                         adapter: None,
+                        degraded: None,
                     });
                     admissions += 1;
                 }

@@ -18,7 +18,7 @@ use crate::model::{ModelConfig, ParamStore};
 use crate::ops::model::{AdapterBinding, NamedTensors};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 
 /// Tenant adapter identifier (request-visible).
 pub type AdapterId = String;
@@ -39,6 +39,14 @@ pub struct AdapterRegistry {
     /// resident-bytes ceiling; `0` = unlimited
     budget: usize,
     clock: u64,
+    /// Brownout prefix sub-bindings, keyed by the parent binding's
+    /// address plus the kept fraction in permille. Values pair a
+    /// `Weak` on the parent (validated by `Arc::ptr_eq` on hit, so a
+    /// reused allocation can never serve another binding's prefix)
+    /// with the derived sub-binding. Hits are a map lookup plus an
+    /// `Arc` clone — no allocation, which keeps degraded warm
+    /// admission inside the zero-alloc envelope.
+    prefixes: HashMap<(usize, u32), (Weak<AdapterBinding>, Arc<AdapterBinding>)>,
 }
 
 impl AdapterRegistry {
@@ -49,6 +57,7 @@ impl AdapterRegistry {
             default_: None,
             budget: budget_bytes,
             clock: 0,
+            prefixes: HashMap::new(),
         }
     }
 
@@ -159,6 +168,7 @@ impl AdapterRegistry {
             id.to_string(),
             Entry { binding: Arc::new(binding), bytes, last_used },
         );
+        self.prune_prefixes();
         Ok(())
     }
 
@@ -176,6 +186,7 @@ impl AdapterRegistry {
              as default) — cannot deregister"
         );
         self.entries.remove(id);
+        self.prune_prefixes();
         Ok(())
     }
 
@@ -227,6 +238,40 @@ impl AdapterRegistry {
     /// The pinned default, if any.
     pub fn default_binding(&self) -> Option<&Arc<AdapterBinding>> {
         self.default_.as_ref()
+    }
+
+    /// The cached prefix sub-binding of `parent` at `fraction`
+    /// (see [`AdapterBinding::prefix`]) — derived once per
+    /// `(parent, fraction)` pair, so warm degraded admission costs a
+    /// map hit plus an `Arc` clone. Fractions are bucketed to
+    /// permille; a parent that was dropped (evicted, hot-swapped) and
+    /// whose allocation got reused fails the `ptr_eq` check and is
+    /// re-derived rather than served stale.
+    pub fn prefix_of(&mut self, parent: &Arc<AdapterBinding>, fraction: f32) -> Arc<AdapterBinding> {
+        let f = if fraction.is_finite() { fraction.clamp(0.0, 1.0) } else { 1.0 };
+        let key = (Arc::as_ptr(parent) as usize, (f * 1000.0).round() as u32);
+        if let Some((w, sub)) = self.prefixes.get(&key) {
+            if let Some(live) = w.upgrade() {
+                if Arc::ptr_eq(&live, parent) {
+                    return sub.clone();
+                }
+            }
+        }
+        let sub = Arc::new(parent.prefix(f));
+        self.prefixes.insert(key, (Arc::downgrade(parent), sub.clone()));
+        sub
+    }
+
+    /// Drop prefix-cache entries whose parent binding is gone — called
+    /// on the cold registry paths (register/deregister) so the cache
+    /// tracks the resident set instead of growing monotonically.
+    fn prune_prefixes(&mut self) {
+        self.prefixes.retain(|_, (w, _)| w.upgrade().is_some());
+    }
+
+    /// Resident prefix-cache entries (tests/metrics).
+    pub fn prefix_cache_len(&self) -> usize {
+        self.prefixes.len()
     }
 
     /// Change the byte budget (`0` = unlimited), evicting idle LRU
@@ -371,6 +416,37 @@ mod tests {
         assert!(r.resolve(None).unwrap().is_some());
         r.pin_default(None).unwrap();
         assert!(r.resolve(None).unwrap().is_none());
+    }
+
+    #[test]
+    fn prefix_cache_hits_return_the_same_arc() {
+        let mut r = reg_with(0, &[("a", 100)]);
+        let parent = r.resolve(Some("a")).unwrap().unwrap();
+        let s1 = r.prefix_of(&parent, 0.25);
+        let s2 = r.prefix_of(&parent, 0.25);
+        assert!(Arc::ptr_eq(&s1, &s2), "second lookup must be a cache hit");
+        assert_eq!(r.prefix_cache_len(), 1);
+        // a different fraction is a different rung
+        let s3 = r.prefix_of(&parent, 0.5);
+        assert!(!Arc::ptr_eq(&s1, &s3));
+        assert_eq!(r.prefix_cache_len(), 2);
+    }
+
+    #[test]
+    fn prefix_cache_is_pruned_with_its_parent() {
+        let mut r = reg_with(0, &[("a", 100)]);
+        {
+            let parent = r.resolve(Some("a")).unwrap().unwrap();
+            r.prefix_of(&parent, 0.25);
+            assert_eq!(r.prefix_cache_len(), 1);
+        }
+        // hot-swap drops the old parent; registry ops prune its prefixes
+        r.register("a", AdapterBinding::synthetic(120)).unwrap();
+        assert_eq!(r.prefix_cache_len(), 0);
+        let parent = r.resolve(Some("a")).unwrap().unwrap();
+        let sub = r.prefix_of(&parent, 0.25);
+        let again = r.prefix_of(&parent, 0.25);
+        assert!(Arc::ptr_eq(&sub, &again));
     }
 
     #[test]

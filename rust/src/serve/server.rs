@@ -37,10 +37,23 @@
 //! before the stream ended) — each frees its KV slot immediately.
 //! Fault drills arm [`ServerOpts::fault`] or `SHEARS_FAULT`
 //! (`serve::fault` has the grammar).
+//!
+//! The loop is also **overload-adaptive** when
+//! [`ServerOpts::brownout`] is enabled: a [`BrownoutController`] in
+//! the loop state (it survives supervised restarts — overload does not
+//! reset because the engine was rebuilt) is fed every successful
+//! step's wall time and every clean completion, evaluated once per
+//! iteration, and its verdicts published into submit-side atomics.
+//! Past `Normal`, opted-in admissions are bound to a cached **prefix
+//! sub-adapter** (`AdapterRegistry::prefix_of`); in `Shedding`,
+//! [`SubmitHandle::submit`] bounces submissions past the admissible
+//! horizon with [`RejectReason::Overloaded`], counted in
+//! [`ServeMetrics::shed`] so accepted + rejected + shed always
+//! reconciles with submissions.
 
 use super::{
-    AdapterId, AdapterRegistry, Admission, Decoder, FaultKind, FaultPlan, GenRequest, GenResponse,
-    ServeFault, ServeMetrics, StepEngine,
+    AdapterId, AdapterRegistry, Admission, BrownoutController, BrownoutOpts, Decoder, FaultKind,
+    FaultPlan, GenRequest, GenResponse, ServeFault, ServeMetrics, StepEngine,
 };
 use crate::model::ParamStore;
 use crate::ops::model::AdapterBinding;
@@ -51,7 +64,7 @@ use std::cell::Cell;
 use std::cmp::{Ordering, Reverse};
 use std::collections::{BinaryHeap, HashMap};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AOrd};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, Once};
 use std::time::{Duration, Instant};
 
@@ -89,6 +102,16 @@ pub struct ServerOpts {
     /// branch per step. When empty, `SHEARS_FAULT` is consulted at
     /// spawn so drills work against an unmodified binary.
     pub fault: FaultPlan,
+    /// overload brownout controller (disabled by default — armed, it
+    /// degrades opted-in admissions to prefix sub-adapters and sheds
+    /// `Overloaded` past the admissible horizon; see
+    /// [`super::brownout`])
+    pub brownout: BrownoutOpts,
+    /// bound on every control-plane round-trip — the spawn readiness
+    /// handshake, `metrics()`, `register_adapter()` — so a wedged
+    /// runtime thread yields a clear timeout error instead of hanging
+    /// the caller forever
+    pub control_timeout_ms: u64,
 }
 
 impl Default for ServerOpts {
@@ -105,6 +128,8 @@ impl Default for ServerOpts {
             restart_budget: 3,
             restart_backoff_ms: 20,
             fault: FaultPlan::none(),
+            brownout: BrownoutOpts::default(),
+            control_timeout_ms: 60_000,
         }
     }
 }
@@ -134,6 +159,11 @@ pub enum RejectReason {
     /// the request names an adapter id that is not registered —
     /// register it (or fix the id) and resubmit
     UnknownAdapter,
+    /// the brownout controller is `Shedding` and the queue is past the
+    /// admissible horizon — the server is overloaded; back off and
+    /// retry (counted in [`ServeMetrics::shed`], never silently
+    /// dropped)
+    Overloaded,
 }
 
 // ------------------------------------------------------------ streams
@@ -259,6 +289,38 @@ impl StreamHandle {
             g = self.shared.cv.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
+
+    /// Bounded [`StreamHandle::wait`]: block at most `timeout` for the
+    /// request to complete. `Some(result)` once finished (same error
+    /// mapping as `wait`); `None` when the budget expires with the
+    /// request still running — the handle stays usable: keep
+    /// streaming, call again, or [`StreamHandle::cancel`].
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Result<GenResponse>> {
+        let deadline = Instant::now().checked_add(timeout)?;
+        let mut g = self.shared.lock();
+        loop {
+            if let Some(done) = &g.done {
+                let id = self.id;
+                return Some(done.clone().map_err(|e| {
+                    if e.starts_with("request ") {
+                        anyhow::anyhow!("{e}")
+                    } else {
+                        anyhow::anyhow!("request {id}: {e}")
+                    }
+                }));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (ng, _timed_out) = self
+                .shared
+                .cv
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            g = ng;
+        }
+    }
 }
 
 // ------------------------------------------------------ pending queue
@@ -349,6 +411,18 @@ struct Shared {
     /// (sizes stream buffers so token delivery never reallocates)
     window: AtomicUsize,
     queue_cap: usize,
+    /// submissions bounced [`RejectReason::Overloaded`] by brownout
+    /// shedding — disjoint from `rejected` so the three buckets
+    /// (accepted, rejected, shed) reconcile with total submissions
+    shed: AtomicU64,
+    /// brownout rung published by the runtime thread after each
+    /// controller evaluation (`BrownoutState::gauge` encoding)
+    brownout_state: AtomicU64,
+    /// admissible queue depth while `Shedding`; `usize::MAX` = not
+    /// shedding (the submit-side check is then never taken)
+    admissible: AtomicUsize,
+    /// control-plane round-trip bound (see `ServerOpts::control_timeout_ms`)
+    control_timeout: Duration,
     /// written by the runtime thread as it exits, so `metrics()` and
     /// `shutdown()` still return the final numbers after the server
     /// took itself down (restart budget exhausted) and the channel died
@@ -392,6 +466,15 @@ impl SubmitHandle {
         if !self.shared.accepting.load(AOrd::Acquire) {
             self.shared.rejected.fetch_add(1, AOrd::Relaxed);
             return Submit::Rejected(RejectReason::ShuttingDown);
+        }
+        // brownout shedding: while the controller is `Shedding` the
+        // runtime thread publishes a finite admissible depth; past it,
+        // bounce explicitly (`Overloaded`) — overload never silently
+        // drops work. Counted apart from `rejected` so submissions
+        // reconcile: accepted + rejected + shed.
+        if self.shared.depth.load(AOrd::Acquire) >= self.shared.admissible.load(AOrd::Acquire) {
+            self.shared.shed.fetch_add(1, AOrd::Relaxed);
+            return Submit::Rejected(RejectReason::Overloaded);
         }
         // resolve the tenant before reserving a queue token: an
         // unknown id rejects without consuming capacity. The binding
@@ -447,27 +530,33 @@ impl SubmitHandle {
         Submit::Accepted(StreamHandle { shared: stream, read: 0, id })
     }
 
-    /// Snapshot the server's cumulative metrics. Blocks for the reply;
-    /// after the runtime thread exited (shutdown, or it took itself
-    /// down when the restart budget ran out) this returns its final
-    /// numbers instead of erroring.
+    /// Snapshot the server's cumulative metrics. Blocks for the reply
+    /// at most `ServerOpts::control_timeout_ms` (a wedged runtime
+    /// thread errors instead of hanging the caller); after the runtime
+    /// thread exited (shutdown, or it took itself down when the
+    /// restart budget ran out) this returns its final numbers instead
+    /// of erroring.
     pub fn metrics(&self) -> Result<ServeMetrics> {
         let (tx, rx) = channel();
         if self.tx.send(Msg::Metrics(tx)).is_err() {
             return final_metrics(&self.shared);
         }
-        match rx.recv() {
+        match rx.recv_timeout(self.shared.control_timeout) {
             Ok(m) => Ok(m),
-            Err(_) => final_metrics(&self.shared),
+            Err(RecvTimeoutError::Disconnected) => final_metrics(&self.shared),
+            Err(RecvTimeoutError::Timeout) => anyhow::bail!(
+                "serve server unresponsive: metrics not answered within {:?}",
+                self.shared.control_timeout
+            ),
         }
     }
 
     /// Register (or hot-swap) tenant `id` as a sub-adapter of the
     /// server's resident super-network LoRA weights: `rank_mask`
     /// selects its active heads. The binding is built on the runtime
-    /// thread (it owns the session); this blocks for the outcome.
-    /// Slots already decoding under a swapped-out binding keep it
-    /// until they retire.
+    /// thread (it owns the session); this blocks for the outcome, at
+    /// most `ServerOpts::control_timeout_ms`. Slots already decoding
+    /// under a swapped-out binding keep it until they retire.
     pub fn register_adapter(&self, id: &str, rank_mask: &HostTensor) -> Result<()> {
         let (tx, rx) = channel();
         self.tx
@@ -478,9 +567,16 @@ impl SubmitHandle {
             })
             .ok()
             .context("serve server gone")?;
-        rx.recv()
-            .context("serve server dropped register reply")?
-            .map_err(|e| anyhow::anyhow!("register adapter '{id}': {e}"))
+        match rx.recv_timeout(self.shared.control_timeout) {
+            Ok(r) => r.map_err(|e| anyhow::anyhow!("register adapter '{id}': {e}")),
+            Err(RecvTimeoutError::Disconnected) => {
+                anyhow::bail!("serve server dropped register reply for adapter '{id}'")
+            }
+            Err(RecvTimeoutError::Timeout) => anyhow::bail!(
+                "serve server unresponsive: register adapter '{id}' not acknowledged within {:?}",
+                self.shared.control_timeout
+            ),
+        }
     }
 
     /// Remove tenant `id`; errors while queued requests or active
@@ -530,6 +626,7 @@ impl ServeServer {
         rank_mask: Option<HostTensor>,
     ) -> Result<ServeServer> {
         let (tx, rx) = channel::<Msg>();
+        let control_timeout = Duration::from_millis(opts.control_timeout_ms.max(1));
         let shared = Arc::new(Shared {
             depth: AtomicUsize::new(0),
             max_depth: AtomicU64::new(0),
@@ -539,6 +636,10 @@ impl ServeServer {
             seq: AtomicU64::new(0),
             window: AtomicUsize::new(0),
             queue_cap: opts.queue_cap,
+            shed: AtomicU64::new(0),
+            brownout_state: AtomicU64::new(0),
+            admissible: AtomicUsize::new(usize::MAX),
+            control_timeout,
             final_metrics: Mutex::new(None),
         });
         let (ready_tx, ready_rx) = channel::<std::result::Result<(), String>>();
@@ -549,15 +650,24 @@ impl ServeServer {
             .name("shears-serve-server".into())
             .spawn(move || server_main(rx, opts, stores, rank_mask, shared_t, registry_t, ready_tx))
             .context("spawn serve-server thread")?;
-        match ready_rx.recv() {
+        match ready_rx.recv_timeout(control_timeout) {
             Ok(Ok(())) => {}
             Ok(Err(e)) => {
                 let _ = join.join();
                 anyhow::bail!("serve server failed to start: {e}");
             }
-            Err(_) => {
+            Err(RecvTimeoutError::Disconnected) => {
                 let _ = join.join();
                 anyhow::bail!("serve server died during startup");
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // deliberately NOT joined: a wedged startup would hang
+                // this caller too — the thread is left to finish (or
+                // wedge) on its own, detached behind the error
+                anyhow::bail!(
+                    "serve server unresponsive: not ready within {control_timeout:?} \
+                     (backend build or weight upload wedged?)"
+                );
             }
         }
         Ok(ServeServer { handle: SubmitHandle { tx, shared, registry }, join: Some(join) })
@@ -719,6 +829,9 @@ struct LoopState {
     /// `fold_metrics` *sets* fields, so pre-restart work would vanish
     /// from snapshots without this
     carried: ServeMetrics,
+    /// overload state machine — here, not on the engine, so supervised
+    /// restarts don't reset it mid-overload
+    brownout: BrownoutController,
 }
 
 fn record_done(state: &mut LoopState, resp: &GenResponse) {
@@ -734,6 +847,9 @@ fn record_done(state: &mut LoopState, resp: &GenResponse) {
     if resp.deadline_missed {
         state.misses += 1;
     }
+    // clean completions feed the controller's miss ring + per-request
+    // cost model (no-op unless brownout is enabled)
+    state.brownout.observe_completion(resp.new_tokens, resp.deadline_missed);
 }
 
 /// Sum engine-owned counters from `c` into `into` (the occupancy mean
@@ -755,6 +871,7 @@ fn merge_counters(into: &mut ServeMetrics, c: &ServeMetrics) {
     into.faults += c.faults;
     into.cancelled += c.cancelled;
     into.quarantined += c.quarantined;
+    into.degraded += c.degraded;
 }
 
 /// Deliver retired responses to their streams: clean completions
@@ -841,6 +958,11 @@ fn snapshot(
     m.max_queue_depth = shared.max_depth.load(AOrd::Relaxed);
     m.rejected = shared.rejected.load(AOrd::Relaxed);
     m.deadline_misses = state.misses;
+    m.shed = shared.shed.load(AOrd::Relaxed);
+    m.brownout_state = state.brownout.state().gauge();
+    m.brownout_transitions = state.brownout.transitions();
+    m.brownout_degraded_secs = state.brownout.degraded_secs();
+    m.brownout_shedding_secs = state.brownout.shedding_secs();
     // percentiles over the bounded recent-completion window (exact
     // full-history until METRIC_WINDOW requests have completed)
     let mut lat = state.lat.clone();
@@ -958,6 +1080,7 @@ fn server_main(
         restarts: 0,
         queue_cancelled: 0,
         carried: ServeMetrics::default(),
+        brownout: BrownoutController::new(opts.brownout.clone()),
     };
     let mut streams: HashMap<u64, Arc<StreamShared>> = HashMap::new();
     let mut retired: Vec<(u64, GenResponse)> = Vec::with_capacity(engine.slots());
@@ -1046,7 +1169,7 @@ fn server_main(
             while engine.has_free_slot() {
                 let Some(Reverse(q)) = state.pending.pop() else { break };
                 shared.depth.fetch_sub(1, AOrd::AcqRel);
-                let Queued { req, id, submitted, deadline, stream, adapter } = q;
+                let Queued { req, id, submitted, deadline, stream, mut adapter } = q;
                 let now = Instant::now();
                 let wall_deadline = req.max_wall.and_then(|d| submitted.checked_add(d));
                 // queue-side preemption: don't spend a prefill on a
@@ -1069,6 +1192,26 @@ fn server_main(
                     stream.finish(Err(f.to_string()));
                     continue;
                 }
+                // brownout degradation: past `Normal`, an opted-in
+                // admission swaps its resolved binding for the cached
+                // prefix sub-binding of the same parent (warm lookups
+                // are a map hit + Arc clone — allocation-free). Only a
+                // genuinely cheaper sub-binding counts as degraded.
+                let mut degraded = None;
+                if state.brownout.degrading()
+                    && req.allow_degraded.unwrap_or(state.brownout.default_allow_degraded())
+                {
+                    let parent =
+                        adapter.clone().or_else(|| engine.default_adapter().cloned());
+                    if let Some(parent) = &parent {
+                        let sub =
+                            lock_registry(&registry).prefix_of(parent, state.brownout.fraction());
+                        if sub.active_rank() < parent.active_rank() {
+                            degraded = Some(sub.rank_fraction());
+                            adapter = Some(sub);
+                        }
+                    }
+                }
                 let adm = Admission {
                     id,
                     prompt: &req.prompt,
@@ -1077,6 +1220,7 @@ fn server_main(
                     deadline,
                     wall_deadline,
                     adapter,
+                    degraded,
                 };
                 let mut on_token = |_id: u64, t: i32| stream.push_token(t);
                 match supervised(|| engine.admit(adm, &mut on_token)) {
@@ -1117,6 +1261,10 @@ fn server_main(
 
         // ---- 4. one batched decode step over the active slots
         if !budget_exhausted && engine.active_slots() > 0 {
+            // the step clock feeds the controller's EWMA; the timing
+            // calls are skipped entirely with brownout off, so the
+            // controller-off hot path is untouched
+            let step_started = state.brownout.enabled().then(Instant::now);
             let step_res = supervised(|| {
                 let mut on_token = |id: u64, t: i32| {
                     if let Some(s) = streams.get(&id) {
@@ -1126,7 +1274,12 @@ fn server_main(
                 engine.step(&mut on_token, &mut retired)
             });
             match step_res {
-                Ok(Ok(())) => deliver(&mut retired, &mut state, &mut streams),
+                Ok(Ok(())) => {
+                    if let Some(t0) = step_started {
+                        state.brownout.observe_step(t0.elapsed());
+                    }
+                    deliver(&mut retired, &mut state, &mut streams)
+                }
                 Ok(Err(e)) => {
                     // step() quarantine-recovers per-slot failures
                     // internally, so an error escaping it is
@@ -1159,6 +1312,18 @@ fn server_main(
                     );
                 }
             }
+        }
+
+        // ---- 5. brownout: one controller evaluation per loop
+        // iteration, verdicts published into the submit-side atomics.
+        // In `Normal` this is observe-only — admission, scheduling,
+        // and tokens are bit-identical to a controller-off run.
+        if state.brownout.enabled() {
+            let queue_depth = shared.depth.load(AOrd::Acquire);
+            let st = state.brownout.evaluate(Instant::now(), queue_depth);
+            shared.brownout_state.store(st.gauge(), AOrd::Release);
+            let admissible = state.brownout.admissible_depth(shared.queue_cap);
+            shared.admissible.store(admissible, AOrd::Release);
         }
 
         if budget_exhausted {
@@ -1274,11 +1439,29 @@ mod tests {
             deadline_missed: false,
             admission_seq: 0,
             prompt_truncated: false,
+            degraded: false,
+            rank_fraction: 1.0,
             fault: None,
         }));
         assert_eq!(h.next_token(), None, "done and fully consumed");
         let resp = h.wait().unwrap();
         assert_eq!(resp.tokens, vec![1, 11, 12]);
+    }
+
+    #[test]
+    fn wait_timeout_returns_none_until_finished() {
+        let shared = Arc::new(StreamShared::new(2));
+        let mut h = StreamHandle { shared: shared.clone(), read: 0, id: 3 };
+        assert!(
+            h.wait_timeout(Duration::from_millis(5)).is_none(),
+            "unfinished stream times out with None, not a hang"
+        );
+        shared.finish(Err("wedged".into()));
+        let r = h.wait_timeout(Duration::from_millis(5)).expect("finished now");
+        let s = format!("{:#}", r.unwrap_err());
+        assert!(s.contains("request 3"), "wait_timeout keeps attribution: {s}");
+        // completion latched: a second bounded wait returns immediately
+        assert!(h.wait_timeout(Duration::from_millis(0)).is_some());
     }
 
     #[test]
@@ -1347,6 +1530,7 @@ mod tests {
             prefills: 5,
             cancelled: 2,
             quarantined: 7,
+            degraded: 4,
             ..Default::default()
         };
         merge_counters(&mut a, &b);
@@ -1355,6 +1539,7 @@ mod tests {
         assert_eq!(a.faults, 1);
         assert_eq!(a.cancelled, 2);
         assert_eq!(a.quarantined, 7);
+        assert_eq!(a.degraded, 4);
         assert!((a.mean_batch_occupancy - 3.5).abs() < 1e-12, "10×2 + 30×4 over 40");
     }
 }

@@ -236,6 +236,7 @@ fn plain_admission(id: u64, prompt: &[i32], now: std::time::Instant) -> shears::
         deadline: None,
         wall_deadline: None,
         adapter: None,
+        degraded: None,
     }
 }
 
@@ -420,6 +421,127 @@ fn abort_frees_the_slot_and_keeps_survivors_bit_identical_and_zero_alloc() {
         return;
     }
     panic!("no probe seed kept both sequences alive through the abort schedule");
+}
+
+/// The overload-brownout hot path stays off the heap end to end: a
+/// warm `prefix_of` admission is a map hit plus an `Arc` bump, engine
+/// steps with a prefix-degraded slot in the batch (the strided rank-
+/// window matmul path) allocate nothing, and the controller's
+/// observe/evaluate cycle — the work phase 5 adds to every server loop
+/// iteration — never touches the heap once constructed.
+#[test]
+fn warm_degraded_steps_and_brownout_controller_are_zero_alloc() {
+    use shears::data::Vocab;
+    use shears::model::ParamStore;
+    use shears::nls::SearchSpace;
+    use shears::runtime::Runtime;
+    use shears::serve::{
+        Admission, AdapterRegistry, BrownoutController, BrownoutOpts, BrownoutThresholds,
+        FaultPlan, StepEngine,
+    };
+    use shears::train::ForwardSession;
+    use shears::util::rng::Rng;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    let _guard = serial();
+    linalg::set_num_threads(1);
+    let _ = (linalg::simd_enabled(), linalg::pool_enabled());
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config("tiny-llama").unwrap();
+    let vocab = Vocab::new(cfg.vocab);
+    let space = SearchSpace::from_config(cfg);
+    let mask = space.full_mask();
+
+    // controller observe/evaluate: warm the miss ring, then measure the
+    // full per-iteration cycle (model-independent, so outside the seed
+    // probe)
+    let opts = BrownoutOpts {
+        enabled: true,
+        degrade: BrownoutThresholds { queue_hi: 4, queue_lo: 1, ..BrownoutThresholds::UNREACHABLE },
+        ..BrownoutOpts::default()
+    };
+    let mut ctl = BrownoutController::new(opts);
+    for i in 0..80 {
+        ctl.observe_step(Duration::from_micros(300));
+        ctl.observe_completion(3, i % 7 == 0);
+        let _ = ctl.evaluate(Instant::now(), i % 9);
+    }
+    let (allocs, bytes, ()) = counted(|| {
+        for i in 0..20usize {
+            ctl.observe_step(Duration::from_micros(250));
+            ctl.observe_completion(2, i % 3 == 0);
+            let _ = ctl.evaluate(Instant::now(), i % 6);
+            let _ = ctl.admissible_depth(64);
+        }
+    });
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "brownout observe/evaluate cycle touched the heap"
+    );
+
+    for seed in [9u64, 23, 41, 57, 77, 101, 131] {
+        let mut rng = Rng::new(seed);
+        let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+        let adapters = ParamStore::init_adapters(cfg, &mut rng);
+        let session = ForwardSession::new(&rt, cfg, "forward_eval", &[&base, &adapters]).unwrap();
+        let dec = session.decoder(Some(&mask)).unwrap();
+        let st = session.decode_state(2);
+        let mut engine = StepEngine::new(dec, st, &vocab);
+        engine.set_fault_plan(FaultPlan::none().error_at(u64::MAX).nan_at(u64::MAX, 0));
+
+        // warm degraded admission: first prefix_of derives and caches;
+        // the repeat hits the cache without touching the heap
+        let parent = Arc::new(session.adapter_binding(&mask).unwrap());
+        let mut registry = AdapterRegistry::new(0);
+        let sub = registry.prefix_of(&parent, 0.5);
+        assert!(sub.active_rank() < parent.active_rank(), "prefix truncates ranks");
+        let (allocs, bytes, warm_sub) = counted(|| registry.prefix_of(&parent, 0.5));
+        assert!(Arc::ptr_eq(&warm_sub, &sub), "warm prefix_of re-serves the cached Arc");
+        assert_eq!((allocs, bytes), (0, 0), "warm prefix_of touched the heap (seed {seed})");
+
+        // one full-rank slot + one prefix-degraded slot share the batch:
+        // warm steps must stay off the heap on the strided path too
+        let mut sink = |_id: u64, _t: i32| {};
+        let mut retired = Vec::with_capacity(engine.slots());
+        let now = Instant::now();
+        let p1: Vec<i32> = (1..8).collect();
+        let p2: Vec<i32> = (4..12).collect();
+        let full = Admission { adapter: Some(parent.clone()), ..plain_admission(0, &p1, now) };
+        let degraded = Admission {
+            adapter: Some(sub.clone()),
+            degraded: Some(0.5),
+            ..plain_admission(1, &p2, now)
+        };
+        if engine.admit(full, &mut sink).unwrap().is_some()
+            || engine.admit(degraded, &mut sink).unwrap().is_some()
+        {
+            continue; // a sequence retired at prefill; try the next seed
+        }
+        for _ in 0..3 {
+            engine.step(&mut sink, &mut retired).unwrap();
+        }
+        if !retired.is_empty() || engine.active_slots() != 2 {
+            continue;
+        }
+        let (allocs, bytes, ()) = counted(|| {
+            for _ in 0..5 {
+                engine.step(&mut sink, &mut retired).unwrap();
+            }
+        });
+        if engine.active_slots() != 2 {
+            continue; // retirement mid-measurement shrank the batch shape
+        }
+        assert_eq!(
+            (allocs, bytes),
+            (0, 0),
+            "warm step with a prefix-degraded slot touched the heap (seed {seed})"
+        );
+        return;
+    }
+    panic!("no probe seed kept both sequences alive through the measured window");
 }
 
 #[test]

@@ -1,0 +1,155 @@
+//! Checkpoint durability drills: `ParamStore::save` writes an atomic,
+//! footer-verified file; `load` must turn every corruption in this
+//! matrix into a clean `corrupt checkpoint`-style error — never a
+//! panic, and never a partially-filled store (load returns `Result`,
+//! so a failed parse yields no store at all).
+//!
+//! File layout under test:
+//!   payload = "SHRS" [count u64 le] (name, tensor) records
+//!   footer  = [payload_len u64 le] [fnv1a64 u64 le] "SHF1"
+//! Footer-less files (the pre-footer format) must still load.
+
+use shears::model::ParamStore;
+use shears::tensor::HostTensor;
+use std::path::PathBuf;
+
+const FOOTER_LEN: usize = 8 + 8 + 4;
+
+fn store() -> ParamStore {
+    let mut s = ParamStore::new();
+    s.insert(
+        "embed",
+        HostTensor::from_f32(&[4, 3], (0..12).map(|i| i as f32 * 0.25 - 1.0).collect()),
+    );
+    s.insert("lora_a.q", HostTensor::from_f32(&[2, 3], vec![0.5, -0.5, 1.5, 0.0, 2.0, -1.0]));
+    s.insert("norm.g", HostTensor::ones(&[3]));
+    s
+}
+
+/// Save the fixture store once and return its on-disk bytes, plus a
+/// scratch path (same dir) for writing corrupted variants.
+fn saved_bytes(case: &str) -> (Vec<u8>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("shears_ckpt_matrix_{case}"));
+    let _ = std::fs::create_dir_all(&dir);
+    let good = dir.join("good.bin");
+    store().save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+    assert!(bytes.len() > FOOTER_LEN, "fixture checkpoint is non-trivial");
+    (bytes, dir.join("variant.bin"))
+}
+
+fn load_err(path: &PathBuf, bytes: &[u8]) -> String {
+    std::fs::write(path, bytes).unwrap();
+    let err = ParamStore::load(path).expect_err("corrupted checkpoint must not load");
+    format!("{err:#}")
+}
+
+fn assert_same_as_fixture(re: &ParamStore) {
+    let orig = store();
+    assert_eq!(re.len(), orig.len());
+    for name in ["embed", "lora_a.q", "norm.g"] {
+        assert_eq!(re.get(name).unwrap(), orig.get(name).unwrap(), "{name}");
+    }
+}
+
+#[test]
+fn footered_roundtrip_and_legacy_compat() {
+    let (bytes, variant) = saved_bytes("roundtrip");
+    assert_eq!(&bytes[bytes.len() - 4..], b"SHF1", "save appends the trailer magic");
+
+    // the footer-equipped file loads and matches the source store
+    std::fs::write(&variant, &bytes).unwrap();
+    assert_same_as_fixture(&ParamStore::load(&variant).unwrap());
+
+    // stripping the footer reproduces the legacy format exactly — it
+    // must still load (old checkpoints remain readable)
+    let legacy = &bytes[..bytes.len() - FOOTER_LEN];
+    std::fs::write(&variant, legacy).unwrap();
+    assert_same_as_fixture(&ParamStore::load(&variant).unwrap());
+}
+
+#[test]
+fn bad_magic_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("magic");
+    // corrupt the header magic on the legacy form so the magic check
+    // (not the checksum) is what fires
+    let mut legacy = bytes[..bytes.len() - FOOTER_LEN].to_vec();
+    legacy[0] = b'X';
+    let e = load_err(&variant, &legacy);
+    assert!(e.contains("not a shears checkpoint"), "{e}");
+}
+
+#[test]
+fn overclaimed_record_count_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("count");
+    let mut legacy = bytes[..bytes.len() - FOOTER_LEN].to_vec();
+    let count = u64::from_le_bytes(legacy[4..12].try_into().unwrap());
+    legacy[4..12].copy_from_slice(&(count + 3).to_le_bytes());
+    let e = load_err(&variant, &legacy);
+    assert!(e.contains("corrupt checkpoint"), "{e}");
+    assert!(e.contains("truncated at record"), "{e}");
+}
+
+#[test]
+fn truncated_tensor_payload_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("truncate");
+    // cut into the last tensor's payload (drop the footer plus a bite
+    // of record bytes) — simulates a torn write without the footer
+    let cut = bytes.len() - FOOTER_LEN - 20;
+    let e = load_err(&variant, &bytes[..cut]);
+    assert!(e.contains("corrupt checkpoint"), "{e}");
+
+    // torn payload with the footer still attached: the footer's length
+    // claim no longer matches the file
+    let mut torn = bytes[..bytes.len() - FOOTER_LEN - 20].to_vec();
+    torn.extend_from_slice(&bytes[bytes.len() - FOOTER_LEN..]);
+    let e = load_err(&variant, &torn);
+    assert!(e.contains("footer claims"), "{e}");
+}
+
+#[test]
+fn flipped_checksum_byte_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("checksum");
+    // the stored checksum sits between payload_len and the trailer magic
+    let mut v = bytes.clone();
+    let i = v.len() - 12;
+    v[i] ^= 0xFF;
+    let e = load_err(&variant, &v);
+    assert!(e.contains("checksum mismatch"), "{e}");
+}
+
+#[test]
+fn flipped_payload_byte_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("bitflip");
+    let mut v = bytes.clone();
+    let mid = (v.len() - FOOTER_LEN) / 2;
+    v[mid] ^= 0x01;
+    let e = load_err(&variant, &v);
+    assert!(e.contains("checksum mismatch"), "{e}");
+}
+
+#[test]
+fn trailing_garbage_is_a_clean_error() {
+    let (bytes, variant) = saved_bytes("garbage");
+    // garbage after the footer hides the trailer magic, so the file
+    // parses as legacy — the strict trailing-bytes check catches it
+    let mut v = bytes.clone();
+    v.extend_from_slice(b"GARBAGE!");
+    let e = load_err(&variant, &v);
+    assert!(e.contains("trailing bytes"), "{e}");
+
+    // garbage appended to a legacy file is caught the same way
+    let mut legacy = bytes[..bytes.len() - FOOTER_LEN].to_vec();
+    legacy.extend_from_slice(&[0u8; 7]);
+    let e = load_err(&variant, &legacy);
+    assert!(e.contains("trailing bytes"), "{e}");
+}
+
+#[test]
+fn empty_and_tiny_files_are_clean_errors() {
+    let (_, variant) = saved_bytes("tiny");
+    let e = load_err(&variant, b"");
+    assert!(e.contains("corrupt checkpoint") || e.contains("truncated"), "{e}");
+    let e = load_err(&variant, b"SH");
+    assert!(e.contains("corrupt checkpoint") || e.contains("truncated"), "{e}");
+}

@@ -1,0 +1,512 @@
+//! Overload-adaptive serving drills, pinned with the deterministic
+//! fault harness (`serve::FaultPlan`'s `rankdelay` kind — a sleep
+//! proportional to the Σ of active slots' bound adapter ranks, so
+//! degradation buys wall-clock headroom the test can *prove* with
+//! sleep-only lower bounds, independent of machine speed):
+//!
+//! * an opted-in request admitted under `Degraded` binds the cached
+//!   prefix sub-adapter, meets a deadline the controller-off control
+//!   run provably misses, and reports `degraded` + its rank fraction;
+//! * the prefix sub-binding IS the nested NLS sub-adapter: degraded
+//!   tokens are bit-identical to serving the same super-adapter
+//!   weights under the search space's minimal rank mask;
+//! * below thresholds the armed controller is observe-only —
+//!   bit-identical to a controller-off run on both builtin archs;
+//! * under `Shedding`, excess submissions are rejected `Overloaded`
+//!   (never silently dropped) and `requests + rejected + shed`
+//!   reconciles with submissions;
+//! * when load subsides the controller re-promotes through the dwell
+//!   hysteresis and new admissions run full-rank again.
+//!
+//! The last test doubles as the CI overload drill: it arms no API
+//! plan, so whatever `SHEARS_FAULT` the workflow sets must still
+//! resolve every accepted stream with reconciling counters.
+
+use shears::model::{ModelConfig, ParamStore};
+use shears::runtime::Runtime;
+use shears::serve::{
+    BrownoutOpts, BrownoutThresholds, Decoder, FaultPlan, GenRequest, GenResponse, RejectReason,
+    ServeMetrics, ServeServer, ServerOpts, Submit,
+};
+use shears::tensor::HostTensor;
+use shears::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn init_stores(cfg: &ModelConfig, seed: u64) -> (ParamStore, ParamStore) {
+    let mut rng = Rng::new(seed);
+    let base = ParamStore::init_base(cfg, &mut rng, 0.05);
+    let mut adapters = ParamStore::init_adapters(cfg, &mut rng);
+    // nonzero B so the adapters (and their prefix truncations) actually
+    // shift the logits
+    for p in &cfg.adapter_params {
+        if p.name.starts_with("lora_b") {
+            rng.fill_normal(adapters.get_mut(&p.name).unwrap().f32s_mut(), 0.0, 0.05);
+        }
+    }
+    (base, adapters)
+}
+
+fn requests(cfg: &ModelConfig, n: usize, seed: u64, max_new: usize) -> Vec<GenRequest> {
+    use shears::data::{Task, Vocab};
+    let vocab = Vocab::new(cfg.vocab);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let ex = Task::Gsm8kSim.sample(&vocab, &mut rng, cfg.seq_len);
+            GenRequest::new(ex.tokens[..ex.answer_start].to_vec(), max_new)
+        })
+        .collect()
+}
+
+/// Requests plus their full-rank fault-free reference run (the batch
+/// path never consults `SHEARS_FAULT`, so controls stay clean under
+/// the CI drill environment).
+struct Fixture {
+    config: String,
+    reqs: Vec<GenRequest>,
+    control: Vec<GenResponse>,
+    stores: Vec<ParamStore>,
+    mask: HostTensor,
+}
+
+fn fixture(config: &str, n: usize, seed: u64, max_new: usize) -> Fixture {
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(config).unwrap();
+    let (base, adapters) = init_stores(cfg, seed);
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let mask = space.full_mask();
+    let decoder =
+        Decoder::new(&rt, cfg, "forward_eval", vec![&base, &adapters], Some(mask.clone())).unwrap();
+    let reqs = requests(cfg, n, seed ^ 0x5A, max_new);
+    let (control, _) = decoder.serve(&reqs).unwrap();
+    Fixture { config: config.into(), reqs, control, stores: vec![base, adapters], mask }
+}
+
+impl Fixture {
+    fn opts(&self) -> ServerOpts {
+        ServerOpts {
+            config: self.config.clone(),
+            entry: "forward_eval".into(),
+            slots: self.reqs.len(),
+            restart_backoff_ms: 1,
+            ..Default::default()
+        }
+    }
+
+    fn spawn(&self, opts: ServerOpts) -> ServeServer {
+        ServeServer::spawn(opts, self.stores.clone(), Some(self.mask.clone())).unwrap()
+    }
+
+    /// The request decoding longest in the control run — guards against
+    /// a degenerate init where nothing decodes past a couple of steps.
+    fn longest(&self) -> usize {
+        let t = (0..self.control.len()).max_by_key(|&i| self.control[i].new_tokens).unwrap();
+        assert!(
+            self.control[t].new_tokens >= 3,
+            "fixture degenerate: longest control sequence generated only {} tokens",
+            self.control[t].new_tokens
+        );
+        t
+    }
+}
+
+/// Poll `metrics()` until the published brownout rung reaches `want`.
+/// Every poll wakes the (possibly idle) runtime loop, which runs one
+/// controller evaluation per pass — so the polls themselves drive the
+/// hysteresis deterministically, no live decode traffic needed.
+fn poll_until_state(server: &ServeServer, want: u64) -> ServeMetrics {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = server.metrics().unwrap();
+        if m.brownout_state == want {
+            return m;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "controller never reached rung {want} (stuck at {})",
+            m.brownout_state
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn assert_matches_control(fx: &Fixture, i: usize, r: &Result<GenResponse, String>) {
+    let resp = r.as_ref().unwrap_or_else(|e| {
+        panic!("{} request {i}: non-degraded request errored: {e}", fx.config)
+    });
+    assert_eq!(
+        resp.tokens, fx.control[i].tokens,
+        "{} request {i}: non-degraded output diverged from the full-rank control",
+        fx.config
+    );
+    assert_eq!(resp.new_tokens, fx.control[i].new_tokens, "{} request {i}", fx.config);
+}
+
+// --------------------------------------------- degradation vs control
+//
+// The physics: `rankdelay@0+1:5000` sleeps 5 ms per active rank unit
+// every step. The full-rank binding (max_rank 8) costs 40 ms/step; the
+// fraction-0.125 prefix (ceil(0.125 * 8) = 1 rank) costs 5 ms/step.
+// The target decodes >= 2 steps at full rank (its control run
+// generated >= 3 tokens), so the controller-off run sleeps >= 80 ms —
+// past the 60 ms deadline regardless of machine speed — while the
+// degraded run sleeps <= 4 steps * 5 ms = 20 ms.
+
+#[test]
+fn degraded_admission_meets_the_deadline_the_control_misses() {
+    let fx = fixture("tiny-llama", 6, 61, 4);
+    let t = fx.longest();
+    let dummy = (t + 1) % fx.reqs.len();
+    let plan = FaultPlan::none().rank_delay_every(0, 1, 5000);
+
+    // heat on queue depth (a queued request while paused), then stay
+    // Degraded for the whole drill: the dwell keeps recovery out of
+    // frame so the only variable is the admission-time binding
+    let b = BrownoutOpts {
+        enabled: true,
+        fraction: 0.125,
+        degrade: BrownoutThresholds { queue_hi: 1, queue_lo: 0, ..BrownoutThresholds::UNREACHABLE },
+        dwell_up: 1,
+        dwell_down: 1_000_000,
+        ..BrownoutOpts::default()
+    };
+
+    // brownout run: the sacrificial queued request trips the
+    // controller before the deadlined target is admitted
+    let server = fx.spawn(ServerOpts {
+        slots: 1,
+        fault: plan.clone(),
+        brownout: b,
+        ..fx.opts()
+    });
+    server.pause().unwrap();
+    let hd = server
+        .submit(fx.reqs[dummy].clone().with_allow_degraded(true))
+        .accepted()
+        .unwrap();
+    poll_until_state(&server, 1);
+    let ht = server
+        .submit(
+            fx.reqs[t]
+                .clone()
+                .with_deadline(Duration::from_millis(60))
+                .with_allow_degraded(true),
+        )
+        .accepted()
+        .unwrap();
+    server.resume().unwrap();
+    // EDF admits the deadlined target into the single slot first
+    let rt_resp = ht.wait().expect("degraded target completes");
+    assert!(rt_resp.degraded, "opted-in admission under Degraded binds the prefix");
+    assert!(
+        (rt_resp.rank_fraction - 0.125).abs() < 1e-6,
+        "prefix keeps 1 of 8 ranks, got fraction {}",
+        rt_resp.rank_fraction
+    );
+    assert!(
+        !rt_resp.deadline_missed,
+        "degradation bought the headroom: {:.1} ms latency",
+        rt_resp.latency_ms
+    );
+    let rd = hd.wait().expect("best-effort dummy completes too");
+    assert!(rd.degraded);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.degraded, 2, "both admissions were degraded");
+    assert_eq!(m.deadline_misses, 0);
+    assert_eq!(m.brownout_state, 1, "the sticky dwell held Degraded");
+    assert!(m.brownout_transitions >= 1);
+    assert!(m.brownout_degraded_secs > 0.0);
+
+    // control run: identical workload and injector, controller off —
+    // the full-rank sleeps alone blow the deadline
+    let server = fx.spawn(ServerOpts { slots: 1, fault: plan, ..fx.opts() });
+    server.pause().unwrap();
+    let hd = server.submit(fx.reqs[dummy].clone()).accepted().unwrap();
+    // symmetry with the brownout run's heat-up polls
+    let _ = server.metrics().unwrap();
+    let _ = server.metrics().unwrap();
+    let ht = server
+        .submit(fx.reqs[t].clone().with_deadline(Duration::from_millis(60)))
+        .accepted()
+        .unwrap();
+    server.resume().unwrap();
+    let r = ht.wait().map_err(|e| format!("{e:#}"));
+    assert_matches_control(&fx, t, &r);
+    let resp = r.unwrap();
+    assert!(!resp.degraded, "controller-off runs never degrade");
+    assert_eq!(resp.rank_fraction, 1.0);
+    assert!(
+        resp.deadline_missed,
+        "full-rank sleeps lower-bound the control past its deadline \
+         ({:.1} ms latency)",
+        resp.latency_ms
+    );
+    hd.wait().expect("dummy completes");
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.degraded, 0);
+    assert!(m.deadline_misses >= 1, "the control provably missed");
+    assert_eq!(m.brownout_transitions, 0);
+}
+
+// ------------------------------------------- prefix ≡ nested sub-adapter
+//
+// Shears' NLS search space is prefix-nested: the rank-4 sub-adapter IS
+// the first 4 rank rows of the super-adapter. So serving degraded at
+// fraction 0.5 (keep = ceil(0.5 * 8) = 4) over the full mask must be
+// bit-identical to serving the same weights under the space's minimal
+// (rank 4) mask.
+
+fn prefix_degradation_matches_the_nested_sub_adapter(config: &str, seed: u64) {
+    let fx = fixture(config, 3, seed, 6);
+
+    // expected tokens: a batch decoder bound to the minimal rank mask
+    let rt = Runtime::native().unwrap();
+    let manifest = rt.manifest().unwrap();
+    let cfg = manifest.config(config).unwrap();
+    let space = shears::nls::SearchSpace::from_config(cfg);
+    let minimal_mask = space.rank_mask(&space.minimal());
+    let decoder = Decoder::new(
+        &rt,
+        cfg,
+        "forward_eval",
+        vec![&fx.stores[0], &fx.stores[1]],
+        Some(minimal_mask),
+    )
+    .unwrap();
+    let (expected, _) = decoder.serve(&fx.reqs).unwrap();
+
+    // queue_hi 0 is hot at any depth: Degraded from the first
+    // evaluation, held by the dwell
+    let b = BrownoutOpts {
+        enabled: true,
+        fraction: 0.5,
+        default_allow_degraded: true,
+        degrade: BrownoutThresholds { queue_hi: 0, queue_lo: 0, ..BrownoutThresholds::UNREACHABLE },
+        dwell_up: 1,
+        dwell_down: 1_000_000,
+        ..BrownoutOpts::default()
+    };
+
+    let server = fx.spawn(ServerOpts { brownout: b, ..fx.opts() });
+    server.pause().unwrap();
+    poll_until_state(&server, 1);
+    let handles: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| panic!("{config} request {i}: {e:#}"));
+        assert!(r.degraded, "{config} request {i}: server-default opt-in degrades");
+        assert!((r.rank_fraction - 0.5).abs() < 1e-6, "{config} request {i}");
+        assert_eq!(
+            r.tokens, expected[i].tokens,
+            "{config} request {i}: prefix sub-binding diverged from the \
+             nested rank-4 sub-adapter"
+        );
+        assert_eq!(r.new_tokens, expected[i].new_tokens, "{config} request {i}");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.degraded, fx.reqs.len() as u64);
+}
+
+#[test]
+fn prefix_degradation_matches_the_nested_sub_adapter_llama() {
+    prefix_degradation_matches_the_nested_sub_adapter("tiny-llama", 33);
+}
+
+#[test]
+fn prefix_degradation_matches_the_nested_sub_adapter_mpt() {
+    prefix_degradation_matches_the_nested_sub_adapter("mpt-sim", 21);
+}
+
+// ------------------------------------------------ below-threshold identity
+
+/// With the controller armed but every threshold unreachable (the
+/// defaults), the server's output is bit-identical to the fault-free
+/// control on both builtin architectures: in `Normal` the controller
+/// is observe-only and touches neither admission nor scheduling.
+fn below_thresholds_is_bit_identical(config: &str, seed: u64) {
+    let fx = fixture(config, 4, seed, 8);
+    // opt-in alone must change nothing — every threshold stays at the
+    // unreachable default
+    let b = BrownoutOpts { enabled: true, default_allow_degraded: true, ..BrownoutOpts::default() };
+    let server = fx.spawn(ServerOpts { brownout: b, ..fx.opts() });
+    server.pause().unwrap();
+    let handles: Vec<_> =
+        fx.reqs.iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    server.resume().unwrap();
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().map_err(|e| format!("{e:#}"));
+        assert_matches_control(&fx, i, &r);
+        let resp = r.unwrap();
+        assert!(!resp.degraded, "{config} request {i}: degraded below thresholds");
+        assert_eq!(resp.rank_fraction, 1.0, "{config} request {i}");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.degraded, 0);
+    assert_eq!(m.shed, 0);
+    assert_eq!(m.brownout_state, 0);
+    assert_eq!(m.brownout_transitions, 0, "{config}: the controller never moved");
+}
+
+#[test]
+fn below_thresholds_is_bit_identical_llama() {
+    below_thresholds_is_bit_identical("tiny-llama", 63);
+}
+
+#[test]
+fn below_thresholds_is_bit_identical_mpt() {
+    below_thresholds_is_bit_identical("mpt-sim", 19);
+}
+
+// ----------------------------------------------------------- shedding
+
+/// Two rungs past `Normal` the controller sheds: with a zero
+/// admissible horizon every extra submission is rejected
+/// `Overloaded` — never silently dropped — while already-accepted
+/// work still completes (degraded). The three counters partition
+/// every submission: `requests + rejected + shed == submissions`.
+#[test]
+fn shedding_rejects_overloaded_and_counters_reconcile() {
+    let fx = fixture("tiny-llama", 7, 43, 4);
+    // hot at any queue depth on both rungs; a zero horizon admits
+    // nothing while shedding
+    let b = BrownoutOpts {
+        enabled: true,
+        fraction: 0.5,
+        default_allow_degraded: true,
+        degrade: BrownoutThresholds { queue_hi: 0, queue_lo: 0, ..BrownoutThresholds::UNREACHABLE },
+        shed: BrownoutThresholds { queue_hi: 0, queue_lo: 0, ..BrownoutThresholds::UNREACHABLE },
+        shed_horizon_ms: 0.0,
+        dwell_up: 1,
+        dwell_down: 1_000_000,
+        ..BrownoutOpts::default()
+    };
+
+    let server = fx.spawn(ServerOpts { brownout: b, ..fx.opts() });
+    server.pause().unwrap();
+    let accepted: Vec<_> =
+        fx.reqs[..3].iter().map(|r| server.submit(r.clone()).accepted().unwrap()).collect();
+    // two evaluations escalate Normal -> Degraded -> Shedding
+    poll_until_state(&server, 2);
+    for (i, r) in fx.reqs[3..].iter().enumerate() {
+        match server.submit(r.clone()) {
+            Submit::Rejected(RejectReason::Overloaded) => {}
+            Submit::Rejected(other) => panic!("submission {i}: wrong rejection {other:?}"),
+            Submit::Accepted(_) => panic!("submission {i}: accepted past a zero horizon"),
+        }
+    }
+    server.resume().unwrap();
+    for (i, h) in accepted.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| panic!("accepted request {i} must finish: {e:#}"));
+        assert!(r.degraded, "request {i}: shedding still degrades what it admits");
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, 3, "the accepted work all completed");
+    assert_eq!(m.shed, 4, "every excess submission counted as shed");
+    assert_eq!(m.rejected, 0, "queue capacity was never the limiter");
+    assert_eq!(
+        m.requests + m.rejected + m.shed,
+        fx.reqs.len() as u64,
+        "counters must partition submissions — nothing vanishes silently"
+    );
+    assert_eq!(m.degraded, 3);
+    assert_eq!(m.brownout_state, 2, "the sticky dwell held Shedding");
+    assert!(m.brownout_shedding_secs > 0.0);
+}
+
+// ----------------------------------------------------------- recovery
+
+/// Heat on queue depth, then drain: after `dwell_down` consecutive
+/// cool evaluations the controller re-promotes to `Normal`, and a
+/// probe request admitted afterwards runs full-rank, bit-identical to
+/// the control. Exactly two transitions: up once, down once.
+#[test]
+fn recovery_repromotes_and_the_probe_runs_full_rank() {
+    let fx = fixture("tiny-llama", 5, 57, 6);
+    let probe = fx.longest();
+    let load: Vec<usize> = (0..fx.reqs.len()).filter(|&i| i != probe).take(3).collect();
+
+    // hot past depth 2, cool at 0: the queued burst heats, the drain
+    // cools after two agreeing evaluations
+    let b = BrownoutOpts {
+        enabled: true,
+        fraction: 0.25,
+        default_allow_degraded: true,
+        degrade: BrownoutThresholds { queue_hi: 2, queue_lo: 0, ..BrownoutThresholds::UNREACHABLE },
+        dwell_up: 1,
+        dwell_down: 2,
+        ..BrownoutOpts::default()
+    };
+
+    let server = fx.spawn(ServerOpts { brownout: b, ..fx.opts() });
+    server.pause().unwrap();
+    let burst: Vec<_> =
+        load.iter().map(|&i| server.submit(fx.reqs[i].clone()).accepted().unwrap()).collect();
+    poll_until_state(&server, 1);
+    server.resume().unwrap();
+    for (k, h) in burst.into_iter().enumerate() {
+        let r = h.wait().unwrap_or_else(|e| panic!("burst request {k}: {e:#}"));
+        assert!(r.degraded, "burst request {k} was admitted under Degraded");
+    }
+    // the queue is drained: idle evaluations (driven by these polls)
+    // accrue the cool streak and re-promote
+    poll_until_state(&server, 0);
+    let h = server.submit(fx.reqs[probe].clone()).accepted().unwrap();
+    let r = h.wait().map_err(|e| format!("{e:#}"));
+    assert_matches_control(&fx, probe, &r);
+    let resp = r.unwrap();
+    assert!(!resp.degraded, "post-recovery admissions run full-rank");
+    assert_eq!(resp.rank_fraction, 1.0);
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.degraded, load.len() as u64);
+    assert_eq!(m.brownout_transitions, 2, "up once, down once — no flapping");
+    assert_eq!(m.brownout_state, 0);
+    assert!(m.brownout_degraded_secs > 0.0);
+}
+
+// ----------------------------------------------------------- env drill
+
+/// The CI overload drill: arms NO API plan, so the server arms
+/// whatever `SHEARS_FAULT` sets (the workflow leg runs a rank-
+/// proportional latency plan with the controller live). Unset, it
+/// runs fault-free. Either way the contract holds: every accepted
+/// stream resolves, and the counters reconcile with submissions.
+#[test]
+fn env_overload_drill_resolves_and_reconciles() {
+    let fx = fixture("tiny-llama", 8, 101, 6);
+    let b = BrownoutOpts {
+        enabled: true,
+        fraction: 0.5,
+        default_allow_degraded: true,
+        degrade: BrownoutThresholds { queue_hi: 3, queue_lo: 1, ..BrownoutThresholds::UNREACHABLE },
+        dwell_up: 1,
+        dwell_down: 3,
+        ..BrownoutOpts::default()
+    };
+    let server = fx.spawn(ServerOpts { slots: 2, brownout: b, ..fx.opts() });
+    let (mut accepted, mut refused) = (Vec::new(), 0u64);
+    for r in &fx.reqs {
+        match server.submit(r.clone()) {
+            Submit::Accepted(h) => accepted.push(h),
+            Submit::Rejected(_) => refused += 1,
+        }
+    }
+    let n_accepted = accepted.len() as u64;
+    for h in accepted {
+        match h.wait() {
+            Ok(r) => assert!(r.new_tokens >= 1),
+            Err(e) => {
+                let s = format!("{e:#}");
+                assert!(s.contains("request"), "unattributable stream error: {s}");
+            }
+        }
+    }
+    let m = server.shutdown().unwrap();
+    assert_eq!(m.requests, n_accepted, "every accepted stream resolved");
+    assert_eq!(
+        m.requests + m.rejected + m.shed,
+        n_accepted + refused,
+        "metrics counters reconcile with what submit() reported"
+    );
+}
