@@ -70,6 +70,7 @@ impl Bench {
             hill_climb_budget: 0,
             search_eval_examples: if fast() { 16 } else { 48 },
             workdir: Some("runs".into()),
+            ..PipelineOpts::default()
         }
     }
 
@@ -110,6 +111,7 @@ impl Bench {
                 seed: opts.seed,
                 sample_nls: false,
                 log_every: 0,
+                ..TrainOpts::default()
             };
             let log = train_loop(
                 &self.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
@@ -154,6 +156,7 @@ impl Bench {
             seed: opts.seed,
             sample_nls: false,
             log_every: 0,
+            ..TrainOpts::default()
         };
         train_loop(
             &self.rt, cfg, &format!("train_step_{kind}"), &base, &mut extra, None,
@@ -215,6 +218,7 @@ impl Bench {
             seed: o.seed,
             sample_nls: false,
             log_every: 0,
+            ..TrainOpts::default()
         };
         let frozen = ParamStore::new();
         train_loop(

@@ -81,6 +81,10 @@ impl Args {
         Ok(self.get(name).parse()?)
     }
 
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        Ok(self.get(name).parse()?)
+    }
+
     /// Byte-size flag: a plain count, or with a `k`/`m`/`g` suffix
     /// (binary multiples, case-insensitive) — `64k`, `2M`, `1g`.
     pub fn get_bytes(&self, name: &str) -> Result<usize> {
@@ -151,6 +155,7 @@ mod tests {
         assert_eq!(a.subcommand, "train");
         assert_eq!(a.get("config"), "tiny-llama");
         assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert_eq!(a.get_u64("steps").unwrap(), 100);
         assert!(a.has("verbose"));
         assert!(!a.has("quiet"));
     }

@@ -5,4 +5,4 @@ pub mod pipeline;
 pub mod router;
 
 pub use pipeline::{PipelineOpts, PipelineReport, ShearsPipeline};
-pub use router::{EvalRouter, RouterMetrics};
+pub use router::{EvalRouter, RouterMetrics, RouterOpts};

@@ -13,18 +13,20 @@
 //! every experiment in the bench suite shares the same pretrained base —
 //! the analogue of downloading the same LLaMA checkpoint once.
 
+use crate::coordinator::router::{EvalRouter, RouterOpts};
 use crate::data::batch::{Batcher, MaskMode};
 use crate::data::{self, corpus, Example, Task, Vocab};
 use crate::model::{Manifest, ModelConfig, ParamStore};
 use crate::nls::{SearchSpace, SubAdapterConfig};
 use crate::pruning::{self, CalibStats, Method};
 use crate::runtime::Runtime;
-use crate::search::{hill_climb, CachedEvaluator};
+use crate::search::{hill_climb_durable, CachedEvaluator, DurableOpts};
 use crate::train::{evaluate, train_loop, TrainLog, TrainOpts};
 use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::PathBuf;
+use std::time::Duration;
 
 /// Everything a Shears run needs (defaults = quick tiny-config run).
 #[derive(Clone, Debug)]
@@ -45,6 +47,17 @@ pub struct PipelineOpts {
     /// examples used per search evaluation (smaller = cheaper search)
     pub search_eval_examples: usize,
     pub workdir: Option<PathBuf>,
+    /// snapshot train state / search state every N steps (0 = resilience
+    /// guards off: legacy single-shot behavior)
+    pub checkpoint_every: usize,
+    /// pick up train / search runs from their durable state under
+    /// `workdir` (no-op when no state exists)
+    pub resume: bool,
+    /// training divergence rollbacks tolerated before aborting
+    pub rollback_budget: usize,
+    /// run search evals through a supervised [`EvalRouter`] worker with
+    /// this per-call timeout (0 = in-process evals, no supervision)
+    pub eval_timeout_ms: u64,
 }
 
 impl Default for PipelineOpts {
@@ -64,6 +77,10 @@ impl Default for PipelineOpts {
             hill_climb_budget: 0,
             search_eval_examples: 32,
             workdir: None,
+            checkpoint_every: 0,
+            resume: false,
+            rollback_budget: 3,
+            eval_timeout_ms: 0,
         }
     }
 }
@@ -136,12 +153,32 @@ impl<'rt> ShearsPipeline<'rt> {
     // ------------------------------------------------- stage 0: pretrain
 
     fn pretrain_ckpt_path(&self) -> Option<PathBuf> {
+        self.workdir_file(&format!(
+            "pretrain_{}_{}steps_seed{}.bin",
+            self.cfg.name, self.opts.pretrain_steps, self.opts.seed
+        ))
+    }
+
+    /// A file under `workdir` (created on demand), or `None` when the
+    /// pipeline runs without a workdir.
+    fn workdir_file(&self, name: &str) -> Option<PathBuf> {
         self.opts.workdir.as_ref().map(|d| {
-            d.join(format!(
-                "pretrain_{}_{}steps_seed{}.bin",
-                self.cfg.name, self.opts.pretrain_steps, self.opts.seed
-            ))
+            let _ = std::fs::create_dir_all(d);
+            d.join(name)
         })
+    }
+
+    /// Guarded-train defaults shared by the pretrain and super-adapter
+    /// stages: periodic last-good checkpoints (divergence rollback) that
+    /// also persist under `workdir` for `resume`.
+    fn guarded_train_defaults(&self, state_file: &str) -> TrainOpts {
+        TrainOpts {
+            checkpoint_every: self.opts.checkpoint_every,
+            checkpoint_path: self.workdir_file(state_file),
+            resume: self.opts.resume,
+            rollback_budget: self.opts.rollback_budget,
+            ..TrainOpts::default()
+        }
     }
 
     /// Pretrain the base model on the synthetic corpus (or load the cache).
@@ -183,6 +220,10 @@ impl<'rt> ShearsPipeline<'rt> {
             seed: self.opts.seed,
             sample_nls: false,
             log_every: 50,
+            ..self.guarded_train_defaults(&format!(
+                "pretrain_{}_{}steps_seed{}.train_state.bin",
+                self.cfg.name, self.opts.pretrain_steps, self.opts.seed
+            ))
         };
         let frozen = ParamStore::new(); // full-FT: nothing frozen
         let log = train_loop(
@@ -285,6 +326,10 @@ impl<'rt> ShearsPipeline<'rt> {
             seed: self.opts.seed,
             sample_nls: true,
             log_every: 50,
+            ..self.guarded_train_defaults(&format!(
+                "super_{}_{}steps_seed{}.train_state.bin",
+                self.cfg.name, self.opts.train_steps, self.opts.seed
+            ))
         };
         let log = train_loop(
             self.rt,
@@ -303,6 +348,13 @@ impl<'rt> ShearsPipeline<'rt> {
     // ------------------------------------------------- stage 3: search
 
     /// Heuristic (Eq. 3) + optional hill-climbing refinement.
+    ///
+    /// With `checkpoint_every > 0` the climb snapshots durable state
+    /// under `workdir` (and `resume` picks it up, replaying nothing the
+    /// eval cache already paid for). With `eval_timeout_ms > 0`
+    /// candidate evals run in a supervised [`EvalRouter`] worker: a
+    /// wedged or failing eval is retried against a respawned worker
+    /// instead of hanging the whole search.
     pub fn search_stage(
         &self,
         base: &ParamStore,
@@ -314,20 +366,78 @@ impl<'rt> ShearsPipeline<'rt> {
             return Ok(start);
         }
         let val = self.task_mixture(0x5EA7C4, self.opts.search_eval_examples);
-        let mut cached = CachedEvaluator::new(|cfg: &SubAdapterConfig| {
-            let mask = space.rank_mask(cfg);
-            evaluate(
-                self.rt,
-                self.cfg,
-                "forward_eval",
-                &[base, adapters],
-                Some(&mask),
-                &val,
-                &self.vocab,
-            )
-            .unwrap_or(0.0)
-        });
-        let r = hill_climb(space, start, &mut cached, self.opts.hill_climb_budget);
+        let durable = (self.opts.checkpoint_every > 0)
+            .then(|| {
+                self.workdir_file(&format!(
+                    "search_hc_{}_seed{}.snap.bin",
+                    self.cfg.name, self.opts.seed
+                ))
+            })
+            .flatten()
+            .map(|path| DurableOpts {
+                path,
+                every: self.opts.checkpoint_every,
+                resume: self.opts.resume,
+            });
+        let r = if self.opts.eval_timeout_ms > 0 {
+            let router = EvalRouter::with_opts(
+                RouterOpts {
+                    backend: self.rt.backend_name().to_string(),
+                    artifacts_dir: self
+                        .rt
+                        .artifacts_dir()
+                        .map(|d| d.display().to_string())
+                        .unwrap_or_default(),
+                    config: self.opts.config.clone(),
+                    entry: "forward_eval".into(),
+                    eval_timeout: Some(Duration::from_millis(self.opts.eval_timeout_ms)),
+                    ..RouterOpts::default()
+                },
+                vec![base.clone(), adapters.clone()],
+            )?;
+            let mut cached = CachedEvaluator::new(|cfg: &SubAdapterConfig| {
+                let mask = space.rank_mask(cfg);
+                router.eval(val.clone(), Some(mask)).unwrap_or(0.0)
+            });
+            let r = hill_climb_durable(
+                space,
+                start,
+                &mut cached,
+                self.opts.hill_climb_budget,
+                durable.as_ref(),
+            )?;
+            let m = router.metrics()?;
+            crate::info!(
+                "search evals: {} requests / {} forwards ({} retries, {} respawns, {} timeouts)",
+                m.requests,
+                m.forwards,
+                m.retries,
+                m.respawns,
+                m.timeouts
+            );
+            r
+        } else {
+            let mut cached = CachedEvaluator::new(|cfg: &SubAdapterConfig| {
+                let mask = space.rank_mask(cfg);
+                evaluate(
+                    self.rt,
+                    self.cfg,
+                    "forward_eval",
+                    &[base, adapters],
+                    Some(&mask),
+                    &val,
+                    &self.vocab,
+                )
+                .unwrap_or(0.0)
+            });
+            hill_climb_durable(
+                space,
+                start,
+                &mut cached,
+                self.opts.hill_climb_budget,
+                durable.as_ref(),
+            )?
+        };
         crate::info!(
             "hill-climb: score {:.4} after {} evals",
             r.score,

@@ -1,23 +1,48 @@
 //! Eval request router with dynamic batching (the vLLM-router-shaped
-//! component of L3; see DESIGN.md §5).
+//! component of L3; see DESIGN.md §5) — now **supervised**: a wedged
+//! or panicked backend worker costs one retried evaluation, not a hung
+//! search.
 //!
 //! Callers submit evaluation requests (a set of examples + an optional
 //! sub-adapter rank mask) from any thread; a dedicated runtime thread
 //! owns the backend (PJRT handles and the native exe cache are not
-//! `Send`) and coalesces
-//! queued examples into full `batch_eval`-sized forwards. Examples from
-//! *different* requests sharing the same rank mask ride the same forward
-//! pass — dynamic batching — and results are scattered back per request.
+//! `Send`) and coalesces queued examples into full `batch_eval`-sized
+//! forwards. Examples from *different* requests sharing the same rank
+//! mask ride the same forward pass — dynamic batching — and results
+//! are scattered back per request.
+//!
+//! Resilience contract ([`RouterOpts`]):
+//! - [`EvalRouter::eval`] waits for each reply at most
+//!   `eval_timeout` (default off — wait forever, the legacy
+//!   behaviour). A timeout or a dead worker triggers a **respawn from
+//!   the retained host stores** (resident weights are re-uploaded; no
+//!   disk round-trip) and the whole request is retried with
+//!   exponential backoff, up to `max_retries`.
+//! - Throughput counters live in shared atomics, so
+//!   [`EvalRouter::metrics`] never messages the worker and cannot
+//!   block on a wedged thread; counters survive respawns.
+//! - Worker shutdown (drop or respawn) waits at most
+//!   `control_timeout`, then **detaches** the wedged thread instead of
+//!   joining it — the PR 8 control-plane rule, applied to the offline
+//!   path.
+//! - A [`FaultPlan`] (API or `SHEARS_FAULT` when the API plan is
+//!   empty) injects `evalerr` / `evalhang` faults before coalesced
+//!   forwards, keyed by the plan's eval-attempt counter, which lives
+//!   outside the worker so injections keep their indices across
+//!   respawns.
 
 use crate::data::batch::{build_batch, MaskMode};
 use crate::data::{Example, Vocab};
+use crate::fault::{EvalFire, FaultPlan};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
 use crate::tensor::HostTensor;
 use crate::train::{exact_match, ForwardSession};
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// One queued example with its reply slot.
@@ -34,11 +59,10 @@ enum Msg {
         rank_mask: Option<HostTensor>,
         reply: Sender<Result<bool, String>>,
     },
-    Metrics(Sender<RouterMetrics>),
     Shutdown,
 }
 
-/// Router throughput/latency counters.
+/// Router throughput/latency/resilience counters.
 #[derive(Clone, Debug, Default)]
 pub struct RouterMetrics {
     pub requests: u64,
@@ -48,19 +72,116 @@ pub struct RouterMetrics {
     pub mean_occupancy: f64,
     pub p50_latency_ms: f64,
     pub p99_latency_ms: f64,
+    /// whole-request retries after a failed/timed-out attempt
+    pub retries: u64,
+    /// worker threads rebuilt from the retained host stores
+    pub respawns: u64,
+    /// per-reply waits that hit `eval_timeout`
+    pub timeouts: u64,
 }
 
-/// Handle to the router thread.
-pub struct EvalRouter {
+/// How the router is spawned and supervised. `..Default::default()`
+/// gives the legacy behaviour: no eval timeout, retries armed but
+/// never triggered (nothing times out and organic errors are rare),
+/// bounded 2 s control-plane waits.
+#[derive(Clone, Debug)]
+pub struct RouterOpts {
+    /// `native|pjrt|auto`, same grammar as `--backend` — an explicit
+    /// spec, so the spawner's backend choice is never overridden by
+    /// env/auto-detection
+    pub backend: String,
+    pub artifacts_dir: String,
+    pub config: String,
+    pub entry: String,
+    /// grace period to coalesce concurrent requests into one forward
+    pub max_wait: Duration,
+    /// per-reply wait in [`EvalRouter::eval`]; `None` = wait forever
+    pub eval_timeout: Option<Duration>,
+    /// whole-request retries after a timeout / dead worker / eval error
+    pub max_retries: u32,
+    /// first retry backoff; doubles per retry
+    pub retry_backoff: Duration,
+    /// bound on waiting for a worker thread to exit before detaching it
+    pub control_timeout: Duration,
+    /// deterministic fault injection (`evalerr`/`evalhang`); when
+    /// empty, `SHEARS_FAULT` is consulted at spawn
+    pub fault: FaultPlan,
+}
+
+impl Default for RouterOpts {
+    fn default() -> Self {
+        RouterOpts {
+            backend: "auto".into(),
+            artifacts_dir: "artifacts".into(),
+            config: String::new(),
+            entry: "forward_eval_base".into(),
+            max_wait: Duration::from_millis(30),
+            eval_timeout: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(10),
+            control_timeout: Duration::from_secs(2),
+            fault: FaultPlan::none(),
+        }
+    }
+}
+
+/// Counters + fault plan shared between the handle and every worker
+/// generation. Metrics read these directly — no worker round-trip —
+/// and a respawned worker keeps counting where its predecessor
+/// stopped.
+struct Shared {
+    requests: AtomicU64,
+    examples: AtomicU64,
+    forwards: AtomicU64,
+    retries: AtomicU64,
+    respawns: AtomicU64,
+    timeouts: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+    fault: Mutex<FaultPlan>,
+}
+
+impl Shared {
+    fn new(fault: FaultPlan) -> Shared {
+        Shared {
+            requests: AtomicU64::new(0),
+            examples: AtomicU64::new(0),
+            forwards: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            respawns: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            latencies_ms: Mutex::new(Vec::new()),
+            fault: Mutex::new(fault),
+        }
+    }
+}
+
+/// One worker generation: its inbox, join handle, and a generation id
+/// so two concurrent callers that both observe a wedge don't respawn
+/// twice (the second sees the generation already moved on).
+struct Worker {
     tx: Sender<Msg>,
     join: Option<std::thread::JoinHandle<()>>,
+    generation: u64,
+}
+
+/// Handle to the supervised router.
+pub struct EvalRouter {
+    opts: RouterOpts,
+    stores: Arc<Vec<ParamStore>>,
+    shared: Arc<Shared>,
+    worker: Mutex<Worker>,
+}
+
+enum Attempt {
+    Done(f64),
+    /// retry the whole request; the worker was already respawned if it
+    /// needed to be
+    Retry(String),
 }
 
 impl EvalRouter {
-    /// Spawn the router. The runtime thread builds its own backend from
-    /// `backend` (`native|pjrt|auto`, same grammar as `--backend`) over
-    /// `artifacts_dir` and owns the stores — an explicit spec, so the
-    /// spawner's backend choice is never overridden by env/auto-detection.
+    /// Spawn the router with the legacy signature (no eval timeout, no
+    /// injected faults) — existing call sites keep working.
     pub fn spawn(
         backend: String,
         artifacts_dir: String,
@@ -69,58 +190,224 @@ impl EvalRouter {
         stores: Vec<ParamStore>,
         max_wait: Duration,
     ) -> Result<EvalRouter> {
-        let (tx, rx) = channel::<Msg>();
-        let join = std::thread::Builder::new()
-            .name("shears-eval-router".into())
-            .spawn(move || {
-                if let Err(e) = router_main(
-                    rx,
-                    &backend,
-                    &artifacts_dir,
-                    &config_name,
-                    &entry_name,
-                    stores,
-                    max_wait,
-                ) {
-                    crate::warn_!("router exited with error: {e:#}");
-                }
-            })
-            .context("spawn router thread")?;
-        Ok(EvalRouter { tx, join: Some(join) })
+        EvalRouter::with_opts(
+            RouterOpts {
+                backend,
+                artifacts_dir,
+                config: config_name,
+                entry: entry_name,
+                max_wait,
+                ..RouterOpts::default()
+            },
+            stores,
+        )
     }
 
-    /// Evaluate examples; returns exact-match accuracy. Blocks.
-    pub fn eval(&self, examples: Vec<Example>, rank_mask: Option<HostTensor>) -> Result<f64> {
-        let n = examples.len();
-        let (reply, rx) = channel();
-        self.tx
-            .send(Msg::Eval { examples, rank_mask, reply })
-            .ok()
-            .context("router gone")?;
-        let mut correct = 0usize;
-        for _ in 0..n {
-            match rx.recv().context("router dropped replies")? {
-                Ok(ok) => correct += ok as usize,
-                Err(e) => anyhow::bail!("router eval error: {e}"),
+    /// Spawn the router with full supervision options. The runtime
+    /// thread builds its own backend from `opts.backend` over
+    /// `opts.artifacts_dir` and uploads the retained `stores` — the
+    /// same stores a respawn re-uploads from.
+    pub fn with_opts(mut opts: RouterOpts, stores: Vec<ParamStore>) -> Result<EvalRouter> {
+        if opts.fault.is_empty() {
+            if let Some(plan) = FaultPlan::from_env()? {
+                opts.fault = plan;
             }
         }
-        Ok(correct as f64 / n.max(1) as f64)
+        let stores = Arc::new(stores);
+        let shared = Arc::new(Shared::new(std::mem::take(&mut opts.fault)));
+        let (tx, join) = spawn_worker(&opts, &stores, &shared, 0)?;
+        Ok(EvalRouter {
+            opts,
+            stores,
+            shared,
+            worker: Mutex::new(Worker { tx, join: Some(join), generation: 0 }),
+        })
     }
 
+    /// Evaluate examples; returns exact-match accuracy. Blocks, but
+    /// never forever when `eval_timeout` is set: a wedged worker is
+    /// respawned and the request retried (`max_retries`, exponential
+    /// backoff) before giving up with a clean error.
+    pub fn eval(&self, examples: Vec<Example>, rank_mask: Option<HostTensor>) -> Result<f64> {
+        let mut backoff = self.opts.retry_backoff;
+        let mut tries = 0u32;
+        loop {
+            match self.try_eval(&examples, &rank_mask)? {
+                Attempt::Done(acc) => return Ok(acc),
+                Attempt::Retry(reason) => {
+                    if tries >= self.opts.max_retries {
+                        bail!("router eval failed after {tries} retries: {reason}");
+                    }
+                    tries += 1;
+                    self.shared.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(backoff);
+                    backoff = backoff.saturating_mul(2);
+                }
+            }
+        }
+    }
+
+    fn try_eval(
+        &self,
+        examples: &[Example],
+        rank_mask: &Option<HostTensor>,
+    ) -> Result<Attempt> {
+        let n = examples.len();
+        let (reply, rx) = channel();
+        let generation = {
+            let w = self.worker.lock().unwrap();
+            let msg = Msg::Eval {
+                examples: examples.to_vec(),
+                rank_mask: rank_mask.clone(),
+                reply,
+            };
+            if w.tx.send(msg).is_err() {
+                // worker died before we could even enqueue
+                let generation = w.generation;
+                drop(w);
+                self.respawn(generation, "worker inbox closed")?;
+                return Ok(Attempt::Retry("worker inbox closed".into()));
+            }
+            w.generation
+        };
+        let mut correct = 0usize;
+        for _ in 0..n {
+            let msg = match self.opts.eval_timeout {
+                Some(t) => match rx.recv_timeout(t) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) => {
+                        self.shared.timeouts.fetch_add(1, Ordering::Relaxed);
+                        self.respawn(generation, "eval reply timed out")?;
+                        return Ok(Attempt::Retry(format!(
+                            "eval reply timed out after {t:?}"
+                        )));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        self.respawn(generation, "worker dropped replies")?;
+                        return Ok(Attempt::Retry("worker dropped replies".into()));
+                    }
+                },
+                None => match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => {
+                        self.respawn(generation, "worker dropped replies")?;
+                        return Ok(Attempt::Retry("worker dropped replies".into()));
+                    }
+                },
+            };
+            match msg {
+                Ok(ok) => correct += ok as usize,
+                // the worker is alive and attributed the failure — no
+                // respawn, just retry the request (injected faults and
+                // transient backend errors land here)
+                Err(e) => return Ok(Attempt::Retry(format!("router eval error: {e}"))),
+            }
+        }
+        Ok(Attempt::Done(correct as f64 / n.max(1) as f64))
+    }
+
+    /// Replace the worker whose generation was `observed`. If another
+    /// caller already respawned (generation moved on), this is a no-op
+    /// — the fresh worker must not be killed for its predecessor's
+    /// wedge. The old thread gets `control_timeout` to exit, then is
+    /// detached (never a blocking join on a wedged backend).
+    fn respawn(&self, observed: u64, reason: &str) -> Result<()> {
+        let mut w = self.worker.lock().unwrap();
+        if w.generation != observed {
+            return Ok(());
+        }
+        crate::warn_!("eval router: respawning worker (generation {observed}): {reason}");
+        let _ = w.tx.send(Msg::Shutdown);
+        if let Some(join) = w.join.take() {
+            let deadline = Instant::now() + self.opts.control_timeout;
+            while !join.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if join.is_finished() {
+                let _ = join.join();
+            }
+            // else: detach — dropping the handle leaves the wedged
+            // thread to die with its (now disconnected) inbox
+        }
+        let generation = observed + 1;
+        let (tx, join) = spawn_worker(&self.opts, &self.stores, &self.shared, generation)?;
+        *w = Worker { tx, join: Some(join), generation };
+        self.shared.respawns.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Snapshot of the shared counters. Never messages the worker —
+    /// safe to call (and returns promptly) even while the backend
+    /// thread is wedged mid-forward.
     pub fn metrics(&self) -> Result<RouterMetrics> {
-        let (tx, rx) = channel();
-        self.tx.send(Msg::Metrics(tx)).ok().context("router gone")?;
-        rx.recv().context("router dropped metrics")
+        let s = &self.shared;
+        let examples = s.examples.load(Ordering::Relaxed);
+        let forwards = s.forwards.load(Ordering::Relaxed);
+        let mut sorted = s.latencies_ms.lock().unwrap().clone();
+        crate::util::sort_for_percentiles(&mut sorted);
+        Ok(RouterMetrics {
+            requests: s.requests.load(Ordering::Relaxed),
+            examples,
+            forwards,
+            mean_occupancy: if forwards > 0 { examples as f64 / forwards as f64 } else { 0.0 },
+            // shared nearest-rank percentile (crate::util) — small
+            // samples report the true tail instead of an interior
+            // element, and the router cannot drift from the serving
+            // metrics path
+            p50_latency_ms: crate::util::percentile(&sorted, 0.50),
+            p99_latency_ms: crate::util::percentile(&sorted, 0.99),
+            retries: s.retries.load(Ordering::Relaxed),
+            respawns: s.respawns.load(Ordering::Relaxed),
+            timeouts: s.timeouts.load(Ordering::Relaxed),
+        })
     }
 }
 
 impl Drop for EvalRouter {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+        let mut w = self.worker.lock().unwrap();
+        let _ = w.tx.send(Msg::Shutdown);
+        if let Some(join) = w.join.take() {
+            let deadline = Instant::now() + self.opts.control_timeout;
+            while !join.is_finished() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            if join.is_finished() {
+                let _ = join.join();
+            }
+            // else: detach — dropping a router must not hang the
+            // caller on a wedged backend thread
         }
     }
+}
+
+fn spawn_worker(
+    opts: &RouterOpts,
+    stores: &Arc<Vec<ParamStore>>,
+    shared: &Arc<Shared>,
+    generation: u64,
+) -> Result<(Sender<Msg>, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel::<Msg>();
+    let (backend, artifacts, config, entry) = (
+        opts.backend.clone(),
+        opts.artifacts_dir.clone(),
+        opts.config.clone(),
+        opts.entry.clone(),
+    );
+    let max_wait = opts.max_wait;
+    let stores = Arc::clone(stores);
+    let shared = Arc::clone(shared);
+    let join = std::thread::Builder::new()
+        .name(format!("shears-eval-router-{generation}"))
+        .spawn(move || {
+            if let Err(e) =
+                worker_main(rx, &backend, &artifacts, &config, &entry, &stores, max_wait, &shared)
+            {
+                crate::warn_!("router worker exited with error: {e:#}");
+            }
+        })
+        .context("spawn router worker thread")?;
+    Ok((tx, join))
 }
 
 fn mask_key(m: &Option<HostTensor>) -> Vec<u8> {
@@ -130,28 +417,29 @@ fn mask_key(m: &Option<HostTensor>) -> Vec<u8> {
     }
 }
 
-fn router_main(
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
     rx: Receiver<Msg>,
     backend: &str,
     artifacts_dir: &str,
     config_name: &str,
     entry_name: &str,
-    stores: Vec<ParamStore>,
+    stores: &[ParamStore],
     max_wait: Duration,
+    shared: &Shared,
 ) -> Result<()> {
     let rt = Runtime::from_flag(backend, artifacts_dir)?;
     let manifest = rt.manifest()?;
     let cfg = manifest.config(config_name)?;
     let vocab = Vocab::new(cfg.vocab);
-    // stores are frozen for the router's lifetime: upload once, serve
-    // every coalesced batch from resident (prepared-weight) buffers
+    // stores are frozen for the worker's lifetime: upload once, serve
+    // every coalesced batch from resident (prepared-weight) buffers —
+    // a respawn re-uploads from the same retained host stores
     let store_refs: Vec<&ParamStore> = stores.iter().collect();
     let session = ForwardSession::new(&rt, cfg, entry_name, &store_refs)?;
     let mut masks_by_key: std::collections::HashMap<Vec<u8>, HostTensor> = Default::default();
 
     let mut queue: VecDeque<Pending> = VecDeque::new();
-    let mut latencies_ms: Vec<f64> = Vec::new();
-    let mut metrics = RouterMetrics::default();
     let mut open = true;
 
     while open || !queue.is_empty() {
@@ -176,14 +464,14 @@ fn router_main(
         };
         match msg {
             Some(Msg::Eval { examples, rank_mask, reply }) => {
-                metrics.requests += 1;
+                shared.requests.fetch_add(1, Ordering::Relaxed);
                 let key = mask_key(&rank_mask);
                 if let Some(m) = rank_mask {
                     masks_by_key.entry(key.clone()).or_insert(m);
                 }
                 let now = Instant::now();
                 for example in examples {
-                    metrics.examples += 1;
+                    shared.examples.fetch_add(1, Ordering::Relaxed);
                     queue.push_back(Pending {
                         example,
                         mask_key: key.clone(),
@@ -198,14 +486,14 @@ fn router_main(
                     while queue.len() < cfg.batch_eval && Instant::now() < deadline {
                         match rx.try_recv() {
                             Ok(Msg::Eval { examples, rank_mask, reply }) => {
-                                metrics.requests += 1;
+                                shared.requests.fetch_add(1, Ordering::Relaxed);
                                 let key = mask_key(&rank_mask);
                                 if let Some(m) = rank_mask {
                                     masks_by_key.entry(key.clone()).or_insert(m);
                                 }
                                 let now = Instant::now();
                                 for example in examples {
-                                    metrics.examples += 1;
+                                    shared.examples.fetch_add(1, Ordering::Relaxed);
                                     queue.push_back(Pending {
                                         example,
                                         mask_key: key.clone(),
@@ -213,9 +501,6 @@ fn router_main(
                                         enqueued: now,
                                     });
                                 }
-                            }
-                            Ok(Msg::Metrics(tx)) => {
-                                send_metrics(&tx, &metrics, &latencies_ms);
                             }
                             Ok(Msg::Shutdown) | Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                                 open = false;
@@ -227,10 +512,6 @@ fn router_main(
                         }
                     }
                 }
-            }
-            Some(Msg::Metrics(tx)) => {
-                send_metrics(&tx, &metrics, &latencies_ms);
-                continue;
             }
             Some(Msg::Shutdown) => {
                 open = false;
@@ -250,15 +531,39 @@ fn router_main(
                 }
             }
             queue = rest;
+
+            // consult the fault plan before touching the backend: one
+            // eval attempt per coalesced forward, counter shared with
+            // every worker generation
+            let fire = {
+                let mut plan = shared.fault.lock().unwrap();
+                if plan.is_empty() { EvalFire::default() } else { plan.fire_eval() }
+            };
+            if fire.hang_ms > 0 {
+                // emulate a wedged backend; with an eval timeout armed
+                // the caller respawns around us, our replies land in a
+                // dropped channel, and this generation exits on its
+                // disconnected inbox
+                std::thread::sleep(Duration::from_millis(fire.hang_ms));
+            }
+            if fire.error {
+                let msg = format!("injected eval fault (attempt {})", fire.attempt);
+                for p in &group {
+                    let _ = p.reply.send(Err(msg.clone()));
+                }
+                continue;
+            }
+
             let exs: Vec<&Example> = group.iter().map(|p| &p.example).collect();
             let batch = build_batch(&exs, cfg.batch_eval, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
             let mask_ref = if head_key.is_empty() { None } else { masks_by_key.get(&head_key) };
-            metrics.forwards += 1;
+            shared.forwards.fetch_add(1, Ordering::Relaxed);
             match session.logits(&batch.x, mask_ref) {
                 Ok(logits) => {
+                    let mut lat = shared.latencies_ms.lock().unwrap();
                     for (row, p) in group.iter().enumerate() {
                         let ok = exact_match(&p.example, &logits, row, cfg.seq_len, cfg.vocab);
-                        latencies_ms.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
+                        lat.push(p.enqueued.elapsed().as_secs_f64() * 1e3);
                         let _ = p.reply.send(Ok(ok));
                     }
                 }
@@ -274,23 +579,6 @@ fn router_main(
     Ok(())
 }
 
-fn send_metrics(tx: &Sender<RouterMetrics>, m: &RouterMetrics, lat: &[f64]) {
-    let mut out = m.clone();
-    out.mean_occupancy = if m.forwards > 0 {
-        m.examples as f64 / m.forwards as f64
-    } else {
-        0.0
-    };
-    // shared nearest-rank percentile (crate::util) — small samples
-    // report the true tail instead of an interior element, and the
-    // router cannot drift from the serving metrics path
-    let mut sorted = lat.to_vec();
-    crate::util::sort_for_percentiles(&mut sorted);
-    out.p50_latency_ms = crate::util::percentile(&sorted, 0.50);
-    out.p99_latency_ms = crate::util::percentile(&sorted, 0.99);
-    let _ = tx.send(out);
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -302,5 +590,14 @@ mod tests {
         assert_ne!(mask_key(&a), mask_key(&b));
         assert_eq!(mask_key(&None), Vec::<u8>::new());
         assert_eq!(mask_key(&a), mask_key(&a.clone()));
+    }
+
+    #[test]
+    fn router_opts_default_is_the_legacy_contract() {
+        let o = RouterOpts::default();
+        assert!(o.eval_timeout.is_none(), "no per-reply timeout unless asked");
+        assert!(o.fault.is_empty());
+        assert!(o.max_retries > 0);
+        assert!(o.control_timeout > Duration::ZERO);
     }
 }

@@ -91,6 +91,19 @@ impl<'a> Batcher<'a> {
         Batcher { examples, batch, seq_len, vocab, mode, pos: 0 }
     }
 
+    /// The dataset cursor — recorded by training checkpoints so a
+    /// rollback or resume replays the exact same batch sequence.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Restore the dataset cursor from a checkpoint (modulo the
+    /// dataset length, so a cursor from an identical dataset always
+    /// lands in range).
+    pub fn set_pos(&mut self, pos: usize) {
+        self.pos = pos % self.examples.len();
+    }
+
     /// Next training batch, cycling the dataset forever.
     pub fn next_cyclic(&mut self) -> Batch {
         let refs: Vec<&Example> = (0..self.batch)

@@ -1,20 +1,26 @@
-//! Deterministic fault injection for the serving stack, plus the
-//! attributable-fault taxonomy every recovery path reports through.
+//! Deterministic fault injection for the whole crate — the serving
+//! stack's attributable-fault taxonomy plus injectors for the offline
+//! pipeline (eval workers, training loop), all scheduled from one
+//! [`FaultPlan`].
 //!
-//! A [`FaultPlan`] schedules injected failures against the engine's
-//! cumulative **step-attempt counter** (every call to
-//! [`super::StepEngine::step`] with at least one active slot consumes
-//! one attempt, whether or not it completes), so a given plan replays
-//! the exact same failure at the exact same point in every run — the
-//! recovery paths in `serve/server.rs` are pinned by tests, not by
-//! hoping a real fault shows up. The counter lives on the plan itself
-//! and the supervisor moves the plan from a dead engine to its
-//! replacement, so injections keep their global indices across a
-//! supervised restart (a `panic@N+1` plan exhausts the restart budget
-//! deterministically).
+//! A [`FaultPlan`] schedules injected failures against cumulative
+//! **attempt counters**. Serving consumes the step-attempt counter
+//! (every call to [`crate::serve::StepEngine::step`] with at least one
+//! active slot consumes one attempt, whether or not it completes);
+//! the eval router consumes the eval-attempt counter (one per batched
+//! forward); the training loop consumes the train-attempt counter
+//! (one per optimizer step). A given plan therefore replays the exact
+//! same failure at the exact same point in every run — recovery paths
+//! are pinned by tests, not by hoping a real fault shows up. The
+//! counters live on the plan itself and supervisors move the plan from
+//! a dead component to its replacement, so injections keep their
+//! global indices across a supervised restart (a `panic@N+1` plan
+//! exhausts the restart budget deterministically, and a one-shot
+//! `nanloss@k` does not re-fire while the rolled-back steps replay).
 //!
-//! Plans come from the API ([`super::ServerOpts`]`::fault`,
-//! [`super::StepEngine::set_fault_plan`]) or — when the API plan is
+//! Plans come from the API ([`crate::serve::ServerOpts`]`::fault`,
+//! [`crate::coordinator::RouterOpts`]`::fault`,
+//! [`crate::train::TrainOpts`]`::fault`) or — when the API plan is
 //! empty — from the `SHEARS_FAULT` environment variable, so operators
 //! can run recovery drills against a live binary. Grammar:
 //! comma-separated `kind@start[+period][:arg]`, attempts 0-based:
@@ -29,6 +35,12 @@
 //!                     slots' adapter ranks — emulates compute that
 //!                     scales with LoRA rank, so brownout degradation
 //!                     (rank truncation) measurably buys back latency
+//!   evalerr@2     eval attempt 2 fails inside the router worker —
+//!                 exercises the supervised retry path
+//!   evalhang@4:300  eval attempt 4 stalls 300 ms (default 60000) —
+//!                   exercises the per-call timeout + worker respawn
+//!   nanloss@6     report train step 6's loss as NaN (weights are
+//!                 untouched) — exercises checkpoint rollback
 //!   panic@6+10    periodic: fires on attempts 6, 16, 26, …
 //! ```
 //!
@@ -42,7 +54,7 @@ use std::fmt;
 
 /// Why a request ended without a normal completion — shared by
 /// injected and organic failures so stream errors and
-/// [`super::GenResponse`]`::fault` stay attributable either way.
+/// [`crate::serve::GenResponse`]`::fault` stay attributable either way.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultKind {
     /// the engine step panicked (caught by the server's supervisor;
@@ -102,8 +114,9 @@ impl fmt::Display for FaultKind {
 /// One failed or cancelled request's attribution record: request id,
 /// the KV slot it occupied (`None` = it never left the queue), what
 /// kind of fault, and the underlying detail. Carried on
-/// [`super::GenResponse`]`::fault` and formatted into stream errors so
-/// a multi-tenant operator can tell whose request died, where, and why.
+/// [`crate::serve::GenResponse`]`::fault` and formatted into stream
+/// errors so a multi-tenant operator can tell whose request died,
+/// where, and why.
 #[derive(Clone, Debug)]
 pub struct ServeFault {
     pub request: u64,
@@ -146,9 +159,38 @@ pub enum InjectKind {
     /// deterministic stand-in for rank-proportional compute, the load
     /// model the brownout overload drills are pinned against
     RankDelay { us: u64 },
+    /// the router worker fails this batched eval forward — exercises
+    /// the supervised retry + backoff path (eval-attempt counter)
+    EvalError,
+    /// the router worker stalls `ms` milliseconds inside this eval —
+    /// exercises the per-call timeout and worker respawn
+    /// (eval-attempt counter)
+    EvalHang { ms: u64 },
+    /// report this optimizer step's loss as NaN without touching any
+    /// weight — exercises checkpoint rollback in `train_loop`
+    /// (train-attempt counter)
+    NanLoss,
 }
 
-/// An [`InjectKind`] scheduled against the step-attempt counter.
+impl InjectKind {
+    /// Which attempt counter this injector is keyed by.
+    fn scope(self) -> Scope {
+        match self {
+            InjectKind::EvalError | InjectKind::EvalHang { .. } => Scope::Eval,
+            InjectKind::NanLoss => Scope::Train,
+            _ => Scope::Serve,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Scope {
+    Serve,
+    Eval,
+    Train,
+}
+
+/// An [`InjectKind`] scheduled against its scope's attempt counter.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Injection {
     /// first attempt (0-based) this fires on
@@ -171,8 +213,8 @@ impl Injection {
     }
 }
 
-/// Everything firing on one step attempt — plain copyable data, built
-/// without allocating, so consulting the plan keeps warm steps
+/// Everything firing on one serve step attempt — plain copyable data,
+/// built without allocating, so consulting the plan keeps warm steps
 /// alloc-free even with injections armed (just not firing).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Fire {
@@ -200,12 +242,49 @@ impl Fire {
     }
 }
 
+/// Everything firing on one router eval attempt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalFire {
+    pub attempt: u64,
+    /// the worker fails this batched forward with an injected error
+    pub error: bool,
+    /// milliseconds the worker stalls inside this forward
+    pub hang_ms: u64,
+}
+
+impl EvalFire {
+    pub fn is_clean(&self) -> bool {
+        !self.error && self.hang_ms == 0
+    }
+}
+
+/// Everything firing on one optimizer-step attempt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainFire {
+    pub attempt: u64,
+    /// report this step's loss as NaN (weights are never touched)
+    pub nan_loss: bool,
+}
+
+impl TrainFire {
+    pub fn is_clean(&self) -> bool {
+        !self.nan_loss
+    }
+}
+
 /// A deterministic fault schedule (see the module docs for the
 /// grammar and counter semantics).
 #[derive(Clone, Debug, Default)]
 pub struct FaultPlan {
     injections: Vec<Injection>,
+    /// serve step attempts consumed (survives engine rebuilds)
     attempts: u64,
+    /// eval-router forward attempts consumed (survives respawns)
+    eval_attempts: u64,
+    /// optimizer-step attempts consumed (survives rollbacks — a
+    /// rolled-back step was still an attempt, so one-shot injections
+    /// don't re-fire during the deterministic replay)
+    train_attempts: u64,
 }
 
 impl FaultPlan {
@@ -213,16 +292,28 @@ impl FaultPlan {
         FaultPlan::default()
     }
 
-    /// An empty plan is the production state: the engine's only cost
-    /// is this check.
+    /// An empty plan is the production state: the component's only
+    /// cost is this check.
     pub fn is_empty(&self) -> bool {
         self.injections.is_empty()
     }
 
-    /// Step attempts consumed so far (survives engine rebuilds — the
-    /// supervisor moves the plan, counter and all).
+    /// Serve step attempts consumed so far (survives engine rebuilds —
+    /// the supervisor moves the plan, counter and all).
     pub fn attempts(&self) -> u64 {
         self.attempts
+    }
+
+    /// Eval forward attempts consumed so far (survives worker
+    /// respawns — the router owns the plan, not the worker).
+    pub fn eval_attempts(&self) -> u64 {
+        self.eval_attempts
+    }
+
+    /// Optimizer step attempts consumed so far (monotonic across
+    /// rollbacks).
+    pub fn train_attempts(&self) -> u64 {
+        self.train_attempts
     }
 
     pub fn push(&mut self, inj: Injection) {
@@ -275,15 +366,41 @@ impl FaultPlan {
         self
     }
 
-    /// Consume one step attempt and collect what fires on it. Called
-    /// by the engine once per step with a non-empty plan; never
-    /// allocates.
+    pub fn eval_error_at(mut self, at: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::EvalError });
+        self
+    }
+
+    pub fn eval_error_every(mut self, at: u64, period: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period, kind: InjectKind::EvalError });
+        self
+    }
+
+    pub fn eval_hang_at(mut self, at: u64, ms: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::EvalHang { ms } });
+        self
+    }
+
+    pub fn nan_loss_at(mut self, at: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period: 0, kind: InjectKind::NanLoss });
+        self
+    }
+
+    pub fn nan_loss_every(mut self, at: u64, period: u64) -> FaultPlan {
+        self.injections.push(Injection { at, period, kind: InjectKind::NanLoss });
+        self
+    }
+
+    /// Consume one serve step attempt and collect what fires on it.
+    /// Called by the engine once per step with a non-empty plan; never
+    /// allocates. Eval- and train-scoped injections are invisible here
+    /// — they ride their own counters.
     pub fn fire(&mut self) -> Fire {
         let attempt = self.attempts;
         self.attempts += 1;
         let mut f = Fire { attempt, ..Fire::default() };
         for inj in &self.injections {
-            if !inj.fires(attempt) {
+            if inj.kind.scope() != Scope::Serve || !inj.fires(attempt) {
                 continue;
             }
             match inj.kind {
@@ -302,6 +419,45 @@ impl FaultPlan {
                 }
                 InjectKind::Delay { ms } => f.delay_ms += ms,
                 InjectKind::RankDelay { us } => f.rank_delay_us += us,
+                InjectKind::EvalError | InjectKind::EvalHang { .. } | InjectKind::NanLoss => {
+                    unreachable!("non-serve scope filtered above")
+                }
+            }
+        }
+        f
+    }
+
+    /// Consume one eval forward attempt and collect what fires on it
+    /// (the eval router calls this before each batched forward).
+    pub fn fire_eval(&mut self) -> EvalFire {
+        let attempt = self.eval_attempts;
+        self.eval_attempts += 1;
+        let mut f = EvalFire { attempt, ..EvalFire::default() };
+        for inj in &self.injections {
+            if !inj.fires(attempt) {
+                continue;
+            }
+            match inj.kind {
+                InjectKind::EvalError => f.error = true,
+                InjectKind::EvalHang { ms } => f.hang_ms += ms,
+                _ => {}
+            }
+        }
+        f
+    }
+
+    /// Consume one optimizer-step attempt and collect what fires on it
+    /// (`train_loop` calls this after computing each step's loss).
+    pub fn fire_train(&mut self) -> TrainFire {
+        let attempt = self.train_attempts;
+        self.train_attempts += 1;
+        let mut f = TrainFire { attempt, ..TrainFire::default() };
+        for inj in &self.injections {
+            if !inj.fires(attempt) {
+                continue;
+            }
+            if inj.kind == InjectKind::NanLoss {
+                f.nan_loss = true;
             }
         }
         f
@@ -338,7 +494,7 @@ impl FaultPlan {
             };
             let kind = match kind {
                 "panic" => {
-                    ensure_no_arg(part, arg)?;
+                    ensure_no_arg(part, "panic", arg)?;
                     InjectKind::Panic
                 }
                 "error" => InjectKind::Error {
@@ -350,9 +506,26 @@ impl FaultPlan {
                 "nan" => InjectKind::NanLogits { slot: parse_arg("slot")? as usize },
                 "delay" => InjectKind::Delay { ms: parse_arg("ms")? },
                 "rankdelay" => InjectKind::RankDelay { us: parse_arg("us")? },
-                other => {
-                    bail!("fault '{part}': unknown kind '{other}' (panic|error|nan|delay|rankdelay)")
+                "evalerr" => {
+                    ensure_no_arg(part, "evalerr", arg)?;
+                    InjectKind::EvalError
                 }
+                "evalhang" => InjectKind::EvalHang {
+                    ms: match arg {
+                        Some(_) => parse_arg("ms")?,
+                        // long enough that any sane --eval-timeout-ms
+                        // trips first
+                        None => 60_000,
+                    },
+                },
+                "nanloss" => {
+                    ensure_no_arg(part, "nanloss", arg)?;
+                    InjectKind::NanLoss
+                }
+                other => bail!(
+                    "fault '{part}': unknown kind '{other}' \
+                     (panic|error|nan|delay|rankdelay|evalerr|evalhang|nanloss)"
+                ),
             };
             plan.injections.push(Injection { at, period, kind });
         }
@@ -370,9 +543,9 @@ impl FaultPlan {
     }
 }
 
-fn ensure_no_arg(part: &str, arg: Option<&str>) -> Result<()> {
+fn ensure_no_arg(part: &str, kind: &str, arg: Option<&str>) -> Result<()> {
     if arg.is_some() {
-        bail!("fault '{part}': 'panic' takes no :arg");
+        bail!("fault '{part}': '{kind}' takes no :arg");
     }
     Ok(())
 }
@@ -407,6 +580,24 @@ mod tests {
     }
 
     #[test]
+    fn parse_covers_the_pipeline_kinds() {
+        let p = FaultPlan::parse("evalerr@2,evalhang@4:300,evalhang@9,nanloss@6,nanloss@1+5").unwrap();
+        assert_eq!(p.injections.len(), 5);
+        assert_eq!(p.injections[0], Injection { at: 2, period: 0, kind: InjectKind::EvalError });
+        assert_eq!(
+            p.injections[1],
+            Injection { at: 4, period: 0, kind: InjectKind::EvalHang { ms: 300 } }
+        );
+        assert_eq!(
+            p.injections[2],
+            Injection { at: 9, period: 0, kind: InjectKind::EvalHang { ms: 60_000 } },
+            "evalhang defaults to a stall any sane timeout trips first"
+        );
+        assert_eq!(p.injections[3], Injection { at: 6, period: 0, kind: InjectKind::NanLoss });
+        assert_eq!(p.injections[4], Injection { at: 1, period: 5, kind: InjectKind::NanLoss });
+    }
+
+    #[test]
     fn parse_rejects_malformed_specs() {
         assert!(FaultPlan::parse("panic").is_err(), "missing @start");
         assert!(FaultPlan::parse("panic@x").is_err(), "bad start");
@@ -414,6 +605,9 @@ mod tests {
         assert!(FaultPlan::parse("delay@3").is_err(), "delay needs ms");
         assert!(FaultPlan::parse("rankdelay@3").is_err(), "rankdelay needs us");
         assert!(FaultPlan::parse("panic@3:1").is_err(), "panic takes no arg");
+        assert!(FaultPlan::parse("evalerr@3:1").is_err(), "evalerr takes no arg");
+        assert!(FaultPlan::parse("nanloss@3:1").is_err(), "nanloss takes no arg");
+        assert!(FaultPlan::parse("evalhang@3:x").is_err(), "bad evalhang ms");
         assert!(FaultPlan::parse("explode@1").is_err(), "unknown kind");
         assert!(FaultPlan::parse("error@1+z").is_err(), "bad period");
         let p = FaultPlan::parse(" ").unwrap();
@@ -452,6 +646,39 @@ mod tests {
         assert!(!f1.panic);
         assert!(p.fire().is_clean());
         assert_eq!(p.attempts(), 3);
+    }
+
+    #[test]
+    fn scoped_counters_are_independent() {
+        // the same schedule index on every counter: a serve panic, an
+        // eval error, and a nan loss all "at 1" fire independently on
+        // their own second attempt
+        let mut p = FaultPlan::none().panic_at(1).eval_error_at(1).nan_loss_at(1);
+        assert!(p.fire().is_clean());
+        assert!(p.fire_eval().is_clean());
+        assert!(p.fire_train().is_clean());
+        let s = p.fire();
+        let e = p.fire_eval();
+        let t = p.fire_train();
+        assert!(s.panic && !s.error, "serve scope sees only the panic");
+        assert!(e.error && e.hang_ms == 0, "eval scope sees only the eval error");
+        assert!(t.nan_loss, "train scope sees only the nan loss");
+        assert_eq!((p.attempts(), p.eval_attempts(), p.train_attempts()), (2, 2, 2));
+        // cross-scope invisibility: a serve fire never reports eval kinds
+        assert!(p.fire().is_clean());
+        assert!(p.fire_eval().is_clean());
+        assert!(p.fire_train().is_clean());
+    }
+
+    #[test]
+    fn eval_hang_aggregates_and_train_replay_does_not_refire() {
+        let mut p = FaultPlan::none().eval_hang_at(0, 25).eval_hang_at(0, 10).nan_loss_at(0);
+        let e = p.fire_eval();
+        assert_eq!(e.hang_ms, 35, "coincident hangs aggregate");
+        assert!(p.fire_train().nan_loss);
+        // the rolled-back step replays as a NEW attempt — the one-shot
+        // injection is spent, so the replay converges
+        assert!(p.fire_train().is_clean());
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod model;
 pub mod nls;
 pub mod ops;

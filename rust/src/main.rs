@@ -43,6 +43,25 @@ fn flags() -> Vec<FlagSpec> {
         FlagSpec { name: "eval-examples", default: Some("64"), help: "test set size" },
         FlagSpec { name: "hill-climb", default: Some("0"), help: "hill-climb eval budget (0 = heuristic only)" },
         FlagSpec { name: "workdir", default: Some("runs"), help: "checkpoint cache directory" },
+        FlagSpec {
+            name: "checkpoint-every",
+            default: Some("0"),
+            help: "pipeline: snapshot train/search state to workdir every N \
+                   steps, with divergence rollback (0 = guards off)",
+        },
+        FlagSpec {
+            name: "rollback-budget",
+            default: Some("3"),
+            help: "pipeline: training divergence rollbacks tolerated before a \
+                   clean abort (needs --checkpoint-every)",
+        },
+        FlagSpec {
+            name: "eval-timeout-ms",
+            default: Some("0"),
+            help: "pipeline: run search evals in a supervised worker with this \
+                   per-call timeout; wedged workers are respawned and the eval \
+                   retried (0 = in-process evals)",
+        },
         FlagSpec { name: "requests", default: Some("32"), help: "serve: request count" },
         FlagSpec { name: "max-new", default: Some("8"), help: "serve: max new tokens" },
         FlagSpec {
@@ -123,7 +142,7 @@ fn flags() -> Vec<FlagSpec> {
 }
 
 /// Switches (value-less flags) shared by all subcommands.
-const SWITCHES: &[&str] = &["brownout"];
+const SWITCHES: &[&str] = &["brownout", "resume"];
 
 fn parse_tasks(spec: &str) -> Result<Vec<Task>> {
     let all: Vec<Task> = Task::MATH.iter().chain(Task::COMMONSENSE.iter()).copied().collect();
@@ -298,6 +317,10 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         hill_climb_budget: args.get_usize("hill-climb")?,
         search_eval_examples: 32,
         workdir: Some(args.get("workdir").into()),
+        checkpoint_every: args.get_usize("checkpoint-every")?,
+        resume: args.has("resume"),
+        rollback_budget: args.get_usize("rollback-budget")?,
+        eval_timeout_ms: args.get_u64("eval-timeout-ms")?,
     };
     let pipeline = ShearsPipeline::new(&rt, &manifest, opts)?;
     let report = pipeline.run()?;

@@ -14,29 +14,12 @@
 
 use crate::model::manifest::{ModelConfig, ParamSpec};
 use crate::tensor::HostTensor;
+use crate::util::durable;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
-
-/// Trailer magic closing the integrity footer appended by
-/// [`ParamStore::save`]. Footer layout, after the record payload:
-/// `[payload_len u64 le][fnv1a64 u64 le][b"SHF1"]`. Files without it
-/// (written before the footer existed) still load.
-const FOOTER_MAGIC: &[u8; 4] = b"SHF1";
-const FOOTER_LEN: usize = 8 + 8 + 4;
-
-/// FNV-1a 64-bit: tiny, dependency-free, and plenty to catch torn or
-/// bit-flipped checkpoints (this is corruption detection, not crypto).
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
 
 #[derive(Clone, Debug)]
 struct Entry {
@@ -217,17 +200,12 @@ impl ParamStore {
 
     // ------------------------------------------------------- checkpoints
 
-    /// Binary checkpoint: `"SHRS"`, `[count u64]`, then (name, tensor)
-    /// records, closed by an integrity footer (see [`FOOTER_MAGIC`]).
-    ///
-    /// The write is **atomic**: the payload goes to a temp file in the
-    /// same directory, is fsynced, and is renamed over `path`. A crash
-    /// (or a supervisor kill) mid-save leaves the previous checkpoint
-    /// intact — readers never observe a half-written file.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        // serialize in memory first so the checksum covers exactly the
-        // bytes that land on disk
+    /// Serialize to the checkpoint payload: `"SHRS"`, `[count u64]`,
+    /// then (name, tensor) records. No footer — this is the embeddable
+    /// form (training checkpoints nest several stores in one file);
+    /// [`ParamStore::save`] adds the integrity footer via
+    /// [`durable::write_atomic`].
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
         let mut payload = Vec::new();
         payload.extend_from_slice(b"SHRS");
         payload.extend_from_slice(&(self.map.len() as u64).to_le_bytes());
@@ -237,36 +215,25 @@ impl ParamStore {
             payload.extend_from_slice(nb);
             e.t.write_to(&mut payload)?;
         }
-        let checksum = fnv1a64(&payload);
+        Ok(payload)
+    }
 
-        // same-directory temp file so the final rename never crosses a
-        // filesystem boundary (cross-device renames are not atomic)
-        let mut tmp_name = path
-            .file_name()
-            .map(|n| n.to_os_string())
-            .unwrap_or_else(|| std::ffi::OsString::from("checkpoint"));
-        tmp_name.push(".tmp");
-        let tmp = path.with_file_name(tmp_name);
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("create {}", tmp.display()))?;
-        f.write_all(&payload)?;
-        f.write_all(&(payload.len() as u64).to_le_bytes())?;
-        f.write_all(&checksum.to_le_bytes())?;
-        f.write_all(FOOTER_MAGIC)?;
-        f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
-        drop(f);
-        std::fs::rename(&tmp, path)
-            .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
-        // best-effort directory fsync so the rename itself is durable;
-        // some platforms refuse to open directories — not fatal
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                if let Ok(d) = std::fs::File::open(dir) {
-                    let _ = d.sync_all();
-                }
-            }
-        }
-        Ok(())
+    /// Parse a payload produced by [`ParamStore::to_bytes`].
+    /// Corruption is a clean `corrupt checkpoint` error — never a
+    /// panic, never a partially-filled store.
+    pub fn from_bytes(payload: &[u8]) -> Result<Self> {
+        Self::parse(payload)
+    }
+
+    /// Binary checkpoint: the [`ParamStore::to_bytes`] payload closed
+    /// by an integrity footer ([`durable::FOOTER_MAGIC`]).
+    ///
+    /// The write is **atomic** (same-directory temp file + fsync +
+    /// rename — [`durable::write_atomic`]). A crash (or a supervisor
+    /// kill) mid-save leaves the previous checkpoint intact — readers
+    /// never observe a half-written file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        durable::write_atomic(path, &self.to_bytes()?)
     }
 
     /// Load a checkpoint, validating the integrity footer when present.
@@ -275,38 +242,7 @@ impl ParamStore {
     /// panic, never a partially-filled store. Footer-less files written
     /// by older versions still load.
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
-        let path = path.as_ref();
-        let buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
-        let payload = match Self::verify_footer(&buf)? {
-            Some(len) => &buf[..len],
-            None => &buf[..], // legacy footer-less checkpoint
-        };
-        Self::parse(payload)
-    }
-
-    /// `Ok(Some(payload_len))` when `buf` ends in a verified integrity
-    /// footer, `Ok(None)` for legacy footer-less files, `Err` when a
-    /// footer is present but its claims don't hold.
-    fn verify_footer(buf: &[u8]) -> Result<Option<usize>> {
-        if buf.len() < FOOTER_LEN || &buf[buf.len() - 4..] != FOOTER_MAGIC {
-            return Ok(None);
-        }
-        let fstart = buf.len() - FOOTER_LEN;
-        let payload_len =
-            u64::from_le_bytes(buf[fstart..fstart + 8].try_into().unwrap()) as usize;
-        let stored = u64::from_le_bytes(buf[fstart + 8..fstart + 16].try_into().unwrap());
-        if payload_len != fstart {
-            bail!(
-                "corrupt checkpoint: footer claims {payload_len} payload bytes, file has {fstart}"
-            );
-        }
-        let actual = fnv1a64(&buf[..payload_len]);
-        if actual != stored {
-            bail!(
-                "corrupt checkpoint: checksum mismatch (stored {stored:#018x}, computed {actual:#018x})"
-            );
-        }
-        Ok(Some(payload_len))
+        Self::parse(&durable::read_verified(path, "checkpoint")?)
     }
 
     fn parse(payload: &[u8]) -> Result<Self> {
@@ -450,7 +386,7 @@ mod tests {
         let path = dir.join("params.bin");
         base.save(&path).unwrap();
         let bytes = std::fs::read(&path).unwrap();
-        assert_eq!(&bytes[bytes.len() - 4..], FOOTER_MAGIC, "footer trailer magic");
+        assert_eq!(&bytes[bytes.len() - 4..], durable::FOOTER_MAGIC, "footer trailer magic");
         assert!(
             !dir.join("params.bin.tmp").exists(),
             "temp file is renamed away, not left behind"

@@ -11,10 +11,25 @@
 //! validation pass through the PJRT executable), so every strategy runs
 //! through a memoizing [`CachedEvaluator`] and reports how many unique
 //! evaluations it spent.
+//!
+//! Long multi-generation runs are **durable**: the `*_durable`
+//! variants ([`nsga2_durable`], [`rnsga2_durable`],
+//! [`hill_climb_durable`]) periodically snapshot population,
+//! objectives, RNG state, and the evaluator cache to an atomic
+//! checksummed file ([`crate::util::durable`]), and `--resume` picks a
+//! killed run back up at the last generation boundary. Because the
+//! xoshiro state and the eval-budget counter round-trip exactly, a
+//! resumed run is **bit-identical** to an uninterrupted one
+//! (`tests/pipeline_faults.rs`); corrupt snapshots fail with a clean
+//! `corrupt snapshot: …` error, never a panic or a partial population.
 
 use crate::nls::{SearchSpace, SubAdapterConfig};
+use crate::util::durable;
 use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
+use std::io::Read;
+use std::path::PathBuf;
 
 /// Anything that can score a sub-adapter (higher = better accuracy).
 pub trait Evaluator {
@@ -38,6 +53,22 @@ impl<E: Evaluator> CachedEvaluator<E> {
     pub fn new(inner: E) -> Self {
         CachedEvaluator { inner, cache: HashMap::new(), evals: 0 }
     }
+
+    /// Cache contents in deterministic (sorted-key) order, for durable
+    /// snapshots.
+    pub fn cache_entries(&self) -> Vec<(Vec<usize>, f64)> {
+        let mut v: Vec<(Vec<usize>, f64)> = self.cache.iter().map(|(k, &s)| (k.clone(), s)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Restore cache + spend counter from a snapshot. Restoring *both*
+    /// makes a resumed search bit-identical: memo hits replay for free
+    /// and the budget check fires at exactly the original point.
+    pub fn restore_cache(&mut self, entries: Vec<(Vec<usize>, f64)>, evals: usize) {
+        self.cache = entries.into_iter().collect();
+        self.evals = evals;
+    }
 }
 
 impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
@@ -52,12 +83,31 @@ impl<E: Evaluator> Evaluator for CachedEvaluator<E> {
     }
 }
 
-/// Search outcome: best config, its score, and evaluation spend.
+/// Search outcome: best config, its score, evaluation spend, and the
+/// final non-dominated front.
 #[derive(Clone, Debug)]
 pub struct SearchResult {
     pub config: SubAdapterConfig,
     pub score: f64,
     pub evals: usize,
+    /// final Pareto front as `(config, objectives)` pairs in the
+    /// survivor ranking's deterministic order (minimized objectives:
+    /// `[-accuracy, normalized params]`). Hill climbing reports its
+    /// single optimum. The resume-determinism pins compare this
+    /// bit-for-bit.
+    pub front: Vec<(SubAdapterConfig, Vec<f64>)>,
+}
+
+/// How a `*_durable` search persists its state.
+#[derive(Clone, Debug)]
+pub struct DurableOpts {
+    /// snapshot file (atomic + checksummed; see [`crate::util::durable`])
+    pub path: PathBuf,
+    /// snapshot every N generation boundaries (hill climbing: every N
+    /// accepted moves); clamped to ≥ 1
+    pub every: usize,
+    /// pick up from `path` when it exists (missing file = fresh start)
+    pub resume: bool,
 }
 
 // ---------------------------------------------------------- hill climbing
@@ -72,26 +122,75 @@ pub fn hill_climb<E: Evaluator>(
     ev: &mut CachedEvaluator<E>,
     budget: usize,
 ) -> SearchResult {
+    hill_climb_durable(space, start, ev, budget, None)
+        .expect("hill climb without durability performs no I/O")
+}
+
+/// [`hill_climb`] with durable state: every `every`-th accepted move
+/// (and the final optimum) snapshots the current config + evaluator
+/// cache, and `resume` continues a killed run bit-identically — the
+/// neighbor scan restarts from the restored config exactly as the
+/// uninterrupted run's scan restarts after each accepted move.
+pub fn hill_climb_durable<E: Evaluator>(
+    space: &SearchSpace,
+    start: SubAdapterConfig,
+    ev: &mut CachedEvaluator<E>,
+    budget: usize,
+    durable: Option<&DurableOpts>,
+) -> Result<SearchResult> {
     let mut cur = start;
+    if let Some(d) = durable {
+        if d.resume && d.path.exists() {
+            let snap = Snapshot::load(&d.path)?;
+            snap.check_identity(ALGO_HILL_CLIMB, 0, 1, space)?;
+            let ind =
+                snap.pop.first().context("corrupt snapshot: empty hill-climb population")?;
+            // hill-climb snapshots store concrete ranks, not choice
+            // indices (the climb walks rank space directly)
+            cur = SubAdapterConfig { ranks: ind.genes.clone() };
+            ev.restore_cache(snap.cache, snap.evals);
+        }
+    }
     let mut cur_score = ev.eval(&cur);
+    let mut accepted = 0usize;
     loop {
         let mut improved = false;
         for n in space.neighbors(&cur) {
             if ev.evals >= budget {
-                return SearchResult { config: cur, score: cur_score, evals: ev.evals };
+                return Ok(hc_result(space, cur, cur_score, ev.evals));
             }
             let s = ev.eval(&n);
             if s > cur_score {
                 cur = n;
                 cur_score = s;
                 improved = true;
+                accepted += 1;
+                if let Some(d) = durable {
+                    if accepted % d.every.max(1) == 0 {
+                        Snapshot::for_hill_climb(space, &cur, cur_score, ev).save(&d.path)?;
+                    }
+                }
                 break; // first improvement: cheap restarts of the scan
             }
         }
         if !improved {
-            return SearchResult { config: cur, score: cur_score, evals: ev.evals };
+            if let Some(d) = durable {
+                Snapshot::for_hill_climb(space, &cur, cur_score, ev).save(&d.path)?;
+            }
+            return Ok(hc_result(space, cur, cur_score, ev.evals));
         }
     }
+}
+
+fn hc_result(
+    space: &SearchSpace,
+    cur: SubAdapterConfig,
+    score: f64,
+    evals: usize,
+) -> SearchResult {
+    let params = cur.active_params(&space.dims) as f64
+        / space.maximal().active_params(&space.dims) as f64;
+    SearchResult { front: vec![(cur.clone(), vec![-score, params])], config: cur, score, evals }
 }
 
 // ------------------------------------------------------------- NSGA-II
@@ -208,18 +307,58 @@ impl<'a, E: Evaluator> Evolution<'a, E> {
     }
 
     /// Run generations with a pluggable survivor-ranking function.
-    fn run<R>(&mut self, generations: usize, budget: usize, rank: R) -> Vec<Ind>
+    ///
+    /// With `durable` set, the run snapshots at generation boundaries
+    /// (population + objectives + RNG state + evaluator cache) and —
+    /// when resuming — restores all of them, so the remaining
+    /// generations replay bit-identically: selection consumes no RNG
+    /// between the end of generation *g* and the start of *g+1*, which
+    /// makes the boundary state exactly the next iteration's start
+    /// state.
+    fn run<R>(
+        &mut self,
+        generations: usize,
+        budget: usize,
+        rank: R,
+        durable: Option<&DurableOpts>,
+        algo: u8,
+        seed: u64,
+    ) -> Result<Vec<Ind>>
     where
         R: Fn(&[Vec<f64>]) -> Vec<usize>, // returns survivor indices, best-first
     {
-        let mut pop: Vec<Ind> = (0..self.pop_size)
-            .map(|_| {
-                let genes = self.random_genes();
-                let (_, obj) = objectives(self.space, &genes, self.ev);
-                Ind { genes, obj }
-            })
-            .collect();
-        for _ in 0..generations {
+        let mut start_gen = 0usize;
+        let mut pop: Option<Vec<Ind>> = None;
+        if let Some(d) = durable {
+            if d.resume && d.path.exists() {
+                let snap = Snapshot::load(&d.path)?;
+                snap.check_identity(algo, seed, self.pop_size, self.space)?;
+                self.rng = Rng::from_state(snap.rng_s, snap.rng_spare);
+                self.ev.restore_cache(snap.cache, snap.evals);
+                start_gen = snap.gen_done;
+                pop = Some(snap.pop);
+            }
+        }
+        let mut pop = match pop {
+            Some(p) => p,
+            None => {
+                let p: Vec<Ind> = (0..self.pop_size)
+                    .map(|_| {
+                        let genes = self.random_genes();
+                        let (_, obj) = objectives(self.space, &genes, self.ev);
+                        Ind { genes, obj }
+                    })
+                    .collect();
+                // generation-0 snapshot: a kill inside the very first
+                // generation resumes without repaying the initial
+                // population's evaluations
+                if let Some(d) = durable {
+                    Snapshot::for_evolution(algo, seed, self, &p, 0).save(&d.path)?;
+                }
+                p
+            }
+        };
+        for generation in start_gen..generations {
             if self.ev.evals >= budget {
                 break;
             }
@@ -242,8 +381,14 @@ impl<'a, E: Evaluator> Evolution<'a, E> {
             let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.obj.clone()).collect();
             let order = rank(&objs);
             pop = order.into_iter().take(self.pop_size).map(|i| pop[i].clone()).collect();
+            if let Some(d) = durable {
+                let done = generation + 1;
+                if done % d.every.max(1) == 0 || done == generations {
+                    Snapshot::for_evolution(algo, seed, self, &pop, done).save(&d.path)?;
+                }
+            }
         }
-        pop
+        Ok(pop)
     }
 }
 
@@ -269,9 +414,26 @@ pub fn nsga2<E: Evaluator>(
     generations: usize,
     budget: usize,
 ) -> SearchResult {
+    nsga2_durable(space, ev, seed, pop_size, generations, budget, None)
+        .expect("nsga2 without durability performs no I/O")
+}
+
+/// [`nsga2`] with durable generation-boundary snapshots and resume
+/// (see [`DurableOpts`]). A run killed mid-generation and resumed
+/// produces a bit-identical final Pareto front to an uninterrupted
+/// run.
+pub fn nsga2_durable<E: Evaluator>(
+    space: &SearchSpace,
+    ev: &mut CachedEvaluator<E>,
+    seed: u64,
+    pop_size: usize,
+    generations: usize,
+    budget: usize,
+    durable: Option<&DurableOpts>,
+) -> Result<SearchResult> {
     let mut evo = Evolution { space, ev, rng: Rng::new(seed), pop_size };
-    let pop = evo.run(generations, budget, nsga2_rank);
-    best_by_accuracy(space, pop, ev)
+    let pop = evo.run(generations, budget, nsga2_rank, durable, ALGO_NSGA2, seed)?;
+    Ok(best_by_accuracy(space, pop, ev))
 }
 
 /// RNSGA-II (Deb & Sundar 2006): survivor ranking biased toward reference
@@ -286,6 +448,23 @@ pub fn rnsga2<E: Evaluator>(
     budget: usize,
     reference: Vec<f64>,
 ) -> SearchResult {
+    rnsga2_durable(space, ev, seed, pop_size, generations, budget, reference, None)
+        .expect("rnsga2 without durability performs no I/O")
+}
+
+/// [`rnsga2`] with durable generation-boundary snapshots and resume
+/// (see [`DurableOpts`]).
+#[allow(clippy::too_many_arguments)]
+pub fn rnsga2_durable<E: Evaluator>(
+    space: &SearchSpace,
+    ev: &mut CachedEvaluator<E>,
+    seed: u64,
+    pop_size: usize,
+    generations: usize,
+    budget: usize,
+    reference: Vec<f64>,
+    durable: Option<&DurableOpts>,
+) -> Result<SearchResult> {
     let rank = move |objs: &[Vec<f64>]| -> Vec<usize> {
         let fronts = non_dominated_sort(objs);
         let mut order = Vec::with_capacity(objs.len());
@@ -308,8 +487,8 @@ pub fn rnsga2<E: Evaluator>(
         order
     };
     let mut evo = Evolution { space, ev, rng: Rng::new(seed), pop_size };
-    let pop = evo.run(generations, budget, rank);
-    best_by_accuracy(space, pop, ev)
+    let pop = evo.run(generations, budget, rank, durable, ALGO_RNSGA2, seed)?;
+    Ok(best_by_accuracy(space, pop, ev))
 }
 
 fn best_by_accuracy<E: Evaluator>(
@@ -317,14 +496,267 @@ fn best_by_accuracy<E: Evaluator>(
     pop: Vec<Ind>,
     ev: &mut CachedEvaluator<E>,
 ) -> SearchResult {
+    let cfg_of = |genes: &[usize]| SubAdapterConfig {
+        ranks: genes.iter().map(|g| space.choices[*g]).collect(),
+    };
+    let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.obj.clone()).collect();
+    let front = non_dominated_sort(&objs)
+        .first()
+        .map(|f| f.iter().map(|&i| (cfg_of(&pop[i].genes), pop[i].obj.clone())).collect())
+        .unwrap_or_default();
     let best = pop
         .into_iter()
         .min_by(|a, b| a.obj[0].partial_cmp(&b.obj[0]).unwrap_or(std::cmp::Ordering::Equal))
         .expect("empty population");
-    let config = SubAdapterConfig {
-        ranks: best.genes.iter().map(|g| space.choices[*g]).collect(),
-    };
-    SearchResult { config, score: -best.obj[0], evals: ev.evals }
+    SearchResult { config: cfg_of(&best.genes), score: -best.obj[0], evals: ev.evals, front }
+}
+
+// --------------------------------------------------- durable snapshots
+
+const ALGO_HILL_CLIMB: u8 = 0;
+const ALGO_NSGA2: u8 = 1;
+const ALGO_RNSGA2: u8 = 2;
+
+/// On-disk search state: `"SHSS"` + version, the run's identity
+/// (algorithm, seed, population size, space shape), progress
+/// (generations done, evaluations spent), the xoshiro RNG state, the
+/// population with objectives, and the evaluator cache — everything a
+/// resume needs to replay the remaining generations bit-identically.
+/// For hill climbing, `pop` holds one individual whose genes are
+/// concrete ranks (the climb walks rank space, not choice indices).
+struct Snapshot {
+    algo: u8,
+    seed: u64,
+    pop_size: usize,
+    n_modules: usize,
+    n_choices: usize,
+    gen_done: usize,
+    evals: usize,
+    rng_s: [u64; 4],
+    rng_spare: Option<f64>,
+    pop: Vec<Ind>,
+    cache: Vec<(Vec<usize>, f64)>,
+}
+
+impl Snapshot {
+    fn for_evolution<E: Evaluator>(
+        algo: u8,
+        seed: u64,
+        evo: &Evolution<'_, E>,
+        pop: &[Ind],
+        gen_done: usize,
+    ) -> Snapshot {
+        let (rng_s, rng_spare) = evo.rng.state();
+        Snapshot {
+            algo,
+            seed,
+            pop_size: evo.pop_size,
+            n_modules: evo.space.n_modules,
+            n_choices: evo.space.choices.len(),
+            gen_done,
+            evals: evo.ev.evals,
+            rng_s,
+            rng_spare,
+            pop: pop.to_vec(),
+            cache: evo.ev.cache_entries(),
+        }
+    }
+
+    fn for_hill_climb<E: Evaluator>(
+        space: &SearchSpace,
+        cur: &SubAdapterConfig,
+        score: f64,
+        ev: &CachedEvaluator<E>,
+    ) -> Snapshot {
+        Snapshot {
+            algo: ALGO_HILL_CLIMB,
+            seed: 0,
+            pop_size: 1,
+            n_modules: space.n_modules,
+            n_choices: space.choices.len(),
+            gen_done: 0,
+            evals: ev.evals,
+            rng_s: [0; 4],
+            rng_spare: None,
+            pop: vec![Ind { genes: cur.ranks.clone(), obj: vec![-score] }],
+            cache: ev.cache_entries(),
+        }
+    }
+
+    fn check_identity(
+        &self,
+        algo: u8,
+        seed: u64,
+        pop_size: usize,
+        space: &SearchSpace,
+    ) -> Result<()> {
+        if self.algo != algo
+            || self.seed != seed
+            || self.pop_size != pop_size
+            || self.n_modules != space.n_modules
+            || self.n_choices != space.choices.len()
+        {
+            bail!(
+                "snapshot identity mismatch: file is (algo {}, seed {}, pop {}, modules {}, \
+                 choices {}) but this run is (algo {algo}, seed {seed}, pop {pop_size}, \
+                 modules {}, choices {})",
+                self.algo,
+                self.seed,
+                self.pop_size,
+                self.n_modules,
+                self.n_choices,
+                space.n_modules,
+                space.choices.len(),
+            );
+        }
+        Ok(())
+    }
+
+    fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut p = Vec::new();
+        p.extend_from_slice(b"SHSS");
+        p.extend_from_slice(&1u32.to_le_bytes()); // version
+        p.push(self.algo);
+        p.extend_from_slice(&self.seed.to_le_bytes());
+        for v in [self.pop_size, self.n_modules, self.n_choices, self.gen_done, self.evals] {
+            p.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        for w in self.rng_s {
+            p.extend_from_slice(&w.to_le_bytes());
+        }
+        p.push(self.rng_spare.is_some() as u8);
+        p.extend_from_slice(&self.rng_spare.unwrap_or(0.0).to_le_bytes());
+        let write_usizes = |p: &mut Vec<u8>, xs: &[usize]| {
+            p.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+            for &x in xs {
+                p.extend_from_slice(&(x as u64).to_le_bytes());
+            }
+        };
+        let write_f64s = |p: &mut Vec<u8>, xs: &[f64]| {
+            p.extend_from_slice(&(xs.len() as u64).to_le_bytes());
+            for &x in xs {
+                p.extend_from_slice(&x.to_le_bytes());
+            }
+        };
+        p.extend_from_slice(&(self.pop.len() as u64).to_le_bytes());
+        for ind in &self.pop {
+            write_usizes(&mut p, &ind.genes);
+            write_f64s(&mut p, &ind.obj);
+        }
+        p.extend_from_slice(&(self.cache.len() as u64).to_le_bytes());
+        for (key, val) in &self.cache {
+            write_usizes(&mut p, key);
+            p.extend_from_slice(&val.to_le_bytes());
+        }
+        durable::write_atomic(path, &p)
+            .with_context(|| format!("save search snapshot {}", path.display()))
+    }
+
+    fn load(path: &std::path::Path) -> Result<Snapshot> {
+        let payload = durable::read_verified_strict(path, "snapshot")?;
+        let mut r = std::io::Cursor::new(payload.as_slice());
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("corrupt snapshot: truncated header")?;
+        if &magic != b"SHSS" {
+            bail!("not a shears search snapshot");
+        }
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4).context("corrupt snapshot: truncated header")?;
+        let version = u32::from_le_bytes(b4);
+        if version != 1 {
+            bail!("corrupt snapshot: unsupported version {version}");
+        }
+        let mut b1 = [0u8; 1];
+        r.read_exact(&mut b1).context("corrupt snapshot: truncated header")?;
+        let algo = b1[0];
+        let read_u64 = |r: &mut std::io::Cursor<&[u8]>| -> Result<u64> {
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8).context("corrupt snapshot: truncated")?;
+            Ok(u64::from_le_bytes(b8))
+        };
+        let seed = read_u64(&mut r)?;
+        let pop_size = read_u64(&mut r)? as usize;
+        let n_modules = read_u64(&mut r)? as usize;
+        let n_choices = read_u64(&mut r)? as usize;
+        let gen_done = read_u64(&mut r)? as usize;
+        let evals = read_u64(&mut r)? as usize;
+        let mut rng_s = [0u64; 4];
+        for w in rng_s.iter_mut() {
+            *w = read_u64(&mut r)?;
+        }
+        let mut b1 = [0u8; 1];
+        r.read_exact(&mut b1).context("corrupt snapshot: truncated")?;
+        let spare_bits = read_u64(&mut r)?;
+        let rng_spare = (b1[0] != 0).then(|| f64::from_bits(spare_bits));
+        // bound every length claim by the remaining payload so a
+        // corrupt count is a clean error, not an OOM attempt
+        let remaining =
+            |r: &std::io::Cursor<&[u8]>| payload.len().saturating_sub(r.position() as usize);
+        let read_len = |r: &mut std::io::Cursor<&[u8]>, what: &str| -> Result<usize> {
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8).context("corrupt snapshot: truncated")?;
+            let n = u64::from_le_bytes(b8) as usize;
+            if n > remaining(r) {
+                bail!("corrupt snapshot: {what} count {n} exceeds payload");
+            }
+            Ok(n)
+        };
+        let read_usizes = |r: &mut std::io::Cursor<&[u8]>, what: &str| -> Result<Vec<usize>> {
+            let n = read_len(r, what)?;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut b8 = [0u8; 8];
+                r.read_exact(&mut b8).context("corrupt snapshot: truncated")?;
+                out.push(u64::from_le_bytes(b8) as usize);
+            }
+            Ok(out)
+        };
+        let read_f64s = |r: &mut std::io::Cursor<&[u8]>, what: &str| -> Result<Vec<f64>> {
+            let n = read_len(r, what)?;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut b8 = [0u8; 8];
+                r.read_exact(&mut b8).context("corrupt snapshot: truncated")?;
+                out.push(f64::from_le_bytes(b8));
+            }
+            Ok(out)
+        };
+        let pop_len = read_len(&mut r, "population")?;
+        let mut pop = Vec::with_capacity(pop_len);
+        for i in 0..pop_len {
+            let genes = read_usizes(&mut r, "genes")
+                .with_context(|| format!("corrupt snapshot: individual {i} of {pop_len}"))?;
+            let obj = read_f64s(&mut r, "objectives")
+                .with_context(|| format!("corrupt snapshot: individual {i} of {pop_len}"))?;
+            pop.push(Ind { genes, obj });
+        }
+        let cache_len = read_len(&mut r, "cache")?;
+        let mut cache = Vec::with_capacity(cache_len);
+        for i in 0..cache_len {
+            let key = read_usizes(&mut r, "cache key")
+                .with_context(|| format!("corrupt snapshot: cache entry {i} of {cache_len}"))?;
+            let mut b8 = [0u8; 8];
+            r.read_exact(&mut b8).context("corrupt snapshot: truncated")?;
+            cache.push((key, f64::from_le_bytes(b8)));
+        }
+        let pos = r.position() as usize;
+        if pos != payload.len() {
+            bail!("corrupt snapshot: {} trailing bytes", payload.len() - pos);
+        }
+        Ok(Snapshot {
+            algo,
+            seed,
+            pop_size,
+            n_modules,
+            n_choices,
+            gen_done,
+            evals,
+            rng_s,
+            rng_spare,
+            pop,
+            cache,
+        })
+    }
 }
 
 #[cfg(test)]

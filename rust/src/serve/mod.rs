@@ -61,12 +61,16 @@
 //! (`rust/tests/serve_overload.rs`).
 
 pub mod brownout;
-pub mod fault;
 pub mod registry;
 pub mod server;
 
+/// Fault injection grew beyond serving (eval/train injectors live on
+/// the same plan) and moved to the crate root; re-exported so
+/// `serve::fault::…` paths keep working.
+pub use crate::fault;
+
 pub use brownout::{BrownoutController, BrownoutOpts, BrownoutState, BrownoutThresholds};
-pub use fault::{FaultKind, FaultPlan, ServeFault};
+pub use crate::fault::{FaultKind, FaultPlan, ServeFault};
 pub use registry::{binding_from_store, AdapterId, AdapterRegistry};
 pub use server::{RejectReason, ServeServer, ServerOpts, StreamHandle, Submit, SubmitHandle};
 

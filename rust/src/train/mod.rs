@@ -18,13 +18,17 @@
 
 use crate::data::batch::{Batch, Batcher, MaskMode};
 use crate::data::{Example, Vocab};
+use crate::fault::FaultPlan;
 use crate::model::{EntryPoint, ModelConfig, ParamStore};
 use crate::nls::SearchSpace;
 use crate::ops::model::{AdapterBinding, NamedTensors};
 use crate::runtime::{Arg, DecodeSession, DecodeState, Exe, ResidentParams, Runtime};
 use crate::tensor::HostTensor;
+use crate::util::durable;
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
+use std::io::Read;
+use std::path::PathBuf;
 
 /// Cosine learning-rate schedule with linear warmup.
 pub fn lr_at(step: usize, total: usize, peak: f64, warmup: usize) -> f64 {
@@ -46,11 +50,41 @@ pub struct TrainOpts {
     /// takes a rank mask, the full mask is used (== vanilla LoRA)
     pub sample_nls: bool,
     pub log_every: usize,
+    /// take a last-good checkpoint every N steps (0 = guards off: a
+    /// non-finite loss aborts immediately, exactly the legacy behavior)
+    pub checkpoint_every: usize,
+    /// when set, periodic checkpoints are also persisted here (atomic,
+    /// checksummed) so an interrupted run can `resume`
+    pub checkpoint_path: Option<PathBuf>,
+    /// restore step / weights / RNG / dataset cursor from
+    /// `checkpoint_path` if it exists, then continue to `steps`
+    pub resume: bool,
+    /// how many divergence rollbacks to tolerate before aborting
+    pub rollback_budget: usize,
+    /// treat `loss > spike_factor × mean(last 8 losses)` as divergence
+    /// (0.0 = only non-finite losses count)
+    pub spike_factor: f64,
+    /// deterministic fault injections scoped to training (`nanloss`);
+    /// when empty, `SHEARS_FAULT` is consulted
+    pub fault: FaultPlan,
 }
 
 impl Default for TrainOpts {
     fn default() -> Self {
-        TrainOpts { steps: 300, lr: 3e-3, warmup: 20, seed: 42, sample_nls: true, log_every: 50 }
+        TrainOpts {
+            steps: 300,
+            lr: 3e-3,
+            warmup: 20,
+            seed: 42,
+            sample_nls: true,
+            log_every: 50,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: false,
+            rollback_budget: 3,
+            spike_factor: 0.0,
+            fault: FaultPlan::none(),
+        }
     }
 }
 
@@ -58,8 +92,13 @@ impl Default for TrainOpts {
 #[derive(Clone, Debug, Default)]
 pub struct TrainLog {
     pub losses: Vec<f32>,
+    /// learning rate applied at each recorded step (resume pins: a
+    /// resumed run's sequence must equal the uninterrupted run's)
+    pub lrs: Vec<f32>,
     pub steps: usize,
     pub wall_secs: f64,
+    /// divergence rollbacks taken (0 when guards never fired)
+    pub rollbacks: usize,
 }
 
 impl TrainLog {
@@ -197,7 +236,137 @@ impl<'rt> TrainSession<'rt> {
     }
 }
 
+// --------------------------------------------------- durable train state
+
+const TRAIN_CK_MAGIC: &[u8; 4] = b"SHTC";
+const TRAIN_CK_VERSION: u32 = 1;
+
+/// Everything the guarded loop needs to rewind or resume a run
+/// bit-identically: global step, optimizer state, the NLS-sampling RNG
+/// (full xoshiro + Box–Muller spare), the dataset cursor, and the loss /
+/// LR traces recorded so far.
+#[derive(Clone)]
+struct TrainCheckpoint {
+    step: usize,
+    batcher_pos: usize,
+    rng_s: [u64; 4],
+    rng_spare: Option<f64>,
+    losses: Vec<f32>,
+    lrs: Vec<f32>,
+    trainable: ParamStore,
+    m: ParamStore,
+    v: ParamStore,
+}
+
+impl TrainCheckpoint {
+    /// Serialize and persist atomically with the crate-wide integrity
+    /// footer (same writer as model checkpoints and search snapshots).
+    fn save(&self, path: &std::path::Path) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(TRAIN_CK_MAGIC);
+        buf.extend_from_slice(&TRAIN_CK_VERSION.to_le_bytes());
+        buf.extend_from_slice(&(self.step as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.batcher_pos as u64).to_le_bytes());
+        for s in self.rng_s {
+            buf.extend_from_slice(&s.to_le_bytes());
+        }
+        buf.push(self.rng_spare.is_some() as u8);
+        buf.extend_from_slice(&self.rng_spare.unwrap_or(0.0).to_le_bytes());
+        for trace in [&self.losses, &self.lrs] {
+            buf.extend_from_slice(&(trace.len() as u64).to_le_bytes());
+            for x in trace {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for store in [&self.trainable, &self.m, &self.v] {
+            let payload = store.to_bytes()?;
+            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            buf.extend_from_slice(&payload);
+        }
+        durable::write_atomic(path, &buf)
+            .with_context(|| format!("save train checkpoint {}", path.display()))
+    }
+
+    fn load(path: &std::path::Path) -> Result<Self> {
+        let payload = durable::read_verified_strict(path, "train checkpoint")?;
+        let mut cur = std::io::Cursor::new(payload.as_slice());
+        let mut magic = [0u8; 4];
+        cur.read_exact(&mut magic).context("corrupt train checkpoint: truncated header")?;
+        if &magic != TRAIN_CK_MAGIC {
+            bail!("not a shears train checkpoint: {}", path.display());
+        }
+        let read_u64 = |cur: &mut std::io::Cursor<&[u8]>| -> Result<u64> {
+            let mut b = [0u8; 8];
+            cur.read_exact(&mut b).context("corrupt train checkpoint: truncated")?;
+            Ok(u64::from_le_bytes(b))
+        };
+        let mut ver = [0u8; 4];
+        cur.read_exact(&mut ver).context("corrupt train checkpoint: truncated header")?;
+        let ver = u32::from_le_bytes(ver);
+        if ver != TRAIN_CK_VERSION {
+            bail!("corrupt train checkpoint: unsupported version {ver}");
+        }
+        let step = read_u64(&mut cur)? as usize;
+        let batcher_pos = read_u64(&mut cur)? as usize;
+        let mut rng_s = [0u64; 4];
+        for s in &mut rng_s {
+            *s = read_u64(&mut cur)?;
+        }
+        let mut flag = [0u8; 1];
+        cur.read_exact(&mut flag).context("corrupt train checkpoint: truncated")?;
+        let spare = f64::from_bits(read_u64(&mut cur)?);
+        let rng_spare = (flag[0] != 0).then_some(spare);
+        let remaining = |cur: &std::io::Cursor<&[u8]>| payload.len() - cur.position() as usize;
+        let mut traces: Vec<Vec<f32>> = Vec::with_capacity(2);
+        for what in ["loss", "lr"] {
+            let n = read_u64(&mut cur)? as usize;
+            if n > remaining(&cur) / 4 {
+                bail!("corrupt train checkpoint: {what} trace count {n} exceeds payload");
+            }
+            let mut trace = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut b = [0u8; 4];
+                cur.read_exact(&mut b).context("corrupt train checkpoint: truncated")?;
+                trace.push(f32::from_le_bytes(b));
+            }
+            traces.push(trace);
+        }
+        let mut stores: Vec<ParamStore> = Vec::with_capacity(3);
+        for what in ["trainable", "m", "v"] {
+            let n = read_u64(&mut cur)? as usize;
+            if n > remaining(&cur) {
+                bail!("corrupt train checkpoint: {what} store claims {n} bytes, payload has less");
+            }
+            let at = cur.position() as usize;
+            stores.push(
+                ParamStore::from_bytes(&payload[at..at + n])
+                    .with_context(|| format!("corrupt train checkpoint: {what} store"))?,
+            );
+            cur.set_position((at + n) as u64);
+        }
+        if remaining(&cur) != 0 {
+            bail!("corrupt train checkpoint: {} trailing bytes", remaining(&cur));
+        }
+        let v = stores.pop().unwrap();
+        let m = stores.pop().unwrap();
+        let trainable = stores.pop().unwrap();
+        let lrs = traces.pop().unwrap();
+        let losses = traces.pop().unwrap();
+        Ok(TrainCheckpoint { step, batcher_pos, rng_s, rng_spare, losses, lrs, trainable, m, v })
+    }
+}
+
 /// High-level training loop over a dataset batcher.
+///
+/// With `checkpoint_every > 0` the loop is *guarded*: it snapshots
+/// last-good state (weights, optimizer moments, RNG, dataset cursor) at
+/// every boundary, detects divergence (non-finite loss, or a spike past
+/// `spike_factor ×` the trailing-8 mean), rolls back and deterministically
+/// replays — the replayed steps recompute `lr_at` from the restored global
+/// step, so a recovered run is bit-identical to one that never diverged.
+/// After `rollback_budget` rollbacks it aborts cleanly. With
+/// `checkpoint_path` set, boundaries also persist to disk and
+/// `resume` continues an interrupted run from the durable state.
 #[allow(clippy::too_many_arguments)]
 pub fn train_loop(
     rt: &Runtime,
@@ -210,6 +379,12 @@ pub fn train_loop(
     space: Option<&SearchSpace>,
     opts: &TrainOpts,
 ) -> Result<TrainLog> {
+    let mut fault = opts.fault.clone();
+    if fault.is_empty() {
+        if let Some(env) = FaultPlan::from_env()? {
+            fault = env;
+        }
+    }
     let session = TrainSession::new(rt, cfg, entry_name, frozen)?;
     let specs: Vec<crate::model::ParamSpec> = session
         .trainable_names()
@@ -229,7 +404,54 @@ pub fn train_loop(
         .any(|i| i.name == "rank_mask");
     let timer = crate::util::log::Timer::new(&format!("train {entry_name}"));
     let mut log = TrainLog::default();
-    for step in 0..opts.steps {
+    let mut step = 0usize;
+    if opts.resume {
+        if let Some(path) = opts.checkpoint_path.as_deref() {
+            if path.exists() {
+                let ck = TrainCheckpoint::load(path)
+                    .with_context(|| format!("resume train from {}", path.display()))?;
+                step = ck.step;
+                *trainable = ck.trainable;
+                m = ck.m;
+                v = ck.v;
+                rng = Rng::from_state(ck.rng_s, ck.rng_spare);
+                batcher.set_pos(ck.batcher_pos);
+                log.losses = ck.losses;
+                log.lrs = ck.lrs;
+                crate::info!("{entry_name} resumed at step {step} of {}", opts.steps);
+            }
+        }
+    }
+    let snapshot = |step: usize,
+                    trainable: &ParamStore,
+                    m: &ParamStore,
+                    v: &ParamStore,
+                    rng: &Rng,
+                    batcher: &Batcher,
+                    log: &TrainLog| {
+        let (rng_s, rng_spare) = rng.state();
+        TrainCheckpoint {
+            step,
+            batcher_pos: batcher.pos(),
+            rng_s,
+            rng_spare,
+            losses: log.losses.clone(),
+            lrs: log.lrs.clone(),
+            trainable: trainable.clone(),
+            m: m.clone(),
+            v: v.clone(),
+        }
+    };
+    let mut last_good: Option<TrainCheckpoint> = None;
+    let mut rollbacks = 0usize;
+    while step < opts.steps {
+        if opts.checkpoint_every > 0 && step % opts.checkpoint_every == 0 {
+            let ck = snapshot(step, trainable, &m, &v, &rng, batcher, &log);
+            if let Some(path) = opts.checkpoint_path.as_deref() {
+                ck.save(path)?;
+            }
+            last_good = Some(ck);
+        }
         let batch = batcher.next_cyclic();
         let rank_mask = if needs_mask {
             Some(match space {
@@ -241,7 +463,7 @@ pub fn train_loop(
             None
         };
         let lr = lr_at(step, opts.steps, opts.lr, opts.warmup);
-        let loss = session.step(
+        let mut loss = session.step(
             trainable,
             &mut m,
             &mut v,
@@ -251,16 +473,56 @@ pub fn train_loop(
             lr,
             rank_mask.as_ref(),
         )?;
-        if !loss.is_finite() {
-            bail!("loss diverged (step {step}): {loss}");
+        if !fault.is_empty() && fault.fire_train().nan_loss {
+            loss = f32::NAN;
+        }
+        let spiking = opts.spike_factor > 0.0 && log.losses.len() >= 8 && {
+            let tail = &log.losses[log.losses.len() - 8..];
+            let mean = tail.iter().sum::<f32>() / tail.len() as f32;
+            mean.is_finite() && mean > 0.0 && loss > opts.spike_factor as f32 * mean
+        };
+        if !loss.is_finite() || spiking {
+            let Some(ck) = last_good.as_ref() else {
+                bail!("loss diverged (step {step}): {loss}");
+            };
+            if rollbacks >= opts.rollback_budget {
+                bail!(
+                    "loss diverged (step {step}): {loss}; rollback budget {} exhausted",
+                    opts.rollback_budget
+                );
+            }
+            rollbacks += 1;
+            crate::info!(
+                "{entry_name} loss diverged at step {step} ({loss}); \
+                 rolling back to step {} ({rollbacks}/{})",
+                ck.step,
+                opts.rollback_budget
+            );
+            *trainable = ck.trainable.clone();
+            m = ck.m.clone();
+            v = ck.v.clone();
+            rng = Rng::from_state(ck.rng_s, ck.rng_spare);
+            batcher.set_pos(ck.batcher_pos);
+            log.losses.truncate(ck.losses.len());
+            log.lrs.truncate(ck.lrs.len());
+            step = ck.step;
+            continue;
         }
         log.losses.push(loss);
+        log.lrs.push(lr as f32);
         if opts.log_every > 0 && step % opts.log_every == 0 {
             crate::info!("{entry_name} step {step:>5} loss {loss:.4} lr {lr:.2e}");
+        }
+        step += 1;
+    }
+    if opts.checkpoint_every > 0 {
+        if let Some(path) = opts.checkpoint_path.as_deref() {
+            snapshot(step, trainable, &m, &v, &rng, batcher, &log).save(path)?;
         }
     }
     log.steps = opts.steps;
     log.wall_secs = timer.stop();
+    log.rollbacks = rollbacks;
     Ok(log)
 }
 
@@ -546,7 +808,7 @@ mod tests {
 
     #[test]
     fn train_log_tail_mean() {
-        let log = TrainLog { losses: vec![5.0, 4.0, 3.0, 2.0], steps: 4, wall_secs: 0.0 };
+        let log = TrainLog { losses: vec![5.0, 4.0, 3.0, 2.0], steps: 4, ..TrainLog::default() };
         assert_eq!(log.final_loss(), 2.0);
         assert_eq!(log.mean_tail(2), 2.5);
         assert_eq!(log.mean_tail(100), 3.5);

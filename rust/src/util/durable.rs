@@ -1,0 +1,176 @@
+//! Atomic, checksummed file persistence — the durability substrate
+//! shared by model checkpoints ([`crate::model::ParamStore::save`]),
+//! search snapshots (`search::*_durable`), and training checkpoints
+//! (`train::train_loop`).
+//!
+//! Layout: the caller's serialized payload, closed by a 20-byte
+//! integrity footer `[payload_len u64 le][fnv1a64 u64 le][b"SHF1"]`.
+//! Writes are **atomic**: payload + footer go to a temp file in the
+//! same directory (cross-device renames are not atomic), the file is
+//! fsynced, then renamed over the destination, then the directory is
+//! fsynced best-effort. A crash mid-save leaves the previous file
+//! intact — readers never observe a half-written state.
+//!
+//! Reads verify the footer and fail with a clean
+//! `corrupt {what}: …` error on any mismatch (`what` is the caller's
+//! noun — "checkpoint", "snapshot" — so error strings stay stable per
+//! artifact kind). Files without a footer (written before it existed)
+//! pass through as legacy payloads.
+
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Trailer magic closing the integrity footer.
+pub const FOOTER_MAGIC: &[u8; 4] = b"SHF1";
+/// `[payload_len u64][checksum u64][magic 4]`.
+pub const FOOTER_LEN: usize = 8 + 8 + 4;
+
+/// FNV-1a 64-bit: tiny, dependency-free, and plenty to catch torn or
+/// bit-flipped files (this is corruption detection, not crypto).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write `payload` + integrity footer to `path` atomically (same-dir
+/// temp file, fsync, rename, best-effort dir fsync).
+pub fn write_atomic(path: impl AsRef<Path>, payload: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    let checksum = fnv1a64(payload);
+    let mut tmp_name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("durable"));
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let mut f =
+        std::fs::File::create(&tmp).with_context(|| format!("create {}", tmp.display()))?;
+    f.write_all(payload)?;
+    f.write_all(&(payload.len() as u64).to_le_bytes())?;
+    f.write_all(&checksum.to_le_bytes())?;
+    f.write_all(FOOTER_MAGIC)?;
+    f.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+    drop(f);
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))?;
+    // best-effort directory fsync so the rename itself is durable;
+    // some platforms refuse to open directories — not fatal
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `Ok(Some(payload_len))` when `buf` ends in a verified integrity
+/// footer, `Ok(None)` for legacy footer-less files, `Err` when a
+/// footer is present but its claims don't hold. `what` names the
+/// artifact in error strings ("checkpoint", "snapshot").
+pub fn verify_footer(buf: &[u8], what: &str) -> Result<Option<usize>> {
+    if buf.len() < FOOTER_LEN || &buf[buf.len() - 4..] != FOOTER_MAGIC {
+        return Ok(None);
+    }
+    let fstart = buf.len() - FOOTER_LEN;
+    let payload_len = u64::from_le_bytes(buf[fstart..fstart + 8].try_into().unwrap()) as usize;
+    let stored = u64::from_le_bytes(buf[fstart + 8..fstart + 16].try_into().unwrap());
+    if payload_len != fstart {
+        bail!("corrupt {what}: footer claims {payload_len} payload bytes, file has {fstart}");
+    }
+    let actual = fnv1a64(&buf[..payload_len]);
+    if actual != stored {
+        bail!(
+            "corrupt {what}: checksum mismatch (stored {stored:#018x}, computed {actual:#018x})"
+        );
+    }
+    Ok(Some(payload_len))
+}
+
+/// Read `path` and strip a verified footer. Legacy footer-less files
+/// return the whole buffer as payload.
+pub fn read_verified(path: impl AsRef<Path>, what: &str) -> Result<Vec<u8>> {
+    let path = path.as_ref();
+    let mut buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    if let Some(len) = verify_footer(&buf, what)? {
+        buf.truncate(len);
+    }
+    Ok(buf)
+}
+
+/// Read `path` and strip a verified footer, treating a *missing*
+/// footer as corruption too. For artifacts introduced after the footer
+/// existed (search snapshots, training checkpoints) there is no legacy
+/// fleet to tolerate — a torn tail that happens to shear the footer
+/// off must not parse as "legacy".
+pub fn read_verified_strict(path: impl AsRef<Path>, what: &str) -> Result<Vec<u8>> {
+    let path = path.as_ref();
+    let mut buf = std::fs::read(path).with_context(|| format!("open {}", path.display()))?;
+    match verify_footer(&buf, what)? {
+        Some(len) => {
+            buf.truncate(len);
+            Ok(buf)
+        }
+        None => bail!("corrupt {what}: missing integrity footer"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("shears_test_durable");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_and_no_temp_residue() {
+        let p = tmp_path("rt.bin");
+        write_atomic(&p, b"hello payload").unwrap();
+        assert_eq!(read_verified(&p, "snapshot").unwrap(), b"hello payload");
+        assert_eq!(read_verified_strict(&p, "snapshot").unwrap(), b"hello payload");
+        assert!(!p.with_file_name("rt.bin.tmp").exists());
+        // overwrite-in-place keeps working
+        write_atomic(&p, b"second").unwrap();
+        assert_eq!(read_verified_strict(&p, "snapshot").unwrap(), b"second");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn footer_claims_and_checksum_are_enforced() {
+        let p = tmp_path("bad.bin");
+        write_atomic(&p, b"payload bytes here").unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // flip a payload byte -> checksum mismatch
+        let mut flipped = good.clone();
+        flipped[2] ^= 0xff;
+        std::fs::write(&p, &flipped).unwrap();
+        let e = read_verified(&p, "snapshot").unwrap_err().to_string();
+        assert!(e.contains("corrupt snapshot") && e.contains("checksum mismatch"), "{e}");
+
+        // drop a payload byte -> footer length claim fails
+        let mut torn = good.clone();
+        torn.remove(0);
+        std::fs::write(&p, &torn).unwrap();
+        let e = read_verified(&p, "snapshot").unwrap_err().to_string();
+        assert!(e.contains("footer claims"), "{e}");
+
+        // shear the footer off -> legacy for tolerant reads, corrupt
+        // for strict ones
+        let headless = &good[..good.len() - FOOTER_LEN];
+        std::fs::write(&p, headless).unwrap();
+        assert_eq!(read_verified(&p, "snapshot").unwrap(), headless);
+        let e = read_verified_strict(&p, "snapshot").unwrap_err().to_string();
+        assert!(e.contains("missing integrity footer"), "{e}");
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -1,6 +1,7 @@
 //! Infrastructure substrates built in-repo (the offline crate registry
 //! only carries the `xla` closure — see DESIGN.md §3).
 
+pub mod durable;
 pub mod json;
 pub mod log;
 pub mod prop;

@@ -247,7 +247,8 @@ fn nls_train_step_reduces_loss_and_keeps_base_frozen() {
     let ds = dataset(Task::BoolqSim, &vocab, 12, 64, cfg.seq_len);
     let mut batcher =
         Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
-    let opts = TrainOpts { steps: 30, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0 };
+    let opts =
+        TrainOpts { steps: 30, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0, ..TrainOpts::default() };
     let log = train_loop(
         &env.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
         Some(&space), &opts,
@@ -279,7 +280,8 @@ fn full_ft_train_step_preserves_sparsity() {
     let ds = dataset(Task::BoolqSim, &vocab, 14, 32, cfg.seq_len);
     let mut batcher =
         Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
-    let opts = TrainOpts { steps: 5, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0 };
+    let opts =
+        TrainOpts { steps: 5, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0, ..TrainOpts::default() };
     let frozen = ParamStore::new();
     train_loop(
         &env.rt, cfg, "train_step_full", &frozen, &mut base, Some(&masks), &mut batcher,
@@ -315,7 +317,7 @@ fn baseline_adapters_train() {
         let mut batcher =
             Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
         let opts =
-            TrainOpts { steps: 8, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0 };
+            TrainOpts { steps: 8, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0, ..TrainOpts::default() };
         let log = train_loop(
             &env.rt, cfg, entry, &base, &mut extra, None, &mut batcher, None, &opts,
         )

@@ -248,7 +248,7 @@ fn nls_train_step_reduces_loss_and_keeps_base_frozen() {
     let mut batcher =
         Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
     let opts =
-        TrainOpts { steps: 25, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0 };
+        TrainOpts { steps: 25, lr: 5e-3, warmup: 3, seed: 1, sample_nls: true, log_every: 0, ..TrainOpts::default() };
     let log = train_loop(
         &env.rt, cfg, "train_step_nls", &base, &mut adapters, None, &mut batcher,
         Some(&space), &opts,
@@ -281,7 +281,7 @@ fn full_ft_train_step_preserves_sparsity() {
     let mut batcher =
         Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
     let opts =
-        TrainOpts { steps: 4, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0 };
+        TrainOpts { steps: 4, lr: 1e-3, warmup: 1, seed: 2, sample_nls: false, log_every: 0, ..TrainOpts::default() };
     let frozen = ParamStore::new();
     train_loop(
         &env.rt, cfg, "train_step_full", &frozen, &mut base, Some(&masks), &mut batcher,
@@ -317,7 +317,7 @@ fn baseline_adapters_train_natively() {
         let mut batcher =
             Batcher::new(&ds, cfg.batch_train, cfg.seq_len, &vocab, MaskMode::AnswerOnly);
         let opts =
-            TrainOpts { steps: 4, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0 };
+            TrainOpts { steps: 4, lr: 5e-3, warmup: 1, seed: 4, sample_nls: false, log_every: 0, ..TrainOpts::default() };
         let log = train_loop(
             &env.rt, cfg, entry, &base, &mut extra, None, &mut batcher, None, &opts,
         )
@@ -355,6 +355,7 @@ fn full_pipeline_end_to_end_on_native_backend() {
         hill_climb_budget: 0,
         search_eval_examples: 8,
         workdir: Some(workdir.clone()),
+        ..PipelineOpts::default()
     };
     let pipeline = ShearsPipeline::new(&rt, &manifest, opts.clone()).unwrap();
     let report = pipeline.run().unwrap();

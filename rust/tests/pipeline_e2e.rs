@@ -60,6 +60,7 @@ fn full_pipeline_tiny() {
         hill_climb_budget: 0,
         search_eval_examples: 16,
         workdir: Some(workdir.clone()),
+        ..PipelineOpts::default()
     };
     let pipeline = ShearsPipeline::new(&rt, &manifest, opts.clone()).unwrap();
     let report = pipeline.run().unwrap();
