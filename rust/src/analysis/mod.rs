@@ -1,0 +1,867 @@
+//! Crate-native static analysis: `shears-lint`.
+//!
+//! A zero-dependency source-level lint pass over this crate's own
+//! sources, enforcing the written concurrency/durability policy that
+//! the reproduction's correctness arguments rest on:
+//!
+//! * **safety** — every `unsafe` block / `unsafe impl` carries an
+//!   adjacent `// SAFETY:` justification (same line, or a contiguous
+//!   comment block directly above).
+//! * **ordering** — every `Ordering::`/`AOrd::` argument at an atomic
+//!   call site matches the role its receiver declared in a
+//!   `// ORDERING(name): role` annotation next to the field/static.
+//!   Roles: `counter`/`config` may only use `Relaxed`, `handshake`
+//!   only `Acquire`/`Release`, `shutdown` only `SeqCst`, `gauge`
+//!   anything except `SeqCst`. Undeclared receivers and unused
+//!   declarations are both errors.
+//! * **hotpath** — no `unwrap()` / `expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test code
+//!   under `serve/`, `runtime/`, `coordinator/`. Justified sites go
+//!   in the allowlist file (`rust/shears-lint.allow`), each with a
+//!   written justification; stale entries are errors.
+//! * **time** — `Instant::now` / `SystemTime::now` / `thread::sleep`
+//!   only in the wall-clock-aware modules (fault injection, serving,
+//!   the eval router, logging, bench utils). Everything feeding the
+//!   bit-identity suites (ops, train, search, pruning, model, tensor)
+//!   must stay deterministic.
+//! * **durable** — all file persistence goes through
+//!   [`crate::util::durable`]: no raw `File::create` /
+//!   `OpenOptions::new` / `fs::write` outside it.
+//!
+//! The pass is line-based on a comment/string-stripped view of each
+//! file (so tokens inside string literals or doc comments never
+//! trigger rules) and skips everything from a top-level `#[cfg(test)]`
+//! marker to end of file — by crate convention the test module is the
+//! last item in every source file.
+//!
+//! Run it with `cargo run --bin shears-lint`, `shears lint`, or as a
+//! tier-1 test via `cargo test --test lints`.
+
+use std::fmt;
+use std::path::Path;
+
+// ------------------------------------------------------------- rules
+
+/// Lint rule identifiers (stable names used in diagnostics and in the
+/// allowlist file).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Rule {
+    Safety,
+    Ordering,
+    HotPath,
+    Time,
+    Durable,
+    /// Allowlist hygiene: malformed or stale entries.
+    Allowlist,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::Safety => "safety",
+            Rule::Ordering => "ordering",
+            Rule::HotPath => "hotpath",
+            Rule::Time => "time",
+            Rule::Durable => "durable",
+            Rule::Allowlist => "allowlist",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Rule> {
+        Some(match s {
+            "safety" => Rule::Safety,
+            "ordering" => Rule::Ordering,
+            "hotpath" => Rule::HotPath,
+            "time" => Rule::Time,
+            "durable" => Rule::Durable,
+            _ => return None,
+        })
+    }
+}
+
+/// One finding, anchored to `file:line`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.name(), self.msg)
+    }
+}
+
+// --------------------------------------------------------- allowlist
+
+/// One suppression: `rule|path-suffix|line-substring|justification`.
+#[derive(Clone, Debug)]
+pub struct AllowEntry {
+    pub rule: Rule,
+    pub path: String,
+    pub needle: String,
+    pub why: String,
+    pub used: bool,
+}
+
+/// Parsed allowlist. Entries without a justification are rejected at
+/// parse time ("zero allowlist additions beyond documented ones");
+/// entries that suppress nothing are reported stale by [`lint_crate`].
+#[derive(Default)]
+pub struct Allowlist {
+    pub entries: Vec<AllowEntry>,
+}
+
+impl Allowlist {
+    /// Parse the `rule|path|substring|justification` format. `#`
+    /// lines and blanks are skipped. Malformed lines become
+    /// diagnostics rather than being silently dropped.
+    pub fn parse(src: &str, origin: &str) -> (Allowlist, Vec<Diagnostic>) {
+        let mut entries = Vec::new();
+        let mut diags = Vec::new();
+        for (i, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.splitn(4, '|');
+            let bad = |msg: &str| Diagnostic {
+                rule: Rule::Allowlist,
+                file: origin.to_string(),
+                line: i + 1,
+                msg: msg.to_string(),
+            };
+            let rule = parts.next().unwrap_or("").trim();
+            let path = parts.next().unwrap_or("").trim();
+            let needle = parts.next().unwrap_or("").trim();
+            let why = parts.next().unwrap_or("").trim();
+            let Some(rule) = Rule::from_name(rule) else {
+                diags.push(bad(&format!("unknown rule {rule:?} (want rule|path|substring|why)")));
+                continue;
+            };
+            if path.is_empty() || needle.is_empty() {
+                diags.push(bad("entry needs a path suffix and a line substring"));
+                continue;
+            }
+            if why.is_empty() {
+                diags.push(bad("entry has no justification (4th |-field is required)"));
+                continue;
+            }
+            entries.push(AllowEntry {
+                rule,
+                path: path.to_string(),
+                needle: needle.to_string(),
+                why: why.to_string(),
+                used: false,
+            });
+        }
+        (Allowlist { entries }, diags)
+    }
+
+    /// True (and marks the entry used) if some entry covers `d` given
+    /// the raw source line it fired on.
+    fn covers(&mut self, d: &Diagnostic, raw_line: &str) -> bool {
+        for e in &mut self.entries {
+            if e.rule == d.rule && d.file.ends_with(&e.path) && raw_line.contains(&e.needle) {
+                e.used = true;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+// ----------------------------------------------- source preprocessing
+
+/// A comment/string-stripped view of one source file. `code[i]` is
+/// line `i` with comment text and literal contents blanked to spaces
+/// (structure and byte offsets preserved); `comment[i]` is the text of
+/// the `//` comment on line `i` (empty if none); `raw[i]` is the
+/// original line. `test_from` is the first line index of a top-level
+/// `#[cfg(test)]` marker (lines from there on are skipped by every
+/// rule), or `len` if none.
+struct SourceView {
+    code: Vec<String>,
+    comment: Vec<String>,
+    raw: Vec<String>,
+    test_from: usize,
+}
+
+#[derive(PartialEq)]
+enum ScanState {
+    Code,
+    LineComment,
+    BlockComment(usize),
+    Str,
+    RawStr(usize),
+}
+
+fn preprocess(src: &str) -> SourceView {
+    let mut code_all = String::with_capacity(src.len());
+    let mut comment_all = String::with_capacity(64);
+    let mut comments: Vec<String> = Vec::new();
+    let mut state = ScanState::Code;
+    let bytes: Vec<char> = src.chars().collect();
+    let n = bytes.len();
+    let mut i = 0;
+    while i < n {
+        let c = bytes[i];
+        let next = if i + 1 < n { bytes[i + 1] } else { '\0' };
+        match state {
+            ScanState::Code => match c {
+                '/' if next == '/' => {
+                    state = ScanState::LineComment;
+                    code_all.push(' ');
+                    code_all.push(' ');
+                    i += 2;
+                    continue;
+                }
+                '/' if next == '*' => {
+                    state = ScanState::BlockComment(1);
+                    code_all.push(' ');
+                    code_all.push(' ');
+                    i += 2;
+                    continue;
+                }
+                '"' => {
+                    state = ScanState::Str;
+                    code_all.push('"');
+                }
+                'r' | 'b'
+                    if {
+                        // raw string start: r"..." / r#"..." / br"..."
+                        let prev_ident = i > 0 && (bytes[i - 1].is_alphanumeric() || bytes[i - 1] == '_');
+                        let mut j = i + 1;
+                        if c == 'b' && j < n && bytes[j] == 'r' {
+                            j += 1;
+                        } else if c == 'b' {
+                            j = usize::MAX; // plain b"..." handled by Str via the '"' arm
+                        }
+                        !prev_ident
+                            && j != usize::MAX
+                            && j <= n && {
+                                let mut k = j;
+                                while k < n && bytes[k] == '#' {
+                                    k += 1;
+                                }
+                                k < n && bytes[k] == '"'
+                            }
+                    } =>
+                {
+                    // consume up to and including the opening quote
+                    let mut j = i + 1;
+                    if c == 'b' {
+                        j += 1; // the 'r'
+                    }
+                    let mut hashes = 0;
+                    while j < n && bytes[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    for _ in i..=j {
+                        code_all.push(' ');
+                    }
+                    i = j + 1;
+                    state = ScanState::RawStr(hashes);
+                    continue;
+                }
+                '\'' => {
+                    // char literal vs lifetime: 'x' / '\n' / '\u{..}' are
+                    // literals; anything else ('a in generics) is code
+                    if next == '\\' {
+                        code_all.push(' ');
+                        i += 2;
+                        while i < n && bytes[i] != '\'' {
+                            code_all.push(' ');
+                            i += 1;
+                        }
+                        code_all.push(' ');
+                    } else if i + 2 < n && bytes[i + 2] == '\'' {
+                        code_all.push(' ');
+                        code_all.push(' ');
+                        code_all.push(' ');
+                        i += 2;
+                    } else {
+                        code_all.push('\'');
+                    }
+                }
+                _ => code_all.push(c),
+            },
+            ScanState::LineComment => {
+                if c == '\n' {
+                    state = ScanState::Code;
+                    code_all.push('\n');
+                } else {
+                    comment_all.push(c);
+                    code_all.push(' ');
+                }
+            }
+            ScanState::BlockComment(d) => {
+                if c == '*' && next == '/' {
+                    state = if d == 1 { ScanState::Code } else { ScanState::BlockComment(d - 1) };
+                    code_all.push(' ');
+                    code_all.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == '*' {
+                    state = ScanState::BlockComment(d + 1);
+                    code_all.push(' ');
+                    code_all.push(' ');
+                    i += 2;
+                    continue;
+                }
+                code_all.push(if c == '\n' { '\n' } else { ' ' });
+            }
+            ScanState::Str => {
+                if c == '\\' {
+                    code_all.push(' ');
+                    code_all.push(if next == '\n' { '\n' } else { ' ' });
+                    if next == '\n' {
+                        comments.push(std::mem::take(&mut comment_all));
+                    }
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    state = ScanState::Code;
+                    code_all.push('"');
+                } else {
+                    code_all.push(if c == '\n' { '\n' } else { ' ' });
+                }
+            }
+            ScanState::RawStr(hashes) => {
+                if c == '"' {
+                    let mut k = 0;
+                    while k < hashes && i + 1 + k < n && bytes[i + 1 + k] == '#' {
+                        k += 1;
+                    }
+                    if k == hashes {
+                        for _ in 0..=hashes {
+                            code_all.push(' ');
+                        }
+                        i += hashes + 1;
+                        state = ScanState::Code;
+                        continue;
+                    }
+                }
+                code_all.push(if c == '\n' { '\n' } else { ' ' });
+            }
+        }
+        if c == '\n' {
+            comments.push(std::mem::take(&mut comment_all));
+        }
+        i += 1;
+    }
+    comments.push(std::mem::take(&mut comment_all));
+
+    let code: Vec<String> = code_all.split('\n').map(str::to_string).collect();
+    let raw: Vec<String> = src.split('\n').map(str::to_string).collect();
+    comments.resize(code.len(), String::new());
+    let test_from = code
+        .iter()
+        .position(|l| l.trim() == "#[cfg(test)]")
+        .unwrap_or(code.len());
+    SourceView { code, comment: comments, raw, test_from }
+}
+
+fn has_word(line: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !line[..at].chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let end = at + word.len();
+        let after_ok = end >= line.len()
+            || !line[end..].chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+// -------------------------------------------------- the ordering rule
+
+const ORDERINGS: [&str; 5] = ["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+fn role_allows(role: &str, ordering: &str) -> Option<bool> {
+    let allowed: &[&str] = match role {
+        "counter" | "config" => &["Relaxed"],
+        "handshake" => &["Acquire", "Release"],
+        "shutdown" => &["SeqCst"],
+        "gauge" => &["Relaxed", "Acquire", "Release", "AcqRel"],
+        _ => return None,
+    };
+    Some(allowed.contains(&ordering))
+}
+
+/// Orderings named on a code line via `Ordering::X` or `AOrd::X`.
+fn orderings_on(line: &str) -> Vec<&'static str> {
+    let mut found = Vec::new();
+    for prefix in ["Ordering::", "AOrd::"] {
+        let mut start = 0;
+        while let Some(pos) = line[start..].find(prefix) {
+            let at = start + pos + prefix.len();
+            for o in ORDERINGS {
+                if line[at..].starts_with(o) {
+                    found.push(o);
+                }
+            }
+            start = at;
+        }
+    }
+    found
+}
+
+fn is_atomic_method(name: &str) -> bool {
+    matches!(name, "load" | "store" | "swap" | "compare_exchange" | "compare_exchange_weak")
+        || name.starts_with("fetch_")
+}
+
+/// Receiver field/static name of the atomic call on `joined` (the
+/// current line plus up to two lines of look-back for rustfmt-wrapped
+/// calls): the identifier before the last `.method(` whose method is
+/// an atomic accessor.
+fn atomic_receiver(joined: &str) -> Option<String> {
+    let b: Vec<char> = joined.chars().collect();
+    let mut best: Option<String> = None;
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '.' {
+            let mut j = i + 1;
+            while j < b.len() && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            if j < b.len() && b[j] == '(' {
+                let method: String = b[i + 1..j].iter().collect();
+                if is_atomic_method(&method) {
+                    // skip whitespace first: `depth\n    .fetch_add(` joins
+                    // as `depth     .fetch_add(`
+                    let mut e = i;
+                    while e > 0 && b[e - 1].is_whitespace() {
+                        e -= 1;
+                    }
+                    let mut k = e;
+                    while k > 0 && (b[k - 1].is_alphanumeric() || b[k - 1] == '_') {
+                        k -= 1;
+                    }
+                    if k < e {
+                        best = Some(b[k..e].iter().collect());
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    best
+}
+
+// -------------------------------------------------------- the linter
+
+/// Wall-clock-aware modules where `Instant::now` / `thread::sleep`
+/// are policy: fault injection, serving (deadlines, brownout, latency
+/// metrics), the eval router's supervision timeouts, logging, bench
+/// utils. Everything else must stay deterministic.
+const TIME_ALLOWED: [&str; 7] = [
+    "fault.rs",
+    "bench_util.rs",
+    "util/log.rs",
+    "serve/server.rs",
+    "serve/mod.rs",
+    "serve/brownout.rs",
+    "coordinator/router.rs",
+];
+
+const HOTPATH_SCOPES: [&str; 3] = ["serve/", "runtime/", "coordinator/"];
+
+/// Lint one in-memory source. `path` selects the per-path policies
+/// (hotpath scope, time/durable exemptions); diagnostics covered by
+/// `allow` are suppressed (and mark their entry used).
+pub fn lint_source(path: &str, src: &str, allow: &mut Allowlist) -> Vec<Diagnostic> {
+    let v = preprocess(src);
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut raw_of: Vec<usize> = Vec::new(); // diag index -> line index
+
+    let diag = |diags: &mut Vec<Diagnostic>, raw_of: &mut Vec<usize>, rule, i: usize, msg: String| {
+        diags.push(Diagnostic { rule, file: path.to_string(), line: i + 1, msg });
+        raw_of.push(i);
+    };
+
+    // ORDERING declarations: `// ORDERING(name): role`. Must start the
+    // comment, so prose *mentioning* the syntax never parses as one.
+    let mut decls: Vec<(String, String, usize, bool)> = Vec::new(); // name, role, line, used
+    for (i, c) in v.comment.iter().enumerate().take(v.test_from) {
+        let c = c.trim_start_matches(['!', '/', ' ']);
+        if !c.starts_with("ORDERING(") {
+            continue;
+        }
+        let rest = &c["ORDERING(".len()..];
+        let Some(close) = rest.find(')') else {
+            diag(&mut diags, &mut raw_of, Rule::Ordering, i, "malformed ORDERING(...) annotation".into());
+            continue;
+        };
+        let name = rest[..close].trim().to_string();
+        let role = rest[close + 1..].trim_start_matches(':').trim();
+        let role = role.split_whitespace().next().unwrap_or("").to_string();
+        if name.is_empty() || role_allows(&role, "Relaxed").is_none() {
+            diag(
+                &mut diags,
+                &mut raw_of,
+                Rule::Ordering,
+                i,
+                format!("ORDERING({name}): unknown role {role:?} (counter|gauge|handshake|shutdown|config)"),
+            );
+            continue;
+        }
+        if let Some((_, prev_role, _, _)) = decls.iter().find(|(n, ..)| *n == name) {
+            if *prev_role != role {
+                diag(
+                    &mut diags,
+                    &mut raw_of,
+                    Rule::Ordering,
+                    i,
+                    format!("ORDERING({name}) re-declared as {role:?} (was {prev_role:?})"),
+                );
+            }
+            continue;
+        }
+        decls.push((name, role, i, false));
+    }
+
+    for i in 0..v.test_from.min(v.code.len()) {
+        let code = &v.code[i];
+        let trimmed = code.trim();
+
+        // ---- safety
+        if has_word(code, "unsafe") {
+            let mut ok = v.comment[i].contains("SAFETY");
+            let mut j = i;
+            while !ok && j > 0 {
+                j -= 1;
+                let c_code = v.code[j].trim();
+                let is_comment_only = c_code.is_empty() && !v.comment[j].trim().is_empty();
+                let is_attr = c_code.starts_with("#[");
+                if !(is_comment_only || is_attr) {
+                    break;
+                }
+                if v.comment[j].contains("SAFETY") {
+                    ok = true;
+                }
+            }
+            if !ok {
+                diag(
+                    &mut diags,
+                    &mut raw_of,
+                    Rule::Safety,
+                    i,
+                    "`unsafe` without an adjacent `// SAFETY:` justification".into(),
+                );
+            }
+        }
+
+        // ---- ordering call sites
+        let ords = orderings_on(code);
+        if !ords.is_empty() {
+            let lo = i.saturating_sub(2);
+            let joined = v.code[lo..=i].join(" ");
+            match atomic_receiver(&joined) {
+                None => diag(
+                    &mut diags,
+                    &mut raw_of,
+                    Rule::Ordering,
+                    i,
+                    "memory ordering outside a recognized atomic call".into(),
+                ),
+                Some(recv) => match decls.iter_mut().find(|(n, ..)| *n == recv) {
+                    None => diag(
+                        &mut diags,
+                        &mut raw_of,
+                        Rule::Ordering,
+                        i,
+                        format!("atomic `{recv}` has no `// ORDERING({recv}): role` declaration in this file"),
+                    ),
+                    Some((_, role, _, used)) => {
+                        *used = true;
+                        let role = role.clone();
+                        for o in ords {
+                            if !role_allows(&role, o).unwrap_or(false) {
+                                diag(
+                                    &mut diags,
+                                    &mut raw_of,
+                                    Rule::Ordering,
+                                    i,
+                                    format!("`{recv}` is declared {role:?} but uses Ordering::{o}"),
+                                );
+                            }
+                        }
+                    }
+                },
+            }
+        }
+
+        // ---- hotpath
+        if HOTPATH_SCOPES.iter().any(|s| path.contains(s)) {
+            for pat in [".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("]
+            {
+                if code.contains(pat) {
+                    diag(
+                        &mut diags,
+                        &mut raw_of,
+                        Rule::HotPath,
+                        i,
+                        format!("`{pat}` in a serve/runtime hot path (return a typed error, \
+                                 use `unwrap_or_else(|e| e.into_inner())` for mutexes, or add \
+                                 a justified allowlist entry)"),
+                    );
+                }
+            }
+        }
+
+        // ---- time
+        if !TIME_ALLOWED.iter().any(|s| path.ends_with(s)) {
+            for pat in ["Instant::now", "SystemTime::now", "thread::sleep"] {
+                if code.contains(pat) {
+                    diag(
+                        &mut diags,
+                        &mut raw_of,
+                        Rule::Time,
+                        i,
+                        format!("`{pat}` outside the wall-clock-aware modules breaks the \
+                                 bit-identity suites' determinism"),
+                    );
+                }
+            }
+        }
+
+        // ---- durable
+        if !path.ends_with("util/durable.rs") {
+            for pat in ["File::create", "OpenOptions::new", "File::options", "fs::write"] {
+                if code.contains(pat) {
+                    diag(
+                        &mut diags,
+                        &mut raw_of,
+                        Rule::Durable,
+                        i,
+                        format!("`{pat}` bypasses `util::durable` (atomic rename + checksum \
+                                 footer); persist through `durable::write_atomic`"),
+                    );
+                }
+            }
+        }
+        let _ = trimmed;
+    }
+
+    // unused ORDERING declarations are stale policy
+    for (name, _, line, used) in &decls {
+        if !used {
+            diag(
+                &mut diags,
+                &mut raw_of,
+                Rule::Ordering,
+                *line,
+                format!("ORDERING({name}) declared but `{name}` has no atomic call site in this file"),
+            );
+        }
+    }
+
+    // apply the allowlist against raw source lines
+    let mut kept = Vec::new();
+    for (d, ri) in diags.into_iter().zip(raw_of) {
+        let raw_line = v.raw.get(ri).map(String::as_str).unwrap_or("");
+        if !allow.covers(&d, raw_line) {
+            kept.push(d);
+        }
+    }
+    kept
+}
+
+// --------------------------------------------------- crate-tree walk
+
+/// Outcome of a full-tree pass.
+pub struct LintReport {
+    pub diags: Vec<Diagnostic>,
+    pub files: usize,
+    pub allow_total: usize,
+    pub allow_used: usize,
+}
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root` (the crate's `src/`
+/// directory) against the allowlist at `allow_path` (if it exists).
+/// Stale allowlist entries — documented suppressions that no longer
+/// fire — are reported as diagnostics so the file cannot rot.
+pub fn lint_crate(src_root: &Path, allow_path: Option<&Path>) -> std::io::Result<LintReport> {
+    let (mut allow, mut diags) = match allow_path {
+        Some(p) if p.exists() => {
+            let text = std::fs::read_to_string(p)?;
+            Allowlist::parse(&text, &p.display().to_string())
+        }
+        _ => (Allowlist::default(), Vec::new()),
+    };
+    let mut files = Vec::new();
+    walk(src_root, &mut files)?;
+    let n_files = files.len();
+    for f in &files {
+        let src = std::fs::read_to_string(f)?;
+        // diagnostics use paths relative to src_root's parent (so
+        // `src/serve/server.rs`) — stable across checkouts
+        let rel = f
+            .strip_prefix(src_root.parent().unwrap_or(src_root))
+            .unwrap_or(f)
+            .display()
+            .to_string();
+        diags.extend(lint_source(&rel, &src, &mut allow));
+    }
+    for e in &allow.entries {
+        if !e.used {
+            diags.push(Diagnostic {
+                rule: Rule::Allowlist,
+                file: e.path.clone(),
+                line: 0,
+                msg: format!(
+                    "stale allowlist entry (rule {}, substring {:?}) — the site it \
+                     justified is gone; remove it",
+                    e.rule.name(),
+                    e.needle
+                ),
+            });
+        }
+    }
+    let allow_total = allow.entries.len();
+    let allow_used = allow.entries.iter().filter(|e| e.used).count();
+    Ok(LintReport { diags, files: n_files, allow_total, allow_used })
+}
+
+/// Locate this crate's `src/` + allowlist from the compile-time
+/// manifest dir and run the full pass (shared by the `shears-lint`
+/// binary, `shears lint`, and `tests/lints.rs`).
+pub fn lint_self() -> std::io::Result<LintReport> {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    lint_crate(&manifest.join("src"), Some(&manifest.join("shears-lint.allow")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Diagnostic> {
+        lint_source(path, src, &mut Allowlist::default())
+    }
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let v = preprocess("let a = \"unsafe File::create\"; // unsafe too\nlet b = 'x';\n");
+        assert!(!v.code[0].contains("unsafe"));
+        assert!(v.comment[0].contains("unsafe too"));
+        assert!(!v.code[1].contains('x'));
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let v = preprocess("let a = r#\"File::create \"quoted\" unsafe\"#; let c = 1;\n");
+        assert!(!v.code[0].contains("File::create"));
+        assert!(v.code[0].contains("let c = 1;"));
+    }
+
+    #[test]
+    fn multiline_string_does_not_leak_into_code() {
+        let v = preprocess("let h = \"span \\\n  File::create\";\nlet x = 2;\n");
+        assert!(!v.code.join("\n").contains("File::create"));
+        assert!(v.code[2].contains("let x = 2;"));
+    }
+
+    #[test]
+    fn safety_comment_forms_accepted() {
+        let ok_above = "// SAFETY: fine\nunsafe impl Send for X {}\n";
+        let ok_trailing = "unsafe impl Send for X {} // SAFETY: fine\n";
+        let ok_block = "// SAFETY: part one\n// and part two\nlet p = unsafe { q };\n";
+        for src in [ok_above, ok_trailing, ok_block] {
+            assert!(lint("src/x.rs", src).is_empty(), "{src:?}");
+        }
+        let missing = "unsafe impl Send for X {}\n";
+        let d = lint("src/x.rs", missing);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::Safety);
+        assert_eq!(d[0].line, 1);
+    }
+
+    #[test]
+    fn blank_line_breaks_safety_adjacency() {
+        let src = "// SAFETY: too far away\n\nlet p = unsafe { q };\n";
+        assert_eq!(lint("src/x.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn ordering_roles_enforced() {
+        let ok = "// ORDERING(hits): counter\nhits.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(lint("src/x.rs", ok).is_empty());
+        let wrong = "// ORDERING(hits): counter\nhits.fetch_add(1, Ordering::SeqCst);\n";
+        let d = lint("src/x.rs", wrong);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, Rule::Ordering);
+        let undeclared = "flag.store(true, Ordering::Release);\n";
+        assert_eq!(lint("src/x.rs", undeclared)[0].rule, Rule::Ordering);
+        let unused = "// ORDERING(ghost): counter\nlet x = 1;\n";
+        assert!(lint("src/x.rs", unused)[0].msg.contains("no atomic call site"));
+    }
+
+    #[test]
+    fn ordering_receiver_found_across_wrapped_lines() {
+        let src = "// ORDERING(depth): gauge\nlet d = self.shared.depth\n    .load(Ordering::Acquire);\n";
+        assert!(lint("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hotpath_scoped_and_allowlisted() {
+        let src = "fn f() { x.unwrap(); }\n";
+        assert!(lint("src/ops/x.rs", src).is_empty(), "out of scope");
+        let d = lint("src/serve/x.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, Rule::HotPath);
+        let (mut allow, errs) =
+            Allowlist::parse("hotpath|serve/x.rs|x.unwrap()|invariant: x set above", "t");
+        assert!(errs.is_empty());
+        assert!(lint_source("src/serve/x.rs", src, &mut allow).is_empty());
+        assert!(allow.entries[0].used);
+    }
+
+    #[test]
+    fn allowlist_requires_justification() {
+        let (_, errs) = Allowlist::parse("hotpath|serve/x.rs|x.unwrap()", "t");
+        assert_eq!(errs.len(), 1);
+        assert!(errs[0].msg.contains("justification"));
+    }
+
+    #[test]
+    fn time_and_durable_rules() {
+        let t = "let t = Instant::now();\n";
+        assert_eq!(lint("src/ops/x.rs", t)[0].rule, Rule::Time);
+        assert!(lint("src/fault.rs", t).is_empty());
+        let d = "let f = File::create(p)?;\n";
+        assert_eq!(lint("src/model/x.rs", d)[0].rule, Rule::Durable);
+        assert!(lint("src/util/durable.rs", d).is_empty());
+    }
+
+    #[test]
+    fn test_region_is_skipped() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g() { x.unwrap(); let p = unsafe { q }; }\n}\n";
+        assert!(lint("src/serve/x.rs", src).is_empty());
+    }
+}

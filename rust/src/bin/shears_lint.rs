@@ -1,0 +1,27 @@
+//! `shears-lint` — run the crate-native static-analysis pass
+//! ([`shears::analysis`]) over this crate's own `src/` tree and exit
+//! nonzero on any diagnostic. Wired into CI as a blocking leg and into
+//! tier-1 via `tests/lints.rs`; `shears lint` is the same pass.
+
+fn main() {
+    let report = match shears::analysis::lint_self() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shears-lint: cannot read crate sources: {e}");
+            std::process::exit(2);
+        }
+    };
+    for d in &report.diags {
+        println!("{d}");
+    }
+    println!(
+        "shears-lint: {} file(s), {} diagnostic(s), allowlist {}/{} entries used",
+        report.files,
+        report.diags.len(),
+        report.allow_used,
+        report.allow_total
+    );
+    if !report.diags.is_empty() {
+        std::process::exit(1);
+    }
+}

@@ -238,7 +238,9 @@ impl<'rt> ShearsPipeline<'rt> {
             &opts,
         )?;
         if let Some(path) = self.pretrain_ckpt_path() {
-            std::fs::create_dir_all(path.parent().unwrap())?;
+            if let Some(dir) = path.parent() {
+                std::fs::create_dir_all(dir)?;
+            }
             base.save(&path)?;
             crate::info!("pretrain cached: {}", path.display());
         }

@@ -130,11 +130,18 @@ impl Default for RouterOpts {
 /// and a respawned worker keeps counting where its predecessor
 /// stopped.
 struct Shared {
+    // ORDERING(requests): counter — metrics statistic only.
     requests: AtomicU64,
+    // ORDERING(examples): counter — metrics statistic only.
     examples: AtomicU64,
+    // ORDERING(forwards): counter — metrics statistic only.
     forwards: AtomicU64,
+    // ORDERING(retries): counter — metrics statistic only.
     retries: AtomicU64,
+    // ORDERING(respawns): counter — statistic; respawn *mutual
+    // exclusion* is the worker mutex's generation check, never this.
     respawns: AtomicU64,
+    // ORDERING(timeouts): counter — metrics statistic only.
     timeouts: AtomicU64,
     latencies_ms: Mutex<Vec<f64>>,
     fault: Mutex<FaultPlan>,
@@ -255,7 +262,7 @@ impl EvalRouter {
         let n = examples.len();
         let (reply, rx) = channel();
         let generation = {
-            let w = self.worker.lock().unwrap();
+            let w = self.worker.lock().unwrap_or_else(|e| e.into_inner());
             let msg = Msg::Eval {
                 examples: examples.to_vec(),
                 rank_mask: rank_mask.clone(),
@@ -312,7 +319,7 @@ impl EvalRouter {
     /// wedge. The old thread gets `control_timeout` to exit, then is
     /// detached (never a blocking join on a wedged backend).
     fn respawn(&self, observed: u64, reason: &str) -> Result<()> {
-        let mut w = self.worker.lock().unwrap();
+        let mut w = self.worker.lock().unwrap_or_else(|e| e.into_inner());
         if w.generation != observed {
             return Ok(());
         }
@@ -343,7 +350,7 @@ impl EvalRouter {
         let s = &self.shared;
         let examples = s.examples.load(Ordering::Relaxed);
         let forwards = s.forwards.load(Ordering::Relaxed);
-        let mut sorted = s.latencies_ms.lock().unwrap().clone();
+        let mut sorted = s.latencies_ms.lock().unwrap_or_else(|e| e.into_inner()).clone();
         crate::util::sort_for_percentiles(&mut sorted);
         Ok(RouterMetrics {
             requests: s.requests.load(Ordering::Relaxed),
@@ -365,7 +372,7 @@ impl EvalRouter {
 
 impl Drop for EvalRouter {
     fn drop(&mut self) {
-        let mut w = self.worker.lock().unwrap();
+        let mut w = self.worker.lock().unwrap_or_else(|e| e.into_inner());
         let _ = w.tx.send(Msg::Shutdown);
         if let Some(join) = w.join.take() {
             let deadline = Instant::now() + self.opts.control_timeout;
@@ -536,7 +543,7 @@ fn worker_main(
             // eval attempt per coalesced forward, counter shared with
             // every worker generation
             let fire = {
-                let mut plan = shared.fault.lock().unwrap();
+                let mut plan = shared.fault.lock().unwrap_or_else(|e| e.into_inner());
                 if plan.is_empty() { EvalFire::default() } else { plan.fire_eval() }
             };
             if fire.hang_ms > 0 {
@@ -560,7 +567,7 @@ fn worker_main(
             shared.forwards.fetch_add(1, Ordering::Relaxed);
             match session.logits(&batch.x, mask_ref) {
                 Ok(logits) => {
-                    let mut lat = shared.latencies_ms.lock().unwrap();
+                    let mut lat = shared.latencies_ms.lock().unwrap_or_else(|e| e.into_inner());
                     for (row, p) in group.iter().enumerate() {
                         let ok = exact_match(&p.example, &logits, row, cfg.seq_len, cfg.vocab);
                         lat.push(p.enqueued.elapsed().as_secs_f64() * 1e3);

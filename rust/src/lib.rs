@@ -22,6 +22,7 @@
 //! [`coordinator::pipeline::ShearsPipeline`] for the paper's §3 workflow,
 //! or `examples/quickstart.rs` for the smallest end-to-end program.
 
+pub mod analysis;
 pub mod bench_util;
 pub mod cli;
 pub mod config;

@@ -169,7 +169,7 @@ fn parse_method(m: &str) -> Result<Method> {
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
-        eprintln!("usage: shears <info|pipeline|eval|serve> [flags]\n");
+        eprintln!("usage: shears <info|pipeline|eval|serve|check|lint> [flags]\n");
         eprintln!("{}", usage(&flags(), SWITCHES));
         return Ok(());
     }
@@ -186,7 +186,30 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "check" => cmd_check(&args),
+        "lint" => cmd_lint(),
         other => bail!("unknown subcommand '{other}' (try: shears help)"),
+    }
+}
+
+/// Run the crate-native static-analysis pass (same engine as the
+/// `shears-lint` binary and `tests/lints.rs`) over this crate's own
+/// sources; fails on any diagnostic or stale allowlist entry.
+fn cmd_lint() -> Result<()> {
+    let report = shears::analysis::lint_self()?;
+    for d in &report.diags {
+        println!("{d}");
+    }
+    println!(
+        "shears-lint: {} file(s), {} diagnostic(s), allowlist {}/{} entries used",
+        report.files,
+        report.diags.len(),
+        report.allow_used,
+        report.allow_total
+    );
+    if report.diags.is_empty() {
+        Ok(())
+    } else {
+        bail!("{} lint diagnostic(s)", report.diags.len())
     }
 }
 

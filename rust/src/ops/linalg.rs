@@ -67,6 +67,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 /// amortizes spawns, as before).
 const DEFAULT_PAR_MIN_WORK: usize = 1 << 17;
 
+// ORDERING(PAR_MIN_WORK): config — set once at startup/test setup;
+// kernels snapshot it per dispatch, no cross-thread publication duty.
 static PAR_MIN_WORK: AtomicUsize = AtomicUsize::new(DEFAULT_PAR_MIN_WORK);
 
 /// Lower the fork threshold so tiny shapes still take the threaded
@@ -80,6 +82,8 @@ pub fn set_par_min_work(w: usize) {
 
 /// 0 = uninitialized; resolved lazily from `SHEARS_NUM_THREADS` or the
 /// machine's available parallelism.
+// ORDERING(NUM_THREADS): config — sizing knob read per dispatch;
+// results are partition-invariant so staleness is benign.
 static NUM_THREADS: AtomicUsize = AtomicUsize::new(0);
 
 /// Worker count for the kernel dispatchers. Resolution order:
@@ -114,6 +118,8 @@ pub fn set_num_threads(n: usize) {
 // ------------------------------------------------------- feature gates
 
 /// 0 = resolve from env, 1 = on, 2 = off.
+// ORDERING(SIMD_MODE): config — mode latch resolved once from env;
+// both modes are bit-identical, so ordering carries no correctness.
 static SIMD_MODE: AtomicUsize = AtomicUsize::new(0);
 
 /// Whether the 8-lane SIMD-shaped kernels are active (default) or the
@@ -140,6 +146,8 @@ pub fn set_simd_enabled(on: bool) {
 }
 
 /// 0 = resolve from env, 1 = on, 2 = off.
+// ORDERING(POOL_MODE): config — dispatch-strategy latch; pool and
+// scoped dispatch produce identical results.
 static POOL_MODE: AtomicUsize = AtomicUsize::new(0);
 
 /// Whether multi-threaded dispatch uses the persistent worker pool
@@ -475,7 +483,12 @@ pub fn reduce_sum_exp(x: &[f32], shift: f32) -> f32 {
 /// buffer to pool workers.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: the pointer names row ranges of a single `&mut [f32]` whose
+// borrow outlives the dispatch, and `chunked_rows` hands each worker a
+// disjoint range — no two threads ever touch the same element.
 unsafe impl Send for SendPtr {}
+// SAFETY: workers only dereference their own disjoint range (above),
+// so shared `&SendPtr` access never aliases a mutation.
 unsafe impl Sync for SendPtr {}
 
 /// Split `y` into contiguous row ranges and run `f(row_lo, row_hi,
@@ -560,6 +573,10 @@ mod pool {
     /// wait in [`DispatchGuard::drop`], while the closure is alive.
     #[derive(Clone, Copy)]
     struct JobRef(*const (dyn Fn(usize) + Sync + 'static));
+    // SAFETY: the pointee is `Sync` (shared calls are fine from any
+    // thread) and outlives every dereference — `DispatchGuard` blocks
+    // the dispatching call until `pending == 0`, i.e. until no worker
+    // can still reach the pointer.
     unsafe impl Send for JobRef {}
 
     struct State {
@@ -708,8 +725,9 @@ mod pool {
                     // SAFETY: the dispatcher cannot return before this
                     // chunk decrements `pending`, so the closure behind
                     // `job` is still alive here.
+                    let job_fn = unsafe { &*job.0 };
                     let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        (unsafe { &*job.0 })(ci)
+                        job_fn(ci)
                     }))
                     .is_ok();
                     st = lock(&shared.state);

@@ -184,6 +184,8 @@ pub(crate) struct StreamShared {
     /// set by [`StreamHandle::cancel`]; the runtime thread polls it in
     /// its reap sweep and frees the KV slot (no channel round-trip, so
     /// cancellation works even while the server is mid-step)
+    // ORDERING(cancel): handshake — Release publish by the canceller,
+    // Acquire poll by the runtime thread's reap sweep.
     cancel: AtomicBool,
 }
 
@@ -397,29 +399,55 @@ enum Msg {
 /// requests (channel + pending queue), which is exactly what the
 /// `queue_cap` backpressure bound applies to.
 struct Shared {
+    // ORDERING(depth): gauge — the CAS reservation loop and its
+    // releases pair AcqRel/Acquire so a reserved token is visible
+    // before the queued request is; the CAS-loop preload may be
+    // Relaxed (the CAS itself revalidates).
     depth: AtomicUsize,
+    // ORDERING(max_depth): counter — monotonic high-water statistic;
+    // metrics snapshots tolerate benign lag.
     max_depth: AtomicU64,
+    // ORDERING(rejected): counter — statistic, no ordering duty.
     rejected: AtomicU64,
+    // ORDERING(accepting): handshake — Release on shutdown, Acquire
+    // by submitters; a submitter that sees false must also see the
+    // shutdown state that preceded it.
     accepting: AtomicBool,
     /// set by the runtime thread right before its final channel drain:
     /// a submitter observing it after a successful send fails its own
     /// stream (idempotently), closing the drain/send race — see
     /// [`SubmitHandle::submit`]
+    // ORDERING(closed): shutdown — SeqCst on both sides: the store
+    // must be totally ordered against every submitter's post-send
+    // load, or a send racing the final drain could miss both the
+    // drain and the self-finish path (see the model checker's
+    // `SubmitModel::ClosedAfterDrain`).
     closed: AtomicBool,
+    // ORDERING(seq): counter — request-id allocator; uniqueness only.
     seq: AtomicU64,
     /// context window, published by the runtime thread before readiness
     /// (sizes stream buffers so token delivery never reallocates)
+    // ORDERING(window): handshake — Release publish at readiness,
+    // Acquire read at submit (the buffer sizing must not be reordered
+    // ahead of engine construction).
     window: AtomicUsize,
     queue_cap: usize,
     /// submissions bounced [`RejectReason::Overloaded`] by brownout
     /// shedding — disjoint from `rejected` so the three buckets
     /// (accepted, rejected, shed) reconcile with total submissions
+    // ORDERING(shed): counter — statistic, no ordering duty.
     shed: AtomicU64,
     /// brownout rung published by the runtime thread after each
     /// controller evaluation (`BrownoutState::gauge` encoding)
+    // ORDERING(brownout_state): handshake — Release publish so a
+    // reader pairing it with `admissible` sees a consistent rung.
     brownout_state: AtomicU64,
     /// admissible queue depth while `Shedding`; `usize::MAX` = not
     /// shedding (the submit-side check is then never taken)
+    // ORDERING(admissible): handshake — Release publish by the
+    // controller, Acquire check in submit; pairing a stale admissible
+    // with a fresh depth only sheds one request late/early (benign —
+    // the cap check below still bounds depth).
     admissible: AtomicUsize,
     /// control-plane round-trip bound (see `ServerOpts::control_timeout_ms`)
     control_timeout: Duration,

@@ -23,6 +23,17 @@ pub struct HostTensor {
     pub data: Data,
 }
 
+/// Native-endian byte view of a numeric slice, for the checkpoint
+/// codec and `xla::Literal` conversion. Private on purpose: only ever
+/// instantiated at f32/i32.
+fn bytes_of<T: Copy>(v: &[T]) -> &[u8] {
+    // SAFETY: `v` is an initialized slice of plain-old-data numerics
+    // (f32/i32 — no padding, no invalid bit patterns as bytes), the
+    // cast only narrows alignment, and the length covers exactly the
+    // same memory, so the byte view is valid for `v`'s lifetime.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
 impl HostTensor {
     pub fn zeros(shape: &[usize]) -> Self {
         HostTensor {
@@ -119,12 +130,8 @@ impl HostTensor {
     #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes: &[u8] = match &self.data {
-            Data::F32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
-            Data::I32(v) => unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            },
+            Data::F32(v) => bytes_of(v),
+            Data::I32(v) => bytes_of(v),
         };
         let ty = match self.data {
             Data::F32(_) => xla::ElementType::F32,
@@ -157,12 +164,8 @@ impl HostTensor {
 
     pub fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let (tag, bytes): (u8, &[u8]) = match &self.data {
-            Data::F32(v) => (0, unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            }),
-            Data::I32(v) => (1, unsafe {
-                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
-            }),
+            Data::F32(v) => (0, bytes_of(v)),
+            Data::I32(v) => (1, bytes_of(v)),
         };
         w.write_all(&[tag])?;
         w.write_all(&(self.shape.len() as u32).to_le_bytes())?;

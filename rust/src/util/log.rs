@@ -14,6 +14,8 @@ pub enum Level {
     Debug = 3,
 }
 
+// ORDERING(LEVEL): config — verbosity latch; a racing reader logging
+// one line at the old level is harmless.
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
 
 fn level() -> u8 {

@@ -4,6 +4,7 @@
 pub mod durable;
 pub mod json;
 pub mod log;
+pub mod modelcheck;
 pub mod prop;
 pub mod rng;
 

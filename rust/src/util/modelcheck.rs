@@ -1,0 +1,878 @@
+//! Exhaustive bounded-interleaving model checking for the crate's
+//! lock-free protocols (loom-style, in-crate: the sandbox vendors
+//! dependencies, so the explorer is ~150 lines of plain DFS).
+//!
+//! A [`Model`] is an abstract state machine: a fixed set of logical
+//! threads, each advancing through atomic actions ([`Model::step`]).
+//! One action corresponds to one linearization point of the real code
+//! — a single atomic RMW, or one mutex critical section (sound at
+//! that granularity because the real mutex serializes the region).
+//! The [`Explorer`] enumerates **every** schedule (optionally up to a
+//! preemption bound), checking [`Model::invariant`] after each step
+//! and [`Model::at_end`] in each terminal state, and reports the
+//! first violation with the thread trace that produced it. Threads
+//! that may legitimately block forever (parked pool workers, detached
+//! wedged threads) declare [`Model::park_ok`]; any other thread left
+//! permanently blocked is a deadlock.
+//!
+//! Three protocol models mirror the real implementations line for
+//! line (source references in each):
+//!
+//! * [`PoolModel`] — the kernel pool's chunk-claim / pending-counter
+//!   protocol in `ops/linalg.rs` (`pool::run`, `DispatchGuard`,
+//!   `worker_loop`), including the panic-unwind decrement.
+//! * [`SubmitModel`] — `serve/server.rs`'s submit-vs-shutdown path:
+//!   `accepting` check → depth CAS reservation → channel send →
+//!   `closed` re-check with idempotent self-finish, against the
+//!   runtime thread's close-then-drain shutdown.
+//! * [`RouterModel`] — `coordinator/router.rs`'s generation-checked
+//!   respawn with bounded-wait-then-detach on the wedged worker.
+//!
+//! Each model carries seeded-bug variants (the historical failure
+//! modes the protocols were designed against); `tests/modelcheck.rs`
+//! proves the explorer finds every one, then proves the shipped
+//! protocols clean across all schedules. This replaces the earlier
+//! 500-random-interleaving python spot checks with exhaustive
+//! coverage.
+
+// ------------------------------------------------------ the explorer
+
+/// An abstract concurrent protocol: `n_threads` logical threads over
+/// cloneable shared state.
+pub trait Model: Clone {
+    fn n_threads(&self) -> usize;
+    /// Thread finished all its actions.
+    fn done(&self, tid: usize) -> bool;
+    /// Thread can take a step now (ignored when `done`).
+    fn enabled(&self, tid: usize) -> bool;
+    /// Blocked-forever is acceptable for this thread (parked worker,
+    /// detached thread). Anything else stuck is a deadlock.
+    fn park_ok(&self, tid: usize) -> bool {
+        let _ = tid;
+        false
+    }
+    /// Execute one atomic action of `tid`. Only called when enabled.
+    fn step(&mut self, tid: usize);
+    /// Checked after every step.
+    fn invariant(&self) -> Result<(), String> {
+        Ok(())
+    }
+    /// Checked in every terminal (all done/parked) state.
+    fn at_end(&self) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// A property violation plus the schedule (thread ids, in order) that
+/// reaches it.
+#[derive(Debug)]
+pub struct Violation {
+    pub msg: String,
+    pub trace: Vec<usize>,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} (schedule {:?})", self.msg, self.trace)
+    }
+}
+
+/// Exhaustiveness evidence: how much the DFS covered.
+#[derive(Debug, Clone, Copy)]
+pub struct Report {
+    /// Complete schedules (terminal states) enumerated.
+    pub schedules: u64,
+    /// States visited (steps taken, counting revisits).
+    pub states: u64,
+}
+
+/// Depth-first enumerator over all interleavings of a [`Model`].
+pub struct Explorer {
+    /// Max context switches away from a still-enabled thread
+    /// (`None` = unbounded: every schedule).
+    pub preemptions: Option<usize>,
+    /// Abort (as a violation) past this many visited states — a
+    /// runaway-model backstop, not a soundness bound.
+    pub max_states: u64,
+}
+
+impl Default for Explorer {
+    fn default() -> Self {
+        Explorer { preemptions: None, max_states: 20_000_000 }
+    }
+}
+
+impl Explorer {
+    /// Enumerate every schedule; first violation wins.
+    pub fn run<M: Model>(&self, model: &M) -> Result<Report, Violation> {
+        let mut report = Report { schedules: 0, states: 0 };
+        let mut trace = Vec::new();
+        self.dfs(model, None, self.preemptions, &mut trace, &mut report)?;
+        Ok(report)
+    }
+
+    fn dfs<M: Model>(
+        &self,
+        m: &M,
+        last: Option<usize>,
+        budget: Option<usize>,
+        trace: &mut Vec<usize>,
+        report: &mut Report,
+    ) -> Result<(), Violation> {
+        let n = m.n_threads();
+        let runnable: Vec<usize> = (0..n).filter(|&t| !m.done(t) && m.enabled(t)).collect();
+        if runnable.is_empty() {
+            let stuck: Vec<usize> =
+                (0..n).filter(|&t| !m.done(t) && !m.park_ok(t)).collect();
+            if !stuck.is_empty() {
+                return Err(Violation {
+                    msg: format!("deadlock: threads {stuck:?} blocked with nothing enabled"),
+                    trace: trace.clone(),
+                });
+            }
+            report.schedules += 1;
+            return m.at_end().map_err(|msg| Violation { msg, trace: trace.clone() });
+        }
+        for &t in &runnable {
+            // running the same thread on is free; switching away from a
+            // still-enabled thread spends one preemption
+            let budget = match (last, budget) {
+                (Some(l), Some(b)) if l != t && runnable.contains(&l) => {
+                    if b == 0 {
+                        continue;
+                    }
+                    Some(b - 1)
+                }
+                _ => budget,
+            };
+            report.states += 1;
+            if report.states > self.max_states {
+                return Err(Violation {
+                    msg: format!("state budget exceeded ({} states)", self.max_states),
+                    trace: trace.clone(),
+                });
+            }
+            let mut next = m.clone();
+            next.step(t);
+            trace.push(t);
+            let r = next
+                .invariant()
+                .map_err(|msg| Violation { msg, trace: trace.clone() })
+                .and_then(|()| self.dfs(&next, Some(t), budget, trace, report));
+            trace.pop();
+            r?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------- 1. kernel pool
+
+/// Seeded historical bugs for [`PoolModel`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum PoolBug {
+    None,
+    /// A chunk that panics skips its `pending` decrement — the
+    /// guard's completion wait then deadlocks during the unwind.
+    NoUnwindDecrement,
+    /// The dispatcher clears the job without waiting for in-flight
+    /// workers — a worker still holds the erased closure pointer.
+    NoCompletionWait,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum DPhase {
+    Publish,
+    Claim,
+    Run(usize),
+    Decr(usize),
+    Retract,
+    WaitDone,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum WPhase {
+    Idle,
+    Run(usize),
+    Decr(usize),
+}
+
+/// `ops/linalg.rs` pool protocol: dispatcher (thread 0) publishes a
+/// job of `chunks` chunks then claims alongside `workers` pool
+/// threads; chunk `panic_chunk` panics in whichever thread claims it.
+/// The mutex-protected claim and decrement are separate actions, so
+/// the dispatcher's completion wait really races in-flight workers.
+#[derive(Clone)]
+pub struct PoolModel {
+    pub bug: PoolBug,
+    chunks: usize,
+    job: bool,
+    next: usize,
+    pending: i64,
+    executed: Vec<u8>,
+    retracted: Vec<bool>,
+    panic_chunk: Option<usize>,
+    worker_panicked: bool,
+    dispatcher: DPhase,
+    workers: Vec<WPhase>,
+}
+
+impl PoolModel {
+    pub fn new(workers: usize, chunks: usize, panic_chunk: Option<usize>, bug: PoolBug) -> Self {
+        PoolModel {
+            bug,
+            chunks,
+            job: false,
+            next: 0,
+            pending: 0,
+            executed: vec![0; chunks],
+            retracted: vec![false; chunks],
+            panic_chunk,
+            worker_panicked: false,
+            dispatcher: DPhase::Publish,
+            workers: vec![WPhase::Idle; workers],
+        }
+    }
+
+    fn decrement(&mut self, ci: usize, panicking: bool) {
+        // the real code always decrements under the state lock, even on
+        // the unwind path; `NoUnwindDecrement` re-introduces the bug
+        if !(panicking && self.bug == PoolBug::NoUnwindDecrement) {
+            self.pending -= 1;
+        }
+        let _ = ci;
+    }
+}
+
+impl Model for PoolModel {
+    fn n_threads(&self) -> usize {
+        1 + self.workers.len()
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        tid == 0 && self.dispatcher == DPhase::Done
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        if tid == 0 {
+            match self.dispatcher {
+                DPhase::WaitDone => self.pending == 0,
+                DPhase::Done => false,
+                _ => true,
+            }
+        } else {
+            match self.workers[tid - 1] {
+                WPhase::Idle => self.job && self.next < self.chunks,
+                _ => true,
+            }
+        }
+    }
+
+    fn park_ok(&self, tid: usize) -> bool {
+        // workers park on `work_cv` between jobs, forever if none comes
+        tid != 0 && self.workers[tid - 1] == WPhase::Idle
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid == 0 {
+            self.dispatcher = match self.dispatcher {
+                DPhase::Publish => {
+                    self.job = true;
+                    self.next = 0;
+                    self.pending = self.chunks as i64;
+                    DPhase::Claim
+                }
+                DPhase::Claim => {
+                    if self.next < self.chunks {
+                        let ci = self.next;
+                        self.next += 1;
+                        DPhase::Run(ci)
+                    } else {
+                        DPhase::Retract // guard drop begins
+                    }
+                }
+                DPhase::Run(ci) => {
+                    self.executed[ci] += 1;
+                    DPhase::Decr(ci)
+                }
+                DPhase::Decr(ci) => {
+                    let panicking = self.panic_chunk == Some(ci);
+                    self.decrement(ci, panicking);
+                    if panicking {
+                        DPhase::Retract // resume_unwind drops the guard
+                    } else {
+                        DPhase::Claim
+                    }
+                }
+                DPhase::Retract => {
+                    // DispatchGuard::drop — retract unclaimed chunks
+                    for ci in self.next..self.chunks {
+                        self.retracted[ci] = true;
+                        self.pending -= 1;
+                    }
+                    self.next = self.chunks;
+                    if self.bug == PoolBug::NoCompletionWait {
+                        self.job = false;
+                        DPhase::Done
+                    } else {
+                        DPhase::WaitDone
+                    }
+                }
+                DPhase::WaitDone => {
+                    // done_cv wait satisfied: pending == 0
+                    self.job = false;
+                    DPhase::Done
+                }
+                DPhase::Done => unreachable!(),
+            };
+        } else {
+            let w = tid - 1;
+            self.workers[w] = match self.workers[w] {
+                WPhase::Idle => {
+                    let ci = self.next;
+                    self.next += 1;
+                    WPhase::Run(ci)
+                }
+                WPhase::Run(ci) => {
+                    if !self.job {
+                        // the invariant below reports this before we get
+                        // here, but keep the model total
+                        self.executed[ci] = u8::MAX;
+                    } else {
+                        self.executed[ci] += 1;
+                    }
+                    WPhase::Decr(ci)
+                }
+                WPhase::Decr(ci) => {
+                    let panicking = self.panic_chunk == Some(ci);
+                    if panicking {
+                        self.worker_panicked = true;
+                    }
+                    self.decrement(ci, panicking);
+                    WPhase::Idle
+                }
+            };
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.pending < 0 {
+            return Err(format!("pending underflow: {}", self.pending));
+        }
+        if let Some(ci) = self.executed.iter().position(|&e| e > 1) {
+            return Err(format!("chunk {ci} executed {} times", self.executed[ci]));
+        }
+        // the erased closure borrow: no worker may be running a chunk
+        // after the dispatcher cleared the job
+        let running = self.workers.iter().any(|w| matches!(w, WPhase::Run(_) | WPhase::Decr(_)));
+        if running && !self.job && self.dispatcher == DPhase::Done {
+            return Err("dispatcher returned while a worker still runs a chunk".into());
+        }
+        Ok(())
+    }
+
+    fn at_end(&self) -> Result<(), String> {
+        for ci in 0..self.chunks {
+            let e = self.executed[ci] == 1;
+            let r = self.retracted[ci];
+            if e == r {
+                return Err(format!(
+                    "chunk {ci}: executed={} retracted={r} (want exactly one)",
+                    self.executed[ci]
+                ));
+            }
+        }
+        if self.pending != 0 {
+            return Err(format!("terminal pending = {}", self.pending));
+        }
+        if self.panic_chunk.is_none() && self.retracted.iter().any(|&r| r) {
+            return Err("chunks retracted without a panic".into());
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------- 2. submit-vs-shutdown
+
+/// Seeded historical bugs for [`SubmitModel`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum SubmitBug {
+    None,
+    /// Publish `closed` *after* the final drain instead of before: a
+    /// send landing between drain-end and the store is never finished
+    /// by anyone — the caller hangs.
+    ClosedAfterDrain,
+    /// Reserve with a blind `fetch_add` + rollback instead of the CAS
+    /// loop: the queue depth transiently overshoots the cap.
+    BlindIncrement,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SPhase {
+    CheckAccepting,
+    Reserve,
+    RollbackCheck,
+    Send,
+    CheckClosed,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RPhase {
+    Serve(usize),
+    StopAccepting,
+    SetClosed,
+    Drain,
+    DropReceiver,
+    Done,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Outcome {
+    Pending,
+    Accepted,
+    Rejected,
+}
+
+/// `serve/server.rs` submit path vs the runtime thread's shutdown
+/// drain. Threads `0..submitters` each submit one request; the last
+/// thread is the runtime, which serves `serve_budget` requests and
+/// then shuts down (close → drain → drop receiver).
+#[derive(Clone)]
+pub struct SubmitModel {
+    pub bug: SubmitBug,
+    cap: usize,
+    depth: i64,
+    accepting: bool,
+    closed: bool,
+    queue_open: bool,
+    queue: Vec<usize>,
+    finished: Vec<bool>,
+    outcome: Vec<Outcome>,
+    sub: Vec<SPhase>,
+    runtime: RPhase,
+}
+
+impl SubmitModel {
+    pub fn new(submitters: usize, cap: usize, serve_budget: usize, bug: SubmitBug) -> Self {
+        SubmitModel {
+            bug,
+            cap,
+            depth: 0,
+            accepting: true,
+            closed: false,
+            queue_open: true,
+            queue: Vec::new(),
+            finished: vec![false; submitters],
+            outcome: vec![Outcome::Pending; submitters],
+            sub: vec![SPhase::CheckAccepting; submitters],
+            runtime: RPhase::Serve(serve_budget),
+        }
+    }
+
+    fn finish(&mut self, id: usize) {
+        // StreamShared::finish is idempotent — first caller wins
+        self.finished[id] = true;
+    }
+}
+
+impl Model for SubmitModel {
+    fn n_threads(&self) -> usize {
+        self.sub.len() + 1
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        if tid < self.sub.len() {
+            self.sub[tid] == SPhase::Done
+        } else {
+            self.runtime == RPhase::Done
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        if tid < self.sub.len() {
+            true
+        } else {
+            match self.runtime {
+                // recv blocks until a request arrives; the budget
+                // hitting zero — or every submitter resolving with the
+                // queue empty — models the shutdown trigger arriving
+                RPhase::Serve(left) => {
+                    left == 0
+                        || !self.queue.is_empty()
+                        || self.sub.iter().all(|&s| s == SPhase::Done)
+                }
+                RPhase::Done => false,
+                _ => true,
+            }
+        }
+    }
+
+    fn step(&mut self, tid: usize) {
+        if tid < self.sub.len() {
+            self.sub[tid] = match self.sub[tid] {
+                SPhase::CheckAccepting => {
+                    if self.accepting {
+                        SPhase::Reserve
+                    } else {
+                        self.outcome[tid] = Outcome::Rejected;
+                        SPhase::Done
+                    }
+                }
+                SPhase::Reserve => match self.bug {
+                    SubmitBug::BlindIncrement => {
+                        self.depth += 1; // overshoot window until RollbackCheck
+                        SPhase::RollbackCheck
+                    }
+                    _ => {
+                        // the CAS loop's linearization point: reserve
+                        // iff below cap, atomically
+                        if (self.depth as usize) < self.cap {
+                            self.depth += 1;
+                            SPhase::Send
+                        } else {
+                            self.outcome[tid] = Outcome::Rejected;
+                            SPhase::Done
+                        }
+                    }
+                },
+                SPhase::RollbackCheck => {
+                    if self.depth as usize > self.cap {
+                        self.depth -= 1;
+                        self.outcome[tid] = Outcome::Rejected;
+                        SPhase::Done
+                    } else {
+                        SPhase::Send
+                    }
+                }
+                SPhase::Send => {
+                    if self.queue_open {
+                        self.queue.push(tid);
+                        SPhase::CheckClosed
+                    } else {
+                        // send error: release the reservation, reject
+                        self.depth -= 1;
+                        self.outcome[tid] = Outcome::Rejected;
+                        SPhase::Done
+                    }
+                }
+                SPhase::CheckClosed => {
+                    // SeqCst pairing with the runtime's close-then-drain:
+                    // a send that completed after the final drain must
+                    // observe closed == true and self-finish
+                    if self.closed {
+                        self.finish(tid);
+                    }
+                    self.outcome[tid] = Outcome::Accepted;
+                    SPhase::Done
+                }
+                SPhase::Done => unreachable!(),
+            };
+        } else {
+            self.runtime = match self.runtime {
+                RPhase::Serve(left) => {
+                    if left > 0 && !self.queue.is_empty() {
+                        let id = self.queue.remove(0);
+                        self.finish(id);
+                        self.depth -= 1;
+                        RPhase::Serve(left - 1)
+                    } else {
+                        RPhase::StopAccepting
+                    }
+                }
+                RPhase::StopAccepting => {
+                    self.accepting = false;
+                    if self.bug == SubmitBug::ClosedAfterDrain {
+                        RPhase::Drain
+                    } else {
+                        RPhase::SetClosed
+                    }
+                }
+                RPhase::SetClosed => {
+                    self.closed = true;
+                    if self.bug == SubmitBug::ClosedAfterDrain {
+                        RPhase::DropReceiver
+                    } else {
+                        RPhase::Drain
+                    }
+                }
+                RPhase::Drain => {
+                    if let Some(&id) = self.queue.first() {
+                        self.queue.remove(0);
+                        self.depth -= 1;
+                        self.finish(id);
+                        RPhase::Drain
+                    } else if self.bug == SubmitBug::ClosedAfterDrain {
+                        RPhase::SetClosed
+                    } else {
+                        RPhase::DropReceiver
+                    }
+                }
+                RPhase::DropReceiver => {
+                    self.queue_open = false;
+                    RPhase::Done
+                }
+                RPhase::Done => unreachable!(),
+            };
+        }
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.depth as usize > self.cap {
+            return Err(format!("queue depth {} exceeds cap {}", self.depth, self.cap));
+        }
+        if self.depth < 0 {
+            return Err(format!("queue depth underflow: {}", self.depth));
+        }
+        Ok(())
+    }
+
+    fn at_end(&self) -> Result<(), String> {
+        for (id, &o) in self.outcome.iter().enumerate() {
+            match o {
+                Outcome::Pending => return Err(format!("submitter {id} never resolved")),
+                Outcome::Accepted if !self.finished[id] => {
+                    return Err(format!(
+                        "lost stream: submitter {id} accepted but never finished — caller hangs"
+                    ));
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------- 3. router respawn
+
+/// Seeded historical bugs for [`RouterModel`].
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum RouterBug {
+    None,
+    /// Respawn without the generation check: two callers that both
+    /// timed out against the same worker kill its replacement too.
+    NoGenerationCheck,
+    /// Join the wedged worker unconditionally instead of the bounded
+    /// wait + detach: the caller blocks forever.
+    JoinInsteadOfDetach,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CPhase {
+    Observe,
+    Respawn,
+    Done,
+}
+
+/// `coordinator/router.rs` respawn protocol: `callers` threads each
+/// observe the worker generation (inside `try_eval`'s locked send),
+/// time out, and call `respawn(observed)`. The original worker
+/// (last thread) is wedged forever — `park_ok`, like the real
+/// detached thread.
+#[derive(Clone)]
+pub struct RouterModel {
+    pub bug: RouterBug,
+    generation: u64,
+    respawns: u64,
+    observed: Vec<u64>,
+    caller: Vec<CPhase>,
+}
+
+impl RouterModel {
+    pub fn new(callers: usize, bug: RouterBug) -> Self {
+        RouterModel {
+            bug,
+            generation: 0,
+            respawns: 0,
+            observed: vec![u64::MAX; callers],
+            caller: vec![CPhase::Observe; callers],
+        }
+    }
+}
+
+impl Model for RouterModel {
+    fn n_threads(&self) -> usize {
+        self.caller.len() + 1 // + the wedged worker
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        tid < self.caller.len() && self.caller[tid] == CPhase::Done
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        if tid >= self.caller.len() {
+            return false; // wedged mid-forward, never progresses
+        }
+        match self.caller[tid] {
+            // JoinInsteadOfDetach: respawn blocks on the wedged
+            // worker's exit, which never comes
+            CPhase::Respawn if self.bug == RouterBug::JoinInsteadOfDetach => false,
+            CPhase::Done => false,
+            _ => true,
+        }
+    }
+
+    fn park_ok(&self, tid: usize) -> bool {
+        tid >= self.caller.len()
+    }
+
+    fn step(&mut self, tid: usize) {
+        self.caller[tid] = match self.caller[tid] {
+            CPhase::Observe => {
+                // try_eval: generation read under the worker mutex
+                self.observed[tid] = self.generation;
+                CPhase::Respawn
+            }
+            CPhase::Respawn => {
+                // respawn(): one mutex critical section — generation
+                // check, bounded wait (terminates by construction),
+                // detach, spawn replacement
+                let stale = self.generation != self.observed[tid];
+                if self.bug == RouterBug::NoGenerationCheck || !stale {
+                    self.generation += 1;
+                    self.respawns += 1;
+                }
+                CPhase::Done
+            }
+            CPhase::Done => unreachable!(),
+        };
+    }
+
+    fn invariant(&self) -> Result<(), String> {
+        if self.generation != self.respawns {
+            return Err(format!(
+                "generation {} out of sync with respawns {}",
+                self.generation, self.respawns
+            ));
+        }
+        Ok(())
+    }
+
+    fn at_end(&self) -> Result<(), String> {
+        // one respawn per *distinct* observed generation: callers that
+        // observed the same wedged worker must coalesce
+        let mut distinct: Vec<u64> = self.observed.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        if self.respawns != distinct.len() as u64 {
+            return Err(format!(
+                "{} respawns for {} distinct observed generations {:?} — a fresh \
+                 worker was killed for its predecessor's wedge",
+                self.respawns,
+                distinct.len(),
+                self.observed
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two threads, two actions each: load then store of a shared
+    /// counter. With `atomic` the increment is one action; without,
+    /// the classic lost update exists and the explorer must find it.
+    #[derive(Clone)]
+    struct Counter {
+        atomic: bool,
+        value: u64,
+        loaded: Vec<Option<u64>>,
+        pc: Vec<usize>,
+    }
+
+    impl Counter {
+        fn new(threads: usize, atomic: bool) -> Self {
+            Counter { atomic, value: 0, loaded: vec![None; threads], pc: vec![0; threads] }
+        }
+    }
+
+    impl Model for Counter {
+        fn n_threads(&self) -> usize {
+            self.pc.len()
+        }
+        fn done(&self, t: usize) -> bool {
+            self.pc[t] == if self.atomic { 1 } else { 2 }
+        }
+        fn enabled(&self, _t: usize) -> bool {
+            true
+        }
+        fn step(&mut self, t: usize) {
+            if self.atomic {
+                self.value += 1;
+            } else if self.pc[t] == 0 {
+                self.loaded[t] = Some(self.value);
+            } else {
+                self.value = self.loaded[t].unwrap() + 1;
+            }
+            self.pc[t] += 1;
+        }
+        fn at_end(&self) -> Result<(), String> {
+            if self.value == self.pc.len() as u64 {
+                Ok(())
+            } else {
+                Err(format!("lost update: {} != {}", self.value, self.pc.len()))
+            }
+        }
+    }
+
+    #[test]
+    fn explorer_counts_all_schedules() {
+        // 2 threads x 1 atomic action: exactly 2 interleavings
+        let r = Explorer::default().run(&Counter::new(2, true)).unwrap();
+        assert_eq!(r.schedules, 2);
+        // 2 threads x 2 actions: C(4,2) = 6 interleavings
+        let v = Explorer::default().run(&Counter::new(2, false)).unwrap_err();
+        assert!(v.msg.contains("lost update"), "{v}");
+    }
+
+    #[test]
+    fn preemption_bound_prunes_but_keeps_serial_schedules() {
+        // bound 0: only the two serial schedules of the atomic model
+        let e = Explorer { preemptions: Some(0), ..Explorer::default() };
+        let r = e.run(&Counter::new(2, true)).unwrap();
+        assert_eq!(r.schedules, 2);
+        // the non-atomic lost update needs one preemption; bound 0
+        // misses it, bound 1 finds it
+        assert!(e.run(&Counter::new(2, false)).is_ok());
+        let e1 = Explorer { preemptions: Some(1), ..Explorer::default() };
+        assert!(e1.run(&Counter::new(2, false)).is_err());
+    }
+
+    /// Two threads blocked on each other: must be reported, not spun.
+    #[derive(Clone)]
+    struct Deadlock {
+        stepped: bool,
+    }
+
+    impl Model for Deadlock {
+        fn n_threads(&self) -> usize {
+            2
+        }
+        fn done(&self, _t: usize) -> bool {
+            false
+        }
+        fn enabled(&self, t: usize) -> bool {
+            t == 0 && !self.stepped
+        }
+        fn step(&mut self, _t: usize) {
+            self.stepped = true;
+        }
+    }
+
+    #[test]
+    fn deadlock_detected_with_trace() {
+        let v = Explorer::default().run(&Deadlock { stepped: false }).unwrap_err();
+        assert!(v.msg.contains("deadlock"), "{v}");
+        assert_eq!(v.trace, vec![0]);
+    }
+
+    #[test]
+    fn state_budget_is_a_backstop() {
+        let e = Explorer { max_states: 3, ..Explorer::default() };
+        let v = e.run(&Counter::new(3, false)).unwrap_err();
+        assert!(v.msg.contains("state budget"), "{v}");
+    }
+}

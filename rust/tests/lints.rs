@@ -1,0 +1,193 @@
+//! Fixture tests for the `shears-lint` engine (`src/analysis/`): each
+//! rule must fire on a minimal fixture with a `file:line` diagnostic,
+//! and the crate itself must lint clean with every allowlist entry in
+//! use. The latter is the same check CI runs via
+//! `cargo run --bin shears-lint`.
+
+use shears::analysis::{Allowlist, Diagnostic, lint_self, lint_source, Rule};
+
+fn lint(path: &str, src: &str) -> Vec<Diagnostic> {
+    lint_source(path, src, &mut Allowlist::default())
+}
+
+fn only(diags: &[Diagnostic], rule: Rule) -> Vec<&Diagnostic> {
+    diags.iter().filter(|d| d.rule == rule).collect()
+}
+
+// ------------------------------------------------------------ safety
+
+#[test]
+fn safety_rule_fires_with_file_and_line() {
+    let src = "fn f() {\n    let p = unsafe { std::ptr::null::<u8>() };\n}\n";
+    let diags = lint("src/demo.rs", src);
+    let hits = only(&diags, Rule::Safety);
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].file, "src/demo.rs");
+    assert_eq!(hits[0].line, 2);
+    assert!(hits[0].to_string().starts_with("src/demo.rs:2: [safety]"), "{}", hits[0]);
+}
+
+#[test]
+fn safety_rule_accepts_adjacent_comment_forms() {
+    // directly above, trailing on the same line, and above an attribute
+    for src in [
+        "// SAFETY: null is a valid const pointer\nlet p = unsafe { std::ptr::null::<u8>() };\n",
+        "let p = unsafe { std::ptr::null::<u8>() }; // SAFETY: const ptr\n",
+        "// SAFETY: repr(transparent) over a raw pointer\n#[allow(dead_code)]\nunsafe impl Send for X {}\n",
+    ] {
+        let diags = lint("src/demo.rs", src);
+        assert!(only(&diags, Rule::Safety).is_empty(), "{src:?} -> {diags:?}");
+    }
+}
+
+#[test]
+fn safety_comment_does_not_reach_across_blank_line() {
+    let src = "// SAFETY: stale, belongs to something deleted\n\nunsafe impl Send for X {}\n";
+    let diags = lint("src/demo.rs", src);
+    assert_eq!(only(&diags, Rule::Safety).len(), 1, "{diags:?}");
+}
+
+#[test]
+fn unsafe_inside_string_or_comment_is_ignored() {
+    let src = "// unsafe unsafe unsafe\nlet s = \"unsafe { }\";\n";
+    assert!(lint("src/demo.rs", src).is_empty());
+}
+
+// ----------------------------------------------------------- ordering
+
+#[test]
+fn undeclared_atomic_fires() {
+    let src = "fn f(a: &AtomicU64) {\n    a.load(Ordering::Relaxed);\n}\n";
+    let diags = lint("src/demo.rs", src);
+    let hits = only(&diags, Rule::Ordering);
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].line, 2);
+    assert!(hits[0].msg.contains("has no `// ORDERING(a): role` declaration"), "{}", hits[0]);
+}
+
+#[test]
+fn declared_role_mismatch_fires() {
+    let src = "// ORDERING(hits): counter — stats only\n\
+               fn f(hits: &AtomicU64) {\n    hits.fetch_add(1, Ordering::SeqCst);\n}\n";
+    let diags = lint("src/demo.rs", src);
+    let hits = only(&diags, Rule::Ordering);
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].line, 3);
+    assert!(hits[0].msg.contains("declared \"counter\""), "{}", hits[0]);
+    assert!(hits[0].msg.contains("SeqCst"), "{}", hits[0]);
+}
+
+#[test]
+fn declared_role_match_is_clean_including_wrapped_calls() {
+    let src = "// ORDERING(depth): gauge — CAS admission, Acquire/Release pairs\n\
+               fn f(depth: &AtomicUsize) {\n\
+               \x20   depth\n\
+               \x20       .compare_exchange(0, 1, Ordering::AcqRel,\n\
+               \x20                         Ordering::Acquire)\n\
+               \x20       .ok();\n}\n";
+    let diags = lint("src/demo.rs", src);
+    assert!(only(&diags, Rule::Ordering).is_empty(), "{diags:?}");
+}
+
+#[test]
+fn unused_ordering_declaration_fires() {
+    let src = "// ORDERING(ghost): counter — nothing references this\nfn f() {}\n";
+    let diags = lint("src/demo.rs", src);
+    let hits = only(&diags, Rule::Ordering);
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert!(hits[0].msg.contains("declared but `ghost` has no atomic call site"), "{}", hits[0]);
+}
+
+#[test]
+fn cmp_ordering_variants_do_not_fire() {
+    let src = "fn f(a: i32) -> std::cmp::Ordering {\n\
+               \x20   if a < 0 { std::cmp::Ordering::Less } else { std::cmp::Ordering::Greater }\n}\n";
+    assert!(lint("src/demo.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ hotpath
+
+#[test]
+fn hotpath_unwrap_fires_only_in_scoped_paths() {
+    let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+    let hot = lint("src/serve/demo.rs", src);
+    let hits = only(&hot, Rule::HotPath);
+    assert_eq!(hits.len(), 1, "{hot:?}");
+    assert_eq!(hits[0].line, 2);
+    // same source outside serve/runtime/coordinator: clean
+    assert!(lint("src/ops/demo.rs", src).is_empty());
+}
+
+#[test]
+fn hotpath_panic_family_fires() {
+    for pat in ["panic!(\"boom\")", "unreachable!()", "todo!()", "x.expect(\"msg\")"] {
+        let src = format!("fn f(x: Option<u8>) {{\n    let _ = {pat};\n}}\n");
+        let diags = lint("src/runtime/demo.rs", &src);
+        assert_eq!(only(&diags, Rule::HotPath).len(), 1, "{pat}: {diags:?}");
+    }
+}
+
+#[test]
+fn hotpath_in_test_region_is_skipped() {
+    let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u8>.unwrap(); }\n}\n";
+    assert!(lint("src/serve/demo.rs", src).is_empty());
+}
+
+// ----------------------------------------------------- time + durable
+
+#[test]
+fn time_rule_fires_outside_wall_clock_modules() {
+    let src = "fn f() {\n    let t = std::time::Instant::now();\n    let _ = t;\n}\n";
+    let diags = lint("src/ops/demo.rs", src);
+    let hits = only(&diags, Rule::Time);
+    assert_eq!(hits.len(), 1, "{diags:?}");
+    assert_eq!(hits[0].line, 2);
+    // fault.rs owns simulated time — exempt
+    assert!(lint("src/serve/fault.rs", src).is_empty());
+}
+
+#[test]
+fn durable_rule_fires_on_raw_persistence() {
+    for pat in ["std::fs::File::create(p)", "std::fs::OpenOptions::new()", "std::fs::write(p, b)"] {
+        let src = format!("fn f(p: &std::path::Path, b: &[u8]) {{\n    let _ = {pat};\n}}\n");
+        let diags = lint("src/coordinator/demo.rs", &src);
+        assert_eq!(only(&diags, Rule::Durable).len(), 1, "{pat}: {diags:?}");
+        // util/durable.rs is the one place allowed to touch files raw
+        assert!(lint("src/util/durable.rs", &src).is_empty(), "{pat}");
+    }
+}
+
+// ---------------------------------------------------------- allowlist
+
+#[test]
+fn allowlist_suppresses_exact_site_and_requires_justification() {
+    let src = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap() // checked by caller\n}\n";
+    let (mut allow, parse_diags) = Allowlist::parse(
+        "hotpath|serve/demo.rs|x.unwrap()|caller guarantees Some\n",
+        "test.allow",
+    );
+    assert!(parse_diags.is_empty(), "{parse_diags:?}");
+    let diags = lint_source("src/serve/demo.rs", src, &mut allow);
+    assert!(diags.is_empty(), "{diags:?}");
+    assert!(allow.entries[0].used);
+
+    // the same entry without a justification is rejected at parse time
+    let (_, bad) = Allowlist::parse("hotpath|serve/demo.rs|x.unwrap()\n", "test.allow");
+    assert_eq!(bad.len(), 1, "{bad:?}");
+    assert!(bad[0].msg.contains("justification"), "{}", bad[0]);
+}
+
+// ------------------------------------------------------- whole crate
+
+#[test]
+fn crate_lints_clean_with_all_allowlist_entries_used() {
+    let report = lint_self().expect("walk crate sources");
+    assert!(report.files > 40, "suspiciously few files linted: {}", report.files);
+    let rendered: Vec<String> = report.diags.iter().map(|d| d.to_string()).collect();
+    assert!(rendered.is_empty(), "crate must lint clean:\n{}", rendered.join("\n"));
+    assert_eq!(
+        report.allow_used, report.allow_total,
+        "stale allowlist entries: {}/{} used",
+        report.allow_used, report.allow_total
+    );
+}
